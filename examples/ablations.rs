@@ -1,0 +1,22 @@
+//! Ablation playground (paper §4.3 / Appendix E): fine-tuning scope
+//! (Table 7), calibration size (Table 8), codebooks × groups (Table 9),
+//! and the K-means-vs-random init curves (Figure 4).
+//!
+//!     cargo run --release --example ablations [-- --only t7]
+
+use aqlm::bench::{self, Profile, Workspace};
+use aqlm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let mut ws = Workspace::new(Profile::fast());
+    let ids: Vec<String> = match args.get("only") {
+        Some(id) => vec![id.to_string()],
+        None => vec!["t7".into(), "t8".into(), "t9".into(), "f4".into()],
+    };
+    for id in ids {
+        eprintln!("=== {id} ===");
+        bench::run(&id, &mut ws)?;
+    }
+    Ok(())
+}

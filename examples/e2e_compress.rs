@@ -1,0 +1,165 @@
+//! End-to-end driver proving all three layers compose (the repo's
+//! headline example, recorded in EXPERIMENTS.md):
+//!
+//! 1. **Train** a base `nano` model on TinyLang **through the PJRT stack**:
+//!    the Rust coordinator drives the AOT-compiled `nano_train.hlo.txt`
+//!    artifact (JAX train step, lowered once at build time) in a loop —
+//!    Python is not running.
+//! 2. **Cross-check engines**: native Rust forward vs the AOT `nano_fwd`
+//!    artifact must agree on logits.
+//! 3. **Quantize** with AQLM at ~2/3/4 bits plus GPTQ/RTN baselines
+//!    (Algorithm 1 with block fine-tuning).
+//! 4. **Evaluate** perplexity + zero-shot tasks and report the paper-shaped
+//!    table; serve a few generations from the 2-bit model.
+//!
+//!     make artifacts && cargo run --release --example e2e_compress
+
+use aqlm::bench::{tables, Profile, Workspace};
+use aqlm::coordinator::pipeline::Method;
+use aqlm::eval::report::Table;
+use aqlm::nn::model::Model;
+use aqlm::quant::gptq::GptqConfig;
+use aqlm::quant::rtn::RtnConfig;
+use aqlm::runtime::artifacts::Manifest;
+use aqlm::runtime::engine::{PjrtForward, PjrtTrainer};
+use aqlm::runtime::pjrt::PjrtRuntime;
+use aqlm::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let mut profile = Profile::fast();
+    profile.seq = 64;
+    let ws = Workspace::new(profile);
+
+    // ---- 1. Train through PJRT ----------------------------------------
+    let manifest = Manifest::load(Path::new("artifacts"))
+        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+    let rt = PjrtRuntime::cpu()?;
+    let fwd_spec = manifest.module("nano_fwd")?;
+    let train_batch = fwd_spec.batch.unwrap();
+    let train_seq = fwd_spec.seq.unwrap();
+    let mut cfg = aqlm::nn::config::ModelConfig::nano();
+    // The artifact was lowered for vocab 160 (the TinyLang tokenizer fits).
+    cfg.vocab_size = 160;
+    cfg.max_seq = cfg.max_seq.max(train_seq);
+    assert!(ws.bundle.tokenizer.vocab_size() <= cfg.vocab_size);
+    let mut rng = Rng::seed_from_u64(7);
+    let mut model = Model::init(&cfg, &mut rng);
+
+    println!("== phase 1: training nano through the PJRT artifact ==");
+    let mut trainer = PjrtTrainer::new(&rt, &manifest, "nano", &model)?;
+    let steps = 220;
+    let data = aqlm::data::dataset::TokenDataset {
+        tokens: ws.bundle.train.tokens.clone(),
+        seq_len: train_seq,
+    };
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for step in 0..steps {
+        let (tokens, targets) = data.sample_batch(train_batch, &mut rng);
+        let loss = trainer.step(&tokens, &targets)?;
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        if step % 25 == 0 || step + 1 == steps {
+            println!("  pjrt step {step:4}  loss {loss:.4}");
+        }
+    }
+    println!("  loss {first:.3} -> {last:.3} over {} pjrt steps", trainer.steps_taken());
+    trainer.export_into(&mut model)?;
+
+    // ---- 2. Engine cross-check -----------------------------------------
+    println!("\n== phase 2: native forward vs AOT artifact ==");
+    let pjrt_fwd = PjrtForward::load(&rt, &manifest, "nano")?;
+    let (tokens, _) = data.sample_batch(train_batch, &mut rng);
+    let pjrt_logits = pjrt_fwd.logits(&model, &tokens)?;
+    let (native_logits, _) = model.forward_logits(&tokens, train_batch, train_seq, false);
+    let max_diff = native_logits
+        .data()
+        .iter()
+        .zip(pjrt_logits.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("  max |native - pjrt| logit diff: {max_diff:.2e}");
+    anyhow::ensure!(max_diff < 2e-2, "engines disagree");
+
+    // ---- 3+4. Quantize and evaluate -------------------------------------
+    println!("\n== phase 3: quantization sweep ==");
+    let mut t = Table::new(
+        "e2e: nano trained via PJRT, quantized, evaluated",
+        &["Method", "Avg bits", "Wiki2↓", "C4↓", "Avg acc↑", "bytes"],
+    );
+    let mut base = model.clone();
+    let row = ws.eval(&mut base);
+    t.row(vec![
+        "FP32".into(),
+        "16".into(),
+        format!("{:.2}", row.wiki_ppl),
+        format!("{:.2}", row.c4_ppl),
+        format!("{:.1}", row.avg_acc),
+        row.weight_bytes.to_string(),
+    ]);
+    let mut two_bit_model: Option<Model> = None;
+    for target in [2.0f64, 3.0, 4.0] {
+        let (method, shape) = tables::aqlm_method(&ws, &model.cfg, target);
+        let (mut q, report) = ws.quantize(&model, &method)?;
+        let row = ws.eval(&mut q);
+        t.row(vec![
+            format!("AQLM {}", shape.name()),
+            format!("{:.2}", report.avg_bits),
+            format!("{:.2}", row.wiki_ppl),
+            format!("{:.2}", row.c4_ppl),
+            format!("{:.1}", row.avg_acc),
+            row.weight_bytes.to_string(),
+        ]);
+        if target == 2.0 {
+            two_bit_model = Some(q);
+        }
+    }
+    for (name, method) in [
+        ("GPTQ 2b", Method::Gptq { cfg: GptqConfig::paper(2), block_tune: None }),
+        ("RTN 2b", Method::Rtn(RtnConfig::new(2, 32))),
+    ] {
+        let (mut q, report) = ws.quantize(&model, &method)?;
+        let row = ws.eval(&mut q);
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", report.avg_bits),
+            format!("{:.2}", row.wiki_ppl),
+            format!("{:.2}", row.c4_ppl),
+            format!("{:.1}", row.avg_acc),
+            row.weight_bytes.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    t.save(Path::new("results"), "e2e_compress")?;
+
+    // ---- 5. Serve the compressed model ----------------------------------
+    println!("== phase 4: serving the 2-bit model ==");
+    use aqlm::coordinator::server::{Server, ServerConfig};
+    let server = Server::start(two_bit_model.unwrap(), ServerConfig { max_batch: 4, seed: 0 });
+    let tok = &ws.bundle.tokenizer;
+    let prompts = ["the small cat", "the ruby is in the", "three plus four equals"];
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut ids = vec![aqlm::data::tokenizer::BOS];
+            ids.extend(tok.encode(p));
+            server.submit(ids, 12, 0.0)
+        })
+        .collect();
+    for (p, rx) in prompts.iter().zip(rxs) {
+        let resp = rx.recv()?;
+        println!("  '{p}' -> '{}'", tok.decode(&resp.tokens));
+    }
+    let stats = server.shutdown();
+    println!(
+        "  {} tokens at {:.1} tok/s (mean latency {:.0} ms)",
+        stats.tokens_generated,
+        stats.tokens_per_second(),
+        stats.mean_latency_s() * 1e3
+    );
+    println!("\ne2e_compress complete.");
+    Ok(())
+}

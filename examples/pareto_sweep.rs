@@ -1,0 +1,20 @@
+//! Pareto sweep (Figures 1/5/6): quantize the model family across bit
+//! widths, plot PPL vs size, and verify the paper's claim that ~2.5-bit
+//! AQLM models are on the accuracy-size frontier.
+//!
+//!     cargo run --release --example pareto_sweep
+
+use aqlm::bench::{figures, Profile, Workspace};
+
+fn main() -> anyhow::Result<()> {
+    let mut ws = Workspace::new(Profile::fast());
+    for t in figures::f1_pareto(&mut ws)? {
+        println!("{}", t.to_markdown());
+        t.save(&ws.results_dir(), "example_pareto_f1")?;
+    }
+    for t in figures::f6_model_optimality(&mut ws)? {
+        println!("{}", t.to_markdown());
+        t.save(&ws.results_dir(), "example_pareto_f6")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: quantize one linear layer with AQLM and compare its
+//! output error against RTN and GPTQ at comparable bit budgets.
+//!
+//!     cargo run --release --example quickstart
+
+use aqlm::kernels::format::AqlmShape;
+use aqlm::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
+use aqlm::quant::gptq::{gptq_quantize, GptqConfig};
+use aqlm::quant::rtn::{rtn_quantize, RtnConfig};
+use aqlm::quant::{relative_layer_error, CalibData};
+use aqlm::tensor::Tensor;
+use aqlm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seed_from_u64(0);
+    // A synthetic layer: 256x256 weights with low-rank structure plus noise
+    // (real LLM layers are far from iid — this is precisely the structure
+    // additive codebooks exploit and scalar grids cannot), and activations
+    // with non-uniform per-channel scales (the regime where calibration
+    // matters).
+    let (d_out, d_in, n_samples) = (256usize, 256usize, 512usize);
+    let w = {
+        let u = Tensor::randn(&[d_out, 16], 0.4, &mut rng);
+        let v = Tensor::randn(&[16, d_in], 0.4, &mut rng);
+        let mut w = aqlm::tensor::ops::matmul(&u, &v);
+        let noise = Tensor::randn(&[d_out, d_in], 0.08, &mut rng);
+        w.add_assign(&noise);
+        w
+    };
+    let mut x = Tensor::zeros(&[n_samples, d_in]);
+    for i in 0..n_samples {
+        for j in 0..d_in {
+            let scale = 0.2 + 2.0 * (j as f32 / d_in as f32);
+            let v = rng.normal_f32(0.0, scale);
+            x.set2(i, j, v);
+        }
+    }
+    let mut calib = CalibData::new(d_in);
+    calib.accumulate(&x);
+
+    println!("Quantizing a {d_out}x{d_in} layer with {n_samples} calibration samples\n");
+    println!("{:<22} {:>9} {:>12}", "method", "avg bits", "rel. error");
+
+    // RTN at 2 and 3 bits.
+    for (bits, group) in [(2usize, 16usize), (3, 16)] {
+        let q = rtn_quantize(&w, RtnConfig::new(bits, group));
+        let err = relative_layer_error(&w, &q.decode(), &calib);
+        println!("{:<22} {:>9.3} {:>12.5}", format!("RTN {bits}b g{group}"), q.avg_bits(), err);
+    }
+    // GPTQ at 2 and 3 bits.
+    for bits in [2usize, 3] {
+        let q = gptq_quantize(&w, &calib, GptqConfig::paper(bits))?;
+        let err = relative_layer_error(&w, &q.decode(), &calib);
+        println!("{:<22} {:>9.3} {:>12.5}", format!("GPTQ {bits}b"), q.avg_bits(), err);
+    }
+    // AQLM at ~2 and ~3 bits.
+    for shape in [AqlmShape::new(1, 8, 4), AqlmShape::new(2, 8, 8)] {
+        let lq = LayerQuantizer::new(AqlmLayerConfig::new(shape));
+        let (q, trace) = lq.quantize(&w, &calib, &mut rng);
+        let err = relative_layer_error(&w, &q.decode(), &calib);
+        println!(
+            "{:<22} {:>9.3} {:>12.5}   (loss {:.1} -> {:.1} over {} phases)",
+            format!("AQLM {}", shape.name()),
+            q.avg_bits(),
+            err,
+            trace.points.first().unwrap().1,
+            trace.points.last().unwrap().1,
+            trace.points.len()
+        );
+    }
+    println!("\nAQLM's learned additive codebooks beat scalar grids at equal bits —");
+    println!("the paper's core claim, on one layer. See examples/e2e_compress.rs");
+    println!("for the full-model pipeline.");
+    Ok(())
+}

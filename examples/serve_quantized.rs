@@ -1,0 +1,63 @@
+//! Serving scenario: train (or load) a tiny model, quantize it to ~2 bits,
+//! and drive the continuous-batching server with a bursty workload,
+//! comparing FP32 vs AQLM throughput/latency (the deployment story of
+//! paper §4.4 / Table 14).
+//!
+//!     cargo run --release --example serve_quantized
+
+use aqlm::bench::{tables, Profile, Workspace};
+use aqlm::coordinator::server::{Server, ServerConfig};
+use aqlm::coordinator::shapes::choose_shape;
+use aqlm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ws = Workspace::new(Profile::fast());
+    let base = ws.base_model("tiny")?;
+    let shape = choose_shape(&base.cfg, 2.0, 8);
+    println!("quantizing tiny to {} (~2 bits)...", shape.name());
+    let (quantized, report) = ws.quantize(&base, &tables::aqlm_method_with_shape(&ws, shape))?;
+    println!(
+        "  avg bits {:.2}; weights {} -> {} bytes",
+        report.avg_bits,
+        base.weight_bytes(),
+        quantized.weight_bytes()
+    );
+
+    let tok = &ws.bundle.tokenizer;
+    let mut rng = Rng::seed_from_u64(3);
+    for (label, model) in [("FP32", base), ("AQLM-2bit", quantized)] {
+        let server = Server::start(model, ServerConfig { max_batch: 4, seed: 0 });
+        // Bursty workload: 3 waves of requests with varied lengths.
+        let mut receivers = Vec::new();
+        for wave in 0..3 {
+            for i in 0..4 {
+                let mut prompt = vec![aqlm::data::tokenizer::BOS];
+                prompt.extend(tok.encode("the"));
+                prompt.push(tok.id(["cat", "fox", "king", "ruby"][i % 4]));
+                receivers.push(server.submit(prompt, 24 + wave * 8, 0.7 + 0.1 * i as f32));
+            }
+            // Idle gap between waves.
+            std::thread::sleep(std::time::Duration::from_millis(30));
+        }
+        let mut latencies: Vec<f64> = Vec::new();
+        for rx in receivers {
+            let resp = rx.recv()?;
+            latencies.push(resp.latency_s);
+        }
+        let stats = server.shutdown();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = latencies[latencies.len() / 2];
+        let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+        println!(
+            "{label:>10}: {:5.1} tok/s | p50 {:6.1} ms | p99 {:6.1} ms | {} reqs",
+            stats.tokens_per_second(),
+            p50 * 1e3,
+            p99 * 1e3,
+            stats.requests
+        );
+        let _ = &mut rng;
+    }
+    println!("\n(2-bit weights keep accuracy close while shrinking the working set ~8x;");
+    println!(" see results/t14_* for the systematic comparison.)");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT lowering: JAX functions → HLO text artifacts + JSON manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the Rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (per model preset):
+  {name}_fwd.hlo.txt        — forward_logits(params..., tokens)
+  {name}_train.hlo.txt      — train_step(params..., m..., v..., step, tokens, targets)
+  aqlm_gemm_{cfg}.hlo.txt   — the Layer-1 Pallas kernel (interpret-lowered)
+  manifest.json             — argument order, shapes, dtypes for each module
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models nano]
+       [--batch 8] [--seq 128]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.aqlm_gemm import aqlm_gemm, vmem_bytes_estimate
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the only proto-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_fwd(cfg, batch, seq, out_dir, manifest):
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    params = [spec(shapes[n]) for n in names]
+    tokens = spec((batch, seq), jnp.int32)
+
+    def fn(*args):
+        p = list(args[:-1])
+        return (M.forward_logits(cfg, p, args[-1]),)
+
+    lowered = jax.jit(fn).lower(*params, tokens)
+    path = f"{cfg.name}_fwd.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest[f"{cfg.name}_fwd"] = {
+        "path": path,
+        "batch": batch,
+        "seq": seq,
+        "config": cfg.name,
+        "inputs": [
+            {"name": n, "shape": list(shapes[n]), "dtype": "f32"} for n in names
+        ]
+        + [{"name": "tokens", "shape": [batch, seq], "dtype": "i32"}],
+        "outputs": [
+            {"name": "logits", "shape": [batch, seq, cfg.vocab_size], "dtype": "f32"}
+        ],
+    }
+
+
+def export_train(cfg, batch, seq, out_dir, manifest, lr):
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    p_specs = [spec(shapes[n]) for n in names]
+    step = spec((), jnp.int32)
+    tokens = spec((batch, seq), jnp.int32)
+    targets = spec((batch, seq), jnp.int32)
+    n = len(names)
+
+    def fn(*args):
+        params = list(args[:n])
+        m_state = list(args[n : 2 * n])
+        v_state = list(args[2 * n : 3 * n])
+        step_, tok, tgt = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        loss, p2, m2, v2 = M.train_step(
+            cfg, params, m_state, v_state, step_, tok, tgt, lr=lr
+        )
+        return tuple([loss] + p2 + m2 + v2)
+
+    lowered = jax.jit(fn).lower(
+        *p_specs, *p_specs, *p_specs, step, tokens, targets
+    )
+    path = f"{cfg.name}_train.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    inputs = (
+        [{"name": n_, "shape": list(shapes[n_]), "dtype": "f32"} for n_ in names]
+        + [{"name": f"m.{n_}", "shape": list(shapes[n_]), "dtype": "f32"} for n_ in names]
+        + [{"name": f"v.{n_}", "shape": list(shapes[n_]), "dtype": "f32"} for n_ in names]
+        + [
+            {"name": "step", "shape": [], "dtype": "i32"},
+            {"name": "tokens", "shape": [batch, seq], "dtype": "i32"},
+            {"name": "targets", "shape": [batch, seq], "dtype": "i32"},
+        ]
+    )
+    outputs = (
+        [{"name": "loss", "shape": [], "dtype": "f32"}]
+        + [{"name": n_, "shape": list(shapes[n_]), "dtype": "f32"} for n_ in names]
+        + [{"name": f"m.{n_}", "shape": list(shapes[n_]), "dtype": "f32"} for n_ in names]
+        + [{"name": f"v.{n_}", "shape": list(shapes[n_]), "dtype": "f32"} for n_ in names]
+    )
+    manifest[f"{cfg.name}_train"] = {
+        "path": path,
+        "batch": batch,
+        "seq": seq,
+        "config": cfg.name,
+        "lr": lr,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def export_aqlm_gemm(out_dir, manifest, n=16, d_in=128, d_out=128, k=256, g=8, m_cnt=2):
+    n_groups = d_in // g
+    x = spec((n, d_in))
+    codes = spec((d_out, n_groups, m_cnt), jnp.int32)
+    codebooks = spec((m_cnt, k, g))
+    scales = spec((d_out,))
+
+    def fn(x, codes, codebooks, scales):
+        return (aqlm_gemm(x, codes, codebooks, scales),)
+
+    lowered = jax.jit(fn).lower(x, codes, codebooks, scales)
+    key = f"aqlm_gemm_{m_cnt}x{k}g{g}"
+    path = f"{key}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest[key] = {
+        "path": path,
+        "inputs": [
+            {"name": "x", "shape": [n, d_in], "dtype": "f32"},
+            {"name": "codes", "shape": [d_out, n_groups, m_cnt], "dtype": "i32"},
+            {"name": "codebooks", "shape": [m_cnt, k, g], "dtype": "f32"},
+            {"name": "scales", "shape": [d_out], "dtype": "f32"},
+        ],
+        "outputs": [{"name": "y", "shape": [n, d_out], "dtype": "f32"}],
+        "vmem_bytes_estimate": vmem_bytes_estimate(n, d_in, d_out, k, g, m_cnt),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="nano")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name in args.models.split(","):
+        cfg = M.PRESETS[name.strip()]
+        export_fwd(cfg, args.batch, args.seq, args.out_dir, manifest)
+        export_train(cfg, args.batch, args.seq, args.out_dir, manifest, args.lr)
+        print(f"exported {name}: fwd + train")
+    export_aqlm_gemm(args.out_dir, manifest)
+    print("exported aqlm_gemm kernel")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest)} modules to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

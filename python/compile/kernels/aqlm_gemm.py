@@ -1,0 +1,164 @@
+"""Layer-1 Pallas kernel: AQLM decode-and-matmul.
+
+The inference hot-spot of the paper (§4.4): reconstruct a tile of the
+compressed weight matrix from its codes + codebooks inside fast memory and
+immediately multiply with the activation tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the *output
+units*; per grid step the kernel sees
+
+  - the full activation block        (HBM → VMEM once per step),
+  - one tile of codes                (tiny: B·M bits per group),
+  - ALL codebooks pinned in VMEM     (constant index_map — the analog of the
+                                      paper keeping codebooks in shared mem/L2),
+  - one output tile.
+
+The decode is a gather from the VMEM-resident codebooks followed by a sum
+over the M additive codebooks (paper Eq. 2), and the matmul feeds the MXU.
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (numerically identical;
+see DESIGN.md for the VMEM/MXU estimates that replace wallclock here).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-unit tile. 128 matches the MXU systolic dimension; clamped for the
+# tiny layers of the scaled-down model family.
+TILE_OUT = 128
+
+
+def _aqlm_gemm_kernel(x_ref, codes_ref, cb_ref, scales_ref, o_ref):
+    """One grid step: decode TILE_OUT rows of Ŵ and multiply.
+
+    Shapes inside the kernel:
+      x_ref:      [n, d_in]
+      codes_ref:  [tile_out, n_groups, M]  (int32)
+      cb_ref:     [M, K, g]
+      scales_ref: [tile_out]
+      o_ref:      [n, tile_out]
+    """
+    x = x_ref[...]
+    codes = codes_ref[...]
+    codebooks = cb_ref[...]
+    scales = scales_ref[...]
+    tile_out, n_groups, m_cnt = codes.shape
+    g = codebooks.shape[2]
+    # Additive decode (Eq. 2): sum over the M codebooks of the gathered
+    # codewords. The gather stays inside VMEM.
+    acc = codebooks[0][codes[:, :, 0]]  # [tile_out, n_groups, g]
+    for m in range(1, m_cnt):
+        acc = acc + codebooks[m][codes[:, :, m]]
+    w_tile = acc.reshape(tile_out, n_groups * g) * scales[:, None]
+    # MXU matmul: [n, d_in] @ [d_in, tile_out].
+    o_ref[...] = jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
+
+
+def _aqlm_gemm_pallas(x, codes, codebooks, scales, interpret=True):
+    """Raw Pallas call (no autodiff)."""
+    n, d_in = x.shape
+    d_out, n_groups, m_cnt = codes.shape
+    m2, k, g = codebooks.shape
+    assert m2 == m_cnt and n_groups * g == d_in, "inconsistent AQLM shapes"
+    tile = min(TILE_OUT, d_out)
+    assert d_out % tile == 0, f"d_out {d_out} not divisible by tile {tile}"
+    grid = (d_out // tile,)
+    return pl.pallas_call(
+        _aqlm_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            # Activations: full block every step (resident).
+            pl.BlockSpec((n, d_in), lambda i: (0, 0)),
+            # Codes: one output tile per step — the only streamed operand.
+            pl.BlockSpec((tile, n_groups, m_cnt), lambda i: (i, 0, 0)),
+            # Codebooks: pinned (same block each step).
+            pl.BlockSpec((m_cnt, k, g), lambda i: (0, 0, 0)),
+            # Scales: one tile per step.
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d_out), jnp.float32),
+        interpret=interpret,
+    )(x, codes, codebooks, scales)
+
+
+@jax.custom_vjp
+def aqlm_gemm(x, codes, codebooks, scales):
+    """y = x · Ŵᵀ with Ŵ given in AQLM form.
+
+    Differentiable in (x, codebooks, scales) via a hand-written VJP —
+    exactly the "backpropagate through the weight representation (Eq. 2),
+    codes frozen" rule the paper's Phase 3 / Appendix A rely on, and the
+    same math as the Rust `AqlmWeight::backward_dw`.
+
+    Args:
+      x:         [n, d_in] float32.
+      codes:     [d_out, n_groups, M] int32 (non-differentiable).
+      codebooks: [M, K, g] float32.
+      scales:    [d_out] float32.
+    Returns:
+      [n, d_out] float32.
+    """
+    # interpret=True always: the CPU PJRT plugin cannot run Mosaic
+    # custom-calls (see module docstring).
+    return _aqlm_gemm_pallas(x, codes, codebooks, scales, True)
+
+
+def _decode_unscaled(codes, codebooks):
+    m_cnt = codes.shape[2]
+    acc = codebooks[0][codes[:, :, 0]]
+    for m in range(1, m_cnt):
+        acc = acc + codebooks[m][codes[:, :, m]]
+    return acc  # [d_out, n_groups, g]
+
+
+def _aqlm_gemm_fwd(x, codes, codebooks, scales):
+    y = _aqlm_gemm_pallas(x, codes, codebooks, scales, True)
+    return y, (x, codes, codebooks, scales)
+
+
+def _aqlm_gemm_bwd(res, gy):
+    import numpy as np
+
+    x, codes, codebooks, scales = res
+    d_out, n_groups, m_cnt = codes.shape
+    k, g = codebooks.shape[1], codebooks.shape[2]
+    unscaled = _decode_unscaled(codes, codebooks)  # [d_out, n_groups, g]
+    w = unscaled.reshape(d_out, n_groups * g) * scales[:, None]
+    dx = gy @ w
+    dw = gy.T @ x  # [d_out, d_in]
+    dw3 = dw.reshape(d_out, n_groups, g)
+    dscales = jnp.sum(dw3 * unscaled, axis=(1, 2))
+    dw_scaled = (dw3 * scales[:, None, None]).reshape(-1, g)
+    dcb = []
+    for m in range(m_cnt):
+        idx = codes[:, :, m].reshape(-1)
+        dcb.append(jnp.zeros((k, g), jnp.float32).at[idx].add(dw_scaled))
+    dcodebooks = jnp.stack(dcb, axis=0)
+    # Integer primals take float0 cotangents.
+    dcodes = np.zeros(codes.shape, dtype=jax.dtypes.float0)
+    return dx, dcodes, dcodebooks, dscales
+
+
+aqlm_gemm.defvjp(_aqlm_gemm_fwd, _aqlm_gemm_bwd)
+
+
+def vmem_bytes_estimate(n, d_in, d_out, k, g, m_cnt):
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §Perf).
+
+    Counts the resident blocks: activations + codebooks + one code tile +
+    one output tile + the decoded weight tile scratch.
+    """
+    tile = min(TILE_OUT, d_out)
+    n_groups = d_in // g
+    return 4 * (
+        n * d_in  # x
+        + m_cnt * k * g  # codebooks
+        + tile * n_groups * m_cnt  # codes (int32)
+        + tile  # scales
+        + n * tile  # output
+        + tile * d_in  # decoded weight tile
+    )

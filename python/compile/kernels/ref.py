@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth (the paper's Eq. 2 reconstruction and
+the layer forward) — deliberately written in the most obvious way possible.
+pytest checks the Pallas kernels and the Rust kernels (via AOT artifacts)
+against these.
+"""
+
+import jax.numpy as jnp
+
+
+def aqlm_decode_ref(codes, codebooks, scales):
+    """Reconstruct the dense weight matrix from AQLM parameters.
+
+    Args:
+      codes:     [d_out, n_groups, M] int32 indices into each codebook.
+      codebooks: [M, K, g] float32 learned codebooks.
+      scales:    [d_out] float32 per-output-unit scales.
+
+    Returns:
+      [d_out, n_groups * g] float32 dense weights (paper Eq. 2).
+    """
+    d_out, n_groups, m_cnt = codes.shape
+    _, _, g = codebooks.shape
+    # Gather each codebook's codeword then sum over the M codebooks.
+    gathered = jnp.stack(
+        [codebooks[m][codes[:, :, m]] for m in range(m_cnt)], axis=0
+    )  # [M, d_out, n_groups, g]
+    groups = gathered.sum(axis=0)  # [d_out, n_groups, g]
+    dense = groups.reshape(d_out, n_groups * g)
+    return dense * scales[:, None]
+
+
+def aqlm_gemm_ref(x, codes, codebooks, scales):
+    """y = x @ decode(codes, codebooks, scales)^T  — the layer forward.
+
+    Args:
+      x: [n, d_in] activations.
+    Returns:
+      [n, d_out] outputs.
+    """
+    w = aqlm_decode_ref(codes, codebooks, scales)
+    return x @ w.T
+
+
+def rmsnorm_ref(x, gain, eps=1e-5):
+    """RMSNorm over the last axis (matches the Rust implementation)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * gain / jnp.sqrt(ms + eps)

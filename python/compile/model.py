@@ -1,0 +1,194 @@
+"""Layer-2: the LLaMA-architecture model in JAX (build-time only).
+
+Semantically identical to the Rust implementation in `rust/src/nn/` —
+same RMSNorm (eps inside the sqrt), same interleaved RoPE, same head
+layout, same SwiGLU — so that logits computed through the AOT-compiled HLO
+artifact agree with the native Rust forward pass to float tolerance. The
+Rust integration test `integration_runtime.rs` checks exactly that.
+
+Parameters travel as a *flat ordered list* of arrays; `param_names()`
+defines the order and the AOT manifest records it for the Rust runtime.
+Quantized layers route through the Layer-1 Pallas kernel
+(`kernels.aqlm_gemm`) so the whole three-layer stack lowers into one HLO
+module.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aqlm_gemm import aqlm_gemm
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int = 160
+    max_seq: int = 256
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+
+
+def _d_ff(d_model: int) -> int:
+    return -(-(d_model * 8 // 3) // 16) * 16
+
+
+# Must stay in sync with rust/src/nn/config.rs presets.
+PRESETS = {
+    "nano": Config("nano", 96, 2, 4, _d_ff(96)),
+    "tiny": Config("tiny", 160, 3, 4, _d_ff(160)),
+    "small": Config("small", 224, 4, 8, _d_ff(224)),
+}
+
+
+def param_names(cfg: Config):
+    """Flat parameter order shared with the Rust runtime."""
+    names = ["embed"]
+    for b in range(cfg.n_layers):
+        names += [
+            f"b{b}.ln1",
+            f"b{b}.wq",
+            f"b{b}.wk",
+            f"b{b}.wv",
+            f"b{b}.wo",
+            f"b{b}.ln2",
+            f"b{b}.wg",
+            f"b{b}.wu",
+            f"b{b}.wd",
+        ]
+    names += ["ln_f", "head"]
+    return names
+
+
+def param_shapes(cfg: Config):
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    shapes = {"embed": (v, d), "ln_f": (d,), "head": (v, d)}
+    for b in range(cfg.n_layers):
+        shapes[f"b{b}.ln1"] = (d,)
+        shapes[f"b{b}.ln2"] = (d,)
+        shapes[f"b{b}.wq"] = (d, d)
+        shapes[f"b{b}.wk"] = (d, d)
+        shapes[f"b{b}.wv"] = (d, d)
+        shapes[f"b{b}.wo"] = (d, d)
+        shapes[f"b{b}.wg"] = (ff, d)
+        shapes[f"b{b}.wu"] = (ff, d)
+        shapes[f"b{b}.wd"] = (d, ff)
+    return shapes
+
+
+def init_params(cfg: Config, key):
+    """Gaussian init matching the Rust initializer's structure."""
+    shapes = param_shapes(cfg)
+    params = []
+    res_std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    for name in param_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("ln1") or name.endswith("ln2") or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = res_std if name.endswith((".wo", ".wd")) else 0.02
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def rmsnorm(x, gain, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * gain / jnp.sqrt(ms + eps)
+
+
+def rope_rotate(v, positions, theta):
+    """Interleaved RoPE on [..., seq, n_heads, head_dim] (pairs 2i, 2i+1)."""
+    half = v.shape[-1] // 2
+    freqs = 1.0 / theta ** (2.0 * jnp.arange(half) / (2.0 * half))
+    angles = positions[:, None] * freqs[None, :]  # [seq, half]
+    cos = jnp.cos(angles)[:, None, :]  # [seq, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    a = v[..., 0::2]
+    b = v[..., 1::2]
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    out = jnp.stack([ra, rb], axis=-1).reshape(v.shape)
+    return out
+
+
+def block_forward(cfg: Config, x, ln1, wq, wk, wv, wo, ln2, wg, wu, wd):
+    """One pre-norm transformer block on x: [batch, seq, d]."""
+    bsz, seq, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    xn = rmsnorm(x, ln1, cfg.norm_eps)
+    q = (xn @ wq.T).reshape(bsz, seq, h, dh)
+    k = (xn @ wk.T).reshape(bsz, seq, h, dh)
+    v = (xn @ wv.T).reshape(bsz, seq, h, dh)
+    pos = jnp.arange(seq, dtype=jnp.float32)
+    q = rope_rotate(q, pos, cfg.rope_theta)
+    k = rope_rotate(k, pos, cfg.rope_theta)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / dh**0.5
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(bsz, seq, h * dh)
+    x = x + ctx @ wo.T
+    xn2 = rmsnorm(x, ln2, cfg.norm_eps)
+    hmid = jax.nn.silu(xn2 @ wg.T) * (xn2 @ wu.T)
+    return x + hmid @ wd.T
+
+
+def forward_logits(cfg: Config, params, tokens):
+    """Full forward. tokens: [batch, seq] int32 → logits [batch, seq, vocab]."""
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]
+    for _ in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2, wg, wu, wd = (next(it) for _ in range(9))
+        x = block_forward(cfg, x, ln1, wq, wk, wv, wo, ln2, wg, wu, wd)
+    ln_f = next(it)
+    head = next(it)
+    xn = rmsnorm(x, ln_f, cfg.norm_eps)
+    return xn @ head.T
+
+
+def loss_fn(cfg: Config, params, tokens, targets):
+    """Mean cross-entropy in nats."""
+    logits = forward_logits(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return -jnp.mean(picked)
+
+
+def train_step(cfg: Config, params, m_state, v_state, step, tokens, targets,
+               lr=3e-3, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One full-model Adam step; returns (loss, params', m', v').
+
+    This is the artifact the Rust coordinator drives in a buffer-resident
+    loop to train the base models through PJRT (examples/e2e_compress.rs).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets)
+    )(params)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    new_params, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, m_state, v_state):
+        m2 = beta1 * m + (1.0 - beta1) * g
+        v2 = beta2 * v + (1.0 - beta2) * g * g
+        update = lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        new_params.append(p - update)
+        new_m.append(m2)
+        new_v.append(v2)
+    return loss, new_params, new_m, new_v
+
+
+def quantized_layer_forward(x, codes, codebooks, scales):
+    """A single AQLM-compressed linear layer via the Layer-1 Pallas kernel.
+
+    Exported as its own artifact so the Rust runtime can cross-check its
+    LUT kernels against the Pallas kernel bit-for-bit (well, float-for-float).
+    """
+    return aqlm_gemm(x, codes, codebooks, scales)

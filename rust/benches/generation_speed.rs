@@ -1,0 +1,23 @@
+//! `cargo bench --bench generation_speed` — Table 14 (end-to-end tok/s of
+//! the continuous-batching server, FP32 vs AQLM weights).
+
+use aqlm::bench::{kernels, Profile, Workspace};
+use aqlm::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let profile = if args.flag("full") { Profile::full() } else { Profile::fast() };
+    let mut ws = Workspace::new(profile);
+    match kernels::t14_generation_speed(&mut ws) {
+        Ok(tables) => {
+            for t in tables {
+                println!("{}", t.to_markdown());
+                t.save(&ws.results_dir(), "t14_generation_speed").ok();
+            }
+        }
+        Err(e) => {
+            eprintln!("t14 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! `cargo bench --bench kernel_speed` — Table 5 (layer matvec latency,
+//! f32 GEMV vs AQLM decode/LUT kernels on the paper's gate_proj shapes)
+//! plus a microkernel sweep over code widths used by the §Perf log.
+
+use aqlm::bench::{kernels, Profile, Workspace};
+use aqlm::kernels::format::AqlmShape;
+use aqlm::kernels::matvec::PackedAqlm;
+use aqlm::util::cli::Args;
+use aqlm::util::rng::Rng;
+use aqlm::util::timing::{bench_adaptive, black_box};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let profile = if args.flag("full") { Profile::full() } else { Profile::fast() };
+    let mut ws = Workspace::new(profile);
+    match kernels::t5_matvec_speed(&mut ws) {
+        Ok(tables) => {
+            for t in tables {
+                println!("{}", t.to_markdown());
+                t.save(&ws.results_dir(), "t5_kernel_speed").ok();
+            }
+        }
+        Err(e) => {
+            eprintln!("t5 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // Microkernel sweep: LUT vs decode across configs on one mid-size layer.
+    println!("### Microkernel sweep (4096x1024)\n");
+    println!("| config | decode | lut |");
+    println!("| ------ | ------ | --- |");
+    let mut rng = Rng::seed_from_u64(1);
+    for shape in [
+        AqlmShape::new(1, 8, 8),
+        AqlmShape::new(2, 8, 8),
+        AqlmShape::new(4, 8, 16),
+        AqlmShape::new(1, 12, 8),
+    ] {
+        let w = kernels::synthetic_weight(4096, 1024, shape, &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0.0f32; 4096];
+        let dec = bench_adaptive(0.03, 7, || packed.matvec_decode(black_box(&x), &mut y));
+        let mut lut = vec![0.0f32; packed.lut_len()];
+        let l = bench_adaptive(0.03, 7, || packed.matvec_lut(black_box(&x), &mut lut, &mut y));
+        println!(
+            "| {} | {} | {} |",
+            shape.name(),
+            aqlm::util::human_time(dec.median),
+            aqlm::util::human_time(l.median)
+        );
+    }
+}

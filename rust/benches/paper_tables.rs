@@ -1,0 +1,28 @@
+//! `cargo bench --bench paper_tables [-- --table t1 [--full]]`
+//!
+//! Regenerates the paper's evaluation tables and figures (DESIGN.md §6).
+//! Without arguments runs a fast representative subset; `--table all` runs
+//! everything. Custom harness: criterion is not available offline.
+
+use aqlm::bench::{self, Profile, Workspace};
+use aqlm::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let profile = if args.flag("full") { Profile::full() } else { Profile::fast() };
+    let mut ws = Workspace::new(profile);
+    let ids: Vec<String> = match args.get("table") {
+        Some("all") => bench::ALL_IDS.iter().map(|s| s.to_string()).collect(),
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        // Fast default: a representative accuracy table + both speed tables
+        // + one figure, so `cargo bench` finishes in reasonable time.
+        None => vec!["t5".into(), "t16".into(), "t7".into()],
+    };
+    for id in ids {
+        eprintln!("=== {id} ===");
+        if let Err(e) = bench::run(&id, &mut ws) {
+            eprintln!("{id} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The paper's figures: 1/5 (Pareto comparison), 4 (init ablation loss
+//! curves), 6 (model-size optimality), 7 (codes/codebook distribution).
+
+use super::tables::{aqlm_method, aqlm_method_with_shape};
+use super::workspace::Workspace;
+use crate::coordinator::pipeline::Method;
+use crate::coordinator::shapes::choose_shape;
+use crate::eval::pareto::{ascii_plot, frontier, is_pareto_optimal, ParetoPoint};
+use crate::eval::report::{f2, Table};
+use crate::nn::linear::Linear;
+use crate::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
+use crate::quant::quip::QuipConfig;
+use crate::quant::CalibData;
+use crate::tensor::linalg::pca;
+use crate::util::rng::Rng;
+
+/// Figures 1/5: PPL vs quantized-weight bytes, AQLM vs QuIP-lite across the
+/// model family.
+pub fn f1_pareto(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Figure 1/5: PPL vs model size (AQLM vs QuIP-lite)",
+        &["Point", "Size (bytes)", "Wiki2 PPL", "On frontier?"],
+    );
+    let mut points = Vec::new();
+    for preset in ["nano", "tiny"] {
+        let mut base = ws.base_model(preset)?;
+        points.push(ParetoPoint {
+            label: format!("{preset}-fp32"),
+            size_bytes: base.weight_bytes() as u64,
+            ppl: ws.eval_ppl(&mut base),
+        });
+        for target in [2.0, 3.0, 4.0] {
+            let (method, shape) = aqlm_method(ws, &base.cfg, target);
+            let (mut q, _) = ws.quantize(&base, &method)?;
+            points.push(ParetoPoint {
+                label: format!("{preset}-aqlm-{}", shape.name()),
+                size_bytes: q.weight_bytes() as u64,
+                ppl: ws.eval_ppl(&mut q),
+            });
+        }
+        for bits in [2usize, 4] {
+            let (mut q, report) =
+                ws.quantize(&base, &Method::Quip(QuipConfig { bits, seed: ws.profile.seed }))?;
+            // QuIP-lite returns dense weights; compute its true size from
+            // the report (the model itself stores dequantized f32).
+            let qp = base.cfg.quantizable_param_count() as f64;
+            let rest = q.weight_bytes() as f64 - qp * 2.0; // non-quantized @16 bit
+            let size = rest + qp * report.avg_bits / 8.0;
+            points.push(ParetoPoint {
+                label: format!("{preset}-quip-{bits}b"),
+                size_bytes: size as u64,
+                ppl: ws.eval_ppl(&mut q),
+            });
+        }
+    }
+    let front = frontier(&points);
+    for p in &points {
+        t.row(vec![
+            p.label.clone(),
+            p.size_bytes.to_string(),
+            f2(p.ppl),
+            if is_pareto_optimal(p, &points) { "yes".into() } else { "no".into() },
+        ]);
+    }
+    println!("{}", ascii_plot(&points, 64, 16));
+    println!(
+        "frontier: {}",
+        front.iter().map(|p| p.label.as_str()).collect::<Vec<_>>().join(" -> ")
+    );
+    Ok(vec![t])
+}
+
+/// Figure 4: K-means vs random init — MSE loss trace of the per-layer
+/// alternating optimization on one real layer (a trained model's wq).
+pub fn f4_init_ablation(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Figure 4: K-means vs random init loss curves (tiny b1.wq)",
+        &["Phase", "Loss (kmeans init)", "Loss (random init)"],
+    );
+    let mut base = ws.base_model("tiny")?;
+    // Calibration for that layer from a real forward pass.
+    let n = ws.profile.calib_seqs;
+    let tokens = ws.calib_tokens(n);
+    let x = base.embed_tokens(&tokens);
+    let cfg = base.cfg.clone();
+    let rope = base.rope.clone();
+    let (x1, _) = base.blocks[0].forward(&x, &cfg, n, ws.profile.seq, &rope, false);
+    let calib_block = crate::coordinator::calib::capture_block(
+        &mut base.blocks[1],
+        &cfg,
+        n,
+        ws.profile.seq,
+        &rope,
+        &x1,
+    );
+    let calib = calib_block.calib_for("wq").unwrap();
+    let w = base.blocks[1].attn.wq.weight_owned();
+    let shape = choose_shape(&cfg, 3.0, 8);
+    let mut lcfg = AqlmLayerConfig::new(shape);
+    lcfg.max_iters = 4;
+    lcfg.tol = 0.0;
+    let mut rng = Rng::seed_from_u64(ws.profile.seed);
+    let (_, trace_k) = LayerQuantizer::new(lcfg).quantize(&w, calib, &mut rng);
+    let mut rcfg = lcfg;
+    rcfg.random_init = true;
+    let (_, trace_r) = LayerQuantizer::new(rcfg).quantize(&w, calib, &mut rng);
+    let rows = trace_k.points.len().max(trace_r.points.len());
+    for i in 0..rows {
+        let phase = trace_k
+            .points
+            .get(i)
+            .map(|(p, _)| p.clone())
+            .or_else(|| trace_r.points.get(i).map(|(p, _)| p.clone()))
+            .unwrap();
+        let lk = trace_k.points.get(i).map(|(_, l)| format!("{l:.4}")).unwrap_or_default();
+        let lr = trace_r.points.get(i).map(|(_, l)| format!("{l:.4}")).unwrap_or_default();
+        t.row(vec![phase, lk, lr]);
+    }
+    Ok(vec![t])
+}
+
+/// Figure 6: model optimality — AQLM bits sweep on two model sizes,
+/// size-in-bytes vs PPL.
+pub fn f6_model_optimality(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Figure 6: size vs PPL across bit widths (AQLM)",
+        &["Model", "Target bits", "Actual bits", "Size (bytes)", "Wiki2 PPL"],
+    );
+    let mut points = Vec::new();
+    for preset in ["nano", "tiny"] {
+        let base = ws.base_model(preset)?;
+        for target in [2.0, 2.5, 3.0, 4.0] {
+            let (method, _) = aqlm_method(ws, &base.cfg, target);
+            let (mut q, report) = ws.quantize(&base, &method)?;
+            let ppl = ws.eval_ppl(&mut q);
+            let size = q.weight_bytes() as u64;
+            t.row(vec![
+                preset.to_string(),
+                f2(target),
+                f2(report.avg_bits),
+                size.to_string(),
+                f2(ppl),
+            ]);
+            points.push(ParetoPoint { label: format!("{preset}@{target}"), size_bytes: size, ppl });
+        }
+    }
+    println!("{}", ascii_plot(&points, 64, 16));
+    Ok(vec![t])
+}
+
+/// Figure 7: learned code usage entropy + top-2 PCA of a codebook.
+pub fn f7_codebook_analysis(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let base = ws.base_model("tiny")?;
+    let shape = choose_shape(&base.cfg, 2.3, 8);
+    let method = aqlm_method_with_shape(ws, shape);
+    let (mut q, _) = ws.quantize(&base, &method)?;
+    // Pull the first quantized attention projection.
+    let mut t = Table::new(
+        "Figure 7: code distribution and codebook PCA (b0.wq)",
+        &["Quantity", "Value"],
+    );
+    let lin = &mut q.blocks[0].attn.wq;
+    if let Linear::Aqlm { q: aq, .. } = lin {
+        let k = aq.codebook_size();
+        // Code histogram + entropy (paper: near-uniform, entropy ≈ B bits).
+        let mut counts = vec![0usize; k];
+        for j in 0..aq.codes.len() {
+            if j % aq.n_codebooks == 0 {
+                counts[aq.codes[j] as usize] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let entropy: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total as f64;
+                -p * p.log2()
+            })
+            .sum();
+        t.row(vec!["codebook size (2^B)".into(), k.to_string()]);
+        t.row(vec!["code entropy (bits)".into(), format!("{entropy:.3}")]);
+        t.row(vec!["max possible entropy".into(), format!("{:.3}", (k as f64).log2())]);
+        t.row(vec![
+            "codes used".into(),
+            format!("{}/{}", counts.iter().filter(|&&c| c > 0).count(), k),
+        ]);
+        // PCA of codebook 0.
+        let mut rng = Rng::seed_from_u64(1);
+        let (_, eigs) = pca(&aq.codebooks[0], 2, 50, &mut rng);
+        t.row(vec!["codebook PC1 variance".into(), format!("{:.5}", eigs[0])]);
+        t.row(vec!["codebook PC2 variance".into(), format!("{:.5}", eigs[1])]);
+        // Spread: codewords concentrated in a ball (paper's observation).
+        let norms: Vec<f64> = (0..k)
+            .map(|c| {
+                aq.codebooks[0].row(c).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+            })
+            .collect();
+        let mean_norm = norms.iter().sum::<f64>() / k as f64;
+        let max_norm = norms.iter().cloned().fold(0.0, f64::max);
+        t.row(vec!["mean codeword norm".into(), format!("{mean_norm:.4}")]);
+        t.row(vec!["max codeword norm".into(), format!("{max_norm:.4}")]);
+    } else {
+        anyhow::bail!("b0.wq is not AQLM-quantized");
+    }
+    // Silence unused warning for CalibData import used in docs.
+    let _ = CalibData::identity(1);
+    Ok(vec![t])
+}

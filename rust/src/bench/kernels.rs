@@ -1,0 +1,124 @@
+//! Kernel-speed experiments: Table 5 (layer matvec) and Table 14
+//! (end-to-end generation). Unlike the accuracy tables these use the
+//! paper's *true* layer dimensions — kernel speed needs no trained model,
+//! so the gate_proj shapes of LLAMA 2 7B/13B/70B are benchmarked directly.
+
+use super::workspace::Workspace;
+use crate::coordinator::shapes::choose_shape;
+use crate::eval::report::Table;
+use crate::kernels::format::{AqlmShape, AqlmWeight};
+use crate::kernels::matvec::PackedAqlm;
+use crate::tensor::ops::gemv;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::timing::{bench_adaptive, black_box};
+
+/// Random AQLM weight of a given shape (kernel benches only need layout,
+/// not learned values).
+pub fn synthetic_weight(d_out: usize, d_in: usize, shape: AqlmShape, rng: &mut Rng) -> AqlmWeight {
+    let k = 1usize << shape.code_bits;
+    let n_groups = d_in / shape.group;
+    AqlmWeight {
+        d_out,
+        d_in,
+        group: shape.group,
+        n_codebooks: shape.n_codebooks,
+        code_bits: shape.code_bits,
+        codes: (0..d_out * n_groups * shape.n_codebooks).map(|_| rng.below(k) as u16).collect(),
+        codebooks: (0..shape.n_codebooks).map(|_| Tensor::randn(&[k, shape.group], 0.1, rng)).collect(),
+        scales: (0..d_out).map(|_| 1.0).collect(),
+    }
+}
+
+/// Table 5: matvec latency of the f32 baseline vs AQLM kernels on the
+/// paper's gate_proj dimensions.
+pub fn t5_matvec_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 5: gate_proj matvec — f32 GEMV vs AQLM kernels (1 CPU core)",
+        &["Layer (analog)", "Config", "f32", "AQLM", "Speedup", "Kernel"],
+    );
+    // (paper model, d_ff, d_model) of mlp.gate_proj; fast profile trims 70B.
+    let mut layers: Vec<(&str, usize, usize)> =
+        vec![("7B", 11008, 4096), ("13B", 13824, 5120)];
+    if !ws.profile.fast {
+        layers.push(("70B", 28672, 8192));
+    }
+    let configs = [
+        AqlmShape::new(1, 16, 8), // the paper's 1x16 GPU format
+        AqlmShape::new(2, 8, 8),  // CPU formats
+        AqlmShape::new(4, 8, 16),
+        AqlmShape::new(8, 8, 32),
+    ];
+    let iters = if ws.profile.fast { 7 } else { 15 };
+    let mut rng = Rng::seed_from_u64(5);
+    for (name, d_out, d_in) in layers {
+        // f32 baseline.
+        let dense = Tensor::randn(&[d_out, d_in], 0.05, &mut rng);
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0.0f32; d_out];
+        let base = bench_adaptive(0.05, iters, || {
+            gemv(&dense, black_box(&x), &mut y);
+        });
+        drop(dense);
+        for shape in configs {
+            let w = synthetic_weight(d_out, d_in, shape, &mut rng);
+            let packed = PackedAqlm::from_weight(&w);
+            drop(w);
+            let use_lut = shape.n_codebooks * (1 << shape.code_bits) * 2
+                <= d_out * shape.group;
+            let mut lut = vec![0.0f32; if use_lut { packed.lut_len() } else { 0 }];
+            let stats = bench_adaptive(0.05, iters, || {
+                if use_lut {
+                    packed.matvec_lut(black_box(&x), &mut lut, &mut y);
+                } else {
+                    packed.matvec_decode(black_box(&x), &mut y);
+                }
+            });
+            t.row(vec![
+                format!("{name} ({d_out}x{d_in})"),
+                shape.name(),
+                crate::util::human_time(base.median),
+                crate::util::human_time(stats.median),
+                format!("x{:.2}", base.median / stats.median),
+                if use_lut { "lut" } else { "decode" }.to_string(),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Table 14: end-to-end generation tokens/s through the serving path,
+/// FP32 vs AQLM-quantized models.
+pub fn t14_generation_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    use crate::coordinator::server::{Server, ServerConfig};
+    let mut t = Table::new(
+        "Table 14: generation speed (continuous-batching server, tok/s)",
+        &["Model", "Weights", "tok/s", "mean latency"],
+    );
+    let presets: Vec<&str> = if ws.profile.fast { vec!["nano"] } else { vec!["nano", "tiny", "small"] };
+    for preset in presets {
+        let base = ws.base_model(preset)?;
+        let shape = choose_shape(&base.cfg, 2.0, 8);
+        let method = super::tables::aqlm_method_with_shape(ws, shape);
+        let (quantized, _) = ws.quantize(&base, &method)?;
+        for (label, model) in [("FP32", base.clone()), (&*format!("AQLM {}", shape.name()), quantized)] {
+            let server = Server::start(model, ServerConfig { max_batch: 4, seed: 0 });
+            let n_req = if ws.profile.fast { 6 } else { 12 };
+            let max_new = 48;
+            let rxs: Vec<_> = (0..n_req)
+                .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
+                .collect();
+            for rx in rxs {
+                rx.recv().expect("generation response");
+            }
+            let stats = server.shutdown();
+            t.row(vec![
+                preset.to_string(),
+                label.to_string(),
+                format!("{:.1}", stats.tokens_per_second()),
+                crate::util::human_time(stats.mean_latency_s()),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}

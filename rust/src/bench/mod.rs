@@ -1,0 +1,73 @@
+//! Experiment drivers: one function per paper table / figure
+//! (DESIGN.md §6 maps ids → paper artifacts). Shared by the `aqlm table`
+//! CLI and `cargo bench --bench paper_tables`.
+
+pub mod workspace;
+pub mod tables;
+pub mod figures;
+pub mod kernels;
+
+pub use workspace::{Profile, Workspace};
+
+/// Run one experiment by id ("t1".."t16", "f1", "f4", "f6", "f7").
+/// Results are printed, and saved under `results/`.
+pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
+    let tables = match id {
+        "t1" => tables::t1_low_bit(ws)?,
+        "t2" => tables::t2_3bit(ws)?,
+        "t3" => tables::t3_moe_2bit(ws)?,
+        "t4" => tables::t4_e2e_2bit(ws)?,
+        "t5" => kernels::t5_matvec_speed(ws)?,
+        "t6" => tables::t6_e2e_3bit(ws)?,
+        "t7" => tables::t7_ft_ablation(ws)?,
+        "t8" => tables::t8_calib_sweep(ws)?,
+        "t9" => tables::t9_codebooks_vs_groups(ws)?,
+        "t10" => tables::t10_4bit(ws)?,
+        "t11" => tables::t11_moe_34bit(ws)?,
+        "t12" => tables::t12_cpu_friendly(ws)?,
+        "t13" => tables::t13_gqa(ws)?,
+        "t14" => kernels::t14_generation_speed(ws)?,
+        "t15" => tables::t15_hard_tasks(ws)?,
+        "t16" => tables::t16_gptq_tuned(ws)?,
+        "f1" | "f5" => figures::f1_pareto(ws)?,
+        "f4" => figures::f4_init_ablation(ws)?,
+        "f6" => figures::f6_model_optimality(ws)?,
+        "f7" => figures::f7_codebook_analysis(ws)?,
+        other => anyhow::bail!("unknown experiment id '{other}'"),
+    };
+    for t in &tables {
+        println!("{}", t.to_markdown());
+        let stem = format!("{id}_{}", slug(&t.title));
+        t.save(&ws.results_dir(), &stem)?;
+    }
+    Ok(())
+}
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
+    "t15", "t16", "f1", "f4", "f6", "f7",
+];
+
+fn slug(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect::<String>()
+        .split('_')
+        .filter(|p| !p.is_empty())
+        .collect::<Vec<_>>()
+        .join("_")
+        .chars()
+        .take(48)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn slug_is_filesystem_safe() {
+        let s = super::slug("Table 1: AQLM vs QuIP# (2-bit)");
+        assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'));
+        assert!(s.starts_with("table_1"));
+    }
+}

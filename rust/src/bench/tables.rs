@@ -1,0 +1,422 @@
+//! The paper's tables (1–4, 6–13, 15, 16). Each function regenerates one
+//! table's rows on the scaled-down model family; kernel-speed tables (5,
+//! 14) live in [`super::kernels`].
+
+use super::workspace::{EvalRow, Workspace};
+use crate::coordinator::pipeline::Method;
+use crate::coordinator::shapes::{choose_shape, model_avg_bits, quantizable_layer_dims};
+use crate::data::tasks::Task;
+use crate::eval::report::{f2, pct, Table};
+use crate::kernels::format::AqlmShape;
+use crate::nn::config::ModelConfig;
+use crate::nn::model::Model;
+use crate::quant::aqlm::blockft::{BlockFtConfig, FtScope};
+use crate::quant::aqlm::e2eft::{e2e_finetune, E2eFtConfig};
+use crate::quant::aqlm::layer::AqlmLayerConfig;
+use crate::quant::gptq::GptqConfig;
+use crate::quant::quip::QuipConfig;
+use crate::quant::rtn::RtnConfig;
+use crate::quant::spqr::SpqrConfig;
+use crate::util::rng::Rng;
+
+/// Model presets used by a multi-model table.
+fn family(ws: &Workspace) -> Vec<&'static str> {
+    if ws.profile.fast {
+        vec!["nano", "tiny"]
+    } else {
+        vec!["nano", "tiny", "small"]
+    }
+}
+
+/// Default AQLM method at a target bit width for one model config.
+pub fn aqlm_method(ws: &Workspace, cfg: &ModelConfig, target_bits: f64) -> (Method, AqlmShape) {
+    let shape = choose_shape(cfg, target_bits, 8);
+    (aqlm_method_with_shape(ws, shape), shape)
+}
+
+pub fn aqlm_method_with_shape(ws: &Workspace, shape: AqlmShape) -> Method {
+    let layer = if ws.profile.fast {
+        AqlmLayerConfig::fast(shape)
+    } else {
+        AqlmLayerConfig::new(shape)
+    };
+    let block_ft = BlockFtConfig {
+        steps: if ws.profile.fast { 15 } else { 40 },
+        lr: 1e-3,
+        tol: 1e-5,
+        scope: FtScope::Full,
+    };
+    Method::Aqlm { layer, block_ft }
+}
+
+/// Standard-table header.
+fn eval_table(title: &str) -> Table {
+    Table::new(
+        title,
+        &[
+            "Size", "Method", "Avg bits", "Wiki2↓", "C4↓", "WinoGrande↑", "PiQA↑", "HellaSwag↑",
+            "ArcE↑", "ArcC↑", "Avg acc↑",
+        ],
+    )
+}
+
+fn eval_row(t: &mut Table, size: &str, method: &str, bits: f64, row: &EvalRow) {
+    let mut cells = vec![size.to_string(), method.to_string(), f2(bits), f2(row.wiki_ppl), f2(row.c4_ppl)];
+    for (_, acc) in &row.tasks {
+        cells.push(pct(*acc));
+    }
+    cells.push(pct(row.avg_acc));
+    t.row(cells);
+}
+
+/// Quantize + evaluate one (model, method) cell.
+fn cell(ws: &Workspace, base: &Model, method: &Method) -> anyhow::Result<(EvalRow, f64, Model)> {
+    let (mut q, report) = ws.quantize(base, method)?;
+    let row = ws.eval(&mut q);
+    Ok((row, report.avg_bits, q))
+}
+
+/// Apply end-to-end KD fine-tuning (the paper's ★).
+pub fn star(ws: &Workspace, student: &mut Model, teacher: &Model) {
+    let cfg = E2eFtConfig {
+        steps: if ws.profile.fast { 40 } else { 120 },
+        batch: 4,
+        lr: 1e-4,
+    };
+    let mut teacher = teacher.clone();
+    let data = crate::data::dataset::TokenDataset {
+        tokens: ws.bundle.calib.tokens.clone(),
+        seq_len: ws.profile.seq,
+    };
+    let mut rng = Rng::seed_from_u64(ws.profile.seed ^ 0xe2e);
+    e2e_finetune(student, &mut teacher, &data, cfg, &mut rng);
+}
+
+// ------------------------------------------------------------------ tables
+
+/// Table 1: 2–2.8 bit, AQLM vs QuIP-lite (+RTN for context).
+pub fn t1_low_bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table("Table 1: 2-2.8 bits per parameter");
+    for preset in family(ws) {
+        let mut base = ws.base_model(preset)?;
+        let row = ws.eval(&mut base);
+        eval_row(&mut t, preset, "FP32", 16.0, &row);
+        for target in [2.0, 2.3, 2.8] {
+            let (method, shape) = aqlm_method(ws, &base.cfg, target);
+            let (row, bits, _) = cell(ws, &base, &method)?;
+            eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), bits, &row);
+            if target == 2.0 {
+                let (row, bits, _) =
+                    cell(ws, &base, &Method::Quip(QuipConfig { bits: 2, seed: ws.profile.seed }))?;
+                eval_row(&mut t, preset, "QuIP-lite", bits, &row);
+                let (row, bits, _) = cell(ws, &base, &Method::Rtn(RtnConfig::new(2, 32)))?;
+                eval_row(&mut t, preset, "RTN", bits, &row);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Table 2: ~3 bit, AQLM vs GPTQ / SpQR-lite / QuIP-lite.
+pub fn t2_3bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table("Table 2: 3-3.1 bits per parameter");
+    for preset in family(ws) {
+        let mut base = ws.base_model(preset)?;
+        let row = ws.eval(&mut base);
+        eval_row(&mut t, preset, "FP32", 16.0, &row);
+        let (method, shape) = aqlm_method(ws, &base.cfg, 3.0);
+        let (row, bits, _) = cell(ws, &base, &method)?;
+        eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), bits, &row);
+        for (name, m) in [
+            ("GPTQ", Method::Gptq { cfg: GptqConfig::paper(3), block_tune: None }),
+            ("SpQR-lite", Method::Spqr(SpqrConfig { bits: 2, group: 16, outlier_frac: 0.015 })),
+            ("QuIP-lite", Method::Quip(QuipConfig { bits: 3, seed: ws.profile.seed })),
+        ] {
+            let (row, bits, _) = cell(ws, &base, &m)?;
+            eval_row(&mut t, preset, name, bits, &row);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Table 10: ~4 bit, all methods.
+pub fn t10_4bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table("Table 10: 4+ bits per parameter");
+    for preset in family(ws) {
+        let mut base = ws.base_model(preset)?;
+        let row = ws.eval(&mut base);
+        eval_row(&mut t, preset, "FP32", 16.0, &row);
+        let (method, shape) = aqlm_method(ws, &base.cfg, 4.0);
+        let (row, bits, _) = cell(ws, &base, &method)?;
+        eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), bits, &row);
+        for (name, m) in [
+            ("GPTQ", Method::Gptq { cfg: GptqConfig::paper(4), block_tune: None }),
+            ("SpQR-lite", Method::Spqr(SpqrConfig { bits: 3, group: 16, outlier_frac: 0.01 })),
+            ("QuIP-lite", Method::Quip(QuipConfig { bits: 4, seed: ws.profile.seed })),
+            ("RTN", Method::Rtn(RtnConfig::new(4, 32))),
+        ] {
+            let (row, bits, _) = cell(ws, &base, &m)?;
+            eval_row(&mut t, preset, name, bits, &row);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Table 3: Mixtral-analog (tiny-moe) at ~2 bit.
+pub fn t3_moe_2bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table("Table 3: Mixtral-analog (tiny-moe) at 2 bits");
+    let mut base = ws.base_model("tiny-moe")?;
+    let row = ws.eval(&mut base);
+    eval_row(&mut t, "tiny-moe", "FP32", 16.0, &row);
+    let (method, shape) = aqlm_method(ws, &base.cfg, 2.0);
+    let (row, bits, _) = cell(ws, &base, &method)?;
+    eval_row(&mut t, "tiny-moe", &format!("AQLM {}", shape.name()), bits, &row);
+    let (row, bits, _) =
+        cell(ws, &base, &Method::Quip(QuipConfig { bits: 2, seed: ws.profile.seed }))?;
+    eval_row(&mut t, "tiny-moe", "QuIP-lite", bits, &row);
+    Ok(vec![t])
+}
+
+/// Table 11: Mixtral-analog at 3 and 4 bits.
+pub fn t11_moe_34bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table("Table 11: Mixtral-analog at 3 and 4 bits");
+    let mut base = ws.base_model("tiny-moe")?;
+    let row = ws.eval(&mut base);
+    eval_row(&mut t, "tiny-moe", "FP32", 16.0, &row);
+    for target in [3.0, 4.0] {
+        let (method, shape) = aqlm_method(ws, &base.cfg, target);
+        let (row, bits, _) = cell(ws, &base, &method)?;
+        eval_row(&mut t, "tiny-moe", &format!("AQLM {}", shape.name()), bits, &row);
+    }
+    let (row, bits, _) =
+        cell(ws, &base, &Method::Quip(QuipConfig { bits: 4, seed: ws.profile.seed }))?;
+    eval_row(&mut t, "tiny-moe", "QuIP-lite 4b", bits, &row);
+    Ok(vec![t])
+}
+
+/// Table 13: Mistral-analog (tiny-gqa) at 2/3/4 bits.
+pub fn t13_gqa(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table("Table 13: Mistral-analog (tiny-gqa) at 2/3/4 bits");
+    let mut base = ws.base_model("tiny-gqa")?;
+    let row = ws.eval(&mut base);
+    eval_row(&mut t, "tiny-gqa", "FP32", 16.0, &row);
+    for target in [2.0, 3.0, 4.0] {
+        let (method, shape) = aqlm_method(ws, &base.cfg, target);
+        let (mut q, report) = ws.quantize(&base, &method)?;
+        let row = ws.eval(&mut q);
+        eval_row(&mut t, "tiny-gqa", &format!("AQLM {}", shape.name()), report.avg_bits, &row);
+        if target == 2.0 {
+            // ★ variant at the extreme width, as the paper highlights.
+            star(ws, &mut q, &base);
+            let row = ws.eval(&mut q);
+            eval_row(&mut t, "tiny-gqa", &format!("AQLM★ {}", shape.name()), report.avg_bits, &row);
+        }
+    }
+    let (row, bits, _) =
+        cell(ws, &base, &Method::Quip(QuipConfig { bits: 2, seed: ws.profile.seed }))?;
+    eval_row(&mut t, "tiny-gqa", "QuIP-lite 2b", bits, &row);
+    Ok(vec![t])
+}
+
+/// Tables 4 and 6 share the ★ protocol at different widths.
+fn e2e_table(ws: &mut Workspace, title: &str, target: f64) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table(title);
+    for preset in family(ws) {
+        let mut base = ws.base_model(preset)?;
+        let row = ws.eval(&mut base);
+        eval_row(&mut t, preset, "FP32", 16.0, &row);
+        let (method, shape) = aqlm_method(ws, &base.cfg, target);
+        let (mut q, report) = ws.quantize(&base, &method)?;
+        let row = ws.eval(&mut q);
+        eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), report.avg_bits, &row);
+        star(ws, &mut q, &base);
+        let row = ws.eval(&mut q);
+        eval_row(&mut t, preset, &format!("AQLM★ {}", shape.name()), report.avg_bits, &row);
+    }
+    Ok(vec![t])
+}
+
+pub fn t4_e2e_2bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    e2e_table(ws, "Table 4: end-to-end fine-tuning at 2 bits", 2.0)
+}
+
+pub fn t6_e2e_3bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    e2e_table(ws, "Table 6: end-to-end fine-tuning at 3 bits", 3.0)
+}
+
+/// Table 7: fine-tuning scope ablation (none / RMSNorm / AQ params / full).
+pub fn t7_ft_ablation(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 7: block fine-tuning scope ablation (nano, ~2 bit)",
+        &["Scope", "Wiki2↓", "C4↓"],
+    );
+    let base = ws.base_model("nano")?;
+    let shape = choose_shape(&base.cfg, 2.0, 8);
+    for (name, scope) in [
+        ("w/o", FtScope::None),
+        ("RMSnorm", FtScope::NormsOnly),
+        ("AQ params", FtScope::QuantParamsOnly),
+        ("Full", FtScope::Full),
+    ] {
+        let layer = if ws.profile.fast {
+            AqlmLayerConfig::fast(shape)
+        } else {
+            AqlmLayerConfig::new(shape)
+        };
+        let method = Method::Aqlm {
+            layer,
+            block_ft: BlockFtConfig {
+                steps: if ws.profile.fast { 15 } else { 40 },
+                lr: 1e-3,
+                tol: 1e-5,
+                scope,
+            },
+        };
+        let (mut q, _) = ws.quantize(&base, &method)?;
+        let wiki = crate::eval::ppl::perplexity(&mut q, &ws.bundle.eval_wiki, 8);
+        let c4 = crate::eval::ppl::perplexity(&mut q, &ws.bundle.eval_c4, 8);
+        t.row(vec![name.to_string(), f2(wiki), f2(c4)]);
+    }
+    Ok(vec![t])
+}
+
+/// Table 8: calibration-set size sweep (3 seeds, mean ± sd).
+pub fn t8_calib_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 8: Wiki2 PPL vs calibration sequences (nano, ~2.3 bit, 3 seeds)",
+        &["# sequences", "Mean PPL", "SD"],
+    );
+    let base = ws.base_model("nano")?;
+    let (method, _) = aqlm_method(ws, &base.cfg, 2.3);
+    let sweep: &[usize] = if ws.profile.fast { &[2, 4, 8, 16] } else { &[2, 4, 8, 16, 32, 64] };
+    for &n_seqs in sweep {
+        let mut ppls = Vec::new();
+        for seed in 0..3u64 {
+            let mut q = base.clone();
+            let mut rng = Rng::seed_from_u64(ws.profile.seed ^ (seed << 16) ^ n_seqs as u64);
+            let calib = {
+                let mut crng = rng.fork(1);
+                let (tokens, _) = crate::data::dataset::TokenDataset {
+                    tokens: ws.bundle.calib.tokens.clone(),
+                    seq_len: ws.profile.seq,
+                }
+                .sample_batch(n_seqs, &mut crng);
+                tokens
+            };
+            crate::coordinator::pipeline::quantize_model(
+                &mut q,
+                &calib,
+                n_seqs,
+                ws.profile.seq,
+                &method,
+                &mut rng,
+            )?;
+            ppls.push(ws.eval_ppl(&mut q));
+        }
+        let mean = ppls.iter().sum::<f64>() / ppls.len() as f64;
+        let var = ppls.iter().map(|p| (p - mean) * (p - mean)).sum::<f64>() / (ppls.len() - 1) as f64;
+        t.row(vec![n_seqs.to_string(), format!("{mean:.3}"), format!("{:.3}", var.sqrt())]);
+    }
+    Ok(vec![t])
+}
+
+/// Table 9: codebooks × groups at fixed ~2-bit budget (+★ variants).
+pub fn t9_codebooks_vs_groups(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 9: codebooks x groups at ~2 bits (nano)",
+        &["Method", "Setup", "Avg bits", "Wiki2 PPL"],
+    );
+    let base = ws.base_model("nano")?;
+    let dims = quantizable_layer_dims(&base.cfg);
+    // Scaled versions of the paper's 2x8g8 / 4x8g16 / 8x8g32 ladder: same
+    // code-bits-per-weight, codebook size reduced to fit the layer sizes.
+    let setups = [AqlmShape::new(1, 6, 4), AqlmShape::new(2, 6, 8), AqlmShape::new(4, 6, 16)];
+    for shape in setups {
+        let method = aqlm_method_with_shape(ws, shape);
+        let (mut q, report) = ws.quantize(&base, &method)?;
+        let ppl = ws.eval_ppl(&mut q);
+        t.row(vec!["AQLM".into(), shape.name(), f2(report.avg_bits), format!("{ppl:.3}")]);
+        star(ws, &mut q, &base);
+        let ppl = ws.eval_ppl(&mut q);
+        t.row(vec!["AQLM★".into(), shape.name(), f2(report.avg_bits), format!("{ppl:.3}")]);
+        let _ = model_avg_bits(shape, &dims);
+    }
+    Ok(vec![t])
+}
+
+/// Table 12: the CPU-friendly K×2^B family's accuracy.
+pub fn t12_cpu_friendly(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = eval_table("Table 12: CPU-friendly codebook configs (2x6g8)");
+    for preset in family(ws) {
+        let mut base = ws.base_model(preset)?;
+        let row = ws.eval(&mut base);
+        eval_row(&mut t, preset, "FP32", 16.0, &row);
+        let shape = AqlmShape::new(2, 6, 8);
+        let method = aqlm_method_with_shape(ws, shape);
+        let (mut q, report) = ws.quantize(&base, &method)?;
+        let row = ws.eval(&mut q);
+        eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), report.avg_bits, &row);
+        star(ws, &mut q, &base);
+        let row = ws.eval(&mut q);
+        eval_row(&mut t, preset, &format!("AQLM★ {}", shape.name()), report.avg_bits, &row);
+    }
+    Ok(vec![t])
+}
+
+/// Table 15: harder tasks (MMLU / GSM8k analogs) at ~2 bit with ★.
+pub fn t15_hard_tasks(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 15: hard tasks at ~2 bits (MMLU/GSM8k analogs)",
+        &["Size", "Method", "Avg bits", "MMLU-analog↑", "GSM8k-analog↑"],
+    );
+    for preset in family(ws) {
+        let mut base = ws.base_model(preset)?;
+        let row = ws.eval_tasks(&mut base, &Task::HARD);
+        t.row(vec![
+            preset.to_string(),
+            "FP32".into(),
+            "16".into(),
+            pct(row.tasks[0].1),
+            pct(row.tasks[1].1),
+        ]);
+        let (method, shape) = aqlm_method(ws, &base.cfg, 2.0);
+        let (mut q, report) = ws.quantize(&base, &method)?;
+        star(ws, &mut q, &base);
+        let row = ws.eval_tasks(&mut q, &Task::HARD);
+        t.row(vec![
+            preset.to_string(),
+            format!("AQLM★ {}", shape.name()),
+            f2(report.avg_bits),
+            pct(row.tasks[0].1),
+            pct(row.tasks[1].1),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Table 16: Appendix-L block tuning for scalar (GPTQ) quantization.
+pub fn t16_gptq_tuned(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 16: block tuning for scalar quantization at ~2 bits (nano)",
+        &["Method", "Avg bits", "Wiki2↓", "C4↓"],
+    );
+    let base = ws.base_model("nano")?;
+    let ft = BlockFtConfig {
+        steps: if ws.profile.fast { 15 } else { 40 },
+        lr: 1e-3,
+        tol: 1e-5,
+        scope: FtScope::Full,
+    };
+    let rows: Vec<(&str, Method)> = vec![
+        ("GPTQ", Method::Gptq { cfg: GptqConfig::grouped(2, 16), block_tune: None }),
+        ("GPTQ+tune", Method::Gptq { cfg: GptqConfig::grouped(2, 16), block_tune: Some(ft) }),
+        ("AQLM", aqlm_method(ws, &base.cfg, 2.0).0),
+    ];
+    for (name, method) in rows {
+        let (mut q, report) = ws.quantize(&base, &method)?;
+        let wiki = crate::eval::ppl::perplexity(&mut q, &ws.bundle.eval_wiki, 8);
+        let c4 = crate::eval::ppl::perplexity(&mut q, &ws.bundle.eval_c4, 8);
+        t.row(vec![name.to_string(), f2(report.avg_bits), f2(wiki), f2(c4)]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,187 @@
+//! Shared experiment workspace: the data bundle, trained base models
+//! (cached under `runs/`), calibration slices, and the combined
+//! (perplexity + zero-shot) evaluation row used by most tables.
+
+use crate::coordinator::pipeline::{quantize_model, Method, PipelineReport};
+use crate::coordinator::train::{ensure_trained, TrainConfig};
+use crate::data::dataset::{DataBundle, DataSizes};
+use crate::data::tasks::Task;
+use crate::eval::ppl::perplexity;
+use crate::eval::zeroshot::eval_suite;
+use crate::nn::model::Model;
+use crate::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Experiment scale knobs. `fast` keeps a full sweep tractable on one core;
+/// `full` is what EXPERIMENTS.md reports where noted.
+#[derive(Clone, Copy, Debug)]
+pub struct Profile {
+    pub fast: bool,
+    /// Zero-shot instances per task.
+    pub task_n: usize,
+    /// Calibration sequences for quantization.
+    pub calib_seqs: usize,
+    /// Sequence length used everywhere (train/calib/eval).
+    pub seq: usize,
+    pub seed: u64,
+}
+
+impl Profile {
+    pub fn fast() -> Profile {
+        Profile { fast: true, task_n: 50, calib_seqs: 8, seq: 64, seed: 42 }
+    }
+
+    pub fn full() -> Profile {
+        Profile { fast: false, task_n: 150, calib_seqs: 16, seq: 64, seed: 42 }
+    }
+
+    /// Training budget per preset (steps chosen so each model clearly
+    /// learns TinyLang's structure; see EXPERIMENTS.md §Base models).
+    pub fn train_cfg(&self, preset: &str) -> TrainConfig {
+        let steps = match (preset, self.fast) {
+            ("nano", true) => 260,
+            ("nano", false) => 400,
+            ("tiny", true) | ("tiny-gqa", true) | ("tiny-moe", true) => 240,
+            ("tiny", false) | ("tiny-gqa", false) | ("tiny-moe", false) => 400,
+            ("small", true) => 160,
+            ("small", false) => 300,
+            _ => 200,
+        };
+        TrainConfig { steps, batch: 4, seq: self.seq, lr: 3e-3, log_every: 50 }
+    }
+}
+
+/// One evaluated model row (the paper's standard column set).
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub wiki_ppl: f64,
+    pub c4_ppl: f64,
+    /// (task name, accuracy %) in Task::STANDARD order.
+    pub tasks: Vec<(String, f64)>,
+    pub avg_acc: f64,
+    pub weight_bytes: u64,
+}
+
+pub struct Workspace {
+    pub profile: Profile,
+    pub bundle: DataBundle,
+    pub root: PathBuf,
+}
+
+impl Workspace {
+    pub fn new(profile: Profile) -> Workspace {
+        let sizes = DataSizes {
+            train_tokens: 300_000,
+            eval_tokens: if profile.fast { 6_144 } else { 16_384 },
+            calib_tokens: 65_536,
+            seq_len: profile.seq,
+        };
+        let bundle = DataBundle::generate(profile.seed, sizes);
+        Workspace { profile, bundle, root: PathBuf::from(".") }
+    }
+
+    pub fn runs_dir(&self) -> PathBuf {
+        let d = self.root.join("runs");
+        std::fs::create_dir_all(&d).ok();
+        d
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        let d = self.root.join("results");
+        std::fs::create_dir_all(&d).ok();
+        d
+    }
+
+    /// Train-or-load a base model.
+    pub fn base_model(&self, preset: &str) -> anyhow::Result<Model> {
+        ensure_trained(
+            preset,
+            &self.bundle,
+            self.profile.train_cfg(preset),
+            self.profile.seed,
+            &self.runs_dir(),
+            true,
+        )
+    }
+
+    /// Calibration tokens: `n_seqs` sequences of profile.seq tokens.
+    pub fn calib_tokens(&self, n_seqs: usize) -> Vec<u32> {
+        let mut rng = Rng::seed_from_u64(self.profile.seed ^ 0xca11b);
+        let (tokens, _) = crate::data::dataset::TokenDataset {
+            tokens: self.bundle.calib.tokens.clone(),
+            seq_len: self.profile.seq,
+        }
+        .sample_batch(n_seqs, &mut rng);
+        tokens
+    }
+
+    /// Quantize a clone of `model` with `method` using the default
+    /// calibration slice. Returns the quantized model + pipeline report.
+    pub fn quantize(&self, model: &Model, method: &Method) -> anyhow::Result<(Model, PipelineReport)> {
+        let mut q = model.clone();
+        let n = self.profile.calib_seqs;
+        let calib = self.calib_tokens(n);
+        let mut rng = Rng::seed_from_u64(self.profile.seed ^ 0x9a11);
+        let report = quantize_model(&mut q, &calib, n, self.profile.seq, method, &mut rng)?;
+        Ok((q, report))
+    }
+
+    /// Full evaluation row: both perplexities + the 5-task standard suite.
+    pub fn eval(&self, model: &mut Model) -> EvalRow {
+        self.eval_tasks(model, &Task::STANDARD)
+    }
+
+    /// Evaluation with a custom task set (Table 15 uses Task::HARD).
+    pub fn eval_tasks(&self, model: &mut Model, tasks: &[Task]) -> EvalRow {
+        let wiki_ppl = perplexity(model, &self.bundle.eval_wiki, 8);
+        let c4_ppl = perplexity(model, &self.bundle.eval_c4, 8);
+        let suite = eval_suite(
+            model,
+            &self.bundle.tokenizer,
+            &self.bundle.world,
+            tasks,
+            self.profile.task_n,
+            self.profile.seed ^ 0x7a5c,
+        );
+        EvalRow {
+            wiki_ppl,
+            c4_ppl,
+            tasks: suite.per_task.iter().map(|(t, a)| (t.analog().to_string(), *a)).collect(),
+            avg_acc: suite.average,
+            weight_bytes: model.weight_bytes() as u64,
+        }
+    }
+
+    /// PPL-only evaluation (cheap, for sweeps).
+    pub fn eval_ppl(&self, model: &mut Model) -> f64 {
+        perplexity(model, &self.bundle.eval_wiki, 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_budgets_sane() {
+        let p = Profile::fast();
+        for preset in ["nano", "tiny", "small", "tiny-moe", "tiny-gqa"] {
+            let t = p.train_cfg(preset);
+            assert!(t.steps >= 100 && t.steps <= 500);
+            assert_eq!(t.seq, p.seq);
+        }
+    }
+
+    #[test]
+    fn calib_tokens_shape() {
+        let mut p = Profile::fast();
+        p.seq = 16;
+        let mut ws = Workspace::new(p);
+        ws.bundle = DataBundle::generate(
+            1,
+            DataSizes { train_tokens: 2000, eval_tokens: 512, calib_tokens: 2000, seq_len: 16 },
+        );
+        let toks = ws.calib_tokens(4);
+        assert_eq!(toks.len(), 4 * 16);
+    }
+}

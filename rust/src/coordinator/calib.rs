@@ -1,0 +1,150 @@
+//! Calibration capture (paper Algorithm 1, lines 1–7): run the calibration
+//! sequences through the model block by block, recording each linear
+//! layer's input activations as Gram matrices `XXᵀ` plus each block's
+//! pre-quantization outputs `Y_block`.
+//!
+//! The per-linear inputs fall out of the block's forward cache:
+//! `wq/wk/wv` see `rmsnorm(x, ln1)`, `wo` sees the concatenated head
+//! outputs, `wg/wu` see `rmsnorm(x_mid, ln2)`, `wd` sees the SwiGLU hidden —
+//! and for MoE experts, the rows actually routed to each expert.
+
+use crate::nn::block::{Block, BlockCache, FfnCache};
+use crate::nn::config::ModelConfig;
+use crate::nn::rope::Rope;
+use crate::quant::CalibData;
+use crate::tensor::Tensor;
+
+/// Calibration statistics for one block: per-linear CalibData (keyed by the
+/// names from [`Block::linears_mut`]) plus the block's FP outputs.
+pub struct BlockCalib {
+    pub per_linear: Vec<(String, CalibData)>,
+    pub y_block: Tensor,
+}
+
+impl BlockCalib {
+    pub fn calib_for(&self, name: &str) -> Option<&CalibData> {
+        self.per_linear.iter().find(|(n, _)| n == name).map(|(_, c)| c)
+    }
+}
+
+/// Run `x_block` through `block` (FP weights) and capture everything needed
+/// to quantize it.
+pub fn capture_block(
+    block: &mut Block,
+    cfg: &ModelConfig,
+    batch: usize,
+    seq: usize,
+    rope: &Rope,
+    x_block: &Tensor,
+) -> BlockCalib {
+    let (y_block, cache) = block.forward(x_block, cfg, batch, seq, rope, true);
+    let cache: BlockCache = cache.unwrap();
+    let mut per_linear: Vec<(String, CalibData)> = Vec::new();
+    fn gram(name: &str, x: &Tensor, out: &mut Vec<(String, CalibData)>) {
+        let mut c = CalibData::new(x.cols());
+        c.accumulate(x);
+        out.push((name.to_string(), c));
+    }
+    gram("wq", &cache.xn1, &mut per_linear);
+    gram("wk", &cache.xn1, &mut per_linear);
+    gram("wv", &cache.xn1, &mut per_linear);
+    gram("wo", &cache.attn_concat, &mut per_linear);
+    match &cache.ffn_cache {
+        FfnCache::Dense(mc) => {
+            gram("wg", &cache.xn2, &mut per_linear);
+            gram("wu", &cache.xn2, &mut per_linear);
+            gram("wd", &mc.h, &mut per_linear);
+        }
+        FfnCache::Moe(moe) => {
+            for (e, (xe, mc)) in moe.inputs.iter().zip(&moe.mlp).enumerate() {
+                if xe.rows() == 0 {
+                    // Expert never routed during calibration: fall back to
+                    // identity statistics so quantization still proceeds.
+                    let d = xe.cols();
+                    per_linear.push((format!("e{e}.wg"), CalibData::identity(d)));
+                    per_linear.push((format!("e{e}.wu"), CalibData::identity(d)));
+                    let ff = match &block.ffn {
+                        crate::nn::block::Ffn::Moe(m) => m.experts[e].wd.d_in(),
+                        _ => unreachable!(),
+                    };
+                    per_linear.push((format!("e{e}.wd"), CalibData::identity(ff)));
+                } else {
+                    gram(&format!("e{e}.wg"), xe, &mut per_linear);
+                    gram(&format!("e{e}.wu"), xe, &mut per_linear);
+                    gram(&format!("e{e}.wd"), &mc.as_ref().unwrap().h, &mut per_linear);
+                }
+            }
+        }
+    }
+    BlockCalib { per_linear, y_block }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::Model;
+    use crate::util::rng::Rng;
+
+    fn small_cfg(moe: bool) -> ModelConfig {
+        let mut c = ModelConfig::nano();
+        c.d_model = 16;
+        c.n_heads = 2;
+        c.n_kv_heads = 2;
+        c.d_ff = 24;
+        c.max_seq = 8;
+        if moe {
+            c.n_experts = 2;
+            c.experts_top_k = 1;
+        }
+        c
+    }
+
+    #[test]
+    fn dense_block_capture_covers_all_linears() {
+        let cfg = small_cfg(false);
+        let mut rng = Rng::seed_from_u64(1);
+        let mut block = Model::init_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[2 * 8, cfg.d_model], 1.0, &mut rng);
+        let calib = capture_block(&mut block, &cfg, 2, 8, &rope, &x);
+        let names: Vec<&str> = calib.per_linear.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["wq", "wk", "wv", "wo", "wg", "wu", "wd"]);
+        // Dims match each layer's d_in.
+        for (name, lin) in block.linears_mut() {
+            let c = calib.calib_for(&name).unwrap();
+            assert_eq!(c.d_in(), lin.d_in(), "{name}");
+            assert_eq!(c.n_samples, 16, "{name}");
+        }
+        assert_eq!(calib.y_block.shape(), &[16, cfg.d_model]);
+    }
+
+    #[test]
+    fn gram_matches_direct_computation() {
+        let cfg = small_cfg(false);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut block = Model::init_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[8, cfg.d_model], 1.0, &mut rng);
+        let calib = capture_block(&mut block, &cfg, 1, 8, &rope, &x);
+        // wq's gram must equal xn1ᵀ xn1.
+        let (_, cache) = block.forward(&x, &cfg, 1, 8, &rope, true);
+        let xn1 = &cache.unwrap().xn1;
+        let gram = crate::tensor::ops::matmul_at(xn1, xn1);
+        assert!(calib.calib_for("wq").unwrap().xxt.allclose(&gram, 1e-4));
+    }
+
+    #[test]
+    fn moe_block_capture_covers_experts() {
+        let cfg = small_cfg(true);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut block = Model::init_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[2 * 8, cfg.d_model], 1.0, &mut rng);
+        let calib = capture_block(&mut block, &cfg, 2, 8, &rope, &x);
+        for e in 0..2 {
+            for suffix in ["wg", "wu", "wd"] {
+                assert!(calib.calib_for(&format!("e{e}.{suffix}")).is_some(), "e{e}.{suffix}");
+            }
+        }
+    }
+}

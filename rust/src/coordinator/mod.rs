@@ -1,0 +1,10 @@
+//! Layer-3 coordinator: the run-time system that owns the quantization
+//! pipeline (paper Algorithm 1 across a whole model), base-model training,
+//! calibration capture, codebook-shape selection, and the generation
+//! server with continuous batching.
+
+pub mod calib;
+pub mod shapes;
+pub mod pipeline;
+pub mod train;
+pub mod server;

@@ -1,0 +1,254 @@
+//! The model-level quantization pipeline — paper Algorithm 1.
+//!
+//! Sequentially per transformer block: capture calibration statistics with
+//! the *current* residual stream, quantize every linear layer against its
+//! own `XXᵀ` (any supported method), optionally run Phase-3 block
+//! fine-tuning against the pre-quantization block outputs, then propagate
+//! the calibration activations through the now-quantized block (Alg. 1
+//! line 21) so later blocks calibrate on what they will actually see.
+
+use super::calib::capture_block;
+use crate::nn::config::ModelConfig;
+use crate::nn::linear::Linear;
+use crate::nn::model::Model;
+use crate::quant::aqlm::blockft::{finetune_block, BlockFtConfig};
+use crate::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
+use crate::quant::gptq::{gptq_quantize, GptqConfig};
+use crate::quant::quip::{quip_quantize, QuipConfig};
+use crate::quant::rtn::{rtn_quantize, RtnConfig};
+use crate::quant::spqr::{spqr_quantize, SpqrConfig};
+use crate::quant::{relative_layer_error, CalibData, QuantReport};
+use crate::util::rng::Rng;
+use crate::util::timing::Stopwatch;
+
+/// Which PTQ method the pipeline applies.
+#[derive(Clone, Debug)]
+pub enum Method {
+    Aqlm { layer: AqlmLayerConfig, block_ft: BlockFtConfig },
+    Rtn(RtnConfig),
+    Gptq { cfg: GptqConfig, block_tune: Option<BlockFtConfig> },
+    Spqr(SpqrConfig),
+    Quip(QuipConfig),
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Aqlm { .. } => "AQLM",
+            Method::Rtn(_) => "RTN",
+            Method::Gptq { block_tune: None, .. } => "GPTQ",
+            Method::Gptq { block_tune: Some(_), .. } => "GPTQ+tune",
+            Method::Spqr(_) => "SpQR-lite",
+            Method::Quip(_) => "QuIP-lite",
+        }
+    }
+}
+
+/// Whole-model quantization outcome.
+pub struct PipelineReport {
+    pub layers: Vec<QuantReport>,
+    /// Parameter-weighted average bits over all quantized layers
+    /// (method-specific accounting, App. H style).
+    pub avg_bits: f64,
+    /// (before, after) block-FT MSE per block (empty when no FT ran).
+    pub block_ft: Vec<(f64, f64)>,
+    pub seconds: f64,
+}
+
+/// Quantize every block linear of `model` in place.
+///
+/// `calib_tokens` is `batch × seq` token ids from the calibration split.
+pub fn quantize_model(
+    model: &mut Model,
+    calib_tokens: &[u32],
+    batch: usize,
+    seq: usize,
+    method: &Method,
+    rng: &mut Rng,
+) -> anyhow::Result<PipelineReport> {
+    assert_eq!(calib_tokens.len(), batch * seq);
+    let sw = Stopwatch::start();
+    let cfg: ModelConfig = model.cfg.clone();
+    let rope = model.rope.clone();
+    let mut x = model.embed_tokens(calib_tokens);
+    let mut layers: Vec<QuantReport> = Vec::new();
+    let mut block_ft: Vec<(f64, f64)> = Vec::new();
+    let mut total_bits = 0.0f64;
+    let mut total_params = 0usize;
+
+    for (bi, block) in model.blocks.iter_mut().enumerate() {
+        let calib = capture_block(block, &cfg, batch, seq, &rope, &x);
+        for (name, lin) in block.linears_mut() {
+            let w = lin.weight_owned();
+            let c: &CalibData = calib
+                .calib_for(&name)
+                .ok_or_else(|| anyhow::anyhow!("no calibration for layer {name}"))?;
+            let lsw = Stopwatch::start();
+            let (new_lin, bits): (Linear, f64) = match method {
+                Method::Aqlm { layer, .. } => {
+                    let mut lrng = rng.fork(bi as u64 * 101 + hash_name(&name));
+                    let (q, _) = LayerQuantizer::new(*layer).quantize(&w, c, &mut lrng);
+                    let bits = q.avg_bits();
+                    (Linear::aqlm(q), bits)
+                }
+                Method::Rtn(rcfg) => {
+                    let q = rtn_quantize(&w, *rcfg);
+                    let bits = q.avg_bits();
+                    (Linear::group_int(q), bits)
+                }
+                Method::Gptq { cfg: gcfg, .. } => {
+                    let q = gptq_quantize(&w, c, *gcfg)?;
+                    let bits = q.avg_bits();
+                    (Linear::group_int(q), bits)
+                }
+                Method::Spqr(scfg) => {
+                    let q = spqr_quantize(&w, c, *scfg)?;
+                    let bits = q.avg_bits();
+                    (Linear::dense(q.dense), bits)
+                }
+                Method::Quip(qcfg) => {
+                    let mut cfg_seeded = *qcfg;
+                    cfg_seeded.seed ^= (bi as u64) << 32 | hash_name(&name);
+                    let q = quip_quantize(&w, c, cfg_seeded)?;
+                    let bits = q.avg_bits();
+                    (Linear::dense(q.dense), bits)
+                }
+            };
+            let rel_error = relative_layer_error(&w, &new_lin.weight_owned(), c);
+            total_bits += bits * w.len() as f64;
+            total_params += w.len();
+            layers.push(QuantReport {
+                layer: format!("b{bi}.{name}"),
+                method: method.name().to_string(),
+                avg_bits: bits,
+                rel_error,
+                seconds: lsw.elapsed_s(),
+            });
+            *lin = new_lin;
+        }
+        // Phase 3: block fine-tuning against the FP outputs.
+        let ft_cfg: Option<BlockFtConfig> = match method {
+            Method::Aqlm { block_ft, .. } => Some(*block_ft),
+            Method::Gptq { block_tune, .. } => *block_tune,
+            _ => None,
+        };
+        if let Some(ft) = ft_cfg {
+            let (before, after) =
+                finetune_block(block, &cfg, batch, seq, &rope, &x, &calib.y_block, ft);
+            block_ft.push((before, after));
+        }
+        // Alg. 1 line 21: propagate through the quantized block.
+        let (y, _) = block.forward(&x, &cfg, batch, seq, &rope, false);
+        x = y;
+    }
+
+    Ok(PipelineReport {
+        layers,
+        avg_bits: total_bits / total_params.max(1) as f64,
+        block_ft,
+        seconds: sw.elapsed_s(),
+    })
+}
+
+fn hash_name(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{DataBundle, DataSizes};
+    use crate::eval::ppl::perplexity;
+    use crate::kernels::format::AqlmShape;
+    use crate::quant::aqlm::blockft::FtScope;
+
+    fn mini_cfg() -> ModelConfig {
+        let mut c = ModelConfig::nano();
+        c.d_model = 32;
+        c.n_heads = 2;
+        c.n_kv_heads = 2;
+        c.d_ff = 48;
+        c.vocab_size = 160;
+        c.max_seq = 32;
+        c.n_layers = 2;
+        c
+    }
+
+    fn mini_setup() -> (Model, DataBundle, Vec<u32>) {
+        let cfg = mini_cfg();
+        let mut rng = Rng::seed_from_u64(1);
+        let model = Model::init(&cfg, &mut rng);
+        let sizes = DataSizes { train_tokens: 4000, eval_tokens: 600, calib_tokens: 2000, seq_len: 16 };
+        let bundle = DataBundle::generate(3, sizes);
+        let (calib, _) = bundle.calib.sample_batch(4, &mut rng);
+        (model, bundle, calib)
+    }
+
+    #[test]
+    fn aqlm_pipeline_quantizes_every_layer() {
+        let (mut model, _, calib) = mini_setup();
+        let shape = AqlmShape::new(1, 4, 4);
+        let method = Method::Aqlm {
+            layer: AqlmLayerConfig::fast(shape),
+            block_ft: BlockFtConfig { steps: 5, lr: 1e-3, tol: 0.0, scope: FtScope::Full },
+        };
+        let mut rng = Rng::seed_from_u64(4);
+        let report = quantize_model(&mut model, &calib, 4, 16, &method, &mut rng).unwrap();
+        assert_eq!(report.layers.len(), 2 * 7);
+        assert_eq!(report.block_ft.len(), 2);
+        for (before, after) in &report.block_ft {
+            assert!(after <= before, "FT made block worse: {before} -> {after}");
+        }
+        // Every linear is now quantized.
+        for b in &mut model.blocks {
+            for (_, lin) in b.linears_mut() {
+                assert!(lin.is_quantized());
+            }
+        }
+        assert!((report.avg_bits - model.avg_bits()).abs() < 1e-6);
+        assert!(report.avg_bits < 6.0, "bits={}", report.avg_bits);
+    }
+
+    #[test]
+    fn all_methods_run_and_preserve_ppl_sanity() {
+        let (model0, bundle, calib) = mini_setup();
+        let mut rng = Rng::seed_from_u64(5);
+        let methods = vec![
+            Method::Rtn(RtnConfig::new(4, 16)),
+            Method::Gptq { cfg: GptqConfig::paper(4), block_tune: None },
+            Method::Spqr(SpqrConfig { bits: 4, group: 16, outlier_frac: 0.01 }),
+            Method::Quip(QuipConfig { bits: 4, seed: 9 }),
+        ];
+        let mut base = model0.clone();
+        let ppl_base = perplexity(&mut base, &bundle.eval_wiki, 4);
+        for method in methods {
+            let mut m = model0.clone();
+            let report = quantize_model(&mut m, &calib, 4, 16, &method, &mut rng).unwrap();
+            let ppl = perplexity(&mut m, &bundle.eval_wiki, 4);
+            // 4-bit quantization of a random-init model must not explode.
+            assert!(
+                ppl < ppl_base * 1.5,
+                "{}: ppl {ppl} vs base {ppl_base}",
+                method.name()
+            );
+            assert!(report.avg_bits > 3.9 && report.avg_bits < 7.0, "{}: {}", method.name(), report.avg_bits);
+        }
+    }
+
+    #[test]
+    fn layer_errors_recorded_and_bounded() {
+        let (mut model, _, calib) = mini_setup();
+        let mut rng = Rng::seed_from_u64(6);
+        let method = Method::Rtn(RtnConfig::new(8, 16));
+        let report = quantize_model(&mut model, &calib, 4, 16, &method, &mut rng).unwrap();
+        for l in &report.layers {
+            assert!(l.rel_error < 1e-3, "{}: rel error {}", l.layer, l.rel_error);
+            assert!(l.seconds >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Generation server with continuous batching (the L3 serving path behind
+//! Table 14's end-to-end generation numbers).
+//!
+//! One worker thread owns the model and runs a continuous-batching loop: it
+//! admits queued requests up to `max_batch` concurrent sequences, advances
+//! every active sequence by one token per iteration (each with its own KV
+//! cache), retires finished sequences immediately, and back-fills from the
+//! queue — the Orca/vLLM scheduling discipline, deterministic and
+//! single-core here. Clients talk over `std::sync::mpsc` channels; no
+//! Python, no async runtime.
+
+use crate::nn::kvcache::LayerKvCache;
+use crate::nn::model::Model;
+use crate::nn::sampler;
+use crate::util::rng::Rng;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A generation request.
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub respond: Sender<GenResponse>,
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub tokens: Vec<u32>,
+    /// Queue + compute time.
+    pub latency_s: f64,
+    pub generated: usize,
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 8, seed: 0 }
+    }
+}
+
+/// Aggregate statistics, returned on shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub tokens_generated: usize,
+    pub total_latency_s: f64,
+    pub wall_s: f64,
+}
+
+impl ServerStats {
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens_generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.requests > 0 {
+            self.total_latency_s / self.requests as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Sender<ServerMsg>,
+    worker: Option<JoinHandle<ServerStats>>,
+}
+
+enum ServerMsg {
+    Request(GenRequest, Instant),
+    Shutdown,
+}
+
+struct ActiveSeq {
+    tokens: Vec<u32>,
+    generated: usize,
+    max_new: usize,
+    temperature: f32,
+    kv: Vec<LayerKvCache>,
+    last_logits: Vec<f32>,
+    respond: Sender<GenResponse>,
+    enqueued: Instant,
+}
+
+impl Server {
+    /// Spawn the worker thread owning `model`.
+    pub fn start(mut model: Model, cfg: ServerConfig) -> Server {
+        let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
+        let worker = std::thread::spawn(move || {
+            let wall = Instant::now();
+            let mut rng = Rng::seed_from_u64(cfg.seed);
+            let mut stats = ServerStats::default();
+            let mut queue: Vec<(GenRequest, Instant)> = Vec::new();
+            let mut active: Vec<ActiveSeq> = Vec::new();
+            let mut scratch: Vec<f32> = Vec::new();
+            let mut shutting_down = false;
+            loop {
+                // Drain the channel (non-blocking while busy, blocking when idle).
+                loop {
+                    if active.is_empty() && queue.is_empty() && !shutting_down {
+                        match rx.recv() {
+                            Ok(ServerMsg::Request(r, t)) => queue.push((r, t)),
+                            Ok(ServerMsg::Shutdown) | Err(_) => shutting_down = true,
+                        }
+                        continue;
+                    }
+                    match rx.try_recv() {
+                        Ok(ServerMsg::Request(r, t)) => queue.push((r, t)),
+                        Ok(ServerMsg::Shutdown) => shutting_down = true,
+                        Err(_) => break,
+                    }
+                }
+                if shutting_down && active.is_empty() && queue.is_empty() {
+                    break;
+                }
+                // Admission: prefill newly admitted requests.
+                while active.len() < cfg.max_batch && !queue.is_empty() {
+                    let (req, enqueued) = queue.remove(0);
+                    let mut kv = model.new_kv_caches();
+                    let mut logits = Vec::new();
+                    let prompt: Vec<u32> = if req.prompt.is_empty() { vec![1] } else { req.prompt.clone() };
+                    for (pos, &t) in prompt.iter().enumerate() {
+                        logits = model.decode_token(t, pos, &mut kv, &mut scratch);
+                    }
+                    active.push(ActiveSeq {
+                        tokens: prompt,
+                        generated: 0,
+                        max_new: req.max_new,
+                        temperature: req.temperature,
+                        kv,
+                        last_logits: logits,
+                        respond: req.respond,
+                        enqueued,
+                    });
+                }
+                // Decode one token for every active sequence (continuous batching).
+                let mut i = 0;
+                while i < active.len() {
+                    let done = {
+                        let seq = &mut active[i];
+                        let next = sampler::sample(&seq.last_logits, seq.temperature, &mut rng);
+                        seq.tokens.push(next);
+                        seq.generated += 1;
+                        stats.tokens_generated += 1;
+                        let at_cap = seq.tokens.len() >= model.cfg.max_seq;
+                        if seq.generated >= seq.max_new || at_cap {
+                            true
+                        } else {
+                            let pos = seq.tokens.len() - 1;
+                            seq.last_logits = model.decode_token(next, pos, &mut seq.kv, &mut scratch);
+                            false
+                        }
+                    };
+                    if done {
+                        let seq = active.remove(i);
+                        let latency = seq.enqueued.elapsed().as_secs_f64();
+                        stats.requests += 1;
+                        stats.total_latency_s += latency;
+                        let _ = seq.respond.send(GenResponse {
+                            tokens: seq.tokens,
+                            latency_s: latency,
+                            generated: seq.generated,
+                        });
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            stats.wall_s = wall.elapsed().as_secs_f64();
+            stats
+        });
+        Server { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, prompt: Vec<u32>, max_new: usize, temperature: f32) -> Receiver<GenResponse> {
+        let (rtx, rrx) = channel();
+        let req = GenRequest { prompt, max_new, temperature, respond: rtx };
+        self.tx
+            .send(ServerMsg::Request(req, Instant::now()))
+            .expect("server thread gone");
+        rrx
+    }
+
+    /// Stop after draining all queued work; returns aggregate stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        let _ = self.tx.send(ServerMsg::Shutdown);
+        self.worker.take().unwrap().join().expect("server thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::ModelConfig;
+
+    fn server_model() -> Model {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 24;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        cfg.n_layers = 1;
+        Model::init(&cfg, &mut Rng::seed_from_u64(1))
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = Server::start(server_model(), ServerConfig::default());
+        let rx = server.submit(vec![1, 2, 3], 5, 0.0);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.tokens.len(), 8);
+        assert_eq!(resp.generated, 5);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.tokens_generated, 5);
+    }
+
+    #[test]
+    fn no_request_lost_under_load() {
+        let server = Server::start(server_model(), ServerConfig { max_batch: 3, seed: 0 });
+        let receivers: Vec<_> = (0..10).map(|i| server.submit(vec![1 + i as u32], 4, 0.0)).collect();
+        let mut got = 0;
+        for rx in receivers {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.generated, 4);
+            got += 1;
+        }
+        assert_eq!(got, 10);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 10);
+        assert_eq!(stats.tokens_generated, 40);
+    }
+
+    #[test]
+    fn greedy_generation_matches_offline() {
+        let mut model = server_model();
+        let mut rng = Rng::seed_from_u64(0);
+        let offline = model.generate(&[3, 7], 4, 0.0, &mut rng);
+        let server = Server::start(model, ServerConfig::default());
+        let resp = server.submit(vec![3, 7], 4, 0.0).recv().unwrap();
+        assert_eq!(resp.tokens, offline);
+        server.shutdown();
+    }
+
+    #[test]
+    fn respects_max_seq_cap() {
+        let server = Server::start(server_model(), ServerConfig::default());
+        // max_seq 32, prompt 2 → at most 30 generated.
+        let resp = server.submit(vec![1, 2], 100, 0.0).recv().unwrap();
+        assert!(resp.tokens.len() <= 32);
+        server.shutdown();
+    }
+}

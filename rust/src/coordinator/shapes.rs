@@ -1,0 +1,130 @@
+//! Codebook-shape selection: pick `(M, B, g)` hitting a target average
+//! bit width on a concrete model.
+//!
+//! At the paper's 7B–70B scale codebook overhead is negligible and shapes
+//! are chosen by hand (1×2^16 g8 ≈ 2 bit, 2×2^12 g8 ≈ 3 bit, …). At our
+//! scaled-down layer sizes the 16-bit codebooks are a significant fraction
+//! of the budget (App. H formula), so the harness searches a grid of
+//! configurations and picks the one whose *model-wide* average (over the
+//! actual quantizable layer dimensions) lands closest to the target —
+//! mirroring the paper's "the exact bit-widths are dictated by parameters
+//! such as the number of codebooks and code width".
+
+use crate::kernels::format::AqlmShape;
+use crate::nn::config::ModelConfig;
+
+/// All quantizable layer dimensions (d_out, d_in) of a model config.
+pub fn quantizable_layer_dims(cfg: &ModelConfig) -> Vec<(usize, usize)> {
+    let d = cfg.d_model;
+    let kv = cfg.n_kv_heads * cfg.head_dim();
+    let mut dims = Vec::new();
+    for _ in 0..cfg.n_layers {
+        dims.push((d, d)); // wq
+        dims.push((kv, d)); // wk
+        dims.push((kv, d)); // wv
+        dims.push((d, d)); // wo
+        let experts = if cfg.is_moe() { cfg.n_experts } else { 1 };
+        for _ in 0..experts {
+            dims.push((cfg.d_ff, d)); // wg
+            dims.push((cfg.d_ff, d)); // wu
+            dims.push((d, cfg.d_ff)); // wd
+        }
+    }
+    dims
+}
+
+/// Model-wide average bits for one shape (parameters-weighted App. H).
+pub fn model_avg_bits(shape: AqlmShape, dims: &[(usize, usize)]) -> f64 {
+    let mut bits = 0.0f64;
+    let mut params = 0usize;
+    for &(o, i) in dims {
+        if i % shape.group != 0 {
+            return f64::INFINITY; // shape incompatible with some layer
+        }
+        bits += shape.avg_bits_for(o, i) * (o * i) as f64;
+        params += o * i;
+    }
+    bits / params as f64
+}
+
+/// Search the shape grid for the closest achievable average bit width.
+/// `max_code_bits` caps the beam-search cost (2^B candidates per position).
+pub fn choose_shape(cfg: &ModelConfig, target_bits: f64, max_code_bits: usize) -> AqlmShape {
+    let dims = quantizable_layer_dims(cfg);
+    let mut best: Option<(f64, AqlmShape)> = None;
+    for m in 1..=4usize {
+        for b in 3..=max_code_bits {
+            for g in [4usize, 8, 16, 32] {
+                let shape = AqlmShape::new(m, b, g);
+                let bits = model_avg_bits(shape, &dims);
+                if !bits.is_finite() {
+                    continue;
+                }
+                let score = (bits - target_bits).abs()
+                    // tie-break towards larger codebooks (more capacity) and
+                    // smaller groups: both improve accuracy at equal bits.
+                    + 1e-6 * (max_code_bits - b) as f64
+                    + 1e-7 * g as f64;
+                if best.map(|(s, _)| score < s).unwrap_or(true) {
+                    best = Some((score, shape));
+                }
+            }
+        }
+    }
+    best.expect("no feasible shape").1
+}
+
+/// The named configurations used throughout the tables: the paper's
+/// "K×8-bit" CPU-friendly family keeps its exact meaning.
+pub fn named_shape(name: &str) -> anyhow::Result<AqlmShape> {
+    AqlmShape::parse(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chosen_shapes_land_near_targets() {
+        for preset in ["nano", "tiny", "small"] {
+            let cfg = ModelConfig::preset(preset).unwrap();
+            let dims = quantizable_layer_dims(&cfg);
+            for target in [2.0, 3.0, 4.0] {
+                let shape = choose_shape(&cfg, target, 8);
+                let got = model_avg_bits(shape, &dims);
+                assert!(
+                    (got - target).abs() < 0.55,
+                    "{preset} target {target}: shape {} gives {got:.3}",
+                    shape.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layer_dims_count() {
+        let cfg = ModelConfig::nano();
+        let dims = quantizable_layer_dims(&cfg);
+        assert_eq!(dims.len(), cfg.n_layers * 7);
+        let moe = ModelConfig::tiny_moe();
+        assert_eq!(quantizable_layer_dims(&moe).len(), moe.n_layers * (4 + 3 * moe.n_experts));
+    }
+
+    #[test]
+    fn incompatible_group_rejected() {
+        // g=32 does not divide d_ff? All our dims are multiples of 16; use a
+        // fake dims list to check the infinity path.
+        let bits = model_avg_bits(AqlmShape::new(1, 4, 32), &[(8, 24)]);
+        assert!(bits.is_infinite());
+    }
+
+    #[test]
+    fn avg_bits_weighting() {
+        // Two layers, one twice the size: average must lean to the big one.
+        let s = AqlmShape::new(1, 4, 4);
+        let small = model_avg_bits(s, &[(16, 16)]);
+        let big = model_avg_bits(s, &[(64, 64)]);
+        let both = model_avg_bits(s, &[(16, 16), (64, 64)]);
+        assert!((both - big).abs() < (both - small).abs());
+    }
+}

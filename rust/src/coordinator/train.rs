@@ -1,0 +1,139 @@
+//! Base-model training: the native engine (hand-written backward + Adam)
+//! and a train-or-load cache so every bench target shares the same trained
+//! checkpoints under `runs/`.
+
+use crate::data::dataset::{DataBundle, TokenDataset};
+use crate::nn::adam::Adam;
+use crate::nn::config::ModelConfig;
+use crate::nn::model::{AdamStates, Model};
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+/// Training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub lr: f32,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, batch: 4, seq: 96, lr: 3e-3, log_every: 50 }
+    }
+}
+
+/// Train natively. Returns the per-step losses.
+pub fn train_native(
+    model: &mut Model,
+    data: &TokenDataset,
+    cfg: TrainConfig,
+    rng: &mut Rng,
+    verbose: bool,
+) -> Vec<f64> {
+    assert!(cfg.seq <= model.cfg.max_seq);
+    let mut opt = Adam::training(cfg.lr);
+    let mut states = AdamStates::new();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let seq_data = TokenDataset { tokens: data.tokens.clone(), seq_len: cfg.seq };
+    for step in 0..cfg.steps {
+        let (tokens, targets) = seq_data.sample_batch(cfg.batch, rng);
+        let (loss, grads) = model.loss_and_grads(&tokens, &targets, cfg.batch, cfg.seq);
+        model.apply_grads(&grads, &mut opt, &mut states);
+        losses.push(loss);
+        if verbose && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            eprintln!("  step {step:4}  loss {loss:.4}");
+        }
+    }
+    losses
+}
+
+/// Path of the cached checkpoint for one preset + step budget.
+pub fn run_path(dir: &Path, preset: &str, steps: usize, seed: u64) -> PathBuf {
+    dir.join(format!("{preset}_s{steps}_seed{seed}.ckpt"))
+}
+
+/// Train a preset on the bundle's train split, or load the cached
+/// checkpoint if it exists. Every experiment shares these base models.
+pub fn ensure_trained(
+    preset: &str,
+    bundle: &DataBundle,
+    tcfg: TrainConfig,
+    seed: u64,
+    runs_dir: &Path,
+    verbose: bool,
+) -> anyhow::Result<Model> {
+    let path = run_path(runs_dir, preset, tcfg.steps, seed);
+    if path.exists() {
+        let m = Model::load(&path)?;
+        if verbose {
+            eprintln!("loaded cached {preset} from {}", path.display());
+        }
+        return Ok(m);
+    }
+    let mut cfg = ModelConfig::preset(preset)?;
+    cfg.vocab_size = bundle.tokenizer.padded_vocab_size(16);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut model = Model::init(&cfg, &mut rng);
+    if verbose {
+        eprintln!(
+            "training {preset} ({} params, {} steps, batch {} x seq {})",
+            cfg.param_count(),
+            tcfg.steps,
+            tcfg.batch,
+            tcfg.seq
+        );
+    }
+    let losses = train_native(&mut model, &bundle.train, tcfg, &mut rng, verbose);
+    if verbose {
+        eprintln!("  final loss {:.4}", losses.last().unwrap());
+    }
+    model.save(&path)?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::DataSizes;
+
+    #[test]
+    fn training_learns_tinylang_structure() {
+        let sizes = DataSizes { train_tokens: 8000, eval_tokens: 512, calib_tokens: 512, seq_len: 32 };
+        let bundle = DataBundle::generate(11, sizes);
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 48;
+        cfg.vocab_size = bundle.tokenizer.padded_vocab_size(16);
+        cfg.max_seq = 32;
+        cfg.n_layers = 1;
+        let mut rng = Rng::seed_from_u64(12);
+        let mut model = Model::init(&cfg, &mut rng);
+        let tcfg = TrainConfig { steps: 40, batch: 4, seq: 32, lr: 3e-3, log_every: 1000 };
+        let losses = train_native(&mut model, &bundle.train, tcfg, &mut rng, false);
+        let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+        let tail: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(tail < head * 0.75, "loss barely moved: {head} -> {tail}");
+    }
+
+    #[test]
+    fn ensure_trained_caches() {
+        let sizes = DataSizes { train_tokens: 3000, eval_tokens: 512, calib_tokens: 512, seq_len: 32 };
+        let bundle = DataBundle::generate(13, sizes);
+        let dir = std::env::temp_dir().join("aqlm_runs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tcfg = TrainConfig { steps: 3, batch: 2, seq: 32, lr: 1e-3, log_every: 100 };
+        let m1 = ensure_trained("nano", &bundle, tcfg, 1, &dir, false).unwrap();
+        assert!(run_path(&dir, "nano", 3, 1).exists());
+        let mut m2 = ensure_trained("nano", &bundle, tcfg, 1, &dir, false).unwrap();
+        let tokens: Vec<u32> = vec![1, 2, 3, 4];
+        let (l1, _) = m1.clone().forward_logits(&tokens, 1, 4, false);
+        let (l2, _) = m2.forward_logits(&tokens, 1, 4, false);
+        assert!(l1.allclose(&l2, 1e-6));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,411 @@
+//! TinyLang — a synthetic language with learnable, degradable structure.
+//!
+//! Stands in for the paper's natural-language corpora (RedPajama /
+//! WikiText-2 / C4). Design goals:
+//!
+//! 1. **Graded difficulty**: some regularities are easy (word classes,
+//!    templates), some hard (long-range agreement, in-context recall,
+//!    two-step arithmetic, memorized world facts) — so quantization damage
+//!    shows up as a *spectrum*, like the paper's easy zero-shot tasks vs
+//!    MMLU/GSM8k.
+//! 2. **Closed vocabulary** — lossless word-level tokenizer.
+//! 3. **A persistent world**: a fixed seed-derived set of `(role, region) →
+//!    value` facts appears throughout the corpus, so trained models store
+//!    facts *in weights* — exactly the kind of knowledge extreme
+//!    quantization erodes first.
+//!
+//! Sentence families:
+//! - *agreement*: `the small cats sit .` (subject–verb number agreement,
+//!   with 0–2 intervening adjectives)
+//! - *scene*: `the fox sleeps near the river .`
+//! - *recall*: `the ruby is in the box . where is the ruby ? in the box .`
+//!   (in-context key–value recall; induction-head behaviour)
+//! - *fact*: `the king of north is arthur .` and its question form
+//!   `who rules north ? arthur .`
+//! - *arith*: `three plus four equals seven .` and two-step
+//!   `two plus three plus one equals six .`
+
+use super::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+pub const DETS: &[&str] = &["the"];
+pub const ADJ_SIZE: &[&str] = &["big", "small", "tiny", "huge"];
+pub const ADJ_COLOR: &[&str] = &["red", "blue", "green", "black", "white"];
+pub const NOUNS: &[&str] = &[
+    "cat", "dog", "bird", "fox", "wolf", "horse", "child", "king", "queen", "sailor",
+];
+pub const VERBS_SG: &[&str] = &[
+    "sits", "runs", "sleeps", "sings", "jumps", "waits", "falls", "hides",
+];
+pub const VERBS_PL: &[&str] = &["sit", "run", "sleep", "sing", "jump", "wait", "fall", "hide"];
+pub const PREPS: &[&str] = &["in", "on", "near", "under"];
+pub const PLACES: &[&str] = &[
+    "house", "river", "forest", "garden", "tower", "cave", "market", "harbor",
+];
+pub const OBJECTS: &[&str] = &["ruby", "coin", "key", "book", "crown", "pearl", "map", "lamp"];
+pub const CONTAINERS: &[&str] = &["box", "chest", "jar", "bag", "drawer", "basket", "pot", "case"];
+pub const REGIONS: &[&str] = &["north", "south", "east", "west", "coast", "valley", "plain", "isle"];
+pub const ROLE_WORDS: &[(&str, &str)] = &[
+    // (role noun in statement, question verb for the "hard" phrasing)
+    ("king", "rules"),
+    ("capital", "governs"),
+    ("banner", "marks"),
+    ("beast", "guards"),
+];
+pub const NAMES: &[&str] = &[
+    "arthur", "boris", "cyrus", "doran", "edwin", "farid", "gareth", "hamid", "karak", "lumen",
+    "mirth", "novar", "ostia", "pell", "quill", "rova",
+];
+pub const NUMBERS: &[&str] = &[
+    "zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine", "ten",
+    "eleven", "twelve", "thirteen", "fourteen", "fifteen", "sixteen", "seventeen", "eighteen",
+    "nineteen", "twentyone", "twentytwo", "twentythree", "twentyfour", "twentyfive", "twentysix",
+    "twentyseven", "twenty",
+];
+pub const FUNCTION_WORDS: &[&str] = &[
+    ".", "?", "is", "are", "where", "what", "who", "of", "plus", "equals", "and",
+];
+
+/// One memorized world fact: `the {role} of {region} is {value} .`
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fact {
+    pub role: &'static str,
+    pub question_verb: &'static str,
+    pub region: &'static str,
+    pub value: &'static str,
+}
+
+/// The persistent world: one value per (role, region) pair, plus the
+/// sentence mixture weights.
+#[derive(Clone, Debug)]
+pub struct World {
+    pub facts: Vec<Fact>,
+}
+
+impl World {
+    /// Deterministically derive a world from a seed. Every (role, region)
+    /// pair gets a value; values within a role are distinct so single-fact
+    /// questions have unambiguous answers.
+    pub fn generate(seed: u64) -> World {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x57_6f_72_6c_64); // "World"
+        let mut facts = Vec::new();
+        for &(role, qverb) in ROLE_WORDS {
+            // Pick a distinct value per region for this role.
+            let mut values: Vec<&'static str> = NAMES.to_vec();
+            rng.shuffle(&mut values);
+            for (i, &region) in REGIONS.iter().enumerate() {
+                facts.push(Fact { role, question_verb: qverb, region, value: values[i % values.len()] });
+            }
+        }
+        World { facts }
+    }
+
+    pub fn fact_for(&self, role: &str, region: &str) -> Option<&Fact> {
+        self.facts.iter().find(|f| f.role == role && f.region == region)
+    }
+
+    /// A value from the same role that differs from the true answer
+    /// (a plausible distractor for the task suite).
+    pub fn distractor(&self, fact: &Fact, rng: &mut Rng) -> &'static str {
+        loop {
+            let other = self.facts[rng.below(self.facts.len())].clone();
+            if other.role == fact.role && other.value != fact.value {
+                return other.value;
+            }
+        }
+    }
+}
+
+/// Build the full TinyLang tokenizer (all word inventories).
+pub fn build_tokenizer() -> Tokenizer {
+    let mut words: Vec<String> = Vec::new();
+    for list in [
+        DETS, ADJ_SIZE, ADJ_COLOR, NOUNS, VERBS_SG, VERBS_PL, PREPS, PLACES, OBJECTS,
+        CONTAINERS, REGIONS, NAMES, NUMBERS, FUNCTION_WORDS,
+    ] {
+        words.extend(list.iter().map(|s| s.to_string()));
+    }
+    // Plural noun forms are real vocabulary items.
+    words.extend(NOUNS.iter().map(|n| plural(n)));
+    for &(role, qverb) in ROLE_WORDS {
+        words.push(role.to_string());
+        words.push(qverb.to_string());
+    }
+    let refs: Vec<&str> = words.iter().map(|s| s.as_str()).collect();
+    Tokenizer::new(&refs)
+}
+
+/// Plural form of a noun (TinyLang regular plural).
+pub fn plural(noun: &str) -> String {
+    format!("{noun}s")
+}
+
+/// Sentence mixture weights (sums to 1.0 conceptually; sampled by weight).
+#[derive(Clone, Debug)]
+pub struct Mixture {
+    pub agreement: f32,
+    pub scene: f32,
+    pub recall: f32,
+    pub fact: f32,
+    pub arith: f32,
+}
+
+impl Default for Mixture {
+    fn default() -> Self {
+        Mixture { agreement: 0.30, scene: 0.15, recall: 0.20, fact: 0.20, arith: 0.15 }
+    }
+}
+
+/// The `wiki` eval analog: plain language only (agreement + scene).
+pub fn mixture_wiki() -> Mixture {
+    Mixture { agreement: 0.6, scene: 0.4, recall: 0.0, fact: 0.0, arith: 0.0 }
+}
+
+/// The `c4` eval analog: knowledge-and-reasoning heavy mixture.
+pub fn mixture_c4() -> Mixture {
+    Mixture { agreement: 0.1, scene: 0.1, recall: 0.3, fact: 0.3, arith: 0.2 }
+}
+
+/// TinyLang sentence sampler over a fixed world.
+pub struct Generator<'w> {
+    pub world: &'w World,
+    pub mixture: Mixture,
+}
+
+impl<'w> Generator<'w> {
+    pub fn new(world: &'w World) -> Generator<'w> {
+        Generator { world, mixture: Mixture::default() }
+    }
+
+    pub fn with_mixture(world: &'w World, mixture: Mixture) -> Generator<'w> {
+        Generator { world, mixture }
+    }
+
+    /// Sample one sentence (no BOS/EOS) as text.
+    pub fn sentence(&self, rng: &mut Rng) -> String {
+        let w = &self.mixture;
+        let weights = [w.agreement, w.scene, w.recall, w.fact, w.arith];
+        match rng.weighted(&weights) {
+            0 => self.agreement_sentence(rng),
+            1 => self.scene_sentence(rng),
+            2 => self.recall_sentence(rng),
+            3 => self.fact_sentence(rng),
+            _ => self.arith_sentence(rng),
+        }
+    }
+
+    /// `the (adj)* noun[s] verb[agree] (prep place)? .`
+    pub fn agreement_sentence(&self, rng: &mut Rng) -> String {
+        let pl = rng.f32() < 0.5;
+        let noun = *rng.choose(NOUNS);
+        let vidx = rng.below(VERBS_SG.len());
+        let mut parts: Vec<String> = vec!["the".into()];
+        // 0..=2 adjectives, size before color (the learnable order rule).
+        let n_adj = rng.below(3);
+        if n_adj == 2 {
+            parts.push((*rng.choose(ADJ_SIZE)).into());
+            parts.push((*rng.choose(ADJ_COLOR)).into());
+        } else if n_adj == 1 {
+            let pool = if rng.f32() < 0.5 { ADJ_SIZE } else { ADJ_COLOR };
+            parts.push((*rng.choose(pool)).into());
+        }
+        parts.push(if pl { plural(noun) } else { noun.into() });
+        parts.push(if pl { VERBS_PL[vidx].into() } else { VERBS_SG[vidx].into() });
+        if rng.f32() < 0.4 {
+            parts.push((*rng.choose(PREPS)).into());
+            parts.push("the".into());
+            parts.push((*rng.choose(PLACES)).into());
+        }
+        parts.push(".".into());
+        parts.join(" ")
+    }
+
+    /// `the noun verb prep the place .`
+    pub fn scene_sentence(&self, rng: &mut Rng) -> String {
+        let noun = *rng.choose(NOUNS);
+        let verb = *rng.choose(VERBS_SG);
+        let prep = *rng.choose(PREPS);
+        let place = *rng.choose(PLACES);
+        format!("the {noun} {verb} {prep} the {place} .")
+    }
+
+    /// `the obj is in the cont . where is the obj ? in the cont .`
+    /// Optionally with a second statement interleaved (distractor context).
+    pub fn recall_sentence(&self, rng: &mut Rng) -> String {
+        let obj = *rng.choose(OBJECTS);
+        let cont = *rng.choose(CONTAINERS);
+        if rng.f32() < 0.5 {
+            // With a distractor pair before the question.
+            let mut obj2 = *rng.choose(OBJECTS);
+            while obj2 == obj {
+                obj2 = *rng.choose(OBJECTS);
+            }
+            let cont2 = *rng.choose(CONTAINERS);
+            format!(
+                "the {obj} is in the {cont} . the {obj2} is in the {cont2} . where is the {obj} ? in the {cont} ."
+            )
+        } else {
+            format!("the {obj} is in the {cont} . where is the {obj} ? in the {cont} .")
+        }
+    }
+
+    /// Statement or question form of a world fact.
+    pub fn fact_sentence(&self, rng: &mut Rng) -> String {
+        let f = &self.world.facts[rng.below(self.world.facts.len())];
+        if rng.f32() < 0.6 {
+            format!("the {} of {} is {} .", f.role, f.region, f.value)
+        } else {
+            format!("who {} {} ? {} .", f.question_verb, f.region, f.value)
+        }
+    }
+
+    /// One- or two-step addition with number words.
+    pub fn arith_sentence(&self, rng: &mut Rng) -> String {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        if rng.f32() < 0.35 {
+            let c = rng.below(8);
+            format!(
+                "{} plus {} plus {} equals {} .",
+                NUMBERS[a],
+                NUMBERS[b],
+                NUMBERS[c],
+                NUMBERS[a + b + c]
+            )
+        } else {
+            format!("{} plus {} equals {} .", NUMBERS[a], NUMBERS[b], NUMBERS[a + b])
+        }
+    }
+
+    /// Generate a token stream of at least `n_tokens` tokens.
+    pub fn token_stream(&self, tok: &Tokenizer, n_tokens: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n_tokens + 32);
+        while out.len() < n_tokens {
+            out.extend(tok.encode_sentence(&self.sentence(rng)));
+        }
+        out.truncate(n_tokens);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::UNK;
+
+    #[test]
+    fn world_is_deterministic_and_complete() {
+        let w1 = World::generate(7);
+        let w2 = World::generate(7);
+        assert_eq!(w1.facts, w2.facts);
+        assert_eq!(w1.facts.len(), ROLE_WORDS.len() * REGIONS.len());
+        // Within a role, region→value is a function.
+        for &(role, _) in ROLE_WORDS {
+            for &region in REGIONS {
+                assert!(w1.fact_for(role, region).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_worlds() {
+        let w1 = World::generate(1);
+        let w2 = World::generate(2);
+        assert_ne!(w1.facts, w2.facts);
+    }
+
+    #[test]
+    fn all_generated_words_in_vocab() {
+        let tok = build_tokenizer();
+        let world = World::generate(3);
+        let gen = Generator::new(&world);
+        let mut rng = Rng::seed_from_u64(4);
+        for _ in 0..500 {
+            let s = gen.sentence(&mut rng);
+            for id in tok.encode(&s) {
+                assert_ne!(id, UNK, "unknown word in: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn agreement_sentences_agree() {
+        let world = World::generate(5);
+        let gen = Generator::new(&world);
+        let mut rng = Rng::seed_from_u64(6);
+        for _ in 0..200 {
+            let s = gen.agreement_sentence(&mut rng);
+            let words: Vec<&str> = s.split_whitespace().collect();
+            // Find the noun (word right before the verb).
+            let verb_pos = words
+                .iter()
+                .position(|w| VERBS_SG.contains(w) || VERBS_PL.contains(w))
+                .unwrap_or_else(|| panic!("no verb in: {s}"));
+            let noun = words[verb_pos - 1];
+            let is_plural_noun = noun.ends_with('s') && !NOUNS.contains(&noun);
+            let is_plural_verb = VERBS_PL.contains(&words[verb_pos]);
+            assert_eq!(is_plural_noun, is_plural_verb, "agreement violated: {s}");
+        }
+    }
+
+    #[test]
+    fn arithmetic_is_correct() {
+        let world = World::generate(5);
+        let gen = Generator::new(&world);
+        let mut rng = Rng::seed_from_u64(8);
+        let num = |w: &str| NUMBERS.iter().position(|&n| n == w).unwrap();
+        for _ in 0..200 {
+            let s = gen.arith_sentence(&mut rng);
+            let words: Vec<&str> = s.split_whitespace().collect();
+            let eq = words.iter().position(|&w| w == "equals").unwrap();
+            let lhs: usize = words[..eq].iter().filter(|w| **w != "plus").map(|w| num(w)).sum();
+            assert_eq!(lhs, num(words[eq + 1]), "bad arithmetic: {s}");
+        }
+    }
+
+    #[test]
+    fn recall_sentences_are_consistent() {
+        let world = World::generate(5);
+        let gen = Generator::new(&world);
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..100 {
+            let s = gen.recall_sentence(&mut rng);
+            let words: Vec<&str> = s.split_whitespace().collect();
+            // answer container (last non-'.' word) must match the container
+            // paired with the queried object.
+            let q = words.iter().position(|&w| w == "where").unwrap();
+            let obj = words[q + 3];
+            let answer = words[words.len() - 2];
+            // Find "the <obj> is in the <cont>" before the question.
+            let stmt = words[..q]
+                .windows(6)
+                .find(|w| w[1] == obj && w[2] == "is")
+                .unwrap_or_else(|| panic!("no statement for {obj} in: {s}"));
+            assert_eq!(stmt[5], answer, "inconsistent recall: {s}");
+        }
+    }
+
+    #[test]
+    fn token_stream_length_and_mixtures() {
+        let tok = build_tokenizer();
+        let world = World::generate(3);
+        let mut rng = Rng::seed_from_u64(10);
+        let gen = Generator::with_mixture(&world, mixture_wiki());
+        let ids = gen.token_stream(&tok, 1000, &mut rng);
+        assert_eq!(ids.len(), 1000);
+        // wiki mixture must not contain arithmetic words.
+        let plus = tok.id("plus");
+        assert!(!ids.contains(&plus));
+    }
+
+    #[test]
+    fn distractor_differs_from_answer() {
+        let world = World::generate(3);
+        let mut rng = Rng::seed_from_u64(11);
+        let f = world.facts[0].clone();
+        for _ in 0..50 {
+            let d = world.distractor(&f, &mut rng);
+            assert_ne!(d, f.value);
+        }
+    }
+}

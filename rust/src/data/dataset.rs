@@ -1,0 +1,157 @@
+//! Token datasets: train stream, eval splits, calibration slices, batching.
+//!
+//! Mirrors the paper's data protocol: a large calibration/train distribution
+//! (RedPajama analog = the default TinyLang mixture), and two *disjoint*
+//! evaluation distributions (`wiki` = plain language, `c4` = knowledge-heavy
+//! mixture) on which perplexity is reported.
+
+use super::corpus::{mixture_c4, mixture_wiki, Generator, World};
+use super::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// A contiguous token stream chunked into fixed-length sequences.
+#[derive(Clone, Debug)]
+pub struct TokenDataset {
+    pub tokens: Vec<u32>,
+    pub seq_len: usize,
+}
+
+impl TokenDataset {
+    pub fn new(tokens: Vec<u32>, seq_len: usize) -> TokenDataset {
+        TokenDataset { tokens, seq_len }
+    }
+
+    /// Number of full (input, target) sequences available.
+    pub fn num_sequences(&self) -> usize {
+        if self.tokens.len() <= self.seq_len {
+            0
+        } else {
+            (self.tokens.len() - 1) / self.seq_len
+        }
+    }
+
+    /// The `i`-th (inputs, targets) pair; targets are inputs shifted by one.
+    pub fn sequence(&self, i: usize) -> (&[u32], &[u32]) {
+        let start = i * self.seq_len;
+        let inputs = &self.tokens[start..start + self.seq_len];
+        let targets = &self.tokens[start + 1..start + self.seq_len + 1];
+        (inputs, targets)
+    }
+
+    /// Sample a random batch of (inputs, targets), each flattened
+    /// [batch, seq_len] row-major.
+    pub fn sample_batch(&self, batch: usize, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+        let n = self.num_sequences();
+        assert!(n > 0, "dataset too small for seq_len {}", self.seq_len);
+        let mut inputs = Vec::with_capacity(batch * self.seq_len);
+        let mut targets = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            let (x, y) = self.sequence(rng.below(n));
+            inputs.extend_from_slice(x);
+            targets.extend_from_slice(y);
+        }
+        (inputs, targets)
+    }
+}
+
+/// All data splits for one experiment, derived from a single seed.
+pub struct DataBundle {
+    pub tokenizer: Tokenizer,
+    pub world: World,
+    pub train: TokenDataset,
+    /// WikiText-2 analog: plain-language eval split.
+    pub eval_wiki: TokenDataset,
+    /// C4 analog: knowledge-heavy eval split.
+    pub eval_c4: TokenDataset,
+    /// Calibration sequences (held out from both evals).
+    pub calib: TokenDataset,
+}
+
+/// Sizes (in tokens) for each split.
+#[derive(Clone, Copy, Debug)]
+pub struct DataSizes {
+    pub train_tokens: usize,
+    pub eval_tokens: usize,
+    pub calib_tokens: usize,
+    pub seq_len: usize,
+}
+
+impl Default for DataSizes {
+    fn default() -> Self {
+        DataSizes { train_tokens: 400_000, eval_tokens: 16_384, calib_tokens: 32_768, seq_len: 128 }
+    }
+}
+
+impl DataBundle {
+    /// Build all splits. Streams use independent RNG forks so e.g. growing
+    /// the train split does not change eval content.
+    pub fn generate(seed: u64, sizes: DataSizes) -> DataBundle {
+        let tokenizer = super::corpus::build_tokenizer();
+        let world = World::generate(seed);
+        let mut root = Rng::seed_from_u64(seed ^ 0xda7a);
+        let mut r_train = root.fork(1);
+        let mut r_wiki = root.fork(2);
+        let mut r_c4 = root.fork(3);
+        let mut r_calib = root.fork(4);
+
+        let gen_train = Generator::new(&world);
+        let gen_wiki = Generator::with_mixture(&world, mixture_wiki());
+        let gen_c4 = Generator::with_mixture(&world, mixture_c4());
+
+        let train =
+            TokenDataset::new(gen_train.token_stream(&tokenizer, sizes.train_tokens, &mut r_train), sizes.seq_len);
+        let eval_wiki =
+            TokenDataset::new(gen_wiki.token_stream(&tokenizer, sizes.eval_tokens, &mut r_wiki), sizes.seq_len);
+        let eval_c4 =
+            TokenDataset::new(gen_c4.token_stream(&tokenizer, sizes.eval_tokens, &mut r_c4), sizes.seq_len);
+        let calib =
+            TokenDataset::new(gen_train.token_stream(&tokenizer, sizes.calib_tokens, &mut r_calib), sizes.seq_len);
+
+        DataBundle { tokenizer, world, train, eval_wiki, eval_c4, calib }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_are_shifted_pairs() {
+        let d = TokenDataset::new((0..100).collect(), 10);
+        assert_eq!(d.num_sequences(), 9);
+        let (x, y) = d.sequence(2);
+        assert_eq!(x[0], 20);
+        assert_eq!(y[0], 21);
+        assert_eq!(x.len(), 10);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = TokenDataset::new((0..1000).collect(), 16);
+        let mut rng = Rng::seed_from_u64(0);
+        let (x, y) = d.sample_batch(4, &mut rng);
+        assert_eq!(x.len(), 64);
+        assert_eq!(y.len(), 64);
+        for i in 0..64 {
+            assert_eq!(y[i], x[i] + 1);
+        }
+    }
+
+    #[test]
+    fn tiny_dataset_has_no_sequences() {
+        let d = TokenDataset::new(vec![1, 2, 3], 10);
+        assert_eq!(d.num_sequences(), 0);
+    }
+
+    #[test]
+    fn bundle_splits_deterministic_and_disjoint_rngs() {
+        let sizes = DataSizes { train_tokens: 2000, eval_tokens: 500, calib_tokens: 500, seq_len: 32 };
+        let a = DataBundle::generate(42, sizes);
+        let b = DataBundle::generate(42, sizes);
+        assert_eq!(a.train.tokens, b.train.tokens);
+        assert_eq!(a.eval_wiki.tokens, b.eval_wiki.tokens);
+        // Different mixtures produce different streams.
+        assert_ne!(a.eval_wiki.tokens, a.eval_c4.tokens);
+        assert_ne!(a.train.tokens[..500], a.calib.tokens[..500]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Data substrate: tokenizer, the TinyLang synthetic corpus, evaluation
+//! datasets, and the synthetic zero-shot task suite.
+//!
+//! The paper calibrates on RedPajama and evaluates perplexity on WikiText-2
+//! and C4 plus five LM-Eval-Harness zero-shot tasks (and MMLU/GSM8k in
+//! App. K). None of those assets exist in this offline image, so this module
+//! builds the closest synthetic equivalent (see DESIGN.md §5):
+//!
+//! - [`tokenizer`] — a fixed word-level vocabulary over TinyLang.
+//! - [`corpus`] — a probabilistic generator for TinyLang: sentences with
+//!   subject–verb number agreement, adjective order, a world of key→value
+//!   facts ("the ruby is in the box"), question/answer recall pairs, and
+//!   single/two-step arithmetic — enough latent structure that a small
+//!   trained transformer has non-trivial, *degradable* capabilities.
+//! - [`dataset`] — token streams split into train / two disjoint eval
+//!   distributions (the WikiText-2 / C4 analogs) / calibration slices.
+//! - [`tasks`] — likelihood-comparison zero-shot tasks following the
+//!   LM-Eval protocol (argmax over per-choice continuation likelihoods).
+
+pub mod tokenizer;
+pub mod corpus;
+pub mod dataset;
+pub mod tasks;

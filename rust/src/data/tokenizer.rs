@@ -1,0 +1,132 @@
+//! Word-level tokenizer over the closed TinyLang vocabulary.
+//!
+//! TinyLang is generated from a fixed word inventory, so a closed word-level
+//! vocabulary is lossless and keeps sequences short (a BPE would only add
+//! noise at this scale). Special tokens: `<pad>`, `<bos>`, `<eos>`, `<unk>`.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const UNK: u32 = 3;
+
+/// Bidirectional word↔id mapping.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    word_to_id: HashMap<String, u32>,
+    id_to_word: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build from a word inventory; ids are assigned in iteration order
+    /// after the 4 special tokens.
+    pub fn new(words: &[&str]) -> Tokenizer {
+        let mut id_to_word: Vec<String> =
+            vec!["<pad>".into(), "<bos>".into(), "<eos>".into(), "<unk>".into()];
+        let mut word_to_id = HashMap::new();
+        for (i, w) in id_to_word.iter().enumerate() {
+            word_to_id.insert(w.clone(), i as u32);
+        }
+        for w in words {
+            if !word_to_id.contains_key(*w) {
+                word_to_id.insert(w.to_string(), id_to_word.len() as u32);
+                id_to_word.push(w.to_string());
+            }
+        }
+        Tokenizer { word_to_id, id_to_word }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    /// Vocab size rounded up to a multiple of `m` (embedding tables like
+    /// friendly shapes; extra ids are never produced by the corpus).
+    pub fn padded_vocab_size(&self, m: usize) -> usize {
+        self.vocab_size().div_ceil(m) * m
+    }
+
+    pub fn id(&self, word: &str) -> u32 {
+        *self.word_to_id.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        self.id_to_word.get(id as usize).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    /// Encode whitespace-separated text (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    /// Encode with BOS prefix and EOS suffix.
+    pub fn encode_sentence(&self, text: &str) -> Vec<u32> {
+        let mut ids = vec![BOS];
+        ids.extend(self.encode(text));
+        ids.push(EOS);
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD && i != BOS && i != EOS)
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(&["the", "cat", "sits", "dog", "."])
+    }
+
+    #[test]
+    fn specials_reserved() {
+        let t = tok();
+        assert_eq!(t.id("<pad>"), PAD);
+        assert_eq!(t.id("<bos>"), BOS);
+        assert_eq!(t.id("<eos>"), EOS);
+        assert_eq!(t.id("<unk>"), UNK);
+        assert_eq!(t.vocab_size(), 9);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = tok();
+        let ids = t.encode("the cat sits .");
+        assert_eq!(t.decode(&ids), "the cat sits .");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = tok();
+        assert_eq!(t.encode("zebra")[0], UNK);
+    }
+
+    #[test]
+    fn sentence_wrapping() {
+        let t = tok();
+        let ids = t.encode_sentence("the dog");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(t.decode(&ids), "the dog");
+    }
+
+    #[test]
+    fn duplicate_words_ignored() {
+        let t = Tokenizer::new(&["a", "b", "a"]);
+        assert_eq!(t.vocab_size(), 6);
+    }
+
+    #[test]
+    fn padded_vocab() {
+        let t = tok(); // 9 words
+        assert_eq!(t.padded_vocab_size(8), 16);
+        assert_eq!(t.padded_vocab_size(1), 9);
+    }
+}

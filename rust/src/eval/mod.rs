@@ -1,0 +1,7 @@
+//! Evaluation harness: perplexity, zero-shot tasks, Pareto analytics, and
+//! report formatting — the machinery behind every table and figure.
+
+pub mod ppl;
+pub mod zeroshot;
+pub mod pareto;
+pub mod report;

@@ -1,0 +1,122 @@
+//! Pareto-optimality analytics (paper §4.1 "Pareto optimality of AQLM",
+//! Figures 1/5/6): given (size-in-bytes, perplexity) points across model
+//! sizes and bit widths, compute the frontier and test the paper's central
+//! claim — whether a point is dominated by a smaller-or-equal model with
+//! lower perplexity.
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub label: String,
+    pub size_bytes: u64,
+    pub ppl: f64,
+}
+
+/// Points on the Pareto frontier: no other point has both ≤ size and < ppl
+/// (or < size and ≤ ppl).
+pub fn frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut out: Vec<ParetoPoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.size_bytes <= p.size_bytes && q.ppl < p.ppl)
+                || (q.size_bytes < p.size_bytes && q.ppl <= p.ppl)
+        });
+        if !dominated {
+            out.push(p.clone());
+        }
+    }
+    out.sort_by_key(|p| p.size_bytes);
+    out
+}
+
+/// Is `candidate` Pareto-optimal within `points` (the Dettmers &
+/// Zettlemoyer criterion the paper uses)?
+pub fn is_pareto_optimal(candidate: &ParetoPoint, points: &[ParetoPoint]) -> bool {
+    !points.iter().any(|q| {
+        q.label != candidate.label
+            && ((q.size_bytes <= candidate.size_bytes && q.ppl < candidate.ppl)
+                || (q.size_bytes < candidate.size_bytes && q.ppl <= candidate.ppl))
+    })
+}
+
+/// Render an ASCII scatter of size (x, log-scaled) vs ppl (y) for the
+/// figure reproductions in EXPERIMENTS.md.
+pub fn ascii_plot(points: &[ParetoPoint], width: usize, height: usize) -> String {
+    if points.is_empty() {
+        return String::new();
+    }
+    let min_s = points.iter().map(|p| p.size_bytes as f64).fold(f64::INFINITY, f64::min).ln();
+    let max_s = points.iter().map(|p| p.size_bytes as f64).fold(0.0, f64::max).ln();
+    let min_p = points.iter().map(|p| p.ppl).fold(f64::INFINITY, f64::min);
+    let max_p = points.iter().map(|p| p.ppl).fold(0.0, f64::max);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (i, p) in points.iter().enumerate() {
+        let x = if max_s > min_s {
+            (((p.size_bytes as f64).ln() - min_s) / (max_s - min_s) * (width - 1) as f64) as usize
+        } else {
+            0
+        };
+        let y = if max_p > min_p {
+            ((p.ppl - min_p) / (max_p - min_p) * (height - 1) as f64) as usize
+        } else {
+            0
+        };
+        let marker = char::from(b'A' + (i % 26) as u8) as u8;
+        grid[height - 1 - y][x] = marker;
+    }
+    let mut out = String::new();
+    for row in grid {
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "x: {:.1}..{:.1} MiB (log)   y: ppl {:.2}..{:.2}\n",
+        min_s.exp() / 1048576.0,
+        max_s.exp() / 1048576.0,
+        min_p,
+        max_p
+    ));
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!("  {} = {} ({} B, ppl {:.3})\n",
+            char::from(b'A' + (i % 26) as u8), p.label, p.size_bytes, p.ppl));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(label: &str, size: u64, ppl: f64) -> ParetoPoint {
+        ParetoPoint { label: label.into(), size_bytes: size, ppl }
+    }
+
+    #[test]
+    fn frontier_filters_dominated() {
+        let pts = vec![p("a", 100, 10.0), p("b", 200, 8.0), p("c", 150, 12.0), p("d", 300, 7.0)];
+        let f = frontier(&pts);
+        let labels: Vec<&str> = f.iter().map(|x| x.label.as_str()).collect();
+        assert_eq!(labels, vec!["a", "b", "d"]); // c dominated by b
+    }
+
+    #[test]
+    fn optimality_check() {
+        let pts = vec![p("big4bit", 100, 9.0), p("small16", 80, 12.0), p("big2bit", 60, 11.0)];
+        assert!(is_pareto_optimal(&pts[2], &pts));
+        assert!(!is_pareto_optimal(&p("worse", 90, 13.0), &pts));
+    }
+
+    #[test]
+    fn equal_points_both_on_frontier() {
+        let pts = vec![p("x", 100, 10.0), p("y", 100, 10.0)];
+        assert_eq!(frontier(&pts).len(), 2);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let pts = vec![p("a", 1 << 20, 5.0), p("b", 4 << 20, 4.0)];
+        let s = ascii_plot(&pts, 20, 6);
+        assert!(s.contains('A') && s.contains('B'));
+        assert!(s.contains("ppl"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Perplexity evaluation (the paper's Wiki2↓ / C4↓ columns).
+
+use crate::data::dataset::TokenDataset;
+use crate::nn::loss::cross_entropy_loss_only;
+use crate::nn::model::Model;
+
+/// Perplexity of `model` on all full sequences of `data`, computed as
+/// exp(mean token NLL) exactly like the GPTQ/AQLM evaluation protocol.
+/// `batch` controls how many sequences share one forward pass.
+pub fn perplexity(model: &mut Model, data: &TokenDataset, batch: usize) -> f64 {
+    let n_seq = data.num_sequences();
+    assert!(n_seq > 0, "dataset has no full sequences");
+    let seq = data.seq_len;
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    let mut i = 0;
+    while i < n_seq {
+        let b = batch.min(n_seq - i);
+        let mut tokens = Vec::with_capacity(b * seq);
+        let mut targets = Vec::with_capacity(b * seq);
+        for s in 0..b {
+            let (x, y) = data.sequence(i + s);
+            tokens.extend_from_slice(x);
+            targets.extend_from_slice(y);
+        }
+        let (logits, _) = model.forward_logits(&tokens, b, seq, false);
+        total_nll += cross_entropy_loss_only(&logits, &targets) * (b * seq) as f64;
+        total_tokens += b * seq;
+        i += b;
+    }
+    (total_nll / total_tokens as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn test_model(vocab: usize) -> Model {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 24;
+        cfg.vocab_size = vocab;
+        cfg.max_seq = 16;
+        cfg.n_layers = 1;
+        Model::init(&cfg, &mut Rng::seed_from_u64(1))
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab_size() {
+        let mut m = test_model(32);
+        let data = TokenDataset::new((0..330).map(|i| (i % 32) as u32).collect(), 16);
+        let ppl = perplexity(&mut m, &data, 4);
+        // Untrained model ≈ uniform → PPL ≈ vocab size.
+        assert!(ppl > 16.0 && ppl < 64.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn batch_size_does_not_change_ppl() {
+        let mut m = test_model(32);
+        let data = TokenDataset::new((0..200).map(|i| ((i * 7) % 32) as u32).collect(), 16);
+        let p1 = perplexity(&mut m, &data, 1);
+        let p4 = perplexity(&mut m, &data, 4);
+        assert!((p1 - p4).abs() / p1 < 1e-4, "{p1} vs {p4}");
+    }
+}

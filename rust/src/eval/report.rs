@@ -1,0 +1,139 @@
+//! Report formatting: the bench harness renders each reproduced paper
+//! table as aligned markdown (for EXPERIMENTS.md) and as machine-readable
+//! JSON (under `results/`).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:width$} |", cells[i], width = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable form.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("title", Json::from(self.title.as_str()));
+        j.set(
+            "headers",
+            Json::from(self.headers.iter().map(|h| Json::from(h.as_str())).collect::<Vec<_>>()),
+        );
+        let mut rows = Json::arr();
+        for r in &self.rows {
+            rows.push(Json::from(r.iter().map(|c| Json::from(c.as_str())).collect::<Vec<_>>()));
+        }
+        j.set("rows", rows);
+        j
+    }
+
+    /// Write markdown + json side by side under `results/`.
+    pub fn save(&self, dir: &Path, stem: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        self.to_json().to_file(&dir.join(format!("{stem}.json")))?;
+        Ok(())
+    }
+}
+
+/// Format helpers used across the bench harness.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = Table::new("Demo", &["Method", "PPL"]);
+        t.row(vec!["AQLM".into(), "6.59".into()]);
+        t.row(vec!["QuIP-lite".into(), "8.22".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| Method    | PPL  |"));
+        assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into()]);
+        let j = t.to_json();
+        assert_eq!(j.req_str("title").unwrap(), "T");
+        assert_eq!(j.req_arr("rows").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn save_writes_both_files() {
+        let mut t = Table::new("S", &["a"]);
+        t.row(vec!["v".into()]);
+        let dir = std::env::temp_dir().join("aqlm_report_test");
+        t.save(&dir, "t_test").unwrap();
+        assert!(dir.join("t_test.md").exists());
+        assert!(dir.join("t_test.json").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

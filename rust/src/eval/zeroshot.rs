@@ -1,0 +1,136 @@
+//! Zero-shot task evaluation (LM-Eval-Harness protocol): for every
+//! instance, score each candidate continuation by its summed token
+//! log-likelihood given the context and pick the argmax.
+
+use crate::data::corpus::World;
+use crate::data::tasks::{Task, TaskInstance};
+use crate::data::tokenizer::{Tokenizer, BOS};
+use crate::nn::loss::sequence_logprob;
+use crate::nn::model::Model;
+use crate::util::rng::Rng;
+
+/// Accuracy (in %) of `model` on `n` instances of `task`.
+pub fn task_accuracy(
+    model: &mut Model,
+    tok: &Tokenizer,
+    world: &World,
+    task: Task,
+    n: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let instances = task.generate(world, n, rng);
+    let correct = instances.iter().filter(|inst| predict(model, tok, inst) == inst.correct).count();
+    100.0 * correct as f64 / n as f64
+}
+
+/// Argmax choice index for one instance.
+pub fn predict(model: &mut Model, tok: &Tokenizer, inst: &TaskInstance) -> usize {
+    let ctx: Vec<u32> = {
+        let mut v = vec![BOS];
+        v.extend(tok.encode(&inst.context));
+        v
+    };
+    let mut best = 0usize;
+    let mut best_lp = f64::NEG_INFINITY;
+    for (ci, choice) in inst.choices.iter().enumerate() {
+        let cont = tok.encode(choice);
+        let lp = continuation_logprob(model, &ctx, &cont);
+        if lp > best_lp {
+            best_lp = lp;
+            best = ci;
+        }
+    }
+    best
+}
+
+/// log p(cont | ctx): one forward over [ctx ++ cont[..-1]], summing the
+/// log-probs at the continuation positions.
+pub fn continuation_logprob(model: &mut Model, ctx: &[u32], cont: &[u32]) -> f64 {
+    assert!(!cont.is_empty());
+    let mut full: Vec<u32> = ctx.to_vec();
+    full.extend_from_slice(cont);
+    let inputs = &full[..full.len() - 1];
+    let seq = inputs.len();
+    assert!(seq <= model.cfg.max_seq, "instance too long: {seq}");
+    let (logits, _) = model.forward_logits(inputs, 1, seq, false);
+    // Continuation token i is predicted at position ctx.len()-1+i.
+    let start = ctx.len() - 1;
+    let rows = logits.rows_slice(start, start + cont.len());
+    sequence_logprob(&rows, cont)
+}
+
+/// Evaluate the 5-task standard suite + average (the paper's main columns).
+pub struct SuiteResult {
+    pub per_task: Vec<(Task, f64)>,
+    pub average: f64,
+}
+
+pub fn eval_suite(
+    model: &mut Model,
+    tok: &Tokenizer,
+    world: &World,
+    tasks: &[Task],
+    n_per_task: usize,
+    seed: u64,
+) -> SuiteResult {
+    let mut per_task = Vec::new();
+    for (i, &task) in tasks.iter().enumerate() {
+        let mut rng = Rng::seed_from_u64(seed ^ (0x2a5f << 8) ^ i as u64);
+        let acc = task_accuracy(model, tok, world, task, n_per_task, &mut rng);
+        per_task.push((task, acc));
+    }
+    let average = per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len() as f64;
+    SuiteResult { per_task, average }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::build_tokenizer;
+    use crate::nn::config::ModelConfig;
+
+    fn tiny_model(vocab: usize) -> Model {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 24;
+        cfg.vocab_size = vocab;
+        cfg.max_seq = 64;
+        cfg.n_layers = 1;
+        Model::init(&cfg, &mut Rng::seed_from_u64(3))
+    }
+
+    #[test]
+    fn untrained_model_near_chance() {
+        let tok = build_tokenizer();
+        let world = World::generate(1);
+        let mut m = tiny_model(tok.padded_vocab_size(16));
+        let mut rng = Rng::seed_from_u64(5);
+        let acc = task_accuracy(&mut m, &tok, &world, Task::Agreement, 60, &mut rng);
+        // 2-way task: chance = 50 ± noise.
+        assert!((20.0..80.0).contains(&acc), "acc={acc}");
+    }
+
+    #[test]
+    fn continuation_logprob_is_additive_and_negative() {
+        let tok = build_tokenizer();
+        let mut m = tiny_model(tok.padded_vocab_size(16));
+        let ctx = vec![BOS, tok.id("the"), tok.id("cat")];
+        let lp1 = continuation_logprob(&mut m, &ctx, &[tok.id("sits")]);
+        assert!(lp1 < 0.0);
+        let lp2 = continuation_logprob(&mut m, &ctx, &[tok.id("sits"), tok.id(".")]);
+        assert!(lp2 < lp1, "longer continuation must be less likely: {lp2} vs {lp1}");
+    }
+
+    #[test]
+    fn suite_shape() {
+        let tok = build_tokenizer();
+        let world = World::generate(2);
+        let mut m = tiny_model(tok.padded_vocab_size(16));
+        let res = eval_suite(&mut m, &tok, &world, &Task::STANDARD, 10, 7);
+        assert_eq!(res.per_task.len(), 5);
+        let mean = res.per_task.iter().map(|(_, a)| a).sum::<f64>() / 5.0;
+        assert!((res.average - mean).abs() < 1e-9);
+    }
+}

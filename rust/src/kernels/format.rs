@@ -1,0 +1,332 @@
+//! The AQLM compressed-weight format (paper Figure 3 + Appendix H).
+//!
+//! A weight matrix `W ∈ R^{d_out × d_in}` is stored as:
+//! - `codes[i][j][m]` — for output unit `i`, input group `j` (of `g`
+//!   consecutive input features), the index of the chosen codeword in
+//!   codebook `m`; the group's weights are the **sum** of the `M` chosen
+//!   codewords (additive quantization), times the per-unit scale `s_i`.
+//! - `codebooks[m] ∈ R^{2^B × g}` — learned, FP32 (FP16 in the paper).
+//! - `scales ∈ R^{d_out}`.
+//!
+//! The struct is the single source of truth shared by the quantizer
+//! (which learns codes/codebooks), the fine-tuners (which need gradients
+//! w.r.t. codebooks and scales), and the inference kernels.
+
+use crate::tensor::Tensor;
+
+/// AQLM-compressed linear-layer weight.
+#[derive(Clone, Debug)]
+pub struct AqlmWeight {
+    pub d_out: usize,
+    pub d_in: usize,
+    /// Group size `g` (consecutive input features per code).
+    pub group: usize,
+    /// Number of additive codebooks `M`.
+    pub n_codebooks: usize,
+    /// Code width `B` in bits; each codebook holds `2^B` codewords.
+    pub code_bits: usize,
+    /// Code indices, layout `[d_out][n_groups][M]`, each `< 2^B`.
+    pub codes: Vec<u16>,
+    /// `M` codebooks, each `[2^B, g]`.
+    pub codebooks: Vec<Tensor>,
+    /// Per-output-unit scales `[d_out]`.
+    pub scales: Vec<f32>,
+}
+
+impl AqlmWeight {
+    /// Number of codewords per codebook.
+    pub fn codebook_size(&self) -> usize {
+        1 << self.code_bits
+    }
+
+    /// Number of input groups per output row.
+    pub fn n_groups(&self) -> usize {
+        self.d_in / self.group
+    }
+
+    /// Flat index into `codes`.
+    #[inline]
+    pub fn code_index(&self, out: usize, grp: usize, m: usize) -> usize {
+        (out * self.n_groups() + grp) * self.n_codebooks + m
+    }
+
+    #[inline]
+    pub fn code(&self, out: usize, grp: usize, m: usize) -> usize {
+        self.codes[self.code_index(out, grp, m)] as usize
+    }
+
+    /// Validate internal consistency (shapes, index ranges).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.d_in % self.group == 0, "d_in not divisible by group");
+        anyhow::ensure!(self.codebooks.len() == self.n_codebooks, "codebook count");
+        let k = self.codebook_size();
+        for (m, cb) in self.codebooks.iter().enumerate() {
+            anyhow::ensure!(cb.shape() == [k, self.group], "codebook {m} shape {:?}", cb.shape());
+        }
+        anyhow::ensure!(
+            self.codes.len() == self.d_out * self.n_groups() * self.n_codebooks,
+            "codes length"
+        );
+        anyhow::ensure!(self.codes.iter().all(|&c| (c as usize) < k), "code out of range");
+        anyhow::ensure!(self.scales.len() == self.d_out, "scales length");
+        Ok(())
+    }
+
+    /// Decode one group of one output row into `out[0..g]`, *without* the
+    /// per-unit scale.
+    #[inline]
+    pub fn decode_group_unscaled(&self, row: usize, grp: usize, out: &mut [f32]) {
+        out[..self.group].fill(0.0);
+        for m in 0..self.n_codebooks {
+            let code = self.code(row, grp, m);
+            let cw = &self.codebooks[m].data()[code * self.group..(code + 1) * self.group];
+            for (o, &c) in out[..self.group].iter_mut().zip(cw) {
+                *o += c;
+            }
+        }
+    }
+
+    /// Decode a single full row (scaled).
+    pub fn decode_row(&self, row: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d_in);
+        let g = self.group;
+        let mut buf = vec![0.0f32; g];
+        for grp in 0..self.n_groups() {
+            self.decode_group_unscaled(row, grp, &mut buf);
+            let s = self.scales[row];
+            for t in 0..g {
+                out[grp * g + t] = s * buf[t];
+            }
+        }
+    }
+
+    /// Decode the full weight matrix `Ŵ` (Eq. 2 of the paper).
+    pub fn decode(&self) -> Tensor {
+        let mut w = Tensor::zeros(&[self.d_out, self.d_in]);
+        for i in 0..self.d_out {
+            self.decode_row(i, w.row_mut(i));
+        }
+        w
+    }
+
+    /// Gradients of a loss w.r.t. codebooks and scales, given `dL/dŴ`.
+    ///
+    /// With `Ŵ[i, jg+t] = s_i · Σ_m C_m[b_ijm][t]`:
+    /// - `dC_m[k][t] = Σ_{i,j: b_ijm=k} s_i · dŴ[i, jg+t]`
+    /// - `ds_i = Σ_{j,t} dŴ[i, jg+t] · (Σ_m C_m[b_ijm][t])`
+    ///
+    /// This is what Phase 3 (block fine-tuning) and Appendix A (end-to-end
+    /// KD) backpropagate through, with codes `b` frozen.
+    pub fn backward_dw(&self, dw: &Tensor) -> (Vec<Tensor>, Vec<f32>) {
+        assert_eq!(dw.shape(), &[self.d_out, self.d_in]);
+        let g = self.group;
+        let k = self.codebook_size();
+        let mut d_codebooks: Vec<Tensor> =
+            (0..self.n_codebooks).map(|_| Tensor::zeros(&[k, g])).collect();
+        let mut d_scales = vec![0.0f32; self.d_out];
+        let mut unscaled = vec![0.0f32; g];
+        for i in 0..self.d_out {
+            let s = self.scales[i];
+            let dw_row = dw.row(i);
+            for j in 0..self.n_groups() {
+                let dw_grp = &dw_row[j * g..(j + 1) * g];
+                // ds_i accumulation needs the unscaled reconstruction.
+                self.decode_group_unscaled(i, j, &mut unscaled);
+                for t in 0..g {
+                    d_scales[i] += dw_grp[t] * unscaled[t];
+                }
+                for m in 0..self.n_codebooks {
+                    let code = self.code(i, j, m);
+                    let dcb = &mut d_codebooks[m].data_mut()[code * g..(code + 1) * g];
+                    for t in 0..g {
+                        dcb[t] += s * dw_grp[t];
+                    }
+                }
+            }
+        }
+        (d_codebooks, d_scales)
+    }
+
+    /// Total storage in bits (Appendix H): codebooks are counted at 16-bit
+    /// precision as in the paper, codes at `B` bits, scales at 16 bits.
+    pub fn size_bits(&self) -> usize {
+        let codebooks = self.group * self.n_codebooks * self.codebook_size() * 16;
+        let codes = self.d_out * self.n_groups() * self.code_bits * self.n_codebooks;
+        let scales = self.d_out * 16;
+        codebooks + codes + scales
+    }
+
+    /// Average bits per (quantized) parameter — Eq. 10 of the paper.
+    pub fn avg_bits(&self) -> f64 {
+        self.size_bits() as f64 / (self.d_out * self.d_in) as f64
+    }
+
+    /// Human-readable config string like `2x8g8` (M × B, group size).
+    pub fn config_string(&self) -> String {
+        format!("{}x{}g{}", self.n_codebooks, self.code_bits, self.group)
+    }
+}
+
+/// Named codebook configuration (the paper's "1×16", "2×8" etc.).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AqlmShape {
+    pub n_codebooks: usize,
+    pub code_bits: usize,
+    pub group: usize,
+}
+
+impl AqlmShape {
+    pub fn new(n_codebooks: usize, code_bits: usize, group: usize) -> AqlmShape {
+        AqlmShape { n_codebooks, code_bits, group }
+    }
+
+    /// Appendix-H average bits for a layer of the given shape.
+    pub fn avg_bits_for(&self, d_out: usize, d_in: usize) -> f64 {
+        let codebooks = self.group * self.n_codebooks * (1usize << self.code_bits) * 16;
+        let codes = d_out * (d_in / self.group) * self.code_bits * self.n_codebooks;
+        let scales = d_out * 16;
+        (codebooks + codes + scales) as f64 / (d_out * d_in) as f64
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}x{}g{}", self.n_codebooks, self.code_bits, self.group)
+    }
+
+    /// Parse "2x8g8".
+    pub fn parse(s: &str) -> anyhow::Result<AqlmShape> {
+        let (m, rest) = s
+            .split_once('x')
+            .ok_or_else(|| anyhow::anyhow!("bad shape '{s}', want MxBgG"))?;
+        let (b, g) = rest.split_once('g').ok_or_else(|| anyhow::anyhow!("bad shape '{s}'"))?;
+        Ok(AqlmShape { n_codebooks: m.parse()?, code_bits: b.parse()?, group: g.parse()? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Build a random valid AqlmWeight for tests.
+    pub fn random_weight(
+        d_out: usize,
+        d_in: usize,
+        shape: AqlmShape,
+        rng: &mut Rng,
+    ) -> AqlmWeight {
+        let k = 1usize << shape.code_bits;
+        let n_groups = d_in / shape.group;
+        let codebooks: Vec<Tensor> =
+            (0..shape.n_codebooks).map(|_| Tensor::randn(&[k, shape.group], 0.5, rng)).collect();
+        let codes: Vec<u16> = (0..d_out * n_groups * shape.n_codebooks)
+            .map(|_| rng.below(k) as u16)
+            .collect();
+        let scales: Vec<f32> = (0..d_out).map(|_| 0.5 + rng.f32()).collect();
+        AqlmWeight {
+            d_out,
+            d_in,
+            group: shape.group,
+            n_codebooks: shape.n_codebooks,
+            code_bits: shape.code_bits,
+            codes,
+            codebooks,
+            scales,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_valid() {
+        let mut rng = Rng::seed_from_u64(1);
+        let w = random_weight(8, 16, AqlmShape::new(2, 4, 4), &mut rng);
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_code() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut w = random_weight(8, 16, AqlmShape::new(2, 4, 4), &mut rng);
+        w.codes[3] = 16; // == 2^4, out of range
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn decode_matches_manual_sum() {
+        let mut rng = Rng::seed_from_u64(2);
+        let w = random_weight(4, 8, AqlmShape::new(3, 3, 4), &mut rng);
+        let dec = w.decode();
+        // Manual: W[i, j*g+t] = s_i * sum_m C_m[code][t]
+        for i in 0..4 {
+            for j in 0..2 {
+                for t in 0..4 {
+                    let mut v = 0.0f32;
+                    for m in 0..3 {
+                        v += w.codebooks[m].at2(w.code(i, j, m), t);
+                    }
+                    v *= w.scales[i];
+                    assert!((dec.at2(i, j * 4 + t) - v).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_dw_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut w = random_weight(3, 8, AqlmShape::new(2, 3, 4), &mut rng);
+        // Loss L = <dw, decode(w)> for a fixed random dw — so dL/dC and dL/ds
+        // are exactly backward_dw(dw).
+        let dw = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let (dcb, dsc) = w.backward_dw(&dw);
+        let h = 1e-3f32;
+        // Check a few codebook coordinates.
+        for &(m, k, t) in &[(0usize, 1usize, 0usize), (1, 4, 2), (0, 7, 3)] {
+            let orig = w.codebooks[m].at2(k, t);
+            w.codebooks[m].set2(k, t, orig + h);
+            let lp = dw.dot(&w.decode());
+            w.codebooks[m].set2(k, t, orig - h);
+            let lm = dw.dot(&w.decode());
+            w.codebooks[m].set2(k, t, orig);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!((dcb[m].at2(k, t) - fd).abs() < 1e-2, "codebook grad m={m} k={k} t={t}: {} vs {}", dcb[m].at2(k, t), fd);
+        }
+        // Check scales.
+        for i in 0..3 {
+            let orig = w.scales[i];
+            w.scales[i] = orig + h;
+            let lp = dw.dot(&w.decode());
+            w.scales[i] = orig - h;
+            let lm = dw.dot(&w.decode());
+            w.scales[i] = orig;
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!((dsc[i] - fd).abs() < 1e-2, "scale grad {i}: {} vs {}", dsc[i], fd);
+        }
+    }
+
+    #[test]
+    fn appendix_h_example() {
+        // Paper App. H: LLAMA 2 70B gate_proj d_in=8192, d_out=28672,
+        // group 8, two 8-bit codebooks → 2.002 bits/param.
+        let shape = AqlmShape::new(2, 8, 8);
+        let bits = shape.avg_bits_for(28672, 8192);
+        assert!((bits - 2.002).abs() < 5e-3, "bits={bits}");
+    }
+
+    #[test]
+    fn avg_bits_matches_struct() {
+        let mut rng = Rng::seed_from_u64(4);
+        let shape = AqlmShape::new(2, 4, 4);
+        let w = random_weight(16, 32, shape, &mut rng);
+        assert!((w.avg_bits() - shape.avg_bits_for(16, 32)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_parse_roundtrip() {
+        let s = AqlmShape::parse("2x8g8").unwrap();
+        assert_eq!(s, AqlmShape::new(2, 8, 8));
+        assert_eq!(s.name(), "2x8g8");
+        assert!(AqlmShape::parse("bad").is_err());
+    }
+}
+
+#[cfg(test)]
+pub use tests::random_weight;

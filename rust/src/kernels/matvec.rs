@@ -1,0 +1,252 @@
+//! AQLM matrix–vector kernels (paper §4.4, Tables 5 & 14).
+//!
+//! Three strategies over the deployed [`PackedAqlm`] format:
+//!
+//! 1. **decode** — stream codes, reconstruct each group into registers, FMA
+//!    against the input. Reads `B·M/8/g` bytes per weight instead of 4
+//!    (f32), so it wins whenever the baseline GEMV is memory-bound. This is
+//!    the CPU analog of the paper's GPU kernel for `1×2^16`.
+//! 2. **lut** — the paper's CPU strategy for `K×8-bit` codebooks: per input
+//!    vector precompute `lut[j][m][c] = ⟨x_group_j, C_m[c]⟩`, then each
+//!    output unit is just `M · n_groups` table lookups and adds. Lookup
+//!    tables for 2^8 codebooks fit in L1/L2, exactly as the paper argues.
+//! 3. **auto** — picks lut when the table precompute (`d_in·M·2^B` FLOPs)
+//!    amortizes over `d_out` rows, else decode.
+//!
+//! The honest baseline these race against is
+//! [`crate::tensor::ops::gemv`] — same blocked dot-product code the dense
+//! model uses everywhere else.
+
+use super::format::AqlmWeight;
+use super::packed::{pack, BitReader};
+
+/// Deployment format: bit-packed codes + flat codebooks.
+#[derive(Clone, Debug)]
+pub struct PackedAqlm {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub group: usize,
+    pub n_codebooks: usize,
+    pub code_bits: usize,
+    /// Codes packed at `code_bits` each, in `[d_out][n_groups][M]` order.
+    pub packed_codes: Vec<u64>,
+    /// Byte-aligned fast path when `code_bits ≤ 8` (§Perf step k4): the
+    /// LUT kernel's hot loop reads codes without any bit arithmetic.
+    pub codes_bytes: Option<Vec<u8>>,
+    /// Codebooks `[M][2^B][g]` flattened contiguously.
+    pub codebooks: Vec<f32>,
+    pub scales: Vec<f32>,
+}
+
+impl PackedAqlm {
+    pub fn from_weight(w: &AqlmWeight) -> PackedAqlm {
+        let k = w.codebook_size();
+        let mut codebooks = Vec::with_capacity(w.n_codebooks * k * w.group);
+        for cb in &w.codebooks {
+            codebooks.extend_from_slice(cb.data());
+        }
+        let codes_bytes = (w.code_bits <= 8)
+            .then(|| w.codes.iter().map(|&c| c as u8).collect::<Vec<u8>>());
+        PackedAqlm {
+            d_out: w.d_out,
+            d_in: w.d_in,
+            group: w.group,
+            n_codebooks: w.n_codebooks,
+            code_bits: w.code_bits,
+            packed_codes: pack(&w.codes, w.code_bits),
+            codes_bytes,
+            codebooks,
+            scales: w.scales.clone(),
+        }
+    }
+
+    pub fn codebook_size(&self) -> usize {
+        1 << self.code_bits
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.d_in / self.group
+    }
+
+    /// Actual deployed bytes (packed codes + f32 codebooks + f32 scales).
+    pub fn deployed_bytes(&self) -> usize {
+        self.packed_codes.len() * 8 + self.codebooks.len() * 4 + self.scales.len() * 4
+    }
+
+    /// y = Ŵ x via streaming decode + FMA.
+    pub fn matvec_decode(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d_in);
+        debug_assert_eq!(y.len(), self.d_out);
+        let g = self.group;
+        let kg = self.codebook_size() * g;
+        let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
+        for i in 0..self.d_out {
+            let mut acc = 0.0f32;
+            for j in 0..self.n_groups() {
+                let xg = &x[j * g..(j + 1) * g];
+                // Reconstruct the group on the fly; for small g the compiler
+                // keeps `wbuf` in registers.
+                let mut wbuf = [0.0f32; 64];
+                let wbuf = &mut wbuf[..g];
+                let c0 = reader.next() as usize;
+                wbuf.copy_from_slice(&self.codebooks[c0 * g..c0 * g + g]);
+                for m in 1..self.n_codebooks {
+                    let c = reader.next() as usize;
+                    let cw = &self.codebooks[m * kg + c * g..m * kg + c * g + g];
+                    for t in 0..g {
+                        wbuf[t] += cw[t];
+                    }
+                }
+                for t in 0..g {
+                    acc += wbuf[t] * xg[t];
+                }
+            }
+            y[i] = acc * self.scales[i];
+        }
+    }
+
+    /// Size of the scratch LUT needed by [`Self::matvec_lut`].
+    pub fn lut_len(&self) -> usize {
+        self.n_groups() * self.n_codebooks * self.codebook_size()
+    }
+
+    /// y = Ŵ x via per-input lookup tables (the paper's CPU kernel).
+    /// `lut` is caller-provided scratch of `lut_len()` to keep the hot loop
+    /// allocation-free.
+    pub fn matvec_lut(&self, x: &[f32], lut: &mut [f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d_in);
+        debug_assert_eq!(y.len(), self.d_out);
+        debug_assert_eq!(lut.len(), self.lut_len());
+        let g = self.group;
+        let k = self.codebook_size();
+        let kg = k * g;
+        // Phase 1: lut[(j*M + m)*K + c] = <x_group_j, C_m[c]>
+        for j in 0..self.n_groups() {
+            let xg = &x[j * g..(j + 1) * g];
+            for m in 0..self.n_codebooks {
+                let cb = &self.codebooks[m * kg..(m + 1) * kg];
+                let dst = &mut lut[(j * self.n_codebooks + m) * k..(j * self.n_codebooks + m + 1) * k];
+                for (c, d) in dst.iter_mut().enumerate() {
+                    let cw = &cb[c * g..c * g + g];
+                    let mut s = 0.0f32;
+                    for t in 0..g {
+                        s += cw[t] * xg[t];
+                    }
+                    *d = s;
+                }
+            }
+        }
+        // Phase 2: pure table additions. The LUT layout `(j·M + m)·K + c`
+        // matches the code stream order exactly, so each row is a linear
+        // scan `acc += lut[idx·K + code[idx]]`.
+        let per_row = self.n_groups() * self.n_codebooks;
+        if let Some(bytes) = &self.codes_bytes {
+            // §Perf k4/k5: byte-aligned codes + 4 independent accumulators
+            // (breaks the load→add latency chain; ~4 loads in flight).
+            for i in 0..self.d_out {
+                let row = &bytes[i * per_row..(i + 1) * per_row];
+                let mut a = [0.0f32; 8];
+                let chunks = per_row / 8;
+                for cidx in 0..chunks {
+                    let idx = cidx * 8;
+                    // 8 independent gather→add chains keep several L2 loads
+                    // in flight (§Perf k5).
+                    for u in 0..8 {
+                        a[u] += lut[(idx + u) * k + row[idx + u] as usize];
+                    }
+                }
+                let mut acc: f32 = a.iter().sum();
+                for idx in chunks * 8..per_row {
+                    acc += lut[idx * k + row[idx] as usize];
+                }
+                y[i] = acc * self.scales[i];
+            }
+        } else {
+            let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
+            for i in 0..self.d_out {
+                let mut acc = 0.0f32;
+                for idx in 0..per_row {
+                    let c = reader.next() as usize;
+                    acc += lut[idx * k + c];
+                }
+                y[i] = acc * self.scales[i];
+            }
+        }
+    }
+
+    /// Heuristic dispatch between the two kernels.
+    pub fn matvec_auto(&self, x: &[f32], lut: &mut Vec<f32>, y: &mut [f32]) {
+        // LUT precompute is d_in·M·K FLOPs; it amortizes when d_out·g ≫ M·K.
+        if self.n_codebooks * self.codebook_size() * 2 <= self.d_out * self.group {
+            lut.resize(self.lut_len(), 0.0);
+            self.matvec_lut(x, lut, y);
+        } else {
+            self.matvec_decode(x, y);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::format::{random_weight, AqlmShape};
+    use crate::tensor::ops::gemv;
+    use crate::util::rng::Rng;
+
+    fn check_kernels(d_out: usize, d_in: usize, shape: AqlmShape, seed: u64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w = random_weight(d_out, d_in, shape, &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        let dense = w.decode();
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y_ref = vec![0.0f32; d_out];
+        gemv(&dense, &x, &mut y_ref);
+
+        let mut y_dec = vec![0.0f32; d_out];
+        packed.matvec_decode(&x, &mut y_dec);
+        let mut lut = vec![0.0f32; packed.lut_len()];
+        let mut y_lut = vec![0.0f32; d_out];
+        packed.matvec_lut(&x, &mut lut, &mut y_lut);
+        let mut y_auto = vec![0.0f32; d_out];
+        let mut scratch = Vec::new();
+        packed.matvec_auto(&x, &mut scratch, &mut y_auto);
+
+        for i in 0..d_out {
+            let tol = 1e-3 * (1.0 + y_ref[i].abs());
+            assert!((y_dec[i] - y_ref[i]).abs() < tol, "decode row {i}: {} vs {}", y_dec[i], y_ref[i]);
+            assert!((y_lut[i] - y_ref[i]).abs() < tol, "lut row {i}");
+            assert!((y_auto[i] - y_ref[i]).abs() < tol, "auto row {i}");
+        }
+    }
+
+    #[test]
+    fn kernels_match_dense_2x8() {
+        check_kernels(48, 64, AqlmShape::new(2, 8, 8), 1);
+    }
+
+    #[test]
+    fn kernels_match_dense_1x10() {
+        check_kernels(32, 64, AqlmShape::new(1, 10, 8), 2);
+    }
+
+    #[test]
+    fn kernels_match_dense_4x8_g16() {
+        check_kernels(64, 64, AqlmShape::new(4, 8, 16), 3);
+    }
+
+    #[test]
+    fn kernels_match_dense_odd_bits() {
+        check_kernels(24, 48, AqlmShape::new(3, 5, 4), 4);
+    }
+
+    #[test]
+    fn deployed_bytes_reflect_packing() {
+        let mut rng = Rng::seed_from_u64(5);
+        let w = random_weight(64, 128, AqlmShape::new(2, 8, 8), &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        // codes: 64 rows * 16 groups * 2 codebooks * 8 bits = 16384 bits = 2048 B
+        let code_bytes = (64 * 16 * 2 * 8 + 63) / 64 * 8;
+        assert_eq!(packed.packed_codes.len() * 8, code_bytes);
+        assert!(packed.deployed_bytes() < 64 * 128 * 4, "must be smaller than f32 dense");
+    }
+}

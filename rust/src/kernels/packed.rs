@@ -1,0 +1,122 @@
+//! Bit-packing of code indices.
+//!
+//! The accuracy-side [`AqlmWeight`](super::format::AqlmWeight) keeps codes
+//! as `u16` for simplicity; the *deployed* format packs them at exactly `B`
+//! bits each (this is what the Appendix-H size accounting assumes and what
+//! the streaming kernels read). Packing is little-endian within a `u64`
+//! word stream.
+
+/// Pack `values` (each `< 2^bits`) at `bits` bits each.
+pub fn pack(values: &[u16], bits: usize) -> Vec<u64> {
+    assert!((1..=16).contains(&bits));
+    let total_bits = values.len() * bits;
+    let mut out = vec![0u64; total_bits.div_ceil(64)];
+    let mut bitpos = 0usize;
+    for &v in values {
+        debug_assert!((v as u32) < (1u32 << bits), "value {v} exceeds {bits} bits");
+        let word = bitpos / 64;
+        let off = bitpos % 64;
+        out[word] |= (v as u64) << off;
+        if off + bits > 64 {
+            out[word + 1] |= (v as u64) >> (64 - off);
+        }
+        bitpos += bits;
+    }
+    out
+}
+
+/// Unpack `count` values of `bits` bits each.
+pub fn unpack(packed: &[u64], bits: usize, count: usize) -> Vec<u16> {
+    let mut out = Vec::with_capacity(count);
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let word = bitpos / 64;
+        let off = bitpos % 64;
+        let mut v = packed[word] >> off;
+        if off + bits > 64 {
+            v |= packed[word + 1] << (64 - off);
+        }
+        out.push((v & mask) as u16);
+        bitpos += bits;
+    }
+    out
+}
+
+/// A reader that streams `bits`-wide values sequentially (kernel hot loop).
+pub struct BitReader<'a> {
+    packed: &'a [u64],
+    bits: usize,
+    mask: u64,
+    bitpos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(packed: &'a [u64], bits: usize) -> BitReader<'a> {
+        BitReader { packed, bits, mask: (1u64 << bits) - 1, bitpos: 0 }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u16 {
+        let word = self.bitpos / 64;
+        let off = self.bitpos % 64;
+        let mut v = self.packed[word] >> off;
+        if off + self.bits > 64 {
+            v |= self.packed[word + 1] << (64 - off);
+        }
+        self.bitpos += self.bits;
+        (v & self.mask) as u16
+    }
+
+    /// Jump to an absolute value index.
+    #[inline]
+    pub fn seek(&mut self, index: usize) {
+        self.bitpos = index * self.bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_various_widths() {
+        let mut rng = Rng::seed_from_u64(1);
+        for bits in 1..=16 {
+            let n = 100 + rng.below(100);
+            let vals: Vec<u16> = (0..n).map(|_| rng.below(1 << bits) as u16).collect();
+            let packed = pack(&vals, bits);
+            assert_eq!(unpack(&packed, bits, n), vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packed_size_is_tight() {
+        let vals = vec![1u16; 100];
+        let packed = pack(&vals, 3);
+        assert_eq!(packed.len(), (100 * 3 + 63) / 64);
+    }
+
+    #[test]
+    fn bitreader_streams_and_seeks() {
+        let mut rng = Rng::seed_from_u64(2);
+        let vals: Vec<u16> = (0..257).map(|_| rng.below(1 << 11) as u16).collect();
+        let packed = pack(&vals, 11);
+        let mut r = BitReader::new(&packed, 11);
+        for &v in &vals {
+            assert_eq!(r.next(), v);
+        }
+        r.seek(100);
+        assert_eq!(r.next(), vals[100]);
+        assert_eq!(r.next(), vals[101]);
+    }
+
+    #[test]
+    fn cross_word_boundaries() {
+        // 13-bit values straddle u64 boundaries frequently.
+        let vals: Vec<u16> = (0..64).map(|i| ((i * 523) % 8192) as u16).collect();
+        let packed = pack(&vals, 13);
+        assert_eq!(unpack(&packed, 13, 64), vals);
+    }
+}

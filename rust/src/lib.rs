@@ -1,0 +1,46 @@
+//! # AQLM — Additive Quantization of Language Models
+//!
+//! A full-system reproduction of *"Extreme Compression of Large Language
+//! Models via Additive Quantization"* (Egiazarian et al., ICML 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1 (Pallas, build-time)**: the AQLM decode-and-matmul kernel in
+//!   `python/compile/kernels/`, checked against a pure-jnp oracle.
+//! - **Layer 2 (JAX, build-time)**: LLaMA-architecture forward / loss / train
+//!   step in `python/compile/model.py`, AOT-lowered to HLO text artifacts.
+//! - **Layer 3 (this crate, run-time)**: the quantization pipeline
+//!   (Algorithm 1 of the paper), baselines, fast CPU inference kernels for
+//!   the AQLM format, a generation server, the evaluation harness, and a
+//!   PJRT runtime that loads and executes the AOT artifacts. Python is never
+//!   on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use aqlm::nn::config::ModelConfig;
+//! use aqlm::nn::model::Model;
+//! use aqlm::util::rng::Rng;
+//!
+//! let cfg = ModelConfig::nano();
+//! let mut rng = Rng::seed_from_u64(0);
+//! let model = Model::init(&cfg, &mut rng);
+//! // ... calibrate + quantize via aqlm::coordinator::pipeline ...
+//! # let _ = model;
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the harness that regenerates every table and figure of the paper.
+
+pub mod util;
+pub mod tensor;
+pub mod data;
+pub mod nn;
+pub mod quant;
+pub mod kernels;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

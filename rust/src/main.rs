@@ -1,0 +1,251 @@
+//! `aqlm` — command-line launcher for the AQLM reproduction.
+//!
+//! Subcommands:
+//!   train      train a base model preset on TinyLang and save a checkpoint
+//!   quantize   quantize a checkpoint with AQLM or a baseline method
+//!   eval       perplexity + zero-shot evaluation of a checkpoint
+//!   generate   sample text from a checkpoint
+//!   serve      demo of the continuous-batching generation server
+//!   table      regenerate one paper table/figure (t1..t16, f1, f4, f6, f7)
+//!   tables     regenerate all of them
+//!   list       list experiment ids
+
+use aqlm::bench::{self, Profile, Workspace};
+use aqlm::coordinator::pipeline::Method;
+use aqlm::coordinator::shapes::choose_shape;
+use aqlm::coordinator::train::{train_native, TrainConfig};
+use aqlm::data::dataset::{DataBundle, DataSizes};
+use aqlm::kernels::format::AqlmShape;
+use aqlm::nn::config::ModelConfig;
+use aqlm::nn::model::Model;
+use aqlm::quant::aqlm::blockft::{BlockFtConfig, FtScope};
+use aqlm::quant::aqlm::layer::AqlmLayerConfig;
+use aqlm::quant::gptq::GptqConfig;
+use aqlm::quant::quip::QuipConfig;
+use aqlm::quant::rtn::RtnConfig;
+use aqlm::quant::spqr::SpqrConfig;
+use aqlm::util::cli::Args;
+use aqlm::util::rng::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("table") => cmd_table(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("list") => {
+            for id in bench::ALL_IDS {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: aqlm <train|quantize|eval|generate|serve|table|tables|list> [--options]"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn profile(args: &Args) -> Profile {
+    let mut p = if args.flag("full") { Profile::full() } else { Profile::fast() };
+    p.seed = args.u64_or("seed", p.seed);
+    p
+}
+
+fn bundle(args: &Args) -> DataBundle {
+    let p = profile(args);
+    DataBundle::generate(
+        p.seed,
+        DataSizes {
+            train_tokens: 300_000,
+            eval_tokens: args.usize_or("eval-tokens", 6_144),
+            calib_tokens: 65_536,
+            seq_len: args.usize_or("seq", 64),
+        },
+    )
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let preset = args.str_or("model", "nano");
+    let out = PathBuf::from(args.str_or("out", &format!("runs/{preset}.ckpt")));
+    let b = bundle(args);
+    let mut cfg = ModelConfig::preset(&preset)?;
+    cfg.vocab_size = b.tokenizer.padded_vocab_size(16);
+    let tcfg = TrainConfig {
+        steps: args.usize_or("steps", 260),
+        batch: args.usize_or("batch", 4),
+        seq: args.usize_or("seq", 64),
+        lr: args.f64_or("lr", 3e-3) as f32,
+        log_every: args.usize_or("log-every", 25),
+    };
+    let mut rng = Rng::seed_from_u64(args.u64_or("seed", 42));
+    let mut model = Model::init(&cfg, &mut rng);
+    eprintln!("training {preset}: {} params", cfg.param_count());
+    train_native(&mut model, &b.train, tcfg, &mut rng, true);
+    model.save(&out)?;
+    eprintln!("saved {}", out.display());
+    Ok(())
+}
+
+fn parse_method(args: &Args, cfg: &ModelConfig) -> anyhow::Result<Method> {
+    let bits = args.f64_or("bits", 2.0);
+    let seed = args.u64_or("seed", 42);
+    Ok(match args.str_or("method", "aqlm").as_str() {
+        "aqlm" => {
+            let shape = match args.get("shape") {
+                Some(s) => AqlmShape::parse(s)?,
+                None => choose_shape(cfg, bits, 8),
+            };
+            let layer = if args.flag("fast") {
+                AqlmLayerConfig::fast(shape)
+            } else {
+                AqlmLayerConfig::new(shape)
+            };
+            let scope = if args.flag("no-ft") { FtScope::None } else { FtScope::Full };
+            Method::Aqlm {
+                layer,
+                block_ft: BlockFtConfig {
+                    steps: args.usize_or("ft-steps", 30),
+                    lr: 1e-3,
+                    tol: 1e-5,
+                    scope,
+                },
+            }
+        }
+        "rtn" => Method::Rtn(RtnConfig::new(bits as usize, args.usize_or("group", 32))),
+        "gptq" => Method::Gptq { cfg: GptqConfig::paper(bits as usize), block_tune: None },
+        "gptq-tuned" => Method::Gptq {
+            cfg: GptqConfig::grouped(bits as usize, args.usize_or("group", 16)),
+            block_tune: Some(BlockFtConfig::default()),
+        },
+        "spqr" => Method::Spqr(SpqrConfig::paper(bits as usize)),
+        "quip" => Method::Quip(QuipConfig { bits: bits as usize, seed }),
+        other => anyhow::bail!("unknown method '{other}'"),
+    })
+}
+
+fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let out = PathBuf::from(args.str_or("out", &format!("{}.q", ckpt.display())));
+    let mut model = Model::load(&ckpt)?;
+    let method = parse_method(args, &model.cfg)?;
+    let b = bundle(args);
+    let seq = args.usize_or("seq", 64);
+    let n_seqs = args.usize_or("calib-seqs", 8);
+    let mut rng = Rng::seed_from_u64(args.u64_or("seed", 42));
+    let (calib, _) = aqlm::data::dataset::TokenDataset {
+        tokens: b.calib.tokens.clone(),
+        seq_len: seq,
+    }
+    .sample_batch(n_seqs, &mut rng);
+    eprintln!("quantizing {} with {}", ckpt.display(), method.name());
+    let report = aqlm::coordinator::pipeline::quantize_model(
+        &mut model, &calib, n_seqs, seq, &method, &mut rng,
+    )?;
+    eprintln!(
+        "avg bits: {:.3}  ({} layers, {:.1}s)",
+        report.avg_bits,
+        report.layers.len(),
+        report.seconds
+    );
+    model.save(&out)?;
+    eprintln!("saved {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let mut model = Model::load(&ckpt)?;
+    let ws = Workspace::new(profile(args));
+    let row = ws.eval(&mut model);
+    let mut t = aqlm::eval::report::Table::new(
+        &format!("eval {}", ckpt.display()),
+        &["Wiki2↓", "C4↓", "WinoGrande↑", "PiQA↑", "HellaSwag↑", "ArcE↑", "ArcC↑", "Avg↑", "bytes"],
+    );
+    let mut cells = vec![format!("{:.3}", row.wiki_ppl), format!("{:.3}", row.c4_ppl)];
+    cells.extend(row.tasks.iter().map(|(_, a)| format!("{a:.2}")));
+    cells.push(format!("{:.2}", row.avg_acc));
+    cells.push(row.weight_bytes.to_string());
+    t.row(cells);
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let mut model = Model::load(&ckpt)?;
+    let b = bundle(args);
+    let prompt_text = args.str_or("prompt", "the small cat");
+    let mut prompt = vec![aqlm::data::tokenizer::BOS];
+    prompt.extend(b.tokenizer.encode(&prompt_text));
+    let mut rng = Rng::seed_from_u64(args.u64_or("seed", 0));
+    let out = model.generate(
+        &prompt,
+        args.usize_or("max-new", 24),
+        args.f64_or("temp", 0.0) as f32,
+        &mut rng,
+    );
+    println!("{}", b.tokenizer.decode(&out));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use aqlm::coordinator::server::{Server, ServerConfig};
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let model = Model::load(&ckpt)?;
+    let b = bundle(args);
+    let server =
+        Server::start(model, ServerConfig { max_batch: args.usize_or("max-batch", 4), seed: 0 });
+    let n = args.usize_or("requests", 8);
+    eprintln!("submitting {n} demo requests...");
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let mut prompt = vec![aqlm::data::tokenizer::BOS];
+            prompt.extend(b.tokenizer.encode("the"));
+            server.submit(prompt, 16 + (i % 3) * 8, 0.8)
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        println!("[{i}] ({:.0} ms) {}", resp.latency_s * 1e3, b.tokenizer.decode(&resp.tokens));
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests, {} tokens, {:.1} tok/s, mean latency {:.0} ms",
+        stats.requests,
+        stats.tokens_generated,
+        stats.tokens_per_second(),
+        stats.mean_latency_s() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .get("id")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow::anyhow!("need --id <t1..t16|f1|f4|f6|f7> or a positional id"))?;
+    let mut ws = Workspace::new(profile(args));
+    bench::run(&id, &mut ws)
+}
+
+fn cmd_tables(args: &Args) -> anyhow::Result<()> {
+    let mut ws = Workspace::new(profile(args));
+    for id in bench::ALL_IDS {
+        eprintln!("=== {id} ===");
+        bench::run(id, &mut ws)?;
+    }
+    Ok(())
+}

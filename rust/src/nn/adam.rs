@@ -1,0 +1,122 @@
+//! Adam optimizer (Kingma & Ba 2015) over flat parameter slices.
+//!
+//! The paper uses Adam with lr 1e-4 and β=(0.90, 0.95) for codebook updates
+//! (§3.3) and block fine-tuning (App. C), and lr 1e-5 for end-to-end KD
+//! (App. A); those are this module's defaults via the two constructors.
+
+/// Per-tensor Adam state.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> AdamState {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n] }
+    }
+}
+
+/// Adam hyperparameters + step counter.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub t: u64,
+}
+
+impl Adam {
+    /// Paper §3.3 / App. C configuration (codebooks & block fine-tuning).
+    pub fn paper_calibration(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.90, beta2: 0.95, eps: 1e-8, t: 0 }
+    }
+
+    /// App. A end-to-end fine-tuning configuration.
+    pub fn paper_e2e() -> Adam {
+        Adam { lr: 1e-5, beta1: 0.90, beta2: 0.95, eps: 1e-8, t: 0 }
+    }
+
+    /// Standard training configuration for the base models.
+    pub fn training(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0 }
+    }
+
+    /// Advance the shared step counter. Call once per optimization step,
+    /// before updating the parameter group.
+    pub fn next_step(&mut self) {
+        self.t += 1;
+    }
+
+    /// Update one parameter slice with its gradient.
+    pub fn update(&self, param: &mut [f32], grad: &[f32], state: &mut AdamState) {
+        debug_assert_eq!(param.len(), grad.len());
+        debug_assert_eq!(param.len(), state.m.len());
+        let t = self.t.max(1) as i32;
+        let bc1 = 1.0 - self.beta1.powi(t);
+        let bc2 = 1.0 - self.beta2.powi(t);
+        for i in 0..param.len() {
+            let g = grad[i];
+            state.m[i] = self.beta1 * state.m[i] + (1.0 - self.beta1) * g;
+            state.v[i] = self.beta2 * state.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = state.m[i] / bc1;
+            let vhat = state.v[i] / bc2;
+            param[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = sum (x_i - c_i)^2
+        let target = [3.0f32, -1.5, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut st = AdamState::new(3);
+        let mut opt = Adam::training(0.05);
+        for _ in 0..500 {
+            let grad: Vec<f32> = x.iter().zip(&target).map(|(&xi, &c)| 2.0 * (xi - c)).collect();
+            opt.next_step();
+            opt.update(&mut x, &grad, &mut st);
+        }
+        for (xi, c) in x.iter().zip(&target) {
+            assert!((xi - c).abs() < 1e-2, "{xi} vs {c}");
+        }
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // With bias correction, the first Adam step is ≈ lr * sign(g).
+        let mut x = vec![0.0f32];
+        let mut st = AdamState::new(1);
+        let mut opt = Adam::paper_calibration(1e-4);
+        opt.next_step();
+        opt.update(&mut x, &[0.3], &mut st);
+        assert!((x[0] + 1e-4).abs() < 1e-6, "step was {}", x[0]);
+    }
+
+    #[test]
+    fn paper_constructors_match_paper() {
+        let a = Adam::paper_calibration(1e-4);
+        assert_eq!((a.beta1, a.beta2), (0.90, 0.95));
+        let b = Adam::paper_e2e();
+        assert_eq!(b.lr, 1e-5);
+    }
+
+    #[test]
+    fn zero_grad_is_noop_after_warm_state() {
+        let mut x = vec![1.0f32];
+        let mut st = AdamState::new(1);
+        let mut opt = Adam::training(0.1);
+        // With zero gradients from the start, m and v stay zero.
+        for _ in 0..3 {
+            opt.next_step();
+            opt.update(&mut x, &[0.0], &mut st);
+        }
+        assert_eq!(x[0], 1.0);
+    }
+}

@@ -1,0 +1,706 @@
+//! Transformer block (pre-norm LLaMA layout): RMSNorm → multi-head
+//! attention with RoPE (+ optional GQA) → residual → RMSNorm → SwiGLU MLP
+//! (or MoE, see [`super::moe`]) → residual. Both the forward pass (with
+//! activation caching) and the full reverse-mode backward pass are
+//! implemented by hand; correctness is pinned by finite-difference tests
+//! here and at model level.
+
+use super::config::ModelConfig;
+use super::linear::{Linear, LinearGrad};
+use super::moe::{MoeCache, MoeGrads, MoeLayer};
+use super::rope::Rope;
+use crate::tensor::ops::{rmsnorm, silu, silu_grad, softmax_inplace};
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------- attention
+
+/// Attention projection weights.
+#[derive(Clone, Debug)]
+pub struct Attention {
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+}
+
+/// SwiGLU MLP weights.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub wg: Linear,
+    pub wu: Linear,
+    pub wd: Linear,
+}
+
+/// Feed-forward: dense MLP or mixture-of-experts.
+#[derive(Clone, Debug)]
+pub enum Ffn {
+    Dense(Mlp),
+    Moe(MoeLayer),
+}
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1: Vec<f32>,
+    pub attn: Attention,
+    pub ln2: Vec<f32>,
+    pub ffn: Ffn,
+}
+
+/// Cached activations of one block forward (training/backward path).
+pub struct BlockCache {
+    pub x_in: Tensor,
+    pub xn1: Tensor,
+    pub rinv1: Vec<f32>,
+    /// q/k/v after RoPE, shapes [N, H·dh] / [N, KV·dh] / [N, KV·dh].
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    /// Attention probabilities [B][H][S][S] flattened.
+    pub probs: Vec<f32>,
+    /// Concatenated head outputs [N, H·dh] (input to wo).
+    pub attn_concat: Tensor,
+    /// Residual stream after attention [N, d].
+    pub x_mid: Tensor,
+    pub xn2: Tensor,
+    pub rinv2: Vec<f32>,
+    pub ffn_cache: FfnCache,
+}
+
+/// MLP activations.
+pub struct MlpCache {
+    pub gate_pre: Tensor,
+    pub up: Tensor,
+    pub h: Tensor,
+}
+
+pub enum FfnCache {
+    Dense(MlpCache),
+    Moe(MoeCache),
+}
+
+/// Gradients for every parameter of a block.
+pub struct BlockGrads {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wq: LinearGrad,
+    pub wk: LinearGrad,
+    pub wv: LinearGrad,
+    pub wo: LinearGrad,
+    pub ffn: FfnGrads,
+}
+
+pub enum FfnGrads {
+    Dense { wg: LinearGrad, wu: LinearGrad, wd: LinearGrad },
+    Moe(MoeGrads),
+}
+
+/// RMSNorm forward over rows; returns normalized tensor + per-row 1/rms.
+pub fn rmsnorm_rows(x: &Tensor, gain: &[f32], eps: f32) -> (Tensor, Vec<f32>) {
+    let (n, d) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[n, d]);
+    let mut rinv = vec![0.0f32; n];
+    for i in 0..n {
+        rinv[i] = rmsnorm(x.row(i), gain, eps, out.row_mut(i));
+    }
+    (out, rinv)
+}
+
+/// RMSNorm backward. Returns (dx, dgain).
+pub fn rmsnorm_rows_backward(
+    x: &Tensor,
+    gain: &[f32],
+    rinv: &[f32],
+    dy: &Tensor,
+) -> (Tensor, Vec<f32>) {
+    let (n, d) = (x.rows(), x.cols());
+    let mut dx = Tensor::zeros(&[n, d]);
+    let mut dgain = vec![0.0f32; d];
+    for i in 0..n {
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let r = rinv[i];
+        // s = Σ_j dy_j g_j x_j
+        let mut s = 0.0f64;
+        for j in 0..d {
+            s += (dyr[j] * gain[j] * xr[j]) as f64;
+            dgain[j] += dyr[j] * xr[j] * r;
+        }
+        let coef = (r as f64).powi(3) * s / d as f64;
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            dxr[j] = dyr[j] * gain[j] * r - (coef as f32) * xr[j];
+        }
+    }
+    (dx, dgain)
+}
+
+/// SwiGLU MLP forward. Returns output and cache.
+pub fn mlp_forward(mlp: &mut Mlp, xn: &Tensor) -> (Tensor, MlpCache) {
+    let gate_pre = mlp.wg.forward(xn);
+    let up = mlp.wu.forward(xn);
+    let mut h = Tensor::zeros(&[xn.rows(), gate_pre.cols()]);
+    {
+        let hd = h.data_mut();
+        let gd = gate_pre.data();
+        let ud = up.data();
+        for i in 0..hd.len() {
+            hd[i] = silu(gd[i]) * ud[i];
+        }
+    }
+    let out = mlp.wd.forward(&h);
+    (out, MlpCache { gate_pre, up, h })
+}
+
+/// SwiGLU MLP backward: returns (dxn, grads).
+pub fn mlp_backward(
+    mlp: &mut Mlp,
+    xn: &Tensor,
+    cache: &MlpCache,
+    dout: &Tensor,
+) -> (Tensor, LinearGrad, LinearGrad, LinearGrad) {
+    let (dh, dwd) = mlp.wd.backward(&cache.h, dout);
+    let n = dh.len();
+    let mut dgate_pre = Tensor::zeros(&[dh.rows(), dh.cols()]);
+    let mut dup = Tensor::zeros(&[dh.rows(), dh.cols()]);
+    {
+        let dgp = dgate_pre.data_mut();
+        let dud = dup.data_mut();
+        let dhd = dh.data();
+        let gd = cache.gate_pre.data();
+        let ud = cache.up.data();
+        for i in 0..n {
+            dgp[i] = dhd[i] * ud[i] * silu_grad(gd[i]);
+            dud[i] = dhd[i] * silu(gd[i]);
+        }
+    }
+    let (dxn_g, dwg) = mlp.wg.backward(xn, &dgate_pre);
+    let (dxn_u, dwu) = mlp.wu.backward(xn, &dup);
+    let dxn = dxn_g.add(&dxn_u);
+    (dxn, dwg, dwu, dwd)
+}
+
+impl Block {
+    /// Forward over a batch. `x` is [B·S, d] row-major in (b, s) order.
+    /// Always returns the output; cache is built when `want_cache`.
+    pub fn forward(
+        &mut self,
+        x: &Tensor,
+        cfg: &ModelConfig,
+        batch: usize,
+        seq: usize,
+        rope: &Rope,
+        want_cache: bool,
+    ) -> (Tensor, Option<BlockCache>) {
+        let d = cfg.d_model;
+        let (h_cnt, kv_cnt, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let rep = cfg.kv_repeat();
+        debug_assert_eq!(x.shape(), &[batch * seq, d]);
+
+        // --- attention half ---
+        let (xn1, rinv1) = rmsnorm_rows(x, &self.ln1, cfg.norm_eps);
+        let mut q = self.attn.wq.forward(&xn1);
+        let mut k = self.attn.wk.forward(&xn1);
+        let v = self.attn.wv.forward(&xn1);
+        // RoPE per position.
+        for b in 0..batch {
+            for s in 0..seq {
+                let row = b * seq + s;
+                for hh in 0..h_cnt {
+                    rope.apply(&mut q.row_mut(row)[hh * dh..(hh + 1) * dh], s);
+                }
+                for hh in 0..kv_cnt {
+                    rope.apply(&mut k.row_mut(row)[hh * dh..(hh + 1) * dh], s);
+                }
+            }
+        }
+        // Scaled dot-product attention with causal mask, per (b, h).
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut probs = vec![0.0f32; batch * h_cnt * seq * seq];
+        let mut attn_concat = Tensor::zeros(&[batch * seq, h_cnt * dh]);
+        for b in 0..batch {
+            for hh in 0..h_cnt {
+                let kvh = hh / rep;
+                let pbase = (b * h_cnt + hh) * seq * seq;
+                for s in 0..seq {
+                    let qrow = &q.row(b * seq + s)[hh * dh..(hh + 1) * dh];
+                    let prow = &mut probs[pbase + s * seq..pbase + (s + 1) * seq];
+                    for t in 0..=s {
+                        let krow = &k.row(b * seq + t)[kvh * dh..(kvh + 1) * dh];
+                        prow[t] = crate::tensor::ops::dot(qrow, krow) * scale;
+                    }
+                    for t in s + 1..seq {
+                        prow[t] = f32::NEG_INFINITY;
+                    }
+                    softmax_inplace(&mut prow[..=s]);
+                    for t in s + 1..seq {
+                        prow[t] = 0.0;
+                    }
+                    // ctx = Σ_t p[t] · v[t]
+                    let out = &mut attn_concat.row_mut(b * seq + s)[hh * dh..(hh + 1) * dh];
+                    for t in 0..=s {
+                        let p = prow[t];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(b * seq + t)[kvh * dh..(kvh + 1) * dh];
+                        for u in 0..dh {
+                            out[u] += p * vrow[u];
+                        }
+                    }
+                }
+            }
+        }
+        let att_out = self.attn.wo.forward(&attn_concat);
+        let x_mid = x.add(&att_out);
+
+        // --- MLP half ---
+        let (xn2, rinv2) = rmsnorm_rows(&x_mid, &self.ln2, cfg.norm_eps);
+        let (ffn_out, ffn_cache) = match &mut self.ffn {
+            Ffn::Dense(mlp) => {
+                let (out, c) = mlp_forward(mlp, &xn2);
+                (out, FfnCache::Dense(c))
+            }
+            Ffn::Moe(moe) => {
+                let (out, c) = moe.forward(&xn2);
+                (out, FfnCache::Moe(c))
+            }
+        };
+        let y = x_mid.add(&ffn_out);
+
+        let cache = want_cache.then(|| BlockCache {
+            x_in: x.clone(),
+            xn1,
+            rinv1,
+            q,
+            k,
+            v,
+            probs,
+            attn_concat,
+            x_mid,
+            xn2,
+            rinv2,
+            ffn_cache,
+        });
+        (y, cache)
+    }
+
+    /// Full backward pass. Returns (dx, parameter grads).
+    pub fn backward(
+        &mut self,
+        cache: &BlockCache,
+        cfg: &ModelConfig,
+        batch: usize,
+        seq: usize,
+        rope: &Rope,
+        dy: &Tensor,
+    ) -> (Tensor, BlockGrads) {
+        let (h_cnt, kv_cnt, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let rep = cfg.kv_repeat();
+
+        // --- MLP half backward ---
+        // y = x_mid + ffn(xn2); dy flows to both branches.
+        let (dxn2, ffn_grads) = match (&mut self.ffn, &cache.ffn_cache) {
+            (Ffn::Dense(mlp), FfnCache::Dense(mc)) => {
+                let (dxn2, dwg, dwu, dwd) = mlp_backward(mlp, &cache.xn2, mc, dy);
+                (dxn2, FfnGrads::Dense { wg: dwg, wu: dwu, wd: dwd })
+            }
+            (Ffn::Moe(moe), FfnCache::Moe(mc)) => {
+                let (dxn2, grads) = moe.backward(&cache.xn2, mc, dy);
+                (dxn2, FfnGrads::Moe(grads))
+            }
+            _ => unreachable!("ffn/cache variant mismatch"),
+        };
+        let (dx_mid_norm, dln2) =
+            rmsnorm_rows_backward(&cache.x_mid, &self.ln2, &cache.rinv2, &dxn2);
+        let dx_mid = dy.add(&dx_mid_norm);
+
+        // --- attention half backward ---
+        let (dattn_concat, dwo) = self.attn.wo.backward(&cache.attn_concat, &dx_mid);
+        let mut dq = Tensor::zeros(&[batch * seq, h_cnt * dh]);
+        let mut dk = Tensor::zeros(&[batch * seq, kv_cnt * dh]);
+        let mut dv = Tensor::zeros(&[batch * seq, kv_cnt * dh]);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut dp = vec![0.0f32; seq];
+        for b in 0..batch {
+            for hh in 0..h_cnt {
+                let kvh = hh / rep;
+                let pbase = (b * h_cnt + hh) * seq * seq;
+                for s in 0..seq {
+                    let row = b * seq + s;
+                    let dctx = &dattn_concat.row(row)[hh * dh..(hh + 1) * dh];
+                    let prow = &cache.probs[pbase + s * seq..pbase + (s + 1) * seq];
+                    // dp[t] = dctx · v[t]; dv[t] += p[t] · dctx
+                    for t in 0..=s {
+                        let vrow = &cache.v.row(b * seq + t)[kvh * dh..(kvh + 1) * dh];
+                        dp[t] = crate::tensor::ops::dot(dctx, vrow);
+                    }
+                    {
+                        // softmax backward: ds[t] = p[t](dp[t] − Σ_u p[u]dp[u])
+                        let mut inner = 0.0f64;
+                        for t in 0..=s {
+                            inner += (prow[t] * dp[t]) as f64;
+                        }
+                        for t in 0..=s {
+                            dp[t] = prow[t] * (dp[t] - inner as f32);
+                        }
+                    }
+                    // accumulate dv, dq, dk
+                    for t in 0..=s {
+                        let p = prow[t];
+                        let ds = dp[t] * scale;
+                        let vdst = &mut dv.row_mut(b * seq + t)[kvh * dh..(kvh + 1) * dh];
+                        let dctx2 = &dattn_concat.row(row)[hh * dh..(hh + 1) * dh];
+                        for u in 0..dh {
+                            vdst[u] += p * dctx2[u];
+                        }
+                        if ds != 0.0 {
+                            let krow = &cache.k.row(b * seq + t)[kvh * dh..(kvh + 1) * dh];
+                            let qrow = &cache.q.row(row)[hh * dh..(hh + 1) * dh];
+                            let qdst = &mut dq.row_mut(row)[hh * dh..(hh + 1) * dh];
+                            for u in 0..dh {
+                                qdst[u] += ds * krow[u];
+                            }
+                            let kdst = &mut dk.row_mut(b * seq + t)[kvh * dh..(kvh + 1) * dh];
+                            for u in 0..dh {
+                                kdst[u] += ds * qrow[u];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // RoPE backward = inverse rotation.
+        for b in 0..batch {
+            for s in 0..seq {
+                let row = b * seq + s;
+                for hh in 0..h_cnt {
+                    rope.apply_inverse(&mut dq.row_mut(row)[hh * dh..(hh + 1) * dh], s);
+                }
+                for hh in 0..kv_cnt {
+                    rope.apply_inverse(&mut dk.row_mut(row)[hh * dh..(hh + 1) * dh], s);
+                }
+            }
+        }
+        let (dxn1_q, dwq) = self.attn.wq.backward(&cache.xn1, &dq);
+        let (dxn1_k, dwk) = self.attn.wk.backward(&cache.xn1, &dk);
+        let (dxn1_v, dwv) = self.attn.wv.backward(&cache.xn1, &dv);
+        let mut dxn1 = dxn1_q;
+        dxn1.add_assign(&dxn1_k);
+        dxn1.add_assign(&dxn1_v);
+        let (dx_norm, dln1) = rmsnorm_rows_backward(&cache.x_in, &self.ln1, &cache.rinv1, &dxn1);
+        let dx = dx_mid.add(&dx_norm);
+
+        (dx, BlockGrads { ln1: dln1, ln2: dln2, wq: dwq, wk: dwk, wv: dwv, wo: dwo, ffn: ffn_grads })
+    }
+
+    /// All linear layers of this block, in the paper's quantization order,
+    /// with stable names (`wq`, `wk`, `wv`, `wo`, `wg`, `wu`, `wd`, or
+    /// `e{i}.wg` etc. for MoE experts).
+    pub fn linears_mut(&mut self) -> Vec<(String, &mut Linear)> {
+        let mut out: Vec<(String, &mut Linear)> = vec![
+            ("wq".to_string(), &mut self.attn.wq),
+            ("wk".to_string(), &mut self.attn.wk),
+            ("wv".to_string(), &mut self.attn.wv),
+            ("wo".to_string(), &mut self.attn.wo),
+        ];
+        match &mut self.ffn {
+            Ffn::Dense(mlp) => {
+                out.push(("wg".to_string(), &mut mlp.wg));
+                out.push(("wu".to_string(), &mut mlp.wu));
+                out.push(("wd".to_string(), &mut mlp.wd));
+            }
+            Ffn::Moe(moe) => {
+                for (i, e) in moe.experts.iter_mut().enumerate() {
+                    out.push((format!("e{i}.wg"), &mut e.wg));
+                    out.push((format!("e{i}.wu"), &mut e.wu));
+                    out.push((format!("e{i}.wd"), &mut e.wd));
+                }
+            }
+        }
+        out
+    }
+
+    /// Single-token decode step with KV cache (generation hot path).
+    /// `x` is the residual stream [d]; returns the block output [d].
+    pub fn decode_step(
+        &mut self,
+        x: &[f32],
+        cfg: &ModelConfig,
+        pos: usize,
+        rope: &Rope,
+        kv: &mut super::kvcache::LayerKvCache,
+        lut_scratch: &mut Vec<f32>,
+    ) -> Vec<f32> {
+        let d = cfg.d_model;
+        let (h_cnt, kv_cnt, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let rep = cfg.kv_repeat();
+        let mut xn1 = vec![0.0f32; d];
+        rmsnorm(x, &self.ln1, cfg.norm_eps, &mut xn1);
+        let mut q = vec![0.0f32; h_cnt * dh];
+        let mut k = vec![0.0f32; kv_cnt * dh];
+        let mut v = vec![0.0f32; kv_cnt * dh];
+        self.attn.wq.matvec(&xn1, &mut q, lut_scratch);
+        self.attn.wk.matvec(&xn1, &mut k, lut_scratch);
+        self.attn.wv.matvec(&xn1, &mut v, lut_scratch);
+        for hh in 0..h_cnt {
+            rope.apply(&mut q[hh * dh..(hh + 1) * dh], pos);
+        }
+        for hh in 0..kv_cnt {
+            rope.apply(&mut k[hh * dh..(hh + 1) * dh], pos);
+        }
+        kv.append(&k, &v);
+        let t_len = kv.len;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = vec![0.0f32; h_cnt * dh];
+        let mut scores = vec![0.0f32; t_len];
+        for hh in 0..h_cnt {
+            let kvh = hh / rep;
+            let qrow = &q[hh * dh..(hh + 1) * dh];
+            for t in 0..t_len {
+                scores[t] = crate::tensor::ops::dot(qrow, kv.k_at(kvh, t)) * scale;
+            }
+            softmax_inplace(&mut scores);
+            let out = &mut ctx[hh * dh..(hh + 1) * dh];
+            for t in 0..t_len {
+                let p = scores[t];
+                let vrow = kv.v_at(kvh, t);
+                for u in 0..dh {
+                    out[u] += p * vrow[u];
+                }
+            }
+        }
+        let mut att_out = vec![0.0f32; d];
+        self.attn.wo.matvec(&ctx, &mut att_out, lut_scratch);
+        let x_mid: Vec<f32> = x.iter().zip(&att_out).map(|(a, b)| a + b).collect();
+        let mut xn2 = vec![0.0f32; d];
+        rmsnorm(&x_mid, &self.ln2, cfg.norm_eps, &mut xn2);
+        let ffn_out = match &mut self.ffn {
+            Ffn::Dense(mlp) => mlp_decode_step(mlp, &xn2, lut_scratch),
+            Ffn::Moe(moe) => moe.decode_step(&xn2, lut_scratch),
+        };
+        x_mid.iter().zip(&ffn_out).map(|(a, b)| a + b).collect()
+    }
+}
+
+/// Single-vector SwiGLU MLP (decode path).
+pub fn mlp_decode_step(mlp: &mut Mlp, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+    let ff = mlp.wg.d_out();
+    let mut gate = vec![0.0f32; ff];
+    let mut up = vec![0.0f32; ff];
+    mlp.wg.matvec(xn, &mut gate, lut_scratch);
+    mlp.wu.matvec(xn, &mut up, lut_scratch);
+    for i in 0..ff {
+        gate[i] = silu(gate[i]) * up[i];
+    }
+    let mut out = vec![0.0f32; mlp.wd.d_out()];
+    mlp.wd.matvec(&gate, &mut out, lut_scratch);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::Model;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut c = ModelConfig::nano();
+        c.d_model = 16;
+        c.n_heads = 2;
+        c.n_kv_heads = 2;
+        c.d_ff = 24;
+        c.max_seq = 8;
+        c
+    }
+
+    fn make_block(cfg: &ModelConfig, rng: &mut Rng) -> Block {
+        Model::init_block(cfg, rng)
+    }
+
+    #[test]
+    fn rmsnorm_rows_backward_finite_diff() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let gain: Vec<f32> = (0..8).map(|_| 0.5 + rng.f32()).collect();
+        let dy = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let (xn, rinv) = rmsnorm_rows(&x, &gain, 1e-5);
+        let _ = xn;
+        let (dx, dgain) = rmsnorm_rows_backward(&x, &gain, &rinv, &dy);
+        let loss = |x: &Tensor, gain: &[f32]| {
+            let (out, _) = rmsnorm_rows(x, gain, 1e-5);
+            out.dot(&dy)
+        };
+        let h = 1e-3f32;
+        for &(i, j) in &[(0usize, 0usize), (1, 3), (2, 7)] {
+            let mut xp = x.clone();
+            xp.set2(i, j, xp.at2(i, j) + h);
+            let mut xm = x.clone();
+            xm.set2(i, j, xm.at2(i, j) - h);
+            let fd = ((loss(&xp, &gain) - loss(&xm, &gain)) / (2.0 * h as f64)) as f32;
+            assert!((dx.at2(i, j) - fd).abs() < 2e-3, "dx({i},{j}): {} vs {fd}", dx.at2(i, j));
+        }
+        for j in [0usize, 4, 7] {
+            let mut gp = gain.clone();
+            gp[j] += h;
+            let mut gm = gain.clone();
+            gm[j] -= h;
+            let fd = ((loss(&x, &gp) - loss(&x, &gm)) / (2.0 * h as f64)) as f32;
+            assert!((dgain[j] - fd).abs() < 2e-3, "dgain[{j}]: {} vs {fd}", dgain[j]);
+        }
+    }
+
+    #[test]
+    fn block_forward_shapes_and_determinism() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(2);
+        let mut block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[2 * 4, cfg.d_model], 1.0, &mut rng);
+        let (y1, c) = block.forward(&x, &cfg, 2, 4, &rope, true);
+        let (y2, _) = block.forward(&x, &cfg, 2, 4, &rope, false);
+        assert_eq!(y1.shape(), &[8, 16]);
+        assert!(y1.allclose(&y2, 1e-6));
+        assert!(c.is_some());
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_affect_past() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(3);
+        let mut block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x1 = Tensor::randn(&[4, cfg.d_model], 1.0, &mut rng);
+        let mut x2 = x1.clone();
+        // Perturb the last position only.
+        for v in x2.row_mut(3) {
+            *v += 1.0;
+        }
+        let (y1, _) = block.forward(&x1, &cfg, 1, 4, &rope, false);
+        let (y2, _) = block.forward(&x2, &cfg, 1, 4, &rope, false);
+        for s in 0..3 {
+            for j in 0..cfg.d_model {
+                assert!(
+                    (y1.at2(s, j) - y2.at2(s, j)).abs() < 1e-6,
+                    "future leaked into position {s}"
+                );
+            }
+        }
+        // And the perturbed position itself must change.
+        assert!(!y1.row(3).iter().zip(y2.row(3)).all(|(a, b)| (a - b).abs() < 1e-6));
+    }
+
+    #[test]
+    fn block_backward_finite_diff_input_grad() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(4);
+        let mut block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[6, cfg.d_model], 0.5, &mut rng);
+        let dy = Tensor::randn(&[6, cfg.d_model], 1.0, &mut rng);
+        let (_, cache) = block.forward(&x, &cfg, 1, 6, &rope, true);
+        let (dx, _) = block.backward(cache.as_ref().unwrap(), &cfg, 1, 6, &rope, &dy);
+        let h = 1e-2f32;
+        for &(i, j) in &[(0usize, 0usize), (2, 5), (5, 15), (3, 8)] {
+            let mut xp = x.clone();
+            xp.set2(i, j, xp.at2(i, j) + h);
+            let mut xm = x.clone();
+            xm.set2(i, j, xm.at2(i, j) - h);
+            let (yp, _) = block.forward(&xp, &cfg, 1, 6, &rope, false);
+            let (ym, _) = block.forward(&xm, &cfg, 1, 6, &rope, false);
+            let fd = ((yp.dot(&dy) - ym.dot(&dy)) / (2.0 * h as f64)) as f32;
+            let rel = (dx.at2(i, j) - fd).abs() / (1.0 + fd.abs());
+            assert!(rel < 2e-2, "dx({i},{j}): {} vs {fd}", dx.at2(i, j));
+        }
+    }
+
+    #[test]
+    fn block_backward_finite_diff_weight_grad() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(5);
+        let mut block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[4, cfg.d_model], 0.5, &mut rng);
+        let dy = Tensor::randn(&[4, cfg.d_model], 1.0, &mut rng);
+        let (_, cache) = block.forward(&x, &cfg, 1, 4, &rope, true);
+        let (_, grads) = block.backward(cache.as_ref().unwrap(), &cfg, 1, 4, &rope, &dy);
+        let h = 1e-2f32;
+        // Check wq and wd (one attention, one MLP weight).
+        let checks: [(&str, usize, usize); 3] = [("wq", 1, 2), ("wd", 3, 7), ("wo", 0, 0)];
+        for (name, i, j) in checks {
+            let analytic = {
+                let g = match name {
+                    "wq" => &grads.wq,
+                    "wo" => &grads.wo,
+                    "wd" => match &grads.ffn {
+                        FfnGrads::Dense { wd, .. } => wd,
+                        _ => unreachable!(),
+                    },
+                    _ => unreachable!(),
+                };
+                match g {
+                    LinearGrad::Dense(t) => t.at2(i, j),
+                    _ => unreachable!(),
+                }
+            };
+            let perturb = |block: &mut Block, delta: f32| {
+                for (n, lin) in block.linears_mut() {
+                    if n == name {
+                        if let Linear::Dense(w) = lin {
+                            let v = w.at2(i, j) + delta;
+                            w.set2(i, j, v);
+                        }
+                    }
+                }
+            };
+            perturb(&mut block, h);
+            let (yp, _) = block.forward(&x, &cfg, 1, 4, &rope, false);
+            perturb(&mut block, -2.0 * h);
+            let (ym, _) = block.forward(&x, &cfg, 1, 4, &rope, false);
+            perturb(&mut block, h);
+            let fd = ((yp.dot(&dy) - ym.dot(&dy)) / (2.0 * h as f64)) as f32;
+            let rel = (analytic - fd).abs() / (1.0 + fd.abs());
+            assert!(rel < 2e-2, "{name}({i},{j}): {analytic} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn decode_matches_batched_forward() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(6);
+        let mut block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let seq = 5;
+        let x = Tensor::randn(&[seq, cfg.d_model], 1.0, &mut rng);
+        let (y_batch, _) = block.forward(&x, &cfg, 1, seq, &rope, false);
+        let mut kv = crate::nn::kvcache::LayerKvCache::new(cfg.n_kv_heads, cfg.head_dim(), cfg.max_seq);
+        let mut scratch = Vec::new();
+        for s in 0..seq {
+            let y = block.decode_step(x.row(s), &cfg, s, &rope, &mut kv, &mut scratch);
+            for j in 0..cfg.d_model {
+                assert!(
+                    (y[j] - y_batch.at2(s, j)).abs() < 1e-4,
+                    "pos {s} dim {j}: {} vs {}",
+                    y[j],
+                    y_batch.at2(s, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_block_runs_and_is_causal() {
+        let mut cfg = tiny_cfg();
+        cfg.n_kv_heads = 1; // 2 query heads share 1 kv head
+        let mut rng = Rng::seed_from_u64(7);
+        let mut block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[4, cfg.d_model], 1.0, &mut rng);
+        let (y, cache) = block.forward(&x, &cfg, 1, 4, &rope, true);
+        assert_eq!(y.shape(), &[4, cfg.d_model]);
+        // backward must run without shape panics
+        let dy = Tensor::randn(&[4, cfg.d_model], 1.0, &mut rng);
+        let (dx, _) = block.backward(cache.as_ref().unwrap(), &cfg, 1, 4, &rope, &dy);
+        assert_eq!(dx.shape(), &[4, cfg.d_model]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Model configuration and the scaled-down model family.
+//!
+//! The presets mirror the paper's evaluation models (DESIGN.md §4):
+//! `nano`/`tiny`/`small` are the LLAMA 2 7B/13B/70B analogs, `tiny-gqa`
+//! stands in for Mistral 7B (grouped-query attention), and `tiny-moe` for
+//! Mixtral 8x7B (top-2 routed experts).
+
+/// Architecture hyperparameters for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// KV heads (== n_heads for MHA; fewer for GQA).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+    /// 0 ⇒ dense MLP; otherwise number of routed experts.
+    pub n_experts: usize,
+    /// Experts active per token (Mixtral uses 2).
+    pub experts_top_k: usize,
+}
+
+impl ModelConfig {
+    fn base(name: &str, d_model: usize, n_layers: usize, n_heads: usize) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(),
+            d_model,
+            n_layers,
+            n_heads,
+            n_kv_heads: n_heads,
+            // SwiGLU sizing ~ 8/3 · d, rounded to a multiple of 16.
+            d_ff: (d_model * 8 / 3).div_ceil(16) * 16,
+            vocab_size: 160, // overwritten from the tokenizer at init
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+            n_experts: 0,
+            experts_top_k: 0,
+        }
+    }
+
+    /// LLAMA 2 7B analog (~0.3 M params at vocab 160). Sizes are chosen so
+    /// the whole evaluation grid (5 models × many bit widths × 6 methods)
+    /// runs on the single CPU core of this environment; the scaling
+    /// *family* — not absolute size — is what the Pareto analysis needs.
+    pub fn nano() -> ModelConfig {
+        Self::base("nano", 96, 2, 4)
+    }
+
+    /// LLAMA 2 13B analog (~1 M params).
+    pub fn tiny() -> ModelConfig {
+        Self::base("tiny", 160, 3, 4)
+    }
+
+    /// LLAMA 2 70B analog (~2.5 M params).
+    pub fn small() -> ModelConfig {
+        Self::base("small", 224, 4, 8)
+    }
+
+    /// Mistral 7B analog: tiny with grouped-query attention.
+    pub fn tiny_gqa() -> ModelConfig {
+        let mut c = Self::base("tiny-gqa", 160, 3, 4);
+        c.n_kv_heads = 2;
+        c
+    }
+
+    /// Mixtral 8x7B analog: tiny with 4 experts, top-2 routing.
+    pub fn tiny_moe() -> ModelConfig {
+        let mut c = Self::base("tiny-moe", 160, 3, 4);
+        c.n_experts = 4;
+        c.experts_top_k = 2;
+        c
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> anyhow::Result<ModelConfig> {
+        match name {
+            "nano" => Ok(Self::nano()),
+            "tiny" => Ok(Self::tiny()),
+            "small" => Ok(Self::small()),
+            "tiny-gqa" => Ok(Self::tiny_gqa()),
+            "tiny-moe" => Ok(Self::tiny_moe()),
+            other => anyhow::bail!("unknown model preset '{other}' (nano|tiny|small|tiny-gqa|tiny-moe)"),
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// KV heads repeat factor for GQA.
+    pub fn kv_repeat(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let attn = d * d // wq
+            + 2 * (self.n_kv_heads * self.head_dim()) * d // wk, wv
+            + d * d; // wo
+        let mlp_one = 3 * d * self.d_ff;
+        let mlp = if self.is_moe() {
+            self.n_experts * mlp_one + self.n_experts * d // + gate
+        } else {
+            mlp_one
+        };
+        let block = attn + mlp + 2 * d; // + 2 norms
+        self.vocab_size * d // embed
+            + self.n_layers * block
+            + d // final norm
+            + self.vocab_size * d // head
+    }
+
+    /// Parameters inside transformer blocks' linear layers — the ones the
+    /// paper quantizes and counts in "avg bits" (App. H).
+    pub fn quantizable_param_count(&self) -> usize {
+        let d = self.d_model;
+        let attn = 2 * d * d + 2 * (self.n_kv_heads * self.head_dim()) * d;
+        let mlp_one = 3 * d * self.d_ff;
+        let mlp = if self.is_moe() { self.n_experts * mlp_one } else { mlp_one };
+        self.n_layers * (attn + mlp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["nano", "tiny", "small", "tiny-gqa", "tiny-moe"] {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.name, name);
+            assert_eq!(c.d_model % c.n_heads, 0);
+            assert_eq!(c.n_heads % c.n_kv_heads, 0);
+            assert_eq!(c.d_ff % 16, 0);
+        }
+        assert!(ModelConfig::preset("7b").is_err());
+    }
+
+    #[test]
+    fn family_is_ordered_by_size() {
+        let sizes: Vec<usize> = ["nano", "tiny", "small"]
+            .iter()
+            .map(|n| ModelConfig::preset(n).unwrap().param_count())
+            .collect();
+        assert!(sizes[0] < sizes[1] && sizes[1] < sizes[2], "{sizes:?}");
+    }
+
+    #[test]
+    fn gqa_reduces_params() {
+        let mha = ModelConfig::tiny();
+        let gqa = ModelConfig::tiny_gqa();
+        assert!(gqa.param_count() < mha.param_count());
+        assert_eq!(gqa.kv_repeat(), 2);
+    }
+
+    #[test]
+    fn moe_increases_params() {
+        assert!(ModelConfig::tiny_moe().param_count() > ModelConfig::tiny().param_count());
+    }
+
+    #[test]
+    fn quantizable_subset() {
+        let c = ModelConfig::tiny();
+        assert!(c.quantizable_param_count() < c.param_count());
+        // Most of a block is quantizable.
+        assert!(c.quantizable_param_count() * 2 > c.param_count());
+    }
+}

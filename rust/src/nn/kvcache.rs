@@ -1,0 +1,91 @@
+//! Per-layer key/value cache for autoregressive generation.
+
+/// KV cache for one transformer block.
+#[derive(Clone, Debug)]
+pub struct LayerKvCache {
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    /// [n_kv_heads, max_seq, head_dim], filled up to `len`.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pub len: usize,
+}
+
+impl LayerKvCache {
+    pub fn new(n_kv_heads: usize, head_dim: usize, max_seq: usize) -> LayerKvCache {
+        LayerKvCache {
+            n_kv_heads,
+            head_dim,
+            max_seq,
+            k: vec![0.0; n_kv_heads * max_seq * head_dim],
+            v: vec![0.0; n_kv_heads * max_seq * head_dim],
+            len: 0,
+        }
+    }
+
+    /// Append one position's K/V for all kv-heads (k_new/v_new are
+    /// [n_kv_heads * head_dim], head-major).
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
+        assert!(self.len < self.max_seq, "kv cache overflow");
+        let (hd, ms) = (self.head_dim, self.max_seq);
+        for h in 0..self.n_kv_heads {
+            let dst = (h * ms + self.len) * hd;
+            self.k[dst..dst + hd].copy_from_slice(&k_new[h * hd..(h + 1) * hd]);
+            self.v[dst..dst + hd].copy_from_slice(&v_new[h * hd..(h + 1) * hd]);
+        }
+        self.len += 1;
+    }
+
+    /// K vector of head `h` at position `t`.
+    #[inline]
+    pub fn k_at(&self, h: usize, t: usize) -> &[f32] {
+        let base = (h * self.max_seq + t) * self.head_dim;
+        &self.k[base..base + self.head_dim]
+    }
+
+    #[inline]
+    pub fn v_at(&self, h: usize, t: usize) -> &[f32] {
+        let base = (h * self.max_seq + t) * self.head_dim;
+        &self.v[base..base + self.head_dim]
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read_back() {
+        let mut c = LayerKvCache::new(2, 3, 4);
+        c.append(&[1., 2., 3., 4., 5., 6.], &[9., 8., 7., 6., 5., 4.]);
+        c.append(&[10., 20., 30., 40., 50., 60.], &[0.; 6]);
+        assert_eq!(c.len, 2);
+        assert_eq!(c.k_at(0, 0), &[1., 2., 3.]);
+        assert_eq!(c.k_at(1, 0), &[4., 5., 6.]);
+        assert_eq!(c.k_at(1, 1), &[40., 50., 60.]);
+        assert_eq!(c.v_at(0, 0), &[9., 8., 7.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut c = LayerKvCache::new(1, 2, 1);
+        c.append(&[1., 2.], &[3., 4.]);
+        c.append(&[1., 2.], &[3., 4.]);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = LayerKvCache::new(1, 2, 2);
+        c.append(&[1., 2.], &[3., 4.]);
+        c.clear();
+        assert_eq!(c.len, 0);
+        c.append(&[5., 6.], &[7., 8.]);
+        assert_eq!(c.k_at(0, 0), &[5., 6.]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Linear layer abstraction: dense or AQLM-compressed weights behind a
+//! single forward/backward/matvec interface.
+//!
+//! - `Dense` — plain f32 `[out, in]` (training, FP baseline, and the
+//!   *dequantized* form of scalar baselines like RTN/GPTQ/SpQR/QuIP-lite,
+//!   which carry their size metadata separately).
+//! - `Aqlm` — the structured AQLM format. Forward decodes once into a
+//!   cached dense matrix (training/eval path); the generation path uses the
+//!   packed LUT kernels instead. Backward routes `dL/dŴ` through
+//!   [`AqlmWeight::backward_dw`], so codebooks and scales receive gradients
+//!   while codes stay frozen — the paper's fine-tuning parameterization.
+
+use crate::kernels::format::AqlmWeight;
+use crate::kernels::matvec::PackedAqlm;
+use crate::quant::groupint::GroupIntWeight;
+use crate::tensor::ops::{gemv, matmul_at, matmul_bt_into};
+use crate::tensor::Tensor;
+
+/// A linear layer's weights (no bias — LLaMA style).
+#[derive(Clone, Debug)]
+pub enum Linear {
+    Dense(Tensor),
+    Aqlm {
+        q: AqlmWeight,
+        /// Cached dense decode, refreshed lazily after parameter updates.
+        decoded: Option<Tensor>,
+        /// Cached packed form for the generation path.
+        packed: Option<PackedAqlm>,
+    },
+    /// Scalar grouped-integer quantization (RTN / GPTQ storage); scales are
+    /// tunable (Appendix L).
+    GroupInt { q: GroupIntWeight, decoded: Option<Tensor> },
+}
+
+/// Gradient of a loss w.r.t. a [`Linear`]'s parameters.
+#[derive(Clone, Debug)]
+pub enum LinearGrad {
+    Dense(Tensor),
+    Aqlm { d_codebooks: Vec<Tensor>, d_scales: Vec<f32> },
+    GroupInt { d_scales: Vec<f32> },
+}
+
+impl Linear {
+    pub fn dense(w: Tensor) -> Linear {
+        Linear::Dense(w)
+    }
+
+    pub fn aqlm(q: AqlmWeight) -> Linear {
+        Linear::Aqlm { q, decoded: None, packed: None }
+    }
+
+    pub fn group_int(q: GroupIntWeight) -> Linear {
+        Linear::GroupInt { q, decoded: None }
+    }
+
+    pub fn d_out(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.rows(),
+            Linear::Aqlm { q, .. } => q.d_out,
+            Linear::GroupInt { q, .. } => q.d_out,
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.cols(),
+            Linear::Aqlm { q, .. } => q.d_in,
+            Linear::GroupInt { q, .. } => q.d_in,
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, Linear::Dense(_))
+    }
+
+    /// Dense view of the weights (decoding and caching if quantized).
+    pub fn weight(&mut self) -> &Tensor {
+        match self {
+            Linear::Dense(w) => w,
+            Linear::Aqlm { q, decoded, .. } => {
+                if decoded.is_none() {
+                    *decoded = Some(q.decode());
+                }
+                decoded.as_ref().unwrap()
+            }
+            Linear::GroupInt { q, decoded } => {
+                if decoded.is_none() {
+                    *decoded = Some(q.decode());
+                }
+                decoded.as_ref().unwrap()
+            }
+        }
+    }
+
+    /// Dense view without mutation (decodes fresh when no cache).
+    pub fn weight_owned(&self) -> Tensor {
+        match self {
+            Linear::Dense(w) => w.clone(),
+            Linear::Aqlm { q, decoded, .. } => decoded.clone().unwrap_or_else(|| q.decode()),
+            Linear::GroupInt { q, decoded } => decoded.clone().unwrap_or_else(|| q.decode()),
+        }
+    }
+
+    /// Invalidate caches after codebooks/scales changed.
+    pub fn invalidate(&mut self) {
+        match self {
+            Linear::Aqlm { decoded, packed, .. } => {
+                *decoded = None;
+                *packed = None;
+            }
+            Linear::GroupInt { decoded, .. } => *decoded = None,
+            Linear::Dense(_) => {}
+        }
+    }
+
+    /// Packed kernel form (generation path); AQLM only.
+    pub fn packed(&mut self) -> Option<&PackedAqlm> {
+        match self {
+            Linear::Aqlm { q, packed, .. } => {
+                if packed.is_none() {
+                    *packed = Some(PackedAqlm::from_weight(q));
+                }
+                packed.as_ref()
+            }
+            _ => None,
+        }
+    }
+
+    /// y = x Ŵᵀ for a batch of rows x: [n, d_in] → [n, d_out].
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(&[x.rows(), self.d_out()]);
+        self.forward_into(x, &mut out);
+        out
+    }
+
+    pub fn forward_into(&mut self, x: &Tensor, out: &mut Tensor) {
+        let w = self.weight();
+        matmul_bt_into(x, w, out);
+    }
+
+    /// Single-vector forward on the generation hot path. Dense → GEMV;
+    /// AQLM → packed kernel (`lut_scratch` avoids reallocation).
+    pub fn matvec(&mut self, x: &[f32], y: &mut [f32], lut_scratch: &mut Vec<f32>) {
+        match self {
+            Linear::Dense(w) => gemv(w, x, y),
+            Linear::Aqlm { q, packed, .. } => {
+                if packed.is_none() {
+                    *packed = Some(PackedAqlm::from_weight(q));
+                }
+                packed.as_ref().unwrap().matvec_auto(x, lut_scratch, y);
+            }
+            Linear::GroupInt { .. } => {
+                // Scalar-quantized baselines run the dense GEMV over the
+                // cached dequantized matrix (as the related work does).
+                gemv(self.weight(), x, y)
+            }
+        }
+    }
+
+    /// Backward: given layer input `x` [n, d_in] and output grad `dy`
+    /// [n, d_out], returns (dx [n, d_in], parameter gradient).
+    pub fn backward(&mut self, x: &Tensor, dy: &Tensor) -> (Tensor, LinearGrad) {
+        let w = self.weight_owned();
+        // dx = dy @ W
+        let dx = crate::tensor::ops::matmul(dy, &w);
+        // dW = dyᵀ @ x
+        let dw = matmul_at(dy, x);
+        let grad = match self {
+            Linear::Dense(_) => LinearGrad::Dense(dw),
+            Linear::Aqlm { q, .. } => {
+                let (d_codebooks, d_scales) = q.backward_dw(&dw);
+                LinearGrad::Aqlm { d_codebooks, d_scales }
+            }
+            Linear::GroupInt { q, .. } => LinearGrad::GroupInt { d_scales: q.backward_dw(&dw) },
+        };
+        (dx, grad)
+    }
+
+    /// Number of parameters in the *represented* dense matrix.
+    pub fn param_count(&self) -> usize {
+        self.d_out() * self.d_in()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::format::{random_weight, AqlmShape};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_forward_matches_manual() {
+        let w = Tensor::from_vec(&[2, 3], vec![1., 0., 0., 0., 1., 1.]);
+        let mut lin = Linear::dense(w);
+        let x = Tensor::from_vec(&[1, 3], vec![2., 3., 4.]);
+        let y = lin.forward(&x);
+        assert_eq!(y.data(), &[2., 7.]);
+    }
+
+    #[test]
+    fn aqlm_forward_equals_decoded_dense() {
+        let mut rng = Rng::seed_from_u64(1);
+        let q = random_weight(12, 16, AqlmShape::new(2, 4, 4), &mut rng);
+        let dense = Linear::dense(q.decode());
+        let mut aq = Linear::aqlm(q);
+        let x = Tensor::randn(&[5, 16], 1.0, &mut rng);
+        let ya = aq.forward(&x);
+        let yd = { Linear::forward(&mut dense.clone(), &x) };
+        assert!(ya.allclose(&yd, 1e-5));
+    }
+
+    #[test]
+    fn matvec_dispatches_both_paths() {
+        let mut rng = Rng::seed_from_u64(2);
+        let q = random_weight(16, 32, AqlmShape::new(2, 5, 8), &mut rng);
+        let dense_w = q.decode();
+        let mut aq = Linear::aqlm(q);
+        let mut dn = Linear::dense(dense_w);
+        let x: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut ya = vec![0.0; 16];
+        let mut yd = vec![0.0; 16];
+        let mut scratch = Vec::new();
+        aq.matvec(&x, &mut ya, &mut scratch);
+        dn.matvec(&x, &mut yd, &mut scratch);
+        for i in 0..16 {
+            assert!((ya[i] - yd[i]).abs() < 1e-3, "row {i}");
+        }
+    }
+
+    #[test]
+    fn backward_dense_gradients() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let mut lin = Linear::dense(w.clone());
+        let x = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let dy = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let (dx, grad) = lin.backward(&x, &dy);
+        // dx = dy @ W
+        assert!(dx.allclose(&crate::tensor::ops::matmul(&dy, &w), 1e-5));
+        match grad {
+            LinearGrad::Dense(dw) => {
+                assert!(dw.allclose(&matmul_at(&dy, &x), 1e-5));
+            }
+            _ => panic!("expected dense grad"),
+        }
+    }
+
+    #[test]
+    fn invalidate_refreshes_decode() {
+        let mut rng = Rng::seed_from_u64(4);
+        let q = random_weight(8, 8, AqlmShape::new(1, 3, 4), &mut rng);
+        let mut lin = Linear::aqlm(q);
+        let w1 = lin.weight().clone();
+        // Mutate a codebook entry; without invalidate the cache would be stale.
+        if let Linear::Aqlm { q, .. } = &mut lin {
+            q.codebooks[0].data_mut()[0] += 1.0;
+        }
+        lin.invalidate();
+        let w2 = lin.weight().clone();
+        assert!(!w1.allclose(&w2, 1e-7));
+    }
+}

@@ -1,0 +1,165 @@
+//! Losses: cross-entropy (training, perplexity) and KL divergence
+//! (Appendix A knowledge distillation), each with its backward pass.
+
+use crate::tensor::ops::log_softmax;
+use crate::tensor::Tensor;
+
+/// Cross-entropy over logits [n, vocab] against target ids [n].
+/// Returns (mean loss in nats, dlogits [n, vocab] of the MEAN loss).
+pub fn cross_entropy(logits: &Tensor, targets: &[u32]) -> (f64, Tensor) {
+    let (n, v) = (logits.rows(), logits.cols());
+    assert_eq!(targets.len(), n);
+    let mut dlogits = Tensor::zeros(&[n, v]);
+    let mut total = 0.0f64;
+    let mut ls = vec![0.0f32; v];
+    let inv_n = 1.0 / n as f32;
+    for i in 0..n {
+        let row = logits.row(i);
+        log_softmax(row, &mut ls);
+        let t = targets[i] as usize;
+        total -= ls[t] as f64;
+        let drow = dlogits.row_mut(i);
+        for j in 0..v {
+            drow[j] = ls[j].exp() * inv_n;
+        }
+        drow[t] -= inv_n;
+    }
+    (total / n as f64, dlogits)
+}
+
+/// Only the loss (no gradient) — the perplexity evaluation path.
+pub fn cross_entropy_loss_only(logits: &Tensor, targets: &[u32]) -> f64 {
+    let (n, v) = (logits.rows(), logits.cols());
+    let mut ls = vec![0.0f32; v];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        log_softmax(logits.row(i), &mut ls);
+        total -= ls[targets[i] as usize] as f64;
+    }
+    total / n as f64
+}
+
+/// Sum of log-probabilities of `targets` under `logits` rows (zero-shot
+/// task scoring: continuation likelihood).
+pub fn sequence_logprob(logits: &Tensor, targets: &[u32]) -> f64 {
+    let (n, v) = (logits.rows(), logits.cols());
+    assert_eq!(targets.len(), n);
+    let mut ls = vec![0.0f32; v];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        log_softmax(logits.row(i), &mut ls);
+        total += ls[targets[i] as usize] as f64;
+    }
+    total
+}
+
+/// KL(teacher ‖ student) over logits [n, vocab], mean over rows, plus
+/// dstudent_logits. This is the distillation objective of Appendix A
+/// (Eq. 9): gradient w.r.t. student logits is (softmax(student) −
+/// softmax(teacher)) / n.
+pub fn kl_distill(teacher_logits: &Tensor, student_logits: &Tensor) -> (f64, Tensor) {
+    let (n, v) = (teacher_logits.rows(), teacher_logits.cols());
+    assert_eq!(student_logits.shape(), teacher_logits.shape());
+    let mut dstudent = Tensor::zeros(&[n, v]);
+    let mut lt = vec![0.0f32; v];
+    let mut lstu = vec![0.0f32; v];
+    let mut total = 0.0f64;
+    let inv_n = 1.0 / n as f32;
+    for i in 0..n {
+        log_softmax(teacher_logits.row(i), &mut lt);
+        log_softmax(student_logits.row(i), &mut lstu);
+        let drow = dstudent.row_mut(i);
+        for j in 0..v {
+            let pt = lt[j].exp();
+            total += (pt as f64) * ((lt[j] - lstu[j]) as f64);
+            drow[j] = (lstu[j].exp() - pt) * inv_n;
+        }
+    }
+    (total / n as f64, dstudent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ce_of_perfect_prediction_is_small() {
+        let mut logits = Tensor::zeros(&[2, 4]);
+        logits.set2(0, 1, 50.0);
+        logits.set2(1, 3, 50.0);
+        let (loss, _) = cross_entropy(&logits, &[1, 3]);
+        assert!(loss < 1e-6);
+    }
+
+    #[test]
+    fn ce_uniform_is_log_v() {
+        let logits = Tensor::zeros(&[3, 8]);
+        let (loss, _) = cross_entropy(&logits, &[0, 5, 7]);
+        assert!((loss - (8f64).ln()).abs() < 1e-6);
+        assert!((cross_entropy_loss_only(&logits, &[0, 5, 7]) - loss).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ce_gradient_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(1);
+        let logits = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let targets = [2u32, 0, 4];
+        let (_, grad) = cross_entropy(&logits, &targets);
+        let h = 1e-3;
+        for &(i, j) in &[(0usize, 2usize), (1, 1), (2, 4), (0, 0)] {
+            let mut lp = logits.clone();
+            lp.set2(i, j, lp.at2(i, j) + h);
+            let mut lm = logits.clone();
+            lm.set2(i, j, lm.at2(i, j) - h);
+            let fd = (cross_entropy_loss_only(&lp, &targets)
+                - cross_entropy_loss_only(&lm, &targets))
+                / (2.0 * h as f64);
+            assert!((grad.at2(i, j) as f64 - fd).abs() < 1e-4, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn ce_gradient_rows_sum_to_zero() {
+        let mut rng = Rng::seed_from_u64(2);
+        let logits = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let (_, grad) = cross_entropy(&logits, &[0, 1, 2, 3]);
+        for i in 0..4 {
+            let s: f32 = grad.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kl_zero_when_equal() {
+        let mut rng = Rng::seed_from_u64(3);
+        let logits = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let (kl, grad) = kl_distill(&logits, &logits);
+        assert!(kl.abs() < 1e-8);
+        assert!(grad.max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_positive_and_grad_direction() {
+        let mut rng = Rng::seed_from_u64(4);
+        let t = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let s = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let (kl, grad) = kl_distill(&t, &s);
+        assert!(kl > 0.0);
+        // Moving student logits along -grad must decrease KL.
+        let mut s2 = s.clone();
+        s2.axpy(-0.1, &grad);
+        let (kl2, _) = kl_distill(&t, &s2);
+        assert!(kl2 < kl, "{kl2} !< {kl}");
+    }
+
+    #[test]
+    fn sequence_logprob_matches_ce() {
+        let mut rng = Rng::seed_from_u64(5);
+        let logits = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let targets = [1u32, 2, 3, 0];
+        let lp = sequence_logprob(&logits, &targets);
+        let ce = cross_entropy_loss_only(&logits, &targets);
+        assert!((lp + ce * 4.0).abs() < 1e-6);
+    }
+}

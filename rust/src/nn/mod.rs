@@ -1,0 +1,25 @@
+//! LLaMA-architecture transformer stack, built from scratch:
+//! forward pass, **hand-written backward pass** (verified against finite
+//! differences), Adam, KV-cache generation, GQA and MoE variants.
+//!
+//! Why a manual backward? The paper's Phase 3 (§3.4) fine-tunes codebooks /
+//! scales / RMSNorm gains by backpropagating block-output MSE through the
+//! quantized weight representation (Eq. 2), and Appendix A backpropagates a
+//! KL distillation loss through the whole model. There is no autograd in
+//! this environment — so [`block`] and [`model`] implement reverse-mode
+//! gradients for every op, and [`linear`] routes weight gradients either to
+//! a dense tensor or through [`AqlmWeight::backward_dw`]
+//! (codes frozen, codebooks/scales learnable — exactly the paper's setup).
+//!
+//! [`AqlmWeight::backward_dw`]: crate::kernels::format::AqlmWeight::backward_dw
+
+pub mod config;
+pub mod linear;
+pub mod rope;
+pub mod block;
+pub mod moe;
+pub mod model;
+pub mod kvcache;
+pub mod adam;
+pub mod loss;
+pub mod sampler;

@@ -1,0 +1,843 @@
+//! The full language model: embeddings → N blocks → final RMSNorm → LM head,
+//! with training-grade backward, KV-cache generation, and a self-contained
+//! binary checkpoint format (no serde in the image).
+//!
+//! Quantization scope follows the paper: only the linear layers *inside*
+//! transformer blocks are quantized; embeddings, final norm and LM head stay
+//! in full precision and are excluded from the "average bits" accounting
+//! (paper §4.1, App. H).
+
+use super::adam::{Adam, AdamState};
+use super::block::{Block, BlockCache, BlockGrads, Ffn, FfnGrads, Mlp};
+use super::config::ModelConfig;
+use super::kvcache::LayerKvCache;
+use super::linear::{Linear, LinearGrad};
+use super::loss::cross_entropy;
+use super::moe::MoeLayer;
+use super::rope::Rope;
+use crate::kernels::format::AqlmWeight;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+/// A complete model instance.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub blocks: Vec<Block>,
+    pub ln_f: Vec<f32>,
+    pub head: Linear,
+    pub rope: Rope,
+}
+
+/// Activation cache of a full forward pass.
+pub struct ModelCache {
+    pub tokens: Vec<u32>,
+    pub x0: Tensor,
+    pub block_caches: Vec<BlockCache>,
+    /// Residual stream entering the final norm.
+    pub x_final: Tensor,
+    pub xnf: Tensor,
+    pub rinv_f: Vec<f32>,
+}
+
+/// Gradients for all model parameters.
+pub struct ModelGrads {
+    pub embed: Tensor,
+    pub blocks: Vec<BlockGrads>,
+    pub ln_f: Vec<f32>,
+    pub head: LinearGrad,
+}
+
+impl Model {
+    // ------------------------------------------------------------ init
+
+    /// Initialize one block with LLaMA-style scaling (residual projections
+    /// scaled down by 1/√(2·n_layers)).
+    pub fn init_block(cfg: &ModelConfig, rng: &mut Rng) -> Block {
+        let d = cfg.d_model;
+        let kv_dim = cfg.n_kv_heads * cfg.head_dim();
+        let std = 0.02f32;
+        let res_std = std / (2.0 * cfg.n_layers.max(1) as f32).sqrt();
+        let mk = |r: usize, c: usize, s: f32, rng: &mut Rng| Linear::dense(Tensor::randn(&[r, c], s, rng));
+        let mk_mlp = |rng: &mut Rng| Mlp {
+            wg: mk(cfg.d_ff, d, std, rng),
+            wu: mk(cfg.d_ff, d, std, rng),
+            wd: mk(d, cfg.d_ff, res_std, rng),
+        };
+        let ffn = if cfg.is_moe() {
+            Ffn::Moe(MoeLayer {
+                gate: Tensor::randn(&[cfg.n_experts, d], std, rng),
+                experts: (0..cfg.n_experts).map(|_| mk_mlp(rng)).collect(),
+                top_k: cfg.experts_top_k,
+            })
+        } else {
+            Ffn::Dense(mk_mlp(rng))
+        };
+        Block {
+            ln1: vec![1.0; d],
+            attn: super::block::Attention {
+                wq: mk(d, d, std, rng),
+                wk: mk(kv_dim, d, std, rng),
+                wv: mk(kv_dim, d, std, rng),
+                wo: mk(d, d, res_std, rng),
+            },
+            ln2: vec![1.0; d],
+            ffn,
+        }
+    }
+
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Model {
+        let d = cfg.d_model;
+        Model {
+            cfg: cfg.clone(),
+            embed: Tensor::randn(&[cfg.vocab_size, d], 0.02, rng),
+            blocks: (0..cfg.n_layers).map(|_| Self::init_block(cfg, rng)).collect(),
+            ln_f: vec![1.0; d],
+            head: Linear::dense(Tensor::randn(&[cfg.vocab_size, d], 0.02, rng)),
+            rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
+        }
+    }
+
+    // ------------------------------------------------------------ forward
+
+    /// Embedding lookup: tokens [B·S] → [B·S, d].
+    pub fn embed_tokens(&self, tokens: &[u32]) -> Tensor {
+        let d = self.cfg.d_model;
+        let mut x = Tensor::zeros(&[tokens.len(), d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(t as usize));
+        }
+        x
+    }
+
+    /// Full forward. Returns logits [B·S, vocab] (+ cache when requested).
+    pub fn forward_logits(
+        &mut self,
+        tokens: &[u32],
+        batch: usize,
+        seq: usize,
+        want_cache: bool,
+    ) -> (Tensor, Option<ModelCache>) {
+        assert_eq!(tokens.len(), batch * seq);
+        assert!(seq <= self.cfg.max_seq, "seq {seq} > max_seq {}", self.cfg.max_seq);
+        let x0 = self.embed_tokens(tokens);
+        let mut x = x0.clone();
+        let mut block_caches = Vec::new();
+        let cfg = self.cfg.clone();
+        for block in &mut self.blocks {
+            let (y, c) = block.forward(&x, &cfg, batch, seq, &self.rope, want_cache);
+            if let Some(c) = c {
+                block_caches.push(c);
+            }
+            x = y;
+        }
+        let x_final = x;
+        let (xnf, rinv_f) = super::block::rmsnorm_rows(&x_final, &self.ln_f, cfg.norm_eps);
+        let logits = self.head.forward(&xnf);
+        let cache = want_cache.then(|| ModelCache {
+            tokens: tokens.to_vec(),
+            x0,
+            block_caches,
+            x_final,
+            xnf,
+            rinv_f,
+        });
+        (logits, cache)
+    }
+
+    /// Backward from dL/dlogits (training and KD share this).
+    pub fn backward_from_dlogits(&mut self, cache: &ModelCache, batch: usize, seq: usize, dlogits: &Tensor) -> ModelGrads {
+        let cfg = self.cfg.clone();
+        let (dxnf, dhead) = self.head.backward(&cache.xnf, dlogits);
+        let (mut dx, dln_f) =
+            super::block::rmsnorm_rows_backward(&cache.x_final, &self.ln_f, &cache.rinv_f, &dxnf);
+        let mut block_grads: Vec<BlockGrads> = Vec::with_capacity(self.blocks.len());
+        for (i, block) in self.blocks.iter_mut().enumerate().rev() {
+            let (dx_prev, grads) =
+                block.backward(&cache.block_caches[i], &cfg, batch, seq, &self.rope, &dx);
+            dx = dx_prev;
+            block_grads.push(grads);
+        }
+        block_grads.reverse();
+        // Embedding scatter-add.
+        let mut dembed = Tensor::zeros(&[cfg.vocab_size, cfg.d_model]);
+        for (i, &t) in cache.tokens.iter().enumerate() {
+            let dst = dembed.row_mut(t as usize);
+            for (a, &b) in dst.iter_mut().zip(dx.row(i)) {
+                *a += b;
+            }
+        }
+        ModelGrads { embed: dembed, blocks: block_grads, ln_f: dln_f, head: dhead }
+    }
+
+    /// One training step's loss + gradients (cross-entropy).
+    pub fn loss_and_grads(
+        &mut self,
+        tokens: &[u32],
+        targets: &[u32],
+        batch: usize,
+        seq: usize,
+    ) -> (f64, ModelGrads) {
+        let (logits, cache) = self.forward_logits(tokens, batch, seq, true);
+        let (loss, dlogits) = cross_entropy(&logits, targets);
+        let grads = self.backward_from_dlogits(cache.as_ref().unwrap(), batch, seq, &dlogits);
+        (loss, grads)
+    }
+
+    // ------------------------------------------------------------ generation
+
+    pub fn new_kv_caches(&self) -> Vec<LayerKvCache> {
+        (0..self.cfg.n_layers)
+            .map(|_| LayerKvCache::new(self.cfg.n_kv_heads, self.cfg.head_dim(), self.cfg.max_seq))
+            .collect()
+    }
+
+    /// Decode one token through the whole model; returns logits [vocab].
+    pub fn decode_token(
+        &mut self,
+        token: u32,
+        pos: usize,
+        kv: &mut [LayerKvCache],
+        lut_scratch: &mut Vec<f32>,
+    ) -> Vec<f32> {
+        let cfg = self.cfg.clone();
+        let mut x = self.embed.row(token as usize).to_vec();
+        for (i, block) in self.blocks.iter_mut().enumerate() {
+            x = block.decode_step(&x, &cfg, pos, &self.rope, &mut kv[i], lut_scratch);
+        }
+        let mut xn = vec![0.0f32; cfg.d_model];
+        crate::tensor::ops::rmsnorm(&x, &self.ln_f, cfg.norm_eps, &mut xn);
+        let mut logits = vec![0.0f32; cfg.vocab_size];
+        self.head.matvec(&xn, &mut logits, lut_scratch);
+        logits
+    }
+
+    /// Greedy/temperature generation from a prompt.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        temperature: f32,
+        rng: &mut Rng,
+    ) -> Vec<u32> {
+        assert!(!prompt.is_empty());
+        let mut kv = self.new_kv_caches();
+        let mut scratch = Vec::new();
+        let mut out = prompt.to_vec();
+        let mut logits = vec![];
+        for (pos, &t) in prompt.iter().enumerate() {
+            logits = self.decode_token(t, pos, &mut kv, &mut scratch);
+        }
+        for _ in 0..max_new {
+            if out.len() >= self.cfg.max_seq {
+                break;
+            }
+            let next = super::sampler::sample(&logits, temperature, rng);
+            out.push(next);
+            if out.len() >= self.cfg.max_seq {
+                break;
+            }
+            logits = self.decode_token(next, out.len() - 1, &mut kv, &mut scratch);
+        }
+        out
+    }
+
+    // ------------------------------------------------------------ optimizer plumbing
+
+    /// Apply a full set of gradients with Adam (training path — all
+    /// parameters dense).
+    pub fn apply_grads(&mut self, grads: &ModelGrads, opt: &mut Adam, states: &mut AdamStates) {
+        opt.next_step();
+        let upd = |name: &str, p: &mut [f32], g: &[f32], opt: &Adam, st: &mut AdamStates| {
+            let s = st.entry(name, p.len());
+            opt.update(p, g, s);
+        };
+        upd("embed", self.embed.data_mut(), grads.embed.data(), opt, states);
+        upd("ln_f", &mut self.ln_f, &grads.ln_f, opt, states);
+        if let (Linear::Dense(w), LinearGrad::Dense(g)) = (&mut self.head, &grads.head) {
+            upd("head", w.data_mut(), g.data(), opt, states);
+        }
+        for (bi, (block, bg)) in self.blocks.iter_mut().zip(&grads.blocks).enumerate() {
+            upd(&format!("b{bi}.ln1"), &mut block.ln1, &bg.ln1, opt, states);
+            upd(&format!("b{bi}.ln2"), &mut block.ln2, &bg.ln2, opt, states);
+            let pairs: Vec<(String, &mut Linear, &LinearGrad)> = {
+                let mut v: Vec<(String, &mut Linear, &LinearGrad)> = Vec::new();
+                v.push((format!("b{bi}.wq"), &mut block.attn.wq, &bg.wq));
+                v.push((format!("b{bi}.wk"), &mut block.attn.wk, &bg.wk));
+                v.push((format!("b{bi}.wv"), &mut block.attn.wv, &bg.wv));
+                v.push((format!("b{bi}.wo"), &mut block.attn.wo, &bg.wo));
+                match (&mut block.ffn, &bg.ffn) {
+                    (Ffn::Dense(mlp), FfnGrads::Dense { wg, wu, wd }) => {
+                        v.push((format!("b{bi}.wg"), &mut mlp.wg, wg));
+                        v.push((format!("b{bi}.wu"), &mut mlp.wu, wu));
+                        v.push((format!("b{bi}.wd"), &mut mlp.wd, wd));
+                    }
+                    (Ffn::Moe(moe), FfnGrads::Moe(mg)) => {
+                        // Router first.
+                        let name = format!("b{bi}.gate");
+                        let s = states.entry(&name, moe.gate.len());
+                        opt.update(moe.gate.data_mut(), mg.gate.data(), s);
+                        for (ei, (e, eg)) in moe.experts.iter_mut().zip(&mg.experts).enumerate() {
+                            if let Some((wg, wu, wd)) = eg {
+                                v.push((format!("b{bi}.e{ei}.wg"), &mut e.wg, wg));
+                                v.push((format!("b{bi}.e{ei}.wu"), &mut e.wu, wu));
+                                v.push((format!("b{bi}.e{ei}.wd"), &mut e.wd, wd));
+                            }
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+                v
+            };
+            for (name, lin, grad) in pairs {
+                match (lin, grad) {
+                    (Linear::Dense(w), LinearGrad::Dense(g)) => {
+                        let s = states.entry(&name, w.len());
+                        opt.update(w.data_mut(), g.data(), s);
+                    }
+                    (lin @ Linear::Aqlm { .. }, LinearGrad::Aqlm { d_codebooks, d_scales }) => {
+                        if let Linear::Aqlm { q, .. } = lin {
+                            for (m, dcb) in d_codebooks.iter().enumerate() {
+                                let s = states.entry(&format!("{name}.cb{m}"), dcb.len());
+                                opt.update(q.codebooks[m].data_mut(), dcb.data(), s);
+                            }
+                            let s = states.entry(&format!("{name}.scales"), d_scales.len());
+                            opt.update(&mut q.scales, d_scales, s);
+                        }
+                        lin.invalidate();
+                    }
+                    (lin @ Linear::GroupInt { .. }, LinearGrad::GroupInt { d_scales }) => {
+                        if let Linear::GroupInt { q, .. } = lin {
+                            let s = states.entry(&format!("{name}.scales"), d_scales.len());
+                            opt.update(&mut q.scales, d_scales, s);
+                        }
+                        lin.invalidate();
+                    }
+                    _ => unreachable!("grad/param variant mismatch for {name}"),
+                }
+            }
+        }
+    }
+
+    /// Size in bytes of the model weights under the paper's accounting:
+    /// quantized block linears at their compressed size, everything kept in
+    /// 16-bit (the paper stores FP16 for non-quantized tensors).
+    pub fn weight_bytes(&self) -> usize {
+        let mut bits = 0usize;
+        bits += self.embed.len() * 16;
+        bits += self.ln_f.len() * 16;
+        bits += self.head.param_count() * 16;
+        let lin_bits = |l: &Linear| match l {
+            Linear::Dense(w) => w.len() * 16,
+            Linear::Aqlm { q, .. } => q.size_bits(),
+            Linear::GroupInt { q, .. } => q.size_bits(),
+        };
+        for b in &self.blocks {
+            bits += (b.ln1.len() + b.ln2.len()) * 16;
+            bits += lin_bits(&b.attn.wq);
+            bits += lin_bits(&b.attn.wk);
+            bits += lin_bits(&b.attn.wv);
+            bits += lin_bits(&b.attn.wo);
+            match &b.ffn {
+                Ffn::Dense(m) => {
+                    bits += lin_bits(&m.wg) + lin_bits(&m.wu) + lin_bits(&m.wd);
+                }
+                Ffn::Moe(moe) => {
+                    bits += moe.gate.len() * 16;
+                    for e in &moe.experts {
+                        bits += lin_bits(&e.wg) + lin_bits(&e.wu) + lin_bits(&e.wd);
+                    }
+                }
+            }
+        }
+        bits / 8
+    }
+
+    /// Average bits per quantized parameter (paper's "Avg bits" column):
+    /// compressed size of the block linears over their parameter count.
+    pub fn avg_bits(&self) -> f64 {
+        let mut bits = 0usize;
+        let mut params = 0usize;
+        for b in &self.blocks {
+            let mut acc = |l: &Linear| {
+                params += l.param_count();
+                bits += match l {
+                    Linear::Dense(w) => w.len() * 16,
+                    Linear::Aqlm { q, .. } => q.size_bits(),
+                    Linear::GroupInt { q, .. } => q.size_bits(),
+                };
+            };
+            acc(&b.attn.wq);
+            acc(&b.attn.wk);
+            acc(&b.attn.wv);
+            acc(&b.attn.wo);
+            match &b.ffn {
+                Ffn::Dense(m) => {
+                    acc(&m.wg);
+                    acc(&m.wu);
+                    acc(&m.wd);
+                }
+                Ffn::Moe(moe) => {
+                    for e in &moe.experts {
+                        acc(&e.wg);
+                        acc(&e.wu);
+                        acc(&e.wd);
+                    }
+                }
+            }
+        }
+        bits as f64 / params as f64
+    }
+
+    // ------------------------------------------------------------ checkpoint io
+
+    /// Save to a self-describing binary checkpoint.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut header = Json::obj();
+        header.set("format", Json::from("aqlm-ckpt-v1"));
+        header.set("config", config_to_json(&self.cfg));
+        let mut blob: Vec<u8> = Vec::new();
+        let mut tensors = Json::arr();
+        {
+            let mut put_f32 = |name: &str, shape: &[usize], data: &[f32], tensors: &mut Json, blob: &mut Vec<u8>| {
+                let mut t = Json::obj();
+                t.set("name", Json::from(name));
+                t.set("kind", Json::from("dense"));
+                t.set("shape", Json::from(shape.iter().map(|&s| Json::from(s)).collect::<Vec<_>>()));
+                t.set("offset", Json::from(blob.len()));
+                tensors.push(t);
+                for &v in data {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+            };
+            let put_aqlm = |name: &str, q: &AqlmWeight, tensors: &mut Json, blob: &mut Vec<u8>| {
+                let mut t = Json::obj();
+                t.set("name", Json::from(name));
+                t.set("kind", Json::from("aqlm"));
+                t.set("d_out", Json::from(q.d_out));
+                t.set("d_in", Json::from(q.d_in));
+                t.set("group", Json::from(q.group));
+                t.set("n_codebooks", Json::from(q.n_codebooks));
+                t.set("code_bits", Json::from(q.code_bits));
+                t.set("offset", Json::from(blob.len()));
+                tensors.push(t);
+                for &c in &q.codes {
+                    blob.extend_from_slice(&c.to_le_bytes());
+                }
+                for cb in &q.codebooks {
+                    for &v in cb.data() {
+                        blob.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                for &s in &q.scales {
+                    blob.extend_from_slice(&s.to_le_bytes());
+                }
+            };
+            let put_groupint = |name: &str, q: &crate::quant::groupint::GroupIntWeight, tensors: &mut Json, blob: &mut Vec<u8>| {
+                let mut t = Json::obj();
+                t.set("name", Json::from(name));
+                t.set("kind", Json::from("groupint"));
+                t.set("d_out", Json::from(q.d_out));
+                t.set("d_in", Json::from(q.d_in));
+                t.set("group", Json::from(q.group));
+                t.set("bits", Json::from(q.bits));
+                t.set("offset", Json::from(blob.len()));
+                tensors.push(t);
+                for &c in &q.qcodes {
+                    blob.extend_from_slice(&c.to_le_bytes());
+                }
+                for &v in q.scales.iter().chain(&q.zeros) {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+            };
+            let put_linear = |name: &str, l: &Linear, tensors: &mut Json, blob: &mut Vec<u8>, put_f32: &mut dyn FnMut(&str, &[usize], &[f32], &mut Json, &mut Vec<u8>)| match l {
+                Linear::Dense(w) => put_f32(name, w.shape(), w.data(), tensors, blob),
+                Linear::Aqlm { q, .. } => put_aqlm(name, q, tensors, blob),
+                Linear::GroupInt { q, .. } => put_groupint(name, q, tensors, blob),
+            };
+
+            put_f32("embed", self.embed.shape(), self.embed.data(), &mut tensors, &mut blob);
+            put_f32("ln_f", &[self.ln_f.len()], &self.ln_f, &mut tensors, &mut blob);
+            put_linear("head", &self.head, &mut tensors, &mut blob, &mut put_f32);
+            for (bi, b) in self.blocks.iter().enumerate() {
+                put_f32(&format!("b{bi}.ln1"), &[b.ln1.len()], &b.ln1, &mut tensors, &mut blob);
+                put_f32(&format!("b{bi}.ln2"), &[b.ln2.len()], &b.ln2, &mut tensors, &mut blob);
+                put_linear(&format!("b{bi}.wq"), &b.attn.wq, &mut tensors, &mut blob, &mut put_f32);
+                put_linear(&format!("b{bi}.wk"), &b.attn.wk, &mut tensors, &mut blob, &mut put_f32);
+                put_linear(&format!("b{bi}.wv"), &b.attn.wv, &mut tensors, &mut blob, &mut put_f32);
+                put_linear(&format!("b{bi}.wo"), &b.attn.wo, &mut tensors, &mut blob, &mut put_f32);
+                match &b.ffn {
+                    Ffn::Dense(m) => {
+                        put_linear(&format!("b{bi}.wg"), &m.wg, &mut tensors, &mut blob, &mut put_f32);
+                        put_linear(&format!("b{bi}.wu"), &m.wu, &mut tensors, &mut blob, &mut put_f32);
+                        put_linear(&format!("b{bi}.wd"), &m.wd, &mut tensors, &mut blob, &mut put_f32);
+                    }
+                    Ffn::Moe(moe) => {
+                        put_f32(&format!("b{bi}.gate"), moe.gate.shape(), moe.gate.data(), &mut tensors, &mut blob);
+                        for (ei, e) in moe.experts.iter().enumerate() {
+                            put_linear(&format!("b{bi}.e{ei}.wg"), &e.wg, &mut tensors, &mut blob, &mut put_f32);
+                            put_linear(&format!("b{bi}.e{ei}.wu"), &e.wu, &mut tensors, &mut blob, &mut put_f32);
+                            put_linear(&format!("b{bi}.e{ei}.wd"), &e.wd, &mut tensors, &mut blob, &mut put_f32);
+                        }
+                    }
+                }
+            }
+        }
+        header.set("tensors", tensors);
+        let header_bytes = format!("{header}").into_bytes();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"AQLMCKPT")?;
+        f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        f.write_all(&blob)?;
+        Ok(())
+    }
+
+    /// Load from a checkpoint written by [`Self::save`].
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Model> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"AQLMCKPT", "bad checkpoint magic");
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let mut blob = Vec::new();
+        f.read_to_end(&mut blob)?;
+
+        let cfg = config_from_json(header.get("config").ok_or_else(|| anyhow::anyhow!("no config"))?)?;
+        let mut by_name: HashMap<String, &Json> = HashMap::new();
+        for t in header.req_arr("tensors")? {
+            by_name.insert(t.req_str("name")?.to_string(), t);
+        }
+        let read_f32 = |blob: &[u8], offset: usize, count: usize| -> Vec<f32> {
+            (0..count)
+                .map(|i| {
+                    let o = offset + i * 4;
+                    f32::from_le_bytes([blob[o], blob[o + 1], blob[o + 2], blob[o + 3]])
+                })
+                .collect()
+        };
+        let get_dense = |name: &str| -> anyhow::Result<Tensor> {
+            let t = by_name.get(name).ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
+            let shape: Vec<usize> =
+                t.req_arr("shape")?.iter().map(|s| s.as_usize().unwrap()).collect();
+            let count: usize = shape.iter().product();
+            Ok(Tensor::from_vec(&shape, read_f32(&blob, t.req_usize("offset")?, count)))
+        };
+        let get_vec = |name: &str| -> anyhow::Result<Vec<f32>> { Ok(get_dense(name)?.into_vec()) };
+        let get_linear = |name: &str| -> anyhow::Result<Linear> {
+            let t = by_name.get(name).ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
+            match t.req_str("kind")? {
+                "dense" => Ok(Linear::dense(get_dense(name)?)),
+                "aqlm" => {
+                    let (d_out, d_in) = (t.req_usize("d_out")?, t.req_usize("d_in")?);
+                    let group = t.req_usize("group")?;
+                    let n_codebooks = t.req_usize("n_codebooks")?;
+                    let code_bits = t.req_usize("code_bits")?;
+                    let k = 1usize << code_bits;
+                    let n_codes = d_out * (d_in / group) * n_codebooks;
+                    let mut off = t.req_usize("offset")?;
+                    let codes: Vec<u16> = (0..n_codes)
+                        .map(|i| u16::from_le_bytes([blob[off + 2 * i], blob[off + 2 * i + 1]]))
+                        .collect();
+                    off += n_codes * 2;
+                    let mut codebooks = Vec::new();
+                    for _ in 0..n_codebooks {
+                        codebooks.push(Tensor::from_vec(&[k, group], read_f32(&blob, off, k * group)));
+                        off += k * group * 4;
+                    }
+                    let scales = read_f32(&blob, off, d_out);
+                    let q = AqlmWeight { d_out, d_in, group, n_codebooks, code_bits, codes, codebooks, scales };
+                    q.validate()?;
+                    Ok(Linear::aqlm(q))
+                }
+                "groupint" => {
+                    let (d_out, d_in) = (t.req_usize("d_out")?, t.req_usize("d_in")?);
+                    let group = t.req_usize("group")?;
+                    let bits = t.req_usize("bits")?;
+                    let n_groups = d_in / group;
+                    let mut off = t.req_usize("offset")?;
+                    let qcodes: Vec<u16> = (0..d_out * d_in)
+                        .map(|i| u16::from_le_bytes([blob[off + 2 * i], blob[off + 2 * i + 1]]))
+                        .collect();
+                    off += d_out * d_in * 2;
+                    let scales = read_f32(&blob, off, d_out * n_groups);
+                    off += d_out * n_groups * 4;
+                    let zeros = read_f32(&blob, off, d_out * n_groups);
+                    Ok(Linear::group_int(crate::quant::groupint::GroupIntWeight {
+                        d_out,
+                        d_in,
+                        group,
+                        bits,
+                        qcodes,
+                        scales,
+                        zeros,
+                    }))
+                }
+                other => anyhow::bail!("unknown tensor kind {other}"),
+            }
+        };
+
+        let mut blocks = Vec::new();
+        for bi in 0..cfg.n_layers {
+            let ffn = if cfg.is_moe() {
+                Ffn::Moe(MoeLayer {
+                    gate: get_dense(&format!("b{bi}.gate"))?,
+                    experts: (0..cfg.n_experts)
+                        .map(|ei| -> anyhow::Result<Mlp> {
+                            Ok(Mlp {
+                                wg: get_linear(&format!("b{bi}.e{ei}.wg"))?,
+                                wu: get_linear(&format!("b{bi}.e{ei}.wu"))?,
+                                wd: get_linear(&format!("b{bi}.e{ei}.wd"))?,
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                    top_k: cfg.experts_top_k,
+                })
+            } else {
+                Ffn::Dense(Mlp {
+                    wg: get_linear(&format!("b{bi}.wg"))?,
+                    wu: get_linear(&format!("b{bi}.wu"))?,
+                    wd: get_linear(&format!("b{bi}.wd"))?,
+                })
+            };
+            blocks.push(Block {
+                ln1: get_vec(&format!("b{bi}.ln1"))?,
+                attn: super::block::Attention {
+                    wq: get_linear(&format!("b{bi}.wq"))?,
+                    wk: get_linear(&format!("b{bi}.wk"))?,
+                    wv: get_linear(&format!("b{bi}.wv"))?,
+                    wo: get_linear(&format!("b{bi}.wo"))?,
+                },
+                ln2: get_vec(&format!("b{bi}.ln2"))?,
+                ffn,
+            });
+        }
+        Ok(Model {
+            rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
+            embed: get_dense("embed")?,
+            ln_f: get_vec("ln_f")?,
+            head: get_linear("head")?,
+            blocks,
+            cfg,
+        })
+    }
+}
+
+/// Keyed Adam states for the whole model.
+pub struct AdamStates {
+    map: HashMap<String, AdamState>,
+}
+
+impl AdamStates {
+    pub fn new() -> AdamStates {
+        AdamStates { map: HashMap::new() }
+    }
+
+    pub fn entry(&mut self, name: &str, len: usize) -> &mut AdamState {
+        self.map.entry(name.to_string()).or_insert_with(|| AdamState::new(len))
+    }
+}
+
+impl Default for AdamStates {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub fn config_to_json(cfg: &ModelConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("name", Json::from(cfg.name.as_str()));
+    j.set("d_model", Json::from(cfg.d_model));
+    j.set("n_layers", Json::from(cfg.n_layers));
+    j.set("n_heads", Json::from(cfg.n_heads));
+    j.set("n_kv_heads", Json::from(cfg.n_kv_heads));
+    j.set("d_ff", Json::from(cfg.d_ff));
+    j.set("vocab_size", Json::from(cfg.vocab_size));
+    j.set("max_seq", Json::from(cfg.max_seq));
+    j.set("rope_theta", Json::from(cfg.rope_theta as f64));
+    j.set("norm_eps", Json::from(cfg.norm_eps as f64));
+    j.set("n_experts", Json::from(cfg.n_experts));
+    j.set("experts_top_k", Json::from(cfg.experts_top_k));
+    j
+}
+
+pub fn config_from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+    Ok(ModelConfig {
+        name: j.req_str("name")?.to_string(),
+        d_model: j.req_usize("d_model")?,
+        n_layers: j.req_usize("n_layers")?,
+        n_heads: j.req_usize("n_heads")?,
+        n_kv_heads: j.req_usize("n_kv_heads")?,
+        d_ff: j.req_usize("d_ff")?,
+        vocab_size: j.req_usize("vocab_size")?,
+        max_seq: j.req_usize("max_seq")?,
+        rope_theta: j.req_f64("rope_theta")? as f32,
+        norm_eps: j.req_f64("norm_eps")? as f32,
+        n_experts: j.req_usize("n_experts")?,
+        experts_top_k: j.req_usize("experts_top_k")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> ModelConfig {
+        let mut c = ModelConfig::nano();
+        c.d_model = 16;
+        c.n_heads = 2;
+        c.n_kv_heads = 2;
+        c.d_ff = 24;
+        c.vocab_size = 32;
+        c.max_seq = 16;
+        c.n_layers = 2;
+        c
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(1);
+        let mut m = Model::init(&cfg, &mut rng);
+        let tokens: Vec<u32> = (0..2 * 8).map(|i| (i % 32) as u32).collect();
+        let (logits, cache) = m.forward_logits(&tokens, 2, 8, true);
+        assert_eq!(logits.shape(), &[16, 32]);
+        assert_eq!(cache.unwrap().block_caches.len(), 2);
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(2);
+        let mut m = Model::init(&cfg, &mut rng);
+        // Overfit a single repeating pattern.
+        let tokens: Vec<u32> = (0..8).map(|i| (i % 4) as u32).collect();
+        let targets: Vec<u32> = (1..9).map(|i| (i % 4) as u32).collect();
+        let mut opt = Adam::training(3e-3);
+        let mut states = AdamStates::new();
+        let (loss0, _) = m.loss_and_grads(&tokens, &targets, 1, 8);
+        let mut loss = loss0;
+        for _ in 0..60 {
+            let (l, grads) = m.loss_and_grads(&tokens, &targets, 1, 8);
+            m.apply_grads(&grads, &mut opt, &mut states);
+            loss = l;
+        }
+        assert!(loss < loss0 * 0.5, "loss {loss0} -> {loss}");
+    }
+
+    #[test]
+    fn model_grad_matches_finite_diff_on_embed() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(3);
+        let mut m = Model::init(&cfg, &mut rng);
+        let tokens: Vec<u32> = vec![1, 5, 2, 7];
+        let targets: Vec<u32> = vec![5, 2, 7, 1];
+        let (_, grads) = m.loss_and_grads(&tokens, &targets, 1, 4);
+        let h = 1e-2f32;
+        for &(t, j) in &[(1usize, 0usize), (5, 3), (7, 15)] {
+            let orig = m.embed.at2(t, j);
+            m.embed.set2(t, j, orig + h);
+            let (lp, _) = m.forward_logits(&tokens, 1, 4, false);
+            let lp = super::super::loss::cross_entropy_loss_only(&lp, &targets);
+            m.embed.set2(t, j, orig - h);
+            let (lm, _) = m.forward_logits(&tokens, 1, 4, false);
+            let lm = super::super::loss::cross_entropy_loss_only(&lm, &targets);
+            m.embed.set2(t, j, orig);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            let rel = (grads.embed.at2(t, j) - fd).abs() / (1e-3 + fd.abs());
+            assert!(rel < 0.05, "dembed({t},{j}): {} vs {fd}", grads.embed.at2(t, j));
+        }
+    }
+
+    #[test]
+    fn generation_matches_forward_argmax() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(4);
+        let mut m = Model::init(&cfg, &mut rng);
+        let prompt = vec![3u32, 9, 1];
+        let out = m.generate(&prompt, 3, 0.0, &mut rng);
+        assert_eq!(out.len(), 6);
+        // The first generated token must equal argmax of batch logits at the
+        // last prompt position.
+        let (logits, _) = m.forward_logits(&prompt, 1, 3, false);
+        let last = logits.row(2);
+        let argmax = last.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(out[3] as usize, argmax);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_dense() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(5);
+        let mut m = Model::init(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("aqlm_test_ckpt_dense.bin");
+        m.save(&dir).unwrap();
+        let mut m2 = Model::load(&dir).unwrap();
+        let tokens: Vec<u32> = vec![1, 2, 3, 4];
+        let (l1, _) = m.forward_logits(&tokens, 1, 4, false);
+        let (l2, _) = m2.forward_logits(&tokens, 1, 4, false);
+        assert!(l1.allclose(&l2, 1e-6));
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_aqlm_and_moe() {
+        let mut cfg = test_cfg();
+        cfg.n_experts = 2;
+        cfg.experts_top_k = 2;
+        let mut rng = Rng::seed_from_u64(6);
+        let mut m = Model::init(&cfg, &mut rng);
+        // Swap one linear for a random AQLM weight.
+        let q = crate::kernels::format::random_weight(
+            16,
+            16,
+            crate::kernels::format::AqlmShape::new(2, 4, 4),
+            &mut rng,
+        );
+        m.blocks[0].attn.wq = Linear::aqlm(q);
+        let path = std::env::temp_dir().join("aqlm_test_ckpt_q.bin");
+        m.save(&path).unwrap();
+        let mut m2 = Model::load(&path).unwrap();
+        assert!(m2.blocks[0].attn.wq.is_quantized());
+        let tokens: Vec<u32> = vec![9, 8, 7];
+        let (l1, _) = m.forward_logits(&tokens, 1, 3, false);
+        let (l2, _) = m2.forward_logits(&tokens, 1, 3, false);
+        assert!(l1.allclose(&l2, 1e-6));
+        assert!((m.avg_bits() - m2.avg_bits()).abs() < 1e-9);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn avg_bits_mixed_quantization() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(7);
+        let mut m = Model::init(&cfg, &mut rng);
+        assert_eq!(m.avg_bits(), 16.0);
+        // Small codebook so compression wins even at 16×16 (with B=8 the
+        // codebook overhead would exceed the dense size at this tiny dim —
+        // the same scaling fact that drives our per-model shape search).
+        let q = crate::kernels::format::random_weight(
+            16,
+            16,
+            crate::kernels::format::AqlmShape::new(1, 3, 4),
+            &mut rng,
+        );
+        m.blocks[0].attn.wq = Linear::aqlm(q);
+        let bits = m.avg_bits();
+        assert!(bits < 16.0 && bits > 1.0, "bits={bits}");
+        assert!(m.weight_bytes() < m.cfg.param_count() * 2);
+    }
+}

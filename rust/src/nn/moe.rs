@@ -1,0 +1,310 @@
+//! Mixture-of-experts feed-forward (Mixtral analog, paper Table 3/11).
+//!
+//! Top-k routing with softmax over the selected logits (the Mixtral rule).
+//! Following the paper's App. C, the router ("gate") is kept in full
+//! precision and never quantized; only the expert MLPs are. Forward groups
+//! tokens by expert so each expert runs one batched matmul; backward
+//! scatters gradients back through both the experts and the router.
+
+use super::block::{mlp_backward, mlp_decode_step, mlp_forward, Mlp, MlpCache};
+use super::linear::LinearGrad;
+use crate::tensor::ops::softmax_inplace;
+use crate::tensor::Tensor;
+
+/// MoE feed-forward layer.
+#[derive(Clone, Debug)]
+pub struct MoeLayer {
+    /// Router weights [n_experts, d] (full precision, like the paper).
+    pub gate: Tensor,
+    pub experts: Vec<Mlp>,
+    pub top_k: usize,
+}
+
+/// Cached routing decisions and per-expert activations.
+pub struct MoeCache {
+    /// Selected expert ids per token, [N][k].
+    pub sel: Vec<Vec<usize>>,
+    /// Routing weights per token (softmax over the k selected logits).
+    pub wsel: Vec<Vec<f32>>,
+    /// Per expert: (token, slot) pairs routed to it.
+    pub routed: Vec<Vec<(usize, usize)>>,
+    /// Per expert: stacked input rows [n_e, d].
+    pub inputs: Vec<Tensor>,
+    /// Per expert: MLP cache.
+    pub mlp: Vec<Option<MlpCache>>,
+    /// Per expert: output rows [n_e, d] (pre routing weight).
+    pub outputs: Vec<Tensor>,
+}
+
+/// Gradients for the MoE layer.
+pub struct MoeGrads {
+    pub gate: Tensor,
+    /// Per expert (wg, wu, wd).
+    pub experts: Vec<Option<(LinearGrad, LinearGrad, LinearGrad)>>,
+}
+
+impl MoeLayer {
+    pub fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Routing decision for one token's logits: top-k ids + softmax weights.
+    fn route(&self, logits: &[f32]) -> (Vec<usize>, Vec<f32>) {
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(self.top_k);
+        let mut w: Vec<f32> = idx.iter().map(|&e| logits[e]).collect();
+        softmax_inplace(&mut w);
+        (idx, w)
+    }
+
+    /// Forward over normalized inputs `xn` [N, d].
+    pub fn forward(&mut self, xn: &Tensor) -> (Tensor, MoeCache) {
+        let (n, d) = (xn.rows(), xn.cols());
+        let e_cnt = self.n_experts();
+        let logits_t = crate::tensor::ops::matmul_bt(xn, &self.gate);
+        let mut sel = Vec::with_capacity(n);
+        let mut wsel = Vec::with_capacity(n);
+        let mut routed: Vec<Vec<(usize, usize)>> = vec![Vec::new(); e_cnt];
+        for tok in 0..n {
+            let (ids, w) = self.route(logits_t.row(tok));
+            for (slot, &e) in ids.iter().enumerate() {
+                routed[e].push((tok, slot));
+            }
+            sel.push(ids);
+            wsel.push(w);
+        }
+        let mut out = Tensor::zeros(&[n, d]);
+        let mut inputs = Vec::with_capacity(e_cnt);
+        let mut mlp_caches = Vec::with_capacity(e_cnt);
+        let mut outputs = Vec::with_capacity(e_cnt);
+        for e in 0..e_cnt {
+            if routed[e].is_empty() {
+                inputs.push(Tensor::zeros(&[0, d]));
+                mlp_caches.push(None);
+                outputs.push(Tensor::zeros(&[0, d]));
+                continue;
+            }
+            let mut xe = Tensor::zeros(&[routed[e].len(), d]);
+            for (r, &(tok, _)) in routed[e].iter().enumerate() {
+                xe.row_mut(r).copy_from_slice(xn.row(tok));
+            }
+            let (ye, cache) = mlp_forward(&mut self.experts[e], &xe);
+            for (r, &(tok, slot)) in routed[e].iter().enumerate() {
+                let w = wsel[tok][slot];
+                let dst = out.row_mut(tok);
+                for (o, &v) in dst.iter_mut().zip(ye.row(r)) {
+                    *o += w * v;
+                }
+            }
+            inputs.push(xe);
+            mlp_caches.push(Some(cache));
+            outputs.push(ye);
+        }
+        (out, MoeCache { sel, wsel, routed, inputs, mlp: mlp_caches, outputs })
+    }
+
+    /// Backward. Returns (dxn, grads).
+    pub fn backward(&mut self, xn: &Tensor, cache: &MoeCache, dy: &Tensor) -> (Tensor, MoeGrads) {
+        let (n, d) = (xn.rows(), xn.cols());
+        let e_cnt = self.n_experts();
+        let mut dxn = Tensor::zeros(&[n, d]);
+        let mut dgate = Tensor::zeros(&[e_cnt, d]);
+        // d(routing weight) per token/slot, needed for the router gradient.
+        let mut dwsel: Vec<Vec<f32>> = cache.wsel.iter().map(|w| vec![0.0; w.len()]).collect();
+        let mut expert_grads: Vec<Option<(LinearGrad, LinearGrad, LinearGrad)>> = Vec::new();
+        for e in 0..e_cnt {
+            if cache.routed[e].is_empty() {
+                expert_grads.push(None);
+                continue;
+            }
+            let n_e = cache.routed[e].len();
+            // dout_e[r] = w_{tok,slot} · dy[tok]; also dw = dy[tok]·y_e[r].
+            let mut dout_e = Tensor::zeros(&[n_e, d]);
+            for (r, &(tok, slot)) in cache.routed[e].iter().enumerate() {
+                let w = cache.wsel[tok][slot];
+                let dyr = dy.row(tok);
+                let ye = cache.outputs[e].row(r);
+                dwsel[tok][slot] = crate::tensor::ops::dot(dyr, ye);
+                let dst = dout_e.row_mut(r);
+                for (o, &v) in dst.iter_mut().zip(dyr) {
+                    *o = w * v;
+                }
+            }
+            let (dxe, dwg, dwu, dwd) = mlp_backward(
+                &mut self.experts[e],
+                &cache.inputs[e],
+                cache.mlp[e].as_ref().unwrap(),
+                &dout_e,
+            );
+            for (r, &(tok, _)) in cache.routed[e].iter().enumerate() {
+                let dst = dxn.row_mut(tok);
+                for (o, &v) in dst.iter_mut().zip(dxe.row(r)) {
+                    *o += v;
+                }
+            }
+            expert_grads.push(Some((dwg, dwu, dwd)));
+        }
+        // Router backward: w = softmax(selected logits).
+        for tok in 0..n {
+            let w = &cache.wsel[tok];
+            let dw = &dwsel[tok];
+            let inner: f32 = w.iter().zip(dw).map(|(a, b)| a * b).sum();
+            for (slot, &e) in cache.sel[tok].iter().enumerate() {
+                let dlogit = w[slot] * (dw[slot] - inner);
+                if dlogit == 0.0 {
+                    continue;
+                }
+                // logit = <xn[tok], gate[e]>
+                let grow = self.gate.row(e).to_vec();
+                let dst = dxn.row_mut(tok);
+                for j in 0..d {
+                    dst[j] += dlogit * grow[j];
+                }
+                let gdst = dgate.row_mut(e);
+                for (g, &x) in gdst.iter_mut().zip(xn.row(tok)) {
+                    *g += dlogit * x;
+                }
+            }
+        }
+        (dxn, MoeGrads { gate: dgate, experts: expert_grads })
+    }
+
+    /// Single-token decode path.
+    pub fn decode_step(&mut self, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+        let e_cnt = self.n_experts();
+        let mut logits = vec![0.0f32; e_cnt];
+        crate::tensor::ops::gemv(&self.gate, xn, &mut logits);
+        let (ids, w) = self.route(&logits);
+        let mut out = vec![0.0f32; xn.len()];
+        for (slot, &e) in ids.iter().enumerate() {
+            let ye = mlp_decode_step(&mut self.experts[e], xn, lut_scratch);
+            for (o, &v) in out.iter_mut().zip(&ye) {
+                *o += w[slot] * v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::linear::Linear;
+    use crate::util::rng::Rng;
+
+    fn make_moe(d: usize, ff: usize, e: usize, k: usize, rng: &mut Rng) -> MoeLayer {
+        let experts = (0..e)
+            .map(|_| Mlp {
+                wg: Linear::dense(Tensor::randn(&[ff, d], 0.3, rng)),
+                wu: Linear::dense(Tensor::randn(&[ff, d], 0.3, rng)),
+                wd: Linear::dense(Tensor::randn(&[d, ff], 0.3, rng)),
+            })
+            .collect();
+        MoeLayer { gate: Tensor::randn(&[e, d], 0.3, rng), experts, top_k: k }
+    }
+
+    #[test]
+    fn routing_selects_topk_and_weights_sum_to_one() {
+        let mut rng = Rng::seed_from_u64(1);
+        let moe = make_moe(8, 12, 4, 2, &mut rng);
+        let logits = vec![0.1f32, 3.0, -1.0, 2.0];
+        let (ids, w) = moe.route(&logits);
+        assert_eq!(ids, vec![1, 3]);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(w[0] > w[1]);
+    }
+
+    #[test]
+    fn forward_output_is_weighted_expert_sum() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut moe = make_moe(8, 12, 3, 2, &mut rng);
+        let xn = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let (y, cache) = moe.forward(&xn);
+        // Recompute token 0 by hand.
+        let tok = 0;
+        let mut expect = vec![0.0f32; 8];
+        for (slot, &e) in cache.sel[tok].iter().enumerate() {
+            let xrow = Tensor::from_vec(&[1, 8], xn.row(tok).to_vec());
+            let (ye, _) = mlp_forward(&mut moe.experts[e], &xrow);
+            for j in 0..8 {
+                expect[j] += cache.wsel[tok][slot] * ye.at2(0, j);
+            }
+        }
+        for j in 0..8 {
+            assert!((y.at2(tok, j) - expect[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn backward_finite_diff_input_and_gate() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut moe = make_moe(6, 10, 3, 2, &mut rng);
+        let xn = Tensor::randn(&[4, 6], 0.8, &mut rng);
+        let dy = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let (_, cache) = moe.forward(&xn);
+        let (dxn, grads) = moe.backward(&xn, &cache, &dy);
+        let h = 5e-3f32;
+        // Input gradient. (Routing is piecewise constant; at generic points
+        // the top-k set doesn't change under small perturbation.)
+        for &(i, j) in &[(0usize, 0usize), (2, 3), (3, 5)] {
+            let mut xp = xn.clone();
+            xp.set2(i, j, xp.at2(i, j) + h);
+            let mut xm = xn.clone();
+            xm.set2(i, j, xm.at2(i, j) - h);
+            let (yp, _) = moe.forward(&xp);
+            let (ym, _) = moe.forward(&xm);
+            let fd = ((yp.dot(&dy) - ym.dot(&dy)) / (2.0 * h as f64)) as f32;
+            let rel = (dxn.at2(i, j) - fd).abs() / (1.0 + fd.abs());
+            assert!(rel < 3e-2, "dxn({i},{j}): {} vs {fd}", dxn.at2(i, j));
+        }
+        // Gate gradient.
+        for &(e, j) in &[(0usize, 1usize), (2, 4)] {
+            let mut save = moe.gate.at2(e, j);
+            moe.gate.set2(e, j, save + h);
+            let (yp, _) = moe.forward(&xn);
+            moe.gate.set2(e, j, save - h);
+            let (ym, _) = moe.forward(&xn);
+            moe.gate.set2(e, j, save);
+            save = moe.gate.at2(e, j);
+            let _ = save;
+            let fd = ((yp.dot(&dy) - ym.dot(&dy)) / (2.0 * h as f64)) as f32;
+            let rel = (grads.gate.at2(e, j) - fd).abs() / (1.0 + fd.abs());
+            assert!(rel < 3e-2, "dgate({e},{j}): {} vs {fd}", grads.gate.at2(e, j));
+        }
+    }
+
+    #[test]
+    fn decode_matches_batched() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut moe = make_moe(8, 12, 4, 2, &mut rng);
+        let xn = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let (y, _) = moe.forward(&xn);
+        let mut scratch = Vec::new();
+        for tok in 0..3 {
+            let yd = moe.decode_step(xn.row(tok), &mut scratch);
+            for j in 0..8 {
+                assert!((yd[j] - y.at2(tok, j)).abs() < 1e-4, "tok {tok} dim {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn unrouted_experts_receive_no_grads() {
+        let mut rng = Rng::seed_from_u64(5);
+        // Bias the gate so expert 0 always wins both slots... easiest: top_k
+        // == n_experts-1 with one expert having huge negative gate row.
+        let mut moe = make_moe(4, 6, 3, 1, &mut rng);
+        for v in moe.gate.row_mut(2) {
+            *v = -100.0;
+        }
+        // Strictly positive inputs so expert 2's logit is always very
+        // negative (a random-sign input could flip it positive).
+        let xn = Tensor::rand_uniform(&[4, 4], 0.1, 1.0, &mut rng);
+        let (_, cache) = moe.forward(&xn);
+        assert!(cache.routed[2].is_empty());
+        let dy = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let (_, grads) = moe.backward(&xn, &cache, &dy);
+        assert!(grads.experts[2].is_none());
+    }
+}

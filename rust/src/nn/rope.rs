@@ -1,0 +1,122 @@
+//! Rotary position embeddings (RoPE) with precomputed tables, plus the
+//! backward rotation (the transpose = inverse rotation).
+
+/// Precomputed cos/sin tables for all positions and head-dim pairs.
+#[derive(Clone, Debug)]
+pub struct Rope {
+    pub head_dim: usize,
+    pub max_seq: usize,
+    /// [max_seq, head_dim/2]
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl Rope {
+    pub fn new(head_dim: usize, max_seq: usize, theta: f32) -> Rope {
+        assert!(head_dim % 2 == 0);
+        let half = head_dim / 2;
+        let mut cos = vec![0.0f32; max_seq * half];
+        let mut sin = vec![0.0f32; max_seq * half];
+        for pos in 0..max_seq {
+            for i in 0..half {
+                let freq = 1.0 / (theta as f64).powf(2.0 * i as f64 / head_dim as f64);
+                let angle = pos as f64 * freq;
+                cos[pos * half + i] = angle.cos() as f32;
+                sin[pos * half + i] = angle.sin() as f32;
+            }
+        }
+        Rope { head_dim, max_seq, cos, sin }
+    }
+
+    /// Rotate one head vector `v` (length head_dim) in place for `pos`.
+    /// Pairs are (2i, 2i+1), LLaMA interleaved convention.
+    #[inline]
+    pub fn apply(&self, v: &mut [f32], pos: usize) {
+        debug_assert_eq!(v.len(), self.head_dim);
+        let half = self.head_dim / 2;
+        let c = &self.cos[pos * half..(pos + 1) * half];
+        let s = &self.sin[pos * half..(pos + 1) * half];
+        for i in 0..half {
+            let a = v[2 * i];
+            let b = v[2 * i + 1];
+            v[2 * i] = a * c[i] - b * s[i];
+            v[2 * i + 1] = a * s[i] + b * c[i];
+        }
+    }
+
+    /// Inverse rotation — the backward pass of [`Self::apply`] (rotation is
+    /// orthogonal, so the Jacobian transpose is the inverse rotation).
+    #[inline]
+    pub fn apply_inverse(&self, v: &mut [f32], pos: usize) {
+        debug_assert_eq!(v.len(), self.head_dim);
+        let half = self.head_dim / 2;
+        let c = &self.cos[pos * half..(pos + 1) * half];
+        let s = &self.sin[pos * half..(pos + 1) * half];
+        for i in 0..half {
+            let a = v[2 * i];
+            let b = v[2 * i + 1];
+            v[2 * i] = a * c[i] + b * s[i];
+            v[2 * i + 1] = -a * s[i] + b * c[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let rope = Rope::new(8, 16, 10_000.0);
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let orig = v.clone();
+        rope.apply(&mut v, 0);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let rope = Rope::new(16, 64, 10_000.0);
+        let mut rng = Rng::seed_from_u64(1);
+        for pos in [1, 7, 63] {
+            let mut v: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let before: f32 = v.iter().map(|x| x * x).sum();
+            rope.apply(&mut v, pos);
+            let after: f32 = v.iter().map(|x| x * x).sum();
+            assert!((before - after).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn inverse_undoes_apply() {
+        let rope = Rope::new(8, 32, 10_000.0);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut v: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let orig = v.clone();
+        rope.apply(&mut v, 13);
+        rope.apply_inverse(&mut v, 13);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relative_property_dot_depends_on_distance() {
+        // <R_p q, R_q k> should equal <R_{p+d} q, R_{q+d} k>.
+        let rope = Rope::new(8, 64, 10_000.0);
+        let mut rng = Rng::seed_from_u64(3);
+        let q: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let k: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let dot_at = |pq: usize, pk: usize| {
+            let mut qq = q.clone();
+            let mut kk = k.clone();
+            rope.apply(&mut qq, pq);
+            rope.apply(&mut kk, pk);
+            qq.iter().zip(&kk).map(|(a, b)| a * b).sum::<f32>()
+        };
+        let d1 = dot_at(5, 2);
+        let d2 = dot_at(25, 22);
+        assert!((d1 - d2).abs() < 1e-3, "{d1} vs {d2}");
+    }
+}

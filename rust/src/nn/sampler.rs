@@ -1,0 +1,74 @@
+//! Token sampling strategies for generation.
+
+use crate::tensor::ops::softmax_inplace;
+use crate::util::rng::Rng;
+
+/// Sample a token id from logits. `temperature == 0` is greedy argmax.
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits) as u32;
+    }
+    let mut probs: Vec<f32> = logits.iter().map(|&l| l / temperature).collect();
+    softmax_inplace(&mut probs);
+    rng.weighted(&probs) as u32
+}
+
+/// Top-k restricted sampling.
+pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 || k <= 1 {
+        return argmax(logits) as u32;
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(k);
+    let mut sub: Vec<f32> = idx.iter().map(|&i| logits[i] / temperature).collect();
+    softmax_inplace(&mut sub);
+    idx[rng.weighted(&sub)] as u32
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::seed_from_u64(0);
+        assert_eq!(sample(&[0.1, 5.0, -1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_respects_distribution() {
+        let mut rng = Rng::seed_from_u64(1);
+        let logits = [0.0f32, 2.0, 0.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..2000 {
+            counts[sample(&logits, 1.0, &mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > counts[0] * 2);
+        assert!(counts[0] > 0 && counts[2] > 0);
+    }
+
+    #[test]
+    fn topk_excludes_tail() {
+        let mut rng = Rng::seed_from_u64(2);
+        let logits = [1.0f32, 0.9, -10.0, -10.0];
+        for _ in 0..200 {
+            let t = sample_topk(&logits, 1.0, 2, &mut rng);
+            assert!(t < 2);
+        }
+    }
+
+    #[test]
+    fn argmax_first_on_empty_safe() {
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+    }
+}

@@ -1,0 +1,296 @@
+//! Phase 3 — block-level fine-tuning (paper §3.4).
+//!
+//! After all linear layers of a transformer block are quantized, the
+//! remaining continuous parameters are trained to reproduce the block's
+//! *pre-quantization* outputs: minimize `‖block(X_block) − Y_block‖²` by
+//! backpropagating through the weight representation (Eq. 2) with codes
+//! frozen. Trainable sets are selectable to reproduce the Table 7 ablation
+//! (none / RMSNorm-only / AQ-params-only / full) and, because the gradient
+//! also flows to [`GroupIntWeight`] scales, the same loop implements
+//! Appendix L's block-wise tuning for scalar (GPTQ) quantization.
+//!
+//! [`GroupIntWeight`]: crate::quant::groupint::GroupIntWeight
+
+use crate::nn::adam::{Adam, AdamState};
+use crate::nn::block::{Block, BlockGrads, Ffn, FfnGrads};
+use crate::nn::config::ModelConfig;
+use crate::nn::linear::{Linear, LinearGrad};
+use crate::nn::rope::Rope;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Which parameters the fine-tuning touches (Table 7's rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FtScope {
+    /// No fine-tuning at all.
+    None,
+    /// Only RMSNorm gains (the "RMSnorm" ablation row).
+    NormsOnly,
+    /// Only quantized-weight parameters: AQLM codebooks+scales / GroupInt
+    /// scales (the "AQ params" row).
+    QuantParamsOnly,
+    /// Everything continuous: norms + quant params + MoE router ("Full").
+    Full,
+}
+
+impl FtScope {
+    pub fn trains_norms(&self) -> bool {
+        matches!(self, FtScope::NormsOnly | FtScope::Full)
+    }
+    pub fn trains_quant_params(&self) -> bool {
+        matches!(self, FtScope::QuantParamsOnly | FtScope::Full)
+    }
+}
+
+/// Fine-tuning configuration (paper App. C: Adam β=(0.90,0.95), lr 1e-4,
+/// early stop on relative improvement τ ∈ [1e-3, 1e-2]).
+#[derive(Clone, Copy, Debug)]
+pub struct BlockFtConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub tol: f64,
+    pub scope: FtScope,
+}
+
+impl Default for BlockFtConfig {
+    fn default() -> Self {
+        BlockFtConfig { steps: 60, lr: 1e-3, tol: 1e-4, scope: FtScope::Full }
+    }
+}
+
+/// Fine-tune one block. `x_block` [B·S, d] are calibration inputs to the
+/// block, `y_target` the block's outputs recorded *before* quantization.
+/// Returns (mse before, mse after).
+pub fn finetune_block(
+    block: &mut Block,
+    cfg: &ModelConfig,
+    batch: usize,
+    seq: usize,
+    rope: &Rope,
+    x_block: &Tensor,
+    y_target: &Tensor,
+    ft: BlockFtConfig,
+) -> (f64, f64) {
+    let mse0 = {
+        let (y, _) = block.forward(x_block, cfg, batch, seq, rope, false);
+        y.mse(y_target)
+    };
+    if ft.scope == FtScope::None || ft.steps == 0 {
+        return (mse0, mse0);
+    }
+    let mut opt = Adam::paper_calibration(ft.lr);
+    let mut states: HashMap<String, AdamState> = HashMap::new();
+    let mut last = mse0;
+    for _ in 0..ft.steps {
+        let (y, cache) = block.forward(x_block, cfg, batch, seq, rope, true);
+        let loss = y.mse(y_target);
+        // dL/dy of mean-squared error.
+        let mut dy = y.sub(y_target);
+        dy.scale_assign(2.0 / y.len() as f32);
+        let (_, grads) = block.backward(cache.as_ref().unwrap(), cfg, batch, seq, rope, &dy);
+        opt.next_step();
+        apply_block_grads(block, &grads, &opt, &mut states, ft.scope);
+        let rel = if last > 0.0 { (last - loss) / last } else { 0.0 };
+        last = loss;
+        if rel.abs() < ft.tol && rel >= 0.0 {
+            break;
+        }
+    }
+    let mse1 = {
+        let (y, _) = block.forward(x_block, cfg, batch, seq, rope, false);
+        y.mse(y_target)
+    };
+    (mse0, mse1)
+}
+
+/// Apply block gradients restricted to the scope. Exposed for the
+/// end-to-end fine-tuner which reuses the same filtering.
+pub fn apply_block_grads(
+    block: &mut Block,
+    grads: &BlockGrads,
+    opt: &Adam,
+    states: &mut HashMap<String, AdamState>,
+    scope: FtScope,
+) {
+    let mut upd = |name: String, p: &mut [f32], g: &[f32]| {
+        let st = states.entry(name).or_insert_with(|| AdamState::new(p.len()));
+        opt.update(p, g, st);
+    };
+    if scope.trains_norms() {
+        upd("ln1".into(), &mut block.ln1, &grads.ln1);
+        upd("ln2".into(), &mut block.ln2, &grads.ln2);
+    }
+    if scope.trains_quant_params() {
+        let apply_lin = |name: &str, lin: &mut Linear, grad: &LinearGrad, upd: &mut dyn FnMut(String, &mut [f32], &[f32])| {
+            match (lin, grad) {
+                (lin @ Linear::Aqlm { .. }, LinearGrad::Aqlm { d_codebooks, d_scales }) => {
+                    if let Linear::Aqlm { q, .. } = lin {
+                        for (m, dcb) in d_codebooks.iter().enumerate() {
+                            upd(format!("{name}.cb{m}"), q.codebooks[m].data_mut(), dcb.data());
+                        }
+                        upd(format!("{name}.s"), &mut q.scales, d_scales);
+                    }
+                    lin.invalidate();
+                }
+                (lin @ Linear::GroupInt { .. }, LinearGrad::GroupInt { d_scales }) => {
+                    if let Linear::GroupInt { q, .. } = lin {
+                        upd(format!("{name}.s"), &mut q.scales, d_scales);
+                    }
+                    lin.invalidate();
+                }
+                // Dense weights are never fine-tuned at block level (the
+                // paper freezes them; only quantized representations and
+                // norms move).
+                (Linear::Dense(_), _) => {}
+                _ => {}
+            }
+        };
+        apply_lin("wq", &mut block.attn.wq, &grads.wq, &mut upd);
+        apply_lin("wk", &mut block.attn.wk, &grads.wk, &mut upd);
+        apply_lin("wv", &mut block.attn.wv, &grads.wv, &mut upd);
+        apply_lin("wo", &mut block.attn.wo, &grads.wo, &mut upd);
+        match (&mut block.ffn, &grads.ffn) {
+            (Ffn::Dense(mlp), FfnGrads::Dense { wg, wu, wd }) => {
+                apply_lin("wg", &mut mlp.wg, wg, &mut upd);
+                apply_lin("wu", &mut mlp.wu, wu, &mut upd);
+                apply_lin("wd", &mut mlp.wd, wd, &mut upd);
+            }
+            (Ffn::Moe(moe), FfnGrads::Moe(mg)) => {
+                if scope == FtScope::Full {
+                    // Router is a non-quantized continuous parameter.
+                    upd("gate".into(), moe.gate.data_mut(), mg.gate.data());
+                }
+                for (ei, (e, eg)) in moe.experts.iter_mut().zip(&mg.experts).enumerate() {
+                    if let Some((wg, wu, wd)) = eg {
+                        apply_lin(&format!("e{ei}.wg"), &mut e.wg, wg, &mut upd);
+                        apply_lin(&format!("e{ei}.wu"), &mut e.wu, wu, &mut upd);
+                        apply_lin(&format!("e{ei}.wd"), &mut e.wd, wd, &mut upd);
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::format::AqlmShape;
+    use crate::nn::model::Model;
+    use crate::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
+    use crate::quant::CalibData;
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> ModelConfig {
+        let mut c = ModelConfig::nano();
+        c.d_model = 16;
+        c.n_heads = 2;
+        c.n_kv_heads = 2;
+        c.d_ff = 24;
+        c.max_seq = 8;
+        c
+    }
+
+    /// Build a block, record its FP outputs, quantize all its linears with
+    /// fast AQLM, return (block, x, y_target).
+    fn quantized_block(seed: u64) -> (Block, ModelConfig, Rope, Tensor, Tensor) {
+        let cfg = small_cfg();
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut block = Model::init_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[4 * 8, cfg.d_model], 1.0, &mut rng);
+        let (y, _) = block.forward(&x, &cfg, 4, 8, &rope, false);
+        // Quantize every linear (aggressively, so FT has something to fix).
+        let shape = AqlmShape::new(1, 3, 4);
+        let lq = LayerQuantizer::new(AqlmLayerConfig::fast(shape));
+        for (_, lin) in block.linears_mut() {
+            let w = lin.weight_owned();
+            let calib = CalibData::identity(w.cols());
+            let (q, _) = lq.quantize(&w, &calib, &mut rng);
+            *lin = Linear::aqlm(q);
+        }
+        (block, cfg, rope, x, y)
+    }
+
+    #[test]
+    fn full_ft_reduces_block_mse() {
+        let (mut block, cfg, rope, x, y) = quantized_block(1);
+        let ft = BlockFtConfig { steps: 40, lr: 3e-3, tol: 0.0, scope: FtScope::Full };
+        let (before, after) = finetune_block(&mut block, &cfg, 4, 8, &rope, &x, &y, ft);
+        assert!(after < before * 0.9, "block FT: {before} -> {after}");
+    }
+
+    #[test]
+    fn scope_none_is_identity() {
+        let (mut block, cfg, rope, x, y) = quantized_block(2);
+        let ft = BlockFtConfig { scope: FtScope::None, ..Default::default() };
+        let (before, after) = finetune_block(&mut block, &cfg, 4, 8, &rope, &x, &y, ft);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn table7_ordering_aq_params_matter_most() {
+        // Reproduces the Table 7 finding: tuning AQ params ≈ full tuning,
+        // both much better than norms-only.
+        let (block0, cfg, rope, x, y) = quantized_block(3);
+        let run = |scope: FtScope| {
+            let mut b = block0.clone();
+            let ft = BlockFtConfig { steps: 40, lr: 3e-3, tol: 0.0, scope };
+            finetune_block(&mut b, &cfg, 4, 8, &rope, &x, &y, ft).1
+        };
+        let none = run(FtScope::None);
+        let norms = run(FtScope::NormsOnly);
+        let aq = run(FtScope::QuantParamsOnly);
+        let full = run(FtScope::Full);
+        assert!(aq < norms, "aq {aq} !< norms {norms}");
+        assert!(full < norms, "full {full} !< norms {norms}");
+        assert!(aq < none * 0.95);
+        // norms-only is comparable to no fine-tuning (Table 7's finding).
+        assert!(norms < none * 1.05);
+    }
+
+    #[test]
+    fn codes_stay_frozen_during_ft() {
+        let (mut block, cfg, rope, x, y) = quantized_block(4);
+        let codes_before: Vec<Vec<u16>> = block
+            .linears_mut()
+            .iter()
+            .filter_map(|(_, l)| match l {
+                Linear::Aqlm { q, .. } => Some(q.codes.clone()),
+                _ => None,
+            })
+            .collect();
+        let ft = BlockFtConfig { steps: 10, lr: 3e-3, tol: 0.0, scope: FtScope::Full };
+        finetune_block(&mut block, &cfg, 4, 8, &rope, &x, &y, ft);
+        let codes_after: Vec<Vec<u16>> = block
+            .linears_mut()
+            .iter()
+            .filter_map(|(_, l)| match l {
+                Linear::Aqlm { q, .. } => Some(q.codes.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(codes_before, codes_after);
+    }
+
+    #[test]
+    fn appendix_l_gptq_scale_tuning_helps() {
+        // Quantize the block's linears with 2-bit grouped RTN (stand-in for
+        // GPTQ storage, same GroupInt format) and tune scales.
+        let cfg = small_cfg();
+        let mut rng = Rng::seed_from_u64(5);
+        let mut block = Model::init_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let x = Tensor::randn(&[4 * 8, cfg.d_model], 1.0, &mut rng);
+        let (y, _) = block.forward(&x, &cfg, 4, 8, &rope, false);
+        for (_, lin) in block.linears_mut() {
+            let w = lin.weight_owned();
+            let q = crate::quant::rtn::rtn_quantize(&w, crate::quant::rtn::RtnConfig::new(2, 8));
+            *lin = Linear::group_int(q);
+        }
+        let ft = BlockFtConfig { steps: 40, lr: 3e-3, tol: 0.0, scope: FtScope::Full };
+        let (before, after) = finetune_block(&mut block, &cfg, 4, 8, &rope, &x, &y, ft);
+        assert!(after < before * 0.95, "App L tuning: {before} -> {after}");
+    }
+}

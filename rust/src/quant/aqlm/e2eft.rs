@@ -1,0 +1,139 @@
+//! Appendix A — end-to-end fine-tuning via knowledge distillation.
+//!
+//! The quantized student mimics the FP teacher: minimize mean
+//! KL(p_teacher ‖ p_student) over calibration sequences (Eq. 9), training
+//! only the continuous calibration parameters — codebooks, scales, RMSNorm
+//! gains (incl. the final norm) and MoE routers — with Adam at lr 1e-5
+//! (β = 0.90/0.95), codes frozen. This is the "★" configuration of
+//! Tables 4/6/13/15.
+
+use super::blockft::{apply_block_grads, FtScope};
+use crate::data::dataset::TokenDataset;
+use crate::nn::adam::{Adam, AdamState};
+use crate::nn::loss::kl_distill;
+use crate::nn::model::Model;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// End-to-end fine-tuning configuration (paper App. A defaults, scaled).
+#[derive(Clone, Copy, Debug)]
+pub struct E2eFtConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+}
+
+impl Default for E2eFtConfig {
+    fn default() -> Self {
+        // Paper: one epoch over the calibration set, lr 1e-5, batch 8–16.
+        // Our models are ~1000× smaller; lr 1e-4 reaches the same relative
+        // improvement in far fewer steps (insensitivity noted in App. C).
+        E2eFtConfig { steps: 60, batch: 8, lr: 1e-4 }
+    }
+}
+
+/// Run KD fine-tuning of `student` against `teacher` on `data`.
+/// Returns the per-step KL losses.
+pub fn e2e_finetune(
+    student: &mut Model,
+    teacher: &mut Model,
+    data: &TokenDataset,
+    cfg: E2eFtConfig,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let seq = data.seq_len.min(student.cfg.max_seq);
+    let mut opt = Adam::paper_calibration(cfg.lr);
+    // Per-block optimizer states + final-norm state.
+    let mut block_states: Vec<HashMap<String, AdamState>> =
+        (0..student.blocks.len()).map(|_| HashMap::new()).collect();
+    let mut lnf_state = AdamState::new(student.ln_f.len());
+    let mut losses = Vec::with_capacity(cfg.steps);
+
+    for _ in 0..cfg.steps {
+        let (inputs, _) = data.sample_batch(cfg.batch, rng);
+        let inputs: Vec<u32> = inputs;
+        let (t_logits, _) = teacher.forward_logits(&inputs, cfg.batch, seq, false);
+        let (s_logits, cache) = student.forward_logits(&inputs, cfg.batch, seq, true);
+        let (kl, dlogits) = kl_distill(&t_logits, &s_logits);
+        losses.push(kl);
+        let grads = student.backward_from_dlogits(cache.as_ref().unwrap(), cfg.batch, seq, &dlogits);
+        opt.next_step();
+        // Final norm is a trainable non-quantized parameter.
+        opt.update(&mut student.ln_f, &grads.ln_f, &mut lnf_state);
+        for (bi, (block, bg)) in student.blocks.iter_mut().zip(&grads.blocks).enumerate() {
+            apply_block_grads(block, bg, &opt, &mut block_states[bi], FtScope::Full);
+        }
+        // Embeddings / LM head stay frozen (they are not calibration
+        // parameters in the paper's App. A setup).
+    }
+    losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::format::AqlmShape;
+    use crate::nn::config::ModelConfig;
+    use crate::nn::linear::Linear;
+    use crate::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
+    use crate::quant::CalibData;
+
+    fn small_cfg() -> ModelConfig {
+        let mut c = ModelConfig::nano();
+        c.d_model = 16;
+        c.n_heads = 2;
+        c.n_kv_heads = 2;
+        c.d_ff = 24;
+        c.vocab_size = 32;
+        c.max_seq = 16;
+        c.n_layers = 2;
+        c
+    }
+
+    #[test]
+    fn kd_reduces_kl_to_teacher() {
+        let cfg = small_cfg();
+        let mut rng = Rng::seed_from_u64(1);
+        let mut teacher = Model::init(&cfg, &mut rng);
+        let mut student = teacher.clone();
+        // Aggressively quantize the student's block linears.
+        let lq = LayerQuantizer::new(AqlmLayerConfig::fast(AqlmShape::new(1, 3, 4)));
+        for block in &mut student.blocks {
+            for (_, lin) in block.linears_mut() {
+                let w = lin.weight_owned();
+                let calib = CalibData::identity(w.cols());
+                let (q, _) = lq.quantize(&w, &calib, &mut rng);
+                *lin = Linear::aqlm(q);
+            }
+        }
+        let data = TokenDataset::new((0..2000).map(|i| (i % 32) as u32).collect(), 8);
+        let ft = E2eFtConfig { steps: 30, batch: 4, lr: 1e-3 };
+        let losses = e2e_finetune(&mut student, &mut teacher, &data, ft, &mut rng);
+        let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+        let tail: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(tail < head * 0.8, "KL did not drop: {head} -> {tail}");
+    }
+
+    #[test]
+    fn embeddings_and_head_stay_frozen() {
+        let cfg = small_cfg();
+        let mut rng = Rng::seed_from_u64(2);
+        let mut teacher = Model::init(&cfg, &mut rng);
+        let mut student = teacher.clone();
+        let lq = LayerQuantizer::new(AqlmLayerConfig::fast(AqlmShape::new(1, 3, 4)));
+        for block in &mut student.blocks {
+            for (_, lin) in block.linears_mut() {
+                let w = lin.weight_owned();
+                let calib = CalibData::identity(w.cols());
+                let (q, _) = lq.quantize(&w, &calib, &mut rng);
+                *lin = Linear::aqlm(q);
+            }
+        }
+        let embed_before = student.embed.clone();
+        let head_before = student.head.weight_owned();
+        let data = TokenDataset::new((0..500).map(|i| (i % 32) as u32).collect(), 8);
+        e2e_finetune(&mut student, &mut teacher, &data, E2eFtConfig { steps: 5, batch: 2, lr: 1e-3 }, &mut rng);
+        assert!(student.embed.allclose(&embed_before, 0.0));
+        assert!(student.head.weight_owned().allclose(&head_before, 0.0));
+    }
+}

@@ -1,0 +1,264 @@
+//! Residual K-means initialization (paper §3.1, following Chen et al. 2010).
+//!
+//! Weight rows are first normalized by the per-unit scales `s_i = ‖W_i‖₂`
+//! (§3.3), then every length-`g` group becomes a point in R^g. Codebook 1
+//! is K-means over the points; each subsequent codebook is K-means over the
+//! residuals left by the previous ones — so codebook `m` is initialized to
+//! compensate the quantization error of codebooks `1..m-1`. Figure 4 of the
+//! paper (reproduced by bench `f4`) shows why this matters vs random init.
+
+use crate::kernels::format::{AqlmShape, AqlmWeight};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Plain Lloyd K-means on `points` [n, g]. Returns (centroids [k, g],
+/// assignment per point). Empty clusters are re-seeded from the farthest
+/// points.
+pub fn kmeans(points: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> (Tensor, Vec<u16>) {
+    let (n, g) = (points.rows(), points.cols());
+    assert!(n > 0);
+    // Init: sample k points (with replacement when n < k).
+    let mut centroids = Tensor::zeros(&[k, g]);
+    for c in 0..k {
+        let idx = rng.below(n);
+        centroids.row_mut(c).copy_from_slice(points.row(idx));
+    }
+    let mut assign = vec![0u16; n];
+    let mut dists = vec![0.0f32; n];
+    for _ in 0..iters {
+        // Assignment step.
+        for p in 0..n {
+            let (best, d) = nearest(points.row(p), &centroids);
+            assign[p] = best as u16;
+            dists[p] = d;
+        }
+        // Update step.
+        let mut sums = vec![0.0f64; k * g];
+        let mut counts = vec![0usize; k];
+        for p in 0..n {
+            let a = assign[p] as usize;
+            counts[a] += 1;
+            for (s, &v) in sums[a * g..(a + 1) * g].iter_mut().zip(points.row(p)) {
+                *s += v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed from the currently worst-fit point.
+                let worst = dists
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                centroids.row_mut(c).copy_from_slice(points.row(worst));
+                dists[worst] = 0.0;
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                let row = centroids.row_mut(c);
+                for (t, &s) in row.iter_mut().zip(&sums[c * g..(c + 1) * g]) {
+                    *t = (s * inv) as f32;
+                }
+            }
+        }
+    }
+    // Final assignment against the last centroids.
+    for p in 0..n {
+        let (best, _) = nearest(points.row(p), &centroids);
+        assign[p] = best as u16;
+    }
+    (centroids, assign)
+}
+
+#[inline]
+fn nearest(point: &[f32], centroids: &Tensor) -> (usize, f32) {
+    let g = centroids.cols();
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..centroids.rows() {
+        let row = &centroids.data()[c * g..(c + 1) * g];
+        let mut d = 0.0f32;
+        for t in 0..g {
+            let diff = point[t] - row[t];
+            d += diff * diff;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+/// Residual K-means initialization of a full [`AqlmWeight`].
+pub fn residual_kmeans_init(
+    w: &Tensor,
+    shape: AqlmShape,
+    kmeans_iters: usize,
+    rng: &mut Rng,
+) -> AqlmWeight {
+    let (d_out, d_in) = (w.rows(), w.cols());
+    let g = shape.group;
+    assert_eq!(d_in % g, 0);
+    let n_groups = d_in / g;
+    let k = 1usize << shape.code_bits;
+
+    // Per-unit scales (paper §3.3): s_i = ‖W_i‖₂; groups are taken from the
+    // normalized rows so one codebook serves all rows.
+    let scales: Vec<f32> = (0..d_out)
+        .map(|i| {
+            let n = w.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32;
+            if n > 0.0 {
+                n
+            } else {
+                1.0
+            }
+        })
+        .collect();
+
+    // Points: every group of every normalized row.
+    let mut residual = Tensor::zeros(&[d_out * n_groups, g]);
+    for i in 0..d_out {
+        let inv = 1.0 / scales[i];
+        for j in 0..n_groups {
+            let dst = residual.row_mut(i * n_groups + j);
+            for t in 0..g {
+                dst[t] = w.at2(i, j * g + t) * inv;
+            }
+        }
+    }
+
+    let mut codebooks = Vec::with_capacity(shape.n_codebooks);
+    let mut codes = vec![0u16; d_out * n_groups * shape.n_codebooks];
+    for m in 0..shape.n_codebooks {
+        let (centroids, assign) = kmeans(&residual, k, kmeans_iters, rng);
+        // Subtract the assigned centroid from each point.
+        for p in 0..residual.rows() {
+            let a = assign[p] as usize;
+            let cent = centroids.row(a).to_vec();
+            let row = residual.row_mut(p);
+            for t in 0..g {
+                row[t] -= cent[t];
+            }
+            codes[p * shape.n_codebooks + m] = assign[p];
+        }
+        codebooks.push(centroids);
+    }
+
+    AqlmWeight {
+        d_out,
+        d_in,
+        group: g,
+        n_codebooks: shape.n_codebooks,
+        code_bits: shape.code_bits,
+        codes,
+        codebooks,
+        scales,
+    }
+}
+
+/// Random initialization baseline for the Figure 4 ablation: codebooks are
+/// small Gaussians, codes uniform.
+pub fn random_init(w: &Tensor, shape: AqlmShape, rng: &mut Rng) -> AqlmWeight {
+    let (d_out, d_in) = (w.rows(), w.cols());
+    let g = shape.group;
+    let n_groups = d_in / g;
+    let k = 1usize << shape.code_bits;
+    let scales: Vec<f32> = (0..d_out)
+        .map(|i| {
+            let n = w.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32;
+            n.max(1e-8)
+        })
+        .collect();
+    let codebooks: Vec<Tensor> = (0..shape.n_codebooks)
+        .map(|_| Tensor::randn(&[k, g], 0.02, rng))
+        .collect();
+    let codes: Vec<u16> =
+        (0..d_out * n_groups * shape.n_codebooks).map(|_| rng.below(k) as u16).collect();
+    AqlmWeight {
+        d_out,
+        d_in,
+        group: g,
+        n_codebooks: shape.n_codebooks,
+        code_bits: shape.code_bits,
+        codes,
+        codebooks,
+        scales,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_separates_clear_clusters() {
+        let mut rng = Rng::seed_from_u64(1);
+        // Two well-separated blobs.
+        let mut pts = Vec::new();
+        for _ in 0..50 {
+            pts.push(10.0 + 0.1 * rng.normal() as f32);
+            pts.push(10.0 + 0.1 * rng.normal() as f32);
+        }
+        for _ in 0..50 {
+            pts.push(-10.0 + 0.1 * rng.normal() as f32);
+            pts.push(-10.0 + 0.1 * rng.normal() as f32);
+        }
+        let points = Tensor::from_vec(&[100, 2], pts);
+        let (centroids, assign) = kmeans(&points, 2, 20, &mut rng);
+        // Each blob gets one centroid near its mean.
+        let c0 = centroids.row(0)[0];
+        let c1 = centroids.row(1)[0];
+        assert!((c0 - c1).abs() > 15.0, "{c0} vs {c1}");
+        // Consistent assignment within blobs.
+        assert!(assign[..50].iter().all(|&a| a == assign[0]));
+        assert!(assign[50..].iter().all(|&a| a == assign[50]));
+        assert_ne!(assign[0], assign[50]);
+    }
+
+    #[test]
+    fn kmeans_handles_more_clusters_than_points() {
+        let mut rng = Rng::seed_from_u64(2);
+        let points = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let (centroids, assign) = kmeans(&points, 8, 5, &mut rng);
+        assert_eq!(centroids.rows(), 8);
+        assert!(assign.iter().all(|&a| a < 8));
+    }
+
+    #[test]
+    fn residual_init_is_valid_and_better_than_random() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Tensor::randn(&[16, 32], 0.5, &mut rng);
+        let shape = AqlmShape::new(2, 4, 4);
+        let q = residual_kmeans_init(&w, shape, 10, &mut rng);
+        q.validate().unwrap();
+        let qr = random_init(&w, shape, &mut rng);
+        qr.validate().unwrap();
+        let err_kmeans = q.decode().mse(&w);
+        let err_random = qr.decode().mse(&w);
+        assert!(
+            err_kmeans < err_random * 0.7,
+            "kmeans {err_kmeans} not clearly better than random {err_random}"
+        );
+    }
+
+    #[test]
+    fn second_codebook_reduces_error() {
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Tensor::randn(&[16, 32], 0.5, &mut rng);
+        let e1 = residual_kmeans_init(&w, AqlmShape::new(1, 4, 4), 10, &mut rng).decode().mse(&w);
+        let e2 = residual_kmeans_init(&w, AqlmShape::new(2, 4, 4), 10, &mut rng).decode().mse(&w);
+        assert!(e2 < e1, "{e2} !< {e1}");
+    }
+
+    #[test]
+    fn scales_are_row_norms() {
+        let mut rng = Rng::seed_from_u64(5);
+        let w = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let q = residual_kmeans_init(&w, AqlmShape::new(1, 3, 4), 5, &mut rng);
+        for i in 0..4 {
+            let norm = w.row(i).iter().map(|&v| v * v).sum::<f32>().sqrt();
+            assert!((q.scales[i] - norm).abs() < 1e-5);
+        }
+    }
+}

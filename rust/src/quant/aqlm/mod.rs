@@ -1,0 +1,28 @@
+//! AQLM — Additive Quantization for Language Models (paper §3).
+//!
+//! The three phases of Algorithm 1, plus the end-to-end extension:
+//!
+//! - [`kmeans`] — residual K-means initialization (§3.1, ablated in Fig. 4).
+//! - [`beam`] — Phase 1: beam search over the fully-connected discrete MRF
+//!   objective `‖WX − ŴX‖²` written in `XXᵀ` form (Eq. 4–7).
+//! - [`codebook`] — Phase 2: Adam updates of codebooks + per-unit scales on
+//!   the same objective (Eq. 8, §3.3).
+//! - [`layer`] — the alternating per-layer loop tying 1+2 together.
+//! - [`blockft`] — Phase 3: block-level fine-tuning of codebooks, scales and
+//!   RMSNorm gains against pre-quantization block outputs (§3.4), including
+//!   the restricted-scope variants of the Table 7 ablation and the
+//!   Appendix-L scalar-quantization tuning.
+//! - [`e2eft`] — Appendix A: end-to-end KD fine-tuning (KL to the FP
+//!   teacher) of the same parameter set.
+//!
+//! The compressed-weight *format* itself lives in
+//! [`crate::kernels::format`] so the inference kernels share it.
+
+pub mod kmeans;
+pub mod beam;
+pub mod codebook;
+pub mod layer;
+pub mod blockft;
+pub mod e2eft;
+
+pub use layer::{AqlmLayerConfig, LayerQuantizer};

@@ -1,0 +1,246 @@
+//! GPTQ (Frantar et al., 2022): data-aware scalar quantization with
+//! error feedback through the inverse Hessian.
+//!
+//! We implement the mathematically exact OBQ/GPTQ update rather than the
+//! Cholesky streaming trick: maintain the inverse Hessian of the *remaining*
+//! columns explicitly and rank-1 downdate it after each column. At our
+//! layer sizes (d_in ≤ 768) the O(d³) total cost is negligible and the
+//! result is identical (the Cholesky form is an optimization of exactly
+//! this recursion).
+//!
+//! Per the paper's experimental configuration (App. C), the GPTQ baseline
+//! runs **without grouping** (one scale per output row) and **with
+//! act_order** (columns processed by decreasing Hessian diagonal). Grouped
+//! operation (used by SpQR-lite's base quantizer) is also supported.
+
+use super::groupint::GroupIntWeight;
+use super::CalibData;
+use crate::tensor::linalg::{add_diag, diag_mean, inverse_spd};
+use crate::tensor::Tensor;
+
+/// GPTQ configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GptqConfig {
+    pub bits: usize,
+    /// Group size for scales; `usize::MAX` ⇒ one group per row (per-row
+    /// scale, the paper's GPTQ setting).
+    pub group: usize,
+    /// Process columns in decreasing Hessian-diagonal order.
+    pub act_order: bool,
+    /// Damping fraction of mean(diag(H)) (GPTQ's `percdamp`).
+    pub percdamp: f32,
+}
+
+impl GptqConfig {
+    /// The paper's GPTQ baseline configuration at a given bit width.
+    pub fn paper(bits: usize) -> GptqConfig {
+        GptqConfig { bits, group: usize::MAX, act_order: true, percdamp: 0.01 }
+    }
+
+    pub fn grouped(bits: usize, group: usize) -> GptqConfig {
+        GptqConfig { bits, group, act_order: false, percdamp: 0.01 }
+    }
+}
+
+/// Quantize `w` with GPTQ against calibration statistics.
+pub fn gptq_quantize(w: &Tensor, calib: &CalibData, cfg: GptqConfig) -> anyhow::Result<GroupIntWeight> {
+    let (d_out, d_in) = (w.rows(), w.cols());
+    let group = if cfg.group == usize::MAX { d_in } else { cfg.group };
+    anyhow::ensure!(d_in % group == 0, "d_in {d_in} not divisible by group {group}");
+    anyhow::ensure!(!cfg.act_order || group == d_in, "act_order requires per-row scales");
+    let n_groups = d_in / group;
+    let qmax = ((1usize << cfg.bits) - 1) as f32;
+
+    // Damped Hessian H = XXᵀ + λI (the conventional 2× factor cancels in
+    // the update, which only uses ratios of H⁻¹ entries).
+    let mut h = calib.xxt.clone();
+    // Dead inputs (zero activation) break the inverse; give them unit curvature.
+    for i in 0..d_in {
+        if h.at2(i, i) <= 0.0 {
+            h.set2(i, i, 1.0);
+        }
+    }
+    let damp = (cfg.percdamp * diag_mean(&h)).max(1e-8);
+    add_diag(&mut h, damp);
+    let mut hinv = inverse_spd(&h)?;
+
+    // Column order.
+    let mut order: Vec<usize> = (0..d_in).collect();
+    if cfg.act_order {
+        order.sort_by(|&a, &b| h.at2(b, b).partial_cmp(&h.at2(a, a)).unwrap());
+    }
+
+    // Work on Wᵀ so "columns" are contiguous rows.
+    let mut wt = w.transpose(); // [d_in, d_out]
+    let mut qcodes = vec![0u16; d_out * d_in];
+    let mut scales = vec![0.0f32; d_out * n_groups];
+    let mut zeros = vec![0.0f32; d_out * n_groups];
+
+    // Per-row grids. For per-row scales (group == d_in) compute them once
+    // from the original weights; for grouped mode compute at each group
+    // boundary from the *current* (feedback-updated) weights, like the
+    // official implementation.
+    let compute_grid = |rows_cols: &[usize], wt: &Tensor, grp: usize, scales: &mut [f32], zeros: &mut [f32]| {
+        for r in 0..d_out {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &c in rows_cols {
+                let v = wt.at2(c, r);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            // Symmetric-ish guard for degenerate spans.
+            if lo == hi {
+                hi = lo + 1e-6;
+            }
+            let s = (hi - lo) / qmax;
+            scales[r * n_groups + grp] = s;
+            zeros[r * n_groups + grp] = -lo / s;
+        }
+    };
+
+    if group == d_in {
+        let cols: Vec<usize> = (0..d_in).collect();
+        compute_grid(&cols, &wt, 0, &mut scales, &mut zeros);
+    }
+
+    let mut err = vec![0.0f32; d_out];
+    for (step, &c) in order.iter().enumerate() {
+        let grp = c / group;
+        if group < d_in && c % group == 0 {
+            // Entering a new group (sequential order): fit its grid now.
+            let cols: Vec<usize> = (c..c + group).collect();
+            compute_grid(&cols, &wt, grp, &mut scales, &mut zeros);
+        }
+        let dcc = hinv.at2(c, c);
+        // Quantize column c of every row.
+        for r in 0..d_out {
+            let s = scales[r * n_groups + grp];
+            let z = zeros[r * n_groups + grp];
+            let v = wt.at2(c, r);
+            let q = (v / s + z).round().clamp(0.0, qmax);
+            qcodes[r * d_in + c] = q as u16;
+            let deq = s * (q - z);
+            err[r] = (v - deq) / dcc;
+            wt.set2(c, r, deq);
+        }
+        // Feedback into all not-yet-processed columns.
+        if step + 1 < order.len() {
+            for &j in &order[step + 1..] {
+                let factor = hinv.at2(c, j);
+                if factor == 0.0 {
+                    continue;
+                }
+                let row_j = wt.row_mut(j);
+                for r in 0..d_out {
+                    row_j[r] -= err[r] * factor;
+                }
+            }
+            // Rank-1 downdate of the inverse Hessian (remove column c).
+            let col_c: Vec<f32> = (0..d_in).map(|i| hinv.at2(i, c)).collect();
+            let inv_dcc = 1.0 / dcc;
+            for i in 0..d_in {
+                let ci = col_c[i] * inv_dcc;
+                if ci == 0.0 {
+                    continue;
+                }
+                let row_i = hinv.row_mut(i);
+                for j in 0..d_in {
+                    row_i[j] -= ci * col_c[j];
+                }
+            }
+            // Neutralize row/col c so later reads are exactly zero.
+            for i in 0..d_in {
+                hinv.set2(i, c, 0.0);
+                hinv.set2(c, i, 0.0);
+            }
+            hinv.set2(c, c, 1.0);
+        }
+    }
+
+    Ok(GroupIntWeight { d_out, d_in, group, bits: cfg.bits, qcodes, scales, zeros })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::{rtn_quantize, RtnConfig};
+    use crate::quant::{relative_layer_error, CalibData};
+    use crate::util::rng::Rng;
+
+    fn correlated_calib(d: usize, n: usize, rng: &mut Rng) -> CalibData {
+        // Activations with strongly non-uniform per-dimension scales, the
+        // regime where data-aware quantization matters.
+        let mut x = Tensor::zeros(&[n, d]);
+        for i in 0..n {
+            let row = x.row_mut(i);
+            for j in 0..d {
+                let scale = 0.1 + 3.0 * (j as f32 / d as f32);
+                row[j] = rng.normal_f32(0.0, scale);
+            }
+        }
+        let mut c = CalibData::new(d);
+        c.accumulate(&x);
+        c
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_output_error() {
+        let mut rng = Rng::seed_from_u64(1);
+        let w = Tensor::randn(&[24, 32], 1.0, &mut rng);
+        let calib = correlated_calib(32, 256, &mut rng);
+        let e_rtn =
+            relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 32)).decode(), &calib);
+        let q = gptq_quantize(&w, &calib, GptqConfig::paper(3)).unwrap();
+        let e_gptq = relative_layer_error(&w, &q.decode(), &calib);
+        assert!(e_gptq < e_rtn, "gptq {e_gptq} !< rtn {e_rtn}");
+    }
+
+    #[test]
+    fn gptq_high_bits_near_lossless() {
+        let mut rng = Rng::seed_from_u64(2);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let calib = correlated_calib(16, 64, &mut rng);
+        let q = gptq_quantize(&w, &calib, GptqConfig::paper(8)).unwrap();
+        assert!(relative_layer_error(&w, &q.decode(), &calib) < 1e-4);
+    }
+
+    #[test]
+    fn grouped_gptq_runs_and_improves_on_grouped_rtn() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Tensor::randn(&[16, 32], 1.0, &mut rng);
+        let calib = correlated_calib(32, 256, &mut rng);
+        let e_rtn =
+            relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(2, 8)).decode(), &calib);
+        let q = gptq_quantize(&w, &calib, GptqConfig::grouped(2, 8)).unwrap();
+        let e = relative_layer_error(&w, &q.decode(), &calib);
+        assert!(e < e_rtn, "{e} !< {e_rtn}");
+    }
+
+    #[test]
+    fn act_order_with_groups_rejected() {
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let calib = CalibData::identity(16);
+        let cfg = GptqConfig { bits: 3, group: 4, act_order: true, percdamp: 0.01 };
+        assert!(gptq_quantize(&w, &calib, cfg).is_err());
+    }
+
+    #[test]
+    fn handles_dead_inputs() {
+        let mut rng = Rng::seed_from_u64(5);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        // Calibration where half the inputs never fire.
+        let mut x = Tensor::zeros(&[64, 16]);
+        for i in 0..64 {
+            for j in 0..8 {
+                let v = rng.normal_f32(0.0, 1.0);
+                x.set2(i, j, v);
+            }
+        }
+        let mut calib = CalibData::new(16);
+        calib.accumulate(&x);
+        let q = gptq_quantize(&w, &calib, GptqConfig::paper(4)).unwrap();
+        assert!(q.decode().data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,214 @@
+//! Grouped integer ("direct") quantization storage — the representation
+//! shared by the scalar baselines (RTN, GPTQ, and the dense halves of
+//! SpQR-lite / QuIP-lite): per-group affine scale+zero with b-bit integer
+//! codes.
+//!
+//! Also implements the scale gradient needed for Appendix L ("block-wise
+//! tuning for scalar quantization"): dequantization is differentiable in
+//! the scales, so they can be tuned exactly like AQLM codebooks.
+
+use crate::tensor::Tensor;
+
+/// Per-group affine integer quantized weight:
+/// `Ŵ[i, jg+t] = scale[i][j] · (q[i, jg+t] − zero[i][j])`.
+#[derive(Clone, Debug)]
+pub struct GroupIntWeight {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub group: usize,
+    pub bits: usize,
+    /// Integer codes in [0, 2^bits), laid out like the dense matrix.
+    pub qcodes: Vec<u16>,
+    /// [d_out × n_groups] scales.
+    pub scales: Vec<f32>,
+    /// [d_out × n_groups] zero points (float, asymmetric quantization).
+    pub zeros: Vec<f32>,
+}
+
+impl GroupIntWeight {
+    pub fn n_groups(&self) -> usize {
+        self.d_in / self.group
+    }
+
+    #[inline]
+    pub fn meta_index(&self, row: usize, grp: usize) -> usize {
+        row * self.n_groups() + grp
+    }
+
+    /// Max integer level.
+    pub fn qmax(&self) -> f32 {
+        ((1usize << self.bits) - 1) as f32
+    }
+
+    /// Dequantize the full matrix.
+    pub fn decode(&self) -> Tensor {
+        let mut w = Tensor::zeros(&[self.d_out, self.d_in]);
+        let g = self.group;
+        for i in 0..self.d_out {
+            let row = w.row_mut(i);
+            for j in 0..self.n_groups() {
+                let mi = i * (self.d_in / g) + j;
+                let (s, z) = (self.scales[mi], self.zeros[mi]);
+                for t in 0..g {
+                    row[j * g + t] = s * (self.qcodes[i * self.d_in + j * g + t] as f32 - z);
+                }
+            }
+        }
+        w
+    }
+
+    /// Gradient of a loss w.r.t. the scales, given dL/dŴ (App. L tuning).
+    /// `dscale[i][j] = Σ_t dŴ[i, jg+t] · (q − zero)`.
+    pub fn backward_dw(&self, dw: &Tensor) -> Vec<f32> {
+        assert_eq!(dw.shape(), &[self.d_out, self.d_in]);
+        let g = self.group;
+        let mut dscales = vec![0.0f32; self.scales.len()];
+        for i in 0..self.d_out {
+            let dwr = dw.row(i);
+            for j in 0..self.n_groups() {
+                let mi = self.meta_index(i, j);
+                let z = self.zeros[mi];
+                let mut acc = 0.0f32;
+                for t in 0..g {
+                    acc += dwr[j * g + t] * (self.qcodes[i * self.d_in + j * g + t] as f32 - z);
+                }
+                dscales[mi] += acc;
+            }
+        }
+        dscales
+    }
+
+    /// Average bits per parameter: codes + 16-bit scale and zero per group
+    /// (matching how the related work accounts for group quantization).
+    pub fn avg_bits(&self) -> f64 {
+        let code_bits = self.d_out * self.d_in * self.bits;
+        let meta_bits = self.scales.len() * 16 + self.zeros.len() * 16;
+        (code_bits + meta_bits) as f64 / (self.d_out * self.d_in) as f64
+    }
+
+    pub fn size_bits(&self) -> usize {
+        self.d_out * self.d_in * self.bits + self.scales.len() * 32
+    }
+}
+
+/// Quantize one group of values to `bits` with asymmetric min/max grid.
+/// Returns (codes, scale, zero).
+pub fn quantize_group_minmax(vals: &[f32], bits: usize) -> (Vec<u16>, f32, f32) {
+    let qmax = ((1usize << bits) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || lo == hi {
+        // Degenerate group: all equal — represent exactly as
+        // scale·(0 − zero) with unit scale and a negative zero point.
+        return (vec![0u16; vals.len()], 1.0, -lo);
+    }
+    let scale = (hi - lo) / qmax;
+    let zero = -lo / scale; // real-valued zero point
+    let codes = vals
+        .iter()
+        .map(|&v| ((v / scale + zero).round().clamp(0.0, qmax)) as u16)
+        .collect();
+    (codes, scale, zero)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// RTN-quantize a full matrix (helper reused by rtn.rs tests).
+    pub fn quantize_matrix(w: &Tensor, group: usize, bits: usize) -> GroupIntWeight {
+        let (d_out, d_in) = (w.rows(), w.cols());
+        assert_eq!(d_in % group, 0);
+        let n_groups = d_in / group;
+        let mut qcodes = vec![0u16; d_out * d_in];
+        let mut scales = vec![0.0f32; d_out * n_groups];
+        let mut zeros = vec![0.0f32; d_out * n_groups];
+        for i in 0..d_out {
+            for j in 0..n_groups {
+                let (codes, s, z) = quantize_group_minmax(&w.row(i)[j * group..(j + 1) * group], bits);
+                qcodes[i * d_in + j * group..i * d_in + (j + 1) * group].copy_from_slice(&codes);
+                scales[i * n_groups + j] = s;
+                zeros[i * n_groups + j] = z;
+            }
+        }
+        GroupIntWeight { d_out, d_in, group, bits, qcodes, scales, zeros }
+    }
+
+    #[test]
+    fn minmax_group_hits_extremes() {
+        let vals = [-1.0f32, 0.5, 2.0, 0.0];
+        let (codes, s, z) = quantize_group_minmax(&vals, 4);
+        // min maps to 0, max maps to qmax
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[2], 15);
+        // dequant error bounded by scale/2
+        for (&c, &v) in codes.iter().zip(&vals) {
+            let deq = s * (c as f32 - z);
+            assert!((deq - v).abs() <= s * 0.5 + 1e-6, "{v} -> {deq}");
+        }
+    }
+
+    #[test]
+    fn high_bits_are_near_lossless() {
+        let mut rng = Rng::seed_from_u64(1);
+        let w = Tensor::randn(&[8, 32], 1.0, &mut rng);
+        let q = quantize_matrix(&w, 8, 12);
+        let deq = q.decode();
+        assert!(deq.allclose(&w, 1e-2));
+    }
+
+    #[test]
+    fn lower_bits_higher_error_monotone() {
+        let mut rng = Rng::seed_from_u64(2);
+        let w = Tensor::randn(&[16, 64], 1.0, &mut rng);
+        let errs: Vec<f64> = [2usize, 3, 4, 8]
+            .iter()
+            .map(|&b| quantize_matrix(&w, 8, b).decode().mse(&w))
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn degenerate_constant_group() {
+        let (codes, s, z) = quantize_group_minmax(&[3.0, 3.0, 3.0], 4);
+        let deq = s * (codes[0] as f32 - z);
+        assert!((deq - 3.0).abs() < 2.0, "constant group decodes to {deq}");
+    }
+
+    #[test]
+    fn scale_gradient_finite_diff() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let mut q = quantize_matrix(&w, 4, 3);
+        let dw = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let ds = q.backward_dw(&dw);
+        let h = 1e-3f32;
+        for &mi in &[0usize, 5, 15] {
+            let orig = q.scales[mi];
+            q.scales[mi] = orig + h;
+            let lp = dw.dot(&q.decode());
+            q.scales[mi] = orig - h;
+            let lm = dw.dot(&q.decode());
+            q.scales[mi] = orig;
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!((ds[mi] - fd).abs() < 1e-2, "mi={mi}: {} vs {fd}", ds[mi]);
+        }
+    }
+
+    #[test]
+    fn avg_bits_accounting() {
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Tensor::randn(&[8, 64], 1.0, &mut rng);
+        let q = quantize_matrix(&w, 16, 3);
+        // 3 bits + 32/16 bits of metadata per group of 16 = 3 + 2 = 5.
+        assert!((q.avg_bits() - 5.0).abs() < 1e-9);
+    }
+}
+
+#[cfg(test)]
+pub use tests::quantize_matrix;

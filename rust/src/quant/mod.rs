@@ -1,0 +1,140 @@
+//! Post-training quantization algorithms: **AQLM** (the paper's
+//! contribution) plus every baseline its evaluation compares against.
+//!
+//! All methods share the paper's problem setup (Eq. 1): given a linear
+//! layer's weights `W` and calibration inputs `X`, find compressed weights
+//! `Ŵ` minimizing `‖WX − ŴX‖²`. The calibration statistics are carried as
+//! the Gram matrix `XXᵀ` ([`CalibData`]) — sufficient for the objective via
+//! `‖(W−Ŵ)X‖² = ⟨(W−Ŵ)XXᵀ, (W−Ŵ)⟩_F` (paper Eq. 8) and exactly what GPTQ's
+//! Hessian needs.
+//!
+//! | Module | Paper reference |
+//! |---|---|
+//! | [`aqlm`] | §3 (the full algorithm: K-means init, beam search, codebook Adam, block FT, e2e KD) |
+//! | [`rtn`] | round-to-nearest baseline (Dettmers & Zettlemoyer 2022) |
+//! | [`gptq`] | GPTQ (Frantar et al. 2022), incl. App. L scale tuning |
+//! | [`spqr`] | SpQR-lite: group quant + FP outliers (Dettmers et al. 2023) |
+//! | [`quip`] | QuIP-lite: incoherence rotation + grid (Chee et al. 2023) |
+//! | [`groupint`] | shared scalar-quant storage format |
+
+pub mod groupint;
+pub mod rtn;
+pub mod gptq;
+pub mod spqr;
+pub mod quip;
+pub mod aqlm;
+
+use crate::tensor::ops::matmul;
+use crate::tensor::Tensor;
+
+/// Calibration statistics for one linear layer: `XXᵀ` over all calibration
+/// samples (rows of activations feeding this layer) plus the sample count.
+#[derive(Clone, Debug)]
+pub struct CalibData {
+    pub xxt: Tensor,
+    pub n_samples: usize,
+}
+
+impl CalibData {
+    pub fn new(d_in: usize) -> CalibData {
+        CalibData { xxt: Tensor::zeros(&[d_in, d_in]), n_samples: 0 }
+    }
+
+    /// Accumulate a batch of activation rows [n, d_in].
+    pub fn accumulate(&mut self, x: &Tensor) {
+        crate::tensor::ops::accumulate_gram(x, &mut self.xxt);
+        self.n_samples += x.rows();
+    }
+
+    /// Synthetic identity calibration (turns output-error minimization into
+    /// plain weight-error minimization — useful for tests and ablations).
+    pub fn identity(d_in: usize) -> CalibData {
+        CalibData { xxt: Tensor::eye(d_in), n_samples: 1 }
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.xxt.rows()
+    }
+}
+
+/// The paper's layer objective: `‖(W−Ŵ)X‖² = ⟨ΔW·XXᵀ, ΔW⟩_F` (Eq. 8).
+pub fn layer_output_error(w: &Tensor, w_hat: &Tensor, calib: &CalibData) -> f64 {
+    let delta = w.sub(w_hat);
+    let dx = matmul(&delta, &calib.xxt);
+    dx.dot(&delta)
+}
+
+/// Relative layer output error: `‖ΔWX‖² / ‖WX‖²` — scale-free quality metric
+/// used in reports.
+pub fn relative_layer_error(w: &Tensor, w_hat: &Tensor, calib: &CalibData) -> f64 {
+    let num = layer_output_error(w, w_hat, calib);
+    let wx = matmul(w, &calib.xxt);
+    let denom = wx.dot(w);
+    if denom <= 0.0 {
+        0.0
+    } else {
+        num / denom
+    }
+}
+
+/// Per-layer quantization record for reports / EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct QuantReport {
+    pub layer: String,
+    pub method: String,
+    pub avg_bits: f64,
+    pub rel_error: f64,
+    pub seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn calib_accumulates_gram() {
+        let mut c = CalibData::new(3);
+        let x = Tensor::from_vec(&[2, 3], vec![1., 0., 0., 0., 2., 0.]);
+        c.accumulate(&x);
+        assert_eq!(c.n_samples, 2);
+        assert_eq!(c.xxt.at2(0, 0), 1.0);
+        assert_eq!(c.xxt.at2(1, 1), 4.0);
+        assert_eq!(c.xxt.at2(2, 2), 0.0);
+    }
+
+    #[test]
+    fn identity_calib_reduces_to_weight_mse() {
+        let mut rng = Rng::seed_from_u64(1);
+        let w = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let w_hat = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let calib = CalibData::identity(6);
+        let err = layer_output_error(&w, &w_hat, &calib);
+        let direct = w.sub(&w_hat).sq_norm();
+        assert!((err - direct).abs() < 1e-4 * direct.max(1.0));
+    }
+
+    #[test]
+    fn output_error_matches_explicit_x() {
+        let mut rng = Rng::seed_from_u64(2);
+        let w = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let w_hat = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let x = Tensor::randn(&[40, 5], 1.0, &mut rng); // rows = samples
+        let mut calib = CalibData::new(5);
+        calib.accumulate(&x);
+        // ‖(W−Ŵ)Xᵀ‖² with samples as rows of x.
+        let delta = w.sub(&w_hat);
+        let dx = crate::tensor::ops::matmul_bt(&delta, &x);
+        let explicit = dx.sq_norm();
+        let via_gram = layer_output_error(&w, &w_hat, &calib);
+        assert!((explicit - via_gram).abs() / explicit < 1e-3);
+    }
+
+    #[test]
+    fn relative_error_is_zero_for_exact() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let calib = CalibData::identity(4);
+        assert_eq!(relative_layer_error(&w, &w.clone(), &calib), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! QuIP-lite (Chee et al., 2023 / Tseng et al., 2024): incoherence
+//! processing + fixed-grid quantization.
+//!
+//! QuIP's two ingredients are (1) rotating the weights with random
+//! orthogonal matrices so they become "incoherent" (near-Gaussian, no
+//! outliers) and (2) rounding the rotated weights onto a *fixed* (non
+//! learned) grid with LDLQ/GPTQ-style feedback. The paper's central
+//! contrast — AQLM *learns* its codebooks while QuIP's lattice is fixed —
+//! is exactly preserved here. We use seeded dense random orthogonal
+//! matrices (our model dims are not powers of two, so no fast Hadamard)
+//! and GPTQ feedback in the rotated space, with the calibration Gram
+//! rotated accordingly: `H̃ = Vᵀ H V`.
+
+use super::gptq::{gptq_quantize, GptqConfig};
+use super::CalibData;
+use crate::tensor::linalg::random_orthogonal;
+use crate::tensor::ops::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// QuIP-lite configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct QuipConfig {
+    pub bits: usize,
+    /// Seed for the rotation matrices (stored, not counted in bits — the
+    /// rotations regenerate from the seed at load time, as QuIP# does).
+    pub seed: u64,
+}
+
+/// Result: dense dequantized weights + size metadata.
+#[derive(Clone, Debug)]
+pub struct QuipWeight {
+    pub dense: Tensor,
+    pub bits: usize,
+    pub d_out: usize,
+    pub d_in: usize,
+}
+
+impl QuipWeight {
+    /// Average bits: codes + one 16-bit scale and zero per output row
+    /// (rotations are seed-derived).
+    pub fn avg_bits(&self) -> f64 {
+        let params = self.d_out * self.d_in;
+        (params * self.bits + self.d_out * 32) as f64 / params as f64
+    }
+}
+
+/// Quantize with QuIP-lite.
+pub fn quip_quantize(w: &Tensor, calib: &CalibData, cfg: QuipConfig) -> anyhow::Result<QuipWeight> {
+    let (d_out, d_in) = (w.rows(), w.cols());
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x71_75_69_70); // "quip"
+    let u = random_orthogonal(d_out, &mut rng);
+    let v = random_orthogonal(d_in, &mut rng);
+    // Rotate weights: W̃ = Uᵀ W V.
+    let wr = matmul(&matmul(&u.transpose(), w), &v);
+    // Rotate calibration: with X̃ = Vᵀ X, H̃ = Vᵀ H V.
+    let hr = matmul(&matmul(&v.transpose(), &calib.xxt), &v);
+    let calib_r = CalibData { xxt: hr, n_samples: calib.n_samples };
+    // Fixed-grid rounding with GPTQ feedback in the rotated space.
+    let q = gptq_quantize(&wr, &calib_r, GptqConfig::paper(cfg.bits))?;
+    // Rotate back: Ŵ = U Ŵ̃ Vᵀ.
+    let dense = matmul(&matmul(&u, &q.decode()), &v.transpose());
+    Ok(QuipWeight { dense, bits: cfg.bits, d_out, d_in })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::relative_layer_error;
+    use crate::quant::rtn::{rtn_quantize, RtnConfig};
+
+    fn outlier_weights(rng: &mut Rng) -> Tensor {
+        let mut w = Tensor::randn(&[24, 32], 1.0, rng);
+        for _ in 0..8 {
+            let i = rng.below(24);
+            let j = rng.below(32);
+            w.set2(i, j, 12.0);
+        }
+        w
+    }
+
+    #[test]
+    fn rotation_removes_outlier_penalty_at_2bit() {
+        let mut rng = Rng::seed_from_u64(1);
+        let w = outlier_weights(&mut rng);
+        let calib = CalibData::identity(32);
+        let e_rtn =
+            relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(2, 32)).decode(), &calib);
+        let q = quip_quantize(&w, &calib, QuipConfig { bits: 2, seed: 7 }).unwrap();
+        let e_quip = relative_layer_error(&w, &q.dense, &calib);
+        assert!(e_quip < e_rtn, "quip {e_quip} !< rtn {e_rtn}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::seed_from_u64(2);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let calib = CalibData::identity(16);
+        let a = quip_quantize(&w, &calib, QuipConfig { bits: 3, seed: 5 }).unwrap();
+        let b = quip_quantize(&w, &calib, QuipConfig { bits: 3, seed: 5 }).unwrap();
+        assert!(a.dense.allclose(&b.dense, 0.0));
+        let c = quip_quantize(&w, &calib, QuipConfig { bits: 3, seed: 6 }).unwrap();
+        assert!(!a.dense.allclose(&c.dense, 1e-6));
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Tensor::randn(&[16, 64], 1.0, &mut rng);
+        let calib = CalibData::identity(64);
+        let q = quip_quantize(&w, &calib, QuipConfig { bits: 2, seed: 1 }).unwrap();
+        assert!((q.avg_bits() - (2.0 + 32.0 / 64.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Tensor::randn(&[12, 16], 1.0, &mut rng);
+        let calib = CalibData::identity(16);
+        let e2 = relative_layer_error(
+            &w,
+            &quip_quantize(&w, &calib, QuipConfig { bits: 2, seed: 1 }).unwrap().dense,
+            &calib,
+        );
+        let e4 = relative_layer_error(
+            &w,
+            &quip_quantize(&w, &calib, QuipConfig { bits: 4, seed: 1 }).unwrap().dense,
+            &calib,
+        );
+        assert!(e4 < e2);
+    }
+}

@@ -1,0 +1,83 @@
+//! Round-to-nearest (RTN) baseline: per-group min/max affine quantization,
+//! data-free (calibration is ignored). The weakest baseline in the paper's
+//! comparison; every data-aware method must beat it.
+
+use super::groupint::{quantize_group_minmax, GroupIntWeight};
+use crate::tensor::Tensor;
+
+/// RTN configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RtnConfig {
+    pub bits: usize,
+    pub group: usize,
+}
+
+impl RtnConfig {
+    pub fn new(bits: usize, group: usize) -> RtnConfig {
+        RtnConfig { bits, group }
+    }
+}
+
+/// Quantize a full weight matrix with RTN.
+pub fn rtn_quantize(w: &Tensor, cfg: RtnConfig) -> GroupIntWeight {
+    let (d_out, d_in) = (w.rows(), w.cols());
+    assert_eq!(d_in % cfg.group, 0, "d_in {d_in} not divisible by group {}", cfg.group);
+    let n_groups = d_in / cfg.group;
+    let mut qcodes = vec![0u16; d_out * d_in];
+    let mut scales = vec![0.0f32; d_out * n_groups];
+    let mut zeros = vec![0.0f32; d_out * n_groups];
+    for i in 0..d_out {
+        for j in 0..n_groups {
+            let (codes, s, z) =
+                quantize_group_minmax(&w.row(i)[j * cfg.group..(j + 1) * cfg.group], cfg.bits);
+            qcodes[i * d_in + j * cfg.group..i * d_in + (j + 1) * cfg.group]
+                .copy_from_slice(&codes);
+            scales[i * n_groups + j] = s;
+            zeros[i * n_groups + j] = z;
+        }
+    }
+    GroupIntWeight { d_out, d_in, group: cfg.group, bits: cfg.bits, qcodes, scales, zeros }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{relative_layer_error, CalibData};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rtn_reconstruction_error_scales_with_bits() {
+        let mut rng = Rng::seed_from_u64(1);
+        let w = Tensor::randn(&[32, 64], 1.0, &mut rng);
+        let calib = CalibData::identity(64);
+        let e2 = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(2, 16)).decode(), &calib);
+        let e4 = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(4, 16)).decode(), &calib);
+        let e8 = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(8, 16)).decode(), &calib);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+        assert!(e8 < 1e-4);
+    }
+
+    #[test]
+    fn smaller_groups_reduce_error() {
+        let mut rng = Rng::seed_from_u64(2);
+        let w = Tensor::randn(&[16, 64], 1.0, &mut rng);
+        let calib = CalibData::identity(64);
+        let e_g8 = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 8)).decode(), &calib);
+        let e_g64 = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 64)).decode(), &calib);
+        assert!(e_g8 < e_g64, "{e_g8} vs {e_g64}");
+    }
+
+    #[test]
+    fn outliers_hurt_rtn() {
+        // A single large weight in a group blows up the group scale, which
+        // is the failure mode SpQR fixes.
+        let mut rng = Rng::seed_from_u64(3);
+        let mut w = Tensor::randn(&[8, 32], 1.0, &mut rng);
+        let calib = CalibData::identity(32);
+        let base = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 16)).decode(), &calib);
+        w.set2(0, 0, 40.0);
+        let with_outlier =
+            relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 16)).decode(), &calib);
+        assert!(with_outlier > base, "{with_outlier} vs {base}");
+    }
+}

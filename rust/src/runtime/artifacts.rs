@@ -1,0 +1,149 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The manifest records, for every lowered HLO module, the
+//! exact positional argument order with shapes and dtypes; the runtime
+//! refuses to execute on any mismatch.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Element type of a module argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// One positional argument or result of a module.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape: j
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape")))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            dtype: Dtype::parse(j.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// One lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub key: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub config: Option<String>,
+}
+
+/// The whole artifacts directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub modules: Vec<ModuleSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("manifest root must be an object"))?;
+        let mut modules = Vec::new();
+        for (key, m) in obj {
+            let inputs = m
+                .req_arr("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = m
+                .req_arr("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            modules.push(ModuleSpec {
+                key: key.clone(),
+                path: dir.join(m.req_str("path")?),
+                inputs,
+                outputs,
+                batch: m.get("batch").and_then(|v| v.as_usize()),
+                seq: m.get("seq").and_then(|v| v.as_usize()),
+                config: m.get("config").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), modules })
+    }
+
+    pub fn module(&self, key: &str) -> anyhow::Result<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.key == key)
+            .ok_or_else(|| anyhow::anyhow!("module '{key}' not in manifest (have: {:?})",
+                self.modules.iter().map(|m| m.key.as_str()).collect::<Vec<_>>()))
+    }
+
+    /// Default artifacts directory (relative to the repo root / cwd).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"mod_a": {"path": "a.hlo.txt", "batch": 2, "seq": 4,
+                 "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"},
+                            {"name": "t", "shape": [2, 4], "dtype": "i32"}],
+                 "outputs": [{"name": "y", "shape": [2], "dtype": "f32"}]}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("aqlm_manifest_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.module("mod_a").unwrap();
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].dtype, Dtype::F32);
+        assert_eq!(spec.inputs[1].dtype, Dtype::I32);
+        assert_eq!(spec.inputs[0].elements(), 6);
+        assert_eq!(spec.batch, Some(2));
+        assert!(m.module("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn dtype_parse_rejects_unknown() {
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Model-level PJRT engines.
+//!
+//! [`PjrtForward`] runs the L2 `{model}_fwd` artifact with the weights of a
+//! native [`Model`] — the cross-engine agreement test (native Rust forward
+//! vs AOT-compiled JAX forward) lives in `rust/tests/integration_runtime.rs`.
+//!
+//! [`PjrtTrainer`] drives the `{model}_train` artifact in a loop, holding
+//! the parameter/optimizer state between steps — this is how the
+//! end-to-end example trains base models "through the stack" (Rust
+//! coordinator → AOT artifact → XLA), with Python long gone.
+
+use super::artifacts::Manifest;
+use super::pjrt::{CompiledModule, HostTensor, PjrtRuntime};
+use crate::nn::block::Ffn;
+use crate::nn::model::Model;
+use crate::tensor::Tensor;
+
+/// Flatten a model's parameters in the manifest's canonical order
+/// (`embed`, per block `ln1,wq,wk,wv,wo,ln2,wg,wu,wd`, `ln_f`, `head`).
+/// Quantized layers are decoded to dense (the L2 artifact takes dense
+/// weights).
+pub fn flatten_params(model: &Model) -> Vec<HostTensor> {
+    let mut out = Vec::new();
+    let push_t = |t: &Tensor, out: &mut Vec<HostTensor>| {
+        out.push(HostTensor::f32(t.data().to_vec(), t.shape()));
+    };
+    push_t(&model.embed, &mut out);
+    for b in &model.blocks {
+        out.push(HostTensor::f32(b.ln1.clone(), &[b.ln1.len()]));
+        for lin in [&b.attn.wq, &b.attn.wk, &b.attn.wv, &b.attn.wo] {
+            push_t(&lin.weight_owned(), &mut out);
+        }
+        out.push(HostTensor::f32(b.ln2.clone(), &[b.ln2.len()]));
+        match &b.ffn {
+            Ffn::Dense(m) => {
+                for lin in [&m.wg, &m.wu, &m.wd] {
+                    push_t(&lin.weight_owned(), &mut out);
+                }
+            }
+            Ffn::Moe(_) => panic!("PJRT engine supports dense-FFN presets only (nano/tiny/small)"),
+        }
+    }
+    out.push(HostTensor::f32(model.ln_f.clone(), &[model.ln_f.len()]));
+    push_t(&model.head.weight_owned(), &mut out);
+    out
+}
+
+/// Write flattened parameters (same order) back into a model.
+pub fn unflatten_params(model: &mut Model, params: &[HostTensor]) -> anyhow::Result<()> {
+    let mut it = params.iter();
+    let mut take_t = |shape_check: &[usize]| -> anyhow::Result<Tensor> {
+        let h = it.next().ok_or_else(|| anyhow::anyhow!("param list too short"))?;
+        anyhow::ensure!(h.shape() == shape_check, "shape mismatch: {:?} vs {:?}", h.shape(), shape_check);
+        Ok(Tensor::from_vec(shape_check, h.as_f32()?.to_vec()))
+    };
+    model.embed = take_t(model.embed.shape())?;
+    let n_blocks = model.blocks.len();
+    for bi in 0..n_blocks {
+        let d = model.cfg.d_model;
+        let ln1 = take_t(&[d])?;
+        model.blocks[bi].ln1 = ln1.into_vec();
+        for name in ["wq", "wk", "wv", "wo"] {
+            let shape = match name {
+                "wq" | "wo" => [d, d],
+                _ => [model.cfg.n_kv_heads * model.cfg.head_dim(), d],
+            };
+            let t = take_t(&shape)?;
+            let lin = match name {
+                "wq" => &mut model.blocks[bi].attn.wq,
+                "wk" => &mut model.blocks[bi].attn.wk,
+                "wv" => &mut model.blocks[bi].attn.wv,
+                _ => &mut model.blocks[bi].attn.wo,
+            };
+            *lin = crate::nn::linear::Linear::dense(t);
+        }
+        let ln2 = take_t(&[d])?;
+        model.blocks[bi].ln2 = ln2.into_vec();
+        let ff = model.cfg.d_ff;
+        match &mut model.blocks[bi].ffn {
+            Ffn::Dense(m) => {
+                m.wg = crate::nn::linear::Linear::dense(take_t(&[ff, d])?);
+                m.wu = crate::nn::linear::Linear::dense(take_t(&[ff, d])?);
+                m.wd = crate::nn::linear::Linear::dense(take_t(&[d, ff])?);
+            }
+            Ffn::Moe(_) => anyhow::bail!("PJRT engine supports dense-FFN presets only"),
+        }
+    }
+    let d = model.cfg.d_model;
+    model.ln_f = take_t(&[d])?.into_vec();
+    model.head = crate::nn::linear::Linear::dense(take_t(&[model.cfg.vocab_size, d])?);
+    Ok(())
+}
+
+/// PJRT forward engine (logits).
+pub struct PjrtForward {
+    module: CompiledModule,
+    pub batch: usize,
+    pub seq: usize,
+    vocab: usize,
+}
+
+impl PjrtForward {
+    pub fn load(rt: &PjrtRuntime, manifest: &Manifest, model_name: &str) -> anyhow::Result<PjrtForward> {
+        let spec = manifest.module(&format!("{model_name}_fwd"))?;
+        let batch = spec.batch.ok_or_else(|| anyhow::anyhow!("fwd module missing batch"))?;
+        let seq = spec.seq.ok_or_else(|| anyhow::anyhow!("fwd module missing seq"))?;
+        let vocab = spec.outputs[0].shape[2];
+        Ok(PjrtForward { module: rt.compile(spec)?, batch, seq, vocab })
+    }
+
+    /// Run the artifact with `model`'s weights. `tokens` is [batch·seq];
+    /// returns logits [batch·seq, vocab].
+    pub fn logits(&self, model: &Model, tokens: &[u32]) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(tokens.len() == self.batch * self.seq, "token count mismatch");
+        let mut inputs = flatten_params(model);
+        inputs.push(HostTensor::i32(
+            tokens.iter().map(|&t| t as i32).collect(),
+            &[self.batch, self.seq],
+        ));
+        let outputs = self.module.run(&inputs)?;
+        let logits = outputs[0].as_f32()?.to_vec();
+        Ok(Tensor::from_vec(&[self.batch * self.seq, self.vocab], logits))
+    }
+}
+
+/// PJRT training engine: owns params + Adam state across steps.
+pub struct PjrtTrainer {
+    module: CompiledModule,
+    /// Current parameters, manifest order.
+    state_params: Vec<HostTensor>,
+    state_m: Vec<HostTensor>,
+    state_v: Vec<HostTensor>,
+    step: i32,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl PjrtTrainer {
+    pub fn new(
+        rt: &PjrtRuntime,
+        manifest: &Manifest,
+        model_name: &str,
+        init: &Model,
+    ) -> anyhow::Result<PjrtTrainer> {
+        let spec = manifest.module(&format!("{model_name}_train"))?;
+        let batch = spec.batch.ok_or_else(|| anyhow::anyhow!("train module missing batch"))?;
+        let seq = spec.seq.ok_or_else(|| anyhow::anyhow!("train module missing seq"))?;
+        let state_params = flatten_params(init);
+        let zeros: Vec<HostTensor> = state_params
+            .iter()
+            .map(|t| HostTensor::f32(vec![0.0; t.as_f32().unwrap().len()], t.shape()))
+            .collect();
+        Ok(PjrtTrainer {
+            module: rt.compile(spec)?,
+            state_m: zeros.clone(),
+            state_v: zeros,
+            state_params,
+            step: 0,
+            batch,
+            seq,
+        })
+    }
+
+    /// One Adam step on a token batch. Returns the loss.
+    pub fn step(&mut self, tokens: &[u32], targets: &[u32]) -> anyhow::Result<f64> {
+        anyhow::ensure!(tokens.len() == self.batch * self.seq);
+        let mut inputs = Vec::with_capacity(self.state_params.len() * 3 + 3);
+        inputs.extend(self.state_params.iter().cloned());
+        inputs.extend(self.state_m.iter().cloned());
+        inputs.extend(self.state_v.iter().cloned());
+        inputs.push(HostTensor::scalar_i32(self.step));
+        inputs.push(HostTensor::i32(
+            tokens.iter().map(|&t| t as i32).collect(),
+            &[self.batch, self.seq],
+        ));
+        inputs.push(HostTensor::i32(
+            targets.iter().map(|&t| t as i32).collect(),
+            &[self.batch, self.seq],
+        ));
+        let mut outputs = self.module.run(&inputs)?;
+        let loss = outputs[0].as_f32()?[0] as f64;
+        let n = self.state_params.len();
+        // outputs: [loss, params.., m.., v..]
+        let rest: Vec<HostTensor> = outputs.drain(1..).collect();
+        self.state_params = rest[0..n].to_vec();
+        self.state_m = rest[n..2 * n].to_vec();
+        self.state_v = rest[2 * n..3 * n].to_vec();
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Write the trained parameters back into a native model.
+    pub fn export_into(&self, model: &mut Model) -> anyhow::Result<()> {
+        unflatten_params(model, &self.state_params)
+    }
+
+    pub fn steps_taken(&self) -> i32 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let mut cfg = ModelConfig::nano();
+        cfg.vocab_size = 32;
+        let mut rng = Rng::seed_from_u64(1);
+        let mut m = Model::init(&cfg, &mut rng);
+        let flat = flatten_params(&m);
+        // 1 embed + 2 blocks × 9 + ln_f + head
+        assert_eq!(flat.len(), 1 + cfg.n_layers * 9 + 2);
+        let mut m2 = Model::init(&cfg, &mut Rng::seed_from_u64(99));
+        unflatten_params(&mut m2, &flat).unwrap();
+        let tokens: Vec<u32> = vec![1, 2, 3, 4];
+        let (l1, _) = m.forward_logits(&tokens, 1, 4, false);
+        let (l2, _) = m2.forward_logits(&tokens, 1, 4, false);
+        assert!(l1.allclose(&l2, 1e-6));
+    }
+
+    #[test]
+    fn unflatten_rejects_wrong_shapes() {
+        let mut cfg = ModelConfig::nano();
+        cfg.vocab_size = 32;
+        let mut rng = Rng::seed_from_u64(2);
+        let m = Model::init(&cfg, &mut rng);
+        let mut flat = flatten_params(&m);
+        flat[0] = HostTensor::f32(vec![0.0; 4], &[2, 2]);
+        let mut m2 = m.clone();
+        assert!(unflatten_params(&mut m2, &flat).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client behind
+//! the `xla` crate. This is the bridge between the build-time Python layers
+//! (L1 Pallas kernel, L2 JAX model) and the run-time Rust coordinator —
+//! after `make artifacts`, Python is never needed again.
+//!
+//! - [`artifacts`] — the JSON manifest (argument order / shapes / dtypes).
+//! - [`pjrt`] — client wrapper, compiled-module cache, host↔device tensors.
+//! - [`engine`] — model-level engines: PJRT forward (logits) and the
+//!   state-looped PJRT trainer that drives `nano_train.hlo.txt`.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod engine;

@@ -1,0 +1,181 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: compile HLO-text
+//! artifacts once, execute them with shape-checked host tensors.
+//!
+//! HLO *text* is the interchange format (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use super::artifacts::{Dtype, ModuleSpec};
+use anyhow::Context;
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(d, _) => xla::Literal::vec1(d),
+            HostTensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &crate::runtime::artifacts::TensorSpec) -> anyhow::Result<HostTensor> {
+        match spec.dtype {
+            Dtype::F32 => Ok(HostTensor::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to f32: {e:?}"))?,
+                spec.shape.clone(),
+            )),
+            Dtype::I32 => Ok(HostTensor::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("literal to i32: {e:?}"))?,
+                spec.shape.clone(),
+            )),
+        }
+    }
+}
+
+/// PJRT CPU runtime.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> anyhow::Result<PjrtRuntime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Compile an HLO-text artifact.
+    pub fn compile(&self, spec: &ModuleSpec) -> anyhow::Result<CompiledModule> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", spec.path.display()))
+            .with_context(|| "did you run `make artifacts`?")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", spec.key))?;
+        Ok(CompiledModule { exe, spec: spec.clone() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct CompiledModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ModuleSpec,
+}
+
+impl CompiledModule {
+    /// Execute with shape/dtype checking against the manifest. Outputs are
+    /// returned in manifest order (AOT lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "module {}: {} inputs given, {} expected",
+            self.spec.key,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (given, want) in inputs.iter().zip(&self.spec.inputs) {
+            anyhow::ensure!(
+                given.shape() == &want.shape[..] && given.dtype() == want.dtype,
+                "module {}: arg '{}' expects {:?} {:?}, got {:?} {:?}",
+                self.spec.key,
+                want.name,
+                want.dtype,
+                want.shape,
+                given.dtype(),
+                given.shape()
+            );
+            literals.push(given.to_literal()?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.spec.key))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", self.spec.key))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing result tuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "module {}: {} outputs, manifest says {}",
+            self.spec.key,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes_and_dtypes() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.as_f32().unwrap().len(), 4);
+        let i = HostTensor::scalar_i32(7);
+        assert_eq!(i.shape(), &[] as &[usize]);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_shape_mismatch_panics() {
+        HostTensor::f32(vec![1.0; 3], &[2, 2]);
+    }
+
+    // Full PJRT execution is covered by rust/tests/integration_runtime.rs
+    // (requires artifacts/ to exist).
+}

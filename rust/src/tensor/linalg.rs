@@ -1,0 +1,355 @@
+//! Dense linear algebra on small symmetric matrices.
+//!
+//! GPTQ requires the inverse (Cholesky factor) of the damped Hessian
+//! H = 2XXᵀ + λI; Figure 7 requires the leading principal components of a
+//! learned codebook. Everything is f64 internally for stability (the
+//! Hessians of tiny calibration sets are often near-singular).
+
+use super::Tensor;
+use crate::util::rng::Rng;
+
+/// Cholesky decomposition of a symmetric positive-definite matrix
+/// (f32 tensor, f64 accumulation). Returns lower-triangular L with
+/// A = L Lᵀ, or an error if the matrix is not SPD.
+pub fn cholesky(a: &Tensor) -> anyhow::Result<Tensor> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let ad = a.data();
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = ad[i * n + j] as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    anyhow::bail!("cholesky: matrix not positive definite at pivot {i} (s={s})");
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(Tensor::from_vec(&[n, n], l.into_iter().map(|v| v as f32).collect()))
+}
+
+/// Solve L y = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    let ld = l.data();
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= ld[i * n + k] as f64 * y[k];
+        }
+        y[i] = s / ld[i * n + i] as f64;
+    }
+    y.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve Lᵀ x = y for lower-triangular L (back substitution).
+pub fn solve_lower_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    let ld = l.data();
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in i + 1..n {
+            s -= ld[k * n + i] as f64 * x[k];
+        }
+        x[i] = s / ld[i * n + i] as f64;
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve A x = b via Cholesky for SPD A.
+pub fn solve_spd(a: &Tensor, b: &[f32]) -> anyhow::Result<Vec<f32>> {
+    let l = cholesky(a)?;
+    Ok(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+/// Inverse of an SPD matrix via Cholesky (column-by-column solves).
+pub fn inverse_spd(a: &Tensor) -> anyhow::Result<Tensor> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = solve_lower_t(&l, &solve_lower(&l, &e));
+        for i in 0..n {
+            inv.set2(i, j, col[i]);
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// Add λ to the diagonal in place (Hessian damping).
+pub fn add_diag(a: &mut Tensor, lambda: f32) {
+    let n = a.rows();
+    for i in 0..n {
+        let v = a.at2(i, i) + lambda;
+        a.set2(i, i, v);
+    }
+}
+
+/// Mean of the diagonal (used to scale GPTQ's percdamp).
+pub fn diag_mean(a: &Tensor) -> f32 {
+    let n = a.rows();
+    (0..n).map(|i| a.at2(i, i)).sum::<f32>() / n as f32
+}
+
+/// Leading `k` principal components of the rows of `x` ([n, d]) via power
+/// iteration with deflation on the covariance. Returns ([k, d] components,
+/// k eigenvalues). Used for Figure 7's codebook visualization.
+pub fn pca(x: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> (Tensor, Vec<f32>) {
+    let (n, d) = (x.rows(), x.cols());
+    // Center.
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        for (m, &v) in mean.iter_mut().zip(x.row(i)) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    // Covariance (d x d), f64.
+    let mut cov = vec![0.0f64; d * d];
+    for i in 0..n {
+        let row = x.row(i);
+        for a in 0..d {
+            let xa = row[a] as f64 - mean[a];
+            for b in 0..d {
+                cov[a * d + b] += xa * (row[b] as f64 - mean[b]);
+            }
+        }
+    }
+    for c in &mut cov {
+        *c /= n as f64;
+    }
+    let mut comps = Tensor::zeros(&[k, d]);
+    let mut eigs = vec![0.0f32; k];
+    for c in 0..k {
+        // Power iteration.
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut lambda = 0.0f64;
+        for _ in 0..iters {
+            let mut w = vec![0.0f64; d];
+            for a in 0..d {
+                let mut s = 0.0;
+                for b in 0..d {
+                    s += cov[a * d + b] * v[b];
+                }
+                w[a] = s;
+            }
+            lambda = norm(&w);
+            if lambda < 1e-30 {
+                break;
+            }
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / lambda;
+            }
+        }
+        for a in 0..d {
+            comps.set2(c, a, v[a] as f32);
+        }
+        eigs[c] = lambda as f32;
+        // Deflate: cov -= λ v vᵀ
+        for a in 0..d {
+            for b in 0..d {
+                cov[a * d + b] -= lambda * v[a] * v[b];
+            }
+        }
+    }
+    (comps, eigs)
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// Generate a random orthogonal matrix (QR of a Gaussian via modified
+/// Gram–Schmidt). Used by the QuIP-lite baseline's incoherence rotation.
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Tensor {
+    let mut q = vec![vec![0.0f64; n]; n];
+    for row in q.iter_mut() {
+        for v in row.iter_mut() {
+            *v = rng.normal();
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            let proj: f64 = (0..n).map(|k| q[i][k] * q[j][k]).sum();
+            for k in 0..n {
+                q[i][k] -= proj * q[j][k];
+            }
+        }
+        let nrm = norm(&q[i]);
+        assert!(nrm > 1e-12, "degenerate Gram-Schmidt");
+        for v in q[i].iter_mut() {
+            *v /= nrm;
+        }
+    }
+    let mut out = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..n {
+            out.set2(i, j, q[i][j] as f32);
+        }
+    }
+    out
+}
+
+/// Deterministic "randomized Hadamard-like" orthogonal transform for
+/// dimensions that are powers of two: H·diag(signs)/√n applied to a vector
+/// in O(n log n). Falls back to dense random orthogonal otherwise.
+pub fn hadamard_transform(x: &mut [f32], signs: &[f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    assert_eq!(signs.len(), n);
+    for (v, &s) in x.iter_mut().zip(signs) {
+        *v *= s;
+    }
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+
+    fn spd_matrix(n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::seed_from_u64(seed);
+        let a = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let mut h = matmul(&a, &a.transpose());
+        add_diag(&mut h, 0.5);
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd_matrix(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul(&l, &l.transpose());
+        assert!(rec.allclose(&a, 1e-3));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_solve_accurate() {
+        let a = spd_matrix(12, 2);
+        let mut rng = Rng::seed_from_u64(3);
+        let x_true: Vec<f32> = (0..12).map(|_| rng.normal() as f32).collect();
+        let mut b = vec![0.0f32; 12];
+        for i in 0..12 {
+            b[i] = crate::tensor::ops::dot(a.row(i), &x_true);
+        }
+        let x = solve_spd(&a, &b).unwrap();
+        for i in 0..12 {
+            assert!((x[i] - x_true[i]).abs() < 1e-2, "i={i}: {} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn inverse_spd_identity() {
+        let a = spd_matrix(6, 4);
+        let inv = inverse_spd(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        assert!(prod.allclose(&Tensor::eye(6), 1e-2));
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        let mut rng = Rng::seed_from_u64(5);
+        // Points along direction (3,4)/5 with small noise.
+        let dir = [0.6f32, 0.8];
+        let mut data = Vec::new();
+        for _ in 0..500 {
+            let t = rng.normal() as f32 * 5.0;
+            data.push(t * dir[0] + 0.1 * rng.normal() as f32);
+            data.push(t * dir[1] + 0.1 * rng.normal() as f32);
+        }
+        let x = Tensor::from_vec(&[500, 2], data);
+        let (comps, eigs) = pca(&x, 2, 100, &mut rng);
+        let c0 = comps.row(0);
+        let alignment = (c0[0] * dir[0] + c0[1] * dir[1]).abs();
+        assert!(alignment > 0.99, "alignment={alignment}");
+        assert!(eigs[0] > 10.0 * eigs[1]);
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Rng::seed_from_u64(6);
+        let q = random_orthogonal(16, &mut rng);
+        let qtq = matmul(&q, &q.transpose());
+        assert!(qtq.allclose(&Tensor::eye(16), 1e-4));
+    }
+
+    #[test]
+    fn hadamard_preserves_norm() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut x: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let signs: Vec<f32> = (0..64).map(|_| if rng.f32() < 0.5 { -1.0 } else { 1.0 }).collect();
+        let before: f32 = x.iter().map(|v| v * v).sum();
+        hadamard_transform(&mut x, &signs);
+        let after: f32 = x.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() / before < 1e-4);
+    }
+
+    #[test]
+    fn hadamard_involution_up_to_signs() {
+        // H (H x) = x when signs are all +1 (H is symmetric orthogonal).
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let orig = x.clone();
+        let signs = vec![1.0f32; 8];
+        hadamard_transform(&mut x, &signs);
+        hadamard_transform(&mut x, &signs);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn diag_helpers() {
+        let mut a = Tensor::eye(3);
+        assert_eq!(diag_mean(&a), 1.0);
+        add_diag(&mut a, 2.0);
+        assert_eq!(diag_mean(&a), 3.0);
+    }
+}

@@ -1,0 +1,409 @@
+//! Dense f32 tensor library.
+//!
+//! The image ships no BLAS and no ndarray, so this module is the numeric
+//! substrate for the whole runtime: an owned row-major n-d [`Tensor`],
+//! matrix/vector kernels in [`ops`], and the dense linear algebra
+//! ([`linalg`]: Cholesky, triangular solves, power-iteration PCA) required
+//! by GPTQ's Hessian inverse and Figure 7's codebook analysis.
+
+pub mod ops;
+pub mod linalg;
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ----- constructors -----
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], value: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Gaussian init N(0, std).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    /// Uniform init U[lo, hi).
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_uniform(&mut t.data, lo, hi);
+        t
+    }
+
+    /// Identity matrix n×n.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    // ----- shape -----
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows for a 2-d tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+
+    /// Number of cols for a 2-d tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ----- data access -----
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        self.data[i * c + j] = v;
+    }
+
+    /// Row `i` of a 2-d tensor as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Copy of column `j` of a 2-d tensor.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        assert_eq!(self.ndim(), 2);
+        (0..self.shape[0]).map(|i| self.at2(i, j)).collect()
+    }
+
+    // ----- elementwise -----
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    pub fn scale_assign(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// self += s * other  (axpy)
+    pub fn axpy(&mut self, s: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.sub_assign(other);
+        out
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    // ----- reductions -----
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius inner product ⟨self, other⟩.
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
+    }
+
+    /// Mean squared difference to another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+
+    // ----- 2-d manipulation -----
+
+    /// Transpose a 2-d tensor.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..r).step_by(B) {
+            for jb in (0..c).step_by(B) {
+                for i in ib..(ib + B).min(r) {
+                    for j in jb..(jb + B).min(c) {
+                        out.data[j * r + i] = self.data[i * c + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Select a contiguous row range [start, end) of a 2-d tensor.
+    pub fn rows_slice(&self, start: usize, end: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert!(start <= end && end <= self.shape[0]);
+        let c = self.shape[1];
+        Tensor::from_vec(&[end - start, c], self.data[start * c..end * c].to_vec())
+    }
+
+    /// Stack 2-d tensors along rows.
+    pub fn vstack(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let c = parts[0].cols();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(p.cols(), c);
+            rows += p.rows();
+            data.extend_from_slice(p.data());
+        }
+        Tensor::from_vec(&[rows, c], data)
+    }
+
+    /// Approximate equality (max abs elementwise difference ≤ tol).
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(&a, &b)| (a - b).abs() <= tol + tol * a.abs().max(b.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_bad_shape() {
+        Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.set2(1, 2, 5.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.row(1)[2], 5.0);
+        assert_eq!(t.col(2)[1], 5.0);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(0, 1), 4.0);
+        assert_eq!(tt.at2(2, 0), 3.0);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn transpose_blocked_large() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = Tensor::randn(&[67, 41], 1.0, &mut rng);
+        let tt = t.transpose();
+        for i in 0..67 {
+            for j in 0..41 {
+                assert_eq!(t.at2(i, j), tt.at2(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::full(&[2, 2], 1.0);
+        let c = a.add(&b);
+        assert_eq!(c.data(), &[2., 3., 4., 5.]);
+        let d = c.sub(&b);
+        assert_eq!(d.data(), a.data());
+        let mut e = a.clone();
+        e.axpy(2.0, &b);
+        assert_eq!(e.data(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Tensor::from_vec(&[1, 3], vec![3., 4., 0.]);
+        assert_eq!(a.sum(), 7.0);
+        assert_eq!(a.sq_norm(), 25.0);
+        assert_eq!(a.norm(), 5.0);
+        assert_eq!(a.max_abs(), 4.0);
+        let b = Tensor::from_vec(&[1, 3], vec![1., 1., 1.]);
+        assert_eq!(a.dot(&b), 7.0);
+        assert!((a.mse(&b) - ((4.0 + 9.0 + 1.0) / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eye_and_map() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.sum(), 3.0);
+        let j = i.map(|x| x * 2.0);
+        assert_eq!(j.at2(1, 1), 2.0);
+        assert_eq!(j.at2(0, 1), 0.0);
+    }
+
+    #[test]
+    fn vstack_and_rows_slice() {
+        let a = Tensor::from_vec(&[1, 2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2, 2], vec![3., 4., 5., 6.]);
+        let s = Tensor::vstack(&[&a, &b]);
+        assert_eq!(s.shape(), &[3, 2]);
+        let mid = s.rows_slice(1, 3);
+        assert_eq!(mid.data(), b.data());
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[1, 2], vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-5));
+        assert!(!a.allclose(&b, 1e-9));
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::seed_from_u64(5);
+        let t = Tensor::randn(&[100, 100], 2.0, &mut rng);
+        let mean = t.sum() / t.len() as f64;
+        let var = t.sq_norm() / t.len() as f64 - mean * mean;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.2);
+    }
+}

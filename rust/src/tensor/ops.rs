@@ -1,0 +1,382 @@
+//! Matrix / vector kernels over [`Tensor`].
+//!
+//! Hand-written "BLAS": a register-blocked GEMM (the single-core hot path of
+//! the whole system), GEMV, and the neural-net elementwise primitives
+//! (softmax, RMSNorm, SiLU). GEMM uses an i-k-j loop order with 4-row
+//! micro-panels so the inner loop is a pure FMA stream the compiler can
+//! auto-vectorize; see EXPERIMENTS.md §Perf for before/after numbers.
+
+use super::Tensor;
+
+/// C = A @ B  (A: [m,k], B: [k,n]).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// C = A @ B accumulated into pre-allocated `out` (overwrites).
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!(out.shape(), &[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    od.fill(0.0);
+    // Micro-panel of 4 rows of A; inner j-loop is contiguous over B and C.
+    let mut i = 0;
+    while i + 4 <= m {
+        let (a0, a1, a2, a3) = (
+            &ad[i * k..(i + 1) * k],
+            &ad[(i + 1) * k..(i + 2) * k],
+            &ad[(i + 2) * k..(i + 3) * k],
+            &ad[(i + 3) * k..(i + 4) * k],
+        );
+        for p in 0..k {
+            let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            let (c0, rest) = od[i * n..].split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, rest) = rest.split_at_mut(n);
+            let c3 = &mut rest[..n];
+            for j in 0..n {
+                let bj = brow[j];
+                c0[j] += v0 * bj;
+                c1[j] += v1 * bj;
+                c2[j] += v2 * bj;
+                c3[j] += v3 * bj;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut od[i * n..(i + 1) * n];
+        for p in 0..k {
+            let v = arow[p];
+            if v == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += v * brow[j];
+            }
+        }
+        i += 1;
+    }
+}
+
+/// C = A @ Bᵀ  (A: [m,k], B: [n,k]) — the layout of a linear layer
+/// `y = x Wᵀ` with row-major W[out,in]; inner loop is a dot product of two
+/// contiguous rows, which auto-vectorizes well.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_bt inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_bt_into(a, b, &mut out);
+    out
+}
+
+pub fn matmul_bt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    assert_eq!(out.shape(), &[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut od[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] = dot(arow, &bd[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// C = Aᵀ @ B  (A: [k,m], B: [k,n]) — gradient accumulation layout.
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_at inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    // Accumulate rank-1 updates; contiguous in both B row and C row.
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for i in 0..m {
+            let v = arow[i];
+            if v == 0.0 {
+                continue;
+            }
+            let crow = &mut od[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += v * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// y = W @ x for W:[m,k], x:[k] — the GEMV baseline the paper's Table 5
+/// compares AQLM kernels against.
+pub fn gemv(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    let (m, k) = (w.rows(), w.cols());
+    assert_eq!(x.len(), k);
+    assert_eq!(y.len(), m);
+    let wd = w.data();
+    for i in 0..m {
+        y[i] = dot(&wd[i * k..(i + 1) * k], x);
+    }
+}
+
+/// Unrolled dot product (4 accumulators to break the FP dependency chain).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// In-place row softmax of a 2-d tensor.
+pub fn softmax_rows(t: &mut Tensor) {
+    let (r, c) = (t.rows(), t.cols());
+    let d = t.data_mut();
+    for i in 0..r {
+        let row = &mut d[i * c..(i + 1) * c];
+        softmax_inplace(row);
+    }
+}
+
+/// Numerically-stable softmax of a slice.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// log-softmax of a slice into `out`.
+pub fn log_softmax(row: &[f32], out: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let lse = row.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln() as f32 + max;
+    for (o, &x) in out.iter_mut().zip(row) {
+        *o = x - lse;
+    }
+}
+
+/// RMSNorm (Zhang & Sennrich 2019): x * g / rms(x). Returns the rms values
+/// (needed by the backward pass).
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) -> f32 {
+    let n = x.len();
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64;
+    let rinv = 1.0 / (ms + eps as f64).sqrt() as f32;
+    for i in 0..n {
+        out[i] = x[i] * rinv * gain[i];
+    }
+    rinv
+}
+
+/// SiLU activation x·σ(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Derivative of SiLU.
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// XXᵀ accumulation: given X with columns as samples stored as [n, d] rows
+/// (each row one sample), accumulate H += Σ x xᵀ into `h` ([d, d]).
+pub fn accumulate_gram(samples: &Tensor, h: &mut Tensor) {
+    let (n, d) = (samples.rows(), samples.cols());
+    assert_eq!(h.shape(), &[d, d]);
+    let sd = samples.data();
+    let hd = h.data_mut();
+    for s in 0..n {
+        let x = &sd[s * d..(s + 1) * d];
+        for i in 0..d {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let hrow = &mut hd[i * d..(i + 1) * d];
+            for j in 0..d {
+                hrow[j] += xi * x[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.at2(i, p) * b.at2(p, j);
+                }
+                out.set2(i, j, s);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seed_from_u64(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 8, 8), (13, 9, 17), (33, 47, 29)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let r = naive_matmul(&a, &b);
+            assert!(c.allclose(&r, 1e-4), "mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Tensor::randn(&[9, 16], 1.0, &mut rng);
+        let b = Tensor::randn(&[11, 16], 1.0, &mut rng);
+        let c = matmul_bt(&a, &b);
+        let r = naive_matmul(&a, &b.transpose());
+        assert!(c.allclose(&r, 1e-4));
+    }
+
+    #[test]
+    fn matmul_at_matches() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Tensor::randn(&[12, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[12, 5], 1.0, &mut rng);
+        let c = matmul_at(&a, &b);
+        let r = naive_matmul(&a.transpose(), &b);
+        assert!(c.allclose(&r, 1e-4));
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Tensor::randn(&[10, 20], 1.0, &mut rng);
+        let x = Tensor::randn(&[20, 1], 1.0, &mut rng);
+        let mut y = vec![0.0; 10];
+        gemv(&w, x.data(), &mut y);
+        let r = matmul(&w, &x);
+        for i in 0..10 {
+            assert!((y[i] - r.data()[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in 0..20 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i * 2) as f32).collect();
+            let expect: f32 = (0..n).map(|i| (i * i * 2) as f32).sum();
+            assert_eq!(dot(&a, &b), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., -1., 0., 1.]);
+        softmax_rows(&mut t);
+        for i in 0..2 {
+            let s: f32 = t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(t.row(i).iter().all(|&p| p > 0.0));
+        }
+        // Ordering preserved.
+        assert!(t.at2(0, 2) > t.at2(0, 1));
+    }
+
+    #[test]
+    fn softmax_stable_with_large_values() {
+        let mut row = vec![1000.0f32, 1001.0, 999.0];
+        softmax_inplace(&mut row);
+        assert!(row.iter().all(|p| p.is_finite()));
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let row = vec![0.5f32, -1.0, 2.0];
+        let mut ls = vec![0.0; 3];
+        log_softmax(&row, &mut ls);
+        let sum_exp: f32 = ls.iter().map(|&v| v.exp()).sum();
+        assert!((sum_exp - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let x = vec![3.0f32, 4.0];
+        let g = vec![1.0f32, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &g, 0.0, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-5);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-5);
+    }
+
+    #[test]
+    fn silu_values_and_grad() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!(silu(10.0) > 9.9);
+        // finite-difference check of silu_grad
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let h = 1e-3;
+            let fd = (silu(x + h) - silu(x - h)) / (2.0 * h);
+            assert!((silu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn gram_accumulation() {
+        let x = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let mut h = Tensor::zeros(&[2, 2]);
+        accumulate_gram(&x, &mut h);
+        // XtX = [[1+9, 2+12],[2+12, 4+16]]
+        assert_eq!(h.data(), &[10., 14., 14., 20.]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny GNU-style command-line parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and typed
+//! accessors with defaults. The `aqlm` binary, examples and bench harness
+//! all parse through this.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, key→value options, and boolean flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    args.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), val);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Required option with a helpful error.
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["quantize", "--model", "tiny", "--bits=2.3", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("quantize"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.f64_or("bits", 0.0), 2.3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse(&["eval", "path/a", "path/b"]);
+        assert_eq!(a.positional, vec!["path/a", "path/b"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.usize_or("steps", 100), 100);
+        assert_eq!(a.str_or("name", "d"), "d");
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse(&["cmd", "--fast", "--n", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["cmd", "--methods", "aqlm, gptq,rtn"]);
+        assert_eq!(a.list_or("methods", &[]), vec!["aqlm", "gptq", "rtn"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+}

@@ -1,0 +1,69 @@
+//! Self-contained utility layer.
+//!
+//! The build environment is fully offline with a small vendored crate set
+//! (no `rand`, `serde`, `clap`, `criterion`, `proptest`), so this module
+//! provides the pieces the rest of the system needs:
+//!
+//! - [`rng`] — PCG64 pseudo-random generator with distribution helpers.
+//! - [`json`] — minimal JSON value model, parser and serializer (used for
+//!   artifact manifests, configs, and results files).
+//! - [`cli`] — a small GNU-style argument parser for the `aqlm` binary.
+//! - [`propcheck`] — a miniature property-based testing harness
+//!   (shrinking included) standing in for `proptest`.
+//! - [`timing`] — wall-clock measurement and robust summary statistics used
+//!   by the custom bench harness.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod propcheck;
+pub mod timing;
+
+/// Format a byte count as a human-readable string (e.g. "3.72 MiB").
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds adaptively (ns/µs/ms/s).
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_time_formats() {
+        assert!(human_time(0.5e-9).ends_with("ns"));
+        assert!(human_time(5e-6).ends_with("µs"));
+        assert!(human_time(5e-3).ends_with("ms"));
+        assert!(human_time(5.0).ends_with("s"));
+    }
+}

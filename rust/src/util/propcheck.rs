@@ -1,0 +1,202 @@
+//! Miniature property-based testing harness (proptest is unavailable
+//! offline). Provides random input generation from a seeded [`Rng`],
+//! configurable case counts, and greedy shrinking for a few common shapes
+//! (integers, vectors). Used by `rust/tests/proptests.rs` to check the
+//! crate's invariants: pack/unpack roundtrips, beam-search monotonicity,
+//! batcher conservation, tensor algebra identities, etc.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0x9e3779b97f4a7c15, max_shrink_iters: 200 }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cfg.cases` random inputs produced by `gen`.
+/// On failure, attempts to shrink via `shrink` (which yields simpler
+/// candidates) and panics with the smallest failing input's Debug repr.
+pub fn check<T, G, S, P>(name: &str, cfg: &Config, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ hash_name(name));
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink: repeatedly take the first simpler candidate that still fails.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: loop {
+                if iters >= cfg.max_shrink_iters {
+                    break;
+                }
+                for cand in shrink(&best) {
+                    iters += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if iters >= cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed at case {case}:\n  input (shrunk): {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: property with no shrinking.
+pub fn check_no_shrink<T, G, P>(name: &str, cfg: &Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    check(name, cfg, gen, |_| Vec::new(), prop);
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ----- common generators -----
+
+/// Vec<f32> with entries from N(0, scale), length in [1, max_len].
+pub fn gen_vec_f32(max_len: usize, scale: f32) -> impl FnMut(&mut Rng) -> Vec<f32> {
+    move |rng| {
+        let n = 1 + rng.below(max_len);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, scale);
+        v
+    }
+}
+
+/// Shrinker for Vec<T>: halves, then removes single elements.
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        if v.len() <= 8 {
+            for i in 0..v.len() {
+                let mut c = v.clone();
+                c.remove(i);
+                if !c.is_empty() {
+                    out.push(c);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Shrinker for usize: towards zero.
+pub fn shrink_usize(v: &usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut x = *v;
+    while x > 0 {
+        x /= 2;
+        out.push(x);
+        if out.len() > 16 {
+            break;
+        }
+    }
+    out
+}
+
+/// Assert helper producing PropResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config { cases: 32, ..Default::default() };
+        check_no_shrink("sum-nonneg", &cfg, gen_vec_f32(16, 1.0), |v| {
+            let s: f32 = v.iter().map(|x| x * x).sum();
+            if s >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("sum of squares negative: {s}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics() {
+        let cfg = Config { cases: 4, ..Default::default() };
+        check_no_shrink("always-fails", &cfg, |r: &mut Rng| r.below(10), |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property: all vectors have length < 4. Failing inputs shrink toward
+        // minimal length-4 vectors.
+        let cfg = Config { cases: 64, ..Default::default() };
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "len-lt-4",
+                &cfg,
+                |rng: &mut Rng| {
+                    let n = 1 + rng.below(32);
+                    vec![0u8; n]
+                },
+                shrink_vec,
+                |v| if v.len() < 4 { Ok(()) } else { Err(format!("len={}", v.len())) },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // Shrunk input should be close to the boundary (length 4..8).
+        assert!(msg.contains("len-lt-4"));
+        let shrunk_len = msg.split("len=").nth(1).unwrap().split(|c: char| !c.is_ascii_digit()).next().unwrap();
+        let n: usize = shrunk_len.parse().unwrap();
+        assert!(n <= 7, "shrunk to {n}");
+    }
+
+    #[test]
+    fn shrink_usize_descends() {
+        let c = shrink_usize(&100);
+        assert!(c.windows(2).all(|w| w[1] < w[0]));
+        assert_eq!(*c.last().unwrap(), 0);
+    }
+}

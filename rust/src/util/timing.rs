@@ -1,0 +1,122 @@
+//! Wall-clock measurement and robust summary statistics.
+//!
+//! Criterion is unavailable offline, so `rust/benches/*` (declared with
+//! `harness = false`) use this module: warmup, adaptive iteration counts,
+//! and median/MAD summaries that are stable on a single shared CPU core.
+
+use std::time::Instant;
+
+/// Summary statistics over a set of per-iteration timings (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            samples[n / 2]
+        } else {
+            0.5 * (samples[n / 2 - 1] + samples[n / 2])
+        };
+        Stats { n, mean, median, min: samples[0], max: samples[n - 1], stddev: var.sqrt() }
+    }
+}
+
+/// Benchmark a closure: warm up, then time `iters` batches of `batch` calls.
+/// Returns per-call statistics.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, batch: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+    }
+    Stats::from_samples(samples)
+}
+
+/// Adaptive variant: pick a batch size so one sample takes ≈`target_sample_s`,
+/// then collect `iters` samples. Good for µs-scale kernels.
+pub fn bench_adaptive<F: FnMut()>(target_sample_s: f64, iters: usize, mut f: F) -> Stats {
+    // Estimate single-call cost.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let batch = ((target_sample_s / once).ceil() as usize).clamp(1, 1_000_000);
+    bench(2, iters, batch, f)
+}
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// A black box to prevent the optimizer from removing benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn stats_odd_median() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn bench_runs_and_times() {
+        let mut acc = 0u64;
+        let s = bench(1, 3, 10, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(s.n, 3);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration over the PJRT runtime: the AOT artifacts produced by
+//! `python/compile/aot.py` must load, execute, agree with the native Rust
+//! engine, and train. Requires `make artifacts` to have run (the Makefile
+//! test target guarantees it).
+
+use aqlm::nn::config::ModelConfig;
+use aqlm::nn::model::Model;
+use aqlm::runtime::artifacts::Manifest;
+use aqlm::runtime::engine::{PjrtForward, PjrtTrainer};
+use aqlm::runtime::pjrt::{HostTensor, PjrtRuntime};
+use aqlm::util::rng::Rng;
+use std::path::Path;
+
+fn manifest() -> Manifest {
+    Manifest::load(Path::new("artifacts"))
+        .expect("artifacts/manifest.json missing — run `make artifacts` first")
+}
+
+fn nano_model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::nano();
+    cfg.vocab_size = 160; // matches the lowered artifact
+    let mut rng = Rng::seed_from_u64(seed);
+    Model::init(&cfg, &mut rng)
+}
+
+#[test]
+fn pjrt_forward_matches_native_logits() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let fwd = PjrtForward::load(&rt, &m, "nano").unwrap();
+    let mut model = nano_model(1);
+    let mut rng = Rng::seed_from_u64(2);
+    let tokens: Vec<u32> = (0..fwd.batch * fwd.seq).map(|_| rng.below(160) as u32).collect();
+    let pjrt_logits = fwd.logits(&model, &tokens).unwrap();
+    let (native, _) = model.forward_logits(&tokens, fwd.batch, fwd.seq, false);
+    assert_eq!(native.shape(), pjrt_logits.shape());
+    let max_diff = native
+        .data()
+        .iter()
+        .zip(pjrt_logits.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff < 2e-2,
+        "native Rust forward and AOT JAX forward disagree: max diff {max_diff}"
+    );
+}
+
+#[test]
+fn pjrt_train_step_reduces_loss() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = nano_model(3);
+    let mut trainer = PjrtTrainer::new(&rt, &m, "nano", &model).unwrap();
+    let mut rng = Rng::seed_from_u64(4);
+    // A learnable repeating pattern.
+    let pattern: Vec<u32> = (0..trainer.batch * trainer.seq).map(|i| (i % 7) as u32).collect();
+    let targets: Vec<u32> =
+        (0..trainer.batch * trainer.seq).map(|i| ((i + 1) % 7) as u32).collect();
+    let first = trainer.step(&pattern, &targets).unwrap();
+    let mut last = first;
+    for _ in 0..15 {
+        last = trainer.step(&pattern, &targets).unwrap();
+    }
+    assert!(last < first * 0.8, "pjrt training: {first:.4} -> {last:.4}");
+    let _ = rng.next_u64();
+    // Export back to a native model and verify the loss transfer.
+    let mut out = nano_model(99);
+    trainer.export_into(&mut out).unwrap();
+    let (logits, _) = out.forward_logits(&pattern, trainer.batch, trainer.seq, false);
+    let native_loss = aqlm::nn::loss::cross_entropy_loss_only(&logits, &targets);
+    assert!(
+        (native_loss - last).abs() < 0.15,
+        "exported params do not reproduce pjrt loss: {native_loss:.4} vs {last:.4}"
+    );
+}
+
+#[test]
+fn pallas_kernel_artifact_matches_rust_kernels() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let spec = m.module("aqlm_gemm_2x256g8").unwrap();
+    let module = rt.compile(spec).unwrap();
+    // Build matching Rust-side weights from the manifest's shapes.
+    let (n, d_in) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let d_out = spec.inputs[1].shape[0];
+    let m_cnt = spec.inputs[1].shape[2];
+    let k = spec.inputs[2].shape[1];
+    let g = spec.inputs[2].shape[2];
+    let mut rng = Rng::seed_from_u64(5);
+    let shape = aqlm::kernels::format::AqlmShape::new(m_cnt, (k as f64).log2() as usize, g);
+    let w = aqlm::bench::kernels::synthetic_weight(d_out, d_in, shape, &mut rng);
+    let x: Vec<f32> = (0..n * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    // PJRT execution of the Pallas (interpret) kernel.
+    let codes_i32: Vec<i32> = w.codes.iter().map(|&c| c as i32).collect();
+    let mut codebooks_flat: Vec<f32> = Vec::new();
+    for cb in &w.codebooks {
+        codebooks_flat.extend_from_slice(cb.data());
+    }
+    let outputs = module
+        .run(&[
+            HostTensor::f32(x.clone(), &[n, d_in]),
+            HostTensor::i32(codes_i32, &[d_out, d_in / g, m_cnt]),
+            HostTensor::f32(codebooks_flat, &[m_cnt, k, g]),
+            HostTensor::f32(w.scales.clone(), &[d_out]),
+        ])
+        .unwrap();
+    let pallas_y = outputs[0].as_f32().unwrap();
+
+    // Rust LUT kernel, row by row of the batch.
+    let packed = aqlm::kernels::matvec::PackedAqlm::from_weight(&w);
+    let mut lut = vec![0.0f32; packed.lut_len()];
+    let mut y = vec![0.0f32; d_out];
+    for row in 0..n {
+        packed.matvec_lut(&x[row * d_in..(row + 1) * d_in], &mut lut, &mut y);
+        for c in 0..d_out {
+            let p = pallas_y[row * d_out + c];
+            assert!(
+                (p - y[c]).abs() < 1e-3 * (1.0 + p.abs()),
+                "pallas vs rust kernel mismatch at ({row},{c}): {p} vs {}",
+                y[c]
+            );
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Property-based tests over the crate's core invariants, via the
+//! built-in `propcheck` harness (proptest is unavailable offline).
+
+use aqlm::kernels::format::{AqlmShape, AqlmWeight};
+use aqlm::kernels::matvec::PackedAqlm;
+use aqlm::kernels::packed::{pack, unpack};
+use aqlm::quant::aqlm::beam::{beam_search_sweep, layer_loss};
+use aqlm::quant::aqlm::codebook::{update_codebooks_adam, CodebookUpdateConfig};
+use aqlm::quant::aqlm::kmeans::residual_kmeans_init;
+use aqlm::quant::groupint::quantize_group_minmax;
+use aqlm::tensor::ops::{matmul, matmul_at, matmul_bt};
+use aqlm::tensor::Tensor;
+use aqlm::util::propcheck::{check, check_no_shrink, shrink_vec, Config};
+use aqlm::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+// --------------------------------------------------------------- bit packing
+
+#[test]
+fn prop_pack_unpack_roundtrip_all_widths() {
+    check(
+        "pack-unpack",
+        &cfg(96),
+        |rng: &mut Rng| {
+            let bits = 1 + rng.below(16);
+            let n = 1 + rng.below(300);
+            let vals: Vec<u16> = (0..n).map(|_| rng.below(1usize << bits) as u16).collect();
+            (bits, vals)
+        },
+        |(bits, vals)| {
+            let mut shrunk: Vec<(usize, Vec<u16>)> = Vec::new();
+            for v in shrink_vec(vals) {
+                shrunk.push((*bits, v));
+            }
+            shrunk
+        },
+        |(bits, vals)| {
+            let packed = pack(vals, *bits);
+            let got = unpack(&packed, *bits, vals.len());
+            if got == *vals {
+                Ok(())
+            } else {
+                Err(format!("roundtrip failed at bits={bits}"))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------ scalar quant
+
+#[test]
+fn prop_groupint_error_bounded_by_half_scale() {
+    check_no_shrink(
+        "rtn-error-bound",
+        &cfg(128),
+        |rng: &mut Rng| {
+            let bits = 2 + rng.below(7);
+            let n = 2 + rng.below(32);
+            let mut vals = vec![0.0f32; n];
+            let std = 1.0 + rng.f32() * 5.0;
+            rng.fill_normal(&mut vals, std);
+            (bits, vals)
+        },
+        |(bits, vals)| {
+            let (codes, s, z) = quantize_group_minmax(vals, *bits);
+            for (&c, &v) in codes.iter().zip(vals) {
+                let deq = s * (c as f32 - z);
+                if (deq - v).abs() > s * 0.5 + 1e-5 {
+                    return Err(format!("|{deq} - {v}| > scale/2 = {}", s * 0.5));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- AQLM core
+
+fn random_aqlm(rng: &mut Rng) -> (AqlmWeight, Tensor, Tensor) {
+    let g = [2usize, 4][rng.below(2)];
+    let n_groups = 1 + rng.below(4);
+    let d_in = g * n_groups;
+    let d_out = 2 + rng.below(10);
+    let bits = 2 + rng.below(3);
+    let m = 1 + rng.below(2);
+    let w = Tensor::randn(&[d_out, d_in], 0.7, rng);
+    let q = residual_kmeans_init(&w, AqlmShape::new(m, bits, g), 6, rng);
+    // Random SPD calibration.
+    let a = Tensor::randn(&[d_in + 2, d_in], 1.0, rng);
+    let xxt = matmul_at(&a, &a);
+    (q, w, xxt)
+}
+
+#[test]
+fn prop_beam_search_never_increases_loss() {
+    check_no_shrink(
+        "beam-monotone",
+        &cfg(24),
+        |rng: &mut Rng| {
+            let (q, w, xxt) = random_aqlm(rng);
+            let beam = 1 + rng.below(3);
+            (q, w, xxt, beam)
+        },
+        |(q, w, xxt, beam)| {
+            let mut q = q.clone();
+            let before = layer_loss(&q, w, xxt);
+            let after = beam_search_sweep(&mut q, w, xxt, *beam);
+            if after <= before * (1.0 + 1e-5) + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("loss rose {before} -> {after} (beam {beam})"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_codebook_update_never_increases_loss() {
+    check_no_shrink(
+        "codebook-adam-monotone",
+        &cfg(16),
+        |rng: &mut Rng| random_aqlm(rng),
+        |(q, w, xxt)| {
+            let mut q = q.clone();
+            let (initial, final_loss) = update_codebooks_adam(
+                &mut q,
+                w,
+                xxt,
+                CodebookUpdateConfig { steps: 30, lr: 5e-4, tol: 0.0 },
+            );
+            // Absolute slack: when K-means already fits exactly (loss ~ 0),
+            // finite Adam steps wander at float-noise level (~1e-5) without
+            // that being a real regression.
+            if final_loss <= initial * 1.02 + 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("adam increased loss {initial} -> {final_loss}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_decode_linearity_in_scales() {
+    // decode(2·s) == 2·decode(s): the format is linear in the scales.
+    check_no_shrink(
+        "decode-scale-linearity",
+        &cfg(32),
+        |rng: &mut Rng| random_aqlm(rng),
+        |(q, _, _)| {
+            let base = q.decode();
+            let mut q2 = q.clone();
+            for s in &mut q2.scales {
+                *s *= 2.0;
+            }
+            let doubled = q2.decode();
+            let mut expect = base.clone();
+            expect.scale_assign(2.0);
+            if doubled.allclose(&expect, 1e-5) {
+                Ok(())
+            } else {
+                Err("decode not linear in scales".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_packed_kernels_agree_with_dense() {
+    check_no_shrink(
+        "kernels-vs-dense",
+        &cfg(24),
+        |rng: &mut Rng| {
+            let (q, _, _) = random_aqlm(rng);
+            let x: Vec<f32> = (0..q.d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            (q, x)
+        },
+        |(q, x)| {
+            let dense = q.decode();
+            let mut y_ref = vec![0.0f32; q.d_out];
+            aqlm::tensor::ops::gemv(&dense, x, &mut y_ref);
+            let packed = PackedAqlm::from_weight(q);
+            let mut y_dec = vec![0.0f32; q.d_out];
+            packed.matvec_decode(x, &mut y_dec);
+            let mut lut = vec![0.0f32; packed.lut_len()];
+            let mut y_lut = vec![0.0f32; q.d_out];
+            packed.matvec_lut(x, &mut lut, &mut y_lut);
+            for i in 0..q.d_out {
+                let tol = 1e-3 * (1.0 + y_ref[i].abs());
+                if (y_dec[i] - y_ref[i]).abs() > tol {
+                    return Err(format!("decode kernel row {i}: {} vs {}", y_dec[i], y_ref[i]));
+                }
+                if (y_lut[i] - y_ref[i]).abs() > tol {
+                    return Err(format!("lut kernel row {i}: {} vs {}", y_lut[i], y_ref[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------------------------- tensor alg
+
+#[test]
+fn prop_matmul_transpose_identities() {
+    check_no_shrink(
+        "matmul-identities",
+        &cfg(32),
+        |rng: &mut Rng| {
+            let m = 1 + rng.below(8);
+            let k = 1 + rng.below(8);
+            let n = 1 + rng.below(8);
+            (Tensor::randn(&[m, k], 1.0, rng), Tensor::randn(&[n, k], 1.0, rng))
+        },
+        |(a, b)| {
+            // A·Bᵀ == (B·Aᵀ)ᵀ and matmul_bt == matmul(a, bᵀ).
+            let left = matmul_bt(a, b);
+            let right = matmul_bt(b, a).transpose();
+            let direct = matmul(a, &b.transpose());
+            if !left.allclose(&right, 1e-4) {
+                return Err("ABᵀ != (BAᵀ)ᵀ".into());
+            }
+            if !left.allclose(&direct, 1e-4) {
+                return Err("matmul_bt != matmul(a, bᵀ)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_appendix_h_formula_matches_struct_accounting() {
+    check_no_shrink(
+        "appendix-h",
+        &cfg(48),
+        |rng: &mut Rng| {
+            let g = [2usize, 4, 8][rng.below(3)];
+            let n_groups = 1 + rng.below(6);
+            let d_in = g * n_groups;
+            let d_out = 1 + rng.below(24);
+            let shape = AqlmShape::new(1 + rng.below(3), 2 + rng.below(5), g);
+            (d_out, d_in, shape)
+        },
+        |(d_out, d_in, shape)| {
+            let mut rng2 = Rng::seed_from_u64(9);
+            let w = Tensor::randn(&[*d_out, *d_in], 0.5, &mut rng2);
+            let q = residual_kmeans_init(&w, *shape, 2, &mut rng2);
+            let formula = shape.avg_bits_for(*d_out, *d_in);
+            if (q.avg_bits() - formula).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("struct {} vs formula {}", q.avg_bits(), formula))
+            }
+        },
+    );
+}

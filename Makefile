@@ -1,0 +1,22 @@
+# Tier-1 verification plus the bench smoke target (tiny-shape batch sweeps,
+# so the batched AQLM kernels and the batched serving loop are exercised in
+# CI without bench-length runtimes).
+
+.PHONY: verify build test smoke bench
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Batch-sweep smoke: runs the ignored bench_smoke tests in release mode.
+smoke:
+	cargo test -q --release -- --ignored bench_smoke
+
+verify: build test smoke
+
+# Full measured sweeps (Tables 5/5b and 14/14b).
+bench:
+	cargo bench --bench kernel_speed
+	cargo bench --bench generation_speed

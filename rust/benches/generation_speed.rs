@@ -1,5 +1,6 @@
 //! `cargo bench --bench generation_speed` — Table 14 (end-to-end tok/s of
-//! the continuous-batching server, FP32 vs AQLM weights).
+//! the continuous-batching server, FP32 vs AQLM weights) plus Table 14b,
+//! the batched-decode sweep over max_batch ∈ {1,4,8,16}.
 
 use aqlm::bench::{kernels, Profile, Workspace};
 use aqlm::util::cli::Args;
@@ -17,6 +18,20 @@ fn main() {
         }
         Err(e) => {
             eprintln!("t14 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // Batched-decode sweep: server tok/s at max_batch ∈ {1,4,8,16}.
+    match kernels::t14b_batch_sweep(&mut ws) {
+        Ok(tables) => {
+            for t in tables {
+                println!("{}", t.to_markdown());
+                t.save(&ws.results_dir(), "t14b_batch_sweep").ok();
+            }
+        }
+        Err(e) => {
+            eprintln!("t14b failed: {e:#}");
             std::process::exit(1);
         }
     }

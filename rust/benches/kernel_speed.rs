@@ -1,6 +1,8 @@
 //! `cargo bench --bench kernel_speed` — Table 5 (layer matvec latency,
-//! f32 GEMV vs AQLM decode/LUT kernels on the paper's gate_proj shapes)
-//! plus a microkernel sweep over code widths used by the §Perf log.
+//! f32 GEMV vs AQLM decode/LUT kernels on the paper's gate_proj shapes),
+//! Table 5b (batch-amortization sweep: n sequential matvec vs one matmat,
+//! n ∈ {1,4,8,16}), plus a microkernel sweep over code widths used by the
+//! §Perf log.
 
 use aqlm::bench::{kernels, Profile, Workspace};
 use aqlm::kernels::format::AqlmShape;
@@ -22,6 +24,20 @@ fn main() {
         }
         Err(e) => {
             eprintln!("t5 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // Batch-size sweep: n sequential matvec vs one matmat (n ∈ {1,4,8,16}).
+    match kernels::t5b_batch_sweep(&mut ws) {
+        Ok(tables) => {
+            for t in tables {
+                println!("{}", t.to_markdown());
+                t.save(&ws.results_dir(), "t5b_batch_sweep").ok();
+            }
+        }
+        Err(e) => {
+            eprintln!("t5b failed: {e:#}");
             std::process::exit(1);
         }
     }

@@ -87,6 +87,53 @@ pub fn t5_matvec_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// Batch-amortization sweep (§4.4 batched-kernel claim, CPU analog): n
+/// sequential `matvec_auto` calls vs one `matmat_auto` on the same inputs.
+/// The batched kernel reads the packed code stream once for the whole
+/// batch, so per-vector time should drop toward the LUT-add floor as n
+/// grows.
+pub fn t5b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 5b: batched AQLM matmat — n sequential matvec vs one matmat (per-vector time)",
+        &["Layer", "Config", "n", "n × matvec", "matmat", "Speedup"],
+    );
+    let (d_out, d_in) = if ws.profile.fast { (2048, 1024) } else { (11008, 4096) };
+    let iters = if ws.profile.fast { 5 } else { 11 };
+    let mut rng = Rng::seed_from_u64(7);
+    for shape in [AqlmShape::new(2, 8, 8), AqlmShape::new(4, 8, 16)] {
+        let w = synthetic_weight(d_out, d_in, shape, &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        drop(w);
+        for n in [1usize, 4, 8, 16] {
+            let xs: Vec<f32> = (0..n * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut ys = vec![0.0f32; n * d_out];
+            let mut lut = Vec::new();
+            let seq = bench_adaptive(0.05, iters, || {
+                for b in 0..n {
+                    packed.matvec_auto(
+                        black_box(&xs[b * d_in..(b + 1) * d_in]),
+                        &mut lut,
+                        &mut ys[b * d_out..(b + 1) * d_out],
+                    );
+                }
+            });
+            let mut blut = Vec::new();
+            let bat = bench_adaptive(0.05, iters, || {
+                packed.matmat_auto(black_box(&xs), n, &mut blut, &mut ys);
+            });
+            t.row(vec![
+                format!("{d_out}x{d_in}"),
+                shape.name(),
+                format!("{n}"),
+                crate::util::human_time(seq.median / n as f64),
+                crate::util::human_time(bat.median / n as f64),
+                format!("x{:.2}", seq.median / bat.median),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
 /// Table 14: end-to-end generation tokens/s through the serving path,
 /// FP32 vs AQLM-quantized models.
 pub fn t14_generation_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
@@ -119,6 +166,40 @@ pub fn t14_generation_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
                 crate::util::human_time(stats.mean_latency_s()),
             ]);
         }
+    }
+    Ok(vec![t])
+}
+
+/// Table 14b: decode throughput of the batched server as `max_batch` grows
+/// (the serving-side measurement of the code-stream amortization — without
+/// batched kernels tok/s is roughly flat in max_batch; with them it scales).
+pub fn t14b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    use crate::coordinator::server::{Server, ServerConfig};
+    let mut t = Table::new(
+        "Table 14b: server decode throughput vs max_batch (AQLM weights)",
+        &["max_batch", "tok/s", "mean latency", "requests"],
+    );
+    let base = ws.base_model("nano")?;
+    let shape = choose_shape(&base.cfg, 2.0, 8);
+    let method = super::tables::aqlm_method_with_shape(ws, shape);
+    let (quantized, _) = ws.quantize(&base, &method)?;
+    let n_req = if ws.profile.fast { 16 } else { 32 };
+    let max_new = if ws.profile.fast { 32 } else { 64 };
+    for max_batch in [1usize, 4, 8, 16] {
+        let server = Server::start(quantized.clone(), ServerConfig { max_batch, seed: 0 });
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("generation response");
+        }
+        let stats = server.shutdown();
+        t.row(vec![
+            format!("{max_batch}"),
+            format!("{:.1}", stats.tokens_per_second()),
+            crate::util::human_time(stats.mean_latency_s()),
+            format!("{}", stats.requests),
+        ]);
     }
     Ok(vec![t])
 }

@@ -9,7 +9,8 @@ pub mod kernels;
 
 pub use workspace::{Profile, Workspace};
 
-/// Run one experiment by id ("t1".."t16", "f1", "f4", "f6", "f7").
+/// Run one experiment by id ("t1".."t16", batch sweeps "t5b"/"t14b",
+/// "f1", "f4", "f6", "f7").
 /// Results are printed, and saved under `results/`.
 pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
     let tables = match id {
@@ -18,6 +19,7 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
         "t3" => tables::t3_moe_2bit(ws)?,
         "t4" => tables::t4_e2e_2bit(ws)?,
         "t5" => kernels::t5_matvec_speed(ws)?,
+        "t5b" => kernels::t5b_batch_sweep(ws)?,
         "t6" => tables::t6_e2e_3bit(ws)?,
         "t7" => tables::t7_ft_ablation(ws)?,
         "t8" => tables::t8_calib_sweep(ws)?,
@@ -27,6 +29,7 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
         "t12" => tables::t12_cpu_friendly(ws)?,
         "t13" => tables::t13_gqa(ws)?,
         "t14" => kernels::t14_generation_speed(ws)?,
+        "t14b" => kernels::t14b_batch_sweep(ws)?,
         "t15" => tables::t15_hard_tasks(ws)?,
         "t16" => tables::t16_gptq_tuned(ws)?,
         "f1" | "f5" => figures::f1_pareto(ws)?,
@@ -45,8 +48,8 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
 
 /// All experiment ids in paper order.
 pub const ALL_IDS: &[&str] = &[
-    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
-    "t15", "t16", "f1", "f4", "f6", "f7",
+    "t1", "t2", "t3", "t4", "t5", "t5b", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13",
+    "t14", "t14b", "t15", "t16", "f1", "f4", "f6", "f7",
 ];
 
 fn slug(s: &str) -> String {

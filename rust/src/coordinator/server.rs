@@ -8,11 +8,30 @@
 //! queue — the Orca/vLLM scheduling discipline, deterministic and
 //! single-core here. Clients talk over `std::sync::mpsc` channels; no
 //! Python, no async runtime.
+//!
+//! **Batched decode.** Each iteration advances *all* active sequences with
+//! one [`Model::decode_batch`] call instead of per-sequence `decode_token`
+//! calls. This matters because the AQLM kernels are memory-bound on the
+//! packed code stream: a quantized layer streams `d_out·n_groups·M·B/8`
+//! bytes of codes per forward, so `c` concurrent sequences decoded
+//! independently read that stream `c` times per generated batch of tokens,
+//! while the batched kernel reads it **once** and fans table lookups out
+//! across lanes (the CPU analog of the paper's batched GPU kernel, §4.4).
+//! Bytes of code stream read per generated token drop from
+//! `Σ_layers d_out·n_groups·M·B/8` to the same divided by the number of
+//! active lanes. Per-lane arithmetic is bit-identical to the single-sequence
+//! path, so greedy output is unchanged.
+//!
+//! Prompts longer than the model context are truncated to their **last**
+//! `max_seq − 1` tokens at admission (the serving-window convention), which
+//! keeps prefill inside the KV-cache capacity and leaves room to generate
+//! at least one token.
 
 use crate::nn::kvcache::LayerKvCache;
 use crate::nn::model::Model;
 use crate::nn::sampler;
 use crate::util::rng::Rng;
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -104,7 +123,7 @@ impl Server {
             let wall = Instant::now();
             let mut rng = Rng::seed_from_u64(cfg.seed);
             let mut stats = ServerStats::default();
-            let mut queue: Vec<(GenRequest, Instant)> = Vec::new();
+            let mut queue: VecDeque<(GenRequest, Instant)> = VecDeque::new();
             let mut active: Vec<ActiveSeq> = Vec::new();
             let mut scratch: Vec<f32> = Vec::new();
             let mut shutting_down = false;
@@ -113,13 +132,13 @@ impl Server {
                 loop {
                     if active.is_empty() && queue.is_empty() && !shutting_down {
                         match rx.recv() {
-                            Ok(ServerMsg::Request(r, t)) => queue.push((r, t)),
+                            Ok(ServerMsg::Request(r, t)) => queue.push_back((r, t)),
                             Ok(ServerMsg::Shutdown) | Err(_) => shutting_down = true,
                         }
                         continue;
                     }
                     match rx.try_recv() {
-                        Ok(ServerMsg::Request(r, t)) => queue.push((r, t)),
+                        Ok(ServerMsg::Request(r, t)) => queue.push_back((r, t)),
                         Ok(ServerMsg::Shutdown) => shutting_down = true,
                         Err(_) => break,
                     }
@@ -127,12 +146,20 @@ impl Server {
                 if shutting_down && active.is_empty() && queue.is_empty() {
                     break;
                 }
-                // Admission: prefill newly admitted requests.
+                // Admission: prefill newly admitted requests (FIFO pop is O(1)
+                // on the VecDeque).
                 while active.len() < cfg.max_batch && !queue.is_empty() {
-                    let (req, enqueued) = queue.remove(0);
+                    let (req, enqueued) = queue.pop_front().unwrap();
                     let mut kv = model.new_kv_caches();
                     let mut logits = Vec::new();
-                    let prompt: Vec<u32> = if req.prompt.is_empty() { vec![1] } else { req.prompt.clone() };
+                    // A prompt of max_seq or more tokens would overflow the KV
+                    // cache during prefill and leave no room to generate; keep
+                    // the trailing window (shared with Model::generate).
+                    let prompt: Vec<u32> = if req.prompt.is_empty() {
+                        vec![1]
+                    } else {
+                        model.clamp_prompt_window(&req.prompt).to_vec()
+                    };
                     for (pos, &t) in prompt.iter().enumerate() {
                         logits = model.decode_token(t, pos, &mut kv, &mut scratch);
                     }
@@ -147,7 +174,8 @@ impl Server {
                         enqueued,
                     });
                 }
-                // Decode one token for every active sequence (continuous batching).
+                // Sample one token for every active sequence and retire the
+                // finished ones.
                 let mut i = 0;
                 while i < active.len() {
                     let done = {
@@ -157,13 +185,7 @@ impl Server {
                         seq.generated += 1;
                         stats.tokens_generated += 1;
                         let at_cap = seq.tokens.len() >= model.cfg.max_seq;
-                        if seq.generated >= seq.max_new || at_cap {
-                            true
-                        } else {
-                            let pos = seq.tokens.len() - 1;
-                            seq.last_logits = model.decode_token(next, pos, &mut seq.kv, &mut scratch);
-                            false
-                        }
+                        seq.generated >= seq.max_new || at_cap
                     };
                     if done {
                         let seq = active.remove(i);
@@ -177,6 +199,19 @@ impl Server {
                         });
                     } else {
                         i += 1;
+                    }
+                }
+                // One batched forward advances every surviving sequence: each
+                // quantized layer streams its packed codes once for the whole
+                // batch instead of once per sequence (see module docs).
+                if !active.is_empty() {
+                    let tokens: Vec<u32> = active.iter().map(|s| *s.tokens.last().unwrap()).collect();
+                    let positions: Vec<usize> = active.iter().map(|s| s.tokens.len() - 1).collect();
+                    let mut kv_refs: Vec<&mut Vec<LayerKvCache>> =
+                        active.iter_mut().map(|s| &mut s.kv).collect();
+                    let logits = model.decode_batch(&tokens, &positions, &mut kv_refs, &mut scratch);
+                    for (seq, lg) in active.iter_mut().zip(logits) {
+                        seq.last_logits = lg;
                     }
                 }
             }
@@ -265,6 +300,66 @@ mod tests {
         // max_seq 32, prompt 2 → at most 30 generated.
         let resp = server.submit(vec![1, 2], 100, 0.0).recv().unwrap();
         assert!(resp.tokens.len() <= 32);
+        server.shutdown();
+    }
+
+    #[test]
+    fn prompt_at_max_seq_is_truncated_not_overflowed() {
+        // Prompt length == max_seq used to prefill past the KV cache (the
+        // last position left no room); now it is truncated to the trailing
+        // window and still generates.
+        let server = Server::start(server_model(), ServerConfig::default());
+        let prompt: Vec<u32> = (0..32).map(|i| 1 + i % 30).collect();
+        let resp = server
+            .submit(prompt, 4, 0.0)
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .unwrap();
+        assert!(resp.generated >= 1, "truncated prompt must still generate");
+        assert!(resp.tokens.len() <= 32, "response must fit the context window");
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn prompt_over_max_seq_is_truncated_not_overflowed() {
+        // Prompt length > max_seq wrote past the KV cache (worker panic,
+        // hung clients). Regression: must be served from the trailing window.
+        let server = Server::start(server_model(), ServerConfig::default());
+        let prompt: Vec<u32> = (0..100).map(|i| 1 + i % 30).collect();
+        let resp = server
+            .submit(prompt.clone(), 4, 0.0)
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .unwrap();
+        assert!(resp.generated >= 1);
+        assert!(resp.tokens.len() <= 32);
+        // The kept prefix is the *tail* of the original prompt.
+        let kept = resp.tokens.len() - resp.generated;
+        assert_eq!(&resp.tokens[..kept], &prompt[prompt.len() - kept..]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batched_greedy_matches_offline_generate_per_sequence() {
+        // Several concurrent greedy sequences decoded through the batched
+        // path must each reproduce Model::generate token-for-token.
+        let mut model = server_model();
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![3, 7],
+            vec![11],
+            vec![4, 9, 1],
+            vec![2, 2, 8, 5],
+            vec![30, 14],
+        ];
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| model.generate(p, 6, 0.0, &mut Rng::seed_from_u64(0)))
+            .collect();
+        let server = Server::start(model, ServerConfig { max_batch: 8, seed: 0 });
+        let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
+        for (rx, want) in rxs.into_iter().zip(&expected) {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(&resp.tokens, want, "batched greedy diverged from offline generate");
+        }
         server.shutdown();
     }
 }

@@ -1,6 +1,6 @@
 //! AQLM matrix–vector kernels (paper §4.4, Tables 5 & 14).
 //!
-//! Three strategies over the deployed [`PackedAqlm`] format:
+//! Four strategies over the deployed [`PackedAqlm`] format:
 //!
 //! 1. **decode** — stream codes, reconstruct each group into registers, FMA
 //!    against the input. Reads `B·M/8/g` bytes per weight instead of 4
@@ -12,6 +12,19 @@
 //!    tables for 2^8 codebooks fit in L1/L2, exactly as the paper argues.
 //! 3. **auto** — picks lut when the table precompute (`d_in·M·2^B` FLOPs)
 //!    amortizes over `d_out` rows, else decode.
+//! 4. **batched (`matmat_*`)** — the serving-side analog of the paper's
+//!    batched GPU kernel. Both single-vector kernels are memory-bound on the
+//!    packed code stream: every generated token streams
+//!    `d_out·n_groups·M·B/8` bytes of codes per layer, and a server decoding
+//!    `n` concurrent sequences with `n` independent `matvec` calls re-reads
+//!    that stream `n` times per step. The batched kernels build phase-1 LUTs
+//!    *per input vector* but read each packed code exactly **once**, fanning
+//!    the table lookup (or the reconstructed group) out across all `n` batch
+//!    lanes — code-stream bytes per generated token drop from
+//!    `d_out·n_groups·M·B/8` to `d_out·n_groups·M·B/(8·n)`. Per-lane
+//!    arithmetic (accumulator structure and summation order) is kept
+//!    identical to the single-vector kernels, so batched results are
+//!    bit-for-bit equal to `n` independent `matvec_*` calls.
 //!
 //! The honest baseline these race against is
 //! [`crate::tensor::ops::gemv`] — same blocked dot-product code the dense
@@ -73,30 +86,41 @@ impl PackedAqlm {
         self.packed_codes.len() * 8 + self.codebooks.len() * 4 + self.scales.len() * 4
     }
 
+    /// Reconstruct one group's weights (sum of the next `M` codewords from
+    /// `reader`) into `wbuf[0..g]`. Shared by both decode kernels so their
+    /// bit-for-bit parity cannot drift.
+    #[inline]
+    fn reconstruct_group(&self, reader: &mut BitReader, wbuf: &mut [f32]) {
+        let g = self.group;
+        let kg = self.codebook_size() * g;
+        let c0 = reader.next() as usize;
+        wbuf.copy_from_slice(&self.codebooks[c0 * g..c0 * g + g]);
+        for m in 1..self.n_codebooks {
+            let c = reader.next() as usize;
+            let cw = &self.codebooks[m * kg + c * g..m * kg + c * g + g];
+            for t in 0..g {
+                wbuf[t] += cw[t];
+            }
+        }
+    }
+
     /// y = Ŵ x via streaming decode + FMA.
     pub fn matvec_decode(&self, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.d_in);
         debug_assert_eq!(y.len(), self.d_out);
         let g = self.group;
-        let kg = self.codebook_size() * g;
         let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
+        // Reconstruction buffer: stack for the common small groups (the
+        // compiler keeps it in registers), heap once per call for g > 64.
+        let mut stack = [0.0f32; 64];
+        let mut heap = if g > 64 { vec![0.0f32; g] } else { Vec::new() };
         for i in 0..self.d_out {
             let mut acc = 0.0f32;
             for j in 0..self.n_groups() {
                 let xg = &x[j * g..(j + 1) * g];
-                // Reconstruct the group on the fly; for small g the compiler
-                // keeps `wbuf` in registers.
-                let mut wbuf = [0.0f32; 64];
-                let wbuf = &mut wbuf[..g];
-                let c0 = reader.next() as usize;
-                wbuf.copy_from_slice(&self.codebooks[c0 * g..c0 * g + g]);
-                for m in 1..self.n_codebooks {
-                    let c = reader.next() as usize;
-                    let cw = &self.codebooks[m * kg + c * g..m * kg + c * g + g];
-                    for t in 0..g {
-                        wbuf[t] += cw[t];
-                    }
-                }
+                let wbuf: &mut [f32] =
+                    if g <= 64 { &mut stack[..g] } else { &mut heap[..] };
+                self.reconstruct_group(&mut reader, wbuf);
                 for t in 0..g {
                     acc += wbuf[t] * xg[t];
                 }
@@ -105,22 +129,53 @@ impl PackedAqlm {
         }
     }
 
+    /// Ys = Ŵ Xs for `n` input vectors at once via streaming decode.
+    ///
+    /// `xs` is `n` rows of `d_in` (lane-major), `ys` `n` rows of `d_out`.
+    /// The packed code stream is read **once**: each reconstructed group is
+    /// FMA'd against every lane before the next codes are decoded, so the
+    /// memory-bound code read amortizes `n`-fold. Each lane's accumulation
+    /// order matches [`Self::matvec_decode`] exactly (bit-identical results).
+    pub fn matmat_decode(&self, xs: &[f32], n: usize, ys: &mut [f32]) {
+        assert_eq!(xs.len(), n * self.d_in);
+        assert_eq!(ys.len(), n * self.d_out);
+        let g = self.group;
+        let (d_in, d_out) = (self.d_in, self.d_out);
+        let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
+        let mut stack = [0.0f32; 64];
+        let mut heap = if g > 64 { vec![0.0f32; g] } else { Vec::new() };
+        let mut acc = vec![0.0f32; n];
+        for i in 0..d_out {
+            acc.fill(0.0);
+            for j in 0..self.n_groups() {
+                let wbuf: &mut [f32] =
+                    if g <= 64 { &mut stack[..g] } else { &mut heap[..] };
+                self.reconstruct_group(&mut reader, wbuf);
+                // Fan the reconstructed group out across all lanes.
+                for (b, a) in acc.iter_mut().enumerate() {
+                    let xg = &xs[b * d_in + j * g..b * d_in + j * g + g];
+                    for t in 0..g {
+                        *a += wbuf[t] * xg[t];
+                    }
+                }
+            }
+            for b in 0..n {
+                ys[b * d_out + i] = acc[b] * self.scales[i];
+            }
+        }
+    }
+
     /// Size of the scratch LUT needed by [`Self::matvec_lut`].
     pub fn lut_len(&self) -> usize {
         self.n_groups() * self.n_codebooks * self.codebook_size()
     }
 
-    /// y = Ŵ x via per-input lookup tables (the paper's CPU kernel).
-    /// `lut` is caller-provided scratch of `lut_len()` to keep the hot loop
-    /// allocation-free.
-    pub fn matvec_lut(&self, x: &[f32], lut: &mut [f32], y: &mut [f32]) {
-        debug_assert_eq!(x.len(), self.d_in);
-        debug_assert_eq!(y.len(), self.d_out);
-        debug_assert_eq!(lut.len(), self.lut_len());
+    /// Phase 1 of the LUT kernels: fill `lut[(j·M + m)·K + c] =
+    /// ⟨x_group_j, C_m[c]⟩` for one input vector.
+    fn build_lut(&self, x: &[f32], lut: &mut [f32]) {
         let g = self.group;
         let k = self.codebook_size();
         let kg = k * g;
-        // Phase 1: lut[(j*M + m)*K + c] = <x_group_j, C_m[c]>
         for j in 0..self.n_groups() {
             let xg = &x[j * g..(j + 1) * g];
             for m in 0..self.n_codebooks {
@@ -136,13 +191,24 @@ impl PackedAqlm {
                 }
             }
         }
+    }
+
+    /// y = Ŵ x via per-input lookup tables (the paper's CPU kernel).
+    /// `lut` is caller-provided scratch of `lut_len()` to keep the hot loop
+    /// allocation-free.
+    pub fn matvec_lut(&self, x: &[f32], lut: &mut [f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d_in);
+        debug_assert_eq!(y.len(), self.d_out);
+        debug_assert_eq!(lut.len(), self.lut_len());
+        let k = self.codebook_size();
+        self.build_lut(x, lut);
         // Phase 2: pure table additions. The LUT layout `(j·M + m)·K + c`
         // matches the code stream order exactly, so each row is a linear
         // scan `acc += lut[idx·K + code[idx]]`.
         let per_row = self.n_groups() * self.n_codebooks;
         if let Some(bytes) = &self.codes_bytes {
-            // §Perf k4/k5: byte-aligned codes + 4 independent accumulators
-            // (breaks the load→add latency chain; ~4 loads in flight).
+            // §Perf k4/k5: byte-aligned codes + 8 independent accumulators
+            // (breaks the load→add latency chain; several loads in flight).
             for i in 0..self.d_out {
                 let row = &bytes[i * per_row..(i + 1) * per_row];
                 let mut a = [0.0f32; 8];
@@ -174,14 +240,104 @@ impl PackedAqlm {
         }
     }
 
+    /// Ys = Ŵ Xs for `n` input vectors via lookup tables.
+    ///
+    /// `xs` is `n` rows of `d_in`, `lut` caller scratch of `n · lut_len()`
+    /// (one table per lane), `ys` `n` rows of `d_out`. Phase 1 builds each
+    /// lane's LUT independently; phase 2 reads each packed code exactly
+    /// **once** per row and fans the lookup out across all lanes, so the
+    /// dominant code-stream traffic amortizes `n`-fold. Per-lane accumulator
+    /// structure mirrors [`Self::matvec_lut`] (8 chained partials + tail),
+    /// so results are bit-identical to `n` independent calls.
+    pub fn matmat_lut(&self, xs: &[f32], n: usize, lut: &mut [f32], ys: &mut [f32]) {
+        assert_eq!(xs.len(), n * self.d_in);
+        assert_eq!(ys.len(), n * self.d_out);
+        assert_eq!(lut.len(), n * self.lut_len());
+        let k = self.codebook_size();
+        let (d_in, d_out) = (self.d_in, self.d_out);
+        let ll = self.lut_len();
+        for b in 0..n {
+            self.build_lut(&xs[b * d_in..(b + 1) * d_in], &mut lut[b * ll..(b + 1) * ll]);
+        }
+        let per_row = self.n_groups() * self.n_codebooks;
+        // Per-lane partial accumulators (8 per lane, as in matvec_lut) and
+        // per-lane scalar accumulators for the tail.
+        let mut parts = vec![0.0f32; n * 8];
+        let mut acc = vec![0.0f32; n];
+        if let Some(bytes) = &self.codes_bytes {
+            for i in 0..d_out {
+                let row = &bytes[i * per_row..(i + 1) * per_row];
+                parts.fill(0.0);
+                let chunks = per_row / 8;
+                for cidx in 0..chunks {
+                    let idx = cidx * 8;
+                    for u in 0..8 {
+                        // One code read serves every lane.
+                        let off = (idx + u) * k + row[idx + u] as usize;
+                        for b in 0..n {
+                            parts[b * 8 + u] += lut[b * ll + off];
+                        }
+                    }
+                }
+                for b in 0..n {
+                    acc[b] = parts[b * 8..b * 8 + 8].iter().sum();
+                }
+                for idx in chunks * 8..per_row {
+                    let off = idx * k + row[idx] as usize;
+                    for (b, a) in acc.iter_mut().enumerate() {
+                        *a += lut[b * ll + off];
+                    }
+                }
+                for b in 0..n {
+                    ys[b * d_out + i] = acc[b] * self.scales[i];
+                }
+            }
+        } else {
+            let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
+            for i in 0..d_out {
+                acc.fill(0.0);
+                for idx in 0..per_row {
+                    let c = reader.next() as usize;
+                    let off = idx * k + c;
+                    for (b, a) in acc.iter_mut().enumerate() {
+                        *a += lut[b * ll + off];
+                    }
+                }
+                for b in 0..n {
+                    ys[b * d_out + i] = acc[b] * self.scales[i];
+                }
+            }
+        }
+    }
+
+    /// Shared dispatch heuristic: LUT precompute is `d_in·M·K` FLOPs; it
+    /// amortizes when `d_out·g ≫ M·K`. Single predicate for both the
+    /// single-vector and batched paths so their kernel choice (and hence
+    /// float rounding) can never drift apart.
+    #[inline]
+    fn prefers_lut(&self) -> bool {
+        self.n_codebooks * self.codebook_size() * 2 <= self.d_out * self.group
+    }
+
     /// Heuristic dispatch between the two kernels.
     pub fn matvec_auto(&self, x: &[f32], lut: &mut Vec<f32>, y: &mut [f32]) {
-        // LUT precompute is d_in·M·K FLOPs; it amortizes when d_out·g ≫ M·K.
-        if self.n_codebooks * self.codebook_size() * 2 <= self.d_out * self.group {
+        if self.prefers_lut() {
             lut.resize(self.lut_len(), 0.0);
             self.matvec_lut(x, lut, y);
         } else {
             self.matvec_decode(x, y);
+        }
+    }
+
+    /// Batched dispatch. Uses the same per-layer heuristic as
+    /// [`Self::matvec_auto`], so each lane runs the identical kernel choice
+    /// and batched serving output stays bit-equal to the single-vector path.
+    pub fn matmat_auto(&self, xs: &[f32], n: usize, lut: &mut Vec<f32>, ys: &mut [f32]) {
+        if self.prefers_lut() {
+            lut.resize(n * self.lut_len(), 0.0);
+            self.matmat_lut(xs, n, lut, ys);
+        } else {
+            self.matmat_decode(xs, n, ys);
         }
     }
 }
@@ -237,6 +393,113 @@ mod tests {
     #[test]
     fn kernels_match_dense_odd_bits() {
         check_kernels(24, 48, AqlmShape::new(3, 5, 4), 4);
+    }
+
+    /// Batched kernels must agree with `n` independent matvec calls
+    /// **bit-for-bit** (the server's greedy-parity guarantee rests on this).
+    fn check_batched_bitexact(d_out: usize, d_in: usize, shape: AqlmShape, n: usize, seed: u64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w = random_weight(d_out, d_in, shape, &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        let xs: Vec<f32> = (0..n * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        let mut y_single = vec![0.0f32; n * d_out];
+        let mut lut = vec![0.0f32; packed.lut_len()];
+        for b in 0..n {
+            packed.matvec_lut(&xs[b * d_in..(b + 1) * d_in], &mut lut, &mut y_single[b * d_out..(b + 1) * d_out]);
+        }
+        let mut y_batch = vec![0.0f32; n * d_out];
+        let mut blut = vec![0.0f32; n * packed.lut_len()];
+        packed.matmat_lut(&xs, n, &mut blut, &mut y_batch);
+        for i in 0..n * d_out {
+            assert_eq!(
+                y_batch[i].to_bits(),
+                y_single[i].to_bits(),
+                "matmat_lut lane {} row {} not bit-equal: {} vs {}",
+                i / d_out,
+                i % d_out,
+                y_batch[i],
+                y_single[i]
+            );
+        }
+
+        for b in 0..n {
+            packed.matvec_decode(&xs[b * d_in..(b + 1) * d_in], &mut y_single[b * d_out..(b + 1) * d_out]);
+        }
+        packed.matmat_decode(&xs, n, &mut y_batch);
+        for i in 0..n * d_out {
+            assert_eq!(
+                y_batch[i].to_bits(),
+                y_single[i].to_bits(),
+                "matmat_decode lane {} row {} not bit-equal",
+                i / d_out,
+                i % d_out
+            );
+        }
+
+        let mut scratch = Vec::new();
+        for b in 0..n {
+            packed.matvec_auto(&xs[b * d_in..(b + 1) * d_in], &mut scratch, &mut y_single[b * d_out..(b + 1) * d_out]);
+        }
+        packed.matmat_auto(&xs, n, &mut scratch, &mut y_batch);
+        for i in 0..n * d_out {
+            assert_eq!(y_batch[i].to_bits(), y_single[i].to_bits(), "matmat_auto index {i}");
+        }
+    }
+
+    #[test]
+    fn batched_matches_sequential_2x8() {
+        for n in [1, 4, 8] {
+            check_batched_bitexact(48, 64, AqlmShape::new(2, 8, 8), n, 10 + n as u64);
+        }
+    }
+
+    #[test]
+    fn batched_matches_sequential_odd_bits() {
+        // 3 codebooks × 5 bits exercises the BitReader (non-byte) phase 2.
+        check_batched_bitexact(24, 40, AqlmShape::new(3, 5, 4), 8, 11);
+    }
+
+    #[test]
+    fn batched_matches_sequential_g16() {
+        check_batched_bitexact(64, 64, AqlmShape::new(4, 8, 16), 8, 12);
+    }
+
+    #[test]
+    fn batched_matches_sequential_decode_favored() {
+        // Tiny d_out forces matvec_auto/matmat_auto onto the decode kernel.
+        check_batched_bitexact(8, 64, AqlmShape::new(2, 8, 8), 4, 13);
+    }
+
+    #[test]
+    fn decode_handles_groups_larger_than_64() {
+        // Regression: the old stack-only wbuf ([f32; 64]) panicked for
+        // g > 64; now a heap buffer takes over.
+        let d_out = 8;
+        let d_in = 256;
+        let shape = AqlmShape::new(2, 6, 128);
+        let mut rng = Rng::seed_from_u64(14);
+        let w = random_weight(d_out, d_in, shape, &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        let dense = w.decode();
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y_ref = vec![0.0f32; d_out];
+        gemv(&dense, &x, &mut y_ref);
+        let mut y = vec![0.0f32; d_out];
+        packed.matvec_decode(&x, &mut y);
+        for i in 0..d_out {
+            let tol = 1e-3 * (1.0 + y_ref[i].abs());
+            assert!((y[i] - y_ref[i]).abs() < tol, "row {i}: {} vs {}", y[i], y_ref[i]);
+        }
+        // Batched variant shares the same reconstruction path.
+        let mut ys = vec![0.0f32; 2 * d_out];
+        let xs: Vec<f32> = (0..2 * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        packed.matmat_decode(&xs, 2, &mut ys);
+        let mut y1 = vec![0.0f32; d_out];
+        packed.matvec_decode(&xs[..d_in], &mut y1);
+        for i in 0..d_out {
+            assert_eq!(ys[i].to_bits(), y1[i].to_bits(), "row {i}");
+        }
     }
 
     #[test]

@@ -481,6 +481,107 @@ impl Block {
         };
         x_mid.iter().zip(&ffn_out).map(|(a, b)| a + b).collect()
     }
+
+    /// Batched decode step: advance `n` independent sequences (each with its
+    /// own KV cache and position) through this block with **one** batched
+    /// linear call per projection, so quantized layers stream their packed
+    /// codes once per step instead of once per sequence.
+    ///
+    /// `xs` is the residual stream of all lanes (`n·d`, lane-major);
+    /// `positions[b]` and `kvs[b]` belong to lane `b`. Attention itself runs
+    /// per lane (KV lengths differ); every lane's arithmetic matches
+    /// [`Self::decode_step`] exactly, so batched decode is bit-identical to
+    /// stepping the sequences one at a time.
+    pub fn decode_step_batch(
+        &mut self,
+        xs: &[f32],
+        cfg: &ModelConfig,
+        positions: &[usize],
+        rope: &Rope,
+        kvs: &mut [&mut super::kvcache::LayerKvCache],
+        lut_scratch: &mut Vec<f32>,
+    ) -> Vec<f32> {
+        let n = positions.len();
+        let d = cfg.d_model;
+        let (h_cnt, kv_cnt, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let rep = cfg.kv_repeat();
+        debug_assert_eq!(xs.len(), n * d);
+        debug_assert_eq!(kvs.len(), n);
+        let mut xn1 = vec![0.0f32; n * d];
+        for b in 0..n {
+            rmsnorm(&xs[b * d..(b + 1) * d], &self.ln1, cfg.norm_eps, &mut xn1[b * d..(b + 1) * d]);
+        }
+        let qd = h_cnt * dh;
+        let kvd = kv_cnt * dh;
+        let mut q = vec![0.0f32; n * qd];
+        let mut k = vec![0.0f32; n * kvd];
+        let mut v = vec![0.0f32; n * kvd];
+        self.attn.wq.matvec_batch(&xn1, n, &mut q, lut_scratch);
+        self.attn.wk.matvec_batch(&xn1, n, &mut k, lut_scratch);
+        self.attn.wv.matvec_batch(&xn1, n, &mut v, lut_scratch);
+        for b in 0..n {
+            let pos = positions[b];
+            for hh in 0..h_cnt {
+                rope.apply(&mut q[b * qd + hh * dh..b * qd + (hh + 1) * dh], pos);
+            }
+            for hh in 0..kv_cnt {
+                rope.apply(&mut k[b * kvd + hh * dh..b * kvd + (hh + 1) * dh], pos);
+            }
+            kvs[b].append(&k[b * kvd..(b + 1) * kvd], &v[b * kvd..(b + 1) * kvd]);
+        }
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = vec![0.0f32; n * qd];
+        let mut scores: Vec<f32> = Vec::new();
+        for b in 0..n {
+            let kv = &*kvs[b];
+            let t_len = kv.len;
+            scores.clear();
+            scores.resize(t_len, 0.0);
+            for hh in 0..h_cnt {
+                let kvh = hh / rep;
+                let qrow = &q[b * qd + hh * dh..b * qd + (hh + 1) * dh];
+                for t in 0..t_len {
+                    scores[t] = crate::tensor::ops::dot(qrow, kv.k_at(kvh, t)) * scale;
+                }
+                softmax_inplace(&mut scores);
+                let out = &mut ctx[b * qd + hh * dh..b * qd + (hh + 1) * dh];
+                for t in 0..t_len {
+                    let p = scores[t];
+                    let vrow = kv.v_at(kvh, t);
+                    for u in 0..dh {
+                        out[u] += p * vrow[u];
+                    }
+                }
+            }
+        }
+        let mut att_out = vec![0.0f32; n * d];
+        self.attn.wo.matvec_batch(&ctx, n, &mut att_out, lut_scratch);
+        let mut x_mid = vec![0.0f32; n * d];
+        for i in 0..n * d {
+            x_mid[i] = xs[i] + att_out[i];
+        }
+        let mut xn2 = vec![0.0f32; n * d];
+        for b in 0..n {
+            rmsnorm(&x_mid[b * d..(b + 1) * d], &self.ln2, cfg.norm_eps, &mut xn2[b * d..(b + 1) * d]);
+        }
+        let ffn_out = match &mut self.ffn {
+            Ffn::Dense(mlp) => mlp_decode_step_batch(mlp, &xn2, n, lut_scratch),
+            Ffn::Moe(moe) => {
+                // Routing is per token; lanes run the single-vector path.
+                let mut out = vec![0.0f32; n * d];
+                for b in 0..n {
+                    let yb = moe.decode_step(&xn2[b * d..(b + 1) * d], lut_scratch);
+                    out[b * d..(b + 1) * d].copy_from_slice(&yb);
+                }
+                out
+            }
+        };
+        let mut y = vec![0.0f32; n * d];
+        for i in 0..n * d {
+            y[i] = x_mid[i] + ffn_out[i];
+        }
+        y
+    }
 }
 
 /// Single-vector SwiGLU MLP (decode path).
@@ -495,6 +596,22 @@ pub fn mlp_decode_step(mlp: &mut Mlp, xn: &[f32], lut_scratch: &mut Vec<f32>) ->
     }
     let mut out = vec![0.0f32; mlp.wd.d_out()];
     mlp.wd.matvec(&gate, &mut out, lut_scratch);
+    out
+}
+
+/// Batched SwiGLU MLP over `n` lanes (`xns` is `n·d`, lane-major); one
+/// batched call per projection so quantized weights stream codes once.
+pub fn mlp_decode_step_batch(mlp: &mut Mlp, xns: &[f32], n: usize, lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+    let ff = mlp.wg.d_out();
+    let mut gate = vec![0.0f32; n * ff];
+    let mut up = vec![0.0f32; n * ff];
+    mlp.wg.matvec_batch(xns, n, &mut gate, lut_scratch);
+    mlp.wu.matvec_batch(xns, n, &mut up, lut_scratch);
+    for i in 0..n * ff {
+        gate[i] = silu(gate[i]) * up[i];
+    }
+    let mut out = vec![0.0f32; n * mlp.wd.d_out()];
+    mlp.wd.matvec_batch(&gate, n, &mut out, lut_scratch);
     out
 }
 
@@ -686,6 +803,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn decode_step_batch_matches_single_steps_bitexact() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(8);
+        let mut block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let d = cfg.d_model;
+        let mut scratch = Vec::new();
+        let mut kv_a = crate::nn::kvcache::LayerKvCache::new(cfg.n_kv_heads, cfg.head_dim(), cfg.max_seq);
+        let mut kv_b = kv_a.clone();
+        // Lane A has two tokens of history; lane B starts fresh, so the
+        // batched step must handle heterogeneous positions and KV lengths.
+        for pos in 0..2 {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            block.decode_step(&x, &cfg, pos, &rope, &mut kv_a, &mut scratch);
+        }
+        let x_a: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let x_b: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut kv_a_ref = kv_a.clone();
+        let mut kv_b_ref = kv_b.clone();
+        let y_a = block.decode_step(&x_a, &cfg, 2, &rope, &mut kv_a_ref, &mut scratch);
+        let y_b = block.decode_step(&x_b, &cfg, 0, &rope, &mut kv_b_ref, &mut scratch);
+        let mut xs = x_a.clone();
+        xs.extend_from_slice(&x_b);
+        let mut kv_refs: Vec<&mut crate::nn::kvcache::LayerKvCache> = vec![&mut kv_a, &mut kv_b];
+        let y = block.decode_step_batch(&xs, &cfg, &[2, 0], &rope, &mut kv_refs, &mut scratch);
+        for j in 0..d {
+            assert_eq!(y[j].to_bits(), y_a[j].to_bits(), "lane A dim {j}");
+            assert_eq!(y[d + j].to_bits(), y_b[j].to_bits(), "lane B dim {j}");
+        }
+        // The batched step must also have advanced the caches identically.
+        assert_eq!(kv_a.len, 3);
+        assert_eq!(kv_b.len, 1);
     }
 
     #[test]

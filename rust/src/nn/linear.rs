@@ -157,6 +157,31 @@ impl Linear {
         }
     }
 
+    /// Batched single-token forward: `xs` holds `n` input vectors
+    /// (lane-major, `n·d_in`), `ys` receives `n` output vectors (`n·d_out`).
+    ///
+    /// AQLM dispatches the batched packed kernels, which read the packed
+    /// code stream once for the whole batch (the serving-throughput win of
+    /// batched decode); dense and scalar-quantized weights run one GEMV per
+    /// lane — the same dot kernel as [`Self::matvec`], so every lane's
+    /// result is bit-identical to a single-vector call.
+    pub fn matvec_batch(&mut self, xs: &[f32], n: usize, ys: &mut [f32], lut_scratch: &mut Vec<f32>) {
+        debug_assert_eq!(xs.len(), n * self.d_in());
+        debug_assert_eq!(ys.len(), n * self.d_out());
+        if let Linear::Aqlm { q, packed, .. } = self {
+            if packed.is_none() {
+                *packed = Some(PackedAqlm::from_weight(q));
+            }
+            packed.as_ref().unwrap().matmat_auto(xs, n, lut_scratch, ys);
+            return;
+        }
+        let (d_in, d_out) = (self.d_in(), self.d_out());
+        let w = self.weight();
+        for b in 0..n {
+            gemv(w, &xs[b * d_in..(b + 1) * d_in], &mut ys[b * d_out..(b + 1) * d_out]);
+        }
+    }
+
     /// Backward: given layer input `x` [n, d_in] and output grad `dy`
     /// [n, d_out], returns (dx [n, d_in], parameter gradient).
     pub fn backward(&mut self, x: &Tensor, dy: &Tensor) -> (Tensor, LinearGrad) {
@@ -224,6 +249,31 @@ mod tests {
         dn.matvec(&x, &mut yd, &mut scratch);
         for i in 0..16 {
             assert!((ya[i] - yd[i]).abs() < 1e-3, "row {i}");
+        }
+    }
+
+    #[test]
+    fn matvec_batch_matches_per_lane_matvec() {
+        let mut rng = Rng::seed_from_u64(7);
+        let q = random_weight(16, 32, AqlmShape::new(2, 5, 8), &mut rng);
+        let dense_w = q.decode();
+        for mut lin in [Linear::aqlm(q), Linear::dense(dense_w)] {
+            let n = 5;
+            let xs: Vec<f32> = (0..n * 32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut ys = vec![0.0f32; n * 16];
+            let mut scratch = Vec::new();
+            lin.matvec_batch(&xs, n, &mut ys, &mut scratch);
+            for b in 0..n {
+                let mut y1 = vec![0.0f32; 16];
+                lin.matvec(&xs[b * 32..(b + 1) * 32], &mut y1, &mut scratch);
+                for i in 0..16 {
+                    assert_eq!(
+                        ys[b * 16 + i].to_bits(),
+                        y1[i].to_bits(),
+                        "lane {b} row {i} diverged from single-vector path"
+                    );
+                }
+            }
         }
     }
 

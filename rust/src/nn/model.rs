@@ -196,6 +196,16 @@ impl Model {
             .collect()
     }
 
+    /// Serving-window clamp shared by [`Self::generate`] and the server's
+    /// admission path: a prompt of `max_seq` or more tokens keeps only its
+    /// trailing `max_seq − 1` tokens, so prefill fits the KV cache with
+    /// room left to generate at least one token. One definition keeps the
+    /// offline and served paths token-identical.
+    pub fn clamp_prompt_window<'a>(&self, prompt: &'a [u32]) -> &'a [u32] {
+        let window = self.cfg.max_seq.saturating_sub(1).max(1);
+        &prompt[prompt.len().saturating_sub(window)..]
+    }
+
     /// Decode one token through the whole model; returns logits [vocab].
     pub fn decode_token(
         &mut self,
@@ -216,7 +226,53 @@ impl Model {
         logits
     }
 
+    /// Decode one token for each of `n` concurrent sequences in a single
+    /// batched pass (the serving hot path).
+    ///
+    /// `tokens[b]` / `positions[b]` / `kvs[b]` belong to sequence `b`; each
+    /// sequence keeps its own per-layer KV caches. Every layer runs one
+    /// batched linear call over all lanes, so quantized weights stream their
+    /// packed codes once per step instead of once per sequence. Per-lane
+    /// arithmetic is identical to [`Self::decode_token`], so greedy decoding
+    /// through this path is bit-equal to stepping sequences one at a time.
+    pub fn decode_batch(
+        &mut self,
+        tokens: &[u32],
+        positions: &[usize],
+        kvs: &mut [&mut Vec<LayerKvCache>],
+        lut_scratch: &mut Vec<f32>,
+    ) -> Vec<Vec<f32>> {
+        let n = tokens.len();
+        assert_eq!(positions.len(), n);
+        assert_eq!(kvs.len(), n);
+        if n == 0 {
+            return Vec::new();
+        }
+        let cfg = self.cfg.clone();
+        let d = cfg.d_model;
+        let mut x = vec![0.0f32; n * d];
+        for (b, &t) in tokens.iter().enumerate() {
+            x[b * d..(b + 1) * d].copy_from_slice(self.embed.row(t as usize));
+        }
+        for (li, block) in self.blocks.iter_mut().enumerate() {
+            let mut layer_kvs: Vec<&mut LayerKvCache> =
+                kvs.iter_mut().map(|seq| &mut seq[li]).collect();
+            x = block.decode_step_batch(&x, &cfg, positions, &self.rope, &mut layer_kvs, lut_scratch);
+        }
+        let mut xn = vec![0.0f32; n * d];
+        for b in 0..n {
+            crate::tensor::ops::rmsnorm(&x[b * d..(b + 1) * d], &self.ln_f, cfg.norm_eps, &mut xn[b * d..(b + 1) * d]);
+        }
+        let mut logits = vec![0.0f32; n * cfg.vocab_size];
+        self.head.matvec_batch(&xn, n, &mut logits, lut_scratch);
+        (0..n).map(|b| logits[b * cfg.vocab_size..(b + 1) * cfg.vocab_size].to_vec()).collect()
+    }
+
     /// Greedy/temperature generation from a prompt.
+    ///
+    /// Prompts of `max_seq` or more tokens are truncated to their trailing
+    /// `max_seq − 1` tokens (the same serving-window convention as the
+    /// server's admission path), so prefill can never overflow the KV cache.
     pub fn generate(
         &mut self,
         prompt: &[u32],
@@ -225,6 +281,7 @@ impl Model {
         rng: &mut Rng,
     ) -> Vec<u32> {
         assert!(!prompt.is_empty());
+        let prompt = self.clamp_prompt_window(prompt);
         let mut kv = self.new_kv_caches();
         let mut scratch = Vec::new();
         let mut out = prompt.to_vec();
@@ -776,6 +833,34 @@ mod tests {
         let last = logits.row(2);
         let argmax = last.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
         assert_eq!(out[3] as usize, argmax);
+    }
+
+    #[test]
+    fn decode_batch_matches_decode_token_bitexact() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(8);
+        let mut m = Model::init(&cfg, &mut rng);
+        let mut scratch = Vec::new();
+        // Lane A has consumed [1, 2]; lane B has consumed [3] — heterogeneous
+        // positions and KV lengths, as in the continuous-batching server.
+        let mut kv_a = m.new_kv_caches();
+        let mut kv_b = m.new_kv_caches();
+        m.decode_token(1, 0, &mut kv_a, &mut scratch);
+        m.decode_token(2, 1, &mut kv_a, &mut scratch);
+        m.decode_token(3, 0, &mut kv_b, &mut scratch);
+        let mut kv_a_ref = kv_a.clone();
+        let mut kv_b_ref = kv_b.clone();
+        let la = m.decode_token(4, 2, &mut kv_a_ref, &mut scratch);
+        let lb = m.decode_token(5, 1, &mut kv_b_ref, &mut scratch);
+        let mut refs: Vec<&mut Vec<LayerKvCache>> = vec![&mut kv_a, &mut kv_b];
+        let out = m.decode_batch(&[4, 5], &[2, 1], &mut refs, &mut scratch);
+        assert_eq!(out.len(), 2);
+        for j in 0..cfg.vocab_size {
+            assert_eq!(out[0][j].to_bits(), la[j].to_bits(), "lane A logit {j}");
+            assert_eq!(out[1][j].to_bits(), lb[j].to_bits(), "lane B logit {j}");
+        }
+        assert_eq!(kv_a[0].len, 3);
+        assert_eq!(kv_b[0].len, 2);
     }
 
     #[test]

@@ -1,0 +1,112 @@
+//! Tier-1-friendly bench smoke tests: tiny-shape versions of the batch
+//! sweeps in `rust/benches/`, so CI exercises the batched kernels and the
+//! batched serving loop without bench-length runtimes.
+//!
+//! Ignored by default; run with
+//!
+//!     cargo test -q --release -- --ignored bench_smoke
+//!
+//! (or `make verify`). Each test asserts correctness (batched ==
+//! sequential bit-for-bit / all requests served) and prints the measured
+//! timings so the amortization is visible in CI logs.
+
+use aqlm::bench::kernels::synthetic_weight;
+use aqlm::coordinator::server::{Server, ServerConfig};
+use aqlm::kernels::format::AqlmShape;
+use aqlm::kernels::matvec::PackedAqlm;
+use aqlm::nn::config::ModelConfig;
+use aqlm::nn::linear::Linear;
+use aqlm::nn::model::Model;
+use aqlm::util::rng::Rng;
+use aqlm::util::timing::{bench_adaptive, black_box};
+
+#[test]
+#[ignore = "bench smoke — run explicitly (see module docs)"]
+fn bench_smoke_batch_kernels() {
+    let (d_out, d_in) = (256, 128);
+    let mut rng = Rng::seed_from_u64(1);
+    println!("| config | n | n x matvec | matmat | speedup |");
+    println!("| ------ | - | ---------- | ------ | ------- |");
+    for shape in [AqlmShape::new(2, 8, 8), AqlmShape::new(3, 5, 4)] {
+        let w = synthetic_weight(d_out, d_in, shape, &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        for n in [1usize, 4, 8, 16] {
+            let xs: Vec<f32> = (0..n * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut y_seq = vec![0.0f32; n * d_out];
+            let mut lut = Vec::new();
+            let seq = bench_adaptive(0.01, 5, || {
+                for b in 0..n {
+                    packed.matvec_auto(
+                        black_box(&xs[b * d_in..(b + 1) * d_in]),
+                        &mut lut,
+                        &mut y_seq[b * d_out..(b + 1) * d_out],
+                    );
+                }
+            });
+            let mut y_bat = vec![0.0f32; n * d_out];
+            let mut blut = Vec::new();
+            let bat = bench_adaptive(0.01, 5, || {
+                packed.matmat_auto(black_box(&xs), n, &mut blut, &mut y_bat);
+            });
+            // Correctness: one batched call == n sequential calls, bitwise.
+            for i in 0..n * d_out {
+                assert_eq!(y_bat[i].to_bits(), y_seq[i].to_bits(), "index {i} diverged");
+            }
+            println!(
+                "| {} | {} | {} | {} | x{:.2} |",
+                shape.name(),
+                n,
+                aqlm::util::human_time(seq.median),
+                aqlm::util::human_time(bat.median),
+                seq.median / bat.median
+            );
+        }
+    }
+}
+
+#[test]
+#[ignore = "bench smoke — run explicitly (see module docs)"]
+fn bench_smoke_server_batch_sweep() {
+    // Tiny AQLM-weighted model through the batched serving loop at
+    // max_batch ∈ {1, 8}: all requests must be served and greedy output
+    // must be identical across batch sizes (scheduling-independence).
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.n_kv_heads = 2;
+    cfg.d_ff = 48;
+    cfg.vocab_size = 64;
+    cfg.max_seq = 64;
+    cfg.n_layers = 2;
+    let mut rng = Rng::seed_from_u64(2);
+    let mut model = Model::init(&cfg, &mut rng);
+    for block in &mut model.blocks {
+        for (_, lin) in block.linears_mut() {
+            let (d_out, d_in) = (lin.d_out(), lin.d_in());
+            *lin = Linear::aqlm(synthetic_weight(d_out, d_in, AqlmShape::new(2, 6, 4), &mut rng));
+        }
+    }
+    let n_req = 8;
+    let max_new = 16;
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    for max_batch in [1usize, 8] {
+        let server = Server::start(model.clone(), ServerConfig { max_batch, seed: 0 });
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| server.submit(vec![1, 2 + i as u32], max_new, 0.0))
+            .collect();
+        let toks: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().tokens)
+            .collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, n_req);
+        println!(
+            "max_batch {max_batch}: {:.1} tok/s ({} tokens in {:.3}s)",
+            stats.tokens_per_second(),
+            stats.tokens_generated,
+            stats.wall_s
+        );
+        outputs.push(toks);
+    }
+    assert_eq!(outputs[0], outputs[1], "greedy output depends on max_batch");
+}

@@ -202,6 +202,67 @@ fn prop_packed_kernels_agree_with_dense() {
     );
 }
 
+/// Random deployed-format weight spanning both phase-2 code paths
+/// (byte-aligned for B ≤ 8, BitReader above) and group sizes up to 16.
+fn random_packed_weight(rng: &mut Rng) -> AqlmWeight {
+    let g = [4usize, 8, 16][rng.below(3)];
+    let n_groups = 1 + rng.below(4);
+    let d_in = g * n_groups;
+    let d_out = 1 + rng.below(24);
+    let m = 1 + rng.below(3);
+    let bits = 3 + rng.below(8); // 3..=10, includes odd widths like 5
+    let k = 1usize << bits;
+    AqlmWeight {
+        d_out,
+        d_in,
+        group: g,
+        n_codebooks: m,
+        code_bits: bits,
+        codes: (0..d_out * n_groups * m).map(|_| rng.below(k) as u16).collect(),
+        codebooks: (0..m).map(|_| Tensor::randn(&[k, g], 0.4, rng)).collect(),
+        scales: (0..d_out).map(|_| 0.5 + rng.f32()).collect(),
+    }
+}
+
+#[test]
+fn prop_batched_kernels_bitexact_vs_sequential() {
+    // The server's greedy-parity guarantee: one matmat call must equal n
+    // independent matvec calls bit-for-bit, for every kernel and shape.
+    check_no_shrink(
+        "matmat-vs-matvec",
+        &cfg(32),
+        |rng: &mut Rng| {
+            let q = random_packed_weight(rng);
+            let n = 1 + rng.below(8);
+            let xs: Vec<f32> = (0..n * q.d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            (q, n, xs)
+        },
+        |(q, n, xs)| {
+            let packed = PackedAqlm::from_weight(q);
+            let (n, d_in, d_out) = (*n, q.d_in, q.d_out);
+            let mut y1 = vec![0.0f32; n * d_out];
+            let mut lut = vec![0.0f32; packed.lut_len()];
+            for b in 0..n {
+                packed.matvec_lut(&xs[b * d_in..(b + 1) * d_in], &mut lut, &mut y1[b * d_out..(b + 1) * d_out]);
+            }
+            let mut y2 = vec![0.0f32; n * d_out];
+            let mut blut = vec![0.0f32; n * packed.lut_len()];
+            packed.matmat_lut(xs, n, &mut blut, &mut y2);
+            if y1.iter().zip(&y2).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("matmat_lut != n×matvec_lut (bitwise), B={}", q.code_bits));
+            }
+            for b in 0..n {
+                packed.matvec_decode(&xs[b * d_in..(b + 1) * d_in], &mut y1[b * d_out..(b + 1) * d_out]);
+            }
+            packed.matmat_decode(xs, n, &mut y2);
+            if y1.iter().zip(&y2).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("matmat_decode != n×matvec_decode (bitwise), g={}", q.group));
+            }
+            Ok(())
+        },
+    );
+}
+
 // --------------------------------------------------------------- tensor alg
 
 #[test]

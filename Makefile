@@ -1,11 +1,23 @@
-# Tier-1 verification plus the bench smoke target (tiny-shape batch sweeps,
-# so the batched AQLM kernels and the batched serving loop are exercised in
-# CI without bench-length runtimes).
+# Tier-1 verification plus lint/style gates and the bench smoke target
+# (tiny-shape batch sweeps, so the batched AQLM kernels and the batched
+# serving loop are exercised in CI without bench-length runtimes).
 
-.PHONY: verify build test smoke bench
+.PHONY: verify build fmt clippy test smoke bench
 
 build:
 	cargo build --release
+
+# Style gate: formatting must be clean (check-only, no rewrite). On a fresh
+# checkout that has never been formatted, run `cargo fmt --all` once to
+# establish the baseline before relying on the check.
+fmt:
+	cargo fmt --all -- --check
+
+# Lint gate: clippy across lib, bin, tests, benches and examples; warnings
+# are errors so drift fails verify instead of accumulating. As with fmt,
+# the first run on a fresh toolchain may surface pre-existing lints to fix.
+clippy:
+	cargo clippy --release --all-targets -- -D warnings
 
 test:
 	cargo test -q
@@ -14,7 +26,7 @@ test:
 smoke:
 	cargo test -q --release -- --ignored bench_smoke
 
-verify: build test smoke
+verify: build fmt clippy test smoke
 
 # Full measured sweeps (Tables 5/5b and 14/14b).
 bench:

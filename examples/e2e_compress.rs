@@ -8,18 +8,18 @@
 //! 2. **Cross-check engines**: native Rust forward vs the AOT `nano_fwd`
 //!    artifact must agree on logits.
 //! 3. **Quantize** with AQLM at ~2/3/4 bits plus GPTQ/RTN baselines
-//!    (Algorithm 1 with block fine-tuning).
+//!    (Algorithm 1 with block fine-tuning) — every method named by its
+//!    spec (`gptq:b=2`, `rtn:b=2,g=32`, …) and dispatched through the
+//!    quantizer registry.
 //! 4. **Evaluate** perplexity + zero-shot tasks and report the paper-shaped
 //!    table; serve a few generations from the 2-bit model.
 //!
 //!     make artifacts && cargo run --release --example e2e_compress
 
 use aqlm::bench::{tables, Profile, Workspace};
-use aqlm::coordinator::pipeline::Method;
 use aqlm::eval::report::Table;
 use aqlm::nn::model::Model;
-use aqlm::quant::gptq::GptqConfig;
-use aqlm::quant::rtn::RtnConfig;
+use aqlm::quant::spec::MethodSpec;
 use aqlm::runtime::artifacts::Manifest;
 use aqlm::runtime::engine::{PjrtForward, PjrtTrainer};
 use aqlm::runtime::pjrt::PjrtRuntime;
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut two_bit_model: Option<Model> = None;
     for target in [2.0f64, 3.0, 4.0] {
-        let (method, shape) = tables::aqlm_method(&ws, &model.cfg, target);
+        let (method, shape) = tables::aqlm_spec(&ws, &model.cfg, target);
         let (mut q, report) = ws.quantize(&model, &method)?;
         let row = ws.eval(&mut q);
         t.row(vec![
@@ -118,8 +118,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
     for (name, method) in [
-        ("GPTQ 2b", Method::Gptq { cfg: GptqConfig::paper(2), block_tune: None }),
-        ("RTN 2b", Method::Rtn(RtnConfig::new(2, 32))),
+        ("GPTQ 2b", MethodSpec::parse("gptq:b=2")?),
+        ("RTN 2b", MethodSpec::parse("rtn:b=2,g=32")?),
     ] {
         let (mut q, report) = ws.quantize(&model, &method)?;
         let row = ws.eval(&mut q);

@@ -1,6 +1,9 @@
-//! Pareto sweep (Figures 1/5/6): quantize the model family across bit
-//! widths, plot PPL vs size, and verify the paper's claim that ~2.5-bit
-//! AQLM models are on the accuracy-size frontier.
+//! Pareto sweep (Figures 1/5/6 + 8): quantize the model family across bit
+//! widths, plot PPL vs size, verify the paper's claim that ~2.5-bit AQLM
+//! models are on the accuracy-size frontier — and run the heterogeneous
+//! sweep, where a `LayerPolicy` gives attention and MLP linears different
+//! method specs (e.g. 3-bit AQLM attention + 2-bit MLP) and the resulting
+//! mixed-precision points are tested against the uniform frontier.
 //!
 //!     cargo run --release --example pareto_sweep
 
@@ -15,6 +18,11 @@ fn main() -> anyhow::Result<()> {
     for t in figures::f6_model_optimality(&mut ws)? {
         println!("{}", t.to_markdown());
         t.save(&ws.results_dir(), "example_pareto_f6")?;
+    }
+    // Heterogeneous per-layer policies vs the uniform frontier.
+    for t in figures::f8_hetero_pareto(&mut ws)? {
+        println!("{}", t.to_markdown());
+        t.save(&ws.results_dir(), "example_pareto_f8")?;
     }
     Ok(())
 }

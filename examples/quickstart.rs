@@ -1,12 +1,12 @@
-//! Quickstart: quantize one linear layer with AQLM and compare its
-//! output error against RTN and GPTQ at comparable bit budgets.
+//! Quickstart: quantize one linear layer through the `Quantizer` trait,
+//! comparing AQLM against RTN and GPTQ at comparable bit budgets. Every
+//! method is named by a spec string (`rtn:b=2,g=16`, `gptq:b=3`,
+//! `aqlm:2x8,g=8,ft=0`) and resolved through the method registry — the
+//! same grammar `aqlm quantize --method <spec>` takes.
 //!
 //!     cargo run --release --example quickstart
 
-use aqlm::kernels::format::AqlmShape;
-use aqlm::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
-use aqlm::quant::gptq::{gptq_quantize, GptqConfig};
-use aqlm::quant::rtn::{rtn_quantize, RtnConfig};
+use aqlm::quant::spec::{build_quantizer, MethodSpec};
 use aqlm::quant::{relative_layer_error, CalibData};
 use aqlm::tensor::Tensor;
 use aqlm::util::rng::Rng;
@@ -39,37 +39,27 @@ fn main() -> anyhow::Result<()> {
     calib.accumulate(&x);
 
     println!("Quantizing a {d_out}x{d_in} layer with {n_samples} calibration samples\n");
-    println!("{:<22} {:>9} {:>12}", "method", "avg bits", "rel. error");
+    println!("{:<24} {:<12} {:>9} {:>12}", "spec", "method", "avg bits", "rel. error");
 
-    // RTN at 2 and 3 bits.
-    for (bits, group) in [(2usize, 16usize), (3, 16)] {
-        let q = rtn_quantize(&w, RtnConfig::new(bits, group));
-        let err = relative_layer_error(&w, &q.decode(), &calib);
-        println!("{:<22} {:>9.3} {:>12.5}", format!("RTN {bits}b g{group}"), q.avg_bits(), err);
-    }
-    // GPTQ at 2 and 3 bits.
-    for bits in [2usize, 3] {
-        let q = gptq_quantize(&w, &calib, GptqConfig::paper(bits))?;
-        let err = relative_layer_error(&w, &q.decode(), &calib);
-        println!("{:<22} {:>9.3} {:>12.5}", format!("GPTQ {bits}b"), q.avg_bits(), err);
-    }
-    // AQLM at ~2 and ~3 bits.
-    for shape in [AqlmShape::new(1, 8, 4), AqlmShape::new(2, 8, 8)] {
-        let lq = LayerQuantizer::new(AqlmLayerConfig::new(shape));
-        let (q, trace) = lq.quantize(&w, &calib, &mut rng);
-        let err = relative_layer_error(&w, &q.decode(), &calib);
-        println!(
-            "{:<22} {:>9.3} {:>12.5}   (loss {:.1} -> {:.1} over {} phases)",
-            format!("AQLM {}", shape.name()),
-            q.avg_bits(),
-            err,
-            trace.points.first().unwrap().1,
-            trace.points.last().unwrap().1,
-            trace.points.len()
-        );
+    // Scalar baselines at 2 and 3 bits, then AQLM at ~2 and ~3 bits —
+    // every method runs through the same registry and trait.
+    for s in [
+        "rtn:b=2,g=16",
+        "rtn:b=3,g=16",
+        "gptq:b=2",
+        "gptq:b=3",
+        "aqlm:1x8,g=4,ft=0",
+        "aqlm:2x8,g=8,ft=0",
+    ] {
+        let spec = MethodSpec::parse(s)?;
+        let quantizer = build_quantizer(&spec, None)?;
+        let ql = quantizer.quantize(&w, &calib, &mut rng)?;
+        let err = relative_layer_error(&w, &ql.linear.weight_owned(), &calib);
+        println!("{s:<24} {:<12} {:>9.3} {:>12.5}", ql.method, ql.avg_bits, err);
     }
     println!("\nAQLM's learned additive codebooks beat scalar grids at equal bits —");
     println!("the paper's core claim, on one layer. See examples/e2e_compress.rs");
-    println!("for the full-model pipeline.");
+    println!("for the full-model pipeline and examples/pareto_sweep.rs for the");
+    println!("heterogeneous per-layer policies.");
     Ok(())
 }

@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let base = ws.base_model("tiny")?;
     let shape = choose_shape(&base.cfg, 2.0, 8);
     println!("quantizing tiny to {} (~2 bits)...", shape.name());
-    let (quantized, report) = ws.quantize(&base, &tables::aqlm_method_with_shape(&ws, shape))?;
+    let (quantized, report) = ws.quantize(&base, &tables::aqlm_spec_with_shape(&ws, shape))?;
     println!(
         "  avg bits {:.2}; weights {} -> {} bytes",
         report.avg_bits,

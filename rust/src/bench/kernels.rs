@@ -146,7 +146,7 @@ pub fn t14_generation_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     for preset in presets {
         let base = ws.base_model(preset)?;
         let shape = choose_shape(&base.cfg, 2.0, 8);
-        let method = super::tables::aqlm_method_with_shape(ws, shape);
+        let method = super::tables::aqlm_spec_with_shape(ws, shape);
         let (quantized, _) = ws.quantize(&base, &method)?;
         for (label, model) in [("FP32", base.clone()), (&*format!("AQLM {}", shape.name()), quantized)] {
             let server = Server::start(model, ServerConfig { max_batch: 4, seed: 0 });
@@ -181,7 +181,7 @@ pub fn t14b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     );
     let base = ws.base_model("nano")?;
     let shape = choose_shape(&base.cfg, 2.0, 8);
-    let method = super::tables::aqlm_method_with_shape(ws, shape);
+    let method = super::tables::aqlm_spec_with_shape(ws, shape);
     let (quantized, _) = ws.quantize(&base, &method)?;
     let n_req = if ws.profile.fast { 16 } else { 32 };
     let max_new = if ws.profile.fast { 32 } else { 64 };

@@ -3,20 +3,15 @@
 //! 14) live in [`super::kernels`].
 
 use super::workspace::{EvalRow, Workspace};
-use crate::coordinator::pipeline::Method;
 use crate::coordinator::shapes::{choose_shape, model_avg_bits, quantizable_layer_dims};
 use crate::data::tasks::Task;
 use crate::eval::report::{f2, pct, Table};
 use crate::kernels::format::AqlmShape;
 use crate::nn::config::ModelConfig;
 use crate::nn::model::Model;
-use crate::quant::aqlm::blockft::{BlockFtConfig, FtScope};
+use crate::quant::aqlm::blockft::FtScope;
 use crate::quant::aqlm::e2eft::{e2e_finetune, E2eFtConfig};
-use crate::quant::aqlm::layer::AqlmLayerConfig;
-use crate::quant::gptq::GptqConfig;
-use crate::quant::quip::QuipConfig;
-use crate::quant::rtn::RtnConfig;
-use crate::quant::spqr::SpqrConfig;
+use crate::quant::spec::{AqlmSpec, MethodSpec, ShapeChoice};
 use crate::util::rng::Rng;
 
 /// Model presets used by a multi-model table.
@@ -28,25 +23,26 @@ fn family(ws: &Workspace) -> Vec<&'static str> {
     }
 }
 
-/// Default AQLM method at a target bit width for one model config.
-pub fn aqlm_method(ws: &Workspace, cfg: &ModelConfig, target_bits: f64) -> (Method, AqlmShape) {
+/// Default AQLM spec at a target bit width for one model config.
+pub fn aqlm_spec(ws: &Workspace, cfg: &ModelConfig, target_bits: f64) -> (MethodSpec, AqlmShape) {
     let shape = choose_shape(cfg, target_bits, 8);
-    (aqlm_method_with_shape(ws, shape), shape)
+    (aqlm_spec_with_shape(ws, shape), shape)
 }
 
-pub fn aqlm_method_with_shape(ws: &Workspace, shape: AqlmShape) -> Method {
-    let layer = if ws.profile.fast {
-        AqlmLayerConfig::fast(shape)
-    } else {
-        AqlmLayerConfig::new(shape)
-    };
-    let block_ft = BlockFtConfig {
-        steps: if ws.profile.fast { 15 } else { 40 },
-        lr: 1e-3,
-        tol: 1e-5,
+/// Profile-scaled AQLM spec (`aqlm:MxB,g=G,ft=N[,fast]`) for a fixed shape.
+pub fn aqlm_spec_with_shape(ws: &Workspace, shape: AqlmShape) -> MethodSpec {
+    MethodSpec::Aqlm(AqlmSpec {
+        shape: ShapeChoice::Fixed(shape),
+        ft_steps: if ws.profile.fast { 15 } else { 40 },
         scope: FtScope::Full,
-    };
-    Method::Aqlm { layer, block_ft }
+        fast: ws.profile.fast,
+    })
+}
+
+/// Parse a table's literal method spec (all specs in this module are
+/// compile-time constants of the registry grammar).
+fn spec(s: &str) -> MethodSpec {
+    MethodSpec::parse(s).expect("table spec")
 }
 
 /// Standard-table header.
@@ -69,8 +65,8 @@ fn eval_row(t: &mut Table, size: &str, method: &str, bits: f64, row: &EvalRow) {
     t.row(cells);
 }
 
-/// Quantize + evaluate one (model, method) cell.
-fn cell(ws: &Workspace, base: &Model, method: &Method) -> anyhow::Result<(EvalRow, f64, Model)> {
+/// Quantize + evaluate one (model, method-spec) cell.
+fn cell(ws: &Workspace, base: &Model, method: &MethodSpec) -> anyhow::Result<(EvalRow, f64, Model)> {
     let (mut q, report) = ws.quantize(base, method)?;
     let row = ws.eval(&mut q);
     Ok((row, report.avg_bits, q))
@@ -102,14 +98,14 @@ pub fn t1_low_bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         let row = ws.eval(&mut base);
         eval_row(&mut t, preset, "FP32", 16.0, &row);
         for target in [2.0, 2.3, 2.8] {
-            let (method, shape) = aqlm_method(ws, &base.cfg, target);
+            let (method, shape) = aqlm_spec(ws, &base.cfg, target);
             let (row, bits, _) = cell(ws, &base, &method)?;
             eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), bits, &row);
             if target == 2.0 {
                 let (row, bits, _) =
-                    cell(ws, &base, &Method::Quip(QuipConfig { bits: 2, seed: ws.profile.seed }))?;
+                    cell(ws, &base, &spec(&format!("quip:b=2,seed={}", ws.profile.seed)))?;
                 eval_row(&mut t, preset, "QuIP-lite", bits, &row);
-                let (row, bits, _) = cell(ws, &base, &Method::Rtn(RtnConfig::new(2, 32)))?;
+                let (row, bits, _) = cell(ws, &base, &spec("rtn:b=2,g=32"))?;
                 eval_row(&mut t, preset, "RTN", bits, &row);
             }
         }
@@ -124,13 +120,13 @@ pub fn t2_3bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         let mut base = ws.base_model(preset)?;
         let row = ws.eval(&mut base);
         eval_row(&mut t, preset, "FP32", 16.0, &row);
-        let (method, shape) = aqlm_method(ws, &base.cfg, 3.0);
+        let (method, shape) = aqlm_spec(ws, &base.cfg, 3.0);
         let (row, bits, _) = cell(ws, &base, &method)?;
         eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), bits, &row);
         for (name, m) in [
-            ("GPTQ", Method::Gptq { cfg: GptqConfig::paper(3), block_tune: None }),
-            ("SpQR-lite", Method::Spqr(SpqrConfig { bits: 2, group: 16, outlier_frac: 0.015 })),
-            ("QuIP-lite", Method::Quip(QuipConfig { bits: 3, seed: ws.profile.seed })),
+            ("GPTQ", spec("gptq:b=3")),
+            ("SpQR-lite", spec("spqr:b=2,g=16,out=0.015")),
+            ("QuIP-lite", spec(&format!("quip:b=3,seed={}", ws.profile.seed))),
         ] {
             let (row, bits, _) = cell(ws, &base, &m)?;
             eval_row(&mut t, preset, name, bits, &row);
@@ -146,14 +142,14 @@ pub fn t10_4bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         let mut base = ws.base_model(preset)?;
         let row = ws.eval(&mut base);
         eval_row(&mut t, preset, "FP32", 16.0, &row);
-        let (method, shape) = aqlm_method(ws, &base.cfg, 4.0);
+        let (method, shape) = aqlm_spec(ws, &base.cfg, 4.0);
         let (row, bits, _) = cell(ws, &base, &method)?;
         eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), bits, &row);
         for (name, m) in [
-            ("GPTQ", Method::Gptq { cfg: GptqConfig::paper(4), block_tune: None }),
-            ("SpQR-lite", Method::Spqr(SpqrConfig { bits: 3, group: 16, outlier_frac: 0.01 })),
-            ("QuIP-lite", Method::Quip(QuipConfig { bits: 4, seed: ws.profile.seed })),
-            ("RTN", Method::Rtn(RtnConfig::new(4, 32))),
+            ("GPTQ", spec("gptq:b=4")),
+            ("SpQR-lite", spec("spqr:b=3,g=16,out=0.01")),
+            ("QuIP-lite", spec(&format!("quip:b=4,seed={}", ws.profile.seed))),
+            ("RTN", spec("rtn:b=4,g=32")),
         ] {
             let (row, bits, _) = cell(ws, &base, &m)?;
             eval_row(&mut t, preset, name, bits, &row);
@@ -168,11 +164,11 @@ pub fn t3_moe_2bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     let mut base = ws.base_model("tiny-moe")?;
     let row = ws.eval(&mut base);
     eval_row(&mut t, "tiny-moe", "FP32", 16.0, &row);
-    let (method, shape) = aqlm_method(ws, &base.cfg, 2.0);
+    let (method, shape) = aqlm_spec(ws, &base.cfg, 2.0);
     let (row, bits, _) = cell(ws, &base, &method)?;
     eval_row(&mut t, "tiny-moe", &format!("AQLM {}", shape.name()), bits, &row);
     let (row, bits, _) =
-        cell(ws, &base, &Method::Quip(QuipConfig { bits: 2, seed: ws.profile.seed }))?;
+        cell(ws, &base, &spec(&format!("quip:b=2,seed={}", ws.profile.seed)))?;
     eval_row(&mut t, "tiny-moe", "QuIP-lite", bits, &row);
     Ok(vec![t])
 }
@@ -184,12 +180,12 @@ pub fn t11_moe_34bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     let row = ws.eval(&mut base);
     eval_row(&mut t, "tiny-moe", "FP32", 16.0, &row);
     for target in [3.0, 4.0] {
-        let (method, shape) = aqlm_method(ws, &base.cfg, target);
+        let (method, shape) = aqlm_spec(ws, &base.cfg, target);
         let (row, bits, _) = cell(ws, &base, &method)?;
         eval_row(&mut t, "tiny-moe", &format!("AQLM {}", shape.name()), bits, &row);
     }
     let (row, bits, _) =
-        cell(ws, &base, &Method::Quip(QuipConfig { bits: 4, seed: ws.profile.seed }))?;
+        cell(ws, &base, &spec(&format!("quip:b=4,seed={}", ws.profile.seed)))?;
     eval_row(&mut t, "tiny-moe", "QuIP-lite 4b", bits, &row);
     Ok(vec![t])
 }
@@ -201,7 +197,7 @@ pub fn t13_gqa(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     let row = ws.eval(&mut base);
     eval_row(&mut t, "tiny-gqa", "FP32", 16.0, &row);
     for target in [2.0, 3.0, 4.0] {
-        let (method, shape) = aqlm_method(ws, &base.cfg, target);
+        let (method, shape) = aqlm_spec(ws, &base.cfg, target);
         let (mut q, report) = ws.quantize(&base, &method)?;
         let row = ws.eval(&mut q);
         eval_row(&mut t, "tiny-gqa", &format!("AQLM {}", shape.name()), report.avg_bits, &row);
@@ -213,7 +209,7 @@ pub fn t13_gqa(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         }
     }
     let (row, bits, _) =
-        cell(ws, &base, &Method::Quip(QuipConfig { bits: 2, seed: ws.profile.seed }))?;
+        cell(ws, &base, &spec(&format!("quip:b=2,seed={}", ws.profile.seed)))?;
     eval_row(&mut t, "tiny-gqa", "QuIP-lite 2b", bits, &row);
     Ok(vec![t])
 }
@@ -225,7 +221,7 @@ fn e2e_table(ws: &mut Workspace, title: &str, target: f64) -> anyhow::Result<Vec
         let mut base = ws.base_model(preset)?;
         let row = ws.eval(&mut base);
         eval_row(&mut t, preset, "FP32", 16.0, &row);
-        let (method, shape) = aqlm_method(ws, &base.cfg, target);
+        let (method, shape) = aqlm_spec(ws, &base.cfg, target);
         let (mut q, report) = ws.quantize(&base, &method)?;
         let row = ws.eval(&mut q);
         eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), report.avg_bits, &row);
@@ -258,20 +254,12 @@ pub fn t7_ft_ablation(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         ("AQ params", FtScope::QuantParamsOnly),
         ("Full", FtScope::Full),
     ] {
-        let layer = if ws.profile.fast {
-            AqlmLayerConfig::fast(shape)
-        } else {
-            AqlmLayerConfig::new(shape)
-        };
-        let method = Method::Aqlm {
-            layer,
-            block_ft: BlockFtConfig {
-                steps: if ws.profile.fast { 15 } else { 40 },
-                lr: 1e-3,
-                tol: 1e-5,
-                scope,
-            },
-        };
+        let method = MethodSpec::Aqlm(AqlmSpec {
+            shape: ShapeChoice::Fixed(shape),
+            ft_steps: if ws.profile.fast { 15 } else { 40 },
+            scope,
+            fast: ws.profile.fast,
+        });
         let (mut q, _) = ws.quantize(&base, &method)?;
         let wiki = crate::eval::ppl::perplexity(&mut q, &ws.bundle.eval_wiki, 8);
         let c4 = crate::eval::ppl::perplexity(&mut q, &ws.bundle.eval_c4, 8);
@@ -287,7 +275,7 @@ pub fn t8_calib_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         &["# sequences", "Mean PPL", "SD"],
     );
     let base = ws.base_model("nano")?;
-    let (method, _) = aqlm_method(ws, &base.cfg, 2.3);
+    let (method, _) = aqlm_spec(ws, &base.cfg, 2.3);
     let sweep: &[usize] = if ws.profile.fast { &[2, 4, 8, 16] } else { &[2, 4, 8, 16, 32, 64] };
     for &n_seqs in sweep {
         let mut ppls = Vec::new();
@@ -303,7 +291,7 @@ pub fn t8_calib_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
                 .sample_batch(n_seqs, &mut crng);
                 tokens
             };
-            crate::coordinator::pipeline::quantize_model(
+            crate::coordinator::pipeline::quantize_model_spec(
                 &mut q,
                 &calib,
                 n_seqs,
@@ -332,7 +320,7 @@ pub fn t9_codebooks_vs_groups(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> 
     // code-bits-per-weight, codebook size reduced to fit the layer sizes.
     let setups = [AqlmShape::new(1, 6, 4), AqlmShape::new(2, 6, 8), AqlmShape::new(4, 6, 16)];
     for shape in setups {
-        let method = aqlm_method_with_shape(ws, shape);
+        let method = aqlm_spec_with_shape(ws, shape);
         let (mut q, report) = ws.quantize(&base, &method)?;
         let ppl = ws.eval_ppl(&mut q);
         t.row(vec!["AQLM".into(), shape.name(), f2(report.avg_bits), format!("{ppl:.3}")]);
@@ -352,7 +340,7 @@ pub fn t12_cpu_friendly(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         let row = ws.eval(&mut base);
         eval_row(&mut t, preset, "FP32", 16.0, &row);
         let shape = AqlmShape::new(2, 6, 8);
-        let method = aqlm_method_with_shape(ws, shape);
+        let method = aqlm_spec_with_shape(ws, shape);
         let (mut q, report) = ws.quantize(&base, &method)?;
         let row = ws.eval(&mut q);
         eval_row(&mut t, preset, &format!("AQLM {}", shape.name()), report.avg_bits, &row);
@@ -379,7 +367,7 @@ pub fn t15_hard_tasks(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
             pct(row.tasks[0].1),
             pct(row.tasks[1].1),
         ]);
-        let (method, shape) = aqlm_method(ws, &base.cfg, 2.0);
+        let (method, shape) = aqlm_spec(ws, &base.cfg, 2.0);
         let (mut q, report) = ws.quantize(&base, &method)?;
         star(ws, &mut q, &base);
         let row = ws.eval_tasks(&mut q, &Task::HARD);
@@ -401,16 +389,11 @@ pub fn t16_gptq_tuned(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         &["Method", "Avg bits", "Wiki2↓", "C4↓"],
     );
     let base = ws.base_model("nano")?;
-    let ft = BlockFtConfig {
-        steps: if ws.profile.fast { 15 } else { 40 },
-        lr: 1e-3,
-        tol: 1e-5,
-        scope: FtScope::Full,
-    };
-    let rows: Vec<(&str, Method)> = vec![
-        ("GPTQ", Method::Gptq { cfg: GptqConfig::grouped(2, 16), block_tune: None }),
-        ("GPTQ+tune", Method::Gptq { cfg: GptqConfig::grouped(2, 16), block_tune: Some(ft) }),
-        ("AQLM", aqlm_method(ws, &base.cfg, 2.0).0),
+    let tune_steps = if ws.profile.fast { 15 } else { 40 };
+    let rows: Vec<(&str, MethodSpec)> = vec![
+        ("GPTQ", spec("gptq:b=2,g=16")),
+        ("GPTQ+tune", spec(&format!("gptq:b=2,g=16,tuned,ft={tune_steps}"))),
+        ("AQLM", aqlm_spec(ws, &base.cfg, 2.0).0),
     ];
     for (name, method) in rows {
         let (mut q, report) = ws.quantize(&base, &method)?;

@@ -2,13 +2,14 @@
 //! (cached under `runs/`), calibration slices, and the combined
 //! (perplexity + zero-shot) evaluation row used by most tables.
 
-use crate::coordinator::pipeline::{quantize_model, Method, PipelineReport};
+use crate::coordinator::pipeline::{quantize_model, PipelineReport};
 use crate::coordinator::train::{ensure_trained, TrainConfig};
 use crate::data::dataset::{DataBundle, DataSizes};
 use crate::data::tasks::Task;
 use crate::eval::ppl::perplexity;
 use crate::eval::zeroshot::eval_suite;
 use crate::nn::model::Model;
+use crate::quant::spec::{LayerPolicy, MethodSpec};
 use crate::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -115,14 +116,28 @@ impl Workspace {
         tokens
     }
 
-    /// Quantize a clone of `model` with `method` using the default
-    /// calibration slice. Returns the quantized model + pipeline report.
-    pub fn quantize(&self, model: &Model, method: &Method) -> anyhow::Result<(Model, PipelineReport)> {
+    /// Quantize a clone of `model` uniformly with one method spec using the
+    /// default calibration slice. Returns the quantized model + report.
+    pub fn quantize(
+        &self,
+        model: &Model,
+        spec: &MethodSpec,
+    ) -> anyhow::Result<(Model, PipelineReport)> {
+        self.quantize_policy(model, &LayerPolicy::uniform(*spec))
+    }
+
+    /// Quantize a clone of `model` under a per-layer policy (heterogeneous
+    /// mixed-precision runs) using the default calibration slice.
+    pub fn quantize_policy(
+        &self,
+        model: &Model,
+        policy: &LayerPolicy,
+    ) -> anyhow::Result<(Model, PipelineReport)> {
         let mut q = model.clone();
         let n = self.profile.calib_seqs;
         let calib = self.calib_tokens(n);
         let mut rng = Rng::seed_from_u64(self.profile.seed ^ 0x9a11);
-        let report = quantize_model(&mut q, &calib, n, self.profile.seq, method, &mut rng)?;
+        let report = quantize_model(&mut q, &calib, n, self.profile.seq, policy, &mut rng)?;
         Ok((q, report))
     }
 

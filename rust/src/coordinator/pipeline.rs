@@ -1,48 +1,30 @@
-//! The model-level quantization pipeline — paper Algorithm 1.
+//! The model-level quantization pipeline — paper Algorithm 1, driven by a
+//! per-layer policy.
 //!
 //! Sequentially per transformer block: capture calibration statistics with
-//! the *current* residual stream, quantize every linear layer against its
-//! own `XXᵀ` (any supported method), optionally run Phase-3 block
-//! fine-tuning against the pre-quantization block outputs, then propagate
-//! the calibration activations through the now-quantized block (Alg. 1
-//! line 21) so later blocks calibrate on what they will actually see.
+//! the *current* residual stream, route every linear layer through the
+//! [`Quantizer`] its [`LayerPolicy`] rule selects (any registered method,
+//! possibly a different one per layer — the heterogeneous configurations of
+//! the Pareto sweep), optionally run Phase-3 block fine-tuning against the
+//! pre-quantization block outputs, then propagate the calibration
+//! activations through the now-quantized block (Alg. 1 line 21) so later
+//! blocks calibrate on what they will actually see.
+//!
+//! The pipeline itself knows nothing about individual methods: specs
+//! resolve to trait objects through the [`spec::METHODS`]
+//! (crate::quant::spec::METHODS) registry, and each layer's true storage
+//! cost is recorded in the model's per-layer bits table so dense-backed
+//! baselines (SpQR-lite / QuIP-lite) keep honest size accounting across
+//! `save`/`load`.
 
 use super::calib::capture_block;
 use crate::nn::config::ModelConfig;
-use crate::nn::linear::Linear;
 use crate::nn::model::Model;
 use crate::quant::aqlm::blockft::{finetune_block, BlockFtConfig};
-use crate::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
-use crate::quant::gptq::{gptq_quantize, GptqConfig};
-use crate::quant::quip::{quip_quantize, QuipConfig};
-use crate::quant::rtn::{rtn_quantize, RtnConfig};
-use crate::quant::spqr::{spqr_quantize, SpqrConfig};
-use crate::quant::{relative_layer_error, CalibData, QuantReport};
+use crate::quant::spec::{build_quantizer, LayerPolicy, MethodSpec};
+use crate::quant::{relative_layer_error, CalibData, QuantReport, Quantizer};
 use crate::util::rng::Rng;
 use crate::util::timing::Stopwatch;
-
-/// Which PTQ method the pipeline applies.
-#[derive(Clone, Debug)]
-pub enum Method {
-    Aqlm { layer: AqlmLayerConfig, block_ft: BlockFtConfig },
-    Rtn(RtnConfig),
-    Gptq { cfg: GptqConfig, block_tune: Option<BlockFtConfig> },
-    Spqr(SpqrConfig),
-    Quip(QuipConfig),
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::Aqlm { .. } => "AQLM",
-            Method::Rtn(_) => "RTN",
-            Method::Gptq { block_tune: None, .. } => "GPTQ",
-            Method::Gptq { block_tune: Some(_), .. } => "GPTQ+tune",
-            Method::Spqr(_) => "SpQR-lite",
-            Method::Quip(_) => "QuIP-lite",
-        }
-    }
-}
 
 /// Whole-model quantization outcome.
 pub struct PipelineReport {
@@ -55,7 +37,8 @@ pub struct PipelineReport {
     pub seconds: f64,
 }
 
-/// Quantize every block linear of `model` in place.
+/// Quantize every block linear of `model` in place, routing each layer
+/// through the policy's first matching rule.
 ///
 /// `calib_tokens` is `batch × seq` token ids from the calibration split.
 pub fn quantize_model(
@@ -63,75 +46,74 @@ pub fn quantize_model(
     calib_tokens: &[u32],
     batch: usize,
     seq: usize,
-    method: &Method,
+    policy: &LayerPolicy,
     rng: &mut Rng,
 ) -> anyhow::Result<PipelineReport> {
     assert_eq!(calib_tokens.len(), batch * seq);
     let sw = Stopwatch::start();
     let cfg: ModelConfig = model.cfg.clone();
     let rope = model.rope.clone();
+    // One quantizer per policy rule, built up front through the registry.
+    let quantizers: Vec<Box<dyn Quantizer>> = policy
+        .rules
+        .iter()
+        .map(|(_, spec)| build_quantizer(spec, Some(&cfg)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    // Reject an incomplete policy before any layer is quantized — failing
+    // at layer N mid-run would waste the work on layers 0..N and leave the
+    // model partially mutated.
+    for (bi, block) in model.blocks.iter().enumerate() {
+        for (name, _) in block.linears() {
+            let full = format!("b{bi}.{name}");
+            anyhow::ensure!(
+                policy.rule_for(&full).is_some(),
+                "no policy rule matches layer {full}; add a catch-all entry (e.g. ';rtn:b=4,g=32')"
+            );
+        }
+    }
     let mut x = model.embed_tokens(calib_tokens);
     let mut layers: Vec<QuantReport> = Vec::new();
     let mut block_ft: Vec<(f64, f64)> = Vec::new();
+    let mut layer_bits: Vec<(String, f64)> = Vec::new();
     let mut total_bits = 0.0f64;
     let mut total_params = 0usize;
 
     for (bi, block) in model.blocks.iter_mut().enumerate() {
         let calib = capture_block(block, &cfg, batch, seq, &rope, &x);
+        // Phase 3 runs with the FT config of the first quantizer in this
+        // block that requests one (uniform policies behave exactly as the
+        // single-method pipeline did).
+        let mut ft_cfg: Option<BlockFtConfig> = None;
         for (name, lin) in block.linears_mut() {
+            let full = format!("b{bi}.{name}");
+            let rule = policy
+                .rule_for(&full)
+                .ok_or_else(|| anyhow::anyhow!("no policy rule matches layer {full}"))?;
+            let quantizer = &quantizers[rule];
             let w = lin.weight_owned();
             let c: &CalibData = calib
                 .calib_for(&name)
-                .ok_or_else(|| anyhow::anyhow!("no calibration for layer {name}"))?;
+                .ok_or_else(|| anyhow::anyhow!("no calibration for layer {full}"))?;
             let lsw = Stopwatch::start();
-            let (new_lin, bits): (Linear, f64) = match method {
-                Method::Aqlm { layer, .. } => {
-                    let mut lrng = rng.fork(bi as u64 * 101 + hash_name(&name));
-                    let (q, _) = LayerQuantizer::new(*layer).quantize(&w, c, &mut lrng);
-                    let bits = q.avg_bits();
-                    (Linear::aqlm(q), bits)
-                }
-                Method::Rtn(rcfg) => {
-                    let q = rtn_quantize(&w, *rcfg);
-                    let bits = q.avg_bits();
-                    (Linear::group_int(q), bits)
-                }
-                Method::Gptq { cfg: gcfg, .. } => {
-                    let q = gptq_quantize(&w, c, *gcfg)?;
-                    let bits = q.avg_bits();
-                    (Linear::group_int(q), bits)
-                }
-                Method::Spqr(scfg) => {
-                    let q = spqr_quantize(&w, c, *scfg)?;
-                    let bits = q.avg_bits();
-                    (Linear::dense(q.dense), bits)
-                }
-                Method::Quip(qcfg) => {
-                    let mut cfg_seeded = *qcfg;
-                    cfg_seeded.seed ^= (bi as u64) << 32 | hash_name(&name);
-                    let q = quip_quantize(&w, c, cfg_seeded)?;
-                    let bits = q.avg_bits();
-                    (Linear::dense(q.dense), bits)
-                }
-            };
-            let rel_error = relative_layer_error(&w, &new_lin.weight_owned(), c);
-            total_bits += bits * w.len() as f64;
+            let mut lrng = rng.fork(bi as u64 * 101 + hash_name(&name));
+            let ql = quantizer.quantize(&w, c, &mut lrng)?;
+            let rel_error = relative_layer_error(&w, &ql.linear.weight_owned(), c);
+            total_bits += ql.avg_bits * w.len() as f64;
             total_params += w.len();
             layers.push(QuantReport {
-                layer: format!("b{bi}.{name}"),
-                method: method.name().to_string(),
-                avg_bits: bits,
+                layer: full.clone(),
+                method: ql.method,
+                avg_bits: ql.avg_bits,
                 rel_error,
                 seconds: lsw.elapsed_s(),
             });
-            *lin = new_lin;
+            layer_bits.push((full, ql.avg_bits));
+            *lin = ql.linear;
+            if ft_cfg.is_none() {
+                ft_cfg = quantizer.block_ft();
+            }
         }
         // Phase 3: block fine-tuning against the FP outputs.
-        let ft_cfg: Option<BlockFtConfig> = match method {
-            Method::Aqlm { block_ft, .. } => Some(*block_ft),
-            Method::Gptq { block_tune, .. } => *block_tune,
-            _ => None,
-        };
         if let Some(ft) = ft_cfg {
             let (before, after) =
                 finetune_block(block, &cfg, batch, seq, &rope, &x, &calib.y_block, ft);
@@ -142,12 +124,30 @@ pub fn quantize_model(
         x = y;
     }
 
+    // Persist per-layer storage costs (authoritative for dense-backed
+    // methods; see Model::layer_bits).
+    for (name, bits) in layer_bits {
+        model.layer_bits.insert(name, bits);
+    }
+
     Ok(PipelineReport {
         layers,
         avg_bits: total_bits / total_params.max(1) as f64,
         block_ft,
         seconds: sw.elapsed_s(),
     })
+}
+
+/// Uniform-policy convenience: quantize every layer with one spec.
+pub fn quantize_model_spec(
+    model: &mut Model,
+    calib_tokens: &[u32],
+    batch: usize,
+    seq: usize,
+    spec: &MethodSpec,
+    rng: &mut Rng,
+) -> anyhow::Result<PipelineReport> {
+    quantize_model(model, calib_tokens, batch, seq, &LayerPolicy::uniform(*spec), rng)
 }
 
 fn hash_name(name: &str) -> u64 {
@@ -164,8 +164,6 @@ mod tests {
     use super::*;
     use crate::data::dataset::{DataBundle, DataSizes};
     use crate::eval::ppl::perplexity;
-    use crate::kernels::format::AqlmShape;
-    use crate::quant::aqlm::blockft::FtScope;
 
     fn mini_cfg() -> ModelConfig {
         let mut c = ModelConfig::nano();
@@ -189,16 +187,17 @@ mod tests {
         (model, bundle, calib)
     }
 
+    fn spec(s: &str) -> MethodSpec {
+        MethodSpec::parse(s).unwrap()
+    }
+
     #[test]
     fn aqlm_pipeline_quantizes_every_layer() {
         let (mut model, _, calib) = mini_setup();
-        let shape = AqlmShape::new(1, 4, 4);
-        let method = Method::Aqlm {
-            layer: AqlmLayerConfig::fast(shape),
-            block_ft: BlockFtConfig { steps: 5, lr: 1e-3, tol: 0.0, scope: FtScope::Full },
-        };
+        let method = spec("aqlm:1x4,g=4,ft=5,fast");
         let mut rng = Rng::seed_from_u64(4);
-        let report = quantize_model(&mut model, &calib, 4, 16, &method, &mut rng).unwrap();
+        let report =
+            quantize_model_spec(&mut model, &calib, 4, 16, &method, &mut rng).unwrap();
         assert_eq!(report.layers.len(), 2 * 7);
         assert_eq!(report.block_ft.len(), 2);
         for (before, after) in &report.block_ft {
@@ -218,25 +217,24 @@ mod tests {
     fn all_methods_run_and_preserve_ppl_sanity() {
         let (model0, bundle, calib) = mini_setup();
         let mut rng = Rng::seed_from_u64(5);
-        let methods = vec![
-            Method::Rtn(RtnConfig::new(4, 16)),
-            Method::Gptq { cfg: GptqConfig::paper(4), block_tune: None },
-            Method::Spqr(SpqrConfig { bits: 4, group: 16, outlier_frac: 0.01 }),
-            Method::Quip(QuipConfig { bits: 4, seed: 9 }),
-        ];
+        let methods = ["rtn:b=4,g=16", "gptq:b=4", "spqr:b=4,g=16,out=0.01", "quip:b=4,seed=9"];
         let mut base = model0.clone();
         let ppl_base = perplexity(&mut base, &bundle.eval_wiki, 4);
-        for method in methods {
+        for s in methods {
+            let method = spec(s);
             let mut m = model0.clone();
-            let report = quantize_model(&mut m, &calib, 4, 16, &method, &mut rng).unwrap();
+            let report =
+                quantize_model_spec(&mut m, &calib, 4, 16, &method, &mut rng).unwrap();
             let ppl = perplexity(&mut m, &bundle.eval_wiki, 4);
             // 4-bit quantization of a random-init model must not explode.
-            assert!(
-                ppl < ppl_base * 1.5,
-                "{}: ppl {ppl} vs base {ppl_base}",
-                method.name()
-            );
-            assert!(report.avg_bits > 3.9 && report.avg_bits < 7.0, "{}: {}", method.name(), report.avg_bits);
+            assert!(ppl < ppl_base * 1.5, "{s}: ppl {ppl} vs base {ppl_base}");
+            assert!(report.avg_bits > 3.9 && report.avg_bits < 7.0, "{s}: {}", report.avg_bits);
+            for l in &report.layers {
+                assert_eq!(l.method, method.method_name(), "{s}: {}", l.layer);
+            }
+            // Dense-backed and structural methods alike report their true
+            // size through the model's accounting.
+            assert!((report.avg_bits - m.avg_bits()).abs() < 1e-6, "{s}");
         }
     }
 
@@ -244,11 +242,65 @@ mod tests {
     fn layer_errors_recorded_and_bounded() {
         let (mut model, _, calib) = mini_setup();
         let mut rng = Rng::seed_from_u64(6);
-        let method = Method::Rtn(RtnConfig::new(8, 16));
-        let report = quantize_model(&mut model, &calib, 4, 16, &method, &mut rng).unwrap();
+        let report =
+            quantize_model_spec(&mut model, &calib, 4, 16, &spec("rtn:b=8,g=16"), &mut rng)
+                .unwrap();
         for l in &report.layers {
             assert!(l.rel_error < 1e-3, "{}: rel error {}", l.layer, l.rel_error);
             assert!(l.seconds >= 0.0);
         }
+    }
+
+    #[test]
+    fn incomplete_policy_rejected_before_any_layer_is_touched() {
+        let (mut model, _, calib) = mini_setup();
+        let mut rng = Rng::seed_from_u64(8);
+        let policy = LayerPolicy::parse("*.wq=rtn:b=4,g=16").unwrap(); // no catch-all
+        let err = quantize_model(&mut model, &calib, 4, 16, &policy, &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no policy rule matches"), "{err}");
+        // The failure happened up front: nothing was quantized.
+        for b in &mut model.blocks {
+            for (_, lin) in b.linears_mut() {
+                assert!(!lin.is_quantized());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_policy_routes_layers_and_weights_bits() {
+        let (mut model, _, calib) = mini_setup();
+        let mut rng = Rng::seed_from_u64(7);
+        // Attention 8-bit RTN, MLP 4-bit GPTQ — per-layer methods and bit
+        // widths both differ.
+        let policy = LayerPolicy::parse(
+            "*.wq=rtn:b=8,g=16;*.wk=rtn:b=8,g=16;*.wv=rtn:b=8,g=16;*.wo=rtn:b=8,g=16;gptq:b=4",
+        )
+        .unwrap();
+        assert!(!policy.is_uniform());
+        let report = quantize_model(&mut model, &calib, 4, 16, &policy, &mut rng).unwrap();
+        assert_eq!(report.layers.len(), 2 * 7);
+        for l in &report.layers {
+            let attn = [".wq", ".wk", ".wv", ".wo"].iter().any(|s| l.layer.ends_with(s));
+            assert_eq!(l.method, if attn { "RTN" } else { "GPTQ" }, "{}", l.layer);
+        }
+        // PipelineReport.avg_bits is the parameter-weighted mix of the
+        // per-layer reports...
+        let mut bits = 0.0f64;
+        let mut params = 0usize;
+        for (bi, b) in model.blocks.iter().enumerate() {
+            for (name, l) in b.linears() {
+                let full = format!("b{bi}.{name}");
+                let rep = report.layers.iter().find(|r| r.layer == full).unwrap();
+                bits += rep.avg_bits * l.param_count() as f64;
+                params += l.param_count();
+            }
+        }
+        assert!((report.avg_bits - bits / params as f64).abs() < 1e-9);
+        // ...and matches the model's own accounting.
+        assert!((report.avg_bits - model.avg_bits()).abs() < 1e-6);
+        // The mix sits strictly between the two uniform widths.
+        assert!(report.avg_bits > 4.0 && report.avg_bits < 10.5, "{}", report.avg_bits);
     }
 }

@@ -39,6 +39,16 @@ pub fn is_pareto_optimal(candidate: &ParetoPoint, points: &[ParetoPoint]) -> boo
     })
 }
 
+/// For each candidate, whether it sits on the Pareto frontier of
+/// `baseline ∪ candidates` — the test for whether heterogeneous
+/// (mixed-policy) configurations extend the uniform frontier rather than
+/// landing strictly inside it. Labels must be unique across both sets.
+pub fn on_combined_frontier(baseline: &[ParetoPoint], candidates: &[ParetoPoint]) -> Vec<bool> {
+    let mut all: Vec<ParetoPoint> = baseline.to_vec();
+    all.extend(candidates.iter().cloned());
+    candidates.iter().map(|c| is_pareto_optimal(c, &all)).collect()
+}
+
 /// Render an ASCII scatter of size (x, log-scaled) vs ppl (y) for the
 /// figure reproductions in EXPERIMENTS.md.
 pub fn ascii_plot(points: &[ParetoPoint], width: usize, height: usize) -> String {
@@ -104,6 +114,18 @@ mod tests {
         let pts = vec![p("big4bit", 100, 9.0), p("small16", 80, 12.0), p("big2bit", 60, 11.0)];
         assert!(is_pareto_optimal(&pts[2], &pts));
         assert!(!is_pareto_optimal(&p("worse", 90, 13.0), &pts));
+    }
+
+    #[test]
+    fn combined_frontier_flags_extending_candidates() {
+        let uniform = vec![p("u2", 60, 12.0), p("u3", 100, 9.0), p("u4", 150, 8.0)];
+        // h1 fills the gap between u2 and u3 (on the combined frontier);
+        // h2 is dominated by u3 (smaller-or-equal size, lower ppl exists).
+        let hetero = vec![p("h1", 80, 10.0), p("h2", 120, 9.5)];
+        assert_eq!(on_combined_frontier(&uniform, &hetero), vec![true, false]);
+        // Candidates can also dominate each other.
+        let hetero2 = vec![p("h3", 80, 10.0), p("h4", 80, 11.0)];
+        assert_eq!(on_combined_frontier(&uniform, &hetero2), vec![true, false]);
     }
 
     #[test]

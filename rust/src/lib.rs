@@ -14,6 +14,12 @@
 //!   PJRT runtime that loads and executes the AOT artifacts. Python is never
 //!   on the request path.
 //!
+//! Quantization methods live behind the [`quant::Quantizer`] trait and are
+//! configured with method-spec strings (`aqlm:2x8,g=8,ft=30`,
+//! `gptq:b=4,g=16,tuned`, `rtn:b=4,g=32`, …) resolved through the
+//! [`quant::spec`] registry; [`quant::spec::LayerPolicy`] routes individual
+//! layers to different specs for mixed-precision models.
+//!
 //! ## Quick start
 //!
 //! ```no_run

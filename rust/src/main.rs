@@ -2,28 +2,25 @@
 //!
 //! Subcommands:
 //!   train      train a base model preset on TinyLang and save a checkpoint
-//!   quantize   quantize a checkpoint with AQLM or a baseline method
+//!   quantize   quantize a checkpoint; `--method <spec>` takes the registry
+//!              grammar (`aqlm:2x8,g=8,ft=30`, `gptq:b=4,g=16,tuned`,
+//!              `rtn:b=4,g=32`, `spqr:b=3,g=16,out=0.01`, `quip:b=2,seed=9`)
+//!              and `--policy` routes layers to different specs
+//!              (`'*.wq=aqlm:2x8,g=8,ft=30;rtn:b=2,g=32'`) for
+//!              mixed-precision models
 //!   eval       perplexity + zero-shot evaluation of a checkpoint
 //!   generate   sample text from a checkpoint
 //!   serve      demo of the continuous-batching generation server
-//!   table      regenerate one paper table/figure (t1..t16, f1, f4, f6, f7)
+//!   table      regenerate one paper table/figure (t1..t16, f1, f4, f6-f8)
 //!   tables     regenerate all of them
 //!   list       list experiment ids
 
 use aqlm::bench::{self, Profile, Workspace};
-use aqlm::coordinator::pipeline::Method;
-use aqlm::coordinator::shapes::choose_shape;
 use aqlm::coordinator::train::{train_native, TrainConfig};
 use aqlm::data::dataset::{DataBundle, DataSizes};
-use aqlm::kernels::format::AqlmShape;
 use aqlm::nn::config::ModelConfig;
 use aqlm::nn::model::Model;
-use aqlm::quant::aqlm::blockft::{BlockFtConfig, FtScope};
-use aqlm::quant::aqlm::layer::AqlmLayerConfig;
-use aqlm::quant::gptq::GptqConfig;
-use aqlm::quant::quip::QuipConfig;
-use aqlm::quant::rtn::RtnConfig;
-use aqlm::quant::spqr::SpqrConfig;
+use aqlm::quant::spec::{known_methods, LayerPolicy, MethodSpec};
 use aqlm::util::cli::Args;
 use aqlm::util::rng::Rng;
 use std::path::PathBuf;
@@ -98,48 +95,54 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_method(args: &Args, cfg: &ModelConfig) -> anyhow::Result<Method> {
+/// Resolve `--method` to a spec. A value containing ':' is a full registry
+/// spec; a bare method name is shorthand assembled from the legacy flags
+/// (`--bits`, `--group`, `--shape`, `--ft-steps`, `--no-ft`, `--fast`) into
+/// the same grammar — so e.g. `--method rtn --bits 2.5` fails in
+/// `MethodSpec::parse` with the integer-bits error instead of silently
+/// truncating.
+fn cli_spec(args: &Args) -> anyhow::Result<MethodSpec> {
+    let raw = args.str_or("method", "aqlm");
+    if raw.contains(':') {
+        return MethodSpec::parse(&raw);
+    }
     let bits = args.f64_or("bits", 2.0);
-    let seed = args.u64_or("seed", 42);
-    Ok(match args.str_or("method", "aqlm").as_str() {
+    let s = match raw.as_str() {
         "aqlm" => {
             let shape = match args.get("shape") {
-                Some(s) => AqlmShape::parse(s)?,
-                None => choose_shape(cfg, bits, 8),
+                Some(sh) => sh.to_string(), // MxBgG, parsed by the spec grammar
+                None => format!("bits={bits}"),
             };
-            let layer = if args.flag("fast") {
-                AqlmLayerConfig::fast(shape)
-            } else {
-                AqlmLayerConfig::new(shape)
-            };
-            let scope = if args.flag("no-ft") { FtScope::None } else { FtScope::Full };
-            Method::Aqlm {
-                layer,
-                block_ft: BlockFtConfig {
-                    steps: args.usize_or("ft-steps", 30),
-                    lr: 1e-3,
-                    tol: 1e-5,
-                    scope,
-                },
-            }
+            let ft = if args.flag("no-ft") { 0 } else { args.usize_or("ft-steps", 30) };
+            let fast = if args.flag("fast") { ",fast" } else { "" };
+            format!("aqlm:{shape},ft={ft}{fast}")
         }
-        "rtn" => Method::Rtn(RtnConfig::new(bits as usize, args.usize_or("group", 32))),
-        "gptq" => Method::Gptq { cfg: GptqConfig::paper(bits as usize), block_tune: None },
-        "gptq-tuned" => Method::Gptq {
-            cfg: GptqConfig::grouped(bits as usize, args.usize_or("group", 16)),
-            block_tune: Some(BlockFtConfig::default()),
-        },
-        "spqr" => Method::Spqr(SpqrConfig::paper(bits as usize)),
-        "quip" => Method::Quip(QuipConfig { bits: bits as usize, seed }),
-        other => anyhow::bail!("unknown method '{other}'"),
-    })
+        "rtn" => format!("rtn:b={bits},g={}", args.usize_or("group", 32)),
+        "gptq" => format!("gptq:b={bits}"),
+        "gptq-tuned" => format!("gptq:b={bits},g={},tuned", args.usize_or("group", 16)),
+        "spqr" => format!("spqr:b={bits},g=16,out=0.01"),
+        "quip" => format!("quip:b={bits},seed={}", args.u64_or("seed", 42)),
+        other => anyhow::bail!("unknown method '{other}'; specs: {}", known_methods()),
+    };
+    MethodSpec::parse(&s)
 }
 
 fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
     let ckpt = PathBuf::from(args.require("ckpt")?);
     let out = PathBuf::from(args.str_or("out", &format!("{}.q", ckpt.display())));
     let mut model = Model::load(&ckpt)?;
-    let method = parse_method(args, &model.cfg)?;
+    let policy = match args.get("policy") {
+        Some(p) => {
+            anyhow::ensure!(
+                args.get("method").is_none(),
+                "--method and --policy conflict; fold the method into the policy \
+                 (a pattern-less entry is the default, e.g. --policy '*.wq=…;{}')",
+                args.get("method").unwrap_or("rtn:b=4,g=32")
+            );
+            LayerPolicy::parse(p)?
+        }
+        None => LayerPolicy::uniform(cli_spec(args)?),
+    };
     let b = bundle(args);
     let seq = args.usize_or("seq", 64);
     let n_seqs = args.usize_or("calib-seqs", 8);
@@ -149,9 +152,9 @@ fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
         seq_len: seq,
     }
     .sample_batch(n_seqs, &mut rng);
-    eprintln!("quantizing {} with {}", ckpt.display(), method.name());
+    eprintln!("quantizing {} with policy {policy}", ckpt.display());
     let report = aqlm::coordinator::pipeline::quantize_model(
-        &mut model, &calib, n_seqs, seq, &method, &mut rng,
+        &mut model, &calib, n_seqs, seq, &policy, &mut rng,
     )?;
     eprintln!(
         "avg bits: {:.3}  ({} layers, {:.1}s)",
@@ -159,6 +162,11 @@ fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
         report.layers.len(),
         report.seconds
     );
+    if !policy.is_uniform() {
+        for l in &report.layers {
+            eprintln!("  {:<12} {:<10} {:.3} bits", l.layer, l.method, l.avg_bits);
+        }
+    }
     model.save(&out)?;
     eprintln!("saved {}", out.display());
     Ok(())
@@ -236,7 +244,7 @@ fn cmd_table(args: &Args) -> anyhow::Result<()> {
         .get("id")
         .map(|s| s.to_string())
         .or_else(|| args.positional.first().cloned())
-        .ok_or_else(|| anyhow::anyhow!("need --id <t1..t16|f1|f4|f6|f7> or a positional id"))?;
+        .ok_or_else(|| anyhow::anyhow!("need --id <t1..t16|f1|f4|f6|f7|f8> or a positional id"))?;
     let mut ws = Workspace::new(profile(args));
     bench::run(&id, &mut ws)
 }

@@ -396,7 +396,34 @@ impl Block {
 
     /// All linear layers of this block, in the paper's quantization order,
     /// with stable names (`wq`, `wk`, `wv`, `wo`, `wg`, `wu`, `wd`, or
-    /// `e{i}.wg` etc. for MoE experts).
+    /// `e{i}.wg` etc. for MoE experts). Immutable view; size accounting and
+    /// policy routing share this naming with [`Self::linears_mut`].
+    pub fn linears(&self) -> Vec<(String, &Linear)> {
+        let mut out: Vec<(String, &Linear)> = vec![
+            ("wq".to_string(), &self.attn.wq),
+            ("wk".to_string(), &self.attn.wk),
+            ("wv".to_string(), &self.attn.wv),
+            ("wo".to_string(), &self.attn.wo),
+        ];
+        match &self.ffn {
+            Ffn::Dense(mlp) => {
+                out.push(("wg".to_string(), &mlp.wg));
+                out.push(("wu".to_string(), &mlp.wu));
+                out.push(("wd".to_string(), &mlp.wd));
+            }
+            Ffn::Moe(moe) => {
+                for (i, e) in moe.experts.iter().enumerate() {
+                    out.push((format!("e{i}.wg"), &e.wg));
+                    out.push((format!("e{i}.wu"), &e.wu));
+                    out.push((format!("e{i}.wd"), &e.wd));
+                }
+            }
+        }
+        out
+    }
+
+    /// Mutable counterpart of [`Self::linears`], same order and names (the
+    /// pipeline quantizes through this view).
     pub fn linears_mut(&mut self) -> Vec<(String, &mut Linear)> {
         let mut out: Vec<(String, &mut Linear)> = vec![
             ("wq".to_string(), &mut self.attn.wq),
@@ -620,6 +647,27 @@ mod tests {
     use super::*;
     use crate::nn::model::Model;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn linears_and_linears_mut_agree_on_names_and_order() {
+        // The immutable view feeds size accounting and policy routing; the
+        // mutable view feeds the quantization pipeline. They must never
+        // drift — a layer present in one but not the other would quantize
+        // without being counted (or vice versa).
+        let mut rng = Rng::seed_from_u64(1);
+        for cfg in [tiny_cfg(), {
+            let mut c = tiny_cfg();
+            c.n_experts = 2;
+            c.experts_top_k = 2;
+            c
+        }] {
+            let mut block = Model::init_block(&cfg, &mut rng);
+            let names: Vec<String> = block.linears().into_iter().map(|(n, _)| n).collect();
+            let names_mut: Vec<String> =
+                block.linears_mut().into_iter().map(|(n, _)| n).collect();
+            assert_eq!(names, names_mut, "moe={}", cfg.is_moe());
+        }
+    }
 
     fn tiny_cfg() -> ModelConfig {
         let mut c = ModelConfig::nano();

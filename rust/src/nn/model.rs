@@ -31,6 +31,13 @@ pub struct Model {
     pub ln_f: Vec<f32>,
     pub head: Linear,
     pub rope: Rope,
+    /// Average bits per parameter of quantized layers, keyed by full layer
+    /// name (`b0.wq`). Authoritative for dense-backed methods (SpQR-lite /
+    /// QuIP-lite store dequantized f32, so their compressed size is not
+    /// recoverable from the storage format); structurally-compressed layers
+    /// (AQLM / GroupInt) ignore it. Persisted in the checkpoint header so
+    /// size accounting survives `save`/`load`.
+    pub layer_bits: HashMap<String, f64>,
 }
 
 /// Activation cache of a full forward pass.
@@ -99,6 +106,7 @@ impl Model {
             ln_f: vec![1.0; d],
             head: Linear::dense(Tensor::randn(&[cfg.vocab_size, d], 0.02, rng)),
             rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
+            layer_bits: HashMap::new(),
         }
     }
 
@@ -380,74 +388,53 @@ impl Model {
         }
     }
 
+    /// Storage bits of one block linear. Structurally compressed formats
+    /// (AQLM / GroupInt) report their own size; dense storage falls back to
+    /// the per-layer bits table (dense-backed baselines like SpQR-lite and
+    /// QuIP-lite), then to FP16.
+    fn linear_size_bits(&self, full_name: &str, l: &Linear) -> f64 {
+        match l {
+            Linear::Dense(w) => match self.layer_bits.get(full_name) {
+                Some(&b) => b * w.len() as f64,
+                None => (w.len() * 16) as f64,
+            },
+            Linear::Aqlm { q, .. } => q.size_bits() as f64,
+            Linear::GroupInt { q, .. } => q.size_bits() as f64,
+        }
+    }
+
     /// Size in bytes of the model weights under the paper's accounting:
     /// quantized block linears at their compressed size, everything kept in
     /// 16-bit (the paper stores FP16 for non-quantized tensors).
     pub fn weight_bytes(&self) -> usize {
-        let mut bits = 0usize;
-        bits += self.embed.len() * 16;
-        bits += self.ln_f.len() * 16;
-        bits += self.head.param_count() * 16;
-        let lin_bits = |l: &Linear| match l {
-            Linear::Dense(w) => w.len() * 16,
-            Linear::Aqlm { q, .. } => q.size_bits(),
-            Linear::GroupInt { q, .. } => q.size_bits(),
-        };
-        for b in &self.blocks {
-            bits += (b.ln1.len() + b.ln2.len()) * 16;
-            bits += lin_bits(&b.attn.wq);
-            bits += lin_bits(&b.attn.wk);
-            bits += lin_bits(&b.attn.wv);
-            bits += lin_bits(&b.attn.wo);
-            match &b.ffn {
-                Ffn::Dense(m) => {
-                    bits += lin_bits(&m.wg) + lin_bits(&m.wu) + lin_bits(&m.wd);
-                }
-                Ffn::Moe(moe) => {
-                    bits += moe.gate.len() * 16;
-                    for e in &moe.experts {
-                        bits += lin_bits(&e.wg) + lin_bits(&e.wu) + lin_bits(&e.wd);
-                    }
-                }
+        let mut bits = 0.0f64;
+        bits += (self.embed.len() * 16) as f64;
+        bits += (self.ln_f.len() * 16) as f64;
+        bits += (self.head.param_count() * 16) as f64;
+        for (bi, b) in self.blocks.iter().enumerate() {
+            bits += ((b.ln1.len() + b.ln2.len()) * 16) as f64;
+            if let Ffn::Moe(moe) = &b.ffn {
+                bits += (moe.gate.len() * 16) as f64;
+            }
+            for (name, l) in b.linears() {
+                bits += self.linear_size_bits(&format!("b{bi}.{name}"), l);
             }
         }
-        bits / 8
+        (bits / 8.0).round() as usize
     }
 
     /// Average bits per quantized parameter (paper's "Avg bits" column):
     /// compressed size of the block linears over their parameter count.
     pub fn avg_bits(&self) -> f64 {
-        let mut bits = 0usize;
+        let mut bits = 0.0f64;
         let mut params = 0usize;
-        for b in &self.blocks {
-            let mut acc = |l: &Linear| {
+        for (bi, b) in self.blocks.iter().enumerate() {
+            for (name, l) in b.linears() {
                 params += l.param_count();
-                bits += match l {
-                    Linear::Dense(w) => w.len() * 16,
-                    Linear::Aqlm { q, .. } => q.size_bits(),
-                    Linear::GroupInt { q, .. } => q.size_bits(),
-                };
-            };
-            acc(&b.attn.wq);
-            acc(&b.attn.wk);
-            acc(&b.attn.wv);
-            acc(&b.attn.wo);
-            match &b.ffn {
-                Ffn::Dense(m) => {
-                    acc(&m.wg);
-                    acc(&m.wu);
-                    acc(&m.wd);
-                }
-                Ffn::Moe(moe) => {
-                    for e in &moe.experts {
-                        acc(&e.wg);
-                        acc(&e.wu);
-                        acc(&e.wd);
-                    }
-                }
+                bits += self.linear_size_bits(&format!("b{bi}.{name}"), l);
             }
         }
-        bits as f64 / params as f64
+        bits / params as f64
     }
 
     // ------------------------------------------------------------ checkpoint io
@@ -460,6 +447,13 @@ impl Model {
         let mut header = Json::obj();
         header.set("format", Json::from("aqlm-ckpt-v1"));
         header.set("config", config_to_json(&self.cfg));
+        if !self.layer_bits.is_empty() {
+            let mut lb = Json::obj();
+            for (name, &bits) in &self.layer_bits {
+                lb.set(name, Json::from(bits));
+            }
+            header.set("layer_bits", lb);
+        }
         let mut blob: Vec<u8> = Vec::new();
         let mut tensors = Json::arr();
         {
@@ -682,6 +676,15 @@ impl Model {
                 ffn,
             });
         }
+        let mut layer_bits = HashMap::new();
+        if let Some(lb) = header.get("layer_bits").and_then(|v| v.as_obj()) {
+            for (name, v) in lb {
+                let bits = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("layer_bits['{name}'] is not a number"))?;
+                layer_bits.insert(name.clone(), bits);
+            }
+        }
         Ok(Model {
             rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
             embed: get_dense("embed")?,
@@ -689,6 +692,7 @@ impl Model {
             head: get_linear("head")?,
             blocks,
             cfg,
+            layer_bits,
         })
     }
 }
@@ -902,6 +906,29 @@ mod tests {
         let (l2, _) = m2.forward_logits(&tokens, 1, 3, false);
         assert!(l1.allclose(&l2, 1e-6));
         assert!((m.avg_bits() - m2.avg_bits()).abs() < 1e-9);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn dense_backed_bits_table_counts_and_survives_roundtrip() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(9);
+        let mut m = Model::init(&cfg, &mut rng);
+        // A dense-backed baseline (SpQR-lite / QuIP-lite) stores dequantized
+        // f32 but records its true size in the per-layer bits table.
+        m.layer_bits.insert("b0.wq".to_string(), 3.25);
+        let params: usize =
+            m.blocks.iter().flat_map(|b| b.linears()).map(|(_, l)| l.param_count()).sum();
+        let wq_params = m.blocks[0].attn.wq.param_count();
+        let expect =
+            (3.25 * wq_params as f64 + 16.0 * (params - wq_params) as f64) / params as f64;
+        assert!((m.avg_bits() - expect).abs() < 1e-9, "{} vs {expect}", m.avg_bits());
+        let path = std::env::temp_dir().join("aqlm_test_ckpt_bits.bin");
+        m.save(&path).unwrap();
+        let m2 = Model::load(&path).unwrap();
+        assert_eq!(m2.layer_bits.get("b0.wq"), Some(&3.25));
+        assert!((m.avg_bits() - m2.avg_bits()).abs() < 1e-12);
+        assert_eq!(m.weight_bytes(), m2.weight_bytes());
         std::fs::remove_file(path).ok();
     }
 

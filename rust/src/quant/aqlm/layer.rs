@@ -3,10 +3,12 @@
 //! (Phase 1) until the loss stops improving by the tolerance τ.
 
 use super::beam::{beam_search_sweep, layer_loss};
+use super::blockft::{BlockFtConfig, FtScope};
 use super::codebook::{update_codebooks_adam, CodebookUpdateConfig};
 use super::kmeans::{random_init, residual_kmeans_init};
 use crate::kernels::format::{AqlmShape, AqlmWeight};
-use crate::quant::CalibData;
+use crate::nn::linear::Linear;
+use crate::quant::{CalibData, QuantizedLayer, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -99,6 +101,34 @@ impl LayerQuantizer {
             }
         }
         (q, trace)
+    }
+}
+
+/// [`Quantizer`] adapter for AQLM (spec `aqlm:MxB,g=G,ft=N`), pairing the
+/// per-layer alternating optimization with the Phase-3 block fine-tuning
+/// configuration the pipeline applies after each block.
+pub struct AqlmQuantizer {
+    pub layer: AqlmLayerConfig,
+    pub block_ft: BlockFtConfig,
+}
+
+impl Quantizer for AqlmQuantizer {
+    fn name(&self) -> String {
+        "AQLM".to_string()
+    }
+
+    fn quantize(
+        &self,
+        w: &Tensor,
+        calib: &CalibData,
+        rng: &mut Rng,
+    ) -> anyhow::Result<QuantizedLayer> {
+        let (q, _) = LayerQuantizer::new(self.layer).quantize(w, calib, rng);
+        Ok(QuantizedLayer { avg_bits: q.avg_bits(), linear: Linear::aqlm(q), method: self.name() })
+    }
+
+    fn block_ft(&self) -> Option<BlockFtConfig> {
+        (self.block_ft.steps > 0 && self.block_ft.scope != FtScope::None).then_some(self.block_ft)
     }
 }
 

@@ -13,10 +13,13 @@
 //! act_order** (columns processed by decreasing Hessian diagonal). Grouped
 //! operation (used by SpQR-lite's base quantizer) is also supported.
 
+use super::aqlm::blockft::BlockFtConfig;
 use super::groupint::GroupIntWeight;
-use super::CalibData;
+use super::{CalibData, QuantizedLayer, Quantizer};
+use crate::nn::linear::Linear;
 use crate::tensor::linalg::{add_diag, diag_mean, inverse_spd};
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// GPTQ configuration.
 #[derive(Clone, Copy, Debug)]
@@ -39,6 +42,34 @@ impl GptqConfig {
 
     pub fn grouped(bits: usize, group: usize) -> GptqConfig {
         GptqConfig { bits, group, act_order: false, percdamp: 0.01 }
+    }
+}
+
+/// [`Quantizer`] adapter for GPTQ (spec `gptq:b=B[,g=G][,tuned]`).
+/// `block_tune` requests Appendix-L block tuning after each block.
+pub struct GptqQuantizer {
+    pub cfg: GptqConfig,
+    pub block_tune: Option<BlockFtConfig>,
+}
+
+impl Quantizer for GptqQuantizer {
+    fn name(&self) -> String {
+        if self.block_tune.is_some() { "GPTQ+tune" } else { "GPTQ" }.to_string()
+    }
+
+    fn quantize(
+        &self,
+        w: &Tensor,
+        calib: &CalibData,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<QuantizedLayer> {
+        let q = gptq_quantize(w, calib, self.cfg)?;
+        let avg_bits = q.avg_bits();
+        Ok(QuantizedLayer { avg_bits, linear: Linear::group_int(q), method: self.name() })
+    }
+
+    fn block_ft(&self) -> Option<BlockFtConfig> {
+        self.block_tune.filter(|ft| ft.steps > 0)
     }
 }
 

@@ -1,5 +1,6 @@
 //! Post-training quantization algorithms: **AQLM** (the paper's
-//! contribution) plus every baseline its evaluation compares against.
+//! contribution) plus every baseline its evaluation compares against, all
+//! behind one [`Quantizer`] trait.
 //!
 //! All methods share the paper's problem setup (Eq. 1): given a linear
 //! layer's weights `W` and calibration inputs `X`, find compressed weights
@@ -8,13 +9,26 @@
 //! `‖(W−Ŵ)X‖² = ⟨(W−Ŵ)XXᵀ, (W−Ŵ)⟩_F` (paper Eq. 8) and exactly what GPTQ's
 //! Hessian needs.
 //!
-//! | Module | Paper reference |
+//! Every method is a [`Quantizer`]: it consumes a weight matrix plus
+//! calibration and returns a [`QuantizedLayer`] (the new
+//! [`Linear`](crate::nn::linear::Linear), its average bits, and the method
+//! name). Quantizers are configured by **method-spec strings**
+//! (`aqlm:2x8,g=8,ft=30`, `gptq:b=4,g=16,tuned`, `rtn:b=4,g=32`, …) parsed
+//! by [`spec::MethodSpec`] and resolved through the [`spec::METHODS`]
+//! registry; per-layer routing (mixed-precision models) goes through
+//! [`spec::LayerPolicy`]. The pipeline, CLI, bench tables and examples all
+//! use this one surface — adding a method is local to `spec.rs` (a
+//! `MethodSpec` variant with its parse/build functions and registry entry)
+//! plus the trait impl, with zero changes at any call site.
+//!
+//! | Module | Contents |
 //! |---|---|
-//! | [`aqlm`] | §3 (the full algorithm: K-means init, beam search, codebook Adam, block FT, e2e KD) |
-//! | [`rtn`] | round-to-nearest baseline (Dettmers & Zettlemoyer 2022) |
-//! | [`gptq`] | GPTQ (Frantar et al. 2022), incl. App. L scale tuning |
-//! | [`spqr`] | SpQR-lite: group quant + FP outliers (Dettmers et al. 2023) |
-//! | [`quip`] | QuIP-lite: incoherence rotation + grid (Chee et al. 2023) |
+//! | [`spec`] | method-spec grammar, quantizer registry, [`spec::LayerPolicy`] |
+//! | [`aqlm`] | §3 (the full algorithm: K-means init, beam search, codebook Adam, block FT, e2e KD) — spec `aqlm:MxB,g=G,ft=N` |
+//! | [`rtn`] | round-to-nearest baseline (Dettmers & Zettlemoyer 2022) — spec `rtn:b=B,g=G` |
+//! | [`gptq`] | GPTQ (Frantar et al. 2022), incl. App. L scale tuning — spec `gptq:b=B[,g=G][,tuned]` |
+//! | [`spqr`] | SpQR-lite: group quant + FP outliers (Dettmers et al. 2023) — spec `spqr:b=B,g=G,out=F` |
+//! | [`quip`] | QuIP-lite: incoherence rotation + grid (Chee et al. 2023) — spec `quip:b=B,seed=S` |
 //! | [`groupint`] | shared scalar-quant storage format |
 
 pub mod groupint;
@@ -23,9 +37,13 @@ pub mod gptq;
 pub mod spqr;
 pub mod quip;
 pub mod aqlm;
+pub mod spec;
 
+use self::aqlm::blockft::BlockFtConfig;
+use crate::nn::linear::Linear;
 use crate::tensor::ops::matmul;
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// Calibration statistics for one linear layer: `XXᵀ` over all calibration
 /// samples (rows of activations feeding this layer) plus the sample count.
@@ -85,6 +103,44 @@ pub struct QuantReport {
     pub avg_bits: f64,
     pub rel_error: f64,
     pub seconds: f64,
+}
+
+/// The result of quantizing one linear layer: the compressed (or
+/// dense-backed) weights, the storage cost, and which method produced it.
+/// `avg_bits` is authoritative even when the backing storage is dense
+/// (SpQR-lite / QuIP-lite) — the model persists it in its per-layer bits
+/// table so size accounting survives `save`/`load`.
+#[derive(Clone, Debug)]
+pub struct QuantizedLayer {
+    pub linear: Linear,
+    pub avg_bits: f64,
+    pub method: String,
+}
+
+/// A post-training quantization method, dispatched dynamically through the
+/// [`spec::METHODS`] registry. Implementations exist for AQLM
+/// ([`aqlm::layer::AqlmQuantizer`]), RTN ([`rtn::RtnQuantizer`]), GPTQ
+/// ([`gptq::GptqQuantizer`]), SpQR-lite ([`spqr::SpqrQuantizer`]) and
+/// QuIP-lite ([`quip::QuipQuantizer`]).
+pub trait Quantizer {
+    /// Method display name ("AQLM", "GPTQ+tune", …).
+    fn name(&self) -> String;
+
+    /// Quantize one weight matrix `w` against its calibration statistics.
+    /// `rng` is forked per layer by the pipeline, so implementations may
+    /// draw from it freely (AQLM's K-means init, QuIP's rotation seeds).
+    fn quantize(
+        &self,
+        w: &Tensor,
+        calib: &CalibData,
+        rng: &mut Rng,
+    ) -> anyhow::Result<QuantizedLayer>;
+
+    /// Phase-3 block fine-tuning this method wants after its layers are
+    /// quantized (paper Alg. 1 lines 13–20 / App. L); `None` skips FT.
+    fn block_ft(&self) -> Option<BlockFtConfig> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -12,7 +12,8 @@
 //! rotated accordingly: `H̃ = Vᵀ H V`.
 
 use super::gptq::{gptq_quantize, GptqConfig};
-use super::CalibData;
+use super::{CalibData, QuantizedLayer, Quantizer};
+use crate::nn::linear::Linear;
 use crate::tensor::linalg::random_orthogonal;
 use crate::tensor::ops::matmul;
 use crate::tensor::Tensor;
@@ -42,6 +43,31 @@ impl QuipWeight {
     pub fn avg_bits(&self) -> f64 {
         let params = self.d_out * self.d_in;
         (params * self.bits + self.d_out * 32) as f64 / params as f64
+    }
+}
+
+/// [`Quantizer`] adapter for QuIP-lite (spec `quip:b=B,seed=S`). The
+/// configured seed is mixed with the pipeline's per-layer rng so every
+/// layer gets independent rotation matrices; the result is dense-backed
+/// with its true size carried as `QuantizedLayer::avg_bits`.
+pub struct QuipQuantizer(pub QuipConfig);
+
+impl Quantizer for QuipQuantizer {
+    fn name(&self) -> String {
+        "QuIP-lite".to_string()
+    }
+
+    fn quantize(
+        &self,
+        w: &Tensor,
+        calib: &CalibData,
+        rng: &mut Rng,
+    ) -> anyhow::Result<QuantizedLayer> {
+        let mut cfg = self.0;
+        cfg.seed ^= rng.next_u64();
+        let q = quip_quantize(w, calib, cfg)?;
+        let avg_bits = q.avg_bits();
+        Ok(QuantizedLayer { avg_bits, linear: Linear::dense(q.dense), method: self.name() })
     }
 }
 

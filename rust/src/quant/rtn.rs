@@ -3,7 +3,10 @@
 //! comparison; every data-aware method must beat it.
 
 use super::groupint::{quantize_group_minmax, GroupIntWeight};
+use super::{CalibData, QuantizedLayer, Quantizer};
+use crate::nn::linear::Linear;
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// RTN configuration.
 #[derive(Clone, Copy, Debug)]
@@ -15,6 +18,27 @@ pub struct RtnConfig {
 impl RtnConfig {
     pub fn new(bits: usize, group: usize) -> RtnConfig {
         RtnConfig { bits, group }
+    }
+}
+
+/// [`Quantizer`] adapter for RTN (spec `rtn:b=B,g=G`). Data-free: the
+/// calibration statistics and rng are ignored.
+pub struct RtnQuantizer(pub RtnConfig);
+
+impl Quantizer for RtnQuantizer {
+    fn name(&self) -> String {
+        "RTN".to_string()
+    }
+
+    fn quantize(
+        &self,
+        w: &Tensor,
+        _calib: &CalibData,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<QuantizedLayer> {
+        let q = rtn_quantize(w, self.0);
+        let avg_bits = q.avg_bits();
+        Ok(QuantizedLayer { avg_bits, linear: Linear::group_int(q), method: self.name() })
     }
 }
 

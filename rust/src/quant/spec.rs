@@ -1,0 +1,757 @@
+//! Method specs, the quantizer registry, and per-layer policies — the
+//! crate's quantization configuration surface.
+//!
+//! A **method spec** is a single string naming a quantization method and its
+//! parameters. The same grammar is used verbatim by the CLI
+//! (`aqlm quantize --method <spec>`), the bench tables, the examples, and
+//! the per-layer policies:
+//!
+//! | Spec | Meaning |
+//! |---|---|
+//! | `aqlm:2x8,g=8,ft=30` | AQLM, 2 codebooks × 8-bit codes, group 8, 30 block-FT steps |
+//! | `aqlm:bits=2.5,ft=30` | AQLM, shape auto-chosen to hit ~2.5 avg bits on the model |
+//! | `aqlm:1x6,g=4,ft=0,fast` | AQLM, fast per-layer settings, no block FT |
+//! | `gptq:b=4` | GPTQ, 4-bit, per-row scales + act_order (the paper config) |
+//! | `gptq:b=4,g=16,tuned` | grouped GPTQ with Appendix-L block tuning |
+//! | `rtn:b=4,g=32` | round-to-nearest, 4-bit, group 32 |
+//! | `spqr:b=3,g=16,out=0.01` | SpQR-lite, 3-bit base + 1% FP outliers |
+//! | `quip:b=2,seed=9` | QuIP-lite, 2-bit incoherence-rotated grid |
+//!
+//! [`MethodSpec::parse`] and `Display` round-trip: `parse(x.to_string()) == x`
+//! for every valid spec (property-tested in `rust/tests/proptests.rs`).
+//! Scalar methods reject fractional bit widths with a clear error — only
+//! AQLM's codebook shapes can hit fractional budgets.
+//!
+//! Specs resolve to [`Quantizer`](super::Quantizer) trait objects through
+//! the [`METHODS`] registry; adding a method means adding one registry entry
+//! (key + parser + builder), not editing every call site.
+//!
+//! A [`LayerPolicy`] maps layer-name patterns to specs so
+//! [`quantize_model`](crate::coordinator::pipeline::quantize_model) can route
+//! each linear to a different quantizer — the heterogeneous (mixed-precision)
+//! configurations of the Pareto sweep:
+//!
+//! ```text
+//! *.wq=aqlm:2x8,g=8,ft=30;*.wk=aqlm:2x8,g=8,ft=30;rtn:b=2,g=32
+//! ```
+//!
+//! Rules are `pattern=spec` entries separated by `;`, first match wins;
+//! an entry without a pattern is shorthand for the catch-all `*`.
+
+use super::aqlm::blockft::{BlockFtConfig, FtScope};
+use super::aqlm::layer::{AqlmLayerConfig, AqlmQuantizer};
+use super::gptq::{GptqConfig, GptqQuantizer};
+use super::quip::{QuipConfig, QuipQuantizer};
+use super::rtn::{RtnConfig, RtnQuantizer};
+use super::spqr::{SpqrConfig, SpqrQuantizer};
+use super::Quantizer;
+use crate::coordinator::shapes::choose_shape;
+use crate::kernels::format::AqlmShape;
+use crate::nn::config::ModelConfig;
+use std::fmt;
+
+/// Default block-FT steps for `aqlm:` specs (`ft=` overrides).
+pub const DEFAULT_AQLM_FT_STEPS: usize = 30;
+/// Default tuning steps for `gptq:…,tuned` (`ft=` overrides).
+pub const DEFAULT_GPTQ_TUNE_STEPS: usize = 60;
+
+/// How an `aqlm:` spec picks its codebook shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShapeChoice {
+    /// Search the shape grid for the model-wide average closest to the
+    /// target (App. H accounting; needs a [`ModelConfig`] at build time).
+    Auto { target_bits: f64 },
+    /// Explicit `MxB,g=G`.
+    Fixed(AqlmShape),
+}
+
+/// Parsed `aqlm:` spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AqlmSpec {
+    pub shape: ShapeChoice,
+    /// Phase-3 block fine-tuning steps (0 disables FT).
+    pub ft_steps: usize,
+    /// Fine-tuning scope (Table 7 ablation); `Full` unless `scope=` given.
+    pub scope: FtScope,
+    /// Use the faster, slightly less accurate per-layer settings.
+    pub fast: bool,
+}
+
+/// A parsed method spec — the typed form of the grammar above.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MethodSpec {
+    Aqlm(AqlmSpec),
+    Rtn { bits: usize, group: usize },
+    /// `group: None` = per-row scales + act_order (the paper's GPTQ
+    /// config); `tune_steps: Some(n)` = Appendix-L block tuning.
+    Gptq { bits: usize, group: Option<usize>, tune_steps: Option<usize> },
+    Spqr { bits: usize, group: usize, outlier_frac: f64 },
+    Quip { bits: usize, seed: u64 },
+}
+
+// ------------------------------------------------------------------ registry
+
+/// One registered quantization method: the spec key, its grammar, and the
+/// functions that parse its arguments and build its [`Quantizer`].
+pub struct MethodEntry {
+    /// Spec keyword (`aqlm`, `rtn`, …).
+    pub key: &'static str,
+    /// Display name used in reports ("AQLM", "RTN", …).
+    pub name: &'static str,
+    /// One-line grammar example for error messages and docs.
+    pub grammar: &'static str,
+    parse_args: fn(&[SpecItem]) -> anyhow::Result<MethodSpec>,
+    build: fn(&MethodSpec, Option<&ModelConfig>) -> anyhow::Result<Box<dyn Quantizer>>,
+}
+
+/// The method registry: every supported quantizer, keyed by spec keyword.
+/// `MethodSpec::parse` and [`build_quantizer`] dispatch through this table.
+pub static METHODS: &[MethodEntry] = &[
+    MethodEntry {
+        key: "aqlm",
+        name: "AQLM",
+        grammar: "aqlm:MxB,g=G,ft=N[,scope=none|norms|aq][,fast] | aqlm:bits=X,…",
+        parse_args: parse_aqlm,
+        build: build_aqlm,
+    },
+    MethodEntry {
+        key: "rtn",
+        name: "RTN",
+        grammar: "rtn:b=B[,g=G]",
+        parse_args: parse_rtn,
+        build: build_rtn,
+    },
+    MethodEntry {
+        key: "gptq",
+        name: "GPTQ",
+        grammar: "gptq:b=B[,g=G][,tuned[,ft=N]]",
+        parse_args: parse_gptq,
+        build: build_gptq,
+    },
+    MethodEntry {
+        key: "spqr",
+        name: "SpQR-lite",
+        grammar: "spqr:b=B[,g=G][,out=F]",
+        parse_args: parse_spqr,
+        build: build_spqr,
+    },
+    MethodEntry {
+        key: "quip",
+        name: "QuIP-lite",
+        grammar: "quip:b=B[,seed=S]",
+        parse_args: parse_quip,
+        build: build_quip,
+    },
+];
+
+/// Comma-separated list of registered keys with grammar, for errors/help.
+pub fn known_methods() -> String {
+    METHODS.iter().map(|e| e.grammar).collect::<Vec<_>>().join(" | ")
+}
+
+fn entry_for(key: &str) -> Option<&'static MethodEntry> {
+    METHODS.iter().find(|e| e.key == key)
+}
+
+/// Resolve a spec to a quantizer through the registry. `cfg` is needed only
+/// for auto-shaped AQLM (`aqlm:bits=…`); pass `None` when quantizing a
+/// standalone layer with explicit shapes.
+pub fn build_quantizer(
+    spec: &MethodSpec,
+    cfg: Option<&ModelConfig>,
+) -> anyhow::Result<Box<dyn Quantizer>> {
+    let entry = entry_for(spec.key()).expect("every MethodSpec variant is registered");
+    (entry.build)(spec, cfg)
+}
+
+// ---------------------------------------------------------------- spec items
+
+/// One comma-separated spec argument: a bare token (`2x8`, `fast`, `tuned`)
+/// or a `key=value` pair.
+#[derive(Clone, Debug)]
+enum SpecItem {
+    Bare(String),
+    Kv(String, String),
+}
+
+fn split_items(rest: &str) -> anyhow::Result<Vec<SpecItem>> {
+    let mut items = Vec::new();
+    for part in rest.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('=') {
+            Some((k, v)) => {
+                let (k, v) = (k.trim(), v.trim());
+                anyhow::ensure!(!k.is_empty() && !v.is_empty(), "empty key or value in '{part}'");
+                items.push(SpecItem::Kv(k.to_string(), v.to_string()));
+            }
+            None => items.push(SpecItem::Bare(part.to_string())),
+        }
+    }
+    Ok(items)
+}
+
+/// Parse a bit width that must be an integer (scalar grids have no
+/// fractional widths — `aqlm:bits=…` is the spec for fractional budgets).
+fn int_bits(v: &str, method: &str) -> anyhow::Result<usize> {
+    let f: f64 = v.parse().map_err(|_| anyhow::anyhow!("{method}: bad bit width '{v}'"))?;
+    anyhow::ensure!(
+        f.fract() == 0.0,
+        "{method}: bit width must be an integer, got {v} \
+         (scalar grids cannot hit fractional budgets — use aqlm:bits={v} instead)"
+    );
+    anyhow::ensure!((1.0..=16.0).contains(&f), "{method}: bit width {v} out of range 1..=16");
+    Ok(f as usize)
+}
+
+fn parse_usize(v: &str, what: &str) -> anyhow::Result<usize> {
+    v.parse().map_err(|_| anyhow::anyhow!("bad {what} '{v}'"))
+}
+
+// ------------------------------------------------------------- per-method parse
+
+fn parse_aqlm(items: &[SpecItem]) -> anyhow::Result<MethodSpec> {
+    let mut shape_mb: Option<(usize, usize, Option<usize>)> = None; // (M, B, g from MxBgG)
+    let mut bits: Option<f64> = None;
+    let mut group: Option<usize> = None;
+    let mut ft_steps = DEFAULT_AQLM_FT_STEPS;
+    let mut scope = FtScope::Full;
+    let mut fast = false;
+    for item in items {
+        match item {
+            SpecItem::Bare(tok) if tok.contains('x') => {
+                anyhow::ensure!(shape_mb.is_none(), "aqlm: shape given twice");
+                let (m, rest) = tok.split_once('x').unwrap();
+                let (b, g) = match rest.split_once('g') {
+                    Some((b, g)) => (b, Some(parse_usize(g, "group")?)),
+                    None => (rest, None),
+                };
+                shape_mb =
+                    Some((parse_usize(m, "codebook count")?, parse_usize(b, "code bits")?, g));
+            }
+            SpecItem::Bare(tok) if tok == "fast" => fast = true,
+            SpecItem::Kv(k, v) if k == "bits" => {
+                let f: f64 = v.parse().map_err(|_| anyhow::anyhow!("aqlm: bad bits '{v}'"))?;
+                anyhow::ensure!(f.is_finite() && f > 0.0, "aqlm: bits must be positive, got {v}");
+                bits = Some(f);
+            }
+            SpecItem::Kv(k, v) if k == "g" => group = Some(parse_usize(v, "group")?),
+            SpecItem::Kv(k, v) if k == "ft" => ft_steps = parse_usize(v, "ft steps")?,
+            SpecItem::Kv(k, v) if k == "scope" => {
+                scope = match v.as_str() {
+                    "none" => FtScope::None,
+                    "norms" => FtScope::NormsOnly,
+                    "aq" => FtScope::QuantParamsOnly,
+                    "full" => FtScope::Full,
+                    other => anyhow::bail!("aqlm: unknown scope '{other}' (none|norms|aq|full)"),
+                };
+            }
+            other => anyhow::bail!(
+                "aqlm: unexpected argument {}; grammar: {}",
+                item_str(other),
+                entry_for("aqlm").unwrap().grammar
+            ),
+        }
+    }
+    let shape = match (shape_mb, bits) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("aqlm: give either an explicit MxB shape or bits=…, not both")
+        }
+        (Some((m, b, g_tok)), None) => {
+            let g = match (g_tok, group) {
+                (Some(_), Some(_)) => anyhow::bail!("aqlm: group given twice"),
+                (Some(g), None) | (None, Some(g)) => g,
+                (None, None) => 8,
+            };
+            anyhow::ensure!((1..=16).contains(&m), "aqlm: codebook count {m} out of range 1..=16");
+            anyhow::ensure!((1..=16).contains(&b), "aqlm: code bits {b} out of range 1..=16");
+            anyhow::ensure!(g >= 1, "aqlm: group must be >= 1");
+            ShapeChoice::Fixed(AqlmShape::new(m, b, g))
+        }
+        (None, Some(t)) => {
+            anyhow::ensure!(group.is_none(), "aqlm: g= only applies to an explicit MxB shape");
+            ShapeChoice::Auto { target_bits: t }
+        }
+        (None, None) => anyhow::bail!(
+            "aqlm: need a shape ('aqlm:2x8,g=8') or a target width ('aqlm:bits=2.5')"
+        ),
+    };
+    Ok(MethodSpec::Aqlm(AqlmSpec { shape, ft_steps, scope, fast }))
+}
+
+fn parse_rtn(items: &[SpecItem]) -> anyhow::Result<MethodSpec> {
+    let mut bits: Option<usize> = None;
+    let mut group = 32usize;
+    for item in items {
+        match item {
+            SpecItem::Kv(k, v) if k == "b" => bits = Some(int_bits(v, "rtn")?),
+            SpecItem::Kv(k, v) if k == "g" => group = parse_usize(v, "group")?,
+            other => anyhow::bail!(
+                "rtn: unexpected argument {}; grammar: {}",
+                item_str(other),
+                entry_for("rtn").unwrap().grammar
+            ),
+        }
+    }
+    let bits = bits.ok_or_else(|| anyhow::anyhow!("rtn: missing b= (bit width)"))?;
+    anyhow::ensure!(group >= 1, "rtn: group must be >= 1");
+    Ok(MethodSpec::Rtn { bits, group })
+}
+
+fn parse_gptq(items: &[SpecItem]) -> anyhow::Result<MethodSpec> {
+    let mut bits: Option<usize> = None;
+    let mut group: Option<usize> = None;
+    let mut tuned = false;
+    let mut ft: Option<usize> = None;
+    for item in items {
+        match item {
+            SpecItem::Kv(k, v) if k == "b" => bits = Some(int_bits(v, "gptq")?),
+            SpecItem::Kv(k, v) if k == "g" => group = Some(parse_usize(v, "group")?),
+            SpecItem::Bare(tok) if tok == "tuned" => tuned = true,
+            SpecItem::Kv(k, v) if k == "ft" => ft = Some(parse_usize(v, "ft steps")?),
+            other => anyhow::bail!(
+                "gptq: unexpected argument {}; grammar: {}",
+                item_str(other),
+                entry_for("gptq").unwrap().grammar
+            ),
+        }
+    }
+    let bits = bits.ok_or_else(|| anyhow::anyhow!("gptq: missing b= (bit width)"))?;
+    anyhow::ensure!(ft.is_none() || tuned, "gptq: ft= requires the 'tuned' flag");
+    let tune_steps = tuned.then(|| ft.unwrap_or(DEFAULT_GPTQ_TUNE_STEPS));
+    Ok(MethodSpec::Gptq { bits, group, tune_steps })
+}
+
+fn parse_spqr(items: &[SpecItem]) -> anyhow::Result<MethodSpec> {
+    let mut bits: Option<usize> = None;
+    let mut group = 16usize;
+    let mut outlier_frac = 0.01f64;
+    for item in items {
+        match item {
+            SpecItem::Kv(k, v) if k == "b" => bits = Some(int_bits(v, "spqr")?),
+            SpecItem::Kv(k, v) if k == "g" => group = parse_usize(v, "group")?,
+            SpecItem::Kv(k, v) if k == "out" => {
+                let f: f64 = v.parse().map_err(|_| anyhow::anyhow!("spqr: bad out= '{v}'"))?;
+                anyhow::ensure!(
+                    (0.0..=0.5).contains(&f),
+                    "spqr: outlier fraction {v} out of range 0..=0.5"
+                );
+                outlier_frac = f;
+            }
+            other => anyhow::bail!(
+                "spqr: unexpected argument {}; grammar: {}",
+                item_str(other),
+                entry_for("spqr").unwrap().grammar
+            ),
+        }
+    }
+    let bits = bits.ok_or_else(|| anyhow::anyhow!("spqr: missing b= (bit width)"))?;
+    anyhow::ensure!(group >= 1, "spqr: group must be >= 1");
+    Ok(MethodSpec::Spqr { bits, group, outlier_frac })
+}
+
+fn parse_quip(items: &[SpecItem]) -> anyhow::Result<MethodSpec> {
+    let mut bits: Option<usize> = None;
+    let mut seed = 0u64;
+    for item in items {
+        match item {
+            SpecItem::Kv(k, v) if k == "b" => bits = Some(int_bits(v, "quip")?),
+            SpecItem::Kv(k, v) if k == "seed" => {
+                seed = v.parse().map_err(|_| anyhow::anyhow!("quip: bad seed '{v}'"))?;
+            }
+            other => anyhow::bail!(
+                "quip: unexpected argument {}; grammar: {}",
+                item_str(other),
+                entry_for("quip").unwrap().grammar
+            ),
+        }
+    }
+    let bits = bits.ok_or_else(|| anyhow::anyhow!("quip: missing b= (bit width)"))?;
+    Ok(MethodSpec::Quip { bits, seed })
+}
+
+fn item_str(item: &SpecItem) -> String {
+    match item {
+        SpecItem::Bare(t) => format!("'{t}'"),
+        SpecItem::Kv(k, v) => format!("'{k}={v}'"),
+    }
+}
+
+// ------------------------------------------------------------- per-method build
+
+fn build_aqlm(
+    spec: &MethodSpec,
+    cfg: Option<&ModelConfig>,
+) -> anyhow::Result<Box<dyn Quantizer>> {
+    let MethodSpec::Aqlm(a) = spec else { anyhow::bail!("aqlm builder got {spec}") };
+    let shape = match a.shape {
+        ShapeChoice::Fixed(s) => s,
+        ShapeChoice::Auto { target_bits } => {
+            let cfg = cfg.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "aqlm:bits=… (auto shape) needs a model; \
+                     use an explicit shape like aqlm:2x8,g=8 for standalone layers"
+                )
+            })?;
+            choose_shape(cfg, target_bits, 8)
+        }
+    };
+    let layer = if a.fast { AqlmLayerConfig::fast(shape) } else { AqlmLayerConfig::new(shape) };
+    let scope = if a.ft_steps == 0 { FtScope::None } else { a.scope };
+    let block_ft = BlockFtConfig { steps: a.ft_steps, lr: 1e-3, tol: 1e-5, scope };
+    Ok(Box::new(AqlmQuantizer { layer, block_ft }))
+}
+
+fn build_rtn(spec: &MethodSpec, _cfg: Option<&ModelConfig>) -> anyhow::Result<Box<dyn Quantizer>> {
+    let MethodSpec::Rtn { bits, group } = *spec else { anyhow::bail!("rtn builder got {spec}") };
+    Ok(Box::new(RtnQuantizer(RtnConfig::new(bits, group))))
+}
+
+fn build_gptq(spec: &MethodSpec, _cfg: Option<&ModelConfig>) -> anyhow::Result<Box<dyn Quantizer>> {
+    let MethodSpec::Gptq { bits, group, tune_steps } = *spec else {
+        anyhow::bail!("gptq builder got {spec}")
+    };
+    let cfg = match group {
+        None => GptqConfig::paper(bits),
+        Some(g) => GptqConfig::grouped(bits, g),
+    };
+    let block_tune = tune_steps
+        .map(|steps| BlockFtConfig { steps, lr: 1e-3, tol: 1e-5, scope: FtScope::Full });
+    Ok(Box::new(GptqQuantizer { cfg, block_tune }))
+}
+
+fn build_spqr(spec: &MethodSpec, _cfg: Option<&ModelConfig>) -> anyhow::Result<Box<dyn Quantizer>> {
+    let MethodSpec::Spqr { bits, group, outlier_frac } = *spec else {
+        anyhow::bail!("spqr builder got {spec}")
+    };
+    Ok(Box::new(SpqrQuantizer(SpqrConfig { bits, group, outlier_frac })))
+}
+
+fn build_quip(spec: &MethodSpec, _cfg: Option<&ModelConfig>) -> anyhow::Result<Box<dyn Quantizer>> {
+    let MethodSpec::Quip { bits, seed } = *spec else { anyhow::bail!("quip builder got {spec}") };
+    Ok(Box::new(QuipQuantizer(QuipConfig { bits, seed })))
+}
+
+// ------------------------------------------------------------ parse / display
+
+impl MethodSpec {
+    /// Registry key of this spec's method.
+    pub fn key(&self) -> &'static str {
+        match self {
+            MethodSpec::Aqlm(_) => "aqlm",
+            MethodSpec::Rtn { .. } => "rtn",
+            MethodSpec::Gptq { .. } => "gptq",
+            MethodSpec::Spqr { .. } => "spqr",
+            MethodSpec::Quip { .. } => "quip",
+        }
+    }
+
+    /// Report/display name ("AQLM", "GPTQ+tune", …).
+    pub fn method_name(&self) -> &'static str {
+        match self {
+            MethodSpec::Gptq { tune_steps: Some(_), .. } => "GPTQ+tune",
+            MethodSpec::Aqlm(_) => "AQLM",
+            spec => entry_for(spec.key()).unwrap().name,
+        }
+    }
+
+    /// Parse a spec string (`method:arg,arg,…`). Inverse of `Display`.
+    pub fn parse(s: &str) -> anyhow::Result<MethodSpec> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty method spec; known specs: {}", known_methods());
+        let (key, rest) = match s.split_once(':') {
+            Some((k, r)) => (k.trim(), r),
+            None => (s, ""),
+        };
+        let entry = entry_for(&key.to_ascii_lowercase()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown method '{key}' in spec '{s}'; known specs: {}",
+                known_methods()
+            )
+        })?;
+        let items = split_items(rest)?;
+        (entry.parse_args)(&items).map_err(|e| anyhow::anyhow!("in spec '{s}': {e}"))
+    }
+}
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MethodSpec::Aqlm(a) => {
+                write!(f, "aqlm:")?;
+                match a.shape {
+                    ShapeChoice::Fixed(s) => {
+                        write!(f, "{}x{},g={}", s.n_codebooks, s.code_bits, s.group)?
+                    }
+                    ShapeChoice::Auto { target_bits } => write!(f, "bits={target_bits}")?,
+                }
+                write!(f, ",ft={}", a.ft_steps)?;
+                match a.scope {
+                    FtScope::Full => {}
+                    FtScope::None => write!(f, ",scope=none")?,
+                    FtScope::NormsOnly => write!(f, ",scope=norms")?,
+                    FtScope::QuantParamsOnly => write!(f, ",scope=aq")?,
+                }
+                if a.fast {
+                    write!(f, ",fast")?;
+                }
+                Ok(())
+            }
+            MethodSpec::Rtn { bits, group } => write!(f, "rtn:b={bits},g={group}"),
+            MethodSpec::Gptq { bits, group, tune_steps } => {
+                write!(f, "gptq:b={bits}")?;
+                if let Some(g) = group {
+                    write!(f, ",g={g}")?;
+                }
+                if let Some(steps) = tune_steps {
+                    write!(f, ",tuned")?;
+                    if *steps != DEFAULT_GPTQ_TUNE_STEPS {
+                        write!(f, ",ft={steps}")?;
+                    }
+                }
+                Ok(())
+            }
+            MethodSpec::Spqr { bits, group, outlier_frac } => {
+                write!(f, "spqr:b={bits},g={group},out={outlier_frac}")
+            }
+            MethodSpec::Quip { bits, seed } => write!(f, "quip:b={bits},seed={seed}"),
+        }
+    }
+}
+
+// --------------------------------------------------------------- layer policy
+
+/// Per-layer quantization policy: ordered `pattern → spec` rules, first
+/// match wins. Patterns are globs over full layer names (`b0.wq`,
+/// `b1.e0.wg`) with `*` matching any run of characters: `*.wq`, `b0.*`, `*`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPolicy {
+    pub rules: Vec<(String, MethodSpec)>,
+}
+
+impl LayerPolicy {
+    /// Single-method policy (the uniform configurations of the paper).
+    pub fn uniform(spec: MethodSpec) -> LayerPolicy {
+        LayerPolicy { rules: vec![("*".to_string(), spec)] }
+    }
+
+    /// Parse `pattern=spec;pattern=spec;…`. An entry with no pattern
+    /// (`rtn:b=4,g=32`) is the catch-all `*`.
+    pub fn parse(s: &str) -> anyhow::Result<LayerPolicy> {
+        let mut rules = Vec::new();
+        for entry in s.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            // The '=' separating pattern from spec comes before the spec's
+            // method key, hence before any ':'; a '=' after ':' belongs to
+            // the spec's own arguments (g=8, b=4, …).
+            let (pattern, spec_str) = match (entry.find('='), entry.find(':')) {
+                (Some(eq), Some(colon)) if eq < colon => (entry[..eq].trim(), &entry[eq + 1..]),
+                (Some(eq), None) => (entry[..eq].trim(), &entry[eq + 1..]),
+                _ => ("*", entry),
+            };
+            anyhow::ensure!(!pattern.is_empty(), "empty layer pattern in policy entry '{entry}'");
+            rules.push((pattern.to_string(), MethodSpec::parse(spec_str)?));
+        }
+        anyhow::ensure!(!rules.is_empty(), "empty layer policy");
+        Ok(LayerPolicy { rules })
+    }
+
+    /// Index of the first rule matching `layer`, if any.
+    pub fn rule_for(&self, layer: &str) -> Option<usize> {
+        self.rules.iter().position(|(pat, _)| glob_match(pat, layer))
+    }
+
+    /// Spec of the first rule matching `layer`, if any.
+    pub fn spec_for(&self, layer: &str) -> Option<&MethodSpec> {
+        self.rule_for(layer).map(|i| &self.rules[i].1)
+    }
+
+    /// True when every rule routes to the same spec (a uniform run).
+    pub fn is_uniform(&self) -> bool {
+        self.rules.windows(2).all(|w| w[0].1 == w[1].1)
+    }
+}
+
+impl fmt::Display for LayerPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, (pat, spec)) in self.rules.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(f, "{pat}={spec}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Glob match with `*` as "any run of characters (including empty)".
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let parts: Vec<&str> = pattern.split('*').collect();
+    if parts.len() == 1 {
+        return pattern == name;
+    }
+    let mut pos = 0usize;
+    if !name.starts_with(parts[0]) {
+        return false;
+    }
+    pos += parts[0].len();
+    for (i, part) in parts.iter().enumerate().skip(1) {
+        if part.is_empty() {
+            continue; // '*' at the end or '**' — matches anything remaining
+        }
+        if i == parts.len() - 1 {
+            // Final literal anchors at the end.
+            return name.len() >= pos + part.len() && name.ends_with(part);
+        }
+        match name[pos..].find(part) {
+            Some(off) => pos += off + part.len(),
+            None => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> MethodSpec {
+        MethodSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn parse_display_roundtrip_examples() {
+        for s in [
+            "aqlm:2x8,g=8,ft=30",
+            "aqlm:1x6,g=4,ft=0,fast",
+            "aqlm:bits=2.5,ft=15,scope=norms",
+            "rtn:b=4,g=32",
+            "gptq:b=4",
+            "gptq:b=2,g=16,tuned",
+            "gptq:b=2,g=16,tuned,ft=15",
+            "spqr:b=3,g=16,out=0.01",
+            "quip:b=2,seed=9",
+        ] {
+            let spec = p(s);
+            assert_eq!(format!("{spec}"), s, "canonical display");
+            assert_eq!(p(&format!("{spec}")), spec, "roundtrip");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_aliases() {
+        // MxBgG shape token, defaulted group, defaulted seed.
+        assert_eq!(p("aqlm:2x8g8,ft=30"), p("aqlm:2x8,g=8,ft=30"));
+        assert_eq!(p("aqlm:2x8,ft=30"), p("aqlm:2x8,g=8,ft=30"));
+        assert_eq!(p("quip:b=2"), p("quip:b=2,seed=0"));
+        assert_eq!(p("rtn:b=4"), p("rtn:b=4,g=32"));
+        assert_eq!(p("spqr:b=3"), p("spqr:b=3,g=16,out=0.01"));
+    }
+
+    #[test]
+    fn unknown_method_names_the_registry() {
+        let err = MethodSpec::parse("awq:b=4").unwrap_err().to_string();
+        assert!(err.contains("unknown method 'awq'"), "{err}");
+        for key in ["aqlm", "rtn", "gptq", "spqr", "quip"] {
+            assert!(err.contains(key), "error should list '{key}': {err}");
+        }
+    }
+
+    #[test]
+    fn scalar_methods_reject_fractional_bits() {
+        for s in ["rtn:b=2.5", "gptq:b=2.5", "spqr:b=2.5", "quip:b=2.5"] {
+            let err = MethodSpec::parse(s).unwrap_err().to_string();
+            assert!(err.contains("integer"), "{s}: {err}");
+            assert!(err.contains("aqlm:bits=2.5"), "{s} should point at aqlm: {err}");
+        }
+        // AQLM itself accepts fractional targets.
+        assert!(MethodSpec::parse("aqlm:bits=2.5").is_ok());
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        assert!(MethodSpec::parse("").is_err());
+        assert!(MethodSpec::parse("aqlm").is_err()); // no shape, no bits
+        assert!(MethodSpec::parse("aqlm:2x8,bits=2").is_err()); // both
+        assert!(MethodSpec::parse("aqlm:2x8g8,g=4,ft=1").is_err()); // group twice
+        assert!(MethodSpec::parse("rtn:b=0").is_err());
+        assert!(MethodSpec::parse("rtn:b=17").is_err());
+        assert!(MethodSpec::parse("rtn:bogus=1").is_err());
+        assert!(MethodSpec::parse("gptq:b=4,ft=10").is_err()); // ft without tuned
+        assert!(MethodSpec::parse("spqr:b=3,out=0.9").is_err());
+        assert!(MethodSpec::parse("quip:seed=1").is_err()); // missing bits
+    }
+
+    #[test]
+    fn method_names() {
+        assert_eq!(p("aqlm:2x8,ft=0").method_name(), "AQLM");
+        assert_eq!(p("rtn:b=4").method_name(), "RTN");
+        assert_eq!(p("gptq:b=4").method_name(), "GPTQ");
+        assert_eq!(p("gptq:b=4,g=16,tuned").method_name(), "GPTQ+tune");
+        assert_eq!(p("spqr:b=3").method_name(), "SpQR-lite");
+        assert_eq!(p("quip:b=2").method_name(), "QuIP-lite");
+    }
+
+    #[test]
+    fn registry_builds_every_method() {
+        let cfg = ModelConfig::nano();
+        let specs =
+            ["aqlm:bits=2,ft=0", "aqlm:1x4,g=4,ft=5", "rtn:b=4", "gptq:b=4", "spqr:b=3", "quip:b=2"];
+        for s in specs {
+            let q = build_quantizer(&p(s), Some(&cfg)).unwrap();
+            assert!(!q.name().is_empty(), "{s}");
+        }
+        // Auto shape without a model is a clear error.
+        let err = build_quantizer(&p("aqlm:bits=2,ft=0"), None).unwrap_err().to_string();
+        assert!(err.contains("model"), "{err}");
+    }
+
+    #[test]
+    fn glob_matching() {
+        assert!(glob_match("*", "b0.wq"));
+        assert!(glob_match("*.wq", "b0.wq"));
+        assert!(glob_match("*.wq", "b11.wq"));
+        assert!(!glob_match("*.wq", "b0.wk"));
+        assert!(glob_match("b0.*", "b0.wq"));
+        assert!(!glob_match("b0.*", "b1.wq"));
+        assert!(glob_match("b1.e*.wg", "b1.e3.wg"));
+        assert!(!glob_match("b1.e*.wg", "b1.wg"));
+        assert!(glob_match("b0.wq", "b0.wq"));
+        assert!(!glob_match("b0.wq", "b0.wqx"));
+        assert!(!glob_match("*.wd", "b0.wdx"));
+    }
+
+    #[test]
+    fn policy_parse_first_match_wins() {
+        let pol =
+            LayerPolicy::parse("*.wq=rtn:b=8,g=16;b0.*=gptq:b=4;rtn:b=2,g=32").unwrap();
+        assert_eq!(pol.rules.len(), 3);
+        assert_eq!(pol.spec_for("b0.wq").unwrap(), &p("rtn:b=8,g=16")); // first rule
+        assert_eq!(pol.spec_for("b0.wk").unwrap(), &p("gptq:b=4"));
+        assert_eq!(pol.spec_for("b1.wd").unwrap(), &p("rtn:b=2,g=32")); // catch-all
+        assert!(!pol.is_uniform());
+        // Display roundtrip.
+        assert_eq!(LayerPolicy::parse(&format!("{pol}")).unwrap(), pol);
+    }
+
+    #[test]
+    fn uniform_policy_matches_everything() {
+        let pol = LayerPolicy::uniform(p("rtn:b=4,g=32"));
+        assert!(pol.is_uniform());
+        for name in ["b0.wq", "b3.e1.wu", "anything"] {
+            assert_eq!(pol.spec_for(name).unwrap(), &p("rtn:b=4,g=32"));
+        }
+    }
+
+    #[test]
+    fn policy_rejects_bad_entries() {
+        assert!(LayerPolicy::parse("").is_err());
+        assert!(LayerPolicy::parse("*.wq=nosuch:b=2").is_err());
+        assert!(LayerPolicy::parse("=rtn:b=2").is_err());
+    }
+}

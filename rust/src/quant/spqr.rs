@@ -8,8 +8,10 @@
 //! blow-up that outliers cause for RTN/GPTQ.
 
 use super::gptq::{gptq_quantize, GptqConfig};
-use super::CalibData;
+use super::{CalibData, QuantizedLayer, Quantizer};
+use crate::nn::linear::Linear;
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// SpQR-lite configuration.
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +49,29 @@ impl SpqrWeight {
         let base = params * self.bits + self.d_out * n_groups * 32;
         let outliers = self.n_outliers * 32;
         (base + outliers) as f64 / params as f64
+    }
+}
+
+/// [`Quantizer`] adapter for SpQR-lite (spec `spqr:b=B,g=G,out=F`). The
+/// result is dense-backed (outliers patched into the dequantized matrix);
+/// the true compressed size travels as `QuantizedLayer::avg_bits` and is
+/// persisted in the model's per-layer bits table.
+pub struct SpqrQuantizer(pub SpqrConfig);
+
+impl Quantizer for SpqrQuantizer {
+    fn name(&self) -> String {
+        "SpQR-lite".to_string()
+    }
+
+    fn quantize(
+        &self,
+        w: &Tensor,
+        calib: &CalibData,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<QuantizedLayer> {
+        let q = spqr_quantize(w, calib, self.0)?;
+        let avg_bits = q.avg_bits();
+        Ok(QuantizedLayer { avg_bits, linear: Linear::dense(q.dense), method: self.name() })
     }
 }
 

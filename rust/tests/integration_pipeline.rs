@@ -1,18 +1,17 @@
 //! Integration: the full Algorithm-1 pipeline on a *trained* model —
 //! quantization degrades PPL gracefully, block FT recovers accuracy,
 //! end-to-end KD (★) recovers more, and AQLM dominates RTN at matched bits.
+//! All methods are named by registry spec strings and routed through the
+//! `Quantizer` trait; mixed runs go through `LayerPolicy`.
 
-use aqlm::coordinator::pipeline::{quantize_model, Method};
+use aqlm::coordinator::pipeline::{quantize_model, quantize_model_spec};
 use aqlm::coordinator::train::{train_native, TrainConfig};
 use aqlm::data::dataset::{DataBundle, DataSizes, TokenDataset};
 use aqlm::eval::ppl::perplexity;
-use aqlm::kernels::format::AqlmShape;
 use aqlm::nn::config::ModelConfig;
 use aqlm::nn::model::Model;
-use aqlm::quant::aqlm::blockft::{BlockFtConfig, FtScope};
 use aqlm::quant::aqlm::e2eft::{e2e_finetune, E2eFtConfig};
-use aqlm::quant::aqlm::layer::AqlmLayerConfig;
-use aqlm::quant::rtn::RtnConfig;
+use aqlm::quant::spec::{LayerPolicy, MethodSpec};
 use aqlm::util::rng::Rng;
 
 struct Setup {
@@ -43,44 +42,43 @@ fn trained_setup(seed: u64) -> Setup {
     Setup { bundle, model, calib, n_seqs, seq }
 }
 
+fn spec(s: &str) -> MethodSpec {
+    MethodSpec::parse(s).unwrap()
+}
+
 #[test]
 fn aqlm_with_ft_beats_no_ft_beats_rtn() {
     let s = trained_setup(21);
     let mut rng = Rng::seed_from_u64(1);
     let base_ppl = perplexity(&mut s.model.clone(), &s.bundle.eval_wiki, 8);
 
-    let shape = AqlmShape::new(1, 6, 4); // ~2.2 bits at nano dims
-    let ft_on = Method::Aqlm {
-        layer: AqlmLayerConfig::fast(shape),
-        block_ft: BlockFtConfig { steps: 20, lr: 1e-3, tol: 0.0, scope: FtScope::Full },
-    };
-    let ft_off = Method::Aqlm {
-        layer: AqlmLayerConfig::fast(shape),
-        block_ft: BlockFtConfig { steps: 0, lr: 1e-3, tol: 0.0, scope: FtScope::None },
-    };
+    // 1x6g4 ≈ 2.2 bits at nano dims.
+    let ft_on = spec("aqlm:1x6,g=4,ft=20,fast");
+    let ft_off = spec("aqlm:1x6,g=4,ft=0,fast");
 
     let mut m_ft = s.model.clone();
-    let rep_ft = quantize_model(&mut m_ft, &s.calib, s.n_seqs, s.seq, &ft_on, &mut rng).unwrap();
+    let rep_ft =
+        quantize_model_spec(&mut m_ft, &s.calib, s.n_seqs, s.seq, &ft_on, &mut rng).unwrap();
     let ppl_ft = perplexity(&mut m_ft, &s.bundle.eval_wiki, 8);
 
     let mut m_noft = s.model.clone();
-    quantize_model(&mut m_noft, &s.calib, s.n_seqs, s.seq, &ft_off, &mut rng).unwrap();
+    quantize_model_spec(&mut m_noft, &s.calib, s.n_seqs, s.seq, &ft_off, &mut rng).unwrap();
     let ppl_noft = perplexity(&mut m_noft, &s.bundle.eval_wiki, 8);
 
     let mut m_rtn = s.model.clone();
-    let rep_rtn = quantize_model(
+    let rep_rtn = quantize_model_spec(
         &mut m_rtn,
         &s.calib,
         s.n_seqs,
         s.seq,
-        &Method::Rtn(RtnConfig::new(2, 32)), // 3.0 avg bits — closest feasible RTN config above AQLM's 1.9
+        &spec("rtn:b=2,g=32"), // 3.0 avg bits — closest feasible RTN config above AQLM's 1.9
         &mut rng,
     )
     .unwrap();
     let ppl_rtn = perplexity(&mut m_rtn, &s.bundle.eval_wiki, 8);
 
     // AQLM uses no more bits than RTN (here it uses strictly fewer —
-    // 1.9 vs 4.0 — which makes the PPL ordering below a *stronger* result).
+    // 1.9 vs 3.0 — which makes the PPL ordering below a *stronger* result).
     assert!(
         rep_ft.avg_bits <= rep_rtn.avg_bits + 0.25,
         "budgets: aqlm {} vs rtn {}",
@@ -100,13 +98,9 @@ fn e2e_kd_improves_quantized_model() {
     let mut rng = Rng::seed_from_u64(2);
     // Aggressive quantization *without* block FT so the ★ phase has clear
     // headroom (the paper: ★ gains are largest at extreme widths).
-    let shape = AqlmShape::new(1, 3, 8); // brutal: 0.375 code bits/weight
-    let method = Method::Aqlm {
-        layer: AqlmLayerConfig::fast(shape),
-        block_ft: BlockFtConfig { steps: 0, lr: 1e-3, tol: 0.0, scope: FtScope::None },
-    };
+    let method = spec("aqlm:1x3,g=8,ft=0,fast"); // brutal: 0.375 code bits/weight
     let mut student = s.model.clone();
-    quantize_model(&mut student, &s.calib, s.n_seqs, s.seq, &method, &mut rng).unwrap();
+    quantize_model_spec(&mut student, &s.calib, s.n_seqs, s.seq, &method, &mut rng).unwrap();
     let ppl_before = perplexity(&mut student, &s.bundle.eval_wiki, 8);
     let mut teacher = s.model.clone();
     let data = TokenDataset { tokens: s.bundle.calib.tokens.clone(), seq_len: s.seq };
@@ -133,12 +127,10 @@ fn e2e_kd_improves_quantized_model() {
 fn quantized_checkpoint_roundtrip_through_pipeline() {
     let s = trained_setup(23);
     let mut rng = Rng::seed_from_u64(3);
-    let method = Method::Aqlm {
-        layer: AqlmLayerConfig::fast(AqlmShape::new(2, 5, 8)),
-        block_ft: BlockFtConfig { steps: 4, lr: 1e-3, tol: 0.0, scope: FtScope::Full },
-    };
+    let method = spec("aqlm:2x5,g=8,ft=4,fast");
     let mut q = s.model.clone();
-    let report = quantize_model(&mut q, &s.calib, s.n_seqs, s.seq, &method, &mut rng).unwrap();
+    let report =
+        quantize_model_spec(&mut q, &s.calib, s.n_seqs, s.seq, &method, &mut rng).unwrap();
     let path = std::env::temp_dir().join("aqlm_integration_q.ckpt");
     q.save(&path).unwrap();
     let mut loaded = Model::load(&path).unwrap();
@@ -147,4 +139,59 @@ fn quantized_checkpoint_roundtrip_through_pipeline() {
     let p2 = perplexity(&mut loaded, &s.bundle.eval_wiki, 8);
     assert!((p1 - p2).abs() < 1e-9);
     std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn dense_backed_baselines_keep_size_metadata_through_checkpoint() {
+    // SpQR-lite and QuIP-lite store dequantized f32 weights; before the
+    // per-layer bits table, avg_bits()/weight_bytes() reported FP32 for
+    // them after quantization and after save/load.
+    let s = trained_setup(24);
+    let mut rng = Rng::seed_from_u64(4);
+    for m in ["spqr:b=3,g=16,out=0.01", "quip:b=3,seed=5"] {
+        let mut q = s.model.clone();
+        let report =
+            quantize_model_spec(&mut q, &s.calib, s.n_seqs, s.seq, &spec(m), &mut rng).unwrap();
+        assert!(report.avg_bits < 8.0, "{m}: {}", report.avg_bits);
+        assert!(
+            (q.avg_bits() - report.avg_bits).abs() < 1e-6,
+            "{m}: model reports {} vs pipeline {}",
+            q.avg_bits(),
+            report.avg_bits
+        );
+        let dense_bytes = s.model.weight_bytes();
+        assert!(q.weight_bytes() < dense_bytes / 2, "{m}: no size win recorded");
+        let path = std::env::temp_dir().join(format!("aqlm_integration_{}.ckpt", spec(m).key()));
+        q.save(&path).unwrap();
+        let loaded = Model::load(&path).unwrap();
+        assert!(
+            (loaded.avg_bits() - report.avg_bits).abs() < 1e-6,
+            "{m}: bits lost across save/load: {}",
+            loaded.avg_bits()
+        );
+        assert_eq!(loaded.weight_bytes(), q.weight_bytes(), "{m}");
+        std::fs::remove_file(path).ok();
+    }
+}
+
+#[test]
+fn mixed_policy_pipeline_on_trained_model() {
+    let s = trained_setup(25);
+    let mut rng = Rng::seed_from_u64(5);
+    // Attention at ~2.2-bit AQLM, MLP at 3-bit RTN — a heterogeneous point.
+    let policy = LayerPolicy::parse(
+        "*.wq=aqlm:1x6,g=4,ft=0,fast;*.wk=aqlm:1x6,g=4,ft=0,fast;\
+         *.wv=aqlm:1x6,g=4,ft=0,fast;*.wo=aqlm:1x6,g=4,ft=0,fast;rtn:b=3,g=32",
+    )
+    .unwrap();
+    let mut m = s.model.clone();
+    let report = quantize_model(&mut m, &s.calib, s.n_seqs, s.seq, &policy, &mut rng).unwrap();
+    let methods: std::collections::BTreeSet<&str> =
+        report.layers.iter().map(|l| l.method.as_str()).collect();
+    assert_eq!(methods.into_iter().collect::<Vec<_>>(), vec!["AQLM", "RTN"]);
+    assert!((report.avg_bits - m.avg_bits()).abs() < 1e-6);
+    // The mixed model still works.
+    let ppl = perplexity(&mut m, &s.bundle.eval_wiki, 8);
+    let base_ppl = perplexity(&mut s.model.clone(), &s.bundle.eval_wiki, 8);
+    assert!(ppl.is_finite() && ppl < base_ppl * 8.0, "mixed model unusable: {ppl}");
 }

@@ -318,3 +318,102 @@ fn prop_appendix_h_formula_matches_struct_accounting() {
         },
     );
 }
+
+// ------------------------------------------------------------- method specs
+
+#[test]
+fn prop_method_spec_display_parse_roundtrip() {
+    use aqlm::quant::aqlm::blockft::FtScope;
+    use aqlm::quant::spec::{AqlmSpec, MethodSpec, ShapeChoice};
+    let gen_spec = |rng: &mut Rng| -> MethodSpec {
+        match rng.below(5) {
+            0 => MethodSpec::Aqlm(AqlmSpec {
+                shape: if rng.below(2) == 0 {
+                    ShapeChoice::Fixed(AqlmShape::new(
+                        1 + rng.below(4),
+                        1 + rng.below(10),
+                        [4usize, 8, 16, 32][rng.below(4)],
+                    ))
+                } else {
+                    // Multiples of 1/8 are exact in f64, so Display is exact.
+                    ShapeChoice::Auto { target_bits: (1 + rng.below(60)) as f64 / 8.0 }
+                },
+                ft_steps: rng.below(100),
+                scope: [
+                    FtScope::None,
+                    FtScope::NormsOnly,
+                    FtScope::QuantParamsOnly,
+                    FtScope::Full,
+                ][rng.below(4)],
+                fast: rng.below(2) == 0,
+            }),
+            1 => MethodSpec::Rtn {
+                bits: 1 + rng.below(8),
+                group: [8usize, 16, 32, 64][rng.below(4)],
+            },
+            2 => MethodSpec::Gptq {
+                bits: 1 + rng.below(8),
+                group: if rng.below(2) == 0 { None } else { Some([8usize, 16, 32][rng.below(3)]) },
+                tune_steps: if rng.below(2) == 0 { None } else { Some(1 + rng.below(120)) },
+            },
+            3 => MethodSpec::Spqr {
+                bits: 1 + rng.below(8),
+                group: [8usize, 16, 32][rng.below(3)],
+                // Exact decimal fractions: f64 Display round-trips bit-for-bit.
+                outlier_frac: (1 + rng.below(50)) as f64 / 1000.0,
+            },
+            _ => MethodSpec::Quip { bits: 1 + rng.below(8), seed: rng.next_u64() },
+        }
+    };
+    check_no_shrink(
+        "method-spec-roundtrip",
+        &cfg(256),
+        gen_spec,
+        |spec| {
+            let s = format!("{spec}");
+            match MethodSpec::parse(&s) {
+                Ok(back) if back == *spec => Ok(()),
+                Ok(back) => Err(format!("'{s}' reparsed as {back:?}")),
+                Err(e) => Err(format!("'{s}' failed to parse: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_layer_policy_display_parse_roundtrip() {
+    use aqlm::quant::spec::{LayerPolicy, MethodSpec};
+    let specs: Vec<MethodSpec> = [
+        "aqlm:2x8,g=8,ft=30",
+        "aqlm:bits=2.5,ft=0,fast",
+        "rtn:b=4,g=32",
+        "gptq:b=2,g=16,tuned",
+        "spqr:b=3,g=16,out=0.01",
+        "quip:b=2,seed=7",
+    ]
+    .iter()
+    .map(|s| MethodSpec::parse(s).unwrap())
+    .collect();
+    let patterns = ["*", "*.wq", "*.wk", "*.wd", "b0.*", "b1.e*.wg"];
+    check_no_shrink(
+        "layer-policy-roundtrip",
+        &cfg(128),
+        |rng: &mut Rng| {
+            let n = 1 + rng.below(4);
+            let rules: Vec<(String, MethodSpec)> = (0..n)
+                .map(|_| {
+                    (patterns[rng.below(patterns.len())].to_string(), specs[rng.below(specs.len())])
+                })
+                .collect();
+            LayerPolicy { rules }
+        },
+        |policy| {
+            let s = format!("{policy}");
+            match LayerPolicy::parse(&s) {
+                Ok(back) if back == *policy => Ok(()),
+                Ok(back) => Err(format!("'{s}' reparsed as {back:?}")),
+                Err(e) => Err(format!("'{s}' failed to parse: {e}")),
+            }
+        },
+    );
+}

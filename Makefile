@@ -1,8 +1,8 @@
-# Tier-1 verification plus lint/style gates and the bench smoke target
+# Tier-1 verification plus lint/style/doc gates and the bench smoke target
 # (tiny-shape batch sweeps, so the batched AQLM kernels and the batched
 # serving loop are exercised in CI without bench-length runtimes).
 
-.PHONY: verify build fmt clippy test smoke bench
+.PHONY: verify build fmt clippy test doc smoke bench
 
 build:
 	cargo build --release
@@ -22,11 +22,18 @@ clippy:
 test:
 	cargo test -q
 
+# Doc gate: rustdoc warnings (broken intra-doc links, missing docs on the
+# documented-API modules) are errors, and every doc-example must compile
+# and pass (`no_run` examples compile only).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo test -q --doc
+
 # Batch-sweep smoke: runs the ignored bench_smoke tests in release mode.
 smoke:
 	cargo test -q --release -- --ignored bench_smoke
 
-verify: build fmt clippy test smoke
+verify: build fmt clippy test doc smoke
 
 # Full measured sweeps (Tables 5/5b and 14/14b).
 bench:

@@ -1,9 +1,11 @@
-//! Pareto sweep (Figures 1/5/6 + 8): quantize the model family across bit
-//! widths, plot PPL vs size, verify the paper's claim that ~2.5-bit AQLM
-//! models are on the accuracy-size frontier — and run the heterogeneous
-//! sweep, where a `LayerPolicy` gives attention and MLP linears different
-//! method specs (e.g. 3-bit AQLM attention + 2-bit MLP) and the resulting
-//! mixed-precision points are tested against the uniform frontier.
+//! Pareto sweep (Figures 1/5/6 + 8 + 9): quantize the model family across
+//! bit widths, plot PPL vs size, verify the paper's claim that ~2.5-bit
+//! AQLM models are on the accuracy-size frontier — then run the
+//! heterogeneous sweep, where a `LayerPolicy` gives attention and MLP
+//! linears different method specs (e.g. 3-bit AQLM attention + 2-bit MLP),
+//! and finally the automatic rate-distortion allocation (`--auto-bits`),
+//! which solves the per-layer assignment from measured sensitivities and
+//! lands its points against the hand-written ones.
 //!
 //!     cargo run --release --example pareto_sweep
 
@@ -23,6 +25,11 @@ fn main() -> anyhow::Result<()> {
     for t in figures::f8_hetero_pareto(&mut ws)? {
         println!("{}", t.to_markdown());
         t.save(&ws.results_dir(), "example_pareto_f8")?;
+    }
+    // Automatic allocation vs the hand-written policies above.
+    for t in figures::f9_auto_vs_hand(&mut ws)? {
+        println!("{}", t.to_markdown());
+        t.save(&ws.results_dir(), "example_pareto_f9")?;
     }
     Ok(())
 }

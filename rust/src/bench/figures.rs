@@ -1,21 +1,90 @@
 //! The paper's figures: 1/5 (Pareto comparison), 4 (init ablation loss
 //! curves), 6 (model-size optimality), 7 (codes/codebook distribution),
-//! plus figure 8 — heterogeneous per-layer policies against the uniform
-//! frontier (the mixed-precision points only [`LayerPolicy`] can produce).
+//! figure 8 — heterogeneous per-layer policies against the uniform
+//! frontier (the mixed-precision points only [`LayerPolicy`] can produce)
+//! — and figure 9, the automatic rate-distortion allocation
+//! ([`alloc`](crate::quant::alloc), `--auto-bits`) landed against f8's
+//! hand-written policies and the uniform frontier.
 
-use super::tables::{aqlm_spec, aqlm_spec_with_shape};
+use super::tables::{aqlm_spec, aqlm_spec_with_shape, profile_ft_steps};
 use super::workspace::Workspace;
+use crate::coordinator::pipeline::probe_layer_sensitivity;
 use crate::coordinator::shapes::choose_shape;
 use crate::eval::pareto::{
     ascii_plot, frontier, is_pareto_optimal, on_combined_frontier, ParetoPoint,
 };
 use crate::eval::report::{f2, Table};
 use crate::nn::linear::Linear;
+use crate::nn::model::Model;
+use crate::quant::alloc::{
+    allocate, allocation_summary, default_candidates, emit_policy, Candidate,
+};
 use crate::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
 use crate::quant::spec::{LayerPolicy, MethodSpec};
 use crate::quant::CalibData;
 use crate::tensor::linalg::pca;
 use crate::util::rng::Rng;
+
+/// Uniform AQLM sweep points at the given targets, labeled
+/// `{prefix}{shape}` (shared by figures f8 and f9 so both compare against
+/// the same baseline construction).
+fn uniform_aqlm_points(
+    ws: &mut Workspace,
+    base: &Model,
+    targets: &[f64],
+    label_prefix: &str,
+) -> anyhow::Result<(Vec<ParetoPoint>, Vec<(String, f64)>)> {
+    let mut points = Vec::new();
+    let mut rows = Vec::new();
+    for &target in targets {
+        let (method, shape) = aqlm_spec(ws, &base.cfg, target);
+        let (mut q, report) = ws.quantize(base, &method)?;
+        points.push(ParetoPoint {
+            label: format!("{label_prefix}{}", shape.name()),
+            size_bytes: q.weight_bytes() as u64,
+            ppl: ws.eval_ppl(&mut q),
+        });
+        rows.push((format!("{method}"), report.avg_bits));
+    }
+    Ok((points, rows))
+}
+
+/// Hand-written policy points (shared by f8 and f9). Asserts every run
+/// really mixed methods or widths — a "heterogeneous" policy that
+/// collapses to a uniform run would make the comparison vacuous.
+fn hand_policy_points(
+    ws: &mut Workspace,
+    base: &Model,
+    policies: &[(&str, String)],
+) -> anyhow::Result<(Vec<ParetoPoint>, Vec<(String, f64)>)> {
+    let mut points = Vec::new();
+    let mut rows = Vec::new();
+    for (label, policy_str) in policies {
+        let policy = LayerPolicy::parse(policy_str)?;
+        let (mut q, report) = ws.quantize_policy(base, &policy)?;
+        let first = &report.layers[0];
+        anyhow::ensure!(
+            report
+                .layers
+                .iter()
+                .any(|l| l.method != first.method || (l.avg_bits - first.avg_bits).abs() > 1e-9),
+            "policy '{policy_str}' produced a uniform run"
+        );
+        points.push(ParetoPoint {
+            label: (*label).to_string(),
+            size_bytes: q.weight_bytes() as u64,
+            ppl: ws.eval_ppl(&mut q),
+        });
+        rows.push((policy_str.clone(), report.avg_bits));
+    }
+    Ok((points, rows))
+}
+
+/// The attention-projection rules of a hand-written policy (one `*.w?`
+/// entry per attention linear, all at `spec`).
+fn attn_rules(spec: &MethodSpec) -> String {
+    ["wq", "wk", "wv", "wo"].map(|n| format!("*.{n}={spec}")).join(";")
+}
 
 /// Figures 1/5: PPL vs quantized-weight bytes, AQLM vs QuIP-lite across the
 /// model family.
@@ -227,53 +296,21 @@ pub fn f8_hetero_pareto(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         ppl: ws.eval_ppl(&mut base),
     }];
     let mut uniform_rows: Vec<(String, f64)> = vec![("fp32".into(), 16.0)];
-    for target in [2.0, 3.0, 4.0] {
-        let (method, shape) = aqlm_spec(ws, &base.cfg, target);
-        let (mut q, report) = ws.quantize(&base, &method)?;
-        uniform.push(ParetoPoint {
-            label: format!("aqlm-{}", shape.name()),
-            size_bytes: q.weight_bytes() as u64,
-            ppl: ws.eval_ppl(&mut q),
-        });
-        uniform_rows.push((format!("{method}"), report.avg_bits));
-    }
+    let (upoints, urows) = uniform_aqlm_points(ws, &base, &[2.0, 3.0, 4.0], "aqlm-")?;
+    uniform.extend(upoints);
+    uniform_rows.extend(urows);
 
     // Heterogeneous policies: route attention and MLP linears to different
     // specs. Specs are Displayed back into policy strings, so the exact
     // grammar the CLI's --policy flag takes is what runs here.
     let attn3 = aqlm_spec(ws, &base.cfg, 3.0).0;
     let attn2 = aqlm_spec(ws, &base.cfg, 2.0).0;
-    let mlp2 = attn2;
-    let mlp3 = attn3;
-    let attn_rules = |spec: &MethodSpec| {
-        ["wq", "wk", "wv", "wo"].map(|n| format!("*.{n}={spec}")).join(";")
-    };
     let hetero_policies = [
-        ("attn3b+mlp2b", format!("{};{mlp2}", attn_rules(&attn3))),
-        ("attn2b+mlp3b", format!("{};{mlp3}", attn_rules(&attn2))),
+        ("attn3b+mlp2b", format!("{};{attn2}", attn_rules(&attn3))),
+        ("attn2b+mlp3b", format!("{};{attn3}", attn_rules(&attn2))),
         ("attn-aqlm3b+mlp-gptq2b", format!("{};gptq:b=2,g=16", attn_rules(&attn3))),
     ];
-    let mut hetero: Vec<ParetoPoint> = Vec::new();
-    let mut hetero_rows: Vec<(String, f64)> = Vec::new();
-    for (label, policy_str) in &hetero_policies {
-        let policy = LayerPolicy::parse(policy_str)?;
-        let (mut q, report) = ws.quantize_policy(&base, &policy)?;
-        // Sanity: a heterogeneous run really did mix methods/widths.
-        let first = &report.layers[0];
-        anyhow::ensure!(
-            report
-                .layers
-                .iter()
-                .any(|l| l.method != first.method || (l.avg_bits - first.avg_bits).abs() > 1e-9),
-            "policy '{policy_str}' produced a uniform run"
-        );
-        hetero.push(ParetoPoint {
-            label: (*label).to_string(),
-            size_bytes: q.weight_bytes() as u64,
-            ppl: ws.eval_ppl(&mut q),
-        });
-        hetero_rows.push((policy_str.clone(), report.avg_bits));
-    }
+    let (hetero, hetero_rows) = hand_policy_points(ws, &base, &hetero_policies)?;
 
     // Both sections report against the *combined* point set, so a uniform
     // point dominated by a heterogeneous one is marked off-frontier too.
@@ -294,6 +331,116 @@ pub fn f8_hetero_pareto(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         t.row(vec![
             p.label.clone(),
             policy.clone(),
+            f2(*bits),
+            p.size_bytes.to_string(),
+            f2(p.ppl),
+            if *on { "yes".into() } else { "no".into() },
+        ]);
+    }
+    println!("{}", ascii_plot(&all, 64, 16));
+    println!(
+        "combined frontier: {}",
+        frontier(&all).iter().map(|p| p.label.as_str()).collect::<Vec<_>>().join(" -> ")
+    );
+    Ok(vec![t])
+}
+
+/// Figure 9: automatic rate-distortion bit allocation (`--auto-bits`)
+/// against figure f8's hand-written heterogeneous policies and the uniform
+/// AQLM frontier. Each auto point probes per-layer sensitivities on the
+/// calibration slice, solves the allocation for its target budget, and
+/// runs the emitted policy through the ordinary pipeline — the printed
+/// policy strings reproduce every point via `aqlm quantize --policy`.
+pub fn f9_auto_vs_hand(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Figure 9: auto bit allocation vs hand-written policies (nano)",
+        &["Point", "Allocation", "Avg bits", "Size (bytes)", "Wiki2 PPL", "On combined frontier?"],
+    );
+    let mut base = ws.base_model("nano")?;
+    let auto_targets = [2.0, 2.5, 3.0];
+
+    // Baseline set: the uniform sweep and f8's hand-written mixes — the
+    // frontier the allocator has to meet or extend (same construction as
+    // f8, via the shared helpers).
+    let mut baseline: Vec<ParetoPoint> = vec![ParetoPoint {
+        label: "fp32".into(),
+        size_bytes: base.weight_bytes() as u64,
+        ppl: ws.eval_ppl(&mut base),
+    }];
+    let mut baseline_rows: Vec<(String, f64)> = vec![("fp32".into(), 16.0)];
+    let (upoints, urows) = uniform_aqlm_points(ws, &base, &[2.0, 2.5, 3.0, 4.0], "uniform-")?;
+    baseline.extend(upoints);
+    baseline_rows.extend(urows);
+    let attn3 = aqlm_spec(ws, &base.cfg, 3.0).0;
+    let attn2 = aqlm_spec(ws, &base.cfg, 2.0).0;
+    let hand = [
+        ("hand-attn3b+mlp2b", format!("{};{attn2}", attn_rules(&attn3))),
+        ("hand-attn2b+mlp3b", format!("{};{attn3}", attn_rules(&attn2))),
+    ];
+    let (hpoints, hrows) = hand_policy_points(ws, &base, &hand)?;
+    baseline.extend(hpoints);
+    baseline_rows.extend(hrows);
+
+    // Auto points: one sensitivity probe over the union of the per-target
+    // candidate grids (nearby targets share most shapes, so probing per
+    // target would mostly recompute the same quantizations), then the
+    // cheap solver + a pipeline run per target. The probe never mutates
+    // the model, so it runs on `base` directly.
+    let ft = profile_ft_steps(ws);
+    let n = ws.profile.calib_seqs;
+    let calib = ws.calib_tokens(n);
+    let mut candidates: Vec<Candidate> = Vec::new();
+    for target in auto_targets {
+        for c in default_candidates(&base.cfg, target, ft, ws.profile.fast) {
+            if !candidates.contains(&c) {
+                candidates.push(c);
+            }
+        }
+    }
+    let probe_specs: Vec<MethodSpec> = candidates.iter().map(|c| c.probe).collect();
+    let mut prng = Rng::seed_from_u64(ws.profile.seed ^ 0xa110c);
+    let table =
+        probe_layer_sensitivity(&mut base, &calib, n, ws.profile.seq, &probe_specs, &mut prng)?;
+    let mut auto_points: Vec<ParetoPoint> = Vec::new();
+    let mut auto_rows: Vec<(String, f64)> = Vec::new();
+    for target in auto_targets {
+        let allocation = allocate(&table, target)?;
+        let policy = emit_policy(&table, &candidates, &allocation);
+        let (mut q, report) = ws.quantize_policy(&base, &policy)?;
+        // The probe's budget prediction is exact: storage depends only on
+        // the candidate shapes, which probe and pipeline runs share.
+        anyhow::ensure!(
+            (report.avg_bits - allocation.avg_bits).abs() < 1e-6,
+            "auto@{target}: predicted {} bits, pipeline measured {}",
+            allocation.avg_bits,
+            report.avg_bits
+        );
+        println!("auto@{target}: {policy}");
+        auto_points.push(ParetoPoint {
+            label: format!("auto@{target}"),
+            size_bytes: q.weight_bytes() as u64,
+            ppl: ws.eval_ppl(&mut q),
+        });
+        auto_rows.push((allocation_summary(&candidates, &allocation), report.avg_bits));
+    }
+
+    let mut all = baseline.clone();
+    all.extend(auto_points.iter().cloned());
+    let on_frontier = on_combined_frontier(&baseline, &auto_points);
+    for (p, (alloc_desc, bits)) in baseline.iter().zip(&baseline_rows) {
+        t.row(vec![
+            p.label.clone(),
+            alloc_desc.clone(),
+            f2(*bits),
+            p.size_bytes.to_string(),
+            f2(p.ppl),
+            if is_pareto_optimal(p, &all) { "yes".into() } else { "no".into() },
+        ]);
+    }
+    for ((p, (alloc_desc, bits)), on) in auto_points.iter().zip(&auto_rows).zip(&on_frontier) {
+        t.row(vec![
+            p.label.clone(),
+            alloc_desc.clone(),
             f2(*bits),
             p.size_bytes.to_string(),
             f2(p.ppl),

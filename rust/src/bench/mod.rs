@@ -10,8 +10,9 @@ pub mod kernels;
 pub use workspace::{Profile, Workspace};
 
 /// Run one experiment by id ("t1".."t16", batch sweeps "t5b"/"t14b",
-/// "f1", "f4", "f6", "f7", plus "f8" — the heterogeneous-policy Pareto
-/// sweep). Results are printed, and saved under `results/`.
+/// "f1", "f4", "f6", "f7", "f8" — the heterogeneous-policy Pareto sweep —
+/// plus "f9", automatic bit allocation vs the hand-written policies).
+/// Results are printed, and saved under `results/`.
 pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
     let tables = match id {
         "t1" => tables::t1_low_bit(ws)?,
@@ -37,6 +38,7 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
         "f6" => figures::f6_model_optimality(ws)?,
         "f7" => figures::f7_codebook_analysis(ws)?,
         "f8" => figures::f8_hetero_pareto(ws)?,
+        "f9" => figures::f9_auto_vs_hand(ws)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };
     for t in &tables {
@@ -50,7 +52,7 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
 /// All experiment ids in paper order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "t5b", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13",
-    "t14", "t14b", "t15", "t16", "f1", "f4", "f6", "f7", "f8",
+    "t14", "t14b", "t15", "t16", "f1", "f4", "f6", "f7", "f8", "f9",
 ];
 
 fn slug(s: &str) -> String {

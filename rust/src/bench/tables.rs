@@ -29,11 +29,21 @@ pub fn aqlm_spec(ws: &Workspace, cfg: &ModelConfig, target_bits: f64) -> (Method
     (aqlm_spec_with_shape(ws, shape), shape)
 }
 
+/// Profile-scaled block-FT budget shared by every AQLM point (tables,
+/// figures, and the f9 auto-allocator's emitted specs).
+pub fn profile_ft_steps(ws: &Workspace) -> usize {
+    if ws.profile.fast {
+        15
+    } else {
+        40
+    }
+}
+
 /// Profile-scaled AQLM spec (`aqlm:MxB,g=G,ft=N[,fast]`) for a fixed shape.
 pub fn aqlm_spec_with_shape(ws: &Workspace, shape: AqlmShape) -> MethodSpec {
     MethodSpec::Aqlm(AqlmSpec {
         shape: ShapeChoice::Fixed(shape),
-        ft_steps: if ws.profile.fast { 15 } else { 40 },
+        ft_steps: profile_ft_steps(ws),
         scope: FtScope::Full,
         fast: ws.profile.fast,
     })

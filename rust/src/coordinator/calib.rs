@@ -17,11 +17,14 @@ use crate::tensor::Tensor;
 /// Calibration statistics for one block: per-linear CalibData (keyed by the
 /// names from [`Block::linears_mut`]) plus the block's FP outputs.
 pub struct BlockCalib {
+    /// `(layer name, statistics)` for every linear of the block.
     pub per_linear: Vec<(String, CalibData)>,
+    /// The block's outputs on the calibration batch, before quantization.
     pub y_block: Tensor,
 }
 
 impl BlockCalib {
+    /// Statistics for one linear by its in-block name (`wq`, `e0.wg`, …).
     pub fn calib_for(&self, name: &str) -> Option<&CalibData> {
         self.per_linear.iter().find(|(n, _)| n == name).map(|(_, c)| c)
     }

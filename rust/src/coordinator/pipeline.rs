@@ -11,8 +11,8 @@
 //! blocks calibrate on what they will actually see.
 //!
 //! The pipeline itself knows nothing about individual methods: specs
-//! resolve to trait objects through the [`spec::METHODS`]
-//! (crate::quant::spec::METHODS) registry, and each layer's true storage
+//! resolve to trait objects through the
+//! [`METHODS`](crate::quant::spec::METHODS) registry, and each layer's true storage
 //! cost is recorded in the model's per-layer bits table so dense-backed
 //! baselines (SpQR-lite / QuIP-lite) keep honest size accounting across
 //! `save`/`load`.
@@ -20,6 +20,7 @@
 use super::calib::capture_block;
 use crate::nn::config::ModelConfig;
 use crate::nn::model::Model;
+use crate::quant::alloc::{LayerOption, LayerSensitivity};
 use crate::quant::aqlm::blockft::{finetune_block, BlockFtConfig};
 use crate::quant::spec::{build_quantizer, LayerPolicy, MethodSpec};
 use crate::quant::{relative_layer_error, CalibData, QuantReport, Quantizer};
@@ -28,12 +29,14 @@ use crate::util::timing::Stopwatch;
 
 /// Whole-model quantization outcome.
 pub struct PipelineReport {
+    /// One record per quantized linear, in model order.
     pub layers: Vec<QuantReport>,
     /// Parameter-weighted average bits over all quantized layers
     /// (method-specific accounting, App. H style).
     pub avg_bits: f64,
     /// (before, after) block-FT MSE per block (empty when no FT ran).
     pub block_ft: Vec<(f64, f64)>,
+    /// Total wall-clock of the pipeline run.
     pub seconds: f64,
 }
 
@@ -150,6 +153,65 @@ pub fn quantize_model_spec(
     quantize_model(model, calib_tokens, batch, seq, &LayerPolicy::uniform(*spec), rng)
 }
 
+/// Sensitivity probe for the rate-distortion allocator
+/// ([`alloc`](crate::quant::alloc), the `--auto-bits` engine): quantize
+/// every linear layer at each of `specs` against real calibration
+/// activations and record the achieved bits and relative output error per
+/// `(layer, spec)` pair — a dry-run of [`quantize_model`] over a grid of
+/// candidates that **never mutates the model**. Activations propagate
+/// through the original FP blocks, so every candidate of every layer is
+/// measured against identical inputs (the probe compares candidates; the
+/// real pipeline run afterwards applies Algorithm 1's quantized
+/// propagation).
+///
+/// Rows come back in model order with the same `b{i}.{name}` layer names
+/// the policy grammar uses; option order matches `specs`. Each layer/spec
+/// quantization forks the rng exactly like [`quantize_model`], so a
+/// candidate's probe matches the pipeline's later behavior as closely as
+/// the shared seed discipline allows.
+pub fn probe_layer_sensitivity(
+    model: &mut Model,
+    calib_tokens: &[u32],
+    batch: usize,
+    seq: usize,
+    specs: &[MethodSpec],
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<LayerSensitivity>> {
+    assert_eq!(calib_tokens.len(), batch * seq);
+    let cfg: ModelConfig = model.cfg.clone();
+    let rope = model.rope.clone();
+    let quantizers: Vec<Box<dyn Quantizer>> = specs
+        .iter()
+        .map(|spec| build_quantizer(spec, Some(&cfg)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let mut x = model.embed_tokens(calib_tokens);
+    let mut table: Vec<LayerSensitivity> = Vec::new();
+    for (bi, block) in model.blocks.iter_mut().enumerate() {
+        let calib = capture_block(block, &cfg, batch, seq, &rope, &x);
+        for (name, lin) in block.linears() {
+            let full = format!("b{bi}.{name}");
+            let w = lin.weight_owned();
+            let c: &CalibData = calib
+                .calib_for(&name)
+                .ok_or_else(|| anyhow::anyhow!("no calibration for layer {full}"))?;
+            let mut options = Vec::with_capacity(quantizers.len());
+            for quantizer in &quantizers {
+                let mut lrng = rng.fork(bi as u64 * 101 + hash_name(&name));
+                let ql = quantizer.quantize(&w, c, &mut lrng)?;
+                let rel_error = relative_layer_error(&w, &ql.linear.weight_owned(), c);
+                options.push(LayerOption { avg_bits: ql.avg_bits, rel_error });
+            }
+            table.push(LayerSensitivity { layer: full, params: w.len(), options });
+        }
+        // Unlike Alg. 1 line 21, propagate through the *unquantized* block:
+        // the probe leaves the model untouched and measures every candidate
+        // against the same FP activations.
+        let (y, _) = block.forward(&x, &cfg, batch, seq, &rope, false);
+        x = y;
+    }
+    Ok(table)
+}
+
 fn hash_name(name: &str) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in name.bytes() {
@@ -248,6 +310,37 @@ mod tests {
         for l in &report.layers {
             assert!(l.rel_error < 1e-3, "{}: rel error {}", l.layer, l.rel_error);
             assert!(l.seconds >= 0.0);
+        }
+    }
+
+    #[test]
+    fn probe_measures_every_layer_without_mutating_the_model() {
+        let (mut model, _, calib) = mini_setup();
+        let before = model.clone();
+        let mut rng = Rng::seed_from_u64(9);
+        // Candidate grid: coarse vs near-lossless scalar quantization.
+        let specs = [spec("rtn:b=2,g=16"), spec("rtn:b=8,g=16")];
+        let table =
+            probe_layer_sensitivity(&mut model, &calib, 4, 16, &specs, &mut rng).unwrap();
+        assert_eq!(table.len(), 2 * 7);
+        for row in &table {
+            assert_eq!(row.options.len(), specs.len(), "{}", row.layer);
+            assert!(row.params > 0);
+            // 2-bit stores less and errs more than 8-bit, on every layer.
+            assert!(row.options[0].avg_bits < row.options[1].avg_bits, "{}", row.layer);
+            assert!(
+                row.options[1].rel_error <= row.options[0].rel_error,
+                "{}: 8-bit worse than 2-bit",
+                row.layer
+            );
+        }
+        // The probe is a dry run: weights untouched, nothing quantized.
+        for (b_after, b_before) in model.blocks.iter_mut().zip(&before.blocks) {
+            let after = b_after.linears_mut();
+            for ((name, lin), (_, lin0)) in after.into_iter().zip(b_before.linears()) {
+                assert!(!lin.is_quantized(), "{name}");
+                assert!(lin.weight_owned().allclose(&lin0.weight_owned(), 0.0), "{name}");
+            }
         }
     }
 

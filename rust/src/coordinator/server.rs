@@ -38,25 +38,33 @@ use std::time::Instant;
 
 /// A generation request.
 pub struct GenRequest {
+    /// Prompt token ids (truncated to the trailing context window).
     pub prompt: Vec<u32>,
+    /// Maximum tokens to generate.
     pub max_new: usize,
+    /// Sampling temperature (0 = greedy).
     pub temperature: f32,
+    /// Channel the response is delivered on.
     pub respond: Sender<GenResponse>,
 }
 
 /// Completed generation.
 #[derive(Clone, Debug)]
 pub struct GenResponse {
+    /// Served prompt window followed by the generated tokens.
     pub tokens: Vec<u32>,
     /// Queue + compute time.
     pub latency_s: f64,
+    /// Number of tokens generated (the tail of `tokens`).
     pub generated: usize,
 }
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
+    /// Maximum concurrently decoded sequences.
     pub max_batch: usize,
+    /// Sampling rng seed.
     pub seed: u64,
 }
 
@@ -69,13 +77,18 @@ impl Default for ServerConfig {
 /// Aggregate statistics, returned on shutdown.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
+    /// Requests served to completion.
     pub requests: usize,
+    /// Total tokens generated across all requests.
     pub tokens_generated: usize,
+    /// Sum of per-request latencies.
     pub total_latency_s: f64,
+    /// Wall-clock from server start to shutdown.
     pub wall_s: f64,
 }
 
 impl ServerStats {
+    /// Aggregate generation throughput over the server's lifetime.
     pub fn tokens_per_second(&self) -> f64 {
         if self.wall_s > 0.0 {
             self.tokens_generated as f64 / self.wall_s
@@ -84,6 +97,7 @@ impl ServerStats {
         }
     }
 
+    /// Mean request latency (queue + compute).
     pub fn mean_latency_s(&self) -> f64 {
         if self.requests > 0 {
             self.total_latency_s / self.requests as f64

@@ -12,10 +12,15 @@ use std::path::{Path, PathBuf};
 /// Training hyperparameters.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
+    /// Optimizer steps.
     pub steps: usize,
+    /// Sequences per step.
     pub batch: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Progress-log cadence (in steps) when verbose.
     pub log_every: usize,
 }
 

@@ -7,8 +7,11 @@
 /// One measured configuration.
 #[derive(Clone, Debug)]
 pub struct ParetoPoint {
+    /// Point name as it appears in tables and plots.
     pub label: String,
+    /// Compressed weight size.
     pub size_bytes: u64,
+    /// Wiki2 perplexity.
     pub ppl: f64,
 }
 

@@ -8,12 +8,16 @@ use std::path::Path;
 /// A simple column-aligned table.
 #[derive(Clone, Debug)]
 pub struct Table {
+    /// Table caption (the paper artifact it reproduces).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows, each as wide as `headers`.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -22,6 +26,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
@@ -82,15 +87,17 @@ impl Table {
     }
 }
 
-/// Format helpers used across the bench harness.
+/// Format helper: two decimal places (PPL columns).
 pub fn f2(v: f64) -> String {
     format!("{v:.2}")
 }
 
+/// Format helper: three decimal places (bits columns).
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
 }
 
+/// Format helper: accuracy percentages.
 pub fn pct(v: f64) -> String {
     format!("{v:.2}")
 }

@@ -59,12 +59,16 @@ pub fn continuation_logprob(model: &mut Model, ctx: &[u32], cont: &[u32]) -> f64
     sequence_logprob(&rows, cont)
 }
 
-/// Evaluate the 5-task standard suite + average (the paper's main columns).
+/// Result of a task-suite evaluation (the paper's main accuracy columns).
 pub struct SuiteResult {
+    /// `(task, accuracy %)` per evaluated task.
     pub per_task: Vec<(Task, f64)>,
+    /// Unweighted mean accuracy (the "Avg↑" column).
     pub average: f64,
 }
 
+/// Evaluate a task suite: accuracy per task plus the average, with a
+/// deterministic per-task instance stream derived from `seed`.
 pub fn eval_suite(
     model: &mut Model,
     tok: &Tokenizer,

@@ -4,22 +4,29 @@
 //!   train      train a base model preset on TinyLang and save a checkpoint
 //!   quantize   quantize a checkpoint; `--method <spec>` takes the registry
 //!              grammar (`aqlm:2x8,g=8,ft=30`, `gptq:b=4,g=16,tuned`,
-//!              `rtn:b=4,g=32`, `spqr:b=3,g=16,out=0.01`, `quip:b=2,seed=9`)
-//!              and `--policy` routes layers to different specs
+//!              `rtn:b=4,g=32`, `spqr:b=3,g=16,out=0.01`, `quip:b=2,seed=9`),
+//!              `--policy` routes layers to different specs
 //!              (`'*.wq=aqlm:2x8,g=8,ft=30;rtn:b=2,g=32'`) for
-//!              mixed-precision models
+//!              mixed-precision models, and `--auto-bits <target>` solves
+//!              the per-layer assignment automatically (rate-distortion
+//!              allocation over measured layer sensitivities) and prints
+//!              the winning policy string to stdout
 //!   eval       perplexity + zero-shot evaluation of a checkpoint
 //!   generate   sample text from a checkpoint
 //!   serve      demo of the continuous-batching generation server
-//!   table      regenerate one paper table/figure (t1..t16, f1, f4, f6-f8)
+//!   table      regenerate one paper table/figure (t1..t16, f1, f4, f6-f9)
 //!   tables     regenerate all of them
 //!   list       list experiment ids
+//!
+//! The full `--method`/`--policy` grammar is documented in
+//! `docs/spec-grammar.md`.
 
 use aqlm::bench::{self, Profile, Workspace};
 use aqlm::coordinator::train::{train_native, TrainConfig};
 use aqlm::data::dataset::{DataBundle, DataSizes};
 use aqlm::nn::config::ModelConfig;
 use aqlm::nn::model::Model;
+use aqlm::quant::alloc;
 use aqlm::quant::spec::{known_methods, LayerPolicy, MethodSpec};
 use aqlm::util::cli::Args;
 use aqlm::util::rng::Rng;
@@ -127,22 +134,91 @@ fn cli_spec(args: &Args) -> anyhow::Result<MethodSpec> {
     MethodSpec::parse(&s)
 }
 
+/// `--auto-bits <target>`: probe per-layer sensitivities on the calibration
+/// slice, solve the rate-distortion allocation, print the winning policy
+/// (stdout — the machine-readable product, ready for `--policy`) and the
+/// per-layer table (stderr), and return the policy for the pipeline run.
+fn auto_policy(
+    args: &Args,
+    model: &mut Model,
+    calib: &[u32],
+    n_seqs: usize,
+    seq: usize,
+    target: f64,
+) -> anyhow::Result<LayerPolicy> {
+    let ft = if args.flag("no-ft") { 0 } else { args.usize_or("ft-steps", 30) };
+    let candidates = alloc::default_candidates(&model.cfg, target, ft, args.flag("fast"));
+    eprintln!(
+        "probing layer sensitivities against {} candidates: {}",
+        candidates.len(),
+        candidates.iter().map(|c| c.probe.to_string()).collect::<Vec<_>>().join(", ")
+    );
+    let mut prng = Rng::seed_from_u64(args.u64_or("seed", 42) ^ 0xa110c);
+    let auto = alloc::auto_allocate(model, calib, n_seqs, seq, target, &candidates, &mut prng)?;
+    for (row, &c) in auto.table.iter().zip(&auto.allocation.choice) {
+        // Bound to a String first: width specifiers only align via `str`'s
+        // padded Display, not MethodSpec's.
+        let spec_str = candidates[c].emit.to_string();
+        eprintln!(
+            "  {:<12} -> {spec_str:<26} {:>6.3} bits  rel_err {:.3e}",
+            row.layer,
+            row.bits(c),
+            row.options[c].rel_error
+        );
+    }
+    eprintln!(
+        "auto allocation: {} (predicted {:.3} avg bits for target {target})",
+        auto.summary(),
+        auto.avg_bits()
+    );
+    if (auto.avg_bits() - target).abs() > 0.1 {
+        eprintln!(
+            "warning: allocation lands {:.3} bits below the target — the candidate \
+             grid offers no finer mix at this budget",
+            target - auto.avg_bits()
+        );
+    }
+    println!("{}", auto.policy);
+    Ok(auto.policy)
+}
+
 fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
     let ckpt = PathBuf::from(args.require("ckpt")?);
     let out = PathBuf::from(args.str_or("out", &format!("{}.q", ckpt.display())));
-    let mut model = Model::load(&ckpt)?;
-    let policy = match args.get("policy") {
-        Some(p) => {
+    // Validate the flag configuration up front: a typo'd spec or a flag
+    // conflict must fail before the (expensive) corpus generation below.
+    anyhow::ensure!(
+        !args.flag("auto-bits"),
+        "--auto-bits needs a target bit width (e.g. --auto-bits 2.5)"
+    );
+    let auto_target: Option<f64> = match (args.get("auto-bits"), args.get("policy")) {
+        (Some(t), policy_arg) => {
+            anyhow::ensure!(
+                policy_arg.is_none() && args.get("method").is_none(),
+                "--auto-bits conflicts with --method/--policy: it solves the \
+                 per-layer assignment itself (rerun the printed policy with \
+                 --policy to reproduce a solved allocation)"
+            );
+            let target: f64 =
+                t.parse().map_err(|_| anyhow::anyhow!("bad --auto-bits target '{t}'"))?;
+            Some(target)
+        }
+        (None, _) => None,
+    };
+    let parsed_policy: Option<LayerPolicy> = match (auto_target, args.get("policy")) {
+        (Some(_), _) => None, // solved from the sensitivity probe below
+        (None, Some(p)) => {
             anyhow::ensure!(
                 args.get("method").is_none(),
                 "--method and --policy conflict; fold the method into the policy \
                  (a pattern-less entry is the default, e.g. --policy '*.wq=…;{}')",
                 args.get("method").unwrap_or("rtn:b=4,g=32")
             );
-            LayerPolicy::parse(p)?
+            Some(LayerPolicy::parse(p)?)
         }
-        None => LayerPolicy::uniform(cli_spec(args)?),
+        (None, None) => Some(LayerPolicy::uniform(cli_spec(args)?)),
     };
+    let mut model = Model::load(&ckpt)?;
     let b = bundle(args);
     let seq = args.usize_or("seq", 64);
     let n_seqs = args.usize_or("calib-seqs", 8);
@@ -152,6 +228,10 @@ fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
         seq_len: seq,
     }
     .sample_batch(n_seqs, &mut rng);
+    let policy = match auto_target {
+        Some(target) => auto_policy(args, &mut model, &calib, n_seqs, seq, target)?,
+        None => parsed_policy.expect("exactly one of auto_target/parsed_policy is set"),
+    };
     eprintln!("quantizing {} with policy {policy}", ckpt.display());
     let report = aqlm::coordinator::pipeline::quantize_model(
         &mut model, &calib, n_seqs, seq, &policy, &mut rng,
@@ -244,7 +324,7 @@ fn cmd_table(args: &Args) -> anyhow::Result<()> {
         .get("id")
         .map(|s| s.to_string())
         .or_else(|| args.positional.first().cloned())
-        .ok_or_else(|| anyhow::anyhow!("need --id <t1..t16|f1|f4|f6|f7|f8> or a positional id"))?;
+        .ok_or_else(|| anyhow::anyhow!("need --id <t1..t16|f1|f4|f6|f7|f8|f9> or a positional id"))?;
     let mut ws = Workspace::new(profile(args));
     bench::run(&id, &mut ws)
 }

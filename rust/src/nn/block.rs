@@ -56,7 +56,7 @@ pub struct BlockCache {
     pub q: Tensor,
     pub k: Tensor,
     pub v: Tensor,
-    /// Attention probabilities [B][H][S][S] flattened.
+    /// Attention probabilities `[B][H][S][S]` flattened.
     pub probs: Vec<f32>,
     /// Concatenated head outputs [N, H·dh] (input to wo).
     pub attn_concat: Tensor,
@@ -449,7 +449,7 @@ impl Block {
     }
 
     /// Single-token decode step with KV cache (generation hot path).
-    /// `x` is the residual stream [d]; returns the block output [d].
+    /// `x` is the residual stream `[d]`; returns the block output `[d]`.
     pub fn decode_step(
         &mut self,
         x: &[f32],

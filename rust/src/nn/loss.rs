@@ -4,8 +4,8 @@
 use crate::tensor::ops::log_softmax;
 use crate::tensor::Tensor;
 
-/// Cross-entropy over logits [n, vocab] against target ids [n].
-/// Returns (mean loss in nats, dlogits [n, vocab] of the MEAN loss).
+/// Cross-entropy over logits `[n, vocab]` against target ids `[n]`.
+/// Returns (mean loss in nats, dlogits `[n, vocab]` of the MEAN loss).
 pub fn cross_entropy(logits: &Tensor, targets: &[u32]) -> (f64, Tensor) {
     let (n, v) = (logits.rows(), logits.cols());
     assert_eq!(targets.len(), n);

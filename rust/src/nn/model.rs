@@ -214,7 +214,7 @@ impl Model {
         &prompt[prompt.len().saturating_sub(window)..]
     }
 
-    /// Decode one token through the whole model; returns logits [vocab].
+    /// Decode one token through the whole model; returns logits `[vocab]`.
     pub fn decode_token(
         &mut self,
         token: u32,

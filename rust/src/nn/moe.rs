@@ -22,7 +22,7 @@ pub struct MoeLayer {
 
 /// Cached routing decisions and per-expert activations.
 pub struct MoeCache {
-    /// Selected expert ids per token, [N][k].
+    /// Selected expert ids per token, `[N][k]`.
     pub sel: Vec<Vec<usize>>,
     /// Routing weights per token (softmax over the k selected logits).
     pub wsel: Vec<Vec<f32>>,

@@ -1,0 +1,488 @@
+//! Automatic rate-distortion bit allocation — the `--auto-bits` engine.
+//!
+//! Hand-written [`LayerPolicy`] strings (PR 2)
+//! can express any per-layer assignment, but finding a *good* one by hand
+//! means guessing which layers tolerate narrow codes. This module solves
+//! the assignment instead, Radio-style, as a rate-distortion problem:
+//!
+//! 1. **Probe** (in
+//!    [`probe_layer_sensitivity`](crate::coordinator::pipeline::probe_layer_sensitivity)):
+//!    quantize
+//!    every linear layer at each spec of a small candidate grid against
+//!    real calibration activations and record, per `(layer, candidate)`,
+//!    the achieved average bits and the relative layer output error. The
+//!    distortion proxy is `rel_error × params` — exactly the quantity the
+//!    pipeline's [`QuantReport`](super::QuantReport) rows expose, so a
+//!    probe is a dry-run of the pipeline that never mutates the model.
+//! 2. **Allocate** ([`allocate`]): minimize total distortion subject to a
+//!    parameter-weighted average bit budget, via a Lagrangian sweep: for a
+//!    multiplier `λ` each layer independently picks
+//!    `argmin_c rel_error(c) + λ·bits(c)`, and `λ` is bisected to the
+//!    smallest value whose assignment fits the budget (the widest feasible
+//!    assignment). Per-layer choices are monotone in `λ`, so a larger
+//!    budget never narrows any layer — see `monotone_in_budget` below.
+//! 3. **Emit** ([`emit_policy`]): the winning assignment becomes an
+//!    ordinary `LayerPolicy` with one exact-name rule per layer. Its
+//!    `Display` string round-trips through [`LayerPolicy::parse`]
+//!    (property-tested in
+//!    `rust/tests/proptests.rs`), plugs directly into `--policy`, and is
+//!    serialized into the checkpoint header like any other policy run.
+//!
+//! The one-call entry point is [`auto_allocate`]; the CLI surface is
+//! `aqlm quantize --ckpt m.ckpt --auto-bits 2.5`. Figure f9
+//! (`aqlm table f9`) lands auto-allocated points against the hand-written
+//! heterogeneous frontier of figure f8.
+//!
+//! ```no_run
+//! use aqlm::nn::config::ModelConfig;
+//! use aqlm::nn::model::Model;
+//! use aqlm::quant::alloc::{auto_allocate, default_candidates};
+//! use aqlm::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed_from_u64(0);
+//! let mut model = Model::init(&ModelConfig::nano(), &mut rng); // or a trained checkpoint
+//! let calib: Vec<u32> = vec![1; 8 * 64]; // real runs: calibration-split tokens
+//! let candidates = default_candidates(&model.cfg, 2.5, 30, false);
+//! let auto = auto_allocate(&mut model, &calib, 8, 64, 2.5, &candidates, &mut rng)?;
+//! println!("{}", auto.policy); // round-trippable: plug into --policy / quantize_model
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use super::spec::{AqlmSpec, LayerPolicy, MethodSpec, ShapeChoice};
+use crate::coordinator::shapes::choose_shape;
+use crate::nn::config::ModelConfig;
+use crate::nn::model::Model;
+use crate::quant::aqlm::blockft::FtScope;
+use crate::util::rng::Rng;
+
+/// One candidate spec of the allocator's grid: the cheap variant used to
+/// measure sensitivity and the full-strength variant emitted into the
+/// winning policy. Both share the storage format, so the probe's measured
+/// `avg_bits` is exact for the emitted spec; fine-tuning settings only
+/// affect probe cost and final quality.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    /// Spec quantized during the probe (no fine-tuning, fast settings).
+    pub probe: MethodSpec,
+    /// Spec written into the emitted policy (real fine-tuning settings).
+    pub emit: MethodSpec,
+}
+
+/// Measured response of one layer to one candidate spec.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerOption {
+    /// Achieved storage cost in bits per parameter (method accounting).
+    pub avg_bits: f64,
+    /// Relative layer output error `‖ΔWX‖²/‖WX‖²` at this candidate.
+    pub rel_error: f64,
+}
+
+/// Per-layer sensitivity row: the layer's full name (`b0.wq`), its
+/// parameter count, and one [`LayerOption`] per candidate (candidate
+/// order matches the grid handed to the probe).
+#[derive(Clone, Debug)]
+pub struct LayerSensitivity {
+    /// Full layer name as the policy grammar addresses it (`b0.wq`).
+    pub layer: String,
+    /// Number of weights in this layer (the rate/distortion weight).
+    pub params: usize,
+    /// Measured options, one per candidate.
+    pub options: Vec<LayerOption>,
+}
+
+impl LayerSensitivity {
+    /// Distortion proxy of candidate `c` on this layer: `rel_error × params`.
+    pub fn cost(&self, c: usize) -> f64 {
+        self.options[c].rel_error * self.params as f64
+    }
+
+    /// Achieved bits of candidate `c` on this layer.
+    pub fn bits(&self, c: usize) -> f64 {
+        self.options[c].avg_bits
+    }
+}
+
+/// A solved assignment: per-layer candidate indices (same order as the
+/// sensitivity table) plus its predicted budget and distortion.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Chosen candidate index per table row.
+    pub choice: Vec<usize>,
+    /// Parameter-weighted average bits of the assignment.
+    pub avg_bits: f64,
+    /// Total predicted distortion `Σ rel_error × params`.
+    pub cost: f64,
+    /// The Lagrange multiplier that produced the assignment.
+    pub lambda: f64,
+}
+
+/// Per-layer pick at a fixed multiplier: `argmin_c rel_error + λ·bits`
+/// (per-parameter form — dividing the Lagrangian by `params` leaves the
+/// argmin unchanged and keeps the scores well-scaled). Ties break to the
+/// narrower candidate, then to the earlier grid index, so the assignment
+/// is a deterministic, monotone function of `λ`.
+fn pick(row: &LayerSensitivity, lambda: f64) -> usize {
+    let score = |c: usize| row.options[c].rel_error + lambda * row.options[c].avg_bits;
+    let mut best = 0usize;
+    for c in 1..row.options.len() {
+        let (sc, sb) = (score(c), score(best));
+        if sc < sb || (sc == sb && row.bits(c) < row.bits(best)) {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Evaluate the full assignment at one multiplier.
+fn eval(table: &[LayerSensitivity], lambda: f64) -> Allocation {
+    let mut choice = Vec::with_capacity(table.len());
+    let (mut bits, mut cost, mut params) = (0.0f64, 0.0f64, 0usize);
+    for row in table {
+        let c = pick(row, lambda);
+        bits += row.bits(c) * row.params as f64;
+        cost += row.cost(c);
+        params += row.params;
+        choice.push(c);
+    }
+    Allocation { choice, avg_bits: bits / params.max(1) as f64, cost, lambda }
+}
+
+/// Solve the rate-distortion allocation: the minimum-distortion assignment
+/// whose parameter-weighted average bits do not exceed `target_bits`.
+///
+/// Errors when the table is degenerate or when even the narrowest
+/// assignment overshoots the target. Never overshoots: the returned
+/// [`Allocation::avg_bits`] is always ≤ `target_bits`; how close it gets
+/// from below depends on the candidate grid's granularity.
+pub fn allocate(table: &[LayerSensitivity], target_bits: f64) -> anyhow::Result<Allocation> {
+    anyhow::ensure!(!table.is_empty(), "empty sensitivity table");
+    anyhow::ensure!(
+        target_bits.is_finite() && target_bits > 0.0,
+        "target bits must be positive, got {target_bits}"
+    );
+    let mut min_bits = 0.0f64;
+    let mut params = 0usize;
+    for row in table {
+        anyhow::ensure!(!row.options.is_empty(), "layer {} has no candidates", row.layer);
+        anyhow::ensure!(row.params > 0, "layer {} has zero parameters", row.layer);
+        let narrowest = row.options.iter().map(|o| o.avg_bits).fold(f64::INFINITY, f64::min);
+        min_bits += narrowest * row.params as f64;
+        params += row.params;
+    }
+    // Strict comparison, matching the feasibility test of the λ search
+    // below (both sides sum the same values in the same order, so a
+    // target equal to the narrowest average is exactly representable).
+    let min_avg = min_bits / params as f64;
+    anyhow::ensure!(
+        min_avg <= target_bits,
+        "target {target_bits} bits infeasible: the narrowest candidate assignment \
+         already averages {min_avg:.3} bits — add narrower candidates or raise the target"
+    );
+    // λ = 0 is the unconstrained distortion minimum; if it fits, done.
+    let free = eval(table, 0.0);
+    if free.avg_bits <= target_bits {
+        return Ok(free);
+    }
+    // Double λ until the assignment fits the budget (the cap keeps scores
+    // finite; rel_error + 1e30·bits is already narrowest-per-layer).
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    let mut best = loop {
+        let a = eval(table, hi);
+        if a.avg_bits <= target_bits {
+            break a;
+        }
+        anyhow::ensure!(hi < 1e30, "allocator failed to find a feasible multiplier");
+        lo = hi;
+        hi *= 2.0;
+    };
+    // Bisect to the smallest feasible λ: the widest assignment within
+    // budget. `best` always holds the assignment at the feasible end.
+    for _ in 0..96 {
+        let mid = 0.5 * (lo + hi);
+        let a = eval(table, mid);
+        if a.avg_bits <= target_bits {
+            best = a;
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Ok(best)
+}
+
+/// Turn a solved assignment into a policy string: one exact-name rule per
+/// layer, in model order, carrying each layer's `emit` spec. The result
+/// parses back to an identical policy (`Display` ↔ `parse` closed under
+/// allocator output) and routes every layer, so it drops into `--policy`
+/// and the checkpoint header unchanged.
+pub fn emit_policy(
+    table: &[LayerSensitivity],
+    candidates: &[Candidate],
+    alloc: &Allocation,
+) -> LayerPolicy {
+    assert_eq!(table.len(), alloc.choice.len(), "table / allocation mismatch");
+    LayerPolicy {
+        rules: table
+            .iter()
+            .zip(&alloc.choice)
+            .map(|(row, &c)| (row.layer.clone(), candidates[c].emit))
+            .collect(),
+    }
+}
+
+/// Default candidate grid for a target: AQLM shapes chosen by
+/// [`choose_shape`] at half-bit offsets around the target (deduplicated —
+/// nearby targets often resolve to the same shape). Probes run with
+/// `ft=0,fast`; emitted specs carry `ft_steps`/`fast` as given.
+pub fn default_candidates(
+    cfg: &ModelConfig,
+    target_bits: f64,
+    ft_steps: usize,
+    fast: bool,
+) -> Vec<Candidate> {
+    let mut shapes = Vec::new();
+    for off in [-1.0, -0.5, 0.0, 0.5, 1.0] {
+        let shape = choose_shape(cfg, (target_bits + off).max(1.0), 8);
+        if !shapes.contains(&shape) {
+            shapes.push(shape);
+        }
+    }
+    shapes
+        .into_iter()
+        .map(|shape| Candidate {
+            probe: MethodSpec::Aqlm(AqlmSpec {
+                shape: ShapeChoice::Fixed(shape),
+                ft_steps: 0,
+                scope: FtScope::None,
+                fast: true,
+            }),
+            emit: MethodSpec::Aqlm(AqlmSpec {
+                shape: ShapeChoice::Fixed(shape),
+                ft_steps,
+                scope: FtScope::Full,
+                fast,
+            }),
+        })
+        .collect()
+}
+
+/// A probe + solve + emit result: everything `--auto-bits` prints.
+#[derive(Clone, Debug)]
+pub struct AutoAllocation {
+    /// The winning per-layer policy, ready for `--policy` / the pipeline.
+    pub policy: LayerPolicy,
+    /// The measured sensitivity table the solver ran on.
+    pub table: Vec<LayerSensitivity>,
+    /// The candidate grid (indices in `choice` refer to this).
+    pub candidates: Vec<Candidate>,
+    /// The solved assignment.
+    pub allocation: Allocation,
+}
+
+impl AutoAllocation {
+    /// Predicted parameter-weighted average bits of the emitted policy.
+    /// Exact for the pipeline run: storage cost depends only on each
+    /// candidate's shape, which probe and emit specs share.
+    pub fn avg_bits(&self) -> f64 {
+        self.allocation.avg_bits
+    }
+
+    /// Compact one-line description, e.g. `8×aqlm:1x6,g=4,ft=30 + 6×aqlm:2x8,g=8,ft=30`.
+    pub fn summary(&self) -> String {
+        allocation_summary(&self.candidates, &self.allocation)
+    }
+}
+
+/// Compact one-line description of an assignment: each distinct emitted
+/// spec with its layer count, e.g. `8×aqlm:1x6,g=4,ft=30 + 6×aqlm:2x8,g=8,ft=30`.
+pub fn allocation_summary(candidates: &[Candidate], alloc: &Allocation) -> String {
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for &c in &alloc.choice {
+        let s = candidates[c].emit.to_string();
+        match counts.iter_mut().find(|(spec, _)| *spec == s) {
+            Some((_, n)) => *n += 1,
+            None => counts.push((s, 1)),
+        }
+    }
+    counts.iter().map(|(spec, n)| format!("{n}×{spec}")).collect::<Vec<_>>().join(" + ")
+}
+
+/// Probe `model`'s layers on the candidate grid, solve the allocation for
+/// `target_bits`, and emit the winning policy. The model's weights are
+/// unchanged — quantize afterwards with the returned policy (the CLI does
+/// exactly that). `calib_tokens` is `batch × seq` token ids.
+pub fn auto_allocate(
+    model: &mut Model,
+    calib_tokens: &[u32],
+    batch: usize,
+    seq: usize,
+    target_bits: f64,
+    candidates: &[Candidate],
+    rng: &mut Rng,
+) -> anyhow::Result<AutoAllocation> {
+    anyhow::ensure!(!candidates.is_empty(), "empty candidate grid");
+    let probe_specs: Vec<MethodSpec> = candidates.iter().map(|c| c.probe).collect();
+    let table = crate::coordinator::pipeline::probe_layer_sensitivity(
+        model,
+        calib_tokens,
+        batch,
+        seq,
+        &probe_specs,
+        rng,
+    )?;
+    let allocation = allocate(&table, target_bits)?;
+    let policy = emit_policy(&table, candidates, &allocation);
+    Ok(AutoAllocation { policy, table, candidates: candidates.to_vec(), allocation })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic table: each layer offers (bits, rel_error) pairs with
+    /// error decreasing in bits, scaled by a per-layer sensitivity.
+    fn synth_table(sensitivities: &[(usize, f64)], grid: &[f64]) -> Vec<LayerSensitivity> {
+        sensitivities
+            .iter()
+            .enumerate()
+            .map(|(i, &(params, sens))| LayerSensitivity {
+                layer: format!("b{}.w{}", i / 7, i % 7),
+                params,
+                options: grid
+                    .iter()
+                    .map(|&b| LayerOption { avg_bits: b, rel_error: sens / (b * b) })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    fn avg_bits_of(table: &[LayerSensitivity], alloc: &Allocation) -> f64 {
+        let mut bits = 0.0;
+        let mut params = 0usize;
+        for (row, &c) in table.iter().zip(&alloc.choice) {
+            bits += row.bits(c) * row.params as f64;
+            params += row.params;
+        }
+        bits / params as f64
+    }
+
+    #[test]
+    fn hits_target_from_below_within_grid_granularity() {
+        let grid = [1.5, 2.0, 2.5, 3.0, 4.0];
+        let sens: Vec<(usize, f64)> =
+            (0..14).map(|i| (1000 + 300 * (i % 5), 0.02 + 0.01 * i as f64)).collect();
+        let table = synth_table(&sens, &grid);
+        for target in [1.6, 2.0, 2.5, 3.1, 4.0] {
+            let a = allocate(&table, target).unwrap();
+            assert!(a.avg_bits <= target + 1e-9, "target {target}: got {}", a.avg_bits);
+            // Within one grid step of the target (many layers → fine steps).
+            assert!(a.avg_bits > target - 0.55, "target {target}: only {}", a.avg_bits);
+            assert!((a.avg_bits - avg_bits_of(&table, &a)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn unconstrained_budget_takes_the_distortion_minimum() {
+        let table = synth_table(&[(100, 0.1), (200, 0.3)], &[2.0, 3.0, 4.0]);
+        // Error decreases in bits, so with budget ≥ max bits every layer
+        // picks the widest candidate.
+        let a = allocate(&table, 4.0).unwrap();
+        assert!(a.choice.iter().all(|&c| c == 2), "{:?}", a.choice);
+        assert!((a.avg_bits - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sensitive_layers_get_more_bits() {
+        // Equal sizes, one layer 100× more sensitive: under a budget that
+        // cannot afford uniform-wide, the sensitive layer must stay wider.
+        let grid = [2.0, 4.0];
+        let table = synth_table(&[(1000, 0.01), (1000, 1.0)], &grid);
+        let a = allocate(&table, 3.0).unwrap();
+        assert_eq!(a.choice, vec![0, 1], "sensitive layer should take the wide slot");
+    }
+
+    #[test]
+    fn monotone_in_budget() {
+        // Larger budget ⇒ no layer narrows (the Lagrangian guarantee).
+        let grid = [1.5, 2.0, 2.5, 3.0, 4.0];
+        let sens: Vec<(usize, f64)> =
+            (0..21).map(|i| (500 + 211 * (i % 7), 0.005 * ((i * 13) % 29 + 1) as f64)).collect();
+        let table = synth_table(&sens, &grid);
+        let mut prev: Option<Allocation> = None;
+        for target in [1.6, 1.8, 2.0, 2.3, 2.6, 3.0, 3.5, 4.0] {
+            let a = allocate(&table, target).unwrap();
+            if let Some(p) = &prev {
+                for (j, (&c_new, &c_old)) in a.choice.iter().zip(&p.choice).enumerate() {
+                    assert!(
+                        table[j].bits(c_new) >= table[j].bits(c_old) - 1e-12,
+                        "layer {} narrowed {} -> {} when budget rose to {target}",
+                        table[j].layer,
+                        table[j].bits(c_old),
+                        table[j].bits(c_new)
+                    );
+                }
+            }
+            prev = Some(a);
+        }
+    }
+
+    #[test]
+    fn infeasible_and_degenerate_inputs_rejected() {
+        let table = synth_table(&[(100, 0.1)], &[2.0, 3.0]);
+        let err = allocate(&table, 1.0).unwrap_err().to_string();
+        assert!(err.contains("infeasible"), "{err}");
+        assert!(allocate(&[], 2.0).is_err());
+        assert!(allocate(&table, 0.0).is_err());
+        assert!(allocate(&table, f64::NAN).is_err());
+        let empty_opts =
+            vec![LayerSensitivity { layer: "b0.wq".into(), params: 10, options: vec![] }];
+        assert!(allocate(&empty_opts, 2.0).is_err());
+    }
+
+    #[test]
+    fn emitted_policy_routes_every_layer_and_roundtrips() {
+        let grid = [2.0, 3.0];
+        let table = synth_table(&[(100, 0.4), (400, 0.1), (200, 0.2)], &grid);
+        let cfg = ModelConfig::nano();
+        let candidates = default_candidates(&cfg, 2.5, 10, true);
+        // Trim/extend the synthetic option rows to the candidate count so
+        // indices line up (the probe guarantees this in real use).
+        let table: Vec<LayerSensitivity> = table
+            .into_iter()
+            .map(|mut row| {
+                let proto = row.options[0];
+                while row.options.len() < candidates.len() {
+                    row.options.push(proto);
+                }
+                row.options.truncate(candidates.len());
+                row
+            })
+            .collect();
+        let alloc = allocate(&table, 3.5).unwrap();
+        let policy = emit_policy(&table, &candidates, &alloc);
+        assert_eq!(policy.rules.len(), table.len());
+        for (row, &c) in table.iter().zip(&alloc.choice) {
+            assert_eq!(policy.spec_for(&row.layer), Some(&candidates[c].emit), "{}", row.layer);
+        }
+        let reparsed = LayerPolicy::parse(&policy.to_string()).unwrap();
+        assert_eq!(reparsed, policy, "allocator output must round-trip through the grammar");
+    }
+
+    #[test]
+    fn default_candidates_are_distinct_and_buildable() {
+        let cfg = ModelConfig::nano();
+        let cands = default_candidates(&cfg, 2.5, 30, false);
+        assert!(cands.len() >= 2, "grid degenerated to {} candidates", cands.len());
+        for c in &cands {
+            super::super::spec::build_quantizer(&c.probe, Some(&cfg)).unwrap();
+            super::super::spec::build_quantizer(&c.emit, Some(&cfg)).unwrap();
+        }
+        // Probe and emit share shapes, so their bits agree by construction.
+        for c in &cands {
+            let (MethodSpec::Aqlm(p), MethodSpec::Aqlm(e)) = (&c.probe, &c.emit) else {
+                panic!("default grid is AQLM");
+            };
+            assert_eq!(p.shape, e.shape);
+        }
+    }
+}

@@ -24,11 +24,12 @@ use crate::tensor::Tensor;
 pub struct BeamContext {
     /// Per group j: S_j = XXᵀ[jg..jg+g, jg..jg+g].
     pub sj: Vec<Tensor>,
-    /// Per (j, m): diag[c] = C_m[c]ᵀ S_j C_m[c], flattened [n_groups][M][K].
+    /// Per (j, m): `diag[c] = C_m[c]ᵀ S_j C_m[c]`, flattened `[n_groups][M][K]`.
     pub diag: Vec<f32>,
 }
 
 impl BeamContext {
+    /// Precompute the per-group Gram blocks and codeword self-energies.
     pub fn build(q: &AqlmWeight, xxt: &Tensor) -> BeamContext {
         let g = q.group;
         let n_groups = q.n_groups();

@@ -34,9 +34,11 @@ pub enum FtScope {
 }
 
 impl FtScope {
+    /// Whether this scope updates RMSNorm gains.
     pub fn trains_norms(&self) -> bool {
         matches!(self, FtScope::NormsOnly | FtScope::Full)
     }
+    /// Whether this scope updates quantized-weight parameters.
     pub fn trains_quant_params(&self) -> bool {
         matches!(self, FtScope::QuantParamsOnly | FtScope::Full)
     }
@@ -46,9 +48,13 @@ impl FtScope {
 /// early stop on relative improvement τ ∈ [1e-3, 1e-2]).
 #[derive(Clone, Copy, Debug)]
 pub struct BlockFtConfig {
+    /// Max Adam steps (0 disables fine-tuning).
     pub steps: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Early-stop tolerance on relative loss improvement.
     pub tol: f64,
+    /// Which parameter sets are trained (Table 7 rows).
     pub scope: FtScope,
 }
 

@@ -4,8 +4,7 @@
 //! minimized with full-batch Adam, exactly as the paper does (it notes a
 //! closed-form solve is possible but the XXᵀ coupling makes Adam simpler;
 //! "the final result is not sensitive" to steps/lr). Gradients:
-//! `dL/dŴ = 2(Ŵ−W)XXᵀ`, routed through
-//! [`AqlmWeight::backward_dw`](crate::kernels::format::AqlmWeight::backward_dw)
+//! `dL/dŴ = 2(Ŵ−W)XXᵀ`, routed through [`AqlmWeight::backward_dw`]
 //! to codebooks and scales.
 
 use crate::kernels::format::AqlmWeight;
@@ -16,7 +15,9 @@ use crate::tensor::Tensor;
 /// Configuration for the codebook update phase.
 #[derive(Clone, Copy, Debug)]
 pub struct CodebookUpdateConfig {
+    /// Max Adam steps per phase-2 pass.
     pub steps: usize,
+    /// Adam learning rate.
     pub lr: f32,
     /// Stop early when the relative loss improvement over a step falls
     /// below this.

@@ -18,8 +18,11 @@ use std::collections::HashMap;
 /// End-to-end fine-tuning configuration (paper App. A defaults, scaled).
 #[derive(Clone, Copy, Debug)]
 pub struct E2eFtConfig {
+    /// Number of KD steps.
     pub steps: usize,
+    /// Sequences per step.
     pub batch: usize,
+    /// Adam learning rate.
     pub lr: f32,
 }
 

@@ -15,6 +15,7 @@ use crate::util::rng::Rng;
 /// Full per-layer AQLM configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct AqlmLayerConfig {
+    /// Codebook shape `(M, B, g)`.
     pub shape: AqlmShape,
     /// Beam width for the code search (1 = greedy/ICM-style).
     pub beam: usize,
@@ -22,13 +23,16 @@ pub struct AqlmLayerConfig {
     pub max_iters: usize,
     /// Relative-improvement stopping tolerance τ (paper: 1e-2…1e-3).
     pub tol: f64,
+    /// Lloyd iterations of the residual K-means init.
     pub kmeans_iters: usize,
+    /// Phase-2 codebook Adam settings.
     pub codebook: CodebookUpdateConfig,
     /// Figure-4 ablation switch: random instead of residual-K-means init.
     pub random_init: bool,
 }
 
 impl AqlmLayerConfig {
+    /// Default (paper-accuracy) settings for a shape.
     pub fn new(shape: AqlmShape) -> AqlmLayerConfig {
         AqlmLayerConfig {
             shape,
@@ -61,10 +65,12 @@ pub struct LossTrace {
 
 /// The per-layer quantizer.
 pub struct LayerQuantizer {
+    /// Per-layer settings.
     pub cfg: AqlmLayerConfig,
 }
 
 impl LayerQuantizer {
+    /// Quantizer with the given settings.
     pub fn new(cfg: AqlmLayerConfig) -> LayerQuantizer {
         LayerQuantizer { cfg }
     }
@@ -108,7 +114,9 @@ impl LayerQuantizer {
 /// per-layer alternating optimization with the Phase-3 block fine-tuning
 /// configuration the pipeline applies after each block.
 pub struct AqlmQuantizer {
+    /// Per-layer alternating-optimization settings.
     pub layer: AqlmLayerConfig,
+    /// Phase-3 block fine-tuning settings (steps 0 disables FT).
     pub block_ft: BlockFtConfig,
 }
 

@@ -24,6 +24,7 @@ use crate::util::rng::Rng;
 /// GPTQ configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct GptqConfig {
+    /// Integer bit width of the codes.
     pub bits: usize,
     /// Group size for scales; `usize::MAX` ⇒ one group per row (per-row
     /// scale, the paper's GPTQ setting).
@@ -40,6 +41,7 @@ impl GptqConfig {
         GptqConfig { bits, group: usize::MAX, act_order: true, percdamp: 0.01 }
     }
 
+    /// Grouped-scale GPTQ (sequential column order; used by SpQR-lite).
     pub fn grouped(bits: usize, group: usize) -> GptqConfig {
         GptqConfig { bits, group, act_order: false, percdamp: 0.01 }
     }
@@ -48,7 +50,9 @@ impl GptqConfig {
 /// [`Quantizer`] adapter for GPTQ (spec `gptq:b=B[,g=G][,tuned]`).
 /// `block_tune` requests Appendix-L block tuning after each block.
 pub struct GptqQuantizer {
+    /// Per-layer GPTQ settings.
     pub cfg: GptqConfig,
+    /// Appendix-L block tuning to run after each block, if any.
     pub block_tune: Option<BlockFtConfig>,
 }
 

@@ -13,9 +13,13 @@ use crate::tensor::Tensor;
 /// `Ŵ[i, jg+t] = scale[i][j] · (q[i, jg+t] − zero[i][j])`.
 #[derive(Clone, Debug)]
 pub struct GroupIntWeight {
+    /// Output dimension (rows).
     pub d_out: usize,
+    /// Input dimension (columns).
     pub d_in: usize,
+    /// Scale-group size along the input dimension.
     pub group: usize,
+    /// Bit width of the integer codes.
     pub bits: usize,
     /// Integer codes in [0, 2^bits), laid out like the dense matrix.
     pub qcodes: Vec<u16>,
@@ -26,10 +30,12 @@ pub struct GroupIntWeight {
 }
 
 impl GroupIntWeight {
+    /// Number of scale groups per row.
     pub fn n_groups(&self) -> usize {
         self.d_in / self.group
     }
 
+    /// Flat index of `(row, grp)` into the scales / zeros arrays.
     #[inline]
     pub fn meta_index(&self, row: usize, grp: usize) -> usize {
         row * self.n_groups() + grp
@@ -86,6 +92,7 @@ impl GroupIntWeight {
         (code_bits + meta_bits) as f64 / (self.d_out * self.d_in) as f64
     }
 
+    /// Total storage in bits (codes + 32-bit scale metadata).
     pub fn size_bits(&self) -> usize {
         self.d_out * self.d_in * self.bits + self.scales.len() * 32
     }

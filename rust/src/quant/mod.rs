@@ -11,7 +11,7 @@
 //!
 //! Every method is a [`Quantizer`]: it consumes a weight matrix plus
 //! calibration and returns a [`QuantizedLayer`] (the new
-//! [`Linear`](crate::nn::linear::Linear), its average bits, and the method
+//! [`Linear`], its average bits, and the method
 //! name). Quantizers are configured by **method-spec strings**
 //! (`aqlm:2x8,g=8,ft=30`, `gptq:b=4,g=16,tuned`, `rtn:b=4,g=32`, …) parsed
 //! by [`spec::MethodSpec`] and resolved through the [`spec::METHODS`]
@@ -24,12 +24,17 @@
 //! | Module | Contents |
 //! |---|---|
 //! | [`spec`] | method-spec grammar, quantizer registry, [`spec::LayerPolicy`] |
+//! | [`alloc`] | automatic rate-distortion bit allocation (`--auto-bits`): sensitivity probe → Lagrangian allocator → emitted [`spec::LayerPolicy`] |
 //! | [`aqlm`] | §3 (the full algorithm: K-means init, beam search, codebook Adam, block FT, e2e KD) — spec `aqlm:MxB,g=G,ft=N` |
 //! | [`rtn`] | round-to-nearest baseline (Dettmers & Zettlemoyer 2022) — spec `rtn:b=B,g=G` |
 //! | [`gptq`] | GPTQ (Frantar et al. 2022), incl. App. L scale tuning — spec `gptq:b=B[,g=G][,tuned]` |
 //! | [`spqr`] | SpQR-lite: group quant + FP outliers (Dettmers et al. 2023) — spec `spqr:b=B,g=G,out=F` |
 //! | [`quip`] | QuIP-lite: incoherence rotation + grid (Chee et al. 2023) — spec `quip:b=B,seed=S` |
 //! | [`groupint`] | shared scalar-quant storage format |
+//!
+//! The full configuration grammar — every method's keys, defaults and
+//! error cases, plus the policy syntax — is documented in
+//! `docs/spec-grammar.md` at the repository root.
 
 pub mod groupint;
 pub mod rtn;
@@ -38,6 +43,7 @@ pub mod spqr;
 pub mod quip;
 pub mod aqlm;
 pub mod spec;
+pub mod alloc;
 
 use self::aqlm::blockft::BlockFtConfig;
 use crate::nn::linear::Linear;
@@ -49,11 +55,14 @@ use crate::util::rng::Rng;
 /// samples (rows of activations feeding this layer) plus the sample count.
 #[derive(Clone, Debug)]
 pub struct CalibData {
+    /// Accumulated Gram matrix `XXᵀ` `[d_in, d_in]`.
     pub xxt: Tensor,
+    /// Number of activation rows accumulated into `xxt`.
     pub n_samples: usize,
 }
 
 impl CalibData {
+    /// Empty statistics for a layer with `d_in` inputs.
     pub fn new(d_in: usize) -> CalibData {
         CalibData { xxt: Tensor::zeros(&[d_in, d_in]), n_samples: 0 }
     }
@@ -70,6 +79,7 @@ impl CalibData {
         CalibData { xxt: Tensor::eye(d_in), n_samples: 1 }
     }
 
+    /// Input dimension these statistics describe.
     pub fn d_in(&self) -> usize {
         self.xxt.rows()
     }
@@ -98,10 +108,15 @@ pub fn relative_layer_error(w: &Tensor, w_hat: &Tensor, calib: &CalibData) -> f6
 /// Per-layer quantization record for reports / EXPERIMENTS.md.
 #[derive(Clone, Debug)]
 pub struct QuantReport {
+    /// Full layer name (`b0.wq`, `b1.e0.wg`, …).
     pub layer: String,
+    /// Method display name that quantized this layer ("AQLM", "RTN", …).
     pub method: String,
+    /// Achieved storage cost in bits per parameter.
     pub avg_bits: f64,
+    /// Relative layer output error `‖ΔWX‖²/‖WX‖²`.
     pub rel_error: f64,
+    /// Wall-clock spent quantizing this layer.
     pub seconds: f64,
 }
 
@@ -112,8 +127,11 @@ pub struct QuantReport {
 /// table so size accounting survives `save`/`load`.
 #[derive(Clone, Debug)]
 pub struct QuantizedLayer {
+    /// The replacement layer (packed AQLM, grouped-int, or dense-backed).
     pub linear: Linear,
+    /// True storage cost in bits per parameter.
     pub avg_bits: f64,
+    /// Method display name ("AQLM", "GPTQ+tune", …).
     pub method: String,
 }
 

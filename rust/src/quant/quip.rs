@@ -22,6 +22,7 @@ use crate::util::rng::Rng;
 /// QuIP-lite configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct QuipConfig {
+    /// Integer bit width of the fixed grid.
     pub bits: usize,
     /// Seed for the rotation matrices (stored, not counted in bits — the
     /// rotations regenerate from the seed at load time, as QuIP# does).
@@ -31,9 +32,13 @@ pub struct QuipConfig {
 /// Result: dense dequantized weights + size metadata.
 #[derive(Clone, Debug)]
 pub struct QuipWeight {
+    /// Dequantized (rotated-back) weights.
     pub dense: Tensor,
+    /// Grid bit width.
     pub bits: usize,
+    /// Output dimension.
     pub d_out: usize,
+    /// Input dimension.
     pub d_in: usize,
 }
 

@@ -11,11 +11,14 @@ use crate::util::rng::Rng;
 /// RTN configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct RtnConfig {
+    /// Integer bit width of the codes.
     pub bits: usize,
+    /// Scale-group size (one affine scale/zero per group).
     pub group: usize,
 }
 
 impl RtnConfig {
+    /// Configuration with the given bit width and group size.
     pub fn new(bits: usize, group: usize) -> RtnConfig {
         RtnConfig { bits, group }
     }

@@ -22,7 +22,7 @@
 //! Scalar methods reject fractional bit widths with a clear error — only
 //! AQLM's codebook shapes can hit fractional budgets.
 //!
-//! Specs resolve to [`Quantizer`](super::Quantizer) trait objects through
+//! Specs resolve to [`Quantizer`] trait objects through
 //! the [`METHODS`] registry; adding a method means adding one registry entry
 //! (key + parser + builder), not editing every call site.
 //!
@@ -37,6 +37,13 @@
 //!
 //! Rules are `pattern=spec` entries separated by `;`, first match wins;
 //! an entry without a pattern is shorthand for the catch-all `*`.
+//!
+//! The complete grammar reference — every method's keys and defaults,
+//! error cases (e.g. fractional bits on scalar methods), glob precedence,
+//! and the auto-allocator's emitted-policy format — lives in
+//! `docs/spec-grammar.md` at the repository root; this module is its
+//! authoritative implementation. The automatic policy *search*
+//! (`--auto-bits`) is [`alloc`](super::alloc).
 
 use super::aqlm::blockft::{BlockFtConfig, FtScope};
 use super::aqlm::layer::{AqlmLayerConfig, AqlmQuantizer};
@@ -60,7 +67,10 @@ pub const DEFAULT_GPTQ_TUNE_STEPS: usize = 60;
 pub enum ShapeChoice {
     /// Search the shape grid for the model-wide average closest to the
     /// target (App. H accounting; needs a [`ModelConfig`] at build time).
-    Auto { target_bits: f64 },
+    Auto {
+        /// Requested model-wide average bits per parameter.
+        target_bits: f64,
+    },
     /// Explicit `MxB,g=G`.
     Fixed(AqlmShape),
 }
@@ -68,6 +78,7 @@ pub enum ShapeChoice {
 /// Parsed `aqlm:` spec.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AqlmSpec {
+    /// Codebook shape: explicit `MxB,g=G` or `bits=X` auto-search.
     pub shape: ShapeChoice,
     /// Phase-3 block fine-tuning steps (0 disables FT).
     pub ft_steps: usize,
@@ -80,13 +91,42 @@ pub struct AqlmSpec {
 /// A parsed method spec — the typed form of the grammar above.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum MethodSpec {
+    /// `aqlm:…` — additive quantization (the paper's method).
     Aqlm(AqlmSpec),
-    Rtn { bits: usize, group: usize },
-    /// `group: None` = per-row scales + act_order (the paper's GPTQ
-    /// config); `tune_steps: Some(n)` = Appendix-L block tuning.
-    Gptq { bits: usize, group: Option<usize>, tune_steps: Option<usize> },
-    Spqr { bits: usize, group: usize, outlier_frac: f64 },
-    Quip { bits: usize, seed: u64 },
+    /// `rtn:b=B,g=G` — round-to-nearest.
+    Rtn {
+        /// Integer bit width.
+        bits: usize,
+        /// Scale-group size.
+        group: usize,
+    },
+    /// `gptq:b=B[,g=G][,tuned[,ft=N]]`. `group: None` = per-row scales +
+    /// act_order (the paper's GPTQ config); `tune_steps: Some(n)` =
+    /// Appendix-L block tuning.
+    Gptq {
+        /// Integer bit width.
+        bits: usize,
+        /// Scale-group size; `None` = per-row scales + act_order.
+        group: Option<usize>,
+        /// Appendix-L block-tuning steps (`Some` iff `tuned`).
+        tune_steps: Option<usize>,
+    },
+    /// `spqr:b=B,g=G,out=F` — grouped base + FP outliers.
+    Spqr {
+        /// Integer base bit width.
+        bits: usize,
+        /// Scale-group size.
+        group: usize,
+        /// Fraction of weights kept as exact outliers.
+        outlier_frac: f64,
+    },
+    /// `quip:b=B,seed=S` — incoherence-rotated fixed grid.
+    Quip {
+        /// Integer bit width.
+        bits: usize,
+        /// Rotation seed (mixed with the per-layer rng).
+        seed: u64,
+    },
 }
 
 // ------------------------------------------------------------------ registry
@@ -528,6 +568,7 @@ impl fmt::Display for MethodSpec {
 /// `b1.e0.wg`) with `*` matching any run of characters: `*.wq`, `b0.*`, `*`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerPolicy {
+    /// Ordered `(pattern, spec)` rules; the first matching pattern wins.
     pub rules: Vec<(String, MethodSpec)>,
 }
 

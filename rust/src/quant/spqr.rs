@@ -16,13 +16,16 @@ use crate::util::rng::Rng;
 /// SpQR-lite configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SpqrConfig {
+    /// Integer bit width of the dense base quantization.
     pub bits: usize,
+    /// Scale-group size of the base quantization.
     pub group: usize,
     /// Fraction of weights stored as exact outliers (paper uses ~1%).
     pub outlier_frac: f64,
 }
 
 impl SpqrConfig {
+    /// The paper's SpQR comparison configuration at a given bit width.
     pub fn paper(bits: usize) -> SpqrConfig {
         SpqrConfig { bits, group: 16, outlier_frac: 0.01 }
     }
@@ -32,11 +35,17 @@ impl SpqrConfig {
 /// metadata for the bits accounting.
 #[derive(Clone, Debug)]
 pub struct SpqrWeight {
+    /// Dequantized weights with outliers restored exactly.
     pub dense: Tensor,
+    /// Number of weights carried at full precision.
     pub n_outliers: usize,
+    /// Base quantization bit width.
     pub bits: usize,
+    /// Base quantization group size.
     pub group: usize,
+    /// Output dimension.
     pub d_out: usize,
+    /// Input dimension.
     pub d_in: usize,
 }
 

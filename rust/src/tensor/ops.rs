@@ -129,7 +129,7 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
-/// y = W @ x for W:[m,k], x:[k] — the GEMV baseline the paper's Table 5
+/// `y = W @ x` for `W:[m,k]`, `x:[k]` — the GEMV baseline the paper's Table 5
 /// compares AQLM kernels against.
 pub fn gemv(w: &Tensor, x: &[f32], y: &mut [f32]) {
     let (m, k) = (w.rows(), w.cols());

@@ -88,7 +88,7 @@ fn hash_name(name: &str) -> u64 {
 
 // ----- common generators -----
 
-/// Vec<f32> with entries from N(0, scale), length in [1, max_len].
+/// `Vec<f32>` with entries from N(0, scale), length in [1, max_len].
 pub fn gen_vec_f32(max_len: usize, scale: f32) -> impl FnMut(&mut Rng) -> Vec<f32> {
     move |rng| {
         let n = 1 + rng.below(max_len);
@@ -98,7 +98,7 @@ pub fn gen_vec_f32(max_len: usize, scale: f32) -> impl FnMut(&mut Rng) -> Vec<f3
     }
 }
 
-/// Shrinker for Vec<T>: halves, then removes single elements.
+/// Shrinker for `Vec<T>`: halves, then removes single elements.
 pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
     let mut out = Vec::new();
     if v.len() > 1 {

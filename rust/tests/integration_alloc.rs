@@ -1,0 +1,151 @@
+//! Integration: automatic rate-distortion bit allocation (the
+//! `--auto-bits` engine, `quant::alloc`) on a *trained* model — the probe
+//! leaves the model untouched, the emitted policy hits the requested
+//! budget from below, round-trips through the policy grammar, reproduces
+//! its predicted budget through the real pipeline, allocates monotonically
+//! in the budget, and does not lose to the uniform AQLM point at the same
+//! budget.
+
+use aqlm::coordinator::pipeline::quantize_model;
+use aqlm::coordinator::train::{train_native, TrainConfig};
+use aqlm::data::dataset::{DataBundle, DataSizes, TokenDataset};
+use aqlm::eval::ppl::perplexity;
+use aqlm::nn::config::ModelConfig;
+use aqlm::nn::model::Model;
+use aqlm::quant::alloc::{allocate, auto_allocate, default_candidates};
+use aqlm::quant::spec::LayerPolicy;
+use aqlm::util::rng::Rng;
+
+struct Setup {
+    bundle: DataBundle,
+    model: Model,
+    calib: Vec<u32>,
+    n_seqs: usize,
+    seq: usize,
+}
+
+fn trained_setup(seed: u64) -> Setup {
+    let bundle = DataBundle::generate(
+        seed,
+        DataSizes { train_tokens: 60_000, eval_tokens: 2_048, calib_tokens: 8_192, seq_len: 48 },
+    );
+    let mut cfg = ModelConfig::nano();
+    cfg.vocab_size = bundle.tokenizer.padded_vocab_size(16);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut model = Model::init(&cfg, &mut rng);
+    let tcfg = TrainConfig { steps: 200, batch: 4, seq: 48, lr: 3e-3, log_every: 1000 };
+    train_native(&mut model, &bundle.train, tcfg, &mut rng, false);
+    let (n_seqs, seq) = (6usize, 48usize);
+    let calib = {
+        let data = TokenDataset { tokens: bundle.calib.tokens.clone(), seq_len: seq };
+        let (c, _) = data.sample_batch(n_seqs, &mut rng);
+        c
+    };
+    Setup { bundle, model, calib, n_seqs, seq }
+}
+
+#[test]
+fn auto_allocation_end_to_end_on_trained_model() {
+    let s = trained_setup(31);
+    let target = 2.5;
+    // Modest FT keeps the three pipeline runs below test-sized.
+    let candidates = default_candidates(&s.model.cfg, target, 8, true);
+    assert!(candidates.len() >= 2, "degenerate candidate grid");
+
+    let mut probe_model = s.model.clone();
+    let mut prng = Rng::seed_from_u64(7);
+    let auto = auto_allocate(
+        &mut probe_model,
+        &s.calib,
+        s.n_seqs,
+        s.seq,
+        target,
+        &candidates,
+        &mut prng,
+    )
+    .unwrap();
+
+    // The probe is a dry run: the probed model's weights are untouched.
+    for (b_probe, b_orig) in probe_model.blocks.iter_mut().zip(&s.model.blocks) {
+        for ((name, lin), (_, lin0)) in b_probe.linears_mut().into_iter().zip(b_orig.linears()) {
+            assert!(!lin.is_quantized(), "{name}");
+            assert!(lin.weight_owned().allclose(&lin0.weight_owned(), 0.0), "{name}");
+        }
+    }
+    assert_eq!(auto.table[0].layer, "b0.wq", "probe rows follow model order");
+
+    // (1) Budget: never above the request, within grid granularity below.
+    assert!(auto.avg_bits() <= target + 1e-9, "overshot: {}", auto.avg_bits());
+    assert!(auto.avg_bits() > target - 0.45, "undershot: {}", auto.avg_bits());
+
+    // (2) The emitted policy is an ordinary policy string: Display ↔ parse
+    // closed under allocator output, one rule per layer.
+    let printed = auto.policy.to_string();
+    let reparsed = LayerPolicy::parse(&printed).unwrap();
+    assert_eq!(reparsed, auto.policy, "policy did not round-trip: {printed}");
+    assert_eq!(auto.policy.rules.len(), auto.table.len());
+
+    // (3) The *reparsed* policy runs through the pipeline and lands exactly
+    // the predicted budget (storage depends only on the candidate shapes).
+    let mut m_auto = s.model.clone();
+    let mut rng = Rng::seed_from_u64(3);
+    let rep_auto =
+        quantize_model(&mut m_auto, &s.calib, s.n_seqs, s.seq, &reparsed, &mut rng).unwrap();
+    assert!(
+        (rep_auto.avg_bits - auto.avg_bits()).abs() < 1e-6,
+        "predicted {} bits, pipeline measured {}",
+        auto.avg_bits(),
+        rep_auto.avg_bits
+    );
+    let ppl_auto = perplexity(&mut m_auto, &s.bundle.eval_wiki, 8);
+    let ppl_base = perplexity(&mut s.model.clone(), &s.bundle.eval_wiki, 8);
+    assert!(ppl_auto.is_finite() && ppl_auto < ppl_base * 6.0, "auto model unusable: {ppl_auto}");
+
+    // (4) Against uniform at the same budget: the widest single candidate
+    // that fits the target (what `--method aqlm:bits=2.5` effectively
+    // picks) must not beat the solved allocation.
+    let uniform_avg = |c: usize| {
+        let (mut bits, mut params) = (0.0f64, 0usize);
+        for row in &auto.table {
+            bits += row.bits(c) * row.params as f64;
+            params += row.params;
+        }
+        bits / params as f64
+    };
+    let comparer = (0..candidates.len())
+        .filter(|&c| uniform_avg(c) <= target + 1e-9)
+        .max_by(|&a, &b| uniform_avg(a).total_cmp(&uniform_avg(b)));
+    if let Some(c) = comparer {
+        let mut m_uni = s.model.clone();
+        let mut rng_u = Rng::seed_from_u64(3);
+        let uniform = LayerPolicy::uniform(candidates[c].emit);
+        let rep_uni =
+            quantize_model(&mut m_uni, &s.calib, s.n_seqs, s.seq, &uniform, &mut rng_u).unwrap();
+        assert!(rep_uni.avg_bits <= target + 1e-6, "comparer over budget");
+        let ppl_uni = perplexity(&mut m_uni, &s.bundle.eval_wiki, 8);
+        // The allocator spends the same budget where the probe measured it
+        // to matter, so it must not lose to uniform; the tolerance absorbs
+        // eval noise at this model scale (figure f9 shows the actual wins).
+        assert!(
+            ppl_auto < ppl_uni * 1.05,
+            "auto ({:.3} bits, ppl {ppl_auto:.3}) lost to uniform {} ({:.3} bits, ppl {ppl_uni:.3})",
+            rep_auto.avg_bits,
+            candidates[c].emit,
+            rep_uni.avg_bits
+        );
+    }
+
+    // (5) Monotonicity on the real probe table: raising the budget never
+    // narrows a layer.
+    let a_lo = allocate(&auto.table, 2.2).unwrap();
+    let a_hi = allocate(&auto.table, 3.2).unwrap();
+    for (j, row) in auto.table.iter().enumerate() {
+        assert!(
+            row.bits(a_hi.choice[j]) >= row.bits(a_lo.choice[j]) - 1e-12,
+            "{} narrowed when the budget rose: {} -> {}",
+            row.layer,
+            row.bits(a_lo.choice[j]),
+            row.bits(a_hi.choice[j])
+        );
+    }
+}

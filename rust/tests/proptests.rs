@@ -381,6 +381,85 @@ fn prop_method_spec_display_parse_roundtrip() {
 }
 
 #[test]
+fn prop_allocator_output_closed_under_policy_grammar_and_monotone() {
+    // Any allocator-emitted policy string parses back to an identical
+    // assignment (Display ↔ parse closed under `alloc` output), and a
+    // larger budget never narrows a layer.
+    use aqlm::quant::alloc::{allocate, emit_policy, Candidate, LayerOption, LayerSensitivity};
+    use aqlm::quant::spec::{LayerPolicy, MethodSpec};
+    let spec_pool: Vec<MethodSpec> = [
+        "aqlm:1x6,g=4,ft=0,fast",
+        "aqlm:2x8,g=8,ft=30",
+        "aqlm:1x8,g=8,ft=15,scope=norms",
+        "rtn:b=2,g=32",
+        "gptq:b=3,g=16,tuned",
+    ]
+    .iter()
+    .map(|s| MethodSpec::parse(s).unwrap())
+    .collect();
+    check_no_shrink(
+        "alloc-emit-roundtrip",
+        &cfg(64),
+        |rng: &mut Rng| {
+            let n_cand = 2 + rng.below(4);
+            let candidates: Vec<Candidate> = (0..n_cand)
+                .map(|_| {
+                    let s = spec_pool[rng.below(spec_pool.len())];
+                    Candidate { probe: s, emit: s }
+                })
+                .collect();
+            let n_layers = 1 + rng.below(20);
+            let table: Vec<LayerSensitivity> = (0..n_layers)
+                .map(|j| LayerSensitivity {
+                    layer: format!("b{}.w{}", j / 7, j % 7),
+                    params: 64 + rng.below(4096),
+                    options: (0..n_cand)
+                        .map(|_| LayerOption {
+                            avg_bits: (8 + rng.below(96)) as f64 / 8.0,
+                            rel_error: rng.f64() * 0.5,
+                        })
+                        .collect(),
+                })
+                .collect();
+            // Target at or above the narrowest mixture, so always feasible.
+            let (mut min_bits, mut params) = (0.0f64, 0usize);
+            for row in &table {
+                let narrowest =
+                    row.options.iter().map(|o| o.avg_bits).fold(f64::INFINITY, f64::min);
+                min_bits += narrowest * row.params as f64;
+                params += row.params;
+            }
+            let target = min_bits / params as f64 + rng.f64() * 3.0;
+            (candidates, table, target)
+        },
+        |(candidates, table, target)| {
+            let a = allocate(table, *target).map_err(|e| e.to_string())?;
+            if a.avg_bits > target + 1e-9 {
+                return Err(format!("overshot budget: {} > {target}", a.avg_bits));
+            }
+            let policy = emit_policy(table, candidates, &a);
+            let s = policy.to_string();
+            let back = LayerPolicy::parse(&s).map_err(|e| format!("'{s}' failed to parse: {e}"))?;
+            if back != policy {
+                return Err(format!("'{s}' reparsed to a different assignment"));
+            }
+            for (row, &c) in table.iter().zip(&a.choice) {
+                if back.spec_for(&row.layer) != Some(&candidates[c].emit) {
+                    return Err(format!("reparsed policy routes {} differently", row.layer));
+                }
+            }
+            let a2 = allocate(table, target + 1.0).map_err(|e| e.to_string())?;
+            for (j, row) in table.iter().enumerate() {
+                if row.bits(a2.choice[j]) < row.bits(a.choice[j]) - 1e-12 {
+                    return Err(format!("layer {} narrowed when the budget grew", row.layer));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_layer_policy_display_parse_roundtrip() {
     use aqlm::quant::spec::{LayerPolicy, MethodSpec};
     let specs: Vec<MethodSpec> = [

@@ -123,7 +123,10 @@ pub fn t1_low_bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     Ok(vec![t])
 }
 
-/// Table 2: ~3 bit, AQLM vs GPTQ / SpQR-lite / QuIP-lite.
+/// Table 2: ~3 bit, AQLM vs GPTQ / SpQR-lite / QuIP-lite. SpQR rows run
+/// the packed sparse-outlier format end-to-end, so their size column is
+/// the structural storage (bit-packed base + CSR outliers), not a
+/// bits-metadata estimate over dense f32 backing.
 pub fn t2_3bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     let mut t = eval_table("Table 2: 3-3.1 bits per parameter");
     for preset in family(ws) {

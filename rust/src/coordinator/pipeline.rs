@@ -14,8 +14,9 @@
 //! resolve to trait objects through the
 //! [`METHODS`](crate::quant::spec::METHODS) registry, and each layer's true storage
 //! cost is recorded in the model's per-layer bits table so dense-backed
-//! baselines (SpQR-lite / QuIP-lite) keep honest size accounting across
-//! `save`/`load`.
+//! baselines (QuIP-lite) keep honest size accounting across
+//! `save`/`load`. The policy string itself is stored on the model
+//! (`Model::quant_policy`) and travels in the checkpoint header.
 
 use super::calib::capture_block;
 use crate::nn::config::ModelConfig;
@@ -128,10 +129,12 @@ pub fn quantize_model(
     }
 
     // Persist per-layer storage costs (authoritative for dense-backed
-    // methods; see Model::layer_bits).
+    // methods; see Model::layer_bits) and the full policy string, so a
+    // loaded checkpoint knows exactly how it was produced.
     for (name, bits) in layer_bits {
         model.layer_bits.insert(name, bits);
     }
+    model.quant_policy = Some(policy.to_string());
 
     Ok(PipelineReport {
         layers,
@@ -290,7 +293,10 @@ mod tests {
             let ppl = perplexity(&mut m, &bundle.eval_wiki, 4);
             // 4-bit quantization of a random-init model must not explode.
             assert!(ppl < ppl_base * 1.5, "{s}: ppl {ppl} vs base {ppl_base}");
-            assert!(report.avg_bits > 3.9 && report.avg_bits < 7.0, "{s}: {}", report.avg_bits);
+            // Upper bound is loose because packed SpQR counts its full
+            // structural overhead (group meta + 48-bit outliers + CSR row
+            // pointers), which is proportionally large at these toy dims.
+            assert!(report.avg_bits > 3.9 && report.avg_bits < 8.0, "{s}: {}", report.avg_bits);
             for l in &report.layers {
                 assert_eq!(l.method, method.method_name(), "{s}: {}", l.layer);
             }

@@ -1,4 +1,7 @@
-//! The AQLM compressed-weight format (paper Figure 3 + Appendix H).
+//! Compressed-weight formats: AQLM (paper Figure 3 + Appendix H) and the
+//! packed SpQR baseline format.
+//!
+//! # AQLM ([`AqlmWeight`])
 //!
 //! A weight matrix `W ∈ R^{d_out × d_in}` is stored as:
 //! - `codes[i][j][m]` — for output unit `i`, input group `j` (of `g`
@@ -11,13 +14,43 @@
 //! The struct is the single source of truth shared by the quantizer
 //! (which learns codes/codebooks), the fine-tuners (which need gradients
 //! w.r.t. codebooks and scales), and the inference kernels.
+//!
+//! # Packed SpQR ([`PackedSpqr`])
+//!
+//! The SpQR baseline (Dettmers et al., 2023) stores a dense grouped-integer
+//! base plus a ~1% sparse matrix of full-precision outliers. Its packed
+//! execution layout here is:
+//!
+//! - **Base codes** — `d_out × d_in` integer codes bit-packed at exactly
+//!   `bits` bits each (row-major, little-endian within `u64` words, the
+//!   same stream discipline as [`super::packed`]). A base weight
+//!   dequantizes as `scale[i][j] · (code − zero[i][j])` with one
+//!   `(scale, zero)` pair per group of `group` consecutive input columns;
+//!   when `group ∤ d_in` the final group is a ragged tail of
+//!   `d_in mod group` columns with its own scale/zero.
+//! - **Group metadata** — `scales` / `zeros`, each `[d_out × n_groups]`
+//!   f32 (counted at 16-bit precision in the size accounting, as the
+//!   related work does).
+//! - **Outliers (CSR)** — `row_ptr[i]..row_ptr[i+1]` indexes the outliers
+//!   of output row `i` inside `col_idx` (u32 column indices, strictly
+//!   ascending within a row) and `values` (exact f32 weights). An outlier
+//!   **replaces** the base dequantization at its position. Indices are
+//!   u32, not u16: a u16 cannot address layers with `d_in > 65 536` (and
+//!   the earlier flat-index accounting broke already at 65 536 *weights*).
+//!
+//! The matching matvec kernels (fused base-dequant + outlier scatter,
+//! bit-for-bit equal to a dense GEMV over the decoded matrix) live in
+//! [`super::matvec`].
 
+use super::packed::BitReader;
 use crate::tensor::Tensor;
 
 /// AQLM-compressed linear-layer weight.
 #[derive(Clone, Debug)]
 pub struct AqlmWeight {
+    /// Output dimension (rows).
     pub d_out: usize,
+    /// Input dimension (columns); must be divisible by `group`.
     pub d_in: usize,
     /// Group size `g` (consecutive input features per code).
     pub group: usize,
@@ -50,6 +83,7 @@ impl AqlmWeight {
         (out * self.n_groups() + grp) * self.n_codebooks + m
     }
 
+    /// Code of output `out`, group `grp`, codebook `m`.
     #[inline]
     pub fn code(&self, out: usize, grp: usize, m: usize) -> usize {
         self.codes[self.code_index(out, grp, m)] as usize
@@ -170,12 +204,16 @@ impl AqlmWeight {
 /// Named codebook configuration (the paper's "1×16", "2×8" etc.).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AqlmShape {
+    /// Number of additive codebooks `M`.
     pub n_codebooks: usize,
+    /// Code width `B` in bits.
     pub code_bits: usize,
+    /// Group size `g` (consecutive input features per code).
     pub group: usize,
 }
 
 impl AqlmShape {
+    /// Shape with `M` codebooks of `2^B` codewords over groups of `g`.
     pub fn new(n_codebooks: usize, code_bits: usize, group: usize) -> AqlmShape {
         AqlmShape { n_codebooks, code_bits, group }
     }
@@ -188,6 +226,7 @@ impl AqlmShape {
         (codebooks + codes + scales) as f64 / (d_out * d_in) as f64
     }
 
+    /// Canonical shape name like `2x8g8` (inverse of [`Self::parse`]).
     pub fn name(&self) -> String {
         format!("{}x{}g{}", self.n_codebooks, self.code_bits, self.group)
     }
@@ -199,6 +238,244 @@ impl AqlmShape {
             .ok_or_else(|| anyhow::anyhow!("bad shape '{s}', want MxBgG"))?;
         let (b, g) = rest.split_once('g').ok_or_else(|| anyhow::anyhow!("bad shape '{s}'"))?;
         Ok(AqlmShape { n_codebooks: m.parse()?, code_bits: b.parse()?, group: g.parse()? })
+    }
+}
+
+/// SpQR-compressed linear-layer weight in packed execution form: bit-packed
+/// grouped-integer base codes + per-group scale/zero + CSR sparse outliers.
+/// See the [module docs](self) for the exact layout.
+#[derive(Clone, Debug)]
+pub struct PackedSpqr {
+    /// Output dimension (rows).
+    pub d_out: usize,
+    /// Input dimension (columns).
+    pub d_in: usize,
+    /// Scale-group size along the input dimension; the final group is a
+    /// ragged tail when `group ∤ d_in`.
+    pub group: usize,
+    /// Bit width of the base integer codes.
+    pub bits: usize,
+    /// Base codes packed at `bits` bits each, row-major `[d_out][d_in]`.
+    pub packed_codes: Vec<u64>,
+    /// Per-group scales `[d_out × n_groups]`.
+    pub scales: Vec<f32>,
+    /// Per-group zero points `[d_out × n_groups]` (float, asymmetric).
+    pub zeros: Vec<f32>,
+    /// CSR row pointers into `col_idx` / `values`; length `d_out + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Outlier column indices, strictly ascending within each row.
+    pub col_idx: Vec<u32>,
+    /// Exact outlier weights; `values[k]` replaces the base dequantization
+    /// at `(row, col_idx[k])`.
+    pub values: Vec<f32>,
+}
+
+impl PackedSpqr {
+    /// Build the packed form from unpacked base codes (`[d_out × d_in]`
+    /// row-major, each `< 2^bits`), per-group metadata, and outliers given
+    /// as strictly-ascending flat indices `row · d_in + col` with their
+    /// exact values. The single place the CSR arrays are constructed —
+    /// the quantizer and every test generator go through here, so they
+    /// cannot drift from [`Self::validate`]'s invariants.
+    #[allow(clippy::too_many_arguments)] // mirrors the stored fields 1:1
+    pub fn from_parts(
+        d_out: usize,
+        d_in: usize,
+        group: usize,
+        bits: usize,
+        codes: &[u16],
+        scales: Vec<f32>,
+        zeros: Vec<f32>,
+        outliers: &[(usize, f32)],
+    ) -> anyhow::Result<PackedSpqr> {
+        anyhow::ensure!(codes.len() == d_out * d_in, "codes length");
+        let mut row_ptr = vec![0u32; d_out + 1];
+        let mut col_idx = Vec::with_capacity(outliers.len());
+        let mut values = Vec::with_capacity(outliers.len());
+        let mut prev: Option<usize> = None;
+        for &(flat, v) in outliers {
+            anyhow::ensure!(
+                prev.is_none_or(|p| p < flat) && flat < d_out * d_in,
+                "outlier flat indices must be strictly ascending and in range"
+            );
+            prev = Some(flat);
+            row_ptr[flat / d_in + 1] += 1;
+            col_idx.push((flat % d_in) as u32);
+            values.push(v);
+        }
+        for i in 0..d_out {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let q = PackedSpqr {
+            d_out,
+            d_in,
+            group,
+            bits,
+            packed_codes: super::packed::pack(codes, bits),
+            scales,
+            zeros,
+            row_ptr,
+            col_idx,
+            values,
+        };
+        q.validate()?;
+        Ok(q)
+    }
+
+    /// Number of scale groups per row (ragged tail included). Must agree
+    /// with [`GroupIntWeight`](crate::quant::groupint::GroupIntWeight)'s
+    /// grouped-metadata indexing — `spqr_quantize` copies that struct's
+    /// scales/zeros verbatim, so the two `n_groups`/`group_width`
+    /// definitions are deliberately identical.
+    pub fn n_groups(&self) -> usize {
+        self.d_in.div_ceil(self.group)
+    }
+
+    /// Width of scale group `grp` (== `group` except for a ragged tail).
+    #[inline]
+    pub fn group_width(&self, grp: usize) -> usize {
+        self.group.min(self.d_in - grp * self.group)
+    }
+
+    /// Number of stored outliers.
+    pub fn n_outliers(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Validate internal consistency (shapes, CSR invariants, code range).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!((1..=16).contains(&self.bits), "bits {} out of range", self.bits);
+        anyhow::ensure!(self.group >= 1, "group must be >= 1");
+        let ng = self.n_groups();
+        anyhow::ensure!(self.scales.len() == self.d_out * ng, "scales length");
+        anyhow::ensure!(self.zeros.len() == self.d_out * ng, "zeros length");
+        anyhow::ensure!(
+            self.packed_codes.len() == (self.d_out * self.d_in * self.bits).div_ceil(64),
+            "packed code words"
+        );
+        anyhow::ensure!(self.row_ptr.len() == self.d_out + 1, "row_ptr length");
+        anyhow::ensure!(self.row_ptr[0] == 0, "row_ptr must start at 0");
+        anyhow::ensure!(
+            *self.row_ptr.last().unwrap() as usize == self.values.len(),
+            "row_ptr end != outlier count"
+        );
+        anyhow::ensure!(self.col_idx.len() == self.values.len(), "col_idx length");
+        for i in 0..self.d_out {
+            anyhow::ensure!(self.row_ptr[i] <= self.row_ptr[i + 1], "row_ptr not monotone");
+            let (lo, hi) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            for k in lo..hi {
+                anyhow::ensure!((self.col_idx[k] as usize) < self.d_in, "outlier col range");
+                anyhow::ensure!(
+                    k == lo || self.col_idx[k - 1] < self.col_idx[k],
+                    "outlier cols not strictly ascending in row {i}"
+                );
+            }
+        }
+        let mut reader = BitReader::new(&self.packed_codes, self.bits);
+        let qmax = ((1u32 << self.bits) - 1) as u16;
+        for _ in 0..self.d_out * self.d_in {
+            anyhow::ensure!(reader.next() <= qmax, "base code out of range");
+        }
+        Ok(())
+    }
+
+    /// Decode row `i` from a sequentially-positioned `reader` (must stand at
+    /// the row's first code) into `out[0..d_in]`, outliers applied. Shared
+    /// by [`Self::decode_row`] and the matvec kernels so the reconstruction
+    /// (and hence their bit-for-bit parity with a dense GEMV) cannot drift.
+    #[inline]
+    pub(super) fn decode_row_seq(&self, reader: &mut BitReader, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d_in);
+        let g = self.group;
+        let ng = self.n_groups();
+        for j in 0..ng {
+            let mi = i * ng + j;
+            let (s, z) = (self.scales[mi], self.zeros[mi]);
+            for t in 0..self.group_width(j) {
+                out[j * g + t] = s * (reader.next() as f32 - z);
+            }
+        }
+        for k in self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize {
+            out[self.col_idx[k] as usize] = self.values[k];
+        }
+    }
+
+    /// Decode a single full row (base dequantization with outliers patched
+    /// in exactly).
+    pub fn decode_row(&self, i: usize, out: &mut [f32]) {
+        let mut reader = BitReader::new(&self.packed_codes, self.bits);
+        reader.seek(i * self.d_in);
+        self.decode_row_seq(&mut reader, i, out);
+    }
+
+    /// Decode the full weight matrix `Ŵ` (the dense reference the kernels
+    /// are tested against).
+    pub fn decode(&self) -> Tensor {
+        let mut w = Tensor::zeros(&[self.d_out, self.d_in]);
+        let mut reader = BitReader::new(&self.packed_codes, self.bits);
+        for i in 0..self.d_out {
+            self.decode_row_seq(&mut reader, i, w.row_mut(i));
+        }
+        w
+    }
+
+    /// Gradient of a loss w.r.t. the scales, given `dL/dŴ` (Appendix-L
+    /// style block tuning; codes, zeros and outliers stay frozen).
+    /// `dscale[i][j] = Σ_t dŴ[i, jg+t] · (code − zero)` over non-outlier
+    /// positions — an outlier's value does not depend on its group's scale.
+    pub fn backward_dw(&self, dw: &Tensor) -> Vec<f32> {
+        assert_eq!(dw.shape(), &[self.d_out, self.d_in]);
+        let g = self.group;
+        let ng = self.n_groups();
+        let mut dscales = vec![0.0f32; self.scales.len()];
+        let mut reader = BitReader::new(&self.packed_codes, self.bits);
+        for i in 0..self.d_out {
+            let dwr = dw.row(i);
+            let (olo, ohi) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            let mut next_out = olo;
+            for j in 0..ng {
+                let mi = i * ng + j;
+                let z = self.zeros[mi];
+                let mut acc = 0.0f32;
+                for t in 0..self.group_width(j) {
+                    let code = reader.next() as f32;
+                    let col = j * g + t;
+                    // Advance the CSR cursor; skip outlier positions.
+                    if next_out < ohi && self.col_idx[next_out] as usize == col {
+                        next_out += 1;
+                        continue;
+                    }
+                    acc += dwr[col] * (code - z);
+                }
+                dscales[mi] += acc;
+            }
+        }
+        dscales
+    }
+
+    /// Total storage in bits: base codes at `bits` each, scale/zero pairs
+    /// counted at 16 bits each (as the related work does), and each outlier
+    /// at 16-bit value + 32-bit u32 column index, plus the 32-bit CSR row
+    /// pointers — **~48 bits per outlier**, not the ~32 a u16 index would
+    /// give: u16 indices cannot address layers beyond 65 536 columns.
+    pub fn size_bits(&self) -> usize {
+        let codes = self.d_out * self.d_in * self.bits;
+        let meta = (self.scales.len() + self.zeros.len()) * 16;
+        let outliers = self.values.len() * (16 + 32);
+        let row_ptr = self.row_ptr.len() * 32;
+        codes + meta + outliers + row_ptr
+    }
+
+    /// Average bits per (quantized) parameter under [`Self::size_bits`].
+    pub fn avg_bits(&self) -> f64 {
+        self.size_bits() as f64 / (self.d_out * self.d_in) as f64
+    }
+
+    /// Actual deployed bytes of the packed arrays (f32 metadata as stored).
+    pub fn deployed_bytes(&self) -> usize {
+        self.packed_codes.len() * 8
+            + (self.scales.len() + self.zeros.len() + self.values.len()) * 4
+            + (self.row_ptr.len() + self.col_idx.len()) * 4
     }
 }
 
@@ -326,7 +603,130 @@ mod tests {
         assert_eq!(s.name(), "2x8g8");
         assert!(AqlmShape::parse("bad").is_err());
     }
+
+    /// Build a random valid PackedSpqr for tests (ragged shapes allowed).
+    /// CSR construction goes through [`PackedSpqr::from_parts`], so the
+    /// generator cannot drift from the production layout.
+    pub fn random_spqr(
+        d_out: usize,
+        d_in: usize,
+        group: usize,
+        bits: usize,
+        outlier_frac: f64,
+        rng: &mut Rng,
+    ) -> PackedSpqr {
+        let n_groups = d_in.div_ceil(group);
+        let codes: Vec<u16> =
+            (0..d_out * d_in).map(|_| rng.below(1usize << bits) as u16).collect();
+        let scales: Vec<f32> = (0..d_out * n_groups).map(|_| 0.05 + rng.f32()).collect();
+        let zeros: Vec<f32> =
+            (0..d_out * n_groups).map(|_| rng.f32() * ((1usize << bits) - 1) as f32).collect();
+        // Distinct random outlier positions, sorted → CSR invariants hold.
+        let n_out = ((d_out * d_in) as f64 * outlier_frac).round() as usize;
+        let mut flats: Vec<usize> = Vec::new();
+        while flats.len() < n_out {
+            let f = rng.below(d_out * d_in);
+            if !flats.contains(&f) {
+                flats.push(f);
+            }
+        }
+        flats.sort_unstable();
+        let outliers: Vec<(usize, f32)> =
+            flats.iter().map(|&f| (f, rng.normal_f32(0.0, 5.0))).collect();
+        PackedSpqr::from_parts(d_out, d_in, group, bits, &codes, scales, zeros, &outliers)
+            .unwrap()
+    }
+
+    #[test]
+    fn spqr_validate_rejects_broken_csr() {
+        let mut rng = Rng::seed_from_u64(11);
+        let q = random_spqr(6, 20, 8, 3, 0.05, &mut rng);
+        q.validate().unwrap();
+        let mut bad = q.clone();
+        if bad.col_idx.is_empty() {
+            return;
+        }
+        bad.col_idx[0] = bad.d_in as u32; // out of range
+        assert!(bad.validate().is_err());
+        let mut bad2 = q.clone();
+        *bad2.row_ptr.last_mut().unwrap() += 1; // end != outlier count
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn spqr_decode_matches_manual() {
+        let mut rng = Rng::seed_from_u64(12);
+        // 21 = 2·8 + 5: exercises the ragged tail group.
+        let q = random_spqr(5, 21, 8, 4, 0.04, &mut rng);
+        let dec = q.decode();
+        let ng = q.n_groups();
+        assert_eq!(ng, 3);
+        let codes = crate::kernels::packed::unpack(&q.packed_codes, q.bits, 5 * 21);
+        for i in 0..5 {
+            for j in 0..21 {
+                let grp = j / q.group;
+                let mi = i * ng + grp;
+                let mut expect = q.scales[mi] * (codes[i * 21 + j] as f32 - q.zeros[mi]);
+                for k in q.row_ptr[i] as usize..q.row_ptr[i + 1] as usize {
+                    if q.col_idx[k] as usize == j {
+                        expect = q.values[k];
+                    }
+                }
+                assert_eq!(dec.at2(i, j).to_bits(), expect.to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn spqr_size_accounting_hand_count() {
+        let mut rng = Rng::seed_from_u64(13);
+        // d_out=4, d_in=19, group=8 → 3 groups/row; 3 bits; 5% outliers.
+        let q = random_spqr(4, 19, 8, 3, 0.05, &mut rng);
+        let n_out = q.n_outliers();
+        assert_eq!(n_out, (4.0f64 * 19.0 * 0.05).round() as usize);
+        let hand = 4 * 19 * 3            // base codes
+            + 4 * 3 * 2 * 16             // scale + zero per group at 16 bit
+            + n_out * (16 + 32)          // outlier value + u32 column index
+            + (4 + 1) * 32; // CSR row pointers
+        assert_eq!(q.size_bits(), hand);
+        assert!((q.avg_bits() - hand as f64 / (4.0 * 19.0)).abs() < 1e-12);
+        // Deployed bytes beat dense f32 storage at these settings.
+        assert!(q.deployed_bytes() < 4 * 19 * 4);
+    }
+
+    #[test]
+    fn spqr_decode_row_agrees_with_full_decode() {
+        let mut rng = Rng::seed_from_u64(14);
+        let q = random_spqr(7, 24, 8, 5, 0.03, &mut rng);
+        let dec = q.decode();
+        let mut row = vec![0.0f32; 24];
+        for i in 0..7 {
+            q.decode_row(i, &mut row);
+            for j in 0..24 {
+                assert_eq!(row[j].to_bits(), dec.at2(i, j).to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn spqr_backward_dw_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(15);
+        let mut q = random_spqr(4, 19, 8, 3, 0.05, &mut rng);
+        let dw = Tensor::randn(&[4, 19], 1.0, &mut rng);
+        let ds = q.backward_dw(&dw);
+        let h = 1e-3f32;
+        for &mi in &[0usize, 4, 11] {
+            let orig = q.scales[mi];
+            q.scales[mi] = orig + h;
+            let lp = dw.dot(&q.decode());
+            q.scales[mi] = orig - h;
+            let lm = dw.dot(&q.decode());
+            q.scales[mi] = orig;
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!((ds[mi] - fd).abs() < 1e-2, "mi={mi}: {} vs {fd}", ds[mi]);
+        }
+    }
 }
 
 #[cfg(test)]
-pub use tests::random_weight;
+pub use tests::{random_spqr, random_weight};

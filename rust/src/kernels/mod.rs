@@ -1,17 +1,23 @@
-//! AQLM weight format and optimized CPU inference kernels.
+//! Compressed-weight formats and optimized CPU inference kernels.
 //!
 //! This is the run-time half of the paper's §4.4 ("Inference Speed"):
 //!
 //! - [`format`] — the AQLM compressed-weight representation (Figure 3 of the
 //!   paper): per-group code indices into `M` learned codebooks, per-output
-//!   scales, plus the Appendix-H size accounting.
+//!   scales, plus the Appendix-H size accounting. Also the packed SpQR
+//!   baseline format ([`format::PackedSpqr`]): bit-packed grouped-integer
+//!   base codes, per-group scale/zero, and CSR sparse outliers with u32
+//!   column indices — the layout is documented in the [`format`] module
+//!   docs.
 //! - [`packed`] — bit-packing of code indices for arbitrary code widths.
 //! - [`matvec`] — the decode-and-multiply kernels. The f32 GEMV baseline
 //!   lives in [`crate::tensor::ops::gemv`]; here are (a) the naive
 //!   decode-then-dot kernel and (b) the lookup-table kernel that implements
 //!   the paper's key CPU insight: for small codebooks (2^8), precompute
 //!   `lut[m][code] = ⟨x_group, C_m[code]⟩` per input vector, turning the
-//!   matvec into pure table additions.
+//!   matvec into pure table additions — plus (c) the fused SpQR kernels
+//!   (base dequant-accumulate + outlier scatter, bit-for-bit equal to the
+//!   dense reference) with their batched variants.
 
 pub mod format;
 pub mod packed;

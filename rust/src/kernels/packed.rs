@@ -52,10 +52,12 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// Reader over `packed` yielding `bits`-wide values from position 0.
     pub fn new(packed: &'a [u64], bits: usize) -> BitReader<'a> {
         BitReader { packed, bits, mask: (1u64 << bits) - 1, bitpos: 0 }
     }
 
+    /// Read the next value and advance.
     #[inline]
     pub fn next(&mut self) -> u16 {
         let word = self.bitpos / 64;

@@ -80,9 +80,10 @@
 
 // Public-API documentation is complete (and gated by `missing_docs` +
 // rustdoc `-D warnings` in `make verify`) for the crate's configuration
-// and evaluation surface: `quant`, `coordinator`, and `eval`. The
-// remaining modules are documented at module level; extending item-level
-// coverage to them is tracked in ROADMAP.md.
+// and evaluation surface — `quant`, `coordinator`, `eval` — and for the
+// compressed-format/kernel surface `kernels`. The remaining modules are
+// documented at module level; extending item-level coverage to them is
+// tracked in ROADMAP.md.
 #[allow(missing_docs)]
 pub mod util;
 #[allow(missing_docs)]
@@ -92,7 +93,6 @@ pub mod data;
 #[allow(missing_docs)]
 pub mod nn;
 pub mod quant;
-#[allow(missing_docs)]
 pub mod kernels;
 #[allow(missing_docs)]
 pub mod runtime;

@@ -2,15 +2,22 @@
 //! single forward/backward/matvec interface.
 //!
 //! - `Dense` — plain f32 `[out, in]` (training, FP baseline, and the
-//!   *dequantized* form of scalar baselines like RTN/GPTQ/SpQR/QuIP-lite,
-//!   which carry their size metadata separately).
+//!   *dequantized* form of dense-backed baselines like QuIP-lite, which
+//!   carry their size metadata separately).
 //! - `Aqlm` — the structured AQLM format. Forward decodes once into a
 //!   cached dense matrix (training/eval path); the generation path uses the
 //!   packed LUT kernels instead. Backward routes `dL/dŴ` through
 //!   [`AqlmWeight::backward_dw`], so codebooks and scales receive gradients
 //!   while codes stay frozen — the paper's fine-tuning parameterization.
+//! - `GroupInt` — grouped-integer scalar storage (RTN / GPTQ), scales
+//!   tunable (Appendix L).
+//! - `Spqr` — packed SpQR: grouped-int base + CSR sparse outliers. The
+//!   generation path runs the fused sparse kernels
+//!   ([`PackedSpqr::matvec`] / [`PackedSpqr::matvec_batch`]), which are
+//!   bit-for-bit equal to a dense GEMV over the decoded matrix, so moving
+//!   off the dense backing changed no served token.
 
-use crate::kernels::format::AqlmWeight;
+use crate::kernels::format::{AqlmWeight, PackedSpqr};
 use crate::kernels::matvec::PackedAqlm;
 use crate::quant::groupint::GroupIntWeight;
 use crate::tensor::ops::{gemv, matmul_at, matmul_bt_into};
@@ -30,6 +37,9 @@ pub enum Linear {
     /// Scalar grouped-integer quantization (RTN / GPTQ storage); scales are
     /// tunable (Appendix L).
     GroupInt { q: GroupIntWeight, decoded: Option<Tensor> },
+    /// Packed SpQR: grouped-int base codes + CSR sparse outliers. Scales
+    /// are tunable like `GroupInt`; codes, zeros and outliers stay frozen.
+    Spqr { q: PackedSpqr, decoded: Option<Tensor> },
 }
 
 /// Gradient of a loss w.r.t. a [`Linear`]'s parameters.
@@ -38,6 +48,7 @@ pub enum LinearGrad {
     Dense(Tensor),
     Aqlm { d_codebooks: Vec<Tensor>, d_scales: Vec<f32> },
     GroupInt { d_scales: Vec<f32> },
+    Spqr { d_scales: Vec<f32> },
 }
 
 impl Linear {
@@ -53,11 +64,16 @@ impl Linear {
         Linear::GroupInt { q, decoded: None }
     }
 
+    pub fn spqr(q: PackedSpqr) -> Linear {
+        Linear::Spqr { q, decoded: None }
+    }
+
     pub fn d_out(&self) -> usize {
         match self {
             Linear::Dense(w) => w.rows(),
             Linear::Aqlm { q, .. } => q.d_out,
             Linear::GroupInt { q, .. } => q.d_out,
+            Linear::Spqr { q, .. } => q.d_out,
         }
     }
 
@@ -66,6 +82,7 @@ impl Linear {
             Linear::Dense(w) => w.cols(),
             Linear::Aqlm { q, .. } => q.d_in,
             Linear::GroupInt { q, .. } => q.d_in,
+            Linear::Spqr { q, .. } => q.d_in,
         }
     }
 
@@ -89,6 +106,12 @@ impl Linear {
                 }
                 decoded.as_ref().unwrap()
             }
+            Linear::Spqr { q, decoded } => {
+                if decoded.is_none() {
+                    *decoded = Some(q.decode());
+                }
+                decoded.as_ref().unwrap()
+            }
         }
     }
 
@@ -98,6 +121,7 @@ impl Linear {
             Linear::Dense(w) => w.clone(),
             Linear::Aqlm { q, decoded, .. } => decoded.clone().unwrap_or_else(|| q.decode()),
             Linear::GroupInt { q, decoded } => decoded.clone().unwrap_or_else(|| q.decode()),
+            Linear::Spqr { q, decoded } => decoded.clone().unwrap_or_else(|| q.decode()),
         }
     }
 
@@ -109,6 +133,7 @@ impl Linear {
                 *packed = None;
             }
             Linear::GroupInt { decoded, .. } => *decoded = None,
+            Linear::Spqr { decoded, .. } => *decoded = None,
             Linear::Dense(_) => {}
         }
     }
@@ -139,7 +164,9 @@ impl Linear {
     }
 
     /// Single-vector forward on the generation hot path. Dense → GEMV;
-    /// AQLM → packed kernel (`lut_scratch` avoids reallocation).
+    /// AQLM → packed LUT/decode kernel; SpQR → fused sparse kernel
+    /// (`lut_scratch` doubles as the row-reconstruction buffer, avoiding
+    /// reallocation either way).
     pub fn matvec(&mut self, x: &[f32], y: &mut [f32], lut_scratch: &mut Vec<f32>) {
         match self {
             Linear::Dense(w) => gemv(w, x, y),
@@ -149,6 +176,7 @@ impl Linear {
                 }
                 packed.as_ref().unwrap().matvec_auto(x, lut_scratch, y);
             }
+            Linear::Spqr { q, .. } => q.matvec(x, lut_scratch, y),
             Linear::GroupInt { .. } => {
                 // Scalar-quantized baselines run the dense GEMV over the
                 // cached dequantized matrix (as the related work does).
@@ -160,11 +188,11 @@ impl Linear {
     /// Batched single-token forward: `xs` holds `n` input vectors
     /// (lane-major, `n·d_in`), `ys` receives `n` output vectors (`n·d_out`).
     ///
-    /// AQLM dispatches the batched packed kernels, which read the packed
-    /// code stream once for the whole batch (the serving-throughput win of
-    /// batched decode); dense and scalar-quantized weights run one GEMV per
-    /// lane — the same dot kernel as [`Self::matvec`], so every lane's
-    /// result is bit-identical to a single-vector call.
+    /// AQLM and SpQR dispatch their batched packed kernels, which read the
+    /// packed code stream once for the whole batch (the serving-throughput
+    /// win of batched decode); dense and scalar-quantized weights run one
+    /// GEMV per lane — the same dot kernel as [`Self::matvec`], so every
+    /// lane's result is bit-identical to a single-vector call.
     pub fn matvec_batch(&mut self, xs: &[f32], n: usize, ys: &mut [f32], lut_scratch: &mut Vec<f32>) {
         debug_assert_eq!(xs.len(), n * self.d_in());
         debug_assert_eq!(ys.len(), n * self.d_out());
@@ -173,6 +201,10 @@ impl Linear {
                 *packed = Some(PackedAqlm::from_weight(q));
             }
             packed.as_ref().unwrap().matmat_auto(xs, n, lut_scratch, ys);
+            return;
+        }
+        if let Linear::Spqr { q, .. } = self {
+            q.matvec_batch(xs, n, lut_scratch, ys);
             return;
         }
         let (d_in, d_out) = (self.d_in(), self.d_out());
@@ -197,6 +229,7 @@ impl Linear {
                 LinearGrad::Aqlm { d_codebooks, d_scales }
             }
             Linear::GroupInt { q, .. } => LinearGrad::GroupInt { d_scales: q.backward_dw(&dw) },
+            Linear::Spqr { q, .. } => LinearGrad::Spqr { d_scales: q.backward_dw(&dw) },
         };
         (dx, grad)
     }
@@ -292,6 +325,54 @@ mod tests {
                 assert!(dw.allclose(&matmul_at(&dy, &x), 1e-5));
             }
             _ => panic!("expected dense grad"),
+        }
+    }
+
+    #[test]
+    fn spqr_matvec_bitexact_vs_dense_linear() {
+        // The packed-SpQR serving path must be bit-identical to the dense
+        // GEMV over the decoded matrix — the guarantee that moving off the
+        // dense backing changed no served token.
+        let mut rng = Rng::seed_from_u64(11);
+        let q = crate::kernels::format::random_spqr(16, 27, 16, 3, 0.02, &mut rng);
+        let mut dn = Linear::dense(q.decode());
+        let mut sp = Linear::spqr(q);
+        let x: Vec<f32> = (0..27).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut ys = vec![0.0f32; 16];
+        let mut yd = vec![0.0f32; 16];
+        let mut scratch = Vec::new();
+        sp.matvec(&x, &mut ys, &mut scratch);
+        dn.matvec(&x, &mut yd, &mut scratch);
+        for i in 0..16 {
+            assert_eq!(ys[i].to_bits(), yd[i].to_bits(), "row {i}");
+        }
+        // Batched path bit-equal to per-lane single-vector calls.
+        let n = 4;
+        let xs: Vec<f32> = (0..n * 27).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut batch = vec![0.0f32; n * 16];
+        sp.matvec_batch(&xs, n, &mut batch, &mut scratch);
+        for b in 0..n {
+            let mut y1 = vec![0.0f32; 16];
+            sp.matvec(&xs[b * 27..(b + 1) * 27], &mut y1, &mut scratch);
+            for i in 0..16 {
+                assert_eq!(batch[b * 16 + i].to_bits(), y1[i].to_bits(), "lane {b} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn spqr_backward_routes_scale_grads() {
+        let mut rng = Rng::seed_from_u64(12);
+        let q = crate::kernels::format::random_spqr(8, 16, 8, 3, 0.05, &mut rng);
+        let n_scales = q.scales.len();
+        let mut lin = Linear::spqr(q);
+        let x = Tensor::randn(&[3, 16], 1.0, &mut rng);
+        let dy = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let (dx, grad) = lin.backward(&x, &dy);
+        assert_eq!(dx.shape(), &[3, 16]);
+        match grad {
+            LinearGrad::Spqr { d_scales } => assert_eq!(d_scales.len(), n_scales),
+            _ => panic!("expected spqr grad"),
         }
     }
 

@@ -32,12 +32,16 @@ pub struct Model {
     pub head: Linear,
     pub rope: Rope,
     /// Average bits per parameter of quantized layers, keyed by full layer
-    /// name (`b0.wq`). Authoritative for dense-backed methods (SpQR-lite /
-    /// QuIP-lite store dequantized f32, so their compressed size is not
-    /// recoverable from the storage format); structurally-compressed layers
-    /// (AQLM / GroupInt) ignore it. Persisted in the checkpoint header so
-    /// size accounting survives `save`/`load`.
+    /// name (`b0.wq`). Authoritative for dense-backed methods (QuIP-lite
+    /// stores dequantized f32, so its compressed size is not recoverable
+    /// from the storage format); structurally-compressed layers (AQLM /
+    /// GroupInt / packed SpQR) ignore it. Persisted in the checkpoint
+    /// header so size accounting survives `save`/`load`.
     pub layer_bits: HashMap<String, f64>,
+    /// The full quantization policy string this model was produced with
+    /// (`LayerPolicy` grammar), set by the pipeline and persisted in the
+    /// checkpoint header — a loaded model knows how it was made.
+    pub quant_policy: Option<String>,
 }
 
 /// Activation cache of a full forward pass.
@@ -107,6 +111,7 @@ impl Model {
             head: Linear::dense(Tensor::randn(&[cfg.vocab_size, d], 0.02, rng)),
             rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
             layer_bits: HashMap::new(),
+            quant_policy: None,
         }
     }
 
@@ -382,6 +387,13 @@ impl Model {
                         }
                         lin.invalidate();
                     }
+                    (lin @ Linear::Spqr { .. }, LinearGrad::Spqr { d_scales }) => {
+                        if let Linear::Spqr { q, .. } = lin {
+                            let s = states.entry(&format!("{name}.scales"), d_scales.len());
+                            opt.update(&mut q.scales, d_scales, s);
+                        }
+                        lin.invalidate();
+                    }
                     _ => unreachable!("grad/param variant mismatch for {name}"),
                 }
             }
@@ -389,9 +401,9 @@ impl Model {
     }
 
     /// Storage bits of one block linear. Structurally compressed formats
-    /// (AQLM / GroupInt) report their own size; dense storage falls back to
-    /// the per-layer bits table (dense-backed baselines like SpQR-lite and
-    /// QuIP-lite), then to FP16.
+    /// (AQLM / GroupInt / packed SpQR) report their own size; dense storage
+    /// falls back to the per-layer bits table (dense-backed baselines —
+    /// today only QuIP-lite), then to FP16.
     fn linear_size_bits(&self, full_name: &str, l: &Linear) -> f64 {
         match l {
             Linear::Dense(w) => match self.layer_bits.get(full_name) {
@@ -400,6 +412,7 @@ impl Model {
             },
             Linear::Aqlm { q, .. } => q.size_bits() as f64,
             Linear::GroupInt { q, .. } => q.size_bits() as f64,
+            Linear::Spqr { q, .. } => q.size_bits() as f64,
         }
     }
 
@@ -447,6 +460,9 @@ impl Model {
         let mut header = Json::obj();
         header.set("format", Json::from("aqlm-ckpt-v1"));
         header.set("config", config_to_json(&self.cfg));
+        if let Some(policy) = &self.quant_policy {
+            header.set("policy", Json::from(policy.as_str()));
+        }
         if !self.layer_bits.is_empty() {
             let mut lb = Json::obj();
             for (name, &bits) in &self.layer_bits {
@@ -508,10 +524,37 @@ impl Model {
                     blob.extend_from_slice(&v.to_le_bytes());
                 }
             };
+            let put_spqr = |name: &str, q: &crate::kernels::format::PackedSpqr, tensors: &mut Json, blob: &mut Vec<u8>| {
+                let mut t = Json::obj();
+                t.set("name", Json::from(name));
+                t.set("kind", Json::from("spqr"));
+                t.set("d_out", Json::from(q.d_out));
+                t.set("d_in", Json::from(q.d_in));
+                t.set("group", Json::from(q.group));
+                t.set("bits", Json::from(q.bits));
+                t.set("n_outliers", Json::from(q.n_outliers()));
+                t.set("offset", Json::from(blob.len()));
+                tensors.push(t);
+                // Blob layout: packed code words (u64), scales (f32),
+                // zeros (f32), CSR row_ptr (u32), col_idx (u32), values (f32).
+                for &w64 in &q.packed_codes {
+                    blob.extend_from_slice(&w64.to_le_bytes());
+                }
+                for &v in q.scales.iter().chain(&q.zeros) {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+                for &p in q.row_ptr.iter().chain(&q.col_idx) {
+                    blob.extend_from_slice(&p.to_le_bytes());
+                }
+                for &v in &q.values {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+            };
             let put_linear = |name: &str, l: &Linear, tensors: &mut Json, blob: &mut Vec<u8>, put_f32: &mut dyn FnMut(&str, &[usize], &[f32], &mut Json, &mut Vec<u8>)| match l {
                 Linear::Dense(w) => put_f32(name, w.shape(), w.data(), tensors, blob),
                 Linear::Aqlm { q, .. } => put_aqlm(name, q, tensors, blob),
                 Linear::GroupInt { q, .. } => put_groupint(name, q, tensors, blob),
+                Linear::Spqr { q, .. } => put_spqr(name, q, tensors, blob),
             };
 
             put_f32("embed", self.embed.shape(), self.embed.data(), &mut tensors, &mut blob);
@@ -614,11 +657,59 @@ impl Model {
                     q.validate()?;
                     Ok(Linear::aqlm(q))
                 }
+                "spqr" => {
+                    let (d_out, d_in) = (t.req_usize("d_out")?, t.req_usize("d_in")?);
+                    let group = t.req_usize("group")?;
+                    let bits = t.req_usize("bits")?;
+                    let n_outliers = t.req_usize("n_outliers")?;
+                    let n_groups = d_in.div_ceil(group);
+                    let n_words = (d_out * d_in * bits).div_ceil(64);
+                    let mut off = t.req_usize("offset")?;
+                    let packed_codes: Vec<u64> = (0..n_words)
+                        .map(|i| {
+                            let o = off + i * 8;
+                            u64::from_le_bytes(blob[o..o + 8].try_into().unwrap())
+                        })
+                        .collect();
+                    off += n_words * 8;
+                    let scales = read_f32(&blob, off, d_out * n_groups);
+                    off += d_out * n_groups * 4;
+                    let zeros = read_f32(&blob, off, d_out * n_groups);
+                    off += d_out * n_groups * 4;
+                    let read_u32 = |off: usize, count: usize| -> Vec<u32> {
+                        (0..count)
+                            .map(|i| {
+                                let o = off + i * 4;
+                                u32::from_le_bytes(blob[o..o + 4].try_into().unwrap())
+                            })
+                            .collect()
+                    };
+                    let row_ptr = read_u32(off, d_out + 1);
+                    off += (d_out + 1) * 4;
+                    let col_idx = read_u32(off, n_outliers);
+                    off += n_outliers * 4;
+                    let values = read_f32(&blob, off, n_outliers);
+                    let q = crate::kernels::format::PackedSpqr {
+                        d_out,
+                        d_in,
+                        group,
+                        bits,
+                        packed_codes,
+                        scales,
+                        zeros,
+                        row_ptr,
+                        col_idx,
+                        values,
+                    };
+                    q.validate()?;
+                    Ok(Linear::spqr(q))
+                }
                 "groupint" => {
                     let (d_out, d_in) = (t.req_usize("d_out")?, t.req_usize("d_in")?);
                     let group = t.req_usize("group")?;
                     let bits = t.req_usize("bits")?;
-                    let n_groups = d_in / group;
+                    // div_ceil: ragged tail groups carry their own scale/zero.
+                    let n_groups = d_in.div_ceil(group);
                     let mut off = t.req_usize("offset")?;
                     let qcodes: Vec<u16> = (0..d_out * d_in)
                         .map(|i| u16::from_le_bytes([blob[off + 2 * i], blob[off + 2 * i + 1]]))
@@ -685,6 +776,7 @@ impl Model {
                 layer_bits.insert(name.clone(), bits);
             }
         }
+        let quant_policy = header.get("policy").and_then(|p| p.as_str()).map(str::to_string);
         Ok(Model {
             rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
             embed: get_dense("embed")?,
@@ -693,6 +785,7 @@ impl Model {
             blocks,
             cfg,
             layer_bits,
+            quant_policy,
         })
     }
 }
@@ -906,6 +999,53 @@ mod tests {
         let (l2, _) = m2.forward_logits(&tokens, 1, 3, false);
         assert!(l1.allclose(&l2, 1e-6));
         assert!((m.avg_bits() - m2.avg_bits()).abs() < 1e-9);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_packed_spqr() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(10);
+        let mut m = Model::init(&cfg, &mut rng);
+        // Ragged group (16 = 2·7 + 2 tail) + outliers: the full packed
+        // surface must survive save/load bit-for-bit.
+        let q = crate::kernels::format::random_spqr(16, 16, 7, 3, 0.05, &mut rng);
+        let bits_before = q.avg_bits();
+        m.blocks[0].attn.wq = Linear::spqr(q);
+        let path = std::env::temp_dir().join("aqlm_test_ckpt_spqr.bin");
+        m.save(&path).unwrap();
+        let mut m2 = Model::load(&path).unwrap();
+        assert!(m2.blocks[0].attn.wq.is_quantized());
+        let Linear::Spqr { q: q2, .. } = &m2.blocks[0].attn.wq else {
+            panic!("spqr kind not restored as Linear::Spqr");
+        };
+        assert_eq!(q2.avg_bits(), bits_before);
+        let tokens: Vec<u32> = vec![3, 1, 4];
+        let (l1, _) = m.forward_logits(&tokens, 1, 3, false);
+        let (l2, _) = m2.forward_logits(&tokens, 1, 3, false);
+        assert!(l1.allclose(&l2, 0.0), "spqr weights changed across save/load");
+        assert!((m.avg_bits() - m2.avg_bits()).abs() < 1e-12);
+        assert_eq!(m.weight_bytes(), m2.weight_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn quant_policy_survives_checkpoint_roundtrip() {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(11);
+        let mut m = Model::init(&cfg, &mut rng);
+        let policy = "*.wq=spqr:b=3,g=16,out=0.01;rtn:b=4,g=32";
+        m.quant_policy = Some(policy.to_string());
+        let path = std::env::temp_dir().join("aqlm_test_ckpt_policy.bin");
+        m.save(&path).unwrap();
+        let m2 = Model::load(&path).unwrap();
+        assert_eq!(m2.quant_policy.as_deref(), Some(policy));
+        // The restored string is a live policy: it reparses to the same
+        // rules the pipeline ran with.
+        let parsed = crate::quant::spec::LayerPolicy::parse(policy).unwrap();
+        let reparsed =
+            crate::quant::spec::LayerPolicy::parse(m2.quant_policy.as_deref().unwrap()).unwrap();
+        assert_eq!(parsed, reparsed);
         std::fs::remove_file(path).ok();
     }
 

@@ -232,8 +232,12 @@ pub fn emit_policy(
 
 /// Default candidate grid for a target: AQLM shapes chosen by
 /// [`choose_shape`] at half-bit offsets around the target (deduplicated —
-/// nearby targets often resolve to the same shape). Probes run with
-/// `ft=0,fast`; emitted specs carry `ft_steps`/`fast` as given.
+/// nearby targets often resolve to the same shape), plus packed-SpQR
+/// entries (`spqr:b=2..3,g=16,out=0.01`) so the allocator can route
+/// outlier-heavy layers to the sparse-outlier format — the mixed-*method*
+/// grid the ROADMAP's heterogeneous follow-up calls for. AQLM probes run
+/// with `ft=0,fast` and emit with `ft_steps`/`fast` as given; SpQR has no
+/// fine-tuning phase, so its probe and emit specs coincide.
 pub fn default_candidates(
     cfg: &ModelConfig,
     target_bits: f64,
@@ -247,7 +251,7 @@ pub fn default_candidates(
             shapes.push(shape);
         }
     }
-    shapes
+    let mut out: Vec<Candidate> = shapes
         .into_iter()
         .map(|shape| Candidate {
             probe: MethodSpec::Aqlm(AqlmSpec {
@@ -263,7 +267,12 @@ pub fn default_candidates(
                 fast,
             }),
         })
-        .collect()
+        .collect();
+    for bits in [2usize, 3] {
+        let spec = MethodSpec::Spqr { bits, group: 16, outlier_frac: 0.01 };
+        out.push(Candidate { probe: spec, emit: spec });
+    }
+    out
 }
 
 /// A probe + solve + emit result: everything `--auto-bits` prints.
@@ -477,12 +486,20 @@ mod tests {
             super::super::spec::build_quantizer(&c.probe, Some(&cfg)).unwrap();
             super::super::spec::build_quantizer(&c.emit, Some(&cfg)).unwrap();
         }
-        // Probe and emit share shapes, so their bits agree by construction.
+        // Probe and emit share the storage format, so their bits agree by
+        // construction: AQLM entries share shapes, SpQR entries coincide.
+        let mut n_spqr = 0usize;
         for c in &cands {
-            let (MethodSpec::Aqlm(p), MethodSpec::Aqlm(e)) = (&c.probe, &c.emit) else {
-                panic!("default grid is AQLM");
-            };
-            assert_eq!(p.shape, e.shape);
+            match (&c.probe, &c.emit) {
+                (MethodSpec::Aqlm(p), MethodSpec::Aqlm(e)) => assert_eq!(p.shape, e.shape),
+                (MethodSpec::Spqr { .. }, MethodSpec::Spqr { .. }) => {
+                    assert_eq!(c.probe, c.emit);
+                    n_spqr += 1;
+                }
+                other => panic!("unexpected candidate pair {other:?}"),
+            }
         }
+        // The grid lets SpQR compete per layer (mixed-method allocation).
+        assert!(n_spqr >= 2, "default grid lost its spqr entries");
     }
 }

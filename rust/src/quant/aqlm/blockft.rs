@@ -144,6 +144,14 @@ pub fn apply_block_grads(
                     }
                     lin.invalidate();
                 }
+                // Packed SpQR tunes its group scales like GroupInt; codes,
+                // zeros and the exact outliers stay frozen.
+                (lin @ Linear::Spqr { .. }, LinearGrad::Spqr { d_scales }) => {
+                    if let Linear::Spqr { q, .. } = lin {
+                        upd(format!("{name}.s"), &mut q.scales, d_scales);
+                    }
+                    lin.invalidate();
+                }
                 // Dense weights are never fine-tuned at block level (the
                 // paper freezes them; only quantized representations and
                 // norms move).

@@ -77,13 +77,15 @@ impl Quantizer for GptqQuantizer {
     }
 }
 
-/// Quantize `w` with GPTQ against calibration statistics.
+/// Quantize `w` with GPTQ against calibration statistics. Grouped mode
+/// handles `group ∤ d_in` with a ragged tail group: the trailing
+/// `d_in mod group` columns get their own scale/zero fitted at the group
+/// boundary like every full group.
 pub fn gptq_quantize(w: &Tensor, calib: &CalibData, cfg: GptqConfig) -> anyhow::Result<GroupIntWeight> {
     let (d_out, d_in) = (w.rows(), w.cols());
-    let group = if cfg.group == usize::MAX { d_in } else { cfg.group };
-    anyhow::ensure!(d_in % group == 0, "d_in {d_in} not divisible by group {group}");
+    let group = if cfg.group == usize::MAX { d_in } else { cfg.group.min(d_in) };
     anyhow::ensure!(!cfg.act_order || group == d_in, "act_order requires per-row scales");
-    let n_groups = d_in / group;
+    let n_groups = d_in.div_ceil(group);
     let qmax = ((1usize << cfg.bits) - 1) as f32;
 
     // Damped Hessian H = XXᵀ + λI (the conventional 2× factor cancels in
@@ -144,7 +146,8 @@ pub fn gptq_quantize(w: &Tensor, calib: &CalibData, cfg: GptqConfig) -> anyhow::
         let grp = c / group;
         if group < d_in && c % group == 0 {
             // Entering a new group (sequential order): fit its grid now.
-            let cols: Vec<usize> = (c..c + group).collect();
+            // The final group may be a ragged tail of d_in mod group cols.
+            let cols: Vec<usize> = (c..(c + group).min(d_in)).collect();
             compute_grid(&cols, &wt, grp, &mut scales, &mut zeros);
         }
         let dcc = hinv.at2(c, c);
@@ -250,6 +253,23 @@ mod tests {
         let q = gptq_quantize(&w, &calib, GptqConfig::grouped(2, 8)).unwrap();
         let e = relative_layer_error(&w, &q.decode(), &calib);
         assert!(e < e_rtn, "{e} !< {e_rtn}");
+    }
+
+    #[test]
+    fn ragged_grouped_gptq_quantizes_every_column() {
+        // d_in = 27 with group 8 → groups of widths 8, 8, 8, 3; the ragged
+        // tail used to fail the divisibility ensure.
+        let mut rng = Rng::seed_from_u64(6);
+        let w = Tensor::randn(&[12, 27], 1.0, &mut rng);
+        let calib = correlated_calib(27, 128, &mut rng);
+        let q = gptq_quantize(&w, &calib, GptqConfig::grouped(8, 8)).unwrap();
+        assert_eq!(q.n_groups(), 4);
+        assert_eq!(q.scales.len(), 12 * 4);
+        let e = relative_layer_error(&w, &q.decode(), &calib);
+        assert!(e < 1e-3, "tail columns left unquantized: rel_error {e}");
+        // Hand count: 8 bits/code + 4 group metas × 32 bits per row.
+        let hand = (12.0 * 27.0 * 8.0 + 12.0 * 4.0 * 32.0) / (12.0 * 27.0);
+        assert!((q.avg_bits() - hand).abs() < 1e-12, "{} vs {hand}", q.avg_bits());
     }
 
     #[test]

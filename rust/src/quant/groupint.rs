@@ -30,9 +30,18 @@ pub struct GroupIntWeight {
 }
 
 impl GroupIntWeight {
-    /// Number of scale groups per row.
+    /// Number of scale groups per row. When `group ∤ d_in` the final group
+    /// is a ragged tail of `d_in mod group` columns (it still gets its own
+    /// scale/zero), so every column is covered — `d_in / group` would
+    /// silently drop the tail.
     pub fn n_groups(&self) -> usize {
-        self.d_in / self.group
+        self.d_in.div_ceil(self.group)
+    }
+
+    /// Width of scale group `grp` (== `group` except for a ragged tail).
+    #[inline]
+    pub fn group_width(&self, grp: usize) -> usize {
+        self.group.min(self.d_in - grp * self.group)
     }
 
     /// Flat index of `(row, grp)` into the scales / zeros arrays.
@@ -53,9 +62,9 @@ impl GroupIntWeight {
         for i in 0..self.d_out {
             let row = w.row_mut(i);
             for j in 0..self.n_groups() {
-                let mi = i * (self.d_in / g) + j;
+                let mi = self.meta_index(i, j);
                 let (s, z) = (self.scales[mi], self.zeros[mi]);
-                for t in 0..g {
+                for t in 0..self.group_width(j) {
                     row[j * g + t] = s * (self.qcodes[i * self.d_in + j * g + t] as f32 - z);
                 }
             }
@@ -75,7 +84,7 @@ impl GroupIntWeight {
                 let mi = self.meta_index(i, j);
                 let z = self.zeros[mi];
                 let mut acc = 0.0f32;
-                for t in 0..g {
+                for t in 0..self.group_width(j) {
                     acc += dwr[j * g + t] * (self.qcodes[i * self.d_in + j * g + t] as f32 - z);
                 }
                 dscales[mi] += acc;
@@ -127,18 +136,20 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    /// RTN-quantize a full matrix (helper reused by rtn.rs tests).
+    /// RTN-quantize a full matrix (helper reused by rtn.rs tests). Handles
+    /// ragged tails (`group ∤ d_in`) like the production quantizers.
     pub fn quantize_matrix(w: &Tensor, group: usize, bits: usize) -> GroupIntWeight {
         let (d_out, d_in) = (w.rows(), w.cols());
-        assert_eq!(d_in % group, 0);
-        let n_groups = d_in / group;
+        let n_groups = d_in.div_ceil(group);
         let mut qcodes = vec![0u16; d_out * d_in];
         let mut scales = vec![0.0f32; d_out * n_groups];
         let mut zeros = vec![0.0f32; d_out * n_groups];
         for i in 0..d_out {
             for j in 0..n_groups {
-                let (codes, s, z) = quantize_group_minmax(&w.row(i)[j * group..(j + 1) * group], bits);
-                qcodes[i * d_in + j * group..i * d_in + (j + 1) * group].copy_from_slice(&codes);
+                let lo = j * group;
+                let hi = (lo + group).min(d_in);
+                let (codes, s, z) = quantize_group_minmax(&w.row(i)[lo..hi], bits);
+                qcodes[i * d_in + lo..i * d_in + hi].copy_from_slice(&codes);
                 scales[i * n_groups + j] = s;
                 zeros[i * n_groups + j] = z;
             }
@@ -205,6 +216,43 @@ mod tests {
             let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
             assert!((ds[mi] - fd).abs() < 1e-2, "mi={mi}: {} vs {fd}", ds[mi]);
         }
+    }
+
+    #[test]
+    fn ragged_tail_group_quantizes_every_column() {
+        // d_in = group·k + r with r > 0: the tail group must be quantized
+        // (not silently dropped, the old `d_in / group` truncation bug).
+        let mut rng = Rng::seed_from_u64(5);
+        for (d_in, group) in [(19usize, 8usize), (10, 4), (7, 16), (33, 16)] {
+            let w = Tensor::randn(&[6, d_in], 1.0, &mut rng);
+            let q = quantize_matrix(&w, group, 8);
+            assert_eq!(q.n_groups(), d_in.div_ceil(group), "d_in={d_in} g={group}");
+            assert_eq!(q.scales.len(), 6 * q.n_groups());
+            let deq = q.decode();
+            // 8-bit is near-lossless; a dropped tail column would decode to
+            // 0 and blow this tolerance immediately.
+            for i in 0..6 {
+                for j in 0..d_in {
+                    assert!(
+                        (deq.at2(i, j) - w.at2(i, j)).abs() < 0.05,
+                        "column {j} left unquantized at d_in={d_in} g={group}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_avg_bits_matches_hand_count() {
+        // d_in = 19, group = 8 → 3 groups per row (widths 8, 8, 3).
+        let mut rng = Rng::seed_from_u64(6);
+        let w = Tensor::randn(&[4, 19], 1.0, &mut rng);
+        let q = quantize_matrix(&w, 8, 3);
+        let params = 4.0 * 19.0;
+        let hand = (4.0 * 19.0 * 3.0 + 4.0 * 3.0 * 32.0) / params;
+        assert!((q.avg_bits() - hand).abs() < 1e-12, "{} vs {hand}", q.avg_bits());
+        assert_eq!(q.size_bits(), 4 * 19 * 3 + 4 * 3 * 32);
+        assert_eq!(q.group_width(2), 3);
     }
 
     #[test]

@@ -28,7 +28,7 @@
 //! | [`aqlm`] | §3 (the full algorithm: K-means init, beam search, codebook Adam, block FT, e2e KD) — spec `aqlm:MxB,g=G,ft=N` |
 //! | [`rtn`] | round-to-nearest baseline (Dettmers & Zettlemoyer 2022) — spec `rtn:b=B,g=G` |
 //! | [`gptq`] | GPTQ (Frantar et al. 2022), incl. App. L scale tuning — spec `gptq:b=B[,g=G][,tuned]` |
-//! | [`spqr`] | SpQR-lite: group quant + FP outliers (Dettmers et al. 2023) — spec `spqr:b=B,g=G,out=F` |
+//! | [`spqr`] | SpQR-lite: group quant + packed sparse FP outliers (Dettmers et al. 2023) — spec `spqr:b=B,g=G,out=F` |
 //! | [`quip`] | QuIP-lite: incoherence rotation + grid (Chee et al. 2023) — spec `quip:b=B,seed=S` |
 //! | [`groupint`] | shared scalar-quant storage format |
 //!
@@ -123,8 +123,9 @@ pub struct QuantReport {
 /// The result of quantizing one linear layer: the compressed (or
 /// dense-backed) weights, the storage cost, and which method produced it.
 /// `avg_bits` is authoritative even when the backing storage is dense
-/// (SpQR-lite / QuIP-lite) — the model persists it in its per-layer bits
-/// table so size accounting survives `save`/`load`.
+/// (QuIP-lite) — the model persists it in its per-layer bits table so size
+/// accounting survives `save`/`load`. AQLM, GroupInt and packed SpQR are
+/// structural: their storage format carries its own size.
 #[derive(Clone, Debug)]
 pub struct QuantizedLayer {
     /// The replacement layer (packed AQLM, grouped-int, or dense-backed).

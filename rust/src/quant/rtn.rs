@@ -45,25 +45,27 @@ impl Quantizer for RtnQuantizer {
     }
 }
 
-/// Quantize a full weight matrix with RTN.
+/// Quantize a full weight matrix with RTN. `group ∤ d_in` is handled with a
+/// ragged tail group (the trailing `d_in mod group` columns get their own
+/// scale/zero), so no column is ever left unquantized.
 pub fn rtn_quantize(w: &Tensor, cfg: RtnConfig) -> GroupIntWeight {
     let (d_out, d_in) = (w.rows(), w.cols());
-    assert_eq!(d_in % cfg.group, 0, "d_in {d_in} not divisible by group {}", cfg.group);
-    let n_groups = d_in / cfg.group;
+    let group = cfg.group.min(d_in);
+    let n_groups = d_in.div_ceil(group);
     let mut qcodes = vec![0u16; d_out * d_in];
     let mut scales = vec![0.0f32; d_out * n_groups];
     let mut zeros = vec![0.0f32; d_out * n_groups];
     for i in 0..d_out {
         for j in 0..n_groups {
-            let (codes, s, z) =
-                quantize_group_minmax(&w.row(i)[j * cfg.group..(j + 1) * cfg.group], cfg.bits);
-            qcodes[i * d_in + j * cfg.group..i * d_in + (j + 1) * cfg.group]
-                .copy_from_slice(&codes);
+            let lo = j * group;
+            let hi = (lo + group).min(d_in);
+            let (codes, s, z) = quantize_group_minmax(&w.row(i)[lo..hi], cfg.bits);
+            qcodes[i * d_in + lo..i * d_in + hi].copy_from_slice(&codes);
             scales[i * n_groups + j] = s;
             zeros[i * n_groups + j] = z;
         }
     }
-    GroupIntWeight { d_out, d_in, group: cfg.group, bits: cfg.bits, qcodes, scales, zeros }
+    GroupIntWeight { d_out, d_in, group, bits: cfg.bits, qcodes, scales, zeros }
 }
 
 #[cfg(test)]
@@ -92,6 +94,23 @@ mod tests {
         let e_g8 = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 8)).decode(), &calib);
         let e_g64 = relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 64)).decode(), &calib);
         assert!(e_g8 < e_g64, "{e_g8} vs {e_g64}");
+    }
+
+    #[test]
+    fn ragged_shapes_quantize_every_column() {
+        // Regression: `d_in / group` used to truncate, asserting (or worse,
+        // silently mis-handling) shapes with a ragged tail.
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Tensor::randn(&[8, 27], 1.0, &mut rng); // 27 = 16 + 11 tail
+        let q = rtn_quantize(&w, RtnConfig::new(8, 16));
+        assert_eq!(q.n_groups(), 2);
+        let calib = CalibData::identity(27);
+        let e = relative_layer_error(&w, &q.decode(), &calib);
+        assert!(e < 1e-3, "ragged tail columns left unquantized: rel_error {e}");
+        // Bits accounting covers the tail group's scale/zero: hand count is
+        // 8 bits/code + 2 group metas of 32 bits per row.
+        let hand = (8.0 * 27.0 * 8.0 + 8.0 * 2.0 * 32.0) / (8.0 * 27.0);
+        assert!((q.avg_bits() - hand).abs() < 1e-12, "{} vs {hand}", q.avg_bits());
     }
 
     #[test]

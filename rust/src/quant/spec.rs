@@ -14,7 +14,7 @@
 //! | `gptq:b=4` | GPTQ, 4-bit, per-row scales + act_order (the paper config) |
 //! | `gptq:b=4,g=16,tuned` | grouped GPTQ with Appendix-L block tuning |
 //! | `rtn:b=4,g=32` | round-to-nearest, 4-bit, group 32 |
-//! | `spqr:b=3,g=16,out=0.01` | SpQR-lite, 3-bit base + 1% FP outliers |
+//! | `spqr:b=3,g=16,out=0.01` | SpQR-lite, 3-bit base + 1% FP outliers (packed sparse storage) |
 //! | `quip:b=2,seed=9` | QuIP-lite, 2-bit incoherence-rotated grid |
 //!
 //! [`MethodSpec::parse`] and `Display` round-trip: `parse(x.to_string()) == x`
@@ -359,6 +359,7 @@ fn parse_gptq(items: &[SpecItem]) -> anyhow::Result<MethodSpec> {
         }
     }
     let bits = bits.ok_or_else(|| anyhow::anyhow!("gptq: missing b= (bit width)"))?;
+    anyhow::ensure!(group.is_none_or(|g| g >= 1), "gptq: group must be >= 1");
     anyhow::ensure!(ft.is_none() || tuned, "gptq: ft= requires the 'tuned' flag");
     let tune_steps = tuned.then(|| ft.unwrap_or(DEFAULT_GPTQ_TUNE_STEPS));
     Ok(MethodSpec::Gptq { bits, group, tune_steps })
@@ -723,6 +724,9 @@ mod tests {
         assert!(MethodSpec::parse("rtn:b=0").is_err());
         assert!(MethodSpec::parse("rtn:b=17").is_err());
         assert!(MethodSpec::parse("rtn:bogus=1").is_err());
+        assert!(MethodSpec::parse("rtn:b=4,g=0").is_err());
+        assert!(MethodSpec::parse("gptq:b=4,g=0").is_err()); // would div-by-zero downstream
+        assert!(MethodSpec::parse("spqr:b=3,g=0").is_err());
         assert!(MethodSpec::parse("gptq:b=4,ft=10").is_err()); // ft without tuned
         assert!(MethodSpec::parse("spqr:b=3,out=0.9").is_err());
         assert!(MethodSpec::parse("quip:seed=1").is_err()); // missing bits

@@ -1,14 +1,23 @@
 //! SpQR-lite (Dettmers et al., 2023): dense grouped quantization plus a
-//! highly-sparse full-precision outlier matrix.
+//! highly-sparse full-precision outlier matrix, stored and executed in
+//! **packed** form ([`PackedSpqr`]).
 //!
 //! The full SpQR quantizes scales/zeros to 3 bits and uses bilevel groups;
 //! this lite version keeps the essential mechanism the paper's comparison
 //! exercises: weights whose quantization error (weighted by input
 //! curvature) is largest are carried exactly, which repairs the group-scale
-//! blow-up that outliers cause for RTN/GPTQ.
+//! blow-up that outliers cause for RTN/GPTQ. Unlike the earlier
+//! dense-backed adapter (which materialized dequantized f32 weights and
+//! only *reported* compressed bits through the model's per-layer bits
+//! table), the result here is the packed structure itself: bit-packed base
+//! codes, per-group scale/zero, and CSR outlier rows with u32 column
+//! indices — so `weight_bytes()` reflects the real structural size and the
+//! serving path runs the fused sparse kernels in
+//! [`kernels::matvec`](crate::kernels::matvec).
 
 use super::gptq::{gptq_quantize, GptqConfig};
 use super::{CalibData, QuantizedLayer, Quantizer};
+use crate::kernels::format::PackedSpqr;
 use crate::nn::linear::Linear;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -18,7 +27,7 @@ use crate::util::rng::Rng;
 pub struct SpqrConfig {
     /// Integer bit width of the dense base quantization.
     pub bits: usize,
-    /// Scale-group size of the base quantization.
+    /// Scale-group size of the base quantization (ragged tails allowed).
     pub group: usize,
     /// Fraction of weights stored as exact outliers (paper uses ~1%).
     pub outlier_frac: f64,
@@ -31,40 +40,10 @@ impl SpqrConfig {
     }
 }
 
-/// Result: dense dequantized weights (with outliers patched in) + size
-/// metadata for the bits accounting.
-#[derive(Clone, Debug)]
-pub struct SpqrWeight {
-    /// Dequantized weights with outliers restored exactly.
-    pub dense: Tensor,
-    /// Number of weights carried at full precision.
-    pub n_outliers: usize,
-    /// Base quantization bit width.
-    pub bits: usize,
-    /// Base quantization group size.
-    pub group: usize,
-    /// Output dimension.
-    pub d_out: usize,
-    /// Input dimension.
-    pub d_in: usize,
-}
-
-impl SpqrWeight {
-    /// Average bits: base codes + 16-bit scale/zero per group + each
-    /// outlier at 16-bit value + 16-bit index (the paper's ~32 bits/outlier).
-    pub fn avg_bits(&self) -> f64 {
-        let params = self.d_out * self.d_in;
-        let n_groups = self.d_in / self.group;
-        let base = params * self.bits + self.d_out * n_groups * 32;
-        let outliers = self.n_outliers * 32;
-        (base + outliers) as f64 / params as f64
-    }
-}
-
 /// [`Quantizer`] adapter for SpQR-lite (spec `spqr:b=B,g=G,out=F`). The
-/// result is dense-backed (outliers patched into the dequantized matrix);
-/// the true compressed size travels as `QuantizedLayer::avg_bits` and is
-/// persisted in the model's per-layer bits table.
+/// result is a [`Linear::Spqr`] backed by the packed storage format, so its
+/// `avg_bits` is structural (no dense f32 backing, no reliance on the
+/// model's per-layer bits table).
 pub struct SpqrQuantizer(pub SpqrConfig);
 
 impl Quantizer for SpqrQuantizer {
@@ -80,16 +59,21 @@ impl Quantizer for SpqrQuantizer {
     ) -> anyhow::Result<QuantizedLayer> {
         let q = spqr_quantize(w, calib, self.0)?;
         let avg_bits = q.avg_bits();
-        Ok(QuantizedLayer { avg_bits, linear: Linear::dense(q.dense), method: self.name() })
+        Ok(QuantizedLayer { avg_bits, linear: Linear::spqr(q), method: self.name() })
     }
 }
 
-/// Quantize with SpQR-lite.
-pub fn spqr_quantize(w: &Tensor, calib: &CalibData, cfg: SpqrConfig) -> anyhow::Result<SpqrWeight> {
+/// Quantize with SpQR-lite, returning the packed execution format.
+///
+/// Base pass: grouped GPTQ at `cfg.bits`/`cfg.group` (ragged tail groups
+/// handled). Outlier pass: the `outlier_frac` fraction of weights with the
+/// largest curvature-weighted squared error are carried exactly as CSR
+/// entries that replace the base dequantization at their positions.
+pub fn spqr_quantize(w: &Tensor, calib: &CalibData, cfg: SpqrConfig) -> anyhow::Result<PackedSpqr> {
     let (d_out, d_in) = (w.rows(), w.cols());
     // Base pass: grouped GPTQ.
     let base = gptq_quantize(w, calib, GptqConfig::grouped(cfg.bits, cfg.group))?;
-    let mut dense = base.decode();
+    let dense = base.decode();
     // Sensitivity = squared error × Hessian diagonal (input energy).
     let n_out = ((d_out * d_in) as f64 * cfg.outlier_frac).round() as usize;
     let mut sens: Vec<(f32, usize)> = Vec::with_capacity(d_out * d_in);
@@ -101,18 +85,29 @@ pub fn spqr_quantize(w: &Tensor, calib: &CalibData, cfg: SpqrConfig) -> anyhow::
         }
     }
     sens.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-    for &(_, flat) in sens.iter().take(n_out) {
-        let (i, j) = (flat / d_in, flat % d_in);
-        dense.set2(i, j, w.at2(i, j));
-    }
-    Ok(SpqrWeight { dense, n_outliers: n_out, bits: cfg.bits, group: cfg.group, d_out, d_in })
+    // Selected flat indices, re-sorted ascending → CSR rows come out with
+    // strictly ascending column indices.
+    let mut flats: Vec<usize> = sens.iter().take(n_out).map(|&(_, f)| f).collect();
+    flats.sort_unstable();
+    let outliers: Vec<(usize, f32)> =
+        flats.iter().map(|&f| (f, w.at2(f / d_in, f % d_in))).collect();
+    PackedSpqr::from_parts(
+        d_out,
+        d_in,
+        base.group,
+        cfg.bits,
+        &base.qcodes,
+        base.scales,
+        base.zeros,
+        &outliers,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::rtn::{rtn_quantize, RtnConfig};
     use crate::quant::relative_layer_error;
+    use crate::quant::rtn::{rtn_quantize, RtnConfig};
     use crate::util::rng::Rng;
 
     fn outlier_weights(rng: &mut Rng) -> Tensor {
@@ -135,7 +130,7 @@ mod tests {
             relative_layer_error(&w, &rtn_quantize(&w, RtnConfig::new(3, 16)).decode(), &calib);
         let sq = spqr_quantize(&w, &calib, SpqrConfig { bits: 3, group: 16, outlier_frac: 0.01 })
             .unwrap();
-        let e_spqr = relative_layer_error(&w, &sq.dense, &calib);
+        let e_spqr = relative_layer_error(&w, &sq.decode(), &calib);
         assert!(e_spqr < e_rtn, "spqr {e_spqr} !< rtn {e_rtn}");
     }
 
@@ -146,10 +141,16 @@ mod tests {
         let calib = CalibData::identity(64);
         let cfg = SpqrConfig { bits: 3, group: 16, outlier_frac: 0.02 };
         let sq = spqr_quantize(&w, &calib, cfg).unwrap();
-        assert_eq!(sq.n_outliers, (16.0f64 * 64.0 * 0.02).round() as usize);
-        // bits: 3 + 32/16 (group meta) + 32·n_out/params (outliers)
-        let expect = 3.0 + 2.0 + 32.0 * sq.n_outliers as f64 / (16.0 * 64.0);
-        assert!((sq.avg_bits() - expect).abs() < 1e-9, "{}", sq.avg_bits());
+        sq.validate().unwrap();
+        assert_eq!(sq.n_outliers(), (16.0f64 * 64.0 * 0.02).round() as usize);
+        // Hand count: 3 code bits + 32/16 group meta + 48·n_out/params
+        // (16-bit value + u32 index) + 32·(d_out+1)/params CSR pointers.
+        let params = 16.0 * 64.0;
+        let expect = 3.0
+            + 2.0
+            + 48.0 * sq.n_outliers() as f64 / params
+            + 32.0 * (16.0 + 1.0) / params;
+        assert!((sq.avg_bits() - expect).abs() < 1e-9, "{} vs {expect}", sq.avg_bits());
     }
 
     #[test]
@@ -161,16 +162,38 @@ mod tests {
             &w,
             &spqr_quantize(&w, &calib, SpqrConfig { bits: 2, group: 16, outlier_frac: 0.005 })
                 .unwrap()
-                .dense,
+                .decode(),
             &calib,
         );
         let e2 = relative_layer_error(
             &w,
             &spqr_quantize(&w, &calib, SpqrConfig { bits: 2, group: 16, outlier_frac: 0.05 })
                 .unwrap()
-                .dense,
+                .decode(),
             &calib,
         );
         assert!(e2 < e1, "{e2} !< {e1}");
+    }
+
+    #[test]
+    fn ragged_shapes_quantize_every_column() {
+        // d_in = 27 with group 16 → a full group + an 11-column ragged tail;
+        // the old truncating accounting mis-handled exactly this shape.
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Tensor::randn(&[8, 27], 1.0, &mut rng);
+        let calib = CalibData::identity(27);
+        let sq = spqr_quantize(&w, &calib, SpqrConfig { bits: 8, group: 16, outlier_frac: 0.01 })
+            .unwrap();
+        sq.validate().unwrap();
+        assert_eq!(sq.n_groups(), 2);
+        let e = relative_layer_error(&w, &sq.decode(), &calib);
+        assert!(e < 1e-3, "tail columns left unquantized: rel_error {e}");
+        // Bits accounting covers the tail group's scale/zero.
+        let params = 8.0 * 27.0;
+        let expect = 8.0
+            + 8.0 * 2.0 * 32.0 / params
+            + 48.0 * sq.n_outliers() as f64 / params
+            + 32.0 * 9.0 / params;
+        assert!((sq.avg_bits() - expect).abs() < 1e-9, "{} vs {expect}", sq.avg_bits());
     }
 }

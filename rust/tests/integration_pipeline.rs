@@ -143,35 +143,100 @@ fn quantized_checkpoint_roundtrip_through_pipeline() {
 
 #[test]
 fn dense_backed_baselines_keep_size_metadata_through_checkpoint() {
-    // SpQR-lite and QuIP-lite store dequantized f32 weights; before the
-    // per-layer bits table, avg_bits()/weight_bytes() reported FP32 for
-    // them after quantization and after save/load.
+    // QuIP-lite stores dequantized f32 weights; before the per-layer bits
+    // table, avg_bits()/weight_bytes() reported FP32 for it after
+    // quantization and after save/load. (SpQR left this list when it
+    // gained true packed storage — see
+    // `packed_spqr_is_structural_and_token_identical` below.)
     let s = trained_setup(24);
     let mut rng = Rng::seed_from_u64(4);
-    for m in ["spqr:b=3,g=16,out=0.01", "quip:b=3,seed=5"] {
-        let mut q = s.model.clone();
-        let report =
-            quantize_model_spec(&mut q, &s.calib, s.n_seqs, s.seq, &spec(m), &mut rng).unwrap();
-        assert!(report.avg_bits < 8.0, "{m}: {}", report.avg_bits);
-        assert!(
-            (q.avg_bits() - report.avg_bits).abs() < 1e-6,
-            "{m}: model reports {} vs pipeline {}",
-            q.avg_bits(),
-            report.avg_bits
-        );
-        let dense_bytes = s.model.weight_bytes();
-        assert!(q.weight_bytes() < dense_bytes / 2, "{m}: no size win recorded");
-        let path = std::env::temp_dir().join(format!("aqlm_integration_{}.ckpt", spec(m).key()));
-        q.save(&path).unwrap();
-        let loaded = Model::load(&path).unwrap();
-        assert!(
-            (loaded.avg_bits() - report.avg_bits).abs() < 1e-6,
-            "{m}: bits lost across save/load: {}",
-            loaded.avg_bits()
-        );
-        assert_eq!(loaded.weight_bytes(), q.weight_bytes(), "{m}");
-        std::fs::remove_file(path).ok();
+    let m = "quip:b=3,seed=5";
+    let mut q = s.model.clone();
+    let report =
+        quantize_model_spec(&mut q, &s.calib, s.n_seqs, s.seq, &spec(m), &mut rng).unwrap();
+    assert!(report.avg_bits < 8.0, "{m}: {}", report.avg_bits);
+    assert!(
+        (q.avg_bits() - report.avg_bits).abs() < 1e-6,
+        "{m}: model reports {} vs pipeline {}",
+        q.avg_bits(),
+        report.avg_bits
+    );
+    let dense_bytes = s.model.weight_bytes();
+    assert!(q.weight_bytes() < dense_bytes / 2, "{m}: no size win recorded");
+    let path = std::env::temp_dir().join(format!("aqlm_integration_{}.ckpt", spec(m).key()));
+    q.save(&path).unwrap();
+    let loaded = Model::load(&path).unwrap();
+    assert!(
+        (loaded.avg_bits() - report.avg_bits).abs() < 1e-6,
+        "{m}: bits lost across save/load: {}",
+        loaded.avg_bits()
+    );
+    assert_eq!(loaded.weight_bytes(), q.weight_bytes(), "{m}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn packed_spqr_is_structural_and_token_identical() {
+    // The acceptance bar for the packed SpQR path: quantizing with
+    // `spqr:b=3,g=16,out=0.01` must (1) store the packed structure (no
+    // dense f32 backing; size accounting independent of the layer_bits
+    // fallback), (2) greedily decode token-identically to the previous
+    // dense-backed path, and (3) round-trip through a checkpoint with the
+    // policy string in the header.
+    use aqlm::nn::linear::Linear;
+    let s = trained_setup(26);
+    let mut rng = Rng::seed_from_u64(6);
+    let policy = LayerPolicy::parse("spqr:b=3,g=16,out=0.01").unwrap();
+    let mut q = s.model.clone();
+    let report = quantize_model(&mut q, &s.calib, s.n_seqs, s.seq, &policy, &mut rng).unwrap();
+
+    // (1) Structural storage: every linear is Linear::Spqr, weight_bytes
+    // shrinks accordingly, and clearing the bits table changes nothing —
+    // SpQR no longer rides the dense-backed fallback.
+    let mut dense_backed = q.clone();
+    for (b_q, b_d) in q.blocks.iter().zip(dense_backed.blocks.iter_mut()) {
+        for ((name, lin), (_, lin_d)) in b_q.linears().into_iter().zip(b_d.linears_mut()) {
+            let Linear::Spqr { q: packed, .. } = lin else {
+                panic!("{name}: expected Linear::Spqr, got a different backing");
+            };
+            *lin_d = Linear::dense(packed.decode());
+        }
     }
+    assert!((q.avg_bits() - report.avg_bits).abs() < 1e-6);
+    let mut no_table = q.clone();
+    no_table.layer_bits.clear();
+    assert!(
+        (no_table.avg_bits() - report.avg_bits).abs() < 1e-6,
+        "spqr size accounting still depends on the layer_bits fallback"
+    );
+    assert!(
+        q.weight_bytes() < s.model.weight_bytes() / 2,
+        "packed spqr recorded no structural size win"
+    );
+
+    // (2) Greedy decode is token-identical to the dense-backed path (the
+    // fused kernels are bit-equal to a GEMV over the decoded matrix).
+    let prompt = vec![aqlm::data::tokenizer::BOS, 5, 9, 2];
+    let toks_packed = q.clone().generate(&prompt, 24, 0.0, &mut Rng::seed_from_u64(0));
+    let toks_dense = dense_backed.generate(&prompt, 24, 0.0, &mut Rng::seed_from_u64(0));
+    assert_eq!(toks_packed, toks_dense, "packed spqr changed served tokens");
+
+    // (3) Checkpoint round-trip: packed arrays and the policy header.
+    assert_eq!(q.quant_policy.as_deref(), Some(policy.to_string().as_str()));
+    let path = std::env::temp_dir().join("aqlm_integration_spqr_packed.ckpt");
+    q.save(&path).unwrap();
+    let mut loaded = Model::load(&path).unwrap();
+    assert_eq!(loaded.quant_policy, q.quant_policy);
+    assert_eq!(
+        LayerPolicy::parse(loaded.quant_policy.as_deref().unwrap()).unwrap(),
+        policy,
+        "persisted policy no longer parses to what the pipeline ran"
+    );
+    assert!((loaded.avg_bits() - report.avg_bits).abs() < 1e-6);
+    assert_eq!(loaded.weight_bytes(), q.weight_bytes());
+    let toks_loaded = loaded.generate(&prompt, 24, 0.0, &mut Rng::seed_from_u64(0));
+    assert_eq!(toks_loaded, toks_packed, "checkpoint round-trip changed tokens");
+    std::fs::remove_file(path).ok();
 }
 
 #[test]

@@ -81,7 +81,7 @@ fn spqr_between_gptq_and_aqlm_with_outliers() {
         &w,
         &spqr_quantize(&w, &calib, SpqrConfig { bits: 3, group: 16, outlier_frac: 0.02 })
             .unwrap()
-            .dense,
+            .decode(),
         &calib,
     );
     assert!(e_spqr < e_gptq, "spqr {e_spqr} !< gptq {e_gptq}");

@@ -77,6 +77,30 @@ fn quantized_model_serves_same_greedy_tokens_as_offline() {
 }
 
 #[test]
+fn spqr_model_serves_same_greedy_tokens_as_offline() {
+    // Same parity bar for the packed sparse-outlier path: server greedy
+    // output through the fused SpQR matvec/matvec_batch kernels must equal
+    // offline generate on the same packed model.
+    use aqlm::quant::spqr::{spqr_quantize, SpqrConfig};
+    let mut m = model(4);
+    for block in &mut m.blocks {
+        for (_, lin) in block.linears_mut() {
+            let w = lin.weight_owned();
+            let calib = CalibData::identity(w.cols());
+            let q = spqr_quantize(&w, &calib, SpqrConfig { bits: 3, group: 16, outlier_frac: 0.02 })
+                .unwrap();
+            *lin = Linear::spqr(q);
+        }
+    }
+    let mut offline = m.clone();
+    let expected = offline.generate(&[5, 9, 2], 8, 0.0, &mut Rng::seed_from_u64(0));
+    let server = Server::start(m, ServerConfig::default());
+    let resp = server.submit(vec![5, 9, 2], 8, 0.0).recv().unwrap();
+    assert_eq!(resp.tokens, expected);
+    server.shutdown();
+}
+
+#[test]
 fn quantized_batched_decode_matches_offline_for_concurrent_sequences() {
     // The batched decode path (one matmat per layer for all active
     // sequences) must reproduce the single-sequence offline output

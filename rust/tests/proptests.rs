@@ -1,7 +1,7 @@
 //! Property-based tests over the crate's core invariants, via the
 //! built-in `propcheck` harness (proptest is unavailable offline).
 
-use aqlm::kernels::format::{AqlmShape, AqlmWeight};
+use aqlm::kernels::format::{AqlmShape, AqlmWeight, PackedSpqr};
 use aqlm::kernels::matvec::PackedAqlm;
 use aqlm::kernels::packed::{pack, unpack};
 use aqlm::quant::aqlm::beam::{beam_search_sweep, layer_loss};
@@ -257,6 +257,115 @@ fn prop_batched_kernels_bitexact_vs_sequential() {
             packed.matmat_decode(xs, n, &mut y2);
             if y1.iter().zip(&y2).any(|(a, b)| a.to_bits() != b.to_bits()) {
                 return Err(format!("matmat_decode != n×matvec_decode (bitwise), g={}", q.group));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------- packed SpQR
+
+/// Random packed-SpQR weight: random shape (ragged tails included), bit
+/// width, group size and outlier fraction. Construction goes through
+/// `PackedSpqr::from_parts` — the same CSR builder the quantizer uses —
+/// so the property tests exercise exactly the production layout.
+fn random_packed_spqr(rng: &mut Rng) -> PackedSpqr {
+    let d_out = 1 + rng.below(24);
+    let d_in = 1 + rng.below(48);
+    let group = 1 + rng.below(20); // often does not divide d_in
+    let bits = 2 + rng.below(7); // 2..=8
+    let frac = rng.f64() * 0.1;
+    let n_groups = d_in.div_ceil(group);
+    let codes: Vec<u16> = (0..d_out * d_in).map(|_| rng.below(1usize << bits) as u16).collect();
+    let scales: Vec<f32> = (0..d_out * n_groups).map(|_| 0.05 + rng.f32()).collect();
+    let zeros: Vec<f32> =
+        (0..d_out * n_groups).map(|_| rng.f32() * ((1usize << bits) - 1) as f32).collect();
+    let n_out = ((d_out * d_in) as f64 * frac).round() as usize;
+    let mut flats: Vec<usize> = Vec::new();
+    while flats.len() < n_out {
+        let f = rng.below(d_out * d_in);
+        if !flats.contains(&f) {
+            flats.push(f);
+        }
+    }
+    flats.sort_unstable();
+    let outliers: Vec<(usize, f32)> =
+        flats.iter().map(|&f| (f, rng.normal_f32(0.0, 5.0))).collect();
+    PackedSpqr::from_parts(d_out, d_in, group, bits, &codes, scales, zeros, &outliers).unwrap()
+}
+
+#[test]
+fn prop_packed_spqr_matvec_bitexact_vs_dense() {
+    // The packed sparse-outlier kernel must equal a dense GEMV over the
+    // decoded matrix within **0 ulp**, and the batched kernel must equal
+    // repeated single-vector calls bit-for-bit — for random shapes
+    // (ragged tails included) and outlier fractions.
+    check_no_shrink(
+        "spqr-matvec-vs-dense",
+        &cfg(48),
+        |rng: &mut Rng| {
+            let q = random_packed_spqr(rng); // from_parts validates on build
+            let n = 1 + rng.below(8);
+            let xs: Vec<f32> = (0..n * q.d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            (q, n, xs)
+        },
+        |(q, n, xs)| {
+            let (n, d_in, d_out) = (*n, q.d_in, q.d_out);
+            let dense = q.decode();
+            let mut scratch = Vec::new();
+            let mut y = vec![0.0f32; d_out];
+            let mut y_ref = vec![0.0f32; d_out];
+            let mut y_single = vec![0.0f32; n * d_out];
+            for b in 0..n {
+                let x = &xs[b * d_in..(b + 1) * d_in];
+                q.matvec(x, &mut scratch, &mut y);
+                aqlm::tensor::ops::gemv(&dense, x, &mut y_ref);
+                for i in 0..d_out {
+                    if y[i].to_bits() != y_ref[i].to_bits() {
+                        return Err(format!(
+                            "row {i} not bit-equal to dense (g={}, d_in={}, bits={}): {} vs {}",
+                            q.group, d_in, q.bits, y[i], y_ref[i]
+                        ));
+                    }
+                }
+                y_single[b * d_out..(b + 1) * d_out].copy_from_slice(&y);
+            }
+            let mut ys = vec![0.0f32; n * d_out];
+            q.matvec_batch(xs, n, &mut scratch, &mut ys);
+            if ys.iter().zip(&y_single).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!(
+                    "matvec_batch != n×matvec (bitwise), n={n} g={} d_in={d_in}",
+                    q.group
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_spqr_ragged_accounting() {
+    // Ragged tails: every column is covered by a scale group, and the bits
+    // accounting matches a hand count of the packed arrays.
+    check_no_shrink(
+        "spqr-ragged-accounting",
+        &cfg(64),
+        |rng: &mut Rng| random_packed_spqr(rng),
+        |q| {
+            let ng = q.n_groups();
+            if ng != q.d_in.div_ceil(q.group) {
+                return Err("n_groups truncated".into());
+            }
+            let covered: usize = (0..ng).map(|j| q.group_width(j)).sum();
+            if covered != q.d_in {
+                return Err(format!("groups cover {covered} of {} columns", q.d_in));
+            }
+            let hand = q.d_out * q.d_in * q.bits
+                + q.d_out * ng * 2 * 16
+                + q.values.len() * (16 + 32)
+                + (q.d_out + 1) * 32;
+            if q.size_bits() != hand {
+                return Err(format!("size_bits {} != hand count {hand}", q.size_bits()));
             }
             Ok(())
         },

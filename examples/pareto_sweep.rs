@@ -1,11 +1,13 @@
 //! Pareto sweep (Figures 1/5/6 + 8 + 9): quantize the model family across
 //! bit widths, plot PPL vs size, verify the paper's claim that ~2.5-bit
 //! AQLM models are on the accuracy-size frontier — then run the
-//! heterogeneous sweep, where a `LayerPolicy` gives attention and MLP
-//! linears different method specs (e.g. 3-bit AQLM attention + 2-bit MLP),
-//! and finally the automatic rate-distortion allocation (`--auto-bits`),
-//! which solves the per-layer assignment from measured sensitivities and
-//! lands its points against the hand-written ones.
+//! heterogeneous sweep across the family (nano + tiny; `small` under the
+//! full profile), where a `LayerPolicy` gives attention and MLP linears
+//! different method specs (e.g. 3-bit AQLM attention + 2-bit MLP), and
+//! finally the automatic rate-distortion allocation (`--auto-bits`),
+//! which solves the assignment from measured sensitivities at per-layer
+//! *and* per-block granularity (`--granularity`, coalesced `b3.*` glob
+//! policies) and lands each series against the hand-written points.
 //!
 //!     cargo run --release --example pareto_sweep
 

@@ -4,20 +4,25 @@
 //! frontier (the mixed-precision points only [`LayerPolicy`] can produce)
 //! — and figure 9, the automatic rate-distortion allocation
 //! ([`alloc`](crate::quant::alloc), `--auto-bits`) landed against f8's
-//! hand-written policies and the uniform frontier.
+//! hand-written policies and the uniform frontier. Figures 8 and 9 sweep
+//! the model family (nano/tiny, plus small under `--full`), and f9 lands
+//! one auto series per allocator granularity (per-layer and per-block),
+//! so the heterogeneous claims are measured across sizes rather than on a
+//! single model.
 
 use super::tables::{aqlm_spec, aqlm_spec_with_shape, profile_ft_steps};
 use super::workspace::Workspace;
 use crate::coordinator::pipeline::probe_layer_sensitivity;
 use crate::coordinator::shapes::choose_shape;
 use crate::eval::pareto::{
-    ascii_plot, frontier, is_pareto_optimal, on_combined_frontier, ParetoPoint,
+    ascii_plot, frontier, is_pareto_optimal, on_combined_frontier, per_series_frontier,
+    ParetoPoint,
 };
 use crate::eval::report::{f2, Table};
 use crate::nn::linear::Linear;
 use crate::nn::model::Model;
 use crate::quant::alloc::{
-    allocate, allocation_summary, default_candidates, emit_policy, Candidate,
+    allocate_at, allocation_summary, default_candidates, emit_policy, Candidate,
 };
 use crate::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
 use crate::quant::spec::{LayerPolicy, MethodSpec};
@@ -55,7 +60,7 @@ fn uniform_aqlm_points(
 fn hand_policy_points(
     ws: &mut Workspace,
     base: &Model,
-    policies: &[(&str, String)],
+    policies: &[(String, String)],
 ) -> anyhow::Result<(Vec<ParetoPoint>, Vec<(String, f64)>)> {
     let mut points = Vec::new();
     let mut rows = Vec::new();
@@ -278,179 +283,242 @@ pub fn f7_codebook_analysis(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// The model-family presets a figure sweeps: the fast profile keeps the
+/// nano/tiny pair tractable on one core, `--full` adds `small` so family
+/// claims (LLMC-style: a quantization result must hold *across* sizes,
+/// not on one model) rest on three sizes.
+fn family_presets(ws: &Workspace) -> Vec<&'static str> {
+    if ws.profile.fast {
+        vec!["nano", "tiny"]
+    } else {
+        vec!["nano", "tiny", "small"]
+    }
+}
+
 /// Figure 8: heterogeneous per-layer policies vs the uniform AQLM frontier
 /// (rate-distortion-style allocation — attention and MLP linears get
 /// different bit widths, the configurations a single uniform method cannot
-/// produce).
+/// produce), measured across the model family. Each preset gets its own
+/// combined frontier: sizes are not comparable across presets, and the
+/// claim under test is per-model ("does the mix extend *this* model's
+/// frontier"), swept family-wide so it cannot be a one-size artifact.
 pub fn f8_hetero_pareto(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     let mut t = Table::new(
-        "Figure 8: heterogeneous layer policies vs the uniform frontier (nano)",
-        &["Point", "Policy", "Avg bits", "Size (bytes)", "Wiki2 PPL", "On combined frontier?"],
+        "Figure 8: heterogeneous layer policies vs the uniform frontier (model family)",
+        &[
+            "Model",
+            "Point",
+            "Policy",
+            "Avg bits",
+            "Size (bytes)",
+            "Wiki2 PPL",
+            "On combined frontier?",
+        ],
     );
-    let mut base = ws.base_model("nano")?;
+    for preset in family_presets(ws) {
+        let mut base = ws.base_model(preset)?;
 
-    // Uniform baseline sweep (the frontier heterogeneous points must beat).
-    let mut uniform: Vec<ParetoPoint> = vec![ParetoPoint {
-        label: "fp32".into(),
-        size_bytes: base.weight_bytes() as u64,
-        ppl: ws.eval_ppl(&mut base),
-    }];
-    let mut uniform_rows: Vec<(String, f64)> = vec![("fp32".into(), 16.0)];
-    let (upoints, urows) = uniform_aqlm_points(ws, &base, &[2.0, 3.0, 4.0], "aqlm-")?;
-    uniform.extend(upoints);
-    uniform_rows.extend(urows);
+        // Uniform baseline sweep (the frontier the mixes must beat).
+        let mut uniform: Vec<ParetoPoint> = vec![ParetoPoint {
+            label: format!("{preset}-fp32"),
+            size_bytes: base.weight_bytes() as u64,
+            ppl: ws.eval_ppl(&mut base),
+        }];
+        let mut uniform_rows: Vec<(String, f64)> = vec![("fp32".into(), 16.0)];
+        let (upoints, urows) =
+            uniform_aqlm_points(ws, &base, &[2.0, 3.0, 4.0], &format!("{preset}-aqlm-"))?;
+        uniform.extend(upoints);
+        uniform_rows.extend(urows);
 
-    // Heterogeneous policies: route attention and MLP linears to different
-    // specs. Specs are Displayed back into policy strings, so the exact
-    // grammar the CLI's --policy flag takes is what runs here.
-    let attn3 = aqlm_spec(ws, &base.cfg, 3.0).0;
-    let attn2 = aqlm_spec(ws, &base.cfg, 2.0).0;
-    let hetero_policies = [
-        ("attn3b+mlp2b", format!("{};{attn2}", attn_rules(&attn3))),
-        ("attn2b+mlp3b", format!("{};{attn3}", attn_rules(&attn2))),
-        ("attn-aqlm3b+mlp-gptq2b", format!("{};gptq:b=2,g=16", attn_rules(&attn3))),
-    ];
-    let (hetero, hetero_rows) = hand_policy_points(ws, &base, &hetero_policies)?;
+        // Heterogeneous policies: route attention and MLP linears to
+        // different specs. Specs are Displayed back into policy strings, so
+        // the exact grammar the CLI's --policy flag takes is what runs here.
+        let attn3 = aqlm_spec(ws, &base.cfg, 3.0).0;
+        let attn2 = aqlm_spec(ws, &base.cfg, 2.0).0;
+        let hetero_policies = [
+            (format!("{preset}-attn3b+mlp2b"), format!("{};{attn2}", attn_rules(&attn3))),
+            (format!("{preset}-attn2b+mlp3b"), format!("{};{attn3}", attn_rules(&attn2))),
+            (
+                format!("{preset}-attn-aqlm3b+mlp-gptq2b"),
+                format!("{};gptq:b=2,g=16", attn_rules(&attn3)),
+            ),
+        ];
+        let (hetero, hetero_rows) = hand_policy_points(ws, &base, &hetero_policies)?;
 
-    // Both sections report against the *combined* point set, so a uniform
-    // point dominated by a heterogeneous one is marked off-frontier too.
-    let mut all = uniform.clone();
-    all.extend(hetero.iter().cloned());
-    let on_frontier = on_combined_frontier(&uniform, &hetero);
-    for (p, (policy, bits)) in uniform.iter().zip(&uniform_rows) {
-        t.row(vec![
-            p.label.clone(),
-            policy.clone(),
-            f2(*bits),
-            p.size_bytes.to_string(),
-            f2(p.ppl),
-            if is_pareto_optimal(p, &all) { "yes".into() } else { "no".into() },
-        ]);
+        // Both sections report against this preset's *combined* point set,
+        // so a uniform point dominated by a heterogeneous one is marked
+        // off-frontier too.
+        let mut all = uniform.clone();
+        all.extend(hetero.iter().cloned());
+        let on_frontier = on_combined_frontier(&uniform, &hetero);
+        for (p, (policy, bits)) in uniform.iter().zip(&uniform_rows) {
+            t.row(vec![
+                preset.to_string(),
+                p.label.clone(),
+                policy.clone(),
+                f2(*bits),
+                p.size_bytes.to_string(),
+                f2(p.ppl),
+                if is_pareto_optimal(p, &all) { "yes".into() } else { "no".into() },
+            ]);
+        }
+        for ((p, (policy, bits)), on) in hetero.iter().zip(&hetero_rows).zip(&on_frontier) {
+            t.row(vec![
+                preset.to_string(),
+                p.label.clone(),
+                policy.clone(),
+                f2(*bits),
+                p.size_bytes.to_string(),
+                f2(p.ppl),
+                if *on { "yes".into() } else { "no".into() },
+            ]);
+        }
+        println!("{}", ascii_plot(&all, 64, 16));
+        println!(
+            "{preset} combined frontier: {}",
+            frontier(&all).iter().map(|p| p.label.as_str()).collect::<Vec<_>>().join(" -> ")
+        );
     }
-    for ((p, (policy, bits)), on) in hetero.iter().zip(&hetero_rows).zip(&on_frontier) {
-        t.row(vec![
-            p.label.clone(),
-            policy.clone(),
-            f2(*bits),
-            p.size_bytes.to_string(),
-            f2(p.ppl),
-            if *on { "yes".into() } else { "no".into() },
-        ]);
-    }
-    println!("{}", ascii_plot(&all, 64, 16));
-    println!(
-        "combined frontier: {}",
-        frontier(&all).iter().map(|p| p.label.as_str()).collect::<Vec<_>>().join(" -> ")
-    );
     Ok(vec![t])
 }
 
 /// Figure 9: automatic rate-distortion bit allocation (`--auto-bits`)
 /// against figure f8's hand-written heterogeneous policies and the uniform
-/// AQLM frontier. Each auto point probes per-layer sensitivities on the
-/// calibration slice, solves the allocation for its target budget, and
-/// runs the emitted policy through the ordinary pipeline — the printed
-/// policy strings reproduce every point via `aqlm quantize --policy`.
+/// AQLM frontier — across the model family, with one auto series *per
+/// granularity* (per-layer and per-block decision units; `aqlm quantize
+/// --granularity`). Each auto point probes per-layer sensitivities on the
+/// calibration slice, solves the allocation for its target budget at its
+/// granularity, and runs the emitted (coalesced) policy through the
+/// ordinary pipeline — the printed policy strings reproduce every point
+/// via `aqlm quantize --policy`.
 pub fn f9_auto_vs_hand(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
+    use crate::quant::alloc::Granularity;
     let mut t = Table::new(
-        "Figure 9: auto bit allocation vs hand-written policies (nano)",
-        &["Point", "Allocation", "Avg bits", "Size (bytes)", "Wiki2 PPL", "On combined frontier?"],
+        "Figure 9: auto bit allocation vs hand-written policies (model family)",
+        &[
+            "Model",
+            "Point",
+            "Granularity",
+            "Allocation",
+            "Avg bits",
+            "Size (bytes)",
+            "Wiki2 PPL",
+            "On combined frontier?",
+        ],
     );
-    let mut base = ws.base_model("nano")?;
     let auto_targets = [2.0, 2.5, 3.0];
+    let granularities = [Granularity::PerLayer, Granularity::PerBlock];
+    for preset in family_presets(ws) {
+        let mut base = ws.base_model(preset)?;
 
-    // Baseline set: the uniform sweep and f8's hand-written mixes — the
-    // frontier the allocator has to meet or extend (same construction as
-    // f8, via the shared helpers).
-    let mut baseline: Vec<ParetoPoint> = vec![ParetoPoint {
-        label: "fp32".into(),
-        size_bytes: base.weight_bytes() as u64,
-        ppl: ws.eval_ppl(&mut base),
-    }];
-    let mut baseline_rows: Vec<(String, f64)> = vec![("fp32".into(), 16.0)];
-    let (upoints, urows) = uniform_aqlm_points(ws, &base, &[2.0, 2.5, 3.0, 4.0], "uniform-")?;
-    baseline.extend(upoints);
-    baseline_rows.extend(urows);
-    let attn3 = aqlm_spec(ws, &base.cfg, 3.0).0;
-    let attn2 = aqlm_spec(ws, &base.cfg, 2.0).0;
-    let hand = [
-        ("hand-attn3b+mlp2b", format!("{};{attn2}", attn_rules(&attn3))),
-        ("hand-attn2b+mlp3b", format!("{};{attn3}", attn_rules(&attn2))),
-    ];
-    let (hpoints, hrows) = hand_policy_points(ws, &base, &hand)?;
-    baseline.extend(hpoints);
-    baseline_rows.extend(hrows);
+        // Baseline set: the uniform sweep and f8's hand-written mixes — the
+        // frontier the allocator has to meet or extend (same construction
+        // as f8, via the shared helpers).
+        let mut baseline: Vec<ParetoPoint> = vec![ParetoPoint {
+            label: format!("{preset}-fp32"),
+            size_bytes: base.weight_bytes() as u64,
+            ppl: ws.eval_ppl(&mut base),
+        }];
+        let mut baseline_rows: Vec<(String, f64)> = vec![("fp32".into(), 16.0)];
+        let (upoints, urows) =
+            uniform_aqlm_points(ws, &base, &[2.0, 2.5, 3.0, 4.0], &format!("{preset}-uniform-"))?;
+        baseline.extend(upoints);
+        baseline_rows.extend(urows);
+        let attn3 = aqlm_spec(ws, &base.cfg, 3.0).0;
+        let attn2 = aqlm_spec(ws, &base.cfg, 2.0).0;
+        let hand = [
+            (format!("{preset}-hand-attn3b+mlp2b"), format!("{};{attn2}", attn_rules(&attn3))),
+            (format!("{preset}-hand-attn2b+mlp3b"), format!("{};{attn3}", attn_rules(&attn2))),
+        ];
+        let (hpoints, hrows) = hand_policy_points(ws, &base, &hand)?;
+        baseline.extend(hpoints);
+        baseline_rows.extend(hrows);
 
-    // Auto points: one sensitivity probe over the union of the per-target
-    // candidate grids (nearby targets share most shapes, so probing per
-    // target would mostly recompute the same quantizations), then the
-    // cheap solver + a pipeline run per target. The probe never mutates
-    // the model, so it runs on `base` directly.
-    let ft = profile_ft_steps(ws);
-    let n = ws.profile.calib_seqs;
-    let calib = ws.calib_tokens(n);
-    let mut candidates: Vec<Candidate> = Vec::new();
-    for target in auto_targets {
-        for c in default_candidates(&base.cfg, target, ft, ws.profile.fast) {
-            if !candidates.contains(&c) {
-                candidates.push(c);
+        // One sensitivity probe per preset over the union of the per-target
+        // candidate grids (nearby targets share most shapes, so probing per
+        // target would mostly recompute the same quantizations); the solver
+        // is cheap, so every (granularity, target) pair reuses the table.
+        // The probe never mutates the model, so it runs on `base` directly.
+        let ft = profile_ft_steps(ws);
+        let n = ws.profile.calib_seqs;
+        let calib = ws.calib_tokens(n);
+        let mut candidates: Vec<Candidate> = Vec::new();
+        for target in auto_targets {
+            for c in default_candidates(&base.cfg, target, ft, ws.profile.fast) {
+                if !candidates.contains(&c) {
+                    candidates.push(c);
+                }
             }
         }
-    }
-    let probe_specs: Vec<MethodSpec> = candidates.iter().map(|c| c.probe).collect();
-    let mut prng = Rng::seed_from_u64(ws.profile.seed ^ 0xa110c);
-    let table =
-        probe_layer_sensitivity(&mut base, &calib, n, ws.profile.seq, &probe_specs, &mut prng)?;
-    let mut auto_points: Vec<ParetoPoint> = Vec::new();
-    let mut auto_rows: Vec<(String, f64)> = Vec::new();
-    for target in auto_targets {
-        let allocation = allocate(&table, target)?;
-        let policy = emit_policy(&table, &candidates, &allocation);
-        let (mut q, report) = ws.quantize_policy(&base, &policy)?;
-        // The probe's budget prediction is exact: storage depends only on
-        // the candidate shapes, which probe and pipeline runs share.
-        anyhow::ensure!(
-            (report.avg_bits - allocation.avg_bits).abs() < 1e-6,
-            "auto@{target}: predicted {} bits, pipeline measured {}",
-            allocation.avg_bits,
-            report.avg_bits
-        );
-        println!("auto@{target}: {policy}");
-        auto_points.push(ParetoPoint {
-            label: format!("auto@{target}"),
-            size_bytes: q.weight_bytes() as u64,
-            ppl: ws.eval_ppl(&mut q),
-        });
-        auto_rows.push((allocation_summary(&candidates, &allocation), report.avg_bits));
-    }
+        let probe_specs: Vec<MethodSpec> = candidates.iter().map(|c| c.probe).collect();
+        let mut prng = Rng::seed_from_u64(ws.profile.seed ^ 0xa110c);
+        let table = probe_layer_sensitivity(
+            &mut base,
+            &calib,
+            n,
+            ws.profile.seq,
+            &probe_specs,
+            &mut prng,
+        )?;
+        let mut series: Vec<(&str, Vec<ParetoPoint>)> = vec![("baseline", baseline)];
+        let mut series_rows: Vec<Vec<(String, String)>> =
+            vec![baseline_rows.iter().map(|(d, b)| (d.clone(), f2(*b))).collect()];
+        for granularity in granularities {
+            let mut pts: Vec<ParetoPoint> = Vec::new();
+            let mut rows: Vec<(String, String)> = Vec::new();
+            for target in auto_targets {
+                let allocation = allocate_at(&table, target, granularity)?;
+                let policy = emit_policy(&table, &candidates, &allocation);
+                let (mut q, report) = ws.quantize_policy(&base, &policy)?;
+                // The probe's budget prediction is exact: storage depends
+                // only on the candidate shapes, which probe and pipeline
+                // runs share.
+                anyhow::ensure!(
+                    (report.avg_bits - allocation.avg_bits).abs() < 1e-6,
+                    "{preset} auto@{target}/{granularity}: predicted {} bits, pipeline \
+                     measured {}",
+                    allocation.avg_bits,
+                    report.avg_bits
+                );
+                println!("{preset} auto@{target}/{granularity}: {policy}");
+                pts.push(ParetoPoint {
+                    label: format!("{preset}-auto@{target}/{granularity}"),
+                    size_bytes: q.weight_bytes() as u64,
+                    ppl: ws.eval_ppl(&mut q),
+                });
+                rows.push((
+                    allocation_summary(&candidates, &allocation),
+                    f2(report.avg_bits),
+                ));
+            }
+            let name = if granularity == Granularity::PerLayer { "layer" } else { "block" };
+            series.push((name, pts));
+            series_rows.push(rows);
+        }
 
-    let mut all = baseline.clone();
-    all.extend(auto_points.iter().cloned());
-    let on_frontier = on_combined_frontier(&baseline, &auto_points);
-    for (p, (alloc_desc, bits)) in baseline.iter().zip(&baseline_rows) {
-        t.row(vec![
-            p.label.clone(),
-            alloc_desc.clone(),
-            f2(*bits),
-            p.size_bytes.to_string(),
-            f2(p.ppl),
-            if is_pareto_optimal(p, &all) { "yes".into() } else { "no".into() },
-        ]);
+        // Every series competes on one combined frontier per preset.
+        let flags = per_series_frontier(&series);
+        let mut all: Vec<ParetoPoint> = Vec::new();
+        for (((name, pts), rows), on) in series.iter().zip(&series_rows).zip(&flags) {
+            for ((p, (alloc_desc, bits)), on) in pts.iter().zip(rows).zip(on) {
+                t.row(vec![
+                    preset.to_string(),
+                    p.label.clone(),
+                    if *name == "baseline" { "-".into() } else { (*name).to_string() },
+                    alloc_desc.clone(),
+                    bits.clone(),
+                    p.size_bytes.to_string(),
+                    f2(p.ppl),
+                    if *on { "yes".into() } else { "no".into() },
+                ]);
+            }
+            all.extend(pts.iter().cloned());
+        }
+        println!("{}", ascii_plot(&all, 64, 16));
+        println!(
+            "{preset} combined frontier: {}",
+            frontier(&all).iter().map(|p| p.label.as_str()).collect::<Vec<_>>().join(" -> ")
+        );
     }
-    for ((p, (alloc_desc, bits)), on) in auto_points.iter().zip(&auto_rows).zip(&on_frontier) {
-        t.row(vec![
-            p.label.clone(),
-            alloc_desc.clone(),
-            f2(*bits),
-            p.size_bytes.to_string(),
-            f2(p.ppl),
-            if *on { "yes".into() } else { "no".into() },
-        ]);
-    }
-    println!("{}", ascii_plot(&all, 64, 16));
-    println!(
-        "combined frontier: {}",
-        frontier(&all).iter().map(|p| p.label.as_str()).collect::<Vec<_>>().join(" -> ")
-    );
     Ok(vec![t])
 }

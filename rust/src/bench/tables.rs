@@ -245,10 +245,12 @@ fn e2e_table(ws: &mut Workspace, title: &str, target: f64) -> anyhow::Result<Vec
     Ok(vec![t])
 }
 
+/// Table 4: end-to-end (KD) fine-tuning at 2 bits.
 pub fn t4_e2e_2bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     e2e_table(ws, "Table 4: end-to-end fine-tuning at 2 bits", 2.0)
 }
 
+/// Table 6: end-to-end (KD) fine-tuning at 3 bits.
 pub fn t6_e2e_3bit(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     e2e_table(ws, "Table 6: end-to-end fine-tuning at 3 bits", 3.0)
 }

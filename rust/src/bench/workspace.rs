@@ -17,6 +17,7 @@ use std::path::PathBuf;
 /// `full` is what EXPERIMENTS.md reports where noted.
 #[derive(Clone, Copy, Debug)]
 pub struct Profile {
+    /// Fast mode: smaller budgets everywhere (the default CLI profile).
     pub fast: bool,
     /// Zero-shot instances per task.
     pub task_n: usize,
@@ -24,14 +25,17 @@ pub struct Profile {
     pub calib_seqs: usize,
     /// Sequence length used everywhere (train/calib/eval).
     pub seq: usize,
+    /// Seed shared by every experiment in the run.
     pub seed: u64,
 }
 
 impl Profile {
+    /// The quick profile every table runs under by default.
     pub fn fast() -> Profile {
         Profile { fast: true, task_n: 50, calib_seqs: 8, seq: 64, seed: 42 }
     }
 
+    /// The `--full` profile EXPERIMENTS.md reports where noted.
     pub fn full() -> Profile {
         Profile { fast: false, task_n: 150, calib_seqs: 16, seq: 64, seed: 42 }
     }
@@ -55,21 +59,31 @@ impl Profile {
 /// One evaluated model row (the paper's standard column set).
 #[derive(Clone, Debug)]
 pub struct EvalRow {
+    /// WikiText-2-analog perplexity.
     pub wiki_ppl: f64,
+    /// C4-analog perplexity.
     pub c4_ppl: f64,
     /// (task name, accuracy %) in Task::STANDARD order.
     pub tasks: Vec<(String, f64)>,
+    /// Mean accuracy over the task set.
     pub avg_acc: f64,
+    /// Compressed weight bytes of the evaluated model.
     pub weight_bytes: u64,
 }
 
+/// Shared state for one experiment run: profile, data bundle, and the
+/// `runs/` / `results/` directories.
 pub struct Workspace {
+    /// Scale knobs for every experiment in this run.
     pub profile: Profile,
+    /// The data bundle all experiments share.
     pub bundle: DataBundle,
+    /// Root under which `runs/` and `results/` are created.
     pub root: PathBuf,
 }
 
 impl Workspace {
+    /// Generate the data bundle and set up a workspace rooted at `.`.
     pub fn new(profile: Profile) -> Workspace {
         let sizes = DataSizes {
             train_tokens: 300_000,
@@ -81,12 +95,14 @@ impl Workspace {
         Workspace { profile, bundle, root: PathBuf::from(".") }
     }
 
+    /// `runs/` directory (cached base-model checkpoints), created on use.
     pub fn runs_dir(&self) -> PathBuf {
         let d = self.root.join("runs");
         std::fs::create_dir_all(&d).ok();
         d
     }
 
+    /// `results/` directory (saved tables), created on use.
     pub fn results_dir(&self) -> PathBuf {
         let d = self.root.join("results");
         std::fs::create_dir_all(&d).ok();

@@ -168,10 +168,12 @@ pub fn quantize_model_spec(
 /// propagation).
 ///
 /// Rows come back in model order with the same `b{i}.{name}` layer names
-/// the policy grammar uses; option order matches `specs`. Each layer/spec
-/// quantization forks the rng exactly like [`quantize_model`], so a
-/// candidate's probe matches the pipeline's later behavior as closely as
-/// the shared seed discipline allows.
+/// the policy grammar uses (`b3.wq`, and `b3.e2.wg` on MoE models — the
+/// names the allocator's [`Granularity`](crate::quant::alloc::Granularity)
+/// groups by when solving per block or per expert); option order matches
+/// `specs`. Each layer/spec quantization forks the rng exactly like
+/// [`quantize_model`], so a candidate's probe matches the pipeline's later
+/// behavior as closely as the shared seed discipline allows.
 pub fn probe_layer_sensitivity(
     model: &mut Model,
     calib_tokens: &[u32],
@@ -347,6 +349,36 @@ mod tests {
                 assert!(!lin.is_quantized(), "{name}");
                 assert!(lin.weight_owned().allclose(&lin0.weight_owned(), 0.0), "{name}");
             }
+        }
+    }
+
+    #[test]
+    fn probe_on_moe_model_names_experts_and_groups_per_expert() {
+        use crate::quant::alloc::{group_table, Granularity};
+        let mut cfg = mini_cfg();
+        cfg.n_experts = 2;
+        cfg.experts_top_k = 1;
+        let mut rng = Rng::seed_from_u64(11);
+        let mut model = Model::init(&cfg, &mut rng);
+        let sizes =
+            DataSizes { train_tokens: 4000, eval_tokens: 600, calib_tokens: 2000, seq_len: 16 };
+        let bundle = DataBundle::generate(3, sizes);
+        let (calib, _) = bundle.calib.sample_batch(4, &mut rng);
+        let specs = [spec("rtn:b=2,g=16"), spec("rtn:b=4,g=16")];
+        let table =
+            probe_layer_sensitivity(&mut model, &calib, 4, 16, &specs, &mut rng).unwrap();
+        // 4 attention + 2 experts × 3 linears per block.
+        assert_eq!(table.len(), 2 * (4 + 2 * 3));
+        assert!(table.iter().any(|r| r.layer == "b0.e0.wg"), "expert names missing");
+        assert!(table.iter().any(|r| r.layer == "b1.e1.wd"), "expert names missing");
+        // Expert granularity groups the probe rows the policy globs expect:
+        // per block, one group for attention + one per expert.
+        let g = group_table(&table, Granularity::PerExpert);
+        let keys: Vec<&str> = g.rows.iter().map(|r| r.layer.as_str()).collect();
+        assert_eq!(keys, vec!["b0", "b0.e0", "b0.e1", "b1", "b1.e0", "b1.e1"]);
+        for (row, members) in g.rows.iter().zip(&g.members) {
+            let want: usize = members.iter().map(|&i| table[i].params).sum();
+            assert_eq!(row.params, want, "{}", row.layer);
         }
     }
 

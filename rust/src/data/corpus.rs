@@ -28,23 +28,35 @@
 use super::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
 
+/// Determiners (TinyLang has only one).
 pub const DETS: &[&str] = &["the"];
+/// Size adjectives (ordered before color — the learnable order rule).
 pub const ADJ_SIZE: &[&str] = &["big", "small", "tiny", "huge"];
+/// Color adjectives.
 pub const ADJ_COLOR: &[&str] = &["red", "blue", "green", "black", "white"];
+/// Nouns (singular; [`plural`] derives the plural forms).
 pub const NOUNS: &[&str] = &[
     "cat", "dog", "bird", "fox", "wolf", "horse", "child", "king", "queen", "sailor",
 ];
+/// Singular verb forms, index-aligned with [`VERBS_PL`].
 pub const VERBS_SG: &[&str] = &[
     "sits", "runs", "sleeps", "sings", "jumps", "waits", "falls", "hides",
 ];
+/// Plural verb forms, index-aligned with [`VERBS_SG`].
 pub const VERBS_PL: &[&str] = &["sit", "run", "sleep", "sing", "jump", "wait", "fall", "hide"];
+/// Prepositions.
 pub const PREPS: &[&str] = &["in", "on", "near", "under"];
+/// Place nouns for scene sentences.
 pub const PLACES: &[&str] = &[
     "house", "river", "forest", "garden", "tower", "cave", "market", "harbor",
 ];
+/// Objects for in-context recall sentences.
 pub const OBJECTS: &[&str] = &["ruby", "coin", "key", "book", "crown", "pearl", "map", "lamp"];
+/// Containers objects are found in (recall sentences).
 pub const CONTAINERS: &[&str] = &["box", "chest", "jar", "bag", "drawer", "basket", "pot", "case"];
+/// World regions the facts range over.
 pub const REGIONS: &[&str] = &["north", "south", "east", "west", "coast", "valley", "plain", "isle"];
+/// Fact roles as `(role noun in statement, question verb)` pairs.
 pub const ROLE_WORDS: &[(&str, &str)] = &[
     // (role noun in statement, question verb for the "hard" phrasing)
     ("king", "rules"),
@@ -52,16 +64,19 @@ pub const ROLE_WORDS: &[(&str, &str)] = &[
     ("banner", "marks"),
     ("beast", "guards"),
 ];
+/// Proper names serving as fact values.
 pub const NAMES: &[&str] = &[
     "arthur", "boris", "cyrus", "doran", "edwin", "farid", "gareth", "hamid", "karak", "lumen",
     "mirth", "novar", "ostia", "pell", "quill", "rova",
 ];
+/// Number words; index is the numeric value (for arithmetic sentences).
 pub const NUMBERS: &[&str] = &[
     "zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine", "ten",
     "eleven", "twelve", "thirteen", "fourteen", "fifteen", "sixteen", "seventeen", "eighteen",
     "nineteen", "twentyone", "twentytwo", "twentythree", "twentyfour", "twentyfive", "twentysix",
     "twentyseven", "twenty",
 ];
+/// Punctuation and closed-class words.
 pub const FUNCTION_WORDS: &[&str] = &[
     ".", "?", "is", "are", "where", "what", "who", "of", "plus", "equals", "and",
 ];
@@ -69,9 +84,13 @@ pub const FUNCTION_WORDS: &[&str] = &[
 /// One memorized world fact: `the {role} of {region} is {value} .`
 #[derive(Clone, Debug, PartialEq)]
 pub struct Fact {
+    /// Role noun in the statement form (`king`).
     pub role: &'static str,
+    /// Question verb in the hard phrasing (`rules`).
     pub question_verb: &'static str,
+    /// The region this fact is about.
     pub region: &'static str,
+    /// The answer value (a proper name).
     pub value: &'static str,
 }
 
@@ -79,6 +98,7 @@ pub struct Fact {
 /// sentence mixture weights.
 #[derive(Clone, Debug)]
 pub struct World {
+    /// All `(role, region) → value` facts, every pair present exactly once.
     pub facts: Vec<Fact>,
 }
 
@@ -100,6 +120,7 @@ impl World {
         World { facts }
     }
 
+    /// Look up the fact for a (role, region) pair.
     pub fn fact_for(&self, role: &str, region: &str) -> Option<&Fact> {
         self.facts.iter().find(|f| f.role == role && f.region == region)
     }
@@ -143,10 +164,15 @@ pub fn plural(noun: &str) -> String {
 /// Sentence mixture weights (sums to 1.0 conceptually; sampled by weight).
 #[derive(Clone, Debug)]
 pub struct Mixture {
+    /// Subject–verb agreement sentences.
     pub agreement: f32,
+    /// Scene description sentences.
     pub scene: f32,
+    /// In-context key–value recall sentences.
     pub recall: f32,
+    /// World-fact statements and questions.
     pub fact: f32,
+    /// Arithmetic sentences.
     pub arith: f32,
 }
 
@@ -168,15 +194,19 @@ pub fn mixture_c4() -> Mixture {
 
 /// TinyLang sentence sampler over a fixed world.
 pub struct Generator<'w> {
+    /// The persistent fact world sentences draw from.
     pub world: &'w World,
+    /// Sentence-family weights.
     pub mixture: Mixture,
 }
 
 impl<'w> Generator<'w> {
+    /// Generator with the default (training) mixture.
     pub fn new(world: &'w World) -> Generator<'w> {
         Generator { world, mixture: Mixture::default() }
     }
 
+    /// Generator with an explicit mixture (the eval analogs).
     pub fn with_mixture(world: &'w World, mixture: Mixture) -> Generator<'w> {
         Generator { world, mixture }
     }

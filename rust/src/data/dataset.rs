@@ -12,11 +12,14 @@ use crate::util::rng::Rng;
 /// A contiguous token stream chunked into fixed-length sequences.
 #[derive(Clone, Debug)]
 pub struct TokenDataset {
+    /// The raw token stream.
     pub tokens: Vec<u32>,
+    /// Sequence length the stream is chunked into.
     pub seq_len: usize,
 }
 
 impl TokenDataset {
+    /// Wrap a token stream at the given sequence length.
     pub fn new(tokens: Vec<u32>, seq_len: usize) -> TokenDataset {
         TokenDataset { tokens, seq_len }
     }
@@ -56,8 +59,11 @@ impl TokenDataset {
 
 /// All data splits for one experiment, derived from a single seed.
 pub struct DataBundle {
+    /// The closed TinyLang tokenizer.
     pub tokenizer: Tokenizer,
+    /// The persistent fact world all splits share.
     pub world: World,
+    /// Training stream (default mixture; RedPajama analog).
     pub train: TokenDataset,
     /// WikiText-2 analog: plain-language eval split.
     pub eval_wiki: TokenDataset,
@@ -70,9 +76,13 @@ pub struct DataBundle {
 /// Sizes (in tokens) for each split.
 #[derive(Clone, Copy, Debug)]
 pub struct DataSizes {
+    /// Training-stream length.
     pub train_tokens: usize,
+    /// Length of *each* of the two eval splits.
     pub eval_tokens: usize,
+    /// Calibration-stream length.
     pub calib_tokens: usize,
+    /// Sequence length all splits are chunked into.
     pub seq_len: usize,
 }
 

@@ -36,16 +36,24 @@ pub struct TaskInstance {
 /// Task identifiers, in the paper's reporting order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Task {
+    /// Long-range subject–verb number agreement (WinoGrande analog).
     Agreement,
+    /// Grammatical vs scrambled word order (PiQA analog).
     Order,
+    /// In-context key–value recall (HellaSwag analog).
     Completion,
+    /// Memorized world facts, statement form (ARC-easy analog).
     FactEasy,
+    /// Memorized facts, paraphrased question form (ARC-challenge analog).
     FactHard,
+    /// 4-way fact choice across all domains (MMLU analog).
     MultiDomain,
+    /// Two-step addition, 4-way numeric choice (GSM8k analog).
     Arith,
 }
 
 impl Task {
+    /// Every task, in reporting order.
     pub const ALL: [Task; 7] = [
         Task::Agreement,
         Task::Order,
@@ -63,6 +71,7 @@ impl Task {
     /// The "hard" tasks of Appendix K (Table 15).
     pub const HARD: [Task; 2] = [Task::MultiDomain, Task::Arith];
 
+    /// Machine-readable task name.
     pub fn name(&self) -> &'static str {
         match self {
             Task::Agreement => "agreement",

@@ -6,9 +6,13 @@
 
 use std::collections::HashMap;
 
+/// Padding token id.
 pub const PAD: u32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: u32 = 1;
+/// End-of-sequence token id.
 pub const EOS: u32 = 2;
+/// Unknown-word token id.
 pub const UNK: u32 = 3;
 
 /// Bidirectional word↔id mapping.
@@ -37,6 +41,7 @@ impl Tokenizer {
         Tokenizer { word_to_id, id_to_word }
     }
 
+    /// Total vocabulary size including the 4 special tokens.
     pub fn vocab_size(&self) -> usize {
         self.id_to_word.len()
     }
@@ -47,10 +52,12 @@ impl Tokenizer {
         self.vocab_size().div_ceil(m) * m
     }
 
+    /// Id of a word ([`UNK`] for out-of-vocabulary words).
     pub fn id(&self, word: &str) -> u32 {
         *self.word_to_id.get(word).unwrap_or(&UNK)
     }
 
+    /// Word for an id (`"<unk>"` for out-of-range ids).
     pub fn word(&self, id: u32) -> &str {
         self.id_to_word.get(id as usize).map(|s| s.as_str()).unwrap_or("<unk>")
     }
@@ -68,6 +75,7 @@ impl Tokenizer {
         ids
     }
 
+    /// Decode ids back to text, dropping special tokens.
     pub fn decode(&self, ids: &[u32]) -> String {
         ids.iter()
             .filter(|&&i| i != PAD && i != BOS && i != EOS)

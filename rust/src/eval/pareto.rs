@@ -52,6 +52,23 @@ pub fn on_combined_frontier(baseline: &[ParetoPoint], candidates: &[ParetoPoint]
     candidates.iter().map(|c| is_pareto_optimal(c, &all)).collect()
 }
 
+/// Combined-frontier flags for several named series at once: every point
+/// of every series is judged against the union of *all* series, and one
+/// `Vec<bool>` comes back per series (same order and lengths as the
+/// input). This is the multi-series generalization of
+/// [`on_combined_frontier`] used by figure f9, where the uniform
+/// baseline, the hand-written mixes, and one auto-allocated series *per
+/// granularity* all compete on a single frontier per model. Labels must
+/// be unique across every series.
+pub fn per_series_frontier(series: &[(&str, Vec<ParetoPoint>)]) -> Vec<Vec<bool>> {
+    let all: Vec<ParetoPoint> =
+        series.iter().flat_map(|(_, pts)| pts.iter().cloned()).collect();
+    series
+        .iter()
+        .map(|(_, pts)| pts.iter().map(|p| is_pareto_optimal(p, &all)).collect())
+        .collect()
+}
+
 /// Render an ASCII scatter of size (x, log-scaled) vs ppl (y) for the
 /// figure reproductions in EXPERIMENTS.md.
 pub fn ascii_plot(points: &[ParetoPoint], width: usize, height: usize) -> String {
@@ -129,6 +146,21 @@ mod tests {
         // Candidates can also dominate each other.
         let hetero2 = vec![p("h3", 80, 10.0), p("h4", 80, 11.0)];
         assert_eq!(on_combined_frontier(&uniform, &hetero2), vec![true, false]);
+    }
+
+    #[test]
+    fn per_series_frontier_judges_against_the_union() {
+        let uniform = vec![p("u2", 60, 12.0), p("u4", 150, 8.0)];
+        let layer = vec![p("auto-l", 80, 10.0)];
+        // Dominated by auto-l (same size, worse ppl): off the frontier even
+        // though it would be on its own series' frontier.
+        let block = vec![p("auto-b", 80, 11.0)];
+        let flags = per_series_frontier(&[
+            ("uniform", uniform),
+            ("auto/layer", layer),
+            ("auto/block", block),
+        ]);
+        assert_eq!(flags, vec![vec![true, true], vec![true], vec![false]]);
     }
 
     #[test]

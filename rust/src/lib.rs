@@ -78,27 +78,18 @@
 
 #![warn(missing_docs)]
 
-// Public-API documentation is complete (and gated by `missing_docs` +
-// rustdoc `-D warnings` in `make verify`) for the crate's configuration
-// and evaluation surface — `quant`, `coordinator`, `eval` — and for the
-// compressed-format/kernel surface `kernels`. The remaining modules are
-// documented at module level; extending item-level coverage to them is
-// tracked in ROADMAP.md.
-#[allow(missing_docs)]
+// Public-API documentation is complete crate-wide and gated by
+// `missing_docs` + rustdoc `-D warnings` in `make verify` (CI also fails
+// if an `#[allow(missing_docs)]` escape ever reappears here).
 pub mod util;
-#[allow(missing_docs)]
 pub mod tensor;
-#[allow(missing_docs)]
 pub mod data;
-#[allow(missing_docs)]
 pub mod nn;
 pub mod quant;
 pub mod kernels;
-#[allow(missing_docs)]
 pub mod runtime;
 pub mod coordinator;
 pub mod eval;
-#[allow(missing_docs)]
 pub mod bench;
 
 /// Crate-wide result type.

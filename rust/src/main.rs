@@ -8,9 +8,12 @@
 //!              `--policy` routes layers to different specs
 //!              (`'*.wq=aqlm:2x8,g=8,ft=30;rtn:b=2,g=32'`) for
 //!              mixed-precision models, and `--auto-bits <target>` solves
-//!              the per-layer assignment automatically (rate-distortion
-//!              allocation over measured layer sensitivities) and prints
-//!              the winning policy string to stdout
+//!              the assignment automatically (rate-distortion allocation
+//!              over measured layer sensitivities) and prints the winning
+//!              coalesced policy string to stdout;
+//!              `--granularity <layer|block|expert>` sets the decision
+//!              unit of that solve (per linear, per transformer block, or
+//!              per MoE expert)
 //!   eval       perplexity + zero-shot evaluation of a checkpoint
 //!   generate   sample text from a checkpoint
 //!   serve      demo of the continuous-batching generation server
@@ -135,9 +138,11 @@ fn cli_spec(args: &Args) -> anyhow::Result<MethodSpec> {
 }
 
 /// `--auto-bits <target>`: probe per-layer sensitivities on the calibration
-/// slice, solve the rate-distortion allocation, print the winning policy
-/// (stdout — the machine-readable product, ready for `--policy`) and the
-/// per-layer table (stderr), and return the policy for the pipeline run.
+/// slice, solve the rate-distortion allocation at the requested
+/// `--granularity` (layer | block | expert; default layer), print the
+/// winning coalesced policy (stdout — the machine-readable product, ready
+/// for `--policy`) and the per-layer table (stderr), and return the policy
+/// for the pipeline run.
 fn auto_policy(
     args: &Args,
     model: &mut Model,
@@ -147,14 +152,24 @@ fn auto_policy(
     target: f64,
 ) -> anyhow::Result<LayerPolicy> {
     let ft = if args.flag("no-ft") { 0 } else { args.usize_or("ft-steps", 30) };
+    let granularity = alloc::Granularity::parse(&args.str_or("granularity", "layer"))?;
     let candidates = alloc::default_candidates(&model.cfg, target, ft, args.flag("fast"));
     eprintln!(
-        "probing layer sensitivities against {} candidates: {}",
+        "probing layer sensitivities against {} candidates ({granularity} granularity): {}",
         candidates.len(),
         candidates.iter().map(|c| c.probe.to_string()).collect::<Vec<_>>().join(", ")
     );
     let mut prng = Rng::seed_from_u64(args.u64_or("seed", 42) ^ 0xa110c);
-    let auto = alloc::auto_allocate(model, calib, n_seqs, seq, target, &candidates, &mut prng)?;
+    let auto = alloc::auto_allocate(
+        model,
+        calib,
+        n_seqs,
+        seq,
+        target,
+        &candidates,
+        granularity,
+        &mut prng,
+    )?;
     for (row, &c) in auto.table.iter().zip(&auto.allocation.choice) {
         // Bound to a String first: width specifiers only align via `str`'s
         // padded Display, not MethodSpec's.
@@ -205,6 +220,11 @@ fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
         }
         (None, _) => None,
     };
+    anyhow::ensure!(
+        args.get("granularity").is_none() || auto_target.is_some(),
+        "--granularity only applies to --auto-bits runs (it sets the \
+         allocator's decision unit: layer | block | expert)"
+    );
     let parsed_policy: Option<LayerPolicy> = match (auto_target, args.get("policy")) {
         (Some(_), _) => None, // solved from the sensitivity probe below
         (None, Some(p)) => {

@@ -12,6 +12,7 @@ pub struct AdamState {
 }
 
 impl AdamState {
+    /// Zeroed first/second-moment state for `n` parameters.
     pub fn new(n: usize) -> AdamState {
         AdamState { m: vec![0.0; n], v: vec![0.0; n] }
     }
@@ -20,10 +21,15 @@ impl AdamState {
 /// Adam hyperparameters + step counter.
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator stabilizer.
     pub eps: f32,
+    /// Step counter (drives bias correction).
     pub t: u64,
 }
 

@@ -17,44 +17,62 @@ use crate::tensor::Tensor;
 /// Attention projection weights.
 #[derive(Clone, Debug)]
 pub struct Attention {
+    /// Query projection.
     pub wq: Linear,
+    /// Key projection.
     pub wk: Linear,
+    /// Value projection.
     pub wv: Linear,
+    /// Output projection.
     pub wo: Linear,
 }
 
 /// SwiGLU MLP weights.
 #[derive(Clone, Debug)]
 pub struct Mlp {
+    /// Gate projection.
     pub wg: Linear,
+    /// Up projection.
     pub wu: Linear,
+    /// Down projection.
     pub wd: Linear,
 }
 
 /// Feed-forward: dense MLP or mixture-of-experts.
 #[derive(Clone, Debug)]
 pub enum Ffn {
+    /// Dense SwiGLU MLP.
     Dense(Mlp),
+    /// Top-k routed mixture of experts.
     Moe(MoeLayer),
 }
 
 /// One transformer block.
 #[derive(Clone, Debug)]
 pub struct Block {
+    /// Pre-attention RMSNorm gains.
     pub ln1: Vec<f32>,
+    /// Attention projections.
     pub attn: Attention,
+    /// Pre-FFN RMSNorm gains.
     pub ln2: Vec<f32>,
+    /// The feed-forward sublayer.
     pub ffn: Ffn,
 }
 
 /// Cached activations of one block forward (training/backward path).
 pub struct BlockCache {
+    /// Block input [N, d].
     pub x_in: Tensor,
+    /// Normalized input to the attention projections [N, d].
     pub xn1: Tensor,
+    /// Per-row 1/rms of the first norm.
     pub rinv1: Vec<f32>,
     /// q/k/v after RoPE, shapes [N, H·dh] / [N, KV·dh] / [N, KV·dh].
     pub q: Tensor,
+    /// Keys after RoPE.
     pub k: Tensor,
+    /// Values.
     pub v: Tensor,
     /// Attention probabilities `[B][H][S][S]` flattened.
     pub probs: Vec<f32>,
@@ -62,36 +80,62 @@ pub struct BlockCache {
     pub attn_concat: Tensor,
     /// Residual stream after attention [N, d].
     pub x_mid: Tensor,
+    /// Normalized input to the FFN [N, d].
     pub xn2: Tensor,
+    /// Per-row 1/rms of the second norm.
     pub rinv2: Vec<f32>,
+    /// FFN activations (dense or MoE form).
     pub ffn_cache: FfnCache,
 }
 
 /// MLP activations.
 pub struct MlpCache {
+    /// Gate pre-activation (input to SiLU).
     pub gate_pre: Tensor,
+    /// Up-projection output.
     pub up: Tensor,
+    /// Elementwise silu(gate) ⊙ up (input to wd).
     pub h: Tensor,
 }
 
+/// FFN activation cache, matching the block's [`Ffn`] variant.
 pub enum FfnCache {
+    /// Dense MLP activations.
     Dense(MlpCache),
+    /// MoE routing + expert activations.
     Moe(MoeCache),
 }
 
 /// Gradients for every parameter of a block.
 pub struct BlockGrads {
+    /// First-norm gain gradients.
     pub ln1: Vec<f32>,
+    /// Second-norm gain gradients.
     pub ln2: Vec<f32>,
+    /// Query projection gradient.
     pub wq: LinearGrad,
+    /// Key projection gradient.
     pub wk: LinearGrad,
+    /// Value projection gradient.
     pub wv: LinearGrad,
+    /// Output projection gradient.
     pub wo: LinearGrad,
+    /// Feed-forward gradients.
     pub ffn: FfnGrads,
 }
 
+/// FFN gradients, matching the block's [`Ffn`] variant.
 pub enum FfnGrads {
-    Dense { wg: LinearGrad, wu: LinearGrad, wd: LinearGrad },
+    /// Dense MLP gradients.
+    Dense {
+        /// Gate projection gradient.
+        wg: LinearGrad,
+        /// Up projection gradient.
+        wu: LinearGrad,
+        /// Down projection gradient.
+        wd: LinearGrad,
+    },
+    /// MoE gate + expert gradients.
     Moe(MoeGrads),
 }
 

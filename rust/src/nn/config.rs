@@ -8,16 +8,25 @@
 /// Architecture hyperparameters for one model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
+    /// Preset name (`nano`, `tiny`, …).
     pub name: String,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Number of transformer blocks.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
     /// KV heads (== n_heads for MHA; fewer for GQA).
     pub n_kv_heads: usize,
+    /// SwiGLU hidden width.
     pub d_ff: usize,
+    /// Vocabulary size (padded to the tokenizer's friendly multiple).
     pub vocab_size: usize,
+    /// Maximum sequence length (RoPE table / KV cache size).
     pub max_seq: usize,
+    /// RoPE base frequency.
     pub rope_theta: f32,
+    /// RMSNorm epsilon.
     pub norm_eps: f32,
     /// 0 ⇒ dense MLP; otherwise number of routed experts.
     pub n_experts: usize,
@@ -89,10 +98,12 @@ impl ModelConfig {
         }
     }
 
+    /// Per-head dimension.
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
 
+    /// True when the FFN is a routed mixture of experts.
     pub fn is_moe(&self) -> bool {
         self.n_experts > 0
     }

@@ -3,16 +3,21 @@
 /// KV cache for one transformer block.
 #[derive(Clone, Debug)]
 pub struct LayerKvCache {
+    /// Number of cached key/value heads.
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Cache capacity in positions.
     pub max_seq: usize,
     /// [n_kv_heads, max_seq, head_dim], filled up to `len`.
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Number of positions currently cached.
     pub len: usize,
 }
 
 impl LayerKvCache {
+    /// Zero-filled cache with room for `max_seq` positions.
     pub fn new(n_kv_heads: usize, head_dim: usize, max_seq: usize) -> LayerKvCache {
         LayerKvCache {
             n_kv_heads,
@@ -44,12 +49,14 @@ impl LayerKvCache {
         &self.k[base..base + self.head_dim]
     }
 
+    /// V vector of head `h` at position `t`.
     #[inline]
     pub fn v_at(&self, h: usize, t: usize) -> &[f32] {
         let base = (h * self.max_seq + t) * self.head_dim;
         &self.v[base..base + self.head_dim]
     }
 
+    /// Reset to empty (capacity retained).
     pub fn clear(&mut self) {
         self.len = 0;
     }

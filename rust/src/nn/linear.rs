@@ -26,8 +26,11 @@ use crate::tensor::Tensor;
 /// A linear layer's weights (no bias — LLaMA style).
 #[derive(Clone, Debug)]
 pub enum Linear {
+    /// Plain f32 `[out, in]` weights.
     Dense(Tensor),
+    /// Structured AQLM format with lazily cached dense / packed views.
     Aqlm {
+        /// The compressed weight.
         q: AqlmWeight,
         /// Cached dense decode, refreshed lazily after parameter updates.
         decoded: Option<Tensor>,
@@ -36,38 +39,68 @@ pub enum Linear {
     },
     /// Scalar grouped-integer quantization (RTN / GPTQ storage); scales are
     /// tunable (Appendix L).
-    GroupInt { q: GroupIntWeight, decoded: Option<Tensor> },
+    GroupInt {
+        /// The compressed weight.
+        q: GroupIntWeight,
+        /// Cached dense decode.
+        decoded: Option<Tensor>,
+    },
     /// Packed SpQR: grouped-int base codes + CSR sparse outliers. Scales
     /// are tunable like `GroupInt`; codes, zeros and outliers stay frozen.
-    Spqr { q: PackedSpqr, decoded: Option<Tensor> },
+    Spqr {
+        /// The compressed weight.
+        q: PackedSpqr,
+        /// Cached dense decode.
+        decoded: Option<Tensor>,
+    },
 }
 
 /// Gradient of a loss w.r.t. a [`Linear`]'s parameters.
 #[derive(Clone, Debug)]
 pub enum LinearGrad {
+    /// Full dense weight gradient.
     Dense(Tensor),
-    Aqlm { d_codebooks: Vec<Tensor>, d_scales: Vec<f32> },
-    GroupInt { d_scales: Vec<f32> },
-    Spqr { d_scales: Vec<f32> },
+    /// Codebook + per-row scale gradients (codes frozen).
+    Aqlm {
+        /// One gradient tensor per codebook.
+        d_codebooks: Vec<Tensor>,
+        /// Per-row scale gradients.
+        d_scales: Vec<f32>,
+    },
+    /// Per-group scale gradients (codes/zeros frozen).
+    GroupInt {
+        /// Per-group scale gradients.
+        d_scales: Vec<f32>,
+    },
+    /// Per-group scale gradients (codes/zeros/outliers frozen).
+    Spqr {
+        /// Per-group scale gradients.
+        d_scales: Vec<f32>,
+    },
 }
 
 impl Linear {
+    /// Dense layer from a weight tensor.
     pub fn dense(w: Tensor) -> Linear {
         Linear::Dense(w)
     }
 
+    /// AQLM-compressed layer (caches start empty).
     pub fn aqlm(q: AqlmWeight) -> Linear {
         Linear::Aqlm { q, decoded: None, packed: None }
     }
 
+    /// Grouped-integer layer (RTN / GPTQ storage).
     pub fn group_int(q: GroupIntWeight) -> Linear {
         Linear::GroupInt { q, decoded: None }
     }
 
+    /// Packed-SpQR layer.
     pub fn spqr(q: PackedSpqr) -> Linear {
         Linear::Spqr { q, decoded: None }
     }
 
+    /// Output dimension of the represented matrix.
     pub fn d_out(&self) -> usize {
         match self {
             Linear::Dense(w) => w.rows(),
@@ -77,6 +110,7 @@ impl Linear {
         }
     }
 
+    /// Input dimension of the represented matrix.
     pub fn d_in(&self) -> usize {
         match self {
             Linear::Dense(w) => w.cols(),
@@ -86,6 +120,7 @@ impl Linear {
         }
     }
 
+    /// True for any compressed (non-dense) representation.
     pub fn is_quantized(&self) -> bool {
         !matches!(self, Linear::Dense(_))
     }
@@ -158,6 +193,7 @@ impl Linear {
         out
     }
 
+    /// [`Self::forward`] into a pre-allocated output tensor.
     pub fn forward_into(&mut self, x: &Tensor, out: &mut Tensor) {
         let w = self.weight();
         matmul_bt_into(x, w, out);

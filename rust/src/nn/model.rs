@@ -25,11 +25,17 @@ use std::io::{Read, Write};
 /// A complete model instance.
 #[derive(Clone, Debug)]
 pub struct Model {
+    /// Architecture hyperparameters.
     pub cfg: ModelConfig,
+    /// Token embedding table [vocab, d].
     pub embed: Tensor,
+    /// The transformer blocks, in depth order.
     pub blocks: Vec<Block>,
+    /// Final RMSNorm gains.
     pub ln_f: Vec<f32>,
+    /// LM head projection [vocab, d].
     pub head: Linear,
+    /// Shared RoPE tables.
     pub rope: Rope,
     /// Average bits per parameter of quantized layers, keyed by full layer
     /// name (`b0.wq`). Authoritative for dense-backed methods (QuIP-lite
@@ -46,20 +52,29 @@ pub struct Model {
 
 /// Activation cache of a full forward pass.
 pub struct ModelCache {
+    /// The input token ids.
     pub tokens: Vec<u32>,
+    /// Embedded inputs [N, d].
     pub x0: Tensor,
+    /// Per-block activation caches, in depth order.
     pub block_caches: Vec<BlockCache>,
     /// Residual stream entering the final norm.
     pub x_final: Tensor,
+    /// Normalized final-stream rows (input to the head).
     pub xnf: Tensor,
+    /// Per-row 1/rms of the final norm.
     pub rinv_f: Vec<f32>,
 }
 
 /// Gradients for all model parameters.
 pub struct ModelGrads {
+    /// Embedding gradients.
     pub embed: Tensor,
+    /// Per-block gradients.
     pub blocks: Vec<BlockGrads>,
+    /// Final-norm gain gradients.
     pub ln_f: Vec<f32>,
+    /// LM head gradient.
     pub head: LinearGrad,
 }
 
@@ -101,6 +116,7 @@ impl Model {
         }
     }
 
+    /// Initialize a fresh (untrained) model for a configuration.
     pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Model {
         let d = cfg.d_model;
         Model {
@@ -203,6 +219,7 @@ impl Model {
 
     // ------------------------------------------------------------ generation
 
+    /// Fresh (empty) KV caches, one per block.
     pub fn new_kv_caches(&self) -> Vec<LayerKvCache> {
         (0..self.cfg.n_layers)
             .map(|_| LayerKvCache::new(self.cfg.n_kv_heads, self.cfg.head_dim(), self.cfg.max_seq))
@@ -796,10 +813,12 @@ pub struct AdamStates {
 }
 
 impl AdamStates {
+    /// Empty state map.
     pub fn new() -> AdamStates {
         AdamStates { map: HashMap::new() }
     }
 
+    /// State for a named parameter group, created zeroed on first use.
     pub fn entry(&mut self, name: &str, len: usize) -> &mut AdamState {
         self.map.entry(name.to_string()).or_insert_with(|| AdamState::new(len))
     }
@@ -811,6 +830,7 @@ impl Default for AdamStates {
     }
 }
 
+/// Serialize a [`ModelConfig`] into the checkpoint-header JSON form.
 pub fn config_to_json(cfg: &ModelConfig) -> Json {
     let mut j = Json::obj();
     j.set("name", Json::from(cfg.name.as_str()));
@@ -828,6 +848,7 @@ pub fn config_to_json(cfg: &ModelConfig) -> Json {
     j
 }
 
+/// Parse a [`ModelConfig`] back from its checkpoint-header JSON form.
 pub fn config_from_json(j: &Json) -> anyhow::Result<ModelConfig> {
     Ok(ModelConfig {
         name: j.req_str("name")?.to_string(),

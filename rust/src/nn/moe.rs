@@ -16,7 +16,9 @@ use crate::tensor::Tensor;
 pub struct MoeLayer {
     /// Router weights [n_experts, d] (full precision, like the paper).
     pub gate: Tensor,
+    /// The expert MLPs.
     pub experts: Vec<Mlp>,
+    /// Experts active per token (Mixtral uses 2).
     pub top_k: usize,
 }
 
@@ -38,12 +40,14 @@ pub struct MoeCache {
 
 /// Gradients for the MoE layer.
 pub struct MoeGrads {
+    /// Router weight gradients.
     pub gate: Tensor,
     /// Per expert (wg, wu, wd).
     pub experts: Vec<Option<(LinearGrad, LinearGrad, LinearGrad)>>,
 }
 
 impl MoeLayer {
+    /// Number of experts.
     pub fn n_experts(&self) -> usize {
         self.experts.len()
     }

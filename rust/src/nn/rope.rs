@@ -4,7 +4,9 @@
 /// Precomputed cos/sin tables for all positions and head-dim pairs.
 #[derive(Clone, Debug)]
 pub struct Rope {
+    /// Per-head dimension (must be even).
     pub head_dim: usize,
+    /// Number of precomputed positions.
     pub max_seq: usize,
     /// [max_seq, head_dim/2]
     cos: Vec<f32>,
@@ -12,6 +14,7 @@ pub struct Rope {
 }
 
 impl Rope {
+    /// Precompute tables for `max_seq` positions at base frequency `theta`.
     pub fn new(head_dim: usize, max_seq: usize, theta: f32) -> Rope {
         assert!(head_dim % 2 == 0);
         let half = head_dim / 2;

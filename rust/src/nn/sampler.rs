@@ -26,6 +26,7 @@ pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Rng) ->
     idx[rng.weighted(&sub)] as u32
 }
 
+/// Index of the largest element (0 for an empty slice).
 pub fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()

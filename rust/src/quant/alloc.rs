@@ -14,37 +14,73 @@
 //!    distortion proxy is `rel_error × params` — exactly the quantity the
 //!    pipeline's [`QuantReport`](super::QuantReport) rows expose, so a
 //!    probe is a dry-run of the pipeline that never mutates the model.
-//! 2. **Allocate** ([`allocate`]): minimize total distortion subject to a
-//!    parameter-weighted average bit budget, via a Lagrangian sweep: for a
-//!    multiplier `λ` each layer independently picks
-//!    `argmin_c rel_error(c) + λ·bits(c)`, and `λ` is bisected to the
-//!    smallest value whose assignment fits the budget (the widest feasible
-//!    assignment). Per-layer choices are monotone in `λ`, so a larger
-//!    budget never narrows any layer — see `monotone_in_budget` below.
+//! 2. **Allocate** ([`allocate`] / [`allocate_at`]): minimize total
+//!    distortion subject to a parameter-weighted average bit budget, via a
+//!    Lagrangian sweep: for a multiplier `λ` each decision unit
+//!    independently picks `argmin_c rel_error(c) + λ·bits(c)`, and `λ` is
+//!    bisected to the smallest value whose assignment fits the budget (the
+//!    widest feasible assignment). The decision unit is set by
+//!    [`Granularity`]: individual linears, whole transformer blocks (the
+//!    granularity of AQLM's joint block optimization), or MoE experts —
+//!    coarser units are grouped rows whose cost sums their members'
+//!    `rel_error × params`, so per-unit choices stay monotone in `λ` and a
+//!    larger budget never narrows any unit — see `monotone_in_budget`
+//!    below and the grouped property tests in `rust/tests/proptests.rs`.
 //! 3. **Emit** ([`emit_policy`]): the winning assignment becomes an
-//!    ordinary `LayerPolicy` with one exact-name rule per layer. Its
-//!    `Display` string round-trips through [`LayerPolicy::parse`]
-//!    (property-tested in
-//!    `rust/tests/proptests.rs`), plugs directly into `--policy`, and is
-//!    serialized into the checkpoint header like any other policy run.
+//!    ordinary `LayerPolicy`, coalesced into compact glob rules
+//!    ([`LayerPolicy::coalesce`]) — one `b3.*` rule per block, `b3.e2.*`
+//!    per expert, exact names only where layers genuinely differ — so the
+//!    printed policy stays human-readable at 32+ blocks and per-layer
+//!    lookups scan O(blocks) rules instead of O(layers). Its `Display`
+//!    string round-trips through [`LayerPolicy::parse`] to the exact
+//!    per-layer assignment (property-tested in `rust/tests/proptests.rs`),
+//!    plugs directly into `--policy`, and is serialized into the
+//!    checkpoint header like any other policy run.
 //!
 //! The one-call entry point is [`auto_allocate`]; the CLI surface is
-//! `aqlm quantize --ckpt m.ckpt --auto-bits 2.5`. Figure f9
-//! (`aqlm table f9`) lands auto-allocated points against the hand-written
-//! heterogeneous frontier of figure f8.
+//! `aqlm quantize --ckpt m.ckpt --auto-bits 2.5 --granularity block`.
+//! Figure f9 (`aqlm table f9`) lands auto-allocated points per granularity
+//! against the hand-written heterogeneous frontier of figure f8, across
+//! the model family. The full walk-through with a worked example lives in
+//! `docs/allocator.md` (rendered below as [`walkthrough`]).
 //!
 //! ```no_run
 //! use aqlm::nn::config::ModelConfig;
 //! use aqlm::nn::model::Model;
-//! use aqlm::quant::alloc::{auto_allocate, default_candidates};
+//! use aqlm::quant::alloc::{auto_allocate, default_candidates, Granularity};
 //! use aqlm::util::rng::Rng;
 //!
 //! let mut rng = Rng::seed_from_u64(0);
 //! let mut model = Model::init(&ModelConfig::nano(), &mut rng); // or a trained checkpoint
 //! let calib: Vec<u32> = vec![1; 8 * 64]; // real runs: calibration-split tokens
 //! let candidates = default_candidates(&model.cfg, 2.5, 30, false);
-//! let auto = auto_allocate(&mut model, &calib, 8, 64, 2.5, &candidates, &mut rng)?;
+//! let auto = auto_allocate(
+//!     &mut model, &calib, 8, 64, 2.5, &candidates, Granularity::PerLayer, &mut rng,
+//! )?;
 //! println!("{}", auto.policy); // round-trippable: plug into --policy / quantize_model
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Per-block allocation — probe once, solve at block granularity, and get
+//! a policy whose rule count is the block count (`b0.*=…;b1.*=…;…`):
+//!
+//! ```no_run
+//! use aqlm::nn::config::ModelConfig;
+//! use aqlm::nn::model::Model;
+//! use aqlm::quant::alloc::{auto_allocate, default_candidates, Granularity};
+//! use aqlm::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed_from_u64(0);
+//! let mut model = Model::init(&ModelConfig::nano(), &mut rng);
+//! let calib: Vec<u32> = vec![1; 8 * 64];
+//! let candidates = default_candidates(&model.cfg, 2.5, 30, false);
+//! let auto = auto_allocate(
+//!     &mut model, &calib, 8, 64, 2.5, &candidates, Granularity::PerBlock, &mut rng,
+//! )?;
+//! // Every linear of a block shares its spec, so the policy coalesces to
+//! // one glob rule per block — O(blocks) rules even on deep models.
+//! assert!(auto.policy.rules.len() <= model.blocks.len());
+//! assert!(auto.policy.rules.iter().all(|(pat, _)| pat.ends_with(".*") || pat == "*"));
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
@@ -54,6 +90,81 @@ use crate::nn::config::ModelConfig;
 use crate::nn::model::Model;
 use crate::quant::aqlm::blockft::FtScope;
 use crate::util::rng::Rng;
+use std::fmt;
+
+/// The granularity at which the allocator assigns specs — AQLM's joint
+/// optimization operates *per transformer block*, and the allocator can
+/// match that (or MoE-expert) structure instead of deciding every linear
+/// independently. CLI surface: `--auto-bits <target> --granularity <g>`.
+///
+/// Grouping changes what the Lagrangian sweep chooses over, not how: each
+/// group becomes one row whose cost is the sum of its members' distortions
+/// (`Σ rel_error × params`) and whose bits are the parameter-weighted
+/// average of its members — so the solved assignment keeps the
+/// never-overshoot and budget-monotonicity guarantees of the per-layer
+/// solver (property-tested in `rust/tests/proptests.rs`), and the emitted
+/// policy coalesces into one glob rule per group (`b3.*`, `b3.e2.*`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Granularity {
+    /// One choice per linear layer — the finest assignment (PR 3 behavior).
+    #[default]
+    PerLayer,
+    /// One choice per transformer block: every linear of `b3.*` shares a
+    /// spec. Matches the granularity of the paper's joint block
+    /// optimization, and is what makes "early blocks wider than late"
+    /// allocations directly expressible.
+    PerBlock,
+    /// One choice per MoE expert within each block (`b3.e2.*`); the
+    /// remaining attention/dense linears of a block form their own group
+    /// (emitted as a `b3.*` rule *after* the expert rules — first match
+    /// wins). On dense models this degenerates to [`Self::PerBlock`].
+    PerExpert,
+}
+
+impl Granularity {
+    /// Parse the CLI form: `layer`, `block`, or `expert`.
+    pub fn parse(s: &str) -> anyhow::Result<Granularity> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "layer" | "per-layer" => Ok(Granularity::PerLayer),
+            "block" | "per-block" => Ok(Granularity::PerBlock),
+            "expert" | "per-expert" => Ok(Granularity::PerExpert),
+            other => anyhow::bail!("unknown granularity '{other}' (layer|block|expert)"),
+        }
+    }
+
+    /// Group key of a full layer name at this granularity: the layer name
+    /// itself, its block prefix (`b3`), or its expert prefix (`b3.e2`,
+    /// falling back to the block prefix for non-expert layers). Names
+    /// without a block prefix group by themselves at every granularity.
+    pub fn key_of<'a>(&self, layer: &'a str) -> &'a str {
+        let Some((block, tail)) = layer.split_once('.') else { return layer };
+        match self {
+            Granularity::PerLayer => layer,
+            Granularity::PerBlock => block,
+            Granularity::PerExpert => match tail.split_once('.') {
+                Some((head, leaf))
+                    if !leaf.is_empty()
+                        && head.len() >= 2
+                        && head.starts_with('e')
+                        && head[1..].bytes().all(|b| b.is_ascii_digit()) =>
+                {
+                    &layer[..block.len() + 1 + head.len()]
+                }
+                _ => block,
+            },
+        }
+    }
+}
+
+impl fmt::Display for Granularity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Granularity::PerLayer => "layer",
+            Granularity::PerBlock => "block",
+            Granularity::PerExpert => "expert",
+        })
+    }
+}
 
 /// One candidate spec of the allocator's grid: the cheap variant used to
 /// measure sensitivity and the full-strength variant emitted into the
@@ -210,34 +321,139 @@ pub fn allocate(table: &[LayerSensitivity], target_bits: f64) -> anyhow::Result<
     Ok(best)
 }
 
-/// Turn a solved assignment into a policy string: one exact-name rule per
-/// layer, in model order, carrying each layer's `emit` spec. The result
-/// parses back to an identical policy (`Display` ↔ `parse` closed under
-/// allocator output) and routes every layer, so it drops into `--policy`
-/// and the checkpoint header unchanged.
+/// A sensitivity table regrouped at a coarser [`Granularity`]: one row per
+/// group (its `layer` field holds the group key, e.g. `b3` or `b3.e2`)
+/// plus the member indices of the original per-layer table.
+#[derive(Clone, Debug)]
+pub struct GroupedTable {
+    /// One synthetic sensitivity row per group, in first-seen (model)
+    /// order: `params` is the group's total parameter count, and option
+    /// `c` carries the group's parameter-weighted average bits and
+    /// parameter-weighted relative error — so `cost(c)` equals the sum of
+    /// the members' `rel_error × params` exactly as the per-layer solver
+    /// would account them.
+    pub rows: Vec<LayerSensitivity>,
+    /// For each group, the indices of its member rows in the original
+    /// table (same order as `rows`).
+    pub members: Vec<Vec<usize>>,
+}
+
+/// Regroup a per-layer sensitivity table at `granularity`. Every group's
+/// candidate count matches the per-layer table's; [`Granularity::PerLayer`]
+/// returns a copy with one singleton group per row.
+pub fn group_table(table: &[LayerSensitivity], granularity: Granularity) -> GroupedTable {
+    let mut keys: Vec<String> = Vec::new();
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    for (i, row) in table.iter().enumerate() {
+        let key = granularity.key_of(&row.layer);
+        match keys.iter().position(|k| k == key) {
+            Some(g) => members[g].push(i),
+            None => {
+                keys.push(key.to_string());
+                members.push(vec![i]);
+            }
+        }
+    }
+    let rows = keys
+        .iter()
+        .zip(&members)
+        .map(|(key, idxs)| {
+            let n_cand = table[idxs[0]].options.len();
+            let params: usize = idxs.iter().map(|&i| table[i].params).sum();
+            let options = (0..n_cand)
+                .map(|c| {
+                    let (mut bits, mut cost) = (0.0f64, 0.0f64);
+                    for &i in idxs {
+                        bits += table[i].bits(c) * table[i].params as f64;
+                        cost += table[i].cost(c);
+                    }
+                    LayerOption {
+                        avg_bits: bits / params.max(1) as f64,
+                        rel_error: cost / params.max(1) as f64,
+                    }
+                })
+                .collect();
+            LayerSensitivity { layer: key.clone(), params, options }
+        })
+        .collect();
+    GroupedTable { rows, members }
+}
+
+/// Solve the allocation at a chosen [`Granularity`]: regroup the table,
+/// run the same Lagrangian sweep over the grouped rows ([`allocate`] — so
+/// never-overshoot and budget-monotonicity carry over unchanged), and
+/// expand the group choices back to a per-layer [`Allocation`] whose
+/// `choice` indexes the original table. The returned `avg_bits` is
+/// recomputed over the per-layer expansion in table order — exactly the
+/// sum the pipeline will later measure, so the budget prediction stays
+/// exact for the emitted policy.
+pub fn allocate_at(
+    table: &[LayerSensitivity],
+    target_bits: f64,
+    granularity: Granularity,
+) -> anyhow::Result<Allocation> {
+    anyhow::ensure!(!table.is_empty(), "empty sensitivity table");
+    for row in table {
+        anyhow::ensure!(
+            row.options.len() == table[0].options.len(),
+            "layer {} has {} candidates, expected {}",
+            row.layer,
+            row.options.len(),
+            table[0].options.len()
+        );
+    }
+    let grouped = group_table(table, granularity);
+    let ga = allocate(&grouped.rows, target_bits)?;
+    let mut choice = vec![0usize; table.len()];
+    for (g, idxs) in grouped.members.iter().enumerate() {
+        for &i in idxs {
+            choice[i] = ga.choice[g];
+        }
+    }
+    let (mut bits, mut cost, mut params) = (0.0f64, 0.0f64, 0usize);
+    for (row, &c) in table.iter().zip(&choice) {
+        bits += row.bits(c) * row.params as f64;
+        cost += row.cost(c);
+        params += row.params;
+    }
+    Ok(Allocation { choice, avg_bits: bits / params.max(1) as f64, cost, lambda: ga.lambda })
+}
+
+/// Turn a solved assignment into a policy string, coalescing agreeing
+/// layers into glob rules via [`LayerPolicy::coalesce`]: a per-block
+/// allocation emits one `b3.*` rule per block (O(blocks) rules, not
+/// O(layers)), per-expert allocations emit `b3.e2.*` rules shadowing the
+/// block glob, and a fully uniform assignment collapses to `*=spec`. The
+/// result parses back to an identical policy (`Display` ↔ `parse` closed
+/// under allocator output), routes every probed layer to exactly its
+/// chosen candidate's `emit` spec (property-tested in
+/// `rust/tests/proptests.rs`), and drops into `--policy` and the
+/// checkpoint header unchanged.
 pub fn emit_policy(
     table: &[LayerSensitivity],
     candidates: &[Candidate],
     alloc: &Allocation,
 ) -> LayerPolicy {
     assert_eq!(table.len(), alloc.choice.len(), "table / allocation mismatch");
-    LayerPolicy {
-        rules: table
-            .iter()
-            .zip(&alloc.choice)
-            .map(|(row, &c)| (row.layer.clone(), candidates[c].emit))
-            .collect(),
-    }
+    let assignment: Vec<(String, MethodSpec)> = table
+        .iter()
+        .zip(&alloc.choice)
+        .map(|(row, &c)| (row.layer.clone(), candidates[c].emit))
+        .collect();
+    LayerPolicy::coalesce(&assignment)
 }
 
 /// Default candidate grid for a target: AQLM shapes chosen by
 /// [`choose_shape`] at half-bit offsets around the target (deduplicated —
 /// nearby targets often resolve to the same shape), plus packed-SpQR
 /// entries (`spqr:b=2..3,g=16,out=0.01`) so the allocator can route
-/// outlier-heavy layers to the sparse-outlier format — the mixed-*method*
-/// grid the ROADMAP's heterogeneous follow-up calls for. AQLM probes run
-/// with `ft=0,fast` and emit with `ft_steps`/`fast` as given; SpQR has no
-/// fine-tuning phase, so its probe and emit specs coincide.
+/// outlier-heavy layers to the sparse-outlier format, plus grouped GPTQ
+/// entries (`gptq:b=2..4,g=16`) — with those, all three packed methods
+/// (AQLM, SpQR, GPTQ) compete per layer in the grid. AQLM probes run with
+/// `ft=0,fast` and emit with `ft_steps`/`fast` as given; SpQR and GPTQ
+/// have no separate fine-tuning phase here, so their probe and emit specs
+/// coincide (which keeps the probe's bits accounting exact for the
+/// emitted policy).
 pub fn default_candidates(
     cfg: &ModelConfig,
     target_bits: f64,
@@ -272,20 +488,26 @@ pub fn default_candidates(
         let spec = MethodSpec::Spqr { bits, group: 16, outlier_frac: 0.01 };
         out.push(Candidate { probe: spec, emit: spec });
     }
+    for bits in [2usize, 3, 4] {
+        let spec = MethodSpec::Gptq { bits, group: Some(16), tune_steps: None };
+        out.push(Candidate { probe: spec, emit: spec });
+    }
     out
 }
 
 /// A probe + solve + emit result: everything `--auto-bits` prints.
 #[derive(Clone, Debug)]
 pub struct AutoAllocation {
-    /// The winning per-layer policy, ready for `--policy` / the pipeline.
+    /// The winning (coalesced) policy, ready for `--policy` / the pipeline.
     pub policy: LayerPolicy,
-    /// The measured sensitivity table the solver ran on.
+    /// The measured per-layer sensitivity table the solver ran on.
     pub table: Vec<LayerSensitivity>,
     /// The candidate grid (indices in `choice` refer to this).
     pub candidates: Vec<Candidate>,
-    /// The solved assignment.
+    /// The solved assignment (per-layer `choice`, same order as `table`).
     pub allocation: Allocation,
+    /// The granularity the assignment was solved at.
+    pub granularity: Granularity,
 }
 
 impl AutoAllocation {
@@ -317,9 +539,10 @@ pub fn allocation_summary(candidates: &[Candidate], alloc: &Allocation) -> Strin
 }
 
 /// Probe `model`'s layers on the candidate grid, solve the allocation for
-/// `target_bits`, and emit the winning policy. The model's weights are
-/// unchanged — quantize afterwards with the returned policy (the CLI does
-/// exactly that). `calib_tokens` is `batch × seq` token ids.
+/// `target_bits` at the requested [`Granularity`], and emit the winning
+/// (coalesced) policy. The model's weights are unchanged — quantize
+/// afterwards with the returned policy (the CLI does exactly that).
+/// `calib_tokens` is `batch × seq` token ids.
 pub fn auto_allocate(
     model: &mut Model,
     calib_tokens: &[u32],
@@ -327,6 +550,7 @@ pub fn auto_allocate(
     seq: usize,
     target_bits: f64,
     candidates: &[Candidate],
+    granularity: Granularity,
     rng: &mut Rng,
 ) -> anyhow::Result<AutoAllocation> {
     anyhow::ensure!(!candidates.is_empty(), "empty candidate grid");
@@ -339,10 +563,15 @@ pub fn auto_allocate(
         &probe_specs,
         rng,
     )?;
-    let allocation = allocate(&table, target_bits)?;
+    let allocation = allocate_at(&table, target_bits, granularity)?;
     let policy = emit_policy(&table, candidates, &allocation);
-    Ok(AutoAllocation { policy, table, candidates: candidates.to_vec(), allocation })
+    Ok(AutoAllocation { policy, table, candidates: candidates.to_vec(), allocation, granularity })
 }
+
+/// The rate-distortion allocation walk-through (`docs/allocator.md`),
+/// included here verbatim so its worked example runs as a doc-test.
+#[doc = include_str!("../../../docs/allocator.md")]
+pub mod walkthrough {}
 
 #[cfg(test)]
 mod tests {
@@ -469,12 +698,189 @@ mod tests {
             .collect();
         let alloc = allocate(&table, 3.5).unwrap();
         let policy = emit_policy(&table, &candidates, &alloc);
-        assert_eq!(policy.rules.len(), table.len());
+        assert!(policy.rules.len() <= table.len(), "coalescing must never add rules");
         for (row, &c) in table.iter().zip(&alloc.choice) {
             assert_eq!(policy.spec_for(&row.layer), Some(&candidates[c].emit), "{}", row.layer);
         }
         let reparsed = LayerPolicy::parse(&policy.to_string()).unwrap();
         assert_eq!(reparsed, policy, "allocator output must round-trip through the grammar");
+    }
+
+    #[test]
+    fn granularity_parse_display_and_keys() {
+        for g in [Granularity::PerLayer, Granularity::PerBlock, Granularity::PerExpert] {
+            assert_eq!(Granularity::parse(&g.to_string()).unwrap(), g);
+        }
+        assert!(Granularity::parse("bogus").is_err());
+        assert_eq!(Granularity::PerLayer.key_of("b3.wq"), "b3.wq");
+        assert_eq!(Granularity::PerBlock.key_of("b3.wq"), "b3");
+        assert_eq!(Granularity::PerBlock.key_of("b3.e2.wg"), "b3");
+        assert_eq!(Granularity::PerExpert.key_of("b3.e2.wg"), "b3.e2");
+        assert_eq!(Granularity::PerExpert.key_of("b3.wq"), "b3");
+        // Not an expert component: 'e' must be followed by digits only.
+        assert_eq!(Granularity::PerExpert.key_of("b3.emb.w"), "b3");
+        // Unprefixed names group by themselves at every granularity.
+        assert_eq!(Granularity::PerBlock.key_of("lmhead"), "lmhead");
+    }
+
+    #[test]
+    fn group_table_sums_costs_and_weights_bits() {
+        let grid = [2.0, 4.0];
+        let table = synth_table(&[(100, 0.1), (300, 0.2), (200, 0.4)], &[2.0, 4.0]);
+        // synth names: b0.w0, b0.w1, b0.w2 — one block.
+        let g = group_table(&table, Granularity::PerBlock);
+        assert_eq!(g.rows.len(), 1);
+        assert_eq!(g.members, vec![vec![0, 1, 2]]);
+        assert_eq!(g.rows[0].layer, "b0");
+        assert_eq!(g.rows[0].params, 600);
+        for (c, &bits) in grid.iter().enumerate() {
+            // All members share the same bits grid here, so the weighted
+            // average is that value; the cost must be the exact sum.
+            assert!((g.rows[0].bits(c) - bits).abs() < 1e-12);
+            let want: f64 = table.iter().map(|r| r.cost(c)).sum();
+            assert!((g.rows[0].cost(c) - want).abs() < 1e-9);
+        }
+        // PerLayer grouping is the identity.
+        let id = group_table(&table, Granularity::PerLayer);
+        assert_eq!(id.rows.len(), table.len());
+        assert!(id.members.iter().enumerate().all(|(i, m)| *m == vec![i]));
+    }
+
+    #[test]
+    fn per_block_allocation_is_uniform_within_blocks_and_never_overshoots() {
+        let grid = [1.5, 2.0, 2.5, 3.0, 4.0];
+        let sens: Vec<(usize, f64)> =
+            (0..28).map(|i| (800 + 170 * (i % 5), 0.01 + 0.02 * ((i * 7) % 11) as f64)).collect();
+        let table = synth_table(&sens, &grid); // 4 blocks × 7 layers
+        for target in [1.7, 2.0, 2.5, 3.0, 4.0] {
+            let a = allocate_at(&table, target, Granularity::PerBlock).unwrap();
+            assert!(a.avg_bits <= target + 1e-9, "target {target}: {}", a.avg_bits);
+            for block in a.choice.chunks(7) {
+                assert!(
+                    block.iter().all(|&c| c == block[0]),
+                    "block not uniform at target {target}: {block:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_allocation_monotone_in_budget() {
+        let grid = [1.5, 2.0, 3.0, 4.0];
+        let sens: Vec<(usize, f64)> =
+            (0..21).map(|i| (500 + 211 * (i % 7), 0.005 * ((i * 13) % 29 + 1) as f64)).collect();
+        let table = synth_table(&sens, &grid);
+        let mut prev: Option<Allocation> = None;
+        for target in [1.6, 2.0, 2.4, 3.0, 3.6, 4.0] {
+            let a = allocate_at(&table, target, Granularity::PerBlock).unwrap();
+            if let Some(p) = &prev {
+                for (j, row) in table.iter().enumerate() {
+                    assert!(
+                        row.bits(a.choice[j]) >= row.bits(p.choice[j]) - 1e-12,
+                        "{} narrowed when budget rose to {target}",
+                        row.layer
+                    );
+                }
+            }
+            prev = Some(a);
+        }
+    }
+
+    #[test]
+    fn allocate_at_per_layer_matches_allocate() {
+        let grid = [1.5, 2.0, 2.5, 3.0, 4.0];
+        let sens: Vec<(usize, f64)> =
+            (0..14).map(|i| (1000 + 300 * (i % 5), 0.02 + 0.01 * i as f64)).collect();
+        let table = synth_table(&sens, &grid);
+        for target in [1.6, 2.5, 3.1] {
+            let a = allocate(&table, target).unwrap();
+            let b = allocate_at(&table, target, Granularity::PerLayer).unwrap();
+            assert_eq!(a.choice, b.choice, "target {target}");
+            assert!((a.avg_bits - b.avg_bits).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn per_expert_groups_experts_separately_from_the_block_remainder() {
+        // Hand-built MoE-ish table: attention + two experts in one block,
+        // the second expert much more sensitive.
+        let mk = |layer: &str, sens: f64| LayerSensitivity {
+            layer: layer.into(),
+            params: 1000,
+            options: [2.0, 4.0]
+                .iter()
+                .map(|&b| LayerOption { avg_bits: b, rel_error: sens / (b * b) })
+                .collect(),
+        };
+        let table = vec![
+            mk("b0.wq", 0.01),
+            mk("b0.wo", 0.01),
+            mk("b0.e0.wg", 0.01),
+            mk("b0.e0.wd", 0.01),
+            mk("b0.e1.wg", 1.0),
+            mk("b0.e1.wd", 1.0),
+        ];
+        let g = group_table(&table, Granularity::PerExpert);
+        let keys: Vec<&str> = g.rows.iter().map(|r| r.layer.as_str()).collect();
+        assert_eq!(keys, vec!["b0", "b0.e0", "b0.e1"]);
+        // Budget that affords one wide group: the sensitive expert gets it.
+        let a = allocate_at(&table, 3.0, Granularity::PerExpert).unwrap();
+        let bits: Vec<f64> = table.iter().zip(&a.choice).map(|(r, &c)| r.bits(c)).collect();
+        assert_eq!(bits, vec![2.0, 2.0, 2.0, 2.0, 4.0, 4.0], "{bits:?}");
+        // And the emitted policy uses expert globs shadowing the block glob.
+        let cand_spec = MethodSpec::Rtn { bits: 2, group: 16 };
+        let wide_spec = MethodSpec::Rtn { bits: 4, group: 16 };
+        let candidates = [
+            Candidate { probe: cand_spec, emit: cand_spec },
+            Candidate { probe: wide_spec, emit: wide_spec },
+        ];
+        let policy = emit_policy(&table, &candidates, &a);
+        assert_eq!(
+            policy.rules,
+            vec![
+                ("b0.e1.*".to_string(), wide_spec),
+                ("b0.*".to_string(), cand_spec),
+            ],
+            "{policy}"
+        );
+    }
+
+    #[test]
+    fn emitted_per_block_policy_rule_count_is_o_blocks() {
+        // Regression for the quadratic-match hazard: a 32-block model's
+        // per-block policy must emit O(blocks) rules, not O(layers).
+        let grid = [2.0, 2.5, 3.0, 4.0];
+        let n_blocks = 32usize;
+        let sens: Vec<(usize, f64)> = (0..n_blocks * 7)
+            .map(|i| (1000 + 37 * (i % 13), 0.01 * ((i / 7) + 1) as f64))
+            .collect();
+        let table = synth_table(&sens, &grid);
+        let spec_of = |b: f64| {
+            MethodSpec::Aqlm(AqlmSpec {
+                shape: ShapeChoice::Fixed(crate::kernels::format::AqlmShape::new(
+                    1,
+                    (b * 2.0) as usize,
+                    8,
+                )),
+                ft_steps: 0,
+                scope: FtScope::None,
+                fast: true,
+            })
+        };
+        let candidates: Vec<Candidate> =
+            grid.iter().map(|&b| Candidate { probe: spec_of(b), emit: spec_of(b) }).collect();
+        let a = allocate_at(&table, 2.6, Granularity::PerBlock).unwrap();
+        let policy = emit_policy(&table, &candidates, &a);
+        assert!(
+            policy.rules.len() <= n_blocks,
+            "{} rules for {n_blocks} blocks ({} layers)",
+            policy.rules.len(),
+            table.len()
+        );
+        // Still routes every layer to exactly its chosen candidate.
+        for (row, &c) in table.iter().zip(&a.choice) {
+            assert_eq!(policy.spec_for(&row.layer), Some(&candidates[c].emit), "{}", row.layer);
+        }
     }
 
     #[test]
@@ -487,8 +893,10 @@ mod tests {
             super::super::spec::build_quantizer(&c.emit, Some(&cfg)).unwrap();
         }
         // Probe and emit share the storage format, so their bits agree by
-        // construction: AQLM entries share shapes, SpQR entries coincide.
+        // construction: AQLM entries share shapes, SpQR/GPTQ entries
+        // coincide.
         let mut n_spqr = 0usize;
+        let mut n_gptq = 0usize;
         for c in &cands {
             match (&c.probe, &c.emit) {
                 (MethodSpec::Aqlm(p), MethodSpec::Aqlm(e)) => assert_eq!(p.shape, e.shape),
@@ -496,10 +904,16 @@ mod tests {
                     assert_eq!(c.probe, c.emit);
                     n_spqr += 1;
                 }
+                (MethodSpec::Gptq { .. }, MethodSpec::Gptq { .. }) => {
+                    assert_eq!(c.probe, c.emit);
+                    n_gptq += 1;
+                }
                 other => panic!("unexpected candidate pair {other:?}"),
             }
         }
-        // The grid lets SpQR compete per layer (mixed-method allocation).
+        // The grid lets all three packed methods compete per layer
+        // (mixed-method allocation: AQLM vs SpQR vs GPTQ).
         assert!(n_spqr >= 2, "default grid lost its spqr entries");
+        assert!(n_gptq >= 3, "default grid lost its gptq entries");
     }
 }

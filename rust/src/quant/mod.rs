@@ -24,7 +24,7 @@
 //! | Module | Contents |
 //! |---|---|
 //! | [`spec`] | method-spec grammar, quantizer registry, [`spec::LayerPolicy`] |
-//! | [`alloc`] | automatic rate-distortion bit allocation (`--auto-bits`): sensitivity probe → Lagrangian allocator → emitted [`spec::LayerPolicy`] |
+//! | [`alloc`] | automatic rate-distortion bit allocation (`--auto-bits`): sensitivity probe → Lagrangian allocator at layer/block/expert granularity (`--granularity`) → coalesced [`spec::LayerPolicy`] globs |
 //! | [`aqlm`] | §3 (the full algorithm: K-means init, beam search, codebook Adam, block FT, e2e KD) — spec `aqlm:MxB,g=G,ft=N` |
 //! | [`rtn`] | round-to-nearest baseline (Dettmers & Zettlemoyer 2022) — spec `rtn:b=B,g=G` |
 //! | [`gptq`] | GPTQ (Frantar et al. 2022), incl. App. L scale tuning — spec `gptq:b=B[,g=G][,tuned]` |

@@ -37,6 +37,9 @@
 //!
 //! Rules are `pattern=spec` entries separated by `;`, first match wins;
 //! an entry without a pattern is shorthand for the catch-all `*`.
+//! [`LayerPolicy::coalesce`] builds the most compact rule list for an
+//! explicit per-layer assignment (block globs `b3.*`, expert globs
+//! `b3.e2.*` shadowing them) — the form the auto-allocator emits.
 //!
 //! The complete grammar reference — every method's keys and defaults,
 //! error cases (e.g. fractional bits on scalar methods), glob precedence,
@@ -617,6 +620,115 @@ impl LayerPolicy {
     pub fn is_uniform(&self) -> bool {
         self.rules.windows(2).all(|w| w[0].1 == w[1].1)
     }
+
+    /// Build the most compact policy that routes every `(layer, spec)` pair
+    /// of `assignment` exactly as given, coalescing agreeing layers into
+    /// glob rules — the emitter behind the auto-allocator's policies
+    /// ([`emit_policy`](crate::quant::alloc::emit_policy)):
+    ///
+    /// - a fully uniform assignment becomes the single catch-all `*=spec`;
+    /// - a block whose layers all share a spec becomes one `b3.*=spec` rule;
+    /// - inside a mixed block, a MoE expert whose layers agree becomes
+    ///   `b3.e2.*=spec`, and if the remaining (attention/dense) layers agree
+    ///   they become a trailing `b3.*=spec` rule — correct because rules are
+    ///   ordered and **first match wins**, so the expert rules shadow the
+    ///   block glob for their layers;
+    /// - anything else keeps its exact-name rule.
+    ///
+    /// The result re-parses to the exact per-layer assignment it was built
+    /// from (`spec_for(layer) == Some(spec)` for every pair — verified at
+    /// build time, with a fall-back to one exact rule per layer should a
+    /// pathological layer name defeat the glob scheme), and rule count is
+    /// O(blocks) rather than O(layers) whenever per-block agreement exists,
+    /// which keeps both the printed policy readable at 32+ blocks and
+    /// per-layer `spec_for` lookups (a linear scan over the rules) cheap.
+    pub fn coalesce(assignment: &[(String, MethodSpec)]) -> LayerPolicy {
+        let exact =
+            |a: &[(String, MethodSpec)]| LayerPolicy { rules: a.to_vec() };
+        if assignment.is_empty() {
+            return LayerPolicy { rules: Vec::new() };
+        }
+        let verified = |pol: LayerPolicy| {
+            let ok = assignment.iter().all(|(n, s)| pol.spec_for(n) == Some(s));
+            if ok { pol } else { exact(assignment) }
+        };
+        // Fully uniform: the one-rule catch-all.
+        if assignment.windows(2).all(|w| w[0].1 == w[1].1) {
+            return verified(LayerPolicy::uniform(assignment[0].1));
+        }
+        // Group indices by block prefix (`b3` of `b3.wq` / `b3.e2.wg`),
+        // preserving first-seen (model) order. Names without a '.' cannot
+        // be globbed and keep exact rules.
+        let mut blocks: Vec<(&str, Vec<usize>)> = Vec::new();
+        for (i, (name, _)) in assignment.iter().enumerate() {
+            let key = name.split_once('.').map(|(b, _)| b).unwrap_or("");
+            match blocks.iter_mut().find(|(k, _)| *k == key && !key.is_empty()) {
+                Some((_, v)) => v.push(i),
+                None => blocks.push((key, vec![i])),
+            }
+        }
+        let uniform = |idxs: &[usize]| {
+            idxs.windows(2).all(|w| assignment[w[0]].1 == assignment[w[1]].1)
+        };
+        let mut rules: Vec<(String, MethodSpec)> = Vec::new();
+        for (bk, idxs) in &blocks {
+            if bk.is_empty() {
+                rules.extend(idxs.iter().map(|&i| assignment[i].clone()));
+                continue;
+            }
+            if uniform(idxs) {
+                rules.push((format!("{bk}.*"), assignment[idxs[0]].1));
+                continue;
+            }
+            // Mixed block: try expert-level globs, exact rules otherwise.
+            let mut experts: Vec<(&str, Vec<usize>)> = Vec::new();
+            let mut rest: Vec<usize> = Vec::new();
+            for &i in idxs {
+                match expert_prefix(&assignment[i].0[bk.len() + 1..]) {
+                    Some(e) => match experts.iter_mut().find(|(k, _)| *k == e) {
+                        Some((_, v)) => v.push(i),
+                        None => experts.push((e, vec![i])),
+                    },
+                    None => rest.push(i),
+                }
+            }
+            // A trailing `bk.*` rule (emitted only when the non-expert
+            // remainder agrees) also absorbs any expert whose layers all
+            // share that same spec — first match wins, so only experts
+            // that *differ* from the remainder need their own rule.
+            let rest_spec =
+                (uniform(&rest) && rest.len() > 1).then(|| assignment[rest[0]].1);
+            for (ek, eidxs) in &experts {
+                if uniform(eidxs) && Some(assignment[eidxs[0]].1) == rest_spec {
+                    continue; // absorbed by the block glob below
+                }
+                if uniform(eidxs) && eidxs.len() > 1 {
+                    rules.push((format!("{bk}.{ek}.*"), assignment[eidxs[0]].1));
+                } else {
+                    rules.extend(eidxs.iter().map(|&i| assignment[i].clone()));
+                }
+            }
+            match rest_spec {
+                // After this block's expert rules: first match wins, so the
+                // block glob only catches the non-expert remainder (plus
+                // any expert absorbed above).
+                Some(spec) => rules.push((format!("{bk}.*"), spec)),
+                None => rules.extend(rest.iter().map(|&i| assignment[i].clone())),
+            }
+        }
+        verified(LayerPolicy { rules })
+    }
+}
+
+/// The `e{j}` component of an expert-layer tail (`e2.wg` → `e2`): an 'e'
+/// followed by digits, with a leaf name after it. Used by
+/// [`LayerPolicy::coalesce`] to group MoE expert layers.
+fn expert_prefix(tail: &str) -> Option<&str> {
+    let (head, leaf) = tail.split_once('.')?;
+    if leaf.is_empty() || head.len() < 2 || !head.starts_with('e') {
+        return None;
+    }
+    head[1..].bytes().all(|b| b.is_ascii_digit()).then_some(head)
 }
 
 impl fmt::Display for LayerPolicy {
@@ -791,6 +903,108 @@ mod tests {
         for name in ["b0.wq", "b3.e1.wu", "anything"] {
             assert_eq!(pol.spec_for(name).unwrap(), &p("rtn:b=4,g=32"));
         }
+    }
+
+    fn named(names: &[&str], specs: &[&str]) -> Vec<(String, MethodSpec)> {
+        names.iter().zip(specs).map(|(n, s)| (n.to_string(), p(s))).collect()
+    }
+
+    /// Coalesced output must route every assignment pair exactly as given.
+    fn assert_routes(pol: &LayerPolicy, assignment: &[(String, MethodSpec)]) {
+        for (name, spec) in assignment {
+            assert_eq!(pol.spec_for(name), Some(spec), "{name} misrouted by {pol}");
+        }
+    }
+
+    #[test]
+    fn coalesce_uniform_assignment_is_one_catch_all() {
+        let a = named(&["b0.wq", "b0.wd", "b1.wq", "b1.wd"], &["rtn:b=4"; 4]);
+        let pol = LayerPolicy::coalesce(&a);
+        assert_eq!(pol.rules, vec![("*".to_string(), p("rtn:b=4"))]);
+        assert_routes(&pol, &a);
+    }
+
+    #[test]
+    fn coalesce_per_block_assignment_is_one_rule_per_block() {
+        let a = named(
+            &["b0.wq", "b0.wk", "b0.wd", "b1.wq", "b1.wk", "b1.wd"],
+            &["gptq:b=4,g=16", "gptq:b=4,g=16", "gptq:b=4,g=16", "rtn:b=2", "rtn:b=2", "rtn:b=2"],
+        );
+        let pol = LayerPolicy::coalesce(&a);
+        assert_eq!(
+            pol.rules,
+            vec![("b0.*".to_string(), p("gptq:b=4,g=16")), ("b1.*".to_string(), p("rtn:b=2"))]
+        );
+        assert_routes(&pol, &a);
+    }
+
+    #[test]
+    fn coalesce_block_glob_does_not_leak_across_digit_prefixes() {
+        // `b3.*` must not capture `b30.*` layers (the '.' anchors the glob).
+        let a = named(&["b3.wq", "b3.wd", "b30.wq", "b30.wd"],
+                      &["rtn:b=8", "rtn:b=8", "rtn:b=2", "rtn:b=2"]);
+        let pol = LayerPolicy::coalesce(&a);
+        assert_eq!(pol.rules.len(), 2, "{pol}");
+        assert_routes(&pol, &a);
+    }
+
+    #[test]
+    fn coalesce_expert_globs_shadow_the_block_glob() {
+        // Mixed block: experts at different widths than attention. The
+        // expert rules must precede `b0.*` so first-match-wins routes them.
+        let a = named(
+            &["b0.wq", "b0.wo", "b0.e0.wg", "b0.e0.wd", "b0.e1.wg", "b0.e1.wd"],
+            &["rtn:b=8", "rtn:b=8", "rtn:b=2", "rtn:b=2", "rtn:b=4", "rtn:b=4"],
+        );
+        let pol = LayerPolicy::coalesce(&a);
+        assert_eq!(
+            pol.rules,
+            vec![
+                ("b0.e0.*".to_string(), p("rtn:b=2")),
+                ("b0.e1.*".to_string(), p("rtn:b=4")),
+                ("b0.*".to_string(), p("rtn:b=8")),
+            ]
+        );
+        assert_routes(&pol, &a);
+        // And the printed form round-trips through the grammar.
+        assert_eq!(LayerPolicy::parse(&pol.to_string()).unwrap(), pol);
+    }
+
+    #[test]
+    fn coalesce_absorbs_experts_matching_the_block_remainder() {
+        // e0 agrees with the attention layers, so the block glob covers it;
+        // only the divergent e1 needs its own (earlier) rule.
+        let a = named(
+            &["b0.wq", "b0.wo", "b0.e0.wg", "b0.e0.wd", "b0.e1.wg", "b0.e1.wd"],
+            &["rtn:b=8", "rtn:b=8", "rtn:b=8", "rtn:b=8", "rtn:b=4", "rtn:b=4"],
+        );
+        let pol = LayerPolicy::coalesce(&a);
+        assert_eq!(
+            pol.rules,
+            vec![("b0.e1.*".to_string(), p("rtn:b=4")), ("b0.*".to_string(), p("rtn:b=8"))]
+        );
+        assert_routes(&pol, &a);
+    }
+
+    #[test]
+    fn coalesce_mixed_block_keeps_exact_rules_where_needed() {
+        // No agreement anywhere in b0: exact rules survive; b1 coalesces.
+        let a = named(
+            &["b0.wq", "b0.wk", "b0.wd", "b1.wq", "b1.wd"],
+            &["rtn:b=8", "rtn:b=4", "rtn:b=2", "quip:b=2", "quip:b=2"],
+        );
+        let pol = LayerPolicy::coalesce(&a);
+        assert_routes(&pol, &a);
+        assert!(pol.rules.contains(&("b1.*".to_string(), p("quip:b=2"))), "{pol}");
+        assert_eq!(pol.rules.len(), 4, "{pol}");
+    }
+
+    #[test]
+    fn coalesce_unglobbable_names_fall_back_to_exact_rules() {
+        let a = named(&["lmhead", "b0.wq", "b0.wd"], &["rtn:b=8", "rtn:b=2", "rtn:b=2"]);
+        let pol = LayerPolicy::coalesce(&a);
+        assert_routes(&pol, &a);
+        assert!(pol.rules.contains(&("lmhead".to_string(), p("rtn:b=8"))), "{pol}");
     }
 
     #[test]

@@ -9,11 +9,14 @@ use std::path::{Path, PathBuf};
 /// Element type of a module argument.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer (token ids, step counters).
     I32,
 }
 
 impl Dtype {
+    /// Parse the manifest's dtype string (`f32` / `i32`).
     pub fn parse(s: &str) -> anyhow::Result<Dtype> {
         match s {
             "f32" => Ok(Dtype::F32),
@@ -26,12 +29,16 @@ impl Dtype {
 /// One positional argument or result of a module.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Argument name (documentation only; order is what binds).
     pub name: String,
+    /// Expected shape.
     pub shape: Vec<usize>,
+    /// Expected element type.
     pub dtype: Dtype,
 }
 
 impl TensorSpec {
+    /// Total element count of the spec's shape.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -52,23 +59,33 @@ impl TensorSpec {
 /// One lowered HLO module.
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
+    /// Manifest key (`forward_nano_b2s4`, …).
     pub key: String,
+    /// Path of the lowered HLO text file.
     pub path: PathBuf,
+    /// Positional input specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Positional output specs.
     pub outputs: Vec<TensorSpec>,
+    /// Batch size the module was lowered for, if fixed.
     pub batch: Option<usize>,
+    /// Sequence length the module was lowered for, if fixed.
     pub seq: Option<usize>,
+    /// Model preset the module was lowered for, if recorded.
     pub config: Option<String>,
 }
 
 /// The whole artifacts directory.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Every lowered module.
     pub modules: Vec<ModuleSpec>,
 }
 
 impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
         let j = Json::from_file(&dir.join("manifest.json"))?;
         let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("manifest root must be an object"))?;
@@ -97,6 +114,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), modules })
     }
 
+    /// Look up a module by manifest key, listing known keys on a miss.
     pub fn module(&self, key: &str) -> anyhow::Result<&ModuleSpec> {
         self.modules
             .iter()

@@ -94,12 +94,15 @@ pub fn unflatten_params(model: &mut Model, params: &[HostTensor]) -> anyhow::Res
 /// PJRT forward engine (logits).
 pub struct PjrtForward {
     module: CompiledModule,
+    /// Batch size the module was lowered for.
     pub batch: usize,
+    /// Sequence length the module was lowered for.
     pub seq: usize,
     vocab: usize,
 }
 
 impl PjrtForward {
+    /// Compile the `{model_name}_fwd` artifact.
     pub fn load(rt: &PjrtRuntime, manifest: &Manifest, model_name: &str) -> anyhow::Result<PjrtForward> {
         let spec = manifest.module(&format!("{model_name}_fwd"))?;
         let batch = spec.batch.ok_or_else(|| anyhow::anyhow!("fwd module missing batch"))?;
@@ -131,11 +134,15 @@ pub struct PjrtTrainer {
     state_m: Vec<HostTensor>,
     state_v: Vec<HostTensor>,
     step: i32,
+    /// Batch size the module was lowered for.
     pub batch: usize,
+    /// Sequence length the module was lowered for.
     pub seq: usize,
 }
 
 impl PjrtTrainer {
+    /// Compile the `{model_name}_train` artifact and seed the optimizer
+    /// state from `init`'s parameters.
     pub fn new(
         rt: &PjrtRuntime,
         manifest: &Manifest,
@@ -194,6 +201,7 @@ impl PjrtTrainer {
         unflatten_params(model, &self.state_params)
     }
 
+    /// Number of optimizer steps taken so far.
     pub fn steps_taken(&self) -> i32 {
         self.step
     }

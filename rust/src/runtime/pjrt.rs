@@ -11,31 +11,38 @@ use anyhow::Context;
 /// A host-side tensor crossing the PJRT boundary.
 #[derive(Clone, Debug)]
 pub enum HostTensor {
+    /// f32 data + shape.
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data + shape.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl HostTensor {
+    /// f32 tensor (panics on shape/length mismatch).
     pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
         assert_eq!(data.len(), shape.iter().product::<usize>());
         HostTensor::F32(data, shape.to_vec())
     }
 
+    /// i32 tensor (panics on shape/length mismatch).
     pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
         assert_eq!(data.len(), shape.iter().product::<usize>());
         HostTensor::I32(data, shape.to_vec())
     }
 
+    /// Rank-0 i32 scalar.
     pub fn scalar_i32(v: i32) -> HostTensor {
         HostTensor::I32(vec![v], vec![])
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
         }
     }
 
+    /// The tensor's element type.
     pub fn dtype(&self) -> Dtype {
         match self {
             HostTensor::F32(..) => Dtype::F32,
@@ -43,6 +50,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the f32 data (errors for i32 tensors).
     pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
         match self {
             HostTensor::F32(d, _) => Ok(d),
@@ -75,10 +83,12 @@ impl HostTensor {
 
 /// PJRT CPU runtime.
 pub struct PjrtRuntime {
+    /// The underlying PJRT client.
     pub client: xla::PjRtClient,
 }
 
 impl PjrtRuntime {
+    /// Create the CPU client.
     pub fn cpu() -> anyhow::Result<PjrtRuntime> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
@@ -102,6 +112,7 @@ impl PjrtRuntime {
 /// A compiled artifact ready to execute.
 pub struct CompiledModule {
     exe: xla::PjRtLoadedExecutable,
+    /// The manifest spec the module was compiled from.
     pub spec: ModuleSpec,
 }
 

@@ -21,16 +21,19 @@ pub struct Tensor {
 impl Tensor {
     // ----- constructors -----
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: &[usize], value: f32) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![value; n] }
     }
 
+    /// Wrap an existing row-major buffer (panics on shape/length mismatch).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -67,18 +70,22 @@ impl Tensor {
 
     // ----- shape -----
 
+    /// Dimension sizes, outermost first.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Number of dimensions.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -95,6 +102,7 @@ impl Tensor {
         self.shape[1]
     }
 
+    /// Reinterpret the same buffer under a new shape (same element count).
     pub fn reshape(mut self, shape: &[usize]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
         self.shape = shape.to_vec();
@@ -103,24 +111,29 @@ impl Tensor {
 
     // ----- data access -----
 
+    /// The flat row-major buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major buffer.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
 
+    /// Element `(i, j)` of a 2-d tensor.
     #[inline]
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         debug_assert_eq!(self.ndim(), 2);
         self.data[i * self.shape[1] + j]
     }
 
+    /// Set element `(i, j)` of a 2-d tensor.
     #[inline]
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         debug_assert_eq!(self.ndim(), 2);
@@ -136,6 +149,7 @@ impl Tensor {
         &self.data[i * c..(i + 1) * c]
     }
 
+    /// Mutable row `i` of a 2-d tensor.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         debug_assert_eq!(self.ndim(), 2);
@@ -151,6 +165,7 @@ impl Tensor {
 
     // ----- elementwise -----
 
+    /// Apply `f` to every element, consuming and returning the tensor.
     pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
         for v in &mut self.data {
             *v = f(*v);
@@ -158,6 +173,7 @@ impl Tensor {
         self
     }
 
+    /// Elementwise `self += other` (shapes must match).
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -165,6 +181,7 @@ impl Tensor {
         }
     }
 
+    /// Elementwise `self -= other` (shapes must match).
     pub fn sub_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -172,6 +189,7 @@ impl Tensor {
         }
     }
 
+    /// Scale every element by `s`.
     pub fn scale_assign(&mut self, s: f32) {
         for a in &mut self.data {
             *a *= s;
@@ -186,12 +204,14 @@ impl Tensor {
         }
     }
 
+    /// Elementwise difference `self - other`.
     pub fn sub(&self, other: &Tensor) -> Tensor {
         let mut out = self.clone();
         out.sub_assign(other);
         out
     }
 
+    /// Elementwise sum `self + other`.
     pub fn add(&self, other: &Tensor) -> Tensor {
         let mut out = self.clone();
         out.add_assign(other);
@@ -200,18 +220,22 @@ impl Tensor {
 
     // ----- reductions -----
 
+    /// Sum of all elements (f64 accumulation).
     pub fn sum(&self) -> f64 {
         self.data.iter().map(|&x| x as f64).sum()
     }
 
+    /// Squared Frobenius norm (f64 accumulation).
     pub fn sq_norm(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
     }
 
+    /// Frobenius norm.
     pub fn norm(&self) -> f64 {
         self.sq_norm().sqrt()
     }
 
+    /// Largest absolute element.
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }

@@ -86,6 +86,7 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
+/// C = A @ Bᵀ into pre-allocated `out` (overwrites).
 pub fn matmul_bt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let (m, k) = (a.rows(), a.cols());
     let n = b.rows();

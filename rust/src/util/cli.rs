@@ -9,9 +9,13 @@ use std::collections::BTreeMap;
 /// Parsed command line: a subcommand, key→value options, and boolean flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-flag token (`aqlm <command> …`), if any.
     pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches (no value).
     pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -48,26 +52,32 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Is the bare switch `--name` present?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// `usize` option with a default (unparsable values fall back too).
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `u64` option with a default (unparsable values fall back too).
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `f64` option with a default (unparsable values fall back too).
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

@@ -14,11 +14,17 @@ use std::fmt;
 /// deterministic (results files diff cleanly between runs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with deterministically ordered keys.
     Obj(BTreeMap<String, Json>),
 }
 
@@ -26,16 +32,20 @@ pub enum Json {
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {offset}: {msg}")]
 pub struct ParseError {
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
+    /// What the parser expected or found.
     pub msg: String,
 }
 
 impl Json {
     // ----- constructors -----
+    /// Empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Empty array.
     pub fn arr() -> Json {
         Json::Arr(Vec::new())
     }
@@ -51,6 +61,7 @@ impl Json {
         self
     }
 
+    /// Append to an array (panics if not an array).
     pub fn push(&mut self, value: Json) -> &mut Self {
         match self {
             Json::Arr(v) => v.push(value),
@@ -60,6 +71,7 @@ impl Json {
     }
 
     // ----- accessors -----
+    /// Object field by key (`None` for non-objects or missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -67,6 +79,7 @@ impl Json {
         }
     }
 
+    /// Array element by index (`None` for non-arrays or out of range).
     pub fn at(&self, idx: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(idx),
@@ -74,6 +87,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -81,10 +95,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -92,6 +108,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -99,6 +116,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -106,6 +124,7 @@ impl Json {
         }
     }
 
+    /// Key→value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -113,25 +132,28 @@ impl Json {
         }
     }
 
-    /// Typed field lookup helpers returning anyhow errors with field context.
+    /// Required string field, with field context in the error.
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
             .and_then(|v| v.as_str())
             .ok_or_else(|| anyhow::anyhow!("missing string field '{key}'"))
     }
 
+    /// Required `usize` field, with field context in the error.
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.get(key)
             .and_then(|v| v.as_usize())
             .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
     }
 
+    /// Required numeric field, with field context in the error.
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.get(key)
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
     }
 
+    /// Required array field, with field context in the error.
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .and_then(|v| v.as_arr())
@@ -139,6 +161,7 @@ impl Json {
     }
 
     // ----- parsing -----
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(input: &str) -> Result<Json, ParseError> {
         let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
         p.skip_ws();

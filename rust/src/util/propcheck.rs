@@ -10,8 +10,12 @@ use crate::util::rng::Rng;
 /// Configuration for a property run.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Number of random cases to evaluate.
     pub cases: usize,
+    /// Base seed; mixed with the property's name so each test draws an
+    /// independent deterministic stream.
     pub seed: u64,
+    /// Cap on shrink-candidate evaluations after a failure.
     pub max_shrink_iters: usize,
 }
 

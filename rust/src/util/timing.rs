@@ -9,15 +9,23 @@ use std::time::Instant;
 /// Summary statistics over a set of per-iteration timings (seconds).
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Number of samples summarized.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median (midpoint average for even sample counts) — the headline
+    /// number the bench tables report, robust to scheduler spikes.
     pub median: f64,
+    /// Fastest sample.
     pub min: f64,
+    /// Slowest sample.
     pub max: f64,
+    /// Population standard deviation.
     pub stddev: f64,
 }
 
 impl Stats {
+    /// Summarize a non-empty set of per-iteration timings (seconds).
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -67,10 +75,12 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Stopwatch {
         Stopwatch { start: Instant::now() }
     }
 
+    /// Seconds elapsed since [`Stopwatch::start`].
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }

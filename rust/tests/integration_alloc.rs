@@ -1,10 +1,12 @@
 //! Integration: automatic rate-distortion bit allocation (the
 //! `--auto-bits` engine, `quant::alloc`) on a *trained* model — the probe
-//! leaves the model untouched, the emitted policy hits the requested
-//! budget from below, round-trips through the policy grammar, reproduces
-//! its predicted budget through the real pipeline, allocates monotonically
-//! in the budget, and does not lose to the uniform AQLM point at the same
-//! budget.
+//! leaves the model untouched, the emitted (coalesced) policy hits the
+//! requested budget from below, round-trips through the policy grammar,
+//! reproduces its predicted budget through the real pipeline, allocates
+//! monotonically in the budget, and does not lose to the uniform AQLM
+//! point at the same budget. The per-block test covers `--granularity
+//! block`: glob (`b<k>.*`) rules, O(blocks) rule count, and exact budget
+//! reproduction.
 
 use aqlm::coordinator::pipeline::quantize_model;
 use aqlm::coordinator::train::{train_native, TrainConfig};
@@ -12,7 +14,7 @@ use aqlm::data::dataset::{DataBundle, DataSizes, TokenDataset};
 use aqlm::eval::ppl::perplexity;
 use aqlm::nn::config::ModelConfig;
 use aqlm::nn::model::Model;
-use aqlm::quant::alloc::{allocate, auto_allocate, default_candidates};
+use aqlm::quant::alloc::{allocate, auto_allocate, default_candidates, Granularity};
 use aqlm::quant::spec::LayerPolicy;
 use aqlm::util::rng::Rng;
 
@@ -61,6 +63,7 @@ fn auto_allocation_end_to_end_on_trained_model() {
         s.seq,
         target,
         &candidates,
+        Granularity::PerLayer,
         &mut prng,
     )
     .unwrap();
@@ -79,11 +82,21 @@ fn auto_allocation_end_to_end_on_trained_model() {
     assert!(auto.avg_bits() > target - 0.45, "undershot: {}", auto.avg_bits());
 
     // (2) The emitted policy is an ordinary policy string: Display ↔ parse
-    // closed under allocator output, one rule per layer.
+    // closed under allocator output, coalesced to at most one rule per
+    // layer (glob rules wherever layers agree), and it still routes every
+    // probed layer to exactly its chosen candidate.
     let printed = auto.policy.to_string();
     let reparsed = LayerPolicy::parse(&printed).unwrap();
     assert_eq!(reparsed, auto.policy, "policy did not round-trip: {printed}");
-    assert_eq!(auto.policy.rules.len(), auto.table.len());
+    assert!(auto.policy.rules.len() <= auto.table.len());
+    for (row, &c) in auto.table.iter().zip(&auto.allocation.choice) {
+        assert_eq!(
+            reparsed.spec_for(&row.layer),
+            Some(&auto.candidates[c].emit),
+            "{} misrouted by the coalesced policy {printed}",
+            row.layer
+        );
+    }
 
     // (3) The *reparsed* policy runs through the pipeline and lands exactly
     // the predicted budget (storage depends only on the candidate shapes).
@@ -148,4 +161,81 @@ fn auto_allocation_end_to_end_on_trained_model() {
             row.bits(a_hi.choice[j])
         );
     }
+}
+
+/// `--auto-bits 2.5 --granularity block` end to end on a trained nano:
+/// the emitted policy is made of glob (`b<k>.*`) rules — O(blocks) of
+/// them, not O(layers) — hits the budget from below, round-trips through
+/// `LayerPolicy::parse`, and reproduces the predicted avg_bits exactly
+/// through the real pipeline.
+#[test]
+fn per_block_auto_allocation_emits_glob_policy_and_reproduces_bits() {
+    let s = trained_setup(47);
+    let target = 2.5;
+    let candidates = default_candidates(&s.model.cfg, target, 8, true);
+
+    let mut probe_model = s.model.clone();
+    let mut prng = Rng::seed_from_u64(13);
+    let auto = auto_allocate(
+        &mut probe_model,
+        &s.calib,
+        s.n_seqs,
+        s.seq,
+        target,
+        &candidates,
+        Granularity::PerBlock,
+        &mut prng,
+    )
+    .unwrap();
+    let printed = auto.policy.to_string();
+
+    // Budget: never above the request.
+    assert!(auto.avg_bits() <= target + 1e-9, "overshot: {}", auto.avg_bits());
+
+    // The policy is glob rules at block granularity: every pattern is
+    // `b<k>.*` (or the single catch-all `*` if all blocks agreed), and
+    // there are at most as many rules as blocks — the O(blocks) regression
+    // guard on a real model.
+    let n_blocks = s.model.blocks.len();
+    assert!(
+        auto.policy.rules.len() <= n_blocks,
+        "{} rules for {n_blocks} blocks: {printed}",
+        auto.policy.rules.len()
+    );
+    assert!(
+        auto.policy.rules.iter().all(|(pat, _)| {
+            pat == "*"
+                || (pat.starts_with('b')
+                    && pat.ends_with(".*")
+                    && pat[1..pat.len() - 2].bytes().all(|b| b.is_ascii_digit()))
+        }),
+        "non-block-glob rule in {printed}"
+    );
+    // Every layer of one block routes to one spec.
+    for (bi, block) in s.model.blocks.iter().enumerate() {
+        let specs: Vec<_> = block
+            .linears()
+            .into_iter()
+            .map(|(name, _)| *auto.policy.spec_for(&format!("b{bi}.{name}")).unwrap())
+            .collect();
+        assert!(specs.windows(2).all(|w| w[0] == w[1]), "block {bi} not uniform");
+    }
+
+    // Round-trip, then reproduce the predicted budget through the real
+    // pipeline (storage depends only on the candidate shapes, which probe
+    // and emit specs share).
+    let reparsed = LayerPolicy::parse(&printed).unwrap();
+    assert_eq!(reparsed, auto.policy, "policy did not round-trip: {printed}");
+    let mut m_auto = s.model.clone();
+    let mut rng = Rng::seed_from_u64(5);
+    let rep =
+        quantize_model(&mut m_auto, &s.calib, s.n_seqs, s.seq, &reparsed, &mut rng).unwrap();
+    assert!(
+        (rep.avg_bits - auto.avg_bits()).abs() < 1e-6,
+        "predicted {} bits, pipeline measured {}",
+        auto.avg_bits(),
+        rep.avg_bits
+    );
+    let ppl = perplexity(&mut m_auto, &s.bundle.eval_wiki, 8);
+    assert!(ppl.is_finite(), "per-block auto model unusable");
 }

@@ -569,6 +569,133 @@ fn prop_allocator_output_closed_under_policy_grammar_and_monotone() {
 }
 
 #[test]
+fn prop_grouped_allocation_coalesces_exactly_and_never_overshoots() {
+    // At every granularity: the solved assignment never overshoots the
+    // budget, a larger budget never narrows a unit, and the *coalesced*
+    // policy (block/expert globs, `LayerPolicy::coalesce`) re-parses to
+    // the exact per-layer assignment it was emitted from.
+    use aqlm::quant::alloc::{
+        allocate_at, emit_policy, Candidate, Granularity, LayerOption, LayerSensitivity,
+    };
+    use aqlm::quant::spec::{LayerPolicy, MethodSpec};
+    let spec_pool: Vec<MethodSpec> = [
+        "aqlm:1x6,g=4,ft=0,fast",
+        "aqlm:2x8,g=8,ft=30",
+        "rtn:b=2,g=32",
+        "gptq:b=3,g=16",
+        "spqr:b=3,g=16,out=0.01",
+    ]
+    .iter()
+    .map(|s| MethodSpec::parse(s).unwrap())
+    .collect();
+    check_no_shrink(
+        "grouped-alloc-coalesce",
+        &cfg(64),
+        |rng: &mut Rng| {
+            let n_cand = 2 + rng.below(4);
+            let candidates: Vec<Candidate> = (0..n_cand)
+                .map(|_| {
+                    let s = spec_pool[rng.below(spec_pool.len())];
+                    Candidate { probe: s, emit: s }
+                })
+                .collect();
+            // Block-structured names, with MoE expert layers on some
+            // blocks so PerExpert grouping has real work to do.
+            let n_blocks = 1 + rng.below(6);
+            let mut table: Vec<LayerSensitivity> = Vec::new();
+            for b in 0..n_blocks {
+                let mut names: Vec<String> =
+                    (0..4).map(|j| format!("b{b}.w{j}")).collect();
+                if rng.below(2) == 0 {
+                    for e in 0..1 + rng.below(3) {
+                        for leaf in ["wg", "wd"] {
+                            names.push(format!("b{b}.e{e}.{leaf}"));
+                        }
+                    }
+                }
+                for name in names {
+                    table.push(LayerSensitivity {
+                        layer: name,
+                        params: 64 + rng.below(4096),
+                        options: (0..n_cand)
+                            .map(|_| LayerOption {
+                                avg_bits: (8 + rng.below(96)) as f64 / 8.0,
+                                rel_error: rng.f64() * 0.5,
+                            })
+                            .collect(),
+                    });
+                }
+            }
+            // Target at or above the narrowest mixture, so always feasible.
+            let (mut min_bits, mut params) = (0.0f64, 0usize);
+            for row in &table {
+                let narrowest =
+                    row.options.iter().map(|o| o.avg_bits).fold(f64::INFINITY, f64::min);
+                min_bits += narrowest * row.params as f64;
+                params += row.params;
+            }
+            // Grouped rows average their members' bits, so the grouped
+            // minimum can sit above the per-layer minimum: leave headroom.
+            let target = min_bits / params as f64 + 2.0 + rng.f64() * 3.0;
+            let gran = [Granularity::PerLayer, Granularity::PerBlock, Granularity::PerExpert]
+                [rng.below(3)];
+            (candidates, table, target, gran)
+        },
+        |(candidates, table, target, gran)| {
+            let a = match allocate_at(table, *target, *gran) {
+                Ok(a) => a,
+                // A coarse grouping can make a near-minimum target
+                // infeasible (bits average across members); that is the
+                // documented contract, not a failure.
+                Err(e) if e.to_string().contains("infeasible") => return Ok(()),
+                Err(e) => return Err(e.to_string()),
+            };
+            if a.avg_bits > target + 1e-9 {
+                return Err(format!("overshot budget at {gran}: {} > {target}", a.avg_bits));
+            }
+            // Group-uniformity: members of one unit share one choice.
+            for (i, row) in table.iter().enumerate() {
+                for (j, other) in table.iter().enumerate() {
+                    if gran.key_of(&row.layer) == gran.key_of(&other.layer)
+                        && a.choice[i] != a.choice[j]
+                    {
+                        return Err(format!(
+                            "{} and {} share a {gran} group but chose differently",
+                            row.layer, other.layer
+                        ));
+                    }
+                }
+            }
+            let policy = emit_policy(table, candidates, &a);
+            let s = policy.to_string();
+            let back =
+                LayerPolicy::parse(&s).map_err(|e| format!("'{s}' failed to parse: {e}"))?;
+            if back != policy {
+                return Err(format!("'{s}' reparsed to a different assignment"));
+            }
+            for (row, &c) in table.iter().zip(&a.choice) {
+                if back.spec_for(&row.layer) != Some(&candidates[c].emit) {
+                    return Err(format!(
+                        "coalesced policy routes {} differently at {gran}",
+                        row.layer
+                    ));
+                }
+            }
+            let a2 = allocate_at(table, target + 1.0, *gran).map_err(|e| e.to_string())?;
+            for (j, row) in table.iter().enumerate() {
+                if row.bits(a2.choice[j]) < row.bits(a.choice[j]) - 1e-12 {
+                    return Err(format!(
+                        "layer {} narrowed when the budget grew at {gran}",
+                        row.layer
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_layer_policy_display_parse_roundtrip() {
     use aqlm::quant::spec::{LayerPolicy, MethodSpec};
     let specs: Vec<MethodSpec> = [

@@ -138,7 +138,7 @@ fn main() -> anyhow::Result<()> {
     // ---- 5. Serve the compressed model ----------------------------------
     println!("== phase 4: serving the 2-bit model ==");
     use aqlm::coordinator::server::{Server, ServerConfig};
-    let server = Server::start(two_bit_model.unwrap(), ServerConfig { max_batch: 4, seed: 0 });
+    let server = Server::start(two_bit_model.unwrap(), ServerConfig { max_batch: 4, seed: 0, ..Default::default() });
     let tok = &ws.bundle.tokenizer;
     let prompts = ["the small cat", "the ruby is in the", "three plus four equals"];
     let rxs: Vec<_> = prompts

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let tok = &ws.bundle.tokenizer;
     let mut rng = Rng::seed_from_u64(3);
     for (label, model) in [("FP32", base), ("AQLM-2bit", quantized.clone())] {
-        let server = Server::start(model, ServerConfig { max_batch: 4, seed: 0 });
+        let server = Server::start(model, ServerConfig { max_batch: 4, seed: 0, ..Default::default() });
         // Bursty workload: 3 waves of requests with varied lengths.
         let mut receivers = Vec::new();
         for wave in 0..3 {
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     // climb with max_batch instead of staying flat.
     println!("\nbatched decode sweep (AQLM-2bit, 12 greedy requests):");
     for max_batch in [1usize, 4, 8] {
-        let server = Server::start(quantized.clone(), ServerConfig { max_batch, seed: 0 });
+        let server = Server::start(quantized.clone(), ServerConfig { max_batch, seed: 0, ..Default::default() });
         let receivers: Vec<_> = (0..12)
             .map(|i| {
                 let mut prompt = vec![aqlm::data::tokenizer::BOS];

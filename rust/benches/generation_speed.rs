@@ -1,6 +1,10 @@
 //! `cargo bench --bench generation_speed` — Table 14 (end-to-end tok/s of
-//! the continuous-batching server, FP32 vs AQLM weights) plus Table 14b,
-//! the batched-decode sweep over max_batch ∈ {1,4,8,16}.
+//! the continuous-batching server, FP32 vs AQLM weights), Table 14b (the
+//! batched-decode sweep over max_batch ∈ {1,4,8,16}), and Table 14c (the
+//! fleet sweep over max_batch × workers). The fleet sweep also writes
+//! `BENCH_generation.json` — tok/s and queue/compute p50/p95/p99 per
+//! configuration — which CI archives and diffs against the previous run
+//! via `scripts/bench_diff.py`.
 
 use aqlm::bench::{kernels, Profile, Workspace};
 use aqlm::util::cli::Args;
@@ -32,6 +36,28 @@ fn main() {
         }
         Err(e) => {
             eprintln!("t14b failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // Fleet sweep + machine-readable results for CI trend tracking.
+    match kernels::t14c_fleet_sweep(&mut ws) {
+        Ok((tables, json)) => {
+            for t in tables {
+                println!("{}", t.to_markdown());
+                t.save(&ws.results_dir(), "t14c_fleet_sweep").ok();
+            }
+            let path = std::path::Path::new("BENCH_generation.json");
+            match json.to_file(path) {
+                Ok(()) => println!("wrote {}", path.display()),
+                Err(e) => {
+                    eprintln!("failed to write BENCH_generation.json: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("t14c failed: {e:#}");
             std::process::exit(1);
         }
     }

@@ -6,6 +6,7 @@
 use super::workspace::Workspace;
 use crate::coordinator::shapes::choose_shape;
 use crate::eval::report::Table;
+use crate::util::json::Json;
 use crate::kernels::format::{AqlmShape, AqlmWeight};
 use crate::kernels::matvec::PackedAqlm;
 use crate::tensor::ops::gemv;
@@ -149,7 +150,7 @@ pub fn t14_generation_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         let method = super::tables::aqlm_spec_with_shape(ws, shape);
         let (quantized, _) = ws.quantize(&base, &method)?;
         for (label, model) in [("FP32", base.clone()), (&*format!("AQLM {}", shape.name()), quantized)] {
-            let server = Server::start(model, ServerConfig { max_batch: 4, seed: 0 });
+            let server = Server::start(model, ServerConfig { max_batch: 4, seed: 0, ..Default::default() });
             let n_req = if ws.profile.fast { 6 } else { 12 };
             let max_new = 48;
             let rxs: Vec<_> = (0..n_req)
@@ -186,7 +187,7 @@ pub fn t14b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     let n_req = if ws.profile.fast { 16 } else { 32 };
     let max_new = if ws.profile.fast { 32 } else { 64 };
     for max_batch in [1usize, 4, 8, 16] {
-        let server = Server::start(quantized.clone(), ServerConfig { max_batch, seed: 0 });
+        let server = Server::start(quantized.clone(), ServerConfig { max_batch, seed: 0, ..Default::default() });
         let rxs: Vec<_> = (0..n_req)
             .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
             .collect();
@@ -202,4 +203,70 @@ pub fn t14b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
         ]);
     }
     Ok(vec![t])
+}
+
+/// Table 14c: fleet sweep over (max_batch × workers) on the paged-KV
+/// server. Besides the human-readable table this returns the
+/// machine-readable payload written to `BENCH_generation.json` — tok/s
+/// plus queue/compute p50/p95/p99 per configuration — which CI archives
+/// and diffs against the previous run (`scripts/bench_diff.py`).
+pub fn t14c_fleet_sweep(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)> {
+    use crate::coordinator::server::{Server, ServerConfig};
+    let mut t = Table::new(
+        "Table 14c: fleet sweep — tok/s and latency percentiles vs (max_batch, workers)",
+        &["max_batch", "workers", "tok/s", "queue p50/p95/p99 (ms)", "compute p50/p95/p99 (ms)"],
+    );
+    let base = ws.base_model("nano")?;
+    let shape = choose_shape(&base.cfg, 2.0, 8);
+    let method = super::tables::aqlm_spec_with_shape(ws, shape);
+    let (quantized, _) = ws.quantize(&base, &method)?;
+    let n_req = if ws.profile.fast { 12 } else { 32 };
+    let max_new = if ws.profile.fast { 24 } else { 64 };
+    let batches: &[usize] = if ws.profile.fast { &[1, 4, 8] } else { &[1, 4, 8, 16] };
+    let worker_counts: &[usize] = if ws.profile.fast { &[1, 2] } else { &[1, 2, 4] };
+    let mut runs = Json::arr();
+    for &max_batch in batches {
+        for &workers in worker_counts {
+            let cfg = ServerConfig { max_batch, workers, seed: 0, ..Default::default() };
+            let server = Server::start(quantized.clone(), cfg);
+            let rxs: Vec<_> = (0..n_req)
+                .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
+                .collect();
+            for rx in rxs {
+                rx.recv().expect("generation response");
+            }
+            let stats = server.shutdown();
+            let q = [50.0, 95.0, 99.0].map(|p| stats.queue_percentile_s(p));
+            let c = [50.0, 95.0, 99.0].map(|p| stats.compute_percentile_s(p));
+            t.row(vec![
+                format!("{max_batch}"),
+                format!("{workers}"),
+                format!("{:.1}", stats.tokens_per_second()),
+                format!("{:.2}/{:.2}/{:.2}", q[0] * 1e3, q[1] * 1e3, q[2] * 1e3),
+                format!("{:.2}/{:.2}/{:.2}", c[0] * 1e3, c[1] * 1e3, c[2] * 1e3),
+            ]);
+            let mut run = Json::obj();
+            run.set("max_batch", Json::Num(max_batch as f64))
+                .set("workers", Json::Num(workers as f64))
+                .set("tok_s", Json::Num(stats.tokens_per_second()))
+                .set("requests", Json::Num(stats.requests as f64))
+                .set("preemptions", Json::Num(stats.preemptions as f64))
+                .set("peak_active", Json::Num(stats.peak_active as f64))
+                .set("queue_p50_s", Json::Num(q[0]))
+                .set("queue_p95_s", Json::Num(q[1]))
+                .set("queue_p99_s", Json::Num(q[2]))
+                .set("compute_p50_s", Json::Num(c[0]))
+                .set("compute_p95_s", Json::Num(c[1]))
+                .set("compute_p99_s", Json::Num(c[2]));
+            runs.push(run);
+        }
+    }
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("generation_speed".to_string()))
+        .set("model", Json::Str("nano".to_string()))
+        .set("weights", Json::Str(format!("AQLM {}", shape.name())))
+        .set("n_requests", Json::Num(n_req as f64))
+        .set("max_new", Json::Num(max_new as f64))
+        .set("runs", runs);
+    Ok((vec![t], out))
 }

@@ -9,7 +9,7 @@ pub mod kernels;
 
 pub use workspace::{Profile, Workspace};
 
-/// Run one experiment by id ("t1".."t16", batch sweeps "t5b"/"t14b",
+/// Run one experiment by id ("t1".."t16", sweeps "t5b"/"t14b"/"t14c",
 /// "f1", "f4", "f6", "f7", "f8" — the heterogeneous-policy Pareto sweep —
 /// plus "f9", automatic bit allocation vs the hand-written policies).
 /// Results are printed, and saved under `results/`.
@@ -31,6 +31,7 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
         "t13" => tables::t13_gqa(ws)?,
         "t14" => kernels::t14_generation_speed(ws)?,
         "t14b" => kernels::t14b_batch_sweep(ws)?,
+        "t14c" => kernels::t14c_fleet_sweep(ws)?.0,
         "t15" => tables::t15_hard_tasks(ws)?,
         "t16" => tables::t16_gptq_tuned(ws)?,
         "f1" | "f5" => figures::f1_pareto(ws)?,
@@ -52,7 +53,7 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
 /// All experiment ids in paper order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "t5b", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13",
-    "t14", "t14b", "t15", "t16", "f1", "f4", "f6", "f7", "f8", "f9",
+    "t14", "t14b", "t14c", "t15", "t16", "f1", "f4", "f6", "f7", "f8", "f9",
 ];
 
 fn slug(s: &str) -> String {

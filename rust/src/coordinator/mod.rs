@@ -1,10 +1,18 @@
 //! Layer-3 coordinator: the run-time system that owns the quantization
 //! pipeline (paper Algorithm 1 across a whole model), base-model training,
 //! calibration capture, codebook-shape selection, and the generation
-//! server with continuous batching.
+//! server.
+//!
+//! Serving is split into two halves (architecture notes in
+//! `docs/serving.md`): [`scheduler`] holds the policy — priority/deadline
+//! admission queue, paged-KV capacity accounting, chunked prefill,
+//! preempt-to-queue — and [`server`] holds the mechanism — worker threads
+//! sharing a warmed `Arc<Model>`, response/streaming channels, and
+//! latency-percentile stats.
 
 pub mod calib;
 pub mod shapes;
 pub mod pipeline;
 pub mod train;
+pub mod scheduler;
 pub mod server;

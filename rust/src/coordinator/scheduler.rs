@@ -1,0 +1,855 @@
+//! Admission and scheduling policy for the generation server.
+//!
+//! This module is the policy half of the serving stack (`server.rs` is the
+//! thread/channel half): a priority/deadline-aware [`AdmissionQueue`] shared
+//! by all workers, and a per-worker [`WorkerScheduler`] that owns a paged
+//! [`KvPool`] and advances its active sequences with chunked prefill
+//! interleaved with decode steps.
+//!
+//! Scheduling discipline (see `docs/serving.md` for the full write-up):
+//!
+//! - **Admission** pops the queue in (priority ↓, deadline ↑, arrival ↑)
+//!   order, and only admits a request whose minimum KV footprint (served
+//!   prompt + one generated token) fits the pool after accounting for what
+//!   already-active sequences are still going to allocate — KV pressure
+//!   holds admission instead of panicking the cache.
+//! - **Chunked prefill**: each iteration feeds at most `prefill_chunk`
+//!   prompt tokens (summed across prefilling lanes) through the batched
+//!   decode path before every running lane takes its decode step, so long
+//!   prompts cannot monopolize iterations.
+//! - **Preempt-to-queue**: if a step needs more blocks than the pool has
+//!   free, the worst-ranked sequence is evicted — its blocks are released
+//!   and the original request goes back to the shared queue (it will
+//!   restart from scratch; greedy output is unaffected). The best-ranked
+//!   active sequence is never evicted, so the pool always drains forward.
+//!
+//! Per-lane decode arithmetic is bit-identical to the offline
+//! single-sequence path regardless of chunking, batching, paging, or
+//! preemption, so greedy server output token-matches `Model::generate`.
+
+use crate::nn::kvcache::{KvPool, PagedSeqKv};
+use crate::nn::model::Model;
+use crate::nn::sampler;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Token substituted for an empty prompt (the serving convention: every
+/// sequence starts from at least one token).
+pub const BOS_TOKEN: u32 = 1;
+
+/// Completed generation (delivered on the request's response channel).
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    /// Served prompt window followed by the generated tokens.
+    pub tokens: Vec<u32>,
+    /// Time spent queued before (re-)admission, summed across preemptions.
+    pub queue_s: f64,
+    /// Time spent admitted on a worker (prefill + decode), summed across
+    /// preemptions.
+    pub compute_s: f64,
+    /// Total request latency: `queue_s + compute_s` (kept for
+    /// compatibility with the pre-split field).
+    pub latency_s: f64,
+    /// Number of tokens generated (the tail of `tokens`).
+    pub generated: usize,
+    /// True when the request was cancelled; `tokens` holds the partial
+    /// output produced before cancellation took effect.
+    pub cancelled: bool,
+}
+
+/// A generation request as submitted by a client.
+pub struct GenRequest {
+    /// Prompt token ids (served from the trailing admission window).
+    pub prompt: Vec<u32>,
+    /// Maximum tokens to generate (0 completes immediately with the served
+    /// prompt window and no generated tokens).
+    pub max_new: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f32,
+    /// Admission priority — higher is served first.
+    pub priority: u8,
+    /// Optional deadline; among equal priorities, earlier deadlines are
+    /// served first (requests without a deadline go last).
+    pub deadline: Option<Instant>,
+    /// Channel the final response is delivered on.
+    pub respond: Sender<GenResponse>,
+    /// Optional incremental stream: every generated token is sent as it is
+    /// sampled. A preempted request restarts, so its stream may repeat
+    /// tokens; the response's `tokens` field is always authoritative.
+    pub stream: Option<Sender<u32>>,
+}
+
+/// A request inside the shared admission queue (a [`GenRequest`] plus the
+/// bookkeeping that survives preemption round-trips).
+pub struct QueuedRequest {
+    /// The underlying request.
+    pub req: GenRequest,
+    /// Server-assigned request id (for cancellation).
+    pub id: u64,
+    /// Arrival order tiebreak — preserved across preemption so a preempted
+    /// request keeps its place among equals.
+    pub seq_no: u64,
+    /// When this request last entered the queue.
+    pub enqueued: Instant,
+    /// Queue seconds accumulated before `enqueued` (earlier admission
+    /// rounds).
+    pub queue_accum: f64,
+    /// Compute seconds accumulated in earlier admission rounds (work that
+    /// was preempted away).
+    pub compute_accum: f64,
+}
+
+/// (priority ↓, deadline ↑ with `None` last, seq_no ↑): `Greater` means
+/// "scheduled first". Shared by queue ordering and preemption ranking.
+fn cmp_sched(
+    ap: u8,
+    ad: Option<Instant>,
+    an: u64,
+    bp: u8,
+    bd: Option<Instant>,
+    bn: u64,
+) -> Ordering {
+    ap.cmp(&bp)
+        .then_with(|| match (ad, bd) {
+            (Some(a), Some(b)) => b.cmp(&a),
+            (Some(_), None) => Ordering::Greater,
+            (None, Some(_)) => Ordering::Less,
+            (None, None) => Ordering::Equal,
+        })
+        .then_with(|| bn.cmp(&an))
+}
+
+impl QueuedRequest {
+    fn rank(&self, other: &QueuedRequest) -> Ordering {
+        cmp_sched(
+            self.req.priority,
+            self.req.deadline,
+            self.seq_no,
+            other.req.priority,
+            other.req.deadline,
+            other.seq_no,
+        )
+    }
+}
+
+impl PartialEq for QueuedRequest {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank(other) == Ordering::Equal
+    }
+}
+impl Eq for QueuedRequest {}
+impl PartialOrd for QueuedRequest {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedRequest {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.rank(other)
+    }
+}
+
+/// Priority/deadline-aware admission queue (replaces the old FIFO), shared
+/// by all workers behind the server's mutex.
+#[derive(Default)]
+pub struct AdmissionQueue {
+    heap: BinaryHeap<QueuedRequest>,
+    next_seq: u64,
+}
+
+impl AdmissionQueue {
+    /// Empty queue.
+    pub fn new() -> AdmissionQueue {
+        AdmissionQueue::default()
+    }
+
+    /// Enqueue a fresh request under `id`, assigning its arrival order.
+    pub fn push_new(&mut self, req: GenRequest, id: u64) {
+        let seq_no = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(QueuedRequest {
+            req,
+            id,
+            seq_no,
+            enqueued: Instant::now(),
+            queue_accum: 0.0,
+            compute_accum: 0.0,
+        });
+    }
+
+    /// Re-enqueue a preempted request (keeps its original arrival order and
+    /// accumulated queue/compute time).
+    pub fn push_back(&mut self, q: QueuedRequest) {
+        self.heap.push(q);
+    }
+
+    /// Highest-ranked waiting request, if any.
+    pub fn peek(&self) -> Option<&QueuedRequest> {
+        self.heap.peek()
+    }
+
+    /// Pop the highest-ranked waiting request.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.heap.pop()
+    }
+
+    /// Number of waiting requests.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no requests wait.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Remove a waiting request by id (O(n) heap rebuild — cancellation is
+    /// rare). Returns it so the caller can deliver a cancelled response.
+    pub fn remove(&mut self, id: u64) -> Option<QueuedRequest> {
+        if !self.heap.iter().any(|q| q.id == id) {
+            return None;
+        }
+        let mut out = None;
+        for q in std::mem::take(&mut self.heap).into_vec() {
+            if q.id == id {
+                out = Some(q);
+            } else {
+                self.heap.push(q);
+            }
+        }
+        out
+    }
+}
+
+/// Longest admissible prompt: one less than the tightest of the model
+/// context and the pool's single-sequence position capacity (a sequence
+/// must always have room to generate at least one token), floored at 1.
+///
+/// This is the **single** definition of the serving window — admission,
+/// capacity checks, and the decode cap all derive from it — fixing the bug
+/// where truncation was computed against `max_seq` alone while actual
+/// capacity had become pool-dependent.
+pub fn prompt_window(max_seq: usize, pool_seq_positions: usize) -> usize {
+    max_seq.min(pool_seq_positions).saturating_sub(1).max(1)
+}
+
+/// The prompt actually served for a request: an empty prompt becomes
+/// `[BOS_TOKEN]`; otherwise the trailing `window` tokens.
+pub fn served_prompt(prompt: &[u32], window: usize) -> Vec<u32> {
+    if prompt.is_empty() {
+        vec![BOS_TOKEN]
+    } else {
+        prompt[prompt.len().saturating_sub(window)..].to_vec()
+    }
+}
+
+/// Nearest-rank percentile of an **ascending-sorted** sample slice
+/// (`p` in [0, 100]); 0.0 for an empty slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Static per-worker scheduling parameters, derived once at server start.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Maximum concurrently active sequences per worker.
+    pub max_batch: usize,
+    /// Maximum prompt tokens prefetched per iteration (summed over lanes).
+    pub prefill_chunk: usize,
+    /// Admission prompt window (see [`prompt_window`]).
+    pub window: usize,
+    /// Hard cap on a sequence's total length (prompt + generated): the
+    /// tightest of model context and single-sequence pool capacity.
+    pub decode_cap: usize,
+}
+
+/// A sequence admitted on a worker.
+struct ActiveSeq {
+    id: u64,
+    seq_no: u64,
+    priority: u8,
+    deadline: Option<Instant>,
+    max_new: usize,
+    temperature: f32,
+    respond: Sender<GenResponse>,
+    stream: Option<Sender<u32>>,
+    /// Original (un-windowed) prompt, kept for preemption requeue.
+    original_prompt: Vec<u32>,
+    /// Served prompt window.
+    prompt: Vec<u32>,
+    /// Next prompt index to prefill; `next == prompt.len()` means running.
+    next: usize,
+    /// Served window followed by generated tokens.
+    tokens: Vec<u32>,
+    generated: usize,
+    kv: PagedSeqKv,
+    last_logits: Vec<f32>,
+    queue_accum: f64,
+    compute_accum: f64,
+    admitted_at: Instant,
+    cancel: bool,
+}
+
+impl ActiveSeq {
+    fn is_prefilling(&self) -> bool {
+        self.next < self.prompt.len()
+    }
+}
+
+/// Record of a finished (or cancelled) request, returned to the worker for
+/// stats accounting; the response itself is already sent.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    /// Request id.
+    pub id: u64,
+    /// Final queue seconds.
+    pub queue_s: f64,
+    /// Final compute seconds.
+    pub compute_s: f64,
+    /// Tokens generated.
+    pub generated: usize,
+    /// Whether the request ended by cancellation.
+    pub cancelled: bool,
+}
+
+fn finish(seq: ActiveSeq, cancelled: bool) -> Completion {
+    let compute_s = seq.compute_accum + seq.admitted_at.elapsed().as_secs_f64();
+    let queue_s = seq.queue_accum;
+    let completion = Completion {
+        id: seq.id,
+        queue_s,
+        compute_s,
+        generated: seq.generated,
+        cancelled,
+    };
+    let _ = seq.respond.send(GenResponse {
+        tokens: seq.tokens,
+        queue_s,
+        compute_s,
+        latency_s: queue_s + compute_s,
+        generated: seq.generated,
+        cancelled,
+    });
+    completion
+}
+
+/// Per-worker scheduler: owns this worker's KV pool and active sequences,
+/// and advances them one iteration at a time ([`Self::step`]).
+pub struct WorkerScheduler {
+    /// Static scheduling parameters.
+    pub cfg: SchedConfig,
+    /// This worker's paged KV block pool.
+    pub pool: KvPool,
+    n_layers: usize,
+    active: Vec<ActiveSeq>,
+}
+
+impl WorkerScheduler {
+    /// Scheduler over `pool` for a model with `n_layers` transformer blocks.
+    pub fn new(cfg: SchedConfig, pool: KvPool, n_layers: usize) -> WorkerScheduler {
+        WorkerScheduler { cfg, pool, n_layers, active: Vec::new() }
+    }
+
+    /// Number of currently active sequences.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// True when this worker has admitted work to advance.
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty()
+    }
+
+    /// Mark an active request cancelled (it is retired with a partial,
+    /// `cancelled = true` response on the next [`Self::step`]). Returns
+    /// false if the id is not active on this worker.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.active.iter_mut().find(|s| s.id == id) {
+            Some(seq) => {
+                seq.cancel = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Pool blocks one layer-set append for `positions + 1` total positions
+    /// would require beyond what is held — the admission footprint.
+    fn blocks_for_target(&self, positions: usize) -> usize {
+        self.n_layers * self.pool.blocks_for(positions.min(self.cfg.decode_cap))
+    }
+
+    /// Blocks active sequences are still entitled to allocate before each
+    /// can produce its next token (prefilling lanes count their whole
+    /// served prompt plus one generated position).
+    fn committed_blocks(&self) -> usize {
+        self.active
+            .iter()
+            .map(|s| {
+                let target = if s.is_prefilling() {
+                    s.prompt.len() + 1
+                } else {
+                    s.kv.positions() + 1
+                };
+                self.blocks_for_target(target).saturating_sub(s.kv.blocks_held())
+            })
+            .sum()
+    }
+
+    /// KV-pressure-aware admission test: would `q`'s minimum footprint
+    /// (served prompt + one generated token) fit alongside what the active
+    /// set is still going to allocate?
+    pub fn can_admit(&self, q: &QueuedRequest) -> bool {
+        if self.active.len() >= self.cfg.max_batch {
+            return false;
+        }
+        if q.req.max_new == 0 {
+            return true; // responds at admission, occupies no lane
+        }
+        let plen = served_prompt(&q.req.prompt, self.cfg.window).len();
+        let need = self.blocks_for_target(plen + 1);
+        self.committed_blocks() + need <= self.pool.free_blocks()
+    }
+
+    /// Admit a popped request. `max_new == 0` requests complete immediately
+    /// (response = served prompt window, nothing generated) and the
+    /// completion is returned; otherwise the request becomes an active
+    /// sequence and `None` is returned.
+    pub fn admit(&mut self, q: QueuedRequest) -> Option<Completion> {
+        let queue_s = q.queue_accum + q.enqueued.elapsed().as_secs_f64();
+        let prompt = served_prompt(&q.req.prompt, self.cfg.window);
+        if q.req.max_new == 0 {
+            let completion = Completion {
+                id: q.id,
+                queue_s,
+                compute_s: q.compute_accum,
+                generated: 0,
+                cancelled: false,
+            };
+            let _ = q.req.respond.send(GenResponse {
+                tokens: prompt,
+                queue_s,
+                compute_s: q.compute_accum,
+                latency_s: queue_s + q.compute_accum,
+                generated: 0,
+                cancelled: false,
+            });
+            return Some(completion);
+        }
+        self.active.push(ActiveSeq {
+            id: q.id,
+            seq_no: q.seq_no,
+            priority: q.req.priority,
+            deadline: q.req.deadline,
+            max_new: q.req.max_new,
+            temperature: q.req.temperature,
+            respond: q.req.respond,
+            stream: q.req.stream,
+            original_prompt: q.req.prompt,
+            tokens: prompt.clone(),
+            prompt,
+            next: 0,
+            generated: 0,
+            kv: PagedSeqKv::new(self.n_layers),
+            last_logits: Vec::new(),
+            queue_accum: queue_s,
+            compute_accum: q.compute_accum,
+            admitted_at: Instant::now(),
+            cancel: false,
+        });
+        None
+    }
+
+    /// Evict `idx` back to the queue: release its blocks and rebuild the
+    /// original request with accumulated timings.
+    fn preempt(&mut self, idx: usize) -> QueuedRequest {
+        let mut seq = self.active.remove(idx);
+        seq.kv.release(&mut self.pool);
+        QueuedRequest {
+            req: GenRequest {
+                prompt: seq.original_prompt,
+                max_new: seq.max_new,
+                temperature: seq.temperature,
+                priority: seq.priority,
+                deadline: seq.deadline,
+                respond: seq.respond,
+                stream: seq.stream,
+            },
+            id: seq.id,
+            seq_no: seq.seq_no,
+            enqueued: Instant::now(),
+            queue_accum: seq.queue_accum,
+            compute_accum: seq.compute_accum + seq.admitted_at.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Make room for a one-position append on every lane in `lanes`
+    /// (ascending indices into `active`), preempting worst-ranked sequences
+    /// while short. Returns the surviving lane indices (re-mapped after
+    /// evictions) plus the requeued requests; `retired` receives
+    /// completions of lanes that had to be retired at capacity (only
+    /// possible for a lone sequence, which by the window/cap invariants
+    /// should never exceed the pool — defensive).
+    fn reserve_appends(
+        &mut self,
+        mut lanes: Vec<usize>,
+        requeues: &mut Vec<QueuedRequest>,
+        retired: &mut Vec<Completion>,
+    ) -> Vec<usize> {
+        let bs = self.pool.block_size();
+        loop {
+            let needed: usize =
+                lanes.iter().map(|&i| self.active[i].kv.blocks_needed_for_append(bs)).sum();
+            if needed <= self.pool.free_blocks() {
+                return lanes;
+            }
+            if self.active.len() <= 1 {
+                // Defensive: a lone sequence that cannot grow retires with
+                // what it has rather than panicking the pool.
+                if let Some(&i) = lanes.first() {
+                    let mut seq = self.active.remove(i);
+                    seq.kv.release(&mut self.pool);
+                    retired.push(finish(seq, false));
+                }
+                return Vec::new();
+            }
+            // Victim: worst-ranked active sequence; the best-ranked one is
+            // protected so the worker always makes forward progress.
+            let best = self.best_ranked();
+            let victim = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != best)
+                .min_by(|(_, a), (_, b)| {
+                    cmp_sched(a.priority, a.deadline, a.seq_no, b.priority, b.deadline, b.seq_no)
+                })
+                .map(|(i, _)| i)
+                .expect("≥2 active lanes");
+            requeues.push(self.preempt(victim));
+            lanes.retain(|&i| i != victim);
+            for l in &mut lanes {
+                if *l > victim {
+                    *l -= 1;
+                }
+            }
+        }
+    }
+
+    fn best_ranked(&self) -> usize {
+        self.active
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                cmp_sched(a.priority, a.deadline, a.seq_no, b.priority, b.deadline, b.seq_no)
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Run one scheduling iteration: retire cancellations, prefill up to
+    /// `prefill_chunk` prompt tokens across prefilling lanes, sample and
+    /// retire running lanes, then advance the survivors with one batched
+    /// paged decode. Returns the completions produced and any requests
+    /// preempted back to the shared queue.
+    pub fn step(
+        &mut self,
+        model: &Model,
+        rng: &mut Rng,
+        scratch: &mut Vec<f32>,
+    ) -> (Vec<Completion>, Vec<QueuedRequest>) {
+        let mut completions = Vec::new();
+        let mut requeues = Vec::new();
+
+        // Cancellations: retire with partial output.
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].cancel {
+                let mut seq = self.active.remove(i);
+                seq.kv.release(&mut self.pool);
+                completions.push(finish(seq, true));
+            } else {
+                i += 1;
+            }
+        }
+
+        // Chunked prefill: at most `prefill_chunk` prompt tokens this
+        // iteration, shared across prefilling lanes so decode lanes keep
+        // stepping under long prompts.
+        let mut budget = self.cfg.prefill_chunk.max(1);
+        while budget > 0 {
+            let mut lanes: Vec<usize> =
+                (0..self.active.len()).filter(|&i| self.active[i].is_prefilling()).collect();
+            if lanes.is_empty() {
+                break;
+            }
+            lanes.truncate(budget);
+            let lanes = self.reserve_appends(lanes, &mut requeues, &mut completions);
+            if lanes.is_empty() {
+                break;
+            }
+            budget -= lanes.len();
+            let toks: Vec<u32> =
+                lanes.iter().map(|&i| self.active[i].prompt[self.active[i].next]).collect();
+            let poss: Vec<usize> = lanes.iter().map(|&i| self.active[i].next).collect();
+            let logits = self.decode_lanes(model, &lanes, &toks, &poss, scratch);
+            for (&i, l) in lanes.iter().zip(logits) {
+                let seq = &mut self.active[i];
+                seq.next += 1;
+                seq.last_logits = l;
+            }
+        }
+
+        // Sample one token per running lane; retire finished sequences.
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].is_prefilling() {
+                i += 1;
+                continue;
+            }
+            let done = {
+                let seq = &mut self.active[i];
+                let next = sampler::sample(&seq.last_logits, seq.temperature, rng);
+                seq.tokens.push(next);
+                seq.generated += 1;
+                if let Some(stx) = &seq.stream {
+                    let _ = stx.send(next);
+                }
+                seq.generated >= seq.max_new || seq.tokens.len() >= self.cfg.decode_cap
+            };
+            if done {
+                let mut seq = self.active.remove(i);
+                seq.kv.release(&mut self.pool);
+                completions.push(finish(seq, false));
+            } else {
+                i += 1;
+            }
+        }
+
+        // One batched paged decode advances every surviving running lane.
+        let lanes: Vec<usize> =
+            (0..self.active.len()).filter(|&i| !self.active[i].is_prefilling()).collect();
+        let lanes = self.reserve_appends(lanes, &mut requeues, &mut completions);
+        if !lanes.is_empty() {
+            let toks: Vec<u32> =
+                lanes.iter().map(|&i| *self.active[i].tokens.last().unwrap()).collect();
+            let poss: Vec<usize> = lanes.iter().map(|&i| self.active[i].tokens.len() - 1).collect();
+            let logits = self.decode_lanes(model, &lanes, &toks, &poss, scratch);
+            for (&i, l) in lanes.iter().zip(logits) {
+                self.active[i].last_logits = l;
+            }
+        }
+        (completions, requeues)
+    }
+
+    /// Batched paged decode over `lanes` (ascending indices into `active`).
+    fn decode_lanes(
+        &mut self,
+        model: &Model,
+        lanes: &[usize],
+        toks: &[u32],
+        poss: &[usize],
+        scratch: &mut Vec<f32>,
+    ) -> Vec<Vec<f32>> {
+        let mut refs: Vec<&mut PagedSeqKv> = Vec::with_capacity(lanes.len());
+        let mut li = 0;
+        for (i, seq) in self.active.iter_mut().enumerate() {
+            if li < lanes.len() && lanes[li] == i {
+                refs.push(&mut seq.kv);
+                li += 1;
+            }
+        }
+        debug_assert_eq!(refs.len(), lanes.len());
+        model.decode_batch_paged(toks, poss, &mut self.pool, &mut refs, scratch)
+    }
+
+    /// Drain every active sequence back into requeue form (used on worker
+    /// abort paths; normal shutdown finishes sequences instead).
+    pub fn drain_to_queue(&mut self) -> Vec<QueuedRequest> {
+        let mut out = Vec::new();
+        while !self.active.is_empty() {
+            out.push(self.preempt(0));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn req(priority: u8, deadline_ms: Option<u64>) -> GenRequest {
+        let (tx, _rx) = channel();
+        // Leak the receiver side deliberately: ordering tests never respond.
+        std::mem::forget(_rx);
+        GenRequest {
+            prompt: vec![1, 2],
+            max_new: 4,
+            temperature: 0.0,
+            priority,
+            deadline: deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+            respond: tx,
+            stream: None,
+        }
+    }
+
+    #[test]
+    fn admission_orders_by_priority_then_deadline_then_arrival() {
+        let mut q = AdmissionQueue::new();
+        q.push_new(req(0, None), 1); // low priority, first in
+        q.push_new(req(2, Some(500)), 2); // high priority, late deadline
+        q.push_new(req(2, Some(50)), 3); // high priority, early deadline
+        q.push_new(req(1, None), 4);
+        q.push_new(req(1, None), 5); // same rank as 4 → FIFO
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![3, 2, 4, 5, 1]);
+    }
+
+    #[test]
+    fn deadline_beats_no_deadline_at_equal_priority() {
+        let mut q = AdmissionQueue::new();
+        q.push_new(req(1, None), 1);
+        q.push_new(req(1, Some(1000)), 2);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn queue_remove_by_id() {
+        let mut q = AdmissionQueue::new();
+        q.push_new(req(0, None), 1);
+        q.push_new(req(0, None), 2);
+        q.push_new(req(0, None), 3);
+        assert!(q.remove(2).is_some());
+        assert!(q.remove(2).is_none());
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 3]);
+    }
+
+    #[test]
+    fn prompt_window_boundaries() {
+        // Roomy pool: the window is the classic max_seq − 1.
+        assert_eq!(prompt_window(32, 1000), 31);
+        // prompt == max_seq truncates to max_seq − 1 (regression: the old
+        // server kept a max_seq-long prompt and overflowed the KV cache).
+        let max_seq = 32;
+        let prompt: Vec<u32> = (0..max_seq as u32).collect();
+        let served = served_prompt(&prompt, prompt_window(max_seq, 1000));
+        assert_eq!(served.len(), max_seq - 1);
+        assert_eq!(served[0], 1, "keeps the trailing window");
+        // Pool-bound window: capacity below max_seq must clamp the window
+        // (regression: truncation used to consider max_seq only).
+        assert_eq!(prompt_window(32, 8), 7);
+        let served = served_prompt(&prompt, prompt_window(32, 8));
+        assert_eq!(served.len(), 7);
+        // prompt == pool capacity boundary.
+        let prompt8: Vec<u32> = (0..8).collect();
+        assert_eq!(served_prompt(&prompt8, prompt_window(32, 8)).len(), 7);
+        // Degenerate pools still admit a single token.
+        assert_eq!(prompt_window(32, 0), 1);
+        assert_eq!(prompt_window(1, 1000), 1);
+    }
+
+    #[test]
+    fn served_prompt_substitutes_bos_for_empty() {
+        assert_eq!(served_prompt(&[], 31), vec![BOS_TOKEN]);
+        assert_eq!(served_prompt(&[5, 6], 31), vec![5, 6]);
+    }
+
+    #[test]
+    fn kv_pressure_preempts_and_still_completes_greedy_exact() {
+        // Drive a WorkerScheduler directly (no threads, fully
+        // deterministic): a 12-block × 2-position pool (24 positions, one
+        // layer) cannot hold four 9-position sequences at once, so the
+        // scheduler must preempt — and every request must still reproduce
+        // offline greedy decoding token-for-token after its restart.
+        let mut mcfg = crate::nn::config::ModelConfig::nano();
+        mcfg.d_model = 16;
+        mcfg.n_heads = 2;
+        mcfg.n_kv_heads = 2;
+        mcfg.d_ff = 24;
+        mcfg.vocab_size = 32;
+        mcfg.max_seq = 32;
+        mcfg.n_layers = 1;
+        let mut model = crate::nn::model::Model::init(&mcfg, &mut Rng::seed_from_u64(1));
+        let prompts: Vec<Vec<u32>> =
+            vec![vec![3, 7, 9], vec![4, 2, 8], vec![5, 5, 5], vec![9, 1, 2]];
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| model.generate(p, 6, 0.0, &mut Rng::seed_from_u64(0)))
+            .collect();
+        model.warm_decode();
+        let pool = model.new_kv_pool(2, 12);
+        let cfg = SchedConfig {
+            max_batch: 4,
+            prefill_chunk: 8,
+            window: prompt_window(32, 24),
+            decode_cap: 24,
+        };
+        let mut sched = WorkerScheduler::new(cfg, pool, 1);
+        let mut queue = AdmissionQueue::new();
+        let mut rxs = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let (tx, rx) = channel();
+            rxs.push(rx);
+            let req = GenRequest {
+                prompt: p.clone(),
+                max_new: 6,
+                temperature: 0.0,
+                priority: 0,
+                deadline: None,
+                respond: tx,
+                stream: None,
+            };
+            queue.push_new(req, i as u64);
+        }
+        let mut rng = Rng::seed_from_u64(0);
+        let mut scratch = Vec::new();
+        let mut preemptions = 0;
+        let mut guard = 0;
+        while !queue.is_empty() || sched.has_work() {
+            while sched.active_len() < cfg.max_batch {
+                match queue.peek() {
+                    Some(q) if sched.can_admit(q) => {
+                        let q = queue.pop().unwrap();
+                        let _ = sched.admit(q);
+                    }
+                    _ => break,
+                }
+            }
+            let (_done, requeues) = sched.step(&model, &mut rng, &mut scratch);
+            preemptions += requeues.len();
+            for q in requeues {
+                queue.push_back(q);
+            }
+            guard += 1;
+            assert!(guard < 10_000, "scheduler failed to drain");
+        }
+        assert!(preemptions > 0, "tiny pool must force preemption");
+        assert_eq!(sched.pool.free_blocks(), 12, "all blocks released");
+        for (rx, want) in rxs.iter().zip(&expected) {
+            let resp = rx.try_recv().expect("request completed");
+            assert!(!resp.cancelled);
+            assert_eq!(&resp.tokens, want, "preempted greedy decode diverged");
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0); // nearest-rank rounds up at .5
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+    }
+}

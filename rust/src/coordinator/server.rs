@@ -1,90 +1,123 @@
-//! Generation server with continuous batching (the L3 serving path behind
-//! Table 14's end-to-end generation numbers).
+//! Generation server: a fleet of worker threads over a shared admission
+//! queue, each running continuous batching against its own paged KV pool
+//! (the L3 serving path behind Table 14's end-to-end generation numbers).
 //!
-//! One worker thread owns the model and runs a continuous-batching loop: it
-//! admits queued requests up to `max_batch` concurrent sequences, advances
-//! every active sequence by one token per iteration (each with its own KV
-//! cache), retires finished sequences immediately, and back-fills from the
-//! queue — the Orca/vLLM scheduling discipline, deterministic and
-//! single-core here. Clients talk over `std::sync::mpsc` channels; no
-//! Python, no async runtime.
+//! Architecture (full write-up in `docs/serving.md`):
 //!
-//! **Batched decode.** Each iteration advances *all* active sequences with
-//! one [`Model::decode_batch`] call instead of per-sequence `decode_token`
-//! calls. This matters because the AQLM kernels are memory-bound on the
-//! packed code stream: a quantized layer streams `d_out·n_groups·M·B/8`
-//! bytes of codes per forward, so `c` concurrent sequences decoded
-//! independently read that stream `c` times per generated batch of tokens,
-//! while the batched kernel reads it **once** and fans table lookups out
-//! across lanes (the CPU analog of the paper's batched GPU kernel, §4.4).
-//! Bytes of code stream read per generated token drop from
-//! `Σ_layers d_out·n_groups·M·B/8` to the same divided by the number of
-//! active lanes. Per-lane arithmetic is bit-identical to the single-sequence
-//! path, so greedy output is unchanged.
+//! - **Scheduler/worker split.** Policy lives in
+//!   [`super::scheduler`]: a priority/deadline-aware [`AdmissionQueue`]
+//!   plus a per-worker `WorkerScheduler` doing chunked prefill, decode,
+//!   KV-pressure admission and preempt-to-queue. This module is the
+//!   mechanism: threads, channels, locks, and stats.
+//! - **Replicas.** `cfg.workers` threads share one warmed `Arc<Model>`
+//!   (decode caches are pre-built by [`Model::warm_decode`], so decode is
+//!   `&self`) and pull from the shared queue under a `Mutex` + `Condvar`.
+//!   Each worker owns a private KV pool and rng; greedy decoding is
+//!   deterministic no matter which worker serves a request.
+//! - **Paged KV.** Sequence KV lives in fixed-size blocks from a
+//!   [`crate::nn::kvcache::KvPool`]; exhaustion is a scheduling signal
+//!   (hold admission, preempt-to-queue), never a panic.
 //!
-//! Prompts longer than the model context are truncated to their **last**
-//! `max_seq − 1` tokens at admission (the serving-window convention), which
-//! keeps prefill inside the KV-cache capacity and leaves room to generate
-//! at least one token.
+//! **Batched decode.** Each worker advances all its active sequences with
+//! one [`Model::decode_batch_paged`] call instead of per-sequence
+//! `decode_token` calls. This matters because the AQLM kernels are
+//! memory-bound on the packed code stream: a quantized layer streams
+//! `d_out·n_groups·M·B/8` bytes of codes per forward, so `c` concurrent
+//! sequences decoded independently read that stream `c` times per
+//! generated batch of tokens, while the batched kernel reads it **once**
+//! and fans table lookups out across lanes (the CPU analog of the paper's
+//! batched GPU kernel, §4.4). Per-lane arithmetic is bit-identical to the
+//! single-sequence path, so greedy output is unchanged.
+//!
+//! Prompts longer than the admission window are truncated to their
+//! **last** `window` tokens at admission, where the window is the single
+//! [`super::scheduler::prompt_window`] definition shared by every
+//! capacity check: the tightest of model context and per-sequence pool
+//! capacity, minus one so there is always room to generate.
 
-use crate::nn::kvcache::LayerKvCache;
+pub use super::scheduler::{GenRequest, GenResponse};
+
+use super::scheduler::{
+    percentile, prompt_window, AdmissionQueue, Completion, SchedConfig, WorkerScheduler,
+};
 use crate::nn::model::Model;
-use crate::nn::sampler;
 use crate::util::rng::Rng;
-use std::collections::VecDeque;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
-
-/// A generation request.
-pub struct GenRequest {
-    /// Prompt token ids (truncated to the trailing context window).
-    pub prompt: Vec<u32>,
-    /// Maximum tokens to generate.
-    pub max_new: usize,
-    /// Sampling temperature (0 = greedy).
-    pub temperature: f32,
-    /// Channel the response is delivered on.
-    pub respond: Sender<GenResponse>,
-}
-
-/// Completed generation.
-#[derive(Clone, Debug)]
-pub struct GenResponse {
-    /// Served prompt window followed by the generated tokens.
-    pub tokens: Vec<u32>,
-    /// Queue + compute time.
-    pub latency_s: f64,
-    /// Number of tokens generated (the tail of `tokens`).
-    pub generated: usize,
-}
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
-    /// Maximum concurrently decoded sequences.
+    /// Maximum concurrently decoded sequences **per worker**.
     pub max_batch: usize,
-    /// Sampling rng seed.
+    /// Sampling rng seed (worker `w` uses `seed + w`; greedy decoding
+    /// ignores the rng entirely).
     pub seed: u64,
+    /// Number of worker threads sharing the admission queue.
+    pub workers: usize,
+    /// Maximum prompt tokens prefetched per scheduling iteration (chunked
+    /// prefill budget, shared across a worker's prefilling lanes).
+    pub prefill_chunk: usize,
+    /// Positions per paged-KV block.
+    pub kv_block_size: usize,
+    /// Per-worker KV pool size in blocks. `None` sizes the pool so
+    /// `max_batch` full-context sequences fit (the legacy contiguous
+    /// footprint — no preemption ever triggers); `Some(n)` caps KV memory
+    /// and lets the scheduler hold admission / preempt under pressure.
+    pub kv_pool_blocks: Option<usize>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 8, seed: 0 }
+        ServerConfig {
+            max_batch: 8,
+            seed: 0,
+            workers: 1,
+            prefill_chunk: 32,
+            kv_block_size: 16,
+            kv_pool_blocks: None,
+        }
     }
+}
+
+/// Optional per-request scheduling knobs for [`Server::submit_opts`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// Admission priority — higher is served first (default 0).
+    pub priority: u8,
+    /// Optional deadline: among equal priorities, earlier deadlines are
+    /// admitted first (requests without a deadline go last).
+    pub deadline: Option<Instant>,
 }
 
 /// Aggregate statistics, returned on shutdown.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
-    /// Requests served to completion.
+    /// Requests served to completion (cancelled requests excluded).
     pub requests: usize,
-    /// Total tokens generated across all requests.
+    /// Total tokens generated across all requests (including partial
+    /// output of cancelled requests).
     pub tokens_generated: usize,
-    /// Sum of per-request latencies.
+    /// Sum of per-request latencies (queue + compute) over completions.
     pub total_latency_s: f64,
     /// Wall-clock from server start to shutdown.
     pub wall_s: f64,
+    /// Requests that ended by cancellation.
+    pub cancelled: usize,
+    /// Sequences preempted back to the queue under KV pressure.
+    pub preemptions: usize,
+    /// Completed requests per worker, indexed by worker id.
+    pub per_worker_requests: Vec<usize>,
+    /// Highest concurrent active-sequence count observed on any worker.
+    pub peak_active: usize,
+    /// Per-request queue seconds of completed requests, ascending.
+    pub queue_samples_s: Vec<f64>,
+    /// Per-request compute seconds of completed requests, ascending.
+    pub compute_samples_s: Vec<f64>,
 }
 
 impl ServerStats {
@@ -105,150 +138,291 @@ impl ServerStats {
             0.0
         }
     }
+
+    /// Queue-latency percentile (`p` in [0, 100], nearest-rank).
+    pub fn queue_percentile_s(&self, p: f64) -> f64 {
+        percentile(&self.queue_samples_s, p)
+    }
+
+    /// Compute-latency percentile (`p` in [0, 100], nearest-rank).
+    pub fn compute_percentile_s(&self, p: f64) -> f64 {
+        percentile(&self.compute_samples_s, p)
+    }
+}
+
+/// Queue + cancellation state shared by all workers (behind one mutex).
+struct SharedState {
+    queue: AdmissionQueue,
+    /// Ids cancellation has been requested for but not yet applied.
+    cancelled: HashSet<u64>,
+    /// Ids submitted and not yet responded to (guards stale cancels).
+    live: HashSet<u64>,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct WorkerStats {
+    requests: usize,
+    tokens_generated: usize,
+    total_latency_s: f64,
+    cancelled: usize,
+    preemptions: usize,
+    peak_active: usize,
+    queue_samples_s: Vec<f64>,
+    compute_samples_s: Vec<f64>,
+}
+
+impl WorkerStats {
+    fn record(&mut self, c: &Completion) {
+        self.tokens_generated += c.generated;
+        if c.cancelled {
+            self.cancelled += 1;
+        } else {
+            self.requests += 1;
+            self.total_latency_s += c.queue_s + c.compute_s;
+            self.queue_samples_s.push(c.queue_s);
+            self.compute_samples_s.push(c.compute_s);
+        }
+    }
 }
 
 /// Handle to a running server.
 pub struct Server {
-    tx: Sender<ServerMsg>,
-    worker: Option<JoinHandle<ServerStats>>,
+    shared: Arc<(Mutex<SharedState>, Condvar)>,
+    workers: Vec<JoinHandle<WorkerStats>>,
+    next_id: AtomicU64,
+    started: Instant,
 }
 
-enum ServerMsg {
-    Request(GenRequest, Instant),
-    Shutdown,
-}
-
-struct ActiveSeq {
-    tokens: Vec<u32>,
-    generated: usize,
-    max_new: usize,
-    temperature: f32,
-    kv: Vec<LayerKvCache>,
-    last_logits: Vec<f32>,
-    respond: Sender<GenResponse>,
-    enqueued: Instant,
+fn worker_loop(
+    model: &Model,
+    shared: &(Mutex<SharedState>, Condvar),
+    mut sched: WorkerScheduler,
+    seed: u64,
+) -> WorkerStats {
+    let (lock, cvar) = shared;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut scratch: Vec<f32> = Vec::new();
+    let mut ws = WorkerStats::default();
+    loop {
+        // ---- admission under the shared lock (no model compute here) ----
+        {
+            let mut st = lock.lock().expect("server state poisoned");
+            loop {
+                // Apply cancellations: queued requests answer immediately;
+                // this worker's active ones are flagged and retire with a
+                // partial response on the next step.
+                let pending: Vec<u64> = st.cancelled.iter().copied().collect();
+                for id in pending {
+                    if let Some(q) = st.queue.remove(id) {
+                        st.cancelled.remove(&id);
+                        st.live.remove(&id);
+                        ws.cancelled += 1;
+                        let queue_s = q.queue_accum + q.enqueued.elapsed().as_secs_f64();
+                        let _ = q.req.respond.send(GenResponse {
+                            tokens: Vec::new(),
+                            queue_s,
+                            compute_s: q.compute_accum,
+                            latency_s: queue_s + q.compute_accum,
+                            generated: 0,
+                            cancelled: true,
+                        });
+                    } else if sched.cancel(id) {
+                        st.cancelled.remove(&id);
+                    }
+                }
+                // Admit strictly in queue order while the head fits this
+                // worker's lane budget and KV pool.
+                while sched.active_len() < sched.cfg.max_batch {
+                    match st.queue.peek() {
+                        Some(q) if sched.can_admit(q) => {
+                            let q = st.queue.pop().expect("peeked");
+                            if let Some(c) = sched.admit(q) {
+                                st.live.remove(&c.id);
+                                st.cancelled.remove(&c.id);
+                                ws.record(&c);
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+                ws.peak_active = ws.peak_active.max(sched.active_len());
+                if sched.has_work() {
+                    break;
+                }
+                if st.shutdown && st.queue.is_empty() {
+                    return ws;
+                }
+                st = cvar.wait(st).expect("server state poisoned");
+            }
+        }
+        // ---- one scheduling iteration outside the lock ----
+        let (completions, requeues) = sched.step(model, &mut rng, &mut scratch);
+        if !completions.is_empty() || !requeues.is_empty() {
+            let mut st = lock.lock().expect("server state poisoned");
+            for c in &completions {
+                st.live.remove(&c.id);
+                st.cancelled.remove(&c.id);
+                ws.record(c);
+            }
+            ws.preemptions += requeues.len();
+            for q in requeues {
+                st.queue.push_back(q);
+            }
+            drop(st);
+            cvar.notify_all();
+        }
+    }
 }
 
 impl Server {
-    /// Spawn the worker thread owning `model`.
+    /// Warm `model`'s decode caches and spawn `cfg.workers` worker threads
+    /// sharing it behind an `Arc`, each with a private paged KV pool.
     pub fn start(mut model: Model, cfg: ServerConfig) -> Server {
-        let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
-        let worker = std::thread::spawn(move || {
-            let wall = Instant::now();
-            let mut rng = Rng::seed_from_u64(cfg.seed);
-            let mut stats = ServerStats::default();
-            let mut queue: VecDeque<(GenRequest, Instant)> = VecDeque::new();
-            let mut active: Vec<ActiveSeq> = Vec::new();
-            let mut scratch: Vec<f32> = Vec::new();
-            let mut shutting_down = false;
-            loop {
-                // Drain the channel (non-blocking while busy, blocking when idle).
-                loop {
-                    if active.is_empty() && queue.is_empty() && !shutting_down {
-                        match rx.recv() {
-                            Ok(ServerMsg::Request(r, t)) => queue.push_back((r, t)),
-                            Ok(ServerMsg::Shutdown) | Err(_) => shutting_down = true,
-                        }
-                        continue;
-                    }
-                    match rx.try_recv() {
-                        Ok(ServerMsg::Request(r, t)) => queue.push_back((r, t)),
-                        Ok(ServerMsg::Shutdown) => shutting_down = true,
-                        Err(_) => break,
-                    }
-                }
-                if shutting_down && active.is_empty() && queue.is_empty() {
-                    break;
-                }
-                // Admission: prefill newly admitted requests (FIFO pop is O(1)
-                // on the VecDeque).
-                while active.len() < cfg.max_batch && !queue.is_empty() {
-                    let (req, enqueued) = queue.pop_front().unwrap();
-                    let mut kv = model.new_kv_caches();
-                    let mut logits = Vec::new();
-                    // A prompt of max_seq or more tokens would overflow the KV
-                    // cache during prefill and leave no room to generate; keep
-                    // the trailing window (shared with Model::generate).
-                    let prompt: Vec<u32> = if req.prompt.is_empty() {
-                        vec![1]
-                    } else {
-                        model.clamp_prompt_window(&req.prompt).to_vec()
-                    };
-                    for (pos, &t) in prompt.iter().enumerate() {
-                        logits = model.decode_token(t, pos, &mut kv, &mut scratch);
-                    }
-                    active.push(ActiveSeq {
-                        tokens: prompt,
-                        generated: 0,
-                        max_new: req.max_new,
-                        temperature: req.temperature,
-                        kv,
-                        last_logits: logits,
-                        respond: req.respond,
-                        enqueued,
-                    });
-                }
-                // Sample one token for every active sequence and retire the
-                // finished ones.
-                let mut i = 0;
-                while i < active.len() {
-                    let done = {
-                        let seq = &mut active[i];
-                        let next = sampler::sample(&seq.last_logits, seq.temperature, &mut rng);
-                        seq.tokens.push(next);
-                        seq.generated += 1;
-                        stats.tokens_generated += 1;
-                        let at_cap = seq.tokens.len() >= model.cfg.max_seq;
-                        seq.generated >= seq.max_new || at_cap
-                    };
-                    if done {
-                        let seq = active.remove(i);
-                        let latency = seq.enqueued.elapsed().as_secs_f64();
-                        stats.requests += 1;
-                        stats.total_latency_s += latency;
-                        let _ = seq.respond.send(GenResponse {
-                            tokens: seq.tokens,
-                            latency_s: latency,
-                            generated: seq.generated,
-                        });
-                    } else {
-                        i += 1;
-                    }
-                }
-                // One batched forward advances every surviving sequence: each
-                // quantized layer streams its packed codes once for the whole
-                // batch instead of once per sequence (see module docs).
-                if !active.is_empty() {
-                    let tokens: Vec<u32> = active.iter().map(|s| *s.tokens.last().unwrap()).collect();
-                    let positions: Vec<usize> = active.iter().map(|s| s.tokens.len() - 1).collect();
-                    let mut kv_refs: Vec<&mut Vec<LayerKvCache>> =
-                        active.iter_mut().map(|s| &mut s.kv).collect();
-                    let logits = model.decode_batch(&tokens, &positions, &mut kv_refs, &mut scratch);
-                    for (seq, lg) in active.iter_mut().zip(logits) {
-                        seq.last_logits = lg;
-                    }
-                }
-            }
-            stats.wall_s = wall.elapsed().as_secs_f64();
-            stats
-        });
-        Server { tx, worker: Some(worker) }
+        let started = Instant::now();
+        model.warm_decode();
+        let n_layers = model.cfg.n_layers.max(1);
+        let max_seq = model.cfg.max_seq;
+        let bs = cfg.kv_block_size.max(1);
+        // Default pool: max_batch full-context sequences (the contiguous
+        // footprint). Floor: one sequence must fit 2 positions per layer
+        // (a 1-token window plus 1 generated).
+        let per_seq_blocks = n_layers * max_seq.div_ceil(bs);
+        let min_blocks = n_layers * 2usize.div_ceil(bs);
+        let n_blocks = cfg
+            .kv_pool_blocks
+            .unwrap_or(cfg.max_batch.max(1) * per_seq_blocks)
+            .max(min_blocks);
+        let pool_seq_positions = (n_blocks / n_layers) * bs;
+        let sched_cfg = SchedConfig {
+            max_batch: cfg.max_batch.max(1),
+            prefill_chunk: cfg.prefill_chunk.max(1),
+            window: prompt_window(max_seq, pool_seq_positions),
+            decode_cap: max_seq.min(pool_seq_positions),
+        };
+        let model = Arc::new(model);
+        let shared = Arc::new((
+            Mutex::new(SharedState {
+                queue: AdmissionQueue::new(),
+                cancelled: HashSet::new(),
+                live: HashSet::new(),
+                shutdown: false,
+            }),
+            Condvar::new(),
+        ));
+        let workers = (0..cfg.workers.max(1))
+            .map(|w| {
+                let model = Arc::clone(&model);
+                let shared = Arc::clone(&shared);
+                let pool = model.new_kv_pool(bs, n_blocks);
+                let sched = WorkerScheduler::new(sched_cfg, pool, n_layers);
+                let seed = cfg.seed.wrapping_add(w as u64);
+                std::thread::spawn(move || worker_loop(&model, &shared, sched, seed))
+            })
+            .collect();
+        Server { shared, workers, next_id: AtomicU64::new(0), started }
+    }
+
+    fn enqueue(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        temperature: f32,
+        opts: SubmitOpts,
+        respond: Sender<GenResponse>,
+        stream: Option<Sender<u32>>,
+    ) -> u64 {
+        let id = self.next_id.fetch_add(1, AtomicOrdering::Relaxed);
+        let req = GenRequest {
+            prompt,
+            max_new,
+            temperature,
+            priority: opts.priority,
+            deadline: opts.deadline,
+            respond,
+            stream,
+        };
+        let (lock, cvar) = &*self.shared;
+        let mut st = lock.lock().expect("server state poisoned");
+        st.queue.push_new(req, id);
+        st.live.insert(id);
+        drop(st);
+        cvar.notify_all();
+        id
     }
 
     /// Submit a request; returns the response receiver.
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize, temperature: f32) -> Receiver<GenResponse> {
+        self.submit_opts(prompt, max_new, temperature, SubmitOpts::default()).1
+    }
+
+    /// Submit with scheduling options; returns the request id (usable with
+    /// [`Self::cancel`]) and the response receiver.
+    pub fn submit_opts(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        temperature: f32,
+        opts: SubmitOpts,
+    ) -> (u64, Receiver<GenResponse>) {
         let (rtx, rrx) = channel();
-        let req = GenRequest { prompt, max_new, temperature, respond: rtx };
-        self.tx
-            .send(ServerMsg::Request(req, Instant::now()))
-            .expect("server thread gone");
-        rrx
+        let id = self.enqueue(prompt, max_new, temperature, opts, rtx, None);
+        (id, rrx)
+    }
+
+    /// Submit with an incremental token stream: each generated token is
+    /// sent on the third receiver as it is sampled (a preempted request
+    /// restarts and may re-stream; the final response is authoritative).
+    pub fn submit_streaming(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        temperature: f32,
+        opts: SubmitOpts,
+    ) -> (u64, Receiver<GenResponse>, Receiver<u32>) {
+        let (rtx, rrx) = channel();
+        let (stx, srx) = channel();
+        let id = self.enqueue(prompt, max_new, temperature, opts, rtx, Some(stx));
+        (id, rrx, srx)
+    }
+
+    /// Request cancellation of `id`. Queued requests answer immediately
+    /// with an empty, `cancelled` response; active ones retire with their
+    /// partial output. A no-op if the request already completed.
+    pub fn cancel(&self, id: u64) {
+        let (lock, cvar) = &*self.shared;
+        let mut st = lock.lock().expect("server state poisoned");
+        if st.live.contains(&id) {
+            st.cancelled.insert(id);
+            drop(st);
+            cvar.notify_all();
+        }
     }
 
     /// Stop after draining all queued work; returns aggregate stats.
     pub fn shutdown(mut self) -> ServerStats {
-        let _ = self.tx.send(ServerMsg::Shutdown);
-        self.worker.take().unwrap().join().expect("server thread panicked")
+        {
+            let (lock, cvar) = &*self.shared;
+            lock.lock().expect("server state poisoned").shutdown = true;
+            cvar.notify_all();
+        }
+        let mut stats = ServerStats::default();
+        for handle in self.workers.drain(..) {
+            let ws = handle.join().expect("server worker panicked");
+            stats.requests += ws.requests;
+            stats.tokens_generated += ws.tokens_generated;
+            stats.total_latency_s += ws.total_latency_s;
+            stats.cancelled += ws.cancelled;
+            stats.preemptions += ws.preemptions;
+            stats.peak_active = stats.peak_active.max(ws.peak_active);
+            stats.per_worker_requests.push(ws.requests);
+            stats.queue_samples_s.extend(ws.queue_samples_s);
+            stats.compute_samples_s.extend(ws.compute_samples_s);
+        }
+        stats.queue_samples_s.sort_by(f64::total_cmp);
+        stats.compute_samples_s.sort_by(f64::total_cmp);
+        stats.wall_s = self.started.elapsed().as_secs_f64();
+        stats
     }
 }
 
@@ -283,7 +457,8 @@ mod tests {
 
     #[test]
     fn no_request_lost_under_load() {
-        let server = Server::start(server_model(), ServerConfig { max_batch: 3, seed: 0 });
+        let cfg = ServerConfig { max_batch: 3, ..Default::default() };
+        let server = Server::start(server_model(), cfg);
         let receivers: Vec<_> = (0..10).map(|i| server.submit(vec![1 + i as u32], 4, 0.0)).collect();
         let mut got = 0;
         for rx in receivers {
@@ -368,12 +543,146 @@ mod tests {
             .iter()
             .map(|p| model.generate(p, 6, 0.0, &mut Rng::seed_from_u64(0)))
             .collect();
-        let server = Server::start(model, ServerConfig { max_batch: 8, seed: 0 });
+        let cfg = ServerConfig { max_batch: 8, ..Default::default() };
+        let server = Server::start(model, cfg);
         let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
         for (rx, want) in rxs.into_iter().zip(&expected) {
             let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
             assert_eq!(&resp.tokens, want, "batched greedy diverged from offline generate");
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn max_new_zero_completes_cleanly() {
+        // Regression: the old loop sampled before checking max_new, so a
+        // max_new = 0 request generated one token. It must generate none.
+        let server = Server::start(server_model(), ServerConfig::default());
+        let resp = server.submit(vec![4, 5, 6], 0, 0.0).recv().unwrap();
+        assert_eq!(resp.generated, 0);
+        assert_eq!(resp.tokens, vec![4, 5, 6]);
+        assert!(!resp.cancelled);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.tokens_generated, 0);
+    }
+
+    #[test]
+    fn empty_prompt_completes_cleanly() {
+        let server = Server::start(server_model(), ServerConfig::default());
+        let resp = server.submit(Vec::new(), 3, 0.0).recv().unwrap();
+        assert_eq!(resp.generated, 3);
+        assert_eq!(resp.tokens.len(), 4);
+        assert_eq!(resp.tokens[0], 1, "empty prompt is served from BOS");
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn empty_prompt_with_max_new_zero_completes_cleanly() {
+        let server = Server::start(server_model(), ServerConfig::default());
+        let resp = server.submit(Vec::new(), 0, 0.0).recv().unwrap();
+        assert_eq!(resp.generated, 0);
+        assert_eq!(resp.tokens, vec![1]);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn latency_splits_into_queue_plus_compute() {
+        let server = Server::start(server_model(), ServerConfig::default());
+        let resp = server.submit(vec![2, 3], 4, 0.0).recv().unwrap();
+        assert!(resp.queue_s >= 0.0);
+        assert!(resp.compute_s >= 0.0);
+        assert!((resp.latency_s - (resp.queue_s + resp.compute_s)).abs() < 1e-12);
+        let stats = server.shutdown();
+        assert_eq!(stats.queue_samples_s.len(), 1);
+        assert_eq!(stats.compute_samples_s.len(), 1);
+        assert!(stats.compute_percentile_s(50.0) > 0.0);
+    }
+
+    #[test]
+    fn streaming_tokens_match_response_tail() {
+        let server = Server::start(server_model(), ServerConfig::default());
+        let (_id, rrx, srx) = server.submit_streaming(vec![3, 7], 5, 0.0, SubmitOpts::default());
+        let resp = rrx.recv().unwrap();
+        let streamed: Vec<u32> = srx.try_iter().collect();
+        assert_eq!(streamed.len(), resp.generated);
+        assert_eq!(&resp.tokens[resp.tokens.len() - resp.generated..], &streamed[..]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancel_resolves_cleanly() {
+        // Cancellation races request completion by design: either the
+        // request finishes normally, or it resolves as cancelled with
+        // strictly partial output. Both must answer the client.
+        let cfg = ServerConfig { max_batch: 1, ..Default::default() };
+        let server = Server::start(server_model(), cfg);
+        let (_id0, rx0) = server.submit_opts(vec![2], 20, 0.0, SubmitOpts::default());
+        let (id1, rx1) = server.submit_opts(vec![3], 20, 0.0, SubmitOpts::default());
+        server.cancel(id1);
+        let r0 = rx0.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(!r0.cancelled);
+        assert_eq!(r0.generated, 20);
+        let r1 = rx1.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        if r1.cancelled {
+            assert!(r1.generated < 20);
+        } else {
+            assert_eq!(r1.generated, 20);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_worker_greedy_matches_offline() {
+        let mut model = server_model();
+        let prompts: Vec<Vec<u32>> = (0..8).map(|i| vec![2 + i as u32, 5]).collect();
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| model.generate(p, 5, 0.0, &mut Rng::seed_from_u64(0)))
+            .collect();
+        let cfg = ServerConfig { workers: 3, max_batch: 2, ..Default::default() };
+        let server = Server::start(model, cfg);
+        let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 5, 0.0)).collect();
+        for (rx, want) in rxs.into_iter().zip(&expected) {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(&resp.tokens, want, "worker identity must not change greedy output");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 8);
+        assert_eq!(stats.per_worker_requests.len(), 3);
+        assert_eq!(stats.per_worker_requests.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn kv_pressure_completes_all_requests_token_identically() {
+        // Pool: 12 blocks × 2 positions (1 layer) = 24 positions, while 6
+        // requests × (3 prompt + 6 generated) = 54 positions of demand and
+        // a contiguous cache of the same memory admits zero max_seq = 32
+        // sequences. Admission holds / preempts, and every request still
+        // matches offline greedy decoding exactly.
+        let mut model = server_model();
+        let prompts: Vec<Vec<u32>> =
+            (0..6).map(|i| vec![1 + i as u32, 2 + i as u32, 3]).collect();
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| model.generate(p, 6, 0.0, &mut Rng::seed_from_u64(0)))
+            .collect();
+        let cfg = ServerConfig {
+            max_batch: 4,
+            kv_block_size: 2,
+            kv_pool_blocks: Some(12),
+            ..Default::default()
+        };
+        let server = Server::start(model, cfg);
+        let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
+        for (rx, want) in rxs.into_iter().zip(&expected) {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(&resp.tokens, want, "KV pressure must not change greedy output");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.tokens_generated, 36);
     }
 }

@@ -313,8 +313,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let ckpt = PathBuf::from(args.require("ckpt")?);
     let model = Model::load(&ckpt)?;
     let b = bundle(args);
-    let server =
-        Server::start(model, ServerConfig { max_batch: args.usize_or("max-batch", 4), seed: 0 });
+    let cfg = ServerConfig {
+        max_batch: args.usize_or("max-batch", 4),
+        seed: 0,
+        workers: args.usize_or("workers", 1),
+        prefill_chunk: args.usize_or("prefill-chunk", 32),
+        kv_block_size: args.usize_or("kv-block-size", 16),
+        kv_pool_blocks: args.get("kv-pool-blocks").and_then(|v| v.parse().ok()),
+    };
+    let server = Server::start(model, cfg);
     let n = args.usize_or("requests", 8);
     eprintln!("submitting {n} demo requests...");
     let rxs: Vec<_> = (0..n)
@@ -335,6 +342,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.tokens_generated,
         stats.tokens_per_second(),
         stats.mean_latency_s() * 1e3
+    );
+    println!(
+        "queue p50/p95/p99 {:.1}/{:.1}/{:.1} ms, compute p50/p95/p99 {:.1}/{:.1}/{:.1} ms, \
+         peak batch {}, preemptions {}, per-worker {:?}",
+        stats.queue_percentile_s(50.0) * 1e3,
+        stats.queue_percentile_s(95.0) * 1e3,
+        stats.queue_percentile_s(99.0) * 1e3,
+        stats.compute_percentile_s(50.0) * 1e3,
+        stats.compute_percentile_s(95.0) * 1e3,
+        stats.compute_percentile_s(99.0) * 1e3,
+        stats.peak_active,
+        stats.preemptions,
+        stats.per_worker_requests
     );
     Ok(())
 }

@@ -494,8 +494,11 @@ impl Block {
 
     /// Single-token decode step with KV cache (generation hot path).
     /// `x` is the residual stream `[d]`; returns the block output `[d]`.
+    ///
+    /// Takes `&self` so a warmed model (see `Model::warm_decode`) can be
+    /// shared immutably across server worker threads.
     pub fn decode_step(
-        &mut self,
+        &self,
         x: &[f32],
         cfg: &ModelConfig,
         pos: usize,
@@ -511,9 +514,9 @@ impl Block {
         let mut q = vec![0.0f32; h_cnt * dh];
         let mut k = vec![0.0f32; kv_cnt * dh];
         let mut v = vec![0.0f32; kv_cnt * dh];
-        self.attn.wq.matvec(&xn1, &mut q, lut_scratch);
-        self.attn.wk.matvec(&xn1, &mut k, lut_scratch);
-        self.attn.wv.matvec(&xn1, &mut v, lut_scratch);
+        self.attn.wq.matvec_cached(&xn1, &mut q, lut_scratch);
+        self.attn.wk.matvec_cached(&xn1, &mut k, lut_scratch);
+        self.attn.wv.matvec_cached(&xn1, &mut v, lut_scratch);
         for hh in 0..h_cnt {
             rope.apply(&mut q[hh * dh..(hh + 1) * dh], pos);
         }
@@ -542,11 +545,11 @@ impl Block {
             }
         }
         let mut att_out = vec![0.0f32; d];
-        self.attn.wo.matvec(&ctx, &mut att_out, lut_scratch);
+        self.attn.wo.matvec_cached(&ctx, &mut att_out, lut_scratch);
         let x_mid: Vec<f32> = x.iter().zip(&att_out).map(|(a, b)| a + b).collect();
         let mut xn2 = vec![0.0f32; d];
         rmsnorm(&x_mid, &self.ln2, cfg.norm_eps, &mut xn2);
-        let ffn_out = match &mut self.ffn {
+        let ffn_out = match &self.ffn {
             Ffn::Dense(mlp) => mlp_decode_step(mlp, &xn2, lut_scratch),
             Ffn::Moe(moe) => moe.decode_step(&xn2, lut_scratch),
         };
@@ -559,17 +562,20 @@ impl Block {
     /// codes once per step instead of once per sequence.
     ///
     /// `xs` is the residual stream of all lanes (`n·d`, lane-major);
-    /// `positions[b]` and `kvs[b]` belong to lane `b`. Attention itself runs
-    /// per lane (KV lengths differ); every lane's arithmetic matches
+    /// `positions[b]` and lane `b` of `kv` belong to sequence `b`. The KV
+    /// view is a [`KvLanes`](super::kvcache::KvLanes), so contiguous and
+    /// paged caches run through this one code path — same append order, same
+    /// `t = 0..len` summation order. Attention itself runs per lane (KV
+    /// lengths differ); every lane's arithmetic matches
     /// [`Self::decode_step`] exactly, so batched decode is bit-identical to
-    /// stepping the sequences one at a time.
+    /// stepping the sequences one at a time, paged or not.
     pub fn decode_step_batch(
-        &mut self,
+        &self,
         xs: &[f32],
         cfg: &ModelConfig,
         positions: &[usize],
         rope: &Rope,
-        kvs: &mut [&mut super::kvcache::LayerKvCache],
+        kv: &mut super::kvcache::KvLanes<'_>,
         lut_scratch: &mut Vec<f32>,
     ) -> Vec<f32> {
         let n = positions.len();
@@ -577,7 +583,7 @@ impl Block {
         let (h_cnt, kv_cnt, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
         let rep = cfg.kv_repeat();
         debug_assert_eq!(xs.len(), n * d);
-        debug_assert_eq!(kvs.len(), n);
+        debug_assert_eq!(kv.lanes(), n);
         let mut xn1 = vec![0.0f32; n * d];
         for b in 0..n {
             rmsnorm(&xs[b * d..(b + 1) * d], &self.ln1, cfg.norm_eps, &mut xn1[b * d..(b + 1) * d]);
@@ -587,9 +593,9 @@ impl Block {
         let mut q = vec![0.0f32; n * qd];
         let mut k = vec![0.0f32; n * kvd];
         let mut v = vec![0.0f32; n * kvd];
-        self.attn.wq.matvec_batch(&xn1, n, &mut q, lut_scratch);
-        self.attn.wk.matvec_batch(&xn1, n, &mut k, lut_scratch);
-        self.attn.wv.matvec_batch(&xn1, n, &mut v, lut_scratch);
+        self.attn.wq.matvec_batch_cached(&xn1, n, &mut q, lut_scratch);
+        self.attn.wk.matvec_batch_cached(&xn1, n, &mut k, lut_scratch);
+        self.attn.wv.matvec_batch_cached(&xn1, n, &mut v, lut_scratch);
         for b in 0..n {
             let pos = positions[b];
             for hh in 0..h_cnt {
@@ -598,27 +604,26 @@ impl Block {
             for hh in 0..kv_cnt {
                 rope.apply(&mut k[b * kvd + hh * dh..b * kvd + (hh + 1) * dh], pos);
             }
-            kvs[b].append(&k[b * kvd..(b + 1) * kvd], &v[b * kvd..(b + 1) * kvd]);
+            kv.append(b, &k[b * kvd..(b + 1) * kvd], &v[b * kvd..(b + 1) * kvd]);
         }
         let scale = 1.0 / (dh as f32).sqrt();
         let mut ctx = vec![0.0f32; n * qd];
         let mut scores: Vec<f32> = Vec::new();
         for b in 0..n {
-            let kv = &*kvs[b];
-            let t_len = kv.len;
+            let t_len = kv.len(b);
             scores.clear();
             scores.resize(t_len, 0.0);
             for hh in 0..h_cnt {
                 let kvh = hh / rep;
                 let qrow = &q[b * qd + hh * dh..b * qd + (hh + 1) * dh];
                 for t in 0..t_len {
-                    scores[t] = crate::tensor::ops::dot(qrow, kv.k_at(kvh, t)) * scale;
+                    scores[t] = crate::tensor::ops::dot(qrow, kv.k_at(b, kvh, t)) * scale;
                 }
                 softmax_inplace(&mut scores);
                 let out = &mut ctx[b * qd + hh * dh..b * qd + (hh + 1) * dh];
                 for t in 0..t_len {
                     let p = scores[t];
-                    let vrow = kv.v_at(kvh, t);
+                    let vrow = kv.v_at(b, kvh, t);
                     for u in 0..dh {
                         out[u] += p * vrow[u];
                     }
@@ -626,7 +631,7 @@ impl Block {
             }
         }
         let mut att_out = vec![0.0f32; n * d];
-        self.attn.wo.matvec_batch(&ctx, n, &mut att_out, lut_scratch);
+        self.attn.wo.matvec_batch_cached(&ctx, n, &mut att_out, lut_scratch);
         let mut x_mid = vec![0.0f32; n * d];
         for i in 0..n * d {
             x_mid[i] = xs[i] + att_out[i];
@@ -635,7 +640,7 @@ impl Block {
         for b in 0..n {
             rmsnorm(&x_mid[b * d..(b + 1) * d], &self.ln2, cfg.norm_eps, &mut xn2[b * d..(b + 1) * d]);
         }
-        let ffn_out = match &mut self.ffn {
+        let ffn_out = match &self.ffn {
             Ffn::Dense(mlp) => mlp_decode_step_batch(mlp, &xn2, n, lut_scratch),
             Ffn::Moe(moe) => {
                 // Routing is per token; lanes run the single-vector path.
@@ -655,34 +660,35 @@ impl Block {
     }
 }
 
-/// Single-vector SwiGLU MLP (decode path).
-pub fn mlp_decode_step(mlp: &mut Mlp, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+/// Single-vector SwiGLU MLP (decode path; shared reference — see
+/// `Linear::matvec_cached` for the warm/cold contract).
+pub fn mlp_decode_step(mlp: &Mlp, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
     let ff = mlp.wg.d_out();
     let mut gate = vec![0.0f32; ff];
     let mut up = vec![0.0f32; ff];
-    mlp.wg.matvec(xn, &mut gate, lut_scratch);
-    mlp.wu.matvec(xn, &mut up, lut_scratch);
+    mlp.wg.matvec_cached(xn, &mut gate, lut_scratch);
+    mlp.wu.matvec_cached(xn, &mut up, lut_scratch);
     for i in 0..ff {
         gate[i] = silu(gate[i]) * up[i];
     }
     let mut out = vec![0.0f32; mlp.wd.d_out()];
-    mlp.wd.matvec(&gate, &mut out, lut_scratch);
+    mlp.wd.matvec_cached(&gate, &mut out, lut_scratch);
     out
 }
 
 /// Batched SwiGLU MLP over `n` lanes (`xns` is `n·d`, lane-major); one
 /// batched call per projection so quantized weights stream codes once.
-pub fn mlp_decode_step_batch(mlp: &mut Mlp, xns: &[f32], n: usize, lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+pub fn mlp_decode_step_batch(mlp: &Mlp, xns: &[f32], n: usize, lut_scratch: &mut Vec<f32>) -> Vec<f32> {
     let ff = mlp.wg.d_out();
     let mut gate = vec![0.0f32; n * ff];
     let mut up = vec![0.0f32; n * ff];
-    mlp.wg.matvec_batch(xns, n, &mut gate, lut_scratch);
-    mlp.wu.matvec_batch(xns, n, &mut up, lut_scratch);
+    mlp.wg.matvec_batch_cached(xns, n, &mut gate, lut_scratch);
+    mlp.wu.matvec_batch_cached(xns, n, &mut up, lut_scratch);
     for i in 0..n * ff {
         gate[i] = silu(gate[i]) * up[i];
     }
     let mut out = vec![0.0f32; n * mlp.wd.d_out()];
-    mlp.wd.matvec_batch(&gate, n, &mut out, lut_scratch);
+    mlp.wd.matvec_batch_cached(&gate, n, &mut out, lut_scratch);
     out
 }
 
@@ -901,7 +907,7 @@ mod tests {
     fn decode_step_batch_matches_single_steps_bitexact() {
         let cfg = tiny_cfg();
         let mut rng = Rng::seed_from_u64(8);
-        let mut block = make_block(&cfg, &mut rng);
+        let block = make_block(&cfg, &mut rng);
         let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
         let d = cfg.d_model;
         let mut scratch = Vec::new();
@@ -921,8 +927,8 @@ mod tests {
         let y_b = block.decode_step(&x_b, &cfg, 0, &rope, &mut kv_b_ref, &mut scratch);
         let mut xs = x_a.clone();
         xs.extend_from_slice(&x_b);
-        let mut kv_refs: Vec<&mut crate::nn::kvcache::LayerKvCache> = vec![&mut kv_a, &mut kv_b];
-        let y = block.decode_step_batch(&xs, &cfg, &[2, 0], &rope, &mut kv_refs, &mut scratch);
+        let mut kv_lanes = crate::nn::kvcache::KvLanes::Contig(vec![&mut kv_a, &mut kv_b]);
+        let y = block.decode_step_batch(&xs, &cfg, &[2, 0], &rope, &mut kv_lanes, &mut scratch);
         for j in 0..d {
             assert_eq!(y[j].to_bits(), y_a[j].to_bits(), "lane A dim {j}");
             assert_eq!(y[d + j].to_bits(), y_b[j].to_bits(), "lane B dim {j}");
@@ -930,6 +936,44 @@ mod tests {
         // The batched step must also have advanced the caches identically.
         assert_eq!(kv_a.len, 3);
         assert_eq!(kv_b.len, 1);
+    }
+
+    #[test]
+    fn decode_step_batch_paged_is_bitexact_vs_contiguous() {
+        // Same two-lane scenario, but lane KV lives in a shared block pool
+        // with a block size (2) that leaves lane A's history ragged.
+        use crate::nn::kvcache::{BlockTable, KvLanes, KvPool};
+        let cfg = tiny_cfg();
+        let mut rng = Rng::seed_from_u64(9);
+        let block = make_block(&cfg, &mut rng);
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta);
+        let d = cfg.d_model;
+        let mut scratch = Vec::new();
+        let mut kv_a = crate::nn::kvcache::LayerKvCache::new(cfg.n_kv_heads, cfg.head_dim(), cfg.max_seq);
+        let mut kv_b = kv_a.clone();
+        let mut pool = KvPool::new(cfg.n_kv_heads, cfg.head_dim(), 2, 8);
+        let mut ta = BlockTable::new();
+        let mut tb = BlockTable::new();
+        let hist: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+        for (pos, x) in hist.iter().enumerate() {
+            block.decode_step(x, &cfg, pos, &rope, &mut kv_a, &mut scratch);
+            let mut lanes = KvLanes::Paged(&mut pool, vec![&mut ta]);
+            block.decode_step_batch(x, &cfg, &[pos], &rope, &mut lanes, &mut scratch);
+        }
+        let x_a: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let x_b: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut xs = x_a.clone();
+        xs.extend_from_slice(&x_b);
+        let mut contig = KvLanes::Contig(vec![&mut kv_a, &mut kv_b]);
+        let y_c = block.decode_step_batch(&xs, &cfg, &[3, 0], &rope, &mut contig, &mut scratch);
+        let mut paged = KvLanes::Paged(&mut pool, vec![&mut ta, &mut tb]);
+        let y_p = block.decode_step_batch(&xs, &cfg, &[3, 0], &rope, &mut paged, &mut scratch);
+        for j in 0..2 * d {
+            assert_eq!(y_p[j].to_bits(), y_c[j].to_bits(), "dim {j} paged vs contiguous");
+        }
+        assert_eq!(ta.len(), 4);
+        assert_eq!(tb.len(), 1);
     }
 
     #[test]

@@ -1,4 +1,23 @@
-//! Per-layer key/value cache for autoregressive generation.
+//! Key/value caches for autoregressive generation: the classic contiguous
+//! per-layer cache, and a paged (block-pooled) cache for serving.
+//!
+//! **Contiguous** ([`LayerKvCache`]) — one `[n_kv_heads, max_seq, head_dim]`
+//! buffer per (sequence, layer). Simple, used by the offline
+//! `Model::generate` path, and the bit-identity oracle for the paged cache.
+//!
+//! **Paged** ([`KvPool`] + [`BlockTable`] + [`PagedSeqKv`]) — one shared pool
+//! of fixed-size *position blocks* per worker, a free-list allocator, and a
+//! per-(sequence, layer) table mapping logical positions to blocks. Memory
+//! is bounded by the pool (not `max_batch × max_seq`): a sequence consumes
+//! blocks as it grows and returns them when it retires, so many short
+//! sequences fit where few worst-case contiguous caches would. Pool
+//! exhaustion is surfaced to the scheduler ([`KvPool::free_blocks`]) as an
+//! admission/preemption signal rather than a panic.
+//!
+//! Both caches expose the same `k_at`/`v_at` position accessors, and
+//! attention sums over `t = 0..len` in the same order either way, so decode
+//! through the paged cache is **bit-identical** to the contiguous cache
+//! (covered by a property test in `tests/proptests.rs`).
 
 /// KV cache for one transformer block.
 #[derive(Clone, Debug)]
@@ -62,6 +81,261 @@ impl LayerKvCache {
     }
 }
 
+// ------------------------------------------------------------------ paged
+
+/// Shared pool of fixed-size KV position-blocks with a free-list allocator.
+///
+/// One pool serves every layer of every active sequence on a worker. A
+/// block stores `block_size` consecutive positions of one (sequence, layer)
+/// as `[n_kv_heads, block_size, head_dim]` — the same head-major-then-
+/// position layout as [`LayerKvCache`], just chunked, so `k_at`/`v_at`
+/// return identical slices and attention arithmetic is unchanged.
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    /// Number of cached key/value heads.
+    pub n_kv_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// Positions per block.
+    block_size: usize,
+    /// Total blocks in the pool.
+    n_blocks: usize,
+    /// Block storage: block `b` occupies
+    /// `[b * n_kv_heads * block_size * head_dim ..][h][p][..head_dim]`.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// LIFO free list of block ids (deterministic allocation order).
+    free: Vec<u32>,
+}
+
+impl KvPool {
+    /// Pool of `n_blocks` blocks of `block_size` positions each.
+    pub fn new(n_kv_heads: usize, head_dim: usize, block_size: usize, n_blocks: usize) -> KvPool {
+        assert!(block_size > 0, "kv block size must be positive");
+        assert!(n_blocks > 0, "kv pool must have at least one block");
+        assert!(n_blocks <= u32::MAX as usize, "kv pool too large");
+        let elems = n_blocks * n_kv_heads * block_size * head_dim;
+        KvPool {
+            n_kv_heads,
+            head_dim,
+            block_size,
+            n_blocks,
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+            // Pop from the tail → blocks are handed out in ascending id
+            // order from a fresh pool.
+            free: (0..n_blocks as u32).rev().collect(),
+        }
+    }
+
+    /// Positions per block.
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Total blocks in the pool.
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Blocks currently unallocated (the scheduler's pressure signal).
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks needed to hold `positions` cached positions of one layer.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    /// Append one position's K/V (head-major `[n_kv_heads * head_dim]`) to
+    /// `table`, allocating a block when the tail block is full.
+    ///
+    /// Panics on pool exhaustion: the scheduler must check
+    /// [`Self::free_blocks`] before stepping (exhaustion is a scheduling
+    /// decision — preempt or hold admission — not a cache-level error).
+    pub fn append(&mut self, table: &mut BlockTable, k_new: &[f32], v_new: &[f32]) {
+        let (bs, hd) = (self.block_size, self.head_dim);
+        if table.len == table.blocks.len() * bs {
+            let blk = self.free.pop().expect("kv pool exhausted (scheduler must preempt first)");
+            table.blocks.push(blk);
+        }
+        let blk = table.blocks[table.len / bs] as usize;
+        let p = table.len % bs;
+        for h in 0..self.n_kv_heads {
+            let dst = ((blk * self.n_kv_heads + h) * bs + p) * hd;
+            self.k[dst..dst + hd].copy_from_slice(&k_new[h * hd..(h + 1) * hd]);
+            self.v[dst..dst + hd].copy_from_slice(&v_new[h * hd..(h + 1) * hd]);
+        }
+        table.len += 1;
+    }
+
+    /// K vector of head `h` at logical position `t` of `table`.
+    #[inline]
+    pub fn k_at(&self, table: &BlockTable, h: usize, t: usize) -> &[f32] {
+        let (bs, hd) = (self.block_size, self.head_dim);
+        let blk = table.blocks[t / bs] as usize;
+        let base = ((blk * self.n_kv_heads + h) * bs + (t % bs)) * hd;
+        &self.k[base..base + hd]
+    }
+
+    /// V vector of head `h` at logical position `t` of `table`.
+    #[inline]
+    pub fn v_at(&self, table: &BlockTable, h: usize, t: usize) -> &[f32] {
+        let (bs, hd) = (self.block_size, self.head_dim);
+        let blk = table.blocks[t / bs] as usize;
+        let base = ((blk * self.n_kv_heads + h) * bs + (t % bs)) * hd;
+        &self.v[base..base + hd]
+    }
+
+    /// Return all of `table`'s blocks to the free list and reset it.
+    pub fn release(&mut self, table: &mut BlockTable) {
+        // Push back in reverse so a release-then-reallocate cycle hands the
+        // same ids out in the same order (deterministic scheduling).
+        while let Some(blk) = table.blocks.pop() {
+            self.free.push(blk);
+        }
+        table.len = 0;
+    }
+}
+
+/// Logical-position → pool-block mapping for one (sequence, layer).
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    /// Pool block ids, in position order (block `i` holds positions
+    /// `[i*block_size, (i+1)*block_size)`).
+    blocks: Vec<u32>,
+    /// Number of positions currently cached.
+    len: usize,
+}
+
+impl BlockTable {
+    /// Empty table (no blocks held).
+    pub fn new() -> BlockTable {
+        BlockTable::default()
+    }
+
+    /// Number of positions currently cached.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no positions are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of pool blocks currently held.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Does appending one more position require a fresh pool block?
+    pub fn needs_block_for_append(&self, block_size: usize) -> bool {
+        self.len == self.blocks.len() * block_size
+    }
+}
+
+/// Paged KV state of one sequence: one [`BlockTable`] per layer.
+#[derive(Clone, Debug)]
+pub struct PagedSeqKv {
+    /// Per-layer block tables (index = layer).
+    pub layers: Vec<BlockTable>,
+}
+
+impl PagedSeqKv {
+    /// Empty per-layer tables for `n_layers` blocks.
+    pub fn new(n_layers: usize) -> PagedSeqKv {
+        PagedSeqKv { layers: (0..n_layers).map(|_| BlockTable::new()).collect() }
+    }
+
+    /// Cached positions (identical across layers — every layer appends once
+    /// per decoded token).
+    pub fn positions(&self) -> usize {
+        self.layers.first().map(|t| t.len()).unwrap_or(0)
+    }
+
+    /// Pool blocks a one-position append would newly allocate across all
+    /// layers (0 when every layer's tail block has room).
+    pub fn blocks_needed_for_append(&self, block_size: usize) -> usize {
+        self.layers.iter().filter(|t| t.needs_block_for_append(block_size)).count()
+    }
+
+    /// Total pool blocks currently held across layers.
+    pub fn blocks_held(&self) -> usize {
+        self.layers.iter().map(|t| t.n_blocks()).sum()
+    }
+
+    /// Return every layer's blocks to `pool` and reset the tables.
+    pub fn release(&mut self, pool: &mut KvPool) {
+        for table in &mut self.layers {
+            pool.release(table);
+        }
+    }
+}
+
+/// One layer's KV access for a batch of decode lanes — either each lane's
+/// private contiguous cache, or a shared block pool plus per-lane tables.
+///
+/// `nn/block.rs` attention is written against this view only, so the paged
+/// and contiguous paths share one code path (and therefore one summation
+/// order: greedy output cannot diverge between them).
+pub enum KvLanes<'a> {
+    /// One contiguous cache per lane.
+    Contig(Vec<&'a mut LayerKvCache>),
+    /// Shared block pool + one block table per lane.
+    Paged(&'a mut KvPool, Vec<&'a mut BlockTable>),
+}
+
+impl KvLanes<'_> {
+    /// Number of lanes in the batch.
+    pub fn lanes(&self) -> usize {
+        match self {
+            KvLanes::Contig(kvs) => kvs.len(),
+            KvLanes::Paged(_, tables) => tables.len(),
+        }
+    }
+
+    /// Append one position's K/V for lane `b` (head-major
+    /// `[n_kv_heads * head_dim]`).
+    #[inline]
+    pub fn append(&mut self, b: usize, k_new: &[f32], v_new: &[f32]) {
+        match self {
+            KvLanes::Contig(kvs) => kvs[b].append(k_new, v_new),
+            KvLanes::Paged(pool, tables) => pool.append(tables[b], k_new, v_new),
+        }
+    }
+
+    /// Cached positions of lane `b`.
+    #[inline]
+    pub fn len(&self, b: usize) -> usize {
+        match self {
+            KvLanes::Contig(kvs) => kvs[b].len,
+            KvLanes::Paged(_, tables) => tables[b].len(),
+        }
+    }
+
+    /// K vector of lane `b`, head `h`, position `t`.
+    #[inline]
+    pub fn k_at(&self, b: usize, h: usize, t: usize) -> &[f32] {
+        match self {
+            KvLanes::Contig(kvs) => kvs[b].k_at(h, t),
+            KvLanes::Paged(pool, tables) => pool.k_at(tables[b], h, t),
+        }
+    }
+
+    /// V vector of lane `b`, head `h`, position `t`.
+    #[inline]
+    pub fn v_at(&self, b: usize, h: usize, t: usize) -> &[f32] {
+        match self {
+            KvLanes::Contig(kvs) => kvs[b].v_at(h, t),
+            KvLanes::Paged(pool, tables) => pool.v_at(tables[b], h, t),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +368,102 @@ mod tests {
         assert_eq!(c.len, 0);
         c.append(&[5., 6.], &[7., 8.]);
         assert_eq!(c.k_at(0, 0), &[5., 6.]);
+    }
+
+    #[test]
+    fn paged_append_reads_back_identically_to_contiguous() {
+        // Ragged length (not a block multiple) across two interleaved
+        // sequences sharing one pool.
+        let (heads, hd, bs) = (2, 3, 4);
+        let mut pool = KvPool::new(heads, hd, bs, 8);
+        let mut ta = BlockTable::new();
+        let mut tb = BlockTable::new();
+        let mut ca = LayerKvCache::new(heads, hd, 16);
+        let mut cb = LayerKvCache::new(heads, hd, 16);
+        for t in 0..10usize {
+            let k: Vec<f32> = (0..heads * hd).map(|i| (t * 100 + i) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            pool.append(&mut ta, &k, &v);
+            ca.append(&k, &v);
+            if t < 7 {
+                let k2: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+                pool.append(&mut tb, &k2, &k);
+                cb.append(&k2, &k);
+            }
+        }
+        assert_eq!(ta.len(), 10);
+        assert_eq!(tb.len(), 7);
+        for h in 0..heads {
+            for t in 0..10 {
+                assert_eq!(pool.k_at(&ta, h, t), ca.k_at(h, t));
+                assert_eq!(pool.v_at(&ta, h, t), ca.v_at(h, t));
+            }
+            for t in 0..7 {
+                assert_eq!(pool.k_at(&tb, h, t), cb.k_at(h, t));
+                assert_eq!(pool.v_at(&tb, h, t), cb.v_at(h, t));
+            }
+        }
+    }
+
+    #[test]
+    fn pool_allocates_on_block_boundaries_and_frees_on_release() {
+        let mut pool = KvPool::new(1, 2, 2, 3);
+        let mut t = BlockTable::new();
+        assert_eq!(pool.free_blocks(), 3);
+        pool.append(&mut t, &[1., 2.], &[3., 4.]);
+        assert_eq!(pool.free_blocks(), 2);
+        assert!(!t.needs_block_for_append(pool.block_size()));
+        pool.append(&mut t, &[1., 2.], &[3., 4.]);
+        assert_eq!(pool.free_blocks(), 2, "second position fits the first block");
+        assert!(t.needs_block_for_append(pool.block_size()));
+        pool.append(&mut t, &[1., 2.], &[3., 4.]);
+        assert_eq!(pool.free_blocks(), 1);
+        assert_eq!(t.n_blocks(), 2);
+        pool.release(&mut t);
+        assert_eq!(pool.free_blocks(), 3);
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.n_blocks(), 0);
+    }
+
+    #[test]
+    fn release_then_reallocate_is_deterministic() {
+        let mut pool = KvPool::new(1, 1, 1, 4);
+        let mut a = BlockTable::new();
+        let mut b = BlockTable::new();
+        pool.append(&mut a, &[1.0], &[1.0]);
+        pool.append(&mut b, &[2.0], &[2.0]);
+        pool.release(&mut a);
+        let mut c = BlockTable::new();
+        pool.append(&mut c, &[3.0], &[3.0]);
+        // The freed block is reused (pool is LIFO), not leaked.
+        assert_eq!(pool.free_blocks(), 2);
+        assert_eq!(pool.k_at(&c, 0, 0), &[3.0]);
+        assert_eq!(pool.k_at(&b, 0, 0), &[2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn pool_exhaustion_panics_with_scheduler_hint() {
+        let mut pool = KvPool::new(1, 1, 1, 1);
+        let mut a = BlockTable::new();
+        pool.append(&mut a, &[1.0], &[1.0]);
+        pool.append(&mut a, &[2.0], &[2.0]);
+    }
+
+    #[test]
+    fn paged_seq_accounting() {
+        let mut pool = KvPool::new(1, 2, 2, 8);
+        let mut seq = PagedSeqKv::new(3);
+        assert_eq!(seq.positions(), 0);
+        assert_eq!(seq.blocks_needed_for_append(pool.block_size()), 3);
+        for table in &mut seq.layers {
+            pool.append(table, &[1., 2.], &[3., 4.]);
+        }
+        assert_eq!(seq.positions(), 1);
+        assert_eq!(seq.blocks_held(), 3);
+        assert_eq!(seq.blocks_needed_for_append(pool.block_size()), 0);
+        seq.release(&mut pool);
+        assert_eq!(seq.blocks_held(), 0);
+        assert_eq!(pool.free_blocks(), 8);
     }
 }

@@ -199,25 +199,55 @@ impl Linear {
         matmul_bt_into(x, w, out);
     }
 
+    /// Populate the lazy decode-path caches (AQLM packed form, grouped-int
+    /// dequantized matrix) so the shared-reference decode accessors
+    /// ([`Self::matvec_cached`] / [`Self::matvec_batch_cached`]) never
+    /// rebuild them per call. Serving warms every linear once and then
+    /// shares the model immutably across worker threads.
+    pub fn warm_decode(&mut self) {
+        match self {
+            Linear::Aqlm { q, packed, .. } => {
+                if packed.is_none() {
+                    *packed = Some(PackedAqlm::from_weight(q));
+                }
+            }
+            Linear::GroupInt { q, decoded } => {
+                if decoded.is_none() {
+                    *decoded = Some(q.decode());
+                }
+            }
+            // Dense and packed SpQR serve straight from their storage.
+            Linear::Dense(_) | Linear::Spqr { .. } => {}
+        }
+    }
+
     /// Single-vector forward on the generation hot path. Dense → GEMV;
     /// AQLM → packed LUT/decode kernel; SpQR → fused sparse kernel
     /// (`lut_scratch` doubles as the row-reconstruction buffer, avoiding
     /// reallocation either way).
     pub fn matvec(&mut self, x: &[f32], y: &mut [f32], lut_scratch: &mut Vec<f32>) {
+        self.warm_decode();
+        self.matvec_cached(x, y, lut_scratch);
+    }
+
+    /// [`Self::matvec`] through a shared reference: identical arithmetic,
+    /// serving from the caches built by [`Self::warm_decode`]. A cold cache
+    /// falls back to building the packed/dequantized form for this one call
+    /// (correct, just slow) so the result never depends on warm-up state.
+    pub fn matvec_cached(&self, x: &[f32], y: &mut [f32], lut_scratch: &mut Vec<f32>) {
         match self {
             Linear::Dense(w) => gemv(w, x, y),
-            Linear::Aqlm { q, packed, .. } => {
-                if packed.is_none() {
-                    *packed = Some(PackedAqlm::from_weight(q));
-                }
-                packed.as_ref().unwrap().matvec_auto(x, lut_scratch, y);
-            }
+            Linear::Aqlm { q, packed, .. } => match packed {
+                Some(p) => p.matvec_auto(x, lut_scratch, y),
+                None => PackedAqlm::from_weight(q).matvec_auto(x, lut_scratch, y),
+            },
             Linear::Spqr { q, .. } => q.matvec(x, lut_scratch, y),
-            Linear::GroupInt { .. } => {
-                // Scalar-quantized baselines run the dense GEMV over the
-                // cached dequantized matrix (as the related work does).
-                gemv(self.weight(), x, y)
-            }
+            // Scalar-quantized baselines run the dense GEMV over the
+            // dequantized matrix (as the related work does).
+            Linear::GroupInt { q, decoded } => match decoded {
+                Some(w) => gemv(w, x, y),
+                None => gemv(&q.decode(), x, y),
+            },
         }
     }
 
@@ -230,23 +260,41 @@ impl Linear {
     /// GEMV per lane — the same dot kernel as [`Self::matvec`], so every
     /// lane's result is bit-identical to a single-vector call.
     pub fn matvec_batch(&mut self, xs: &[f32], n: usize, ys: &mut [f32], lut_scratch: &mut Vec<f32>) {
+        self.warm_decode();
+        self.matvec_batch_cached(xs, n, ys, lut_scratch);
+    }
+
+    /// [`Self::matvec_batch`] through a shared reference (see
+    /// [`Self::matvec_cached`] for the warm/cold contract).
+    pub fn matvec_batch_cached(&self, xs: &[f32], n: usize, ys: &mut [f32], lut_scratch: &mut Vec<f32>) {
         debug_assert_eq!(xs.len(), n * self.d_in());
         debug_assert_eq!(ys.len(), n * self.d_out());
-        if let Linear::Aqlm { q, packed, .. } = self {
-            if packed.is_none() {
-                *packed = Some(PackedAqlm::from_weight(q));
+        match self {
+            Linear::Aqlm { q, packed, .. } => match packed {
+                Some(p) => p.matmat_auto(xs, n, lut_scratch, ys),
+                None => PackedAqlm::from_weight(q).matmat_auto(xs, n, lut_scratch, ys),
+            },
+            Linear::Spqr { q, .. } => q.matvec_batch(xs, n, lut_scratch, ys),
+            Linear::Dense(w) => {
+                let (d_in, d_out) = (w.cols(), w.rows());
+                for b in 0..n {
+                    gemv(w, &xs[b * d_in..(b + 1) * d_in], &mut ys[b * d_out..(b + 1) * d_out]);
+                }
             }
-            packed.as_ref().unwrap().matmat_auto(xs, n, lut_scratch, ys);
-            return;
-        }
-        if let Linear::Spqr { q, .. } = self {
-            q.matvec_batch(xs, n, lut_scratch, ys);
-            return;
-        }
-        let (d_in, d_out) = (self.d_in(), self.d_out());
-        let w = self.weight();
-        for b in 0..n {
-            gemv(w, &xs[b * d_in..(b + 1) * d_in], &mut ys[b * d_out..(b + 1) * d_out]);
+            Linear::GroupInt { q, decoded } => {
+                let (d_in, d_out) = (q.d_in, q.d_out);
+                let fresh;
+                let w = match decoded {
+                    Some(w) => w,
+                    None => {
+                        fresh = q.decode();
+                        &fresh
+                    }
+                };
+                for b in 0..n {
+                    gemv(w, &xs[b * d_in..(b + 1) * d_in], &mut ys[b * d_out..(b + 1) * d_out]);
+                }
+            }
         }
     }
 

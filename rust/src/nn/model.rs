@@ -10,7 +10,7 @@
 use super::adam::{Adam, AdamState};
 use super::block::{Block, BlockCache, BlockGrads, Ffn, FfnGrads, Mlp};
 use super::config::ModelConfig;
-use super::kvcache::LayerKvCache;
+use super::kvcache::{KvLanes, KvPool, LayerKvCache, PagedSeqKv};
 use super::linear::{Linear, LinearGrad};
 use super::loss::cross_entropy;
 use super::moe::MoeLayer;
@@ -226,6 +226,30 @@ impl Model {
             .collect()
     }
 
+    /// Shared paged-KV block pool for this model's head geometry (serving
+    /// path; see [`crate::nn::kvcache::KvPool`]).
+    pub fn new_kv_pool(&self, block_size: usize, n_blocks: usize) -> KvPool {
+        KvPool::new(self.cfg.n_kv_heads, self.cfg.head_dim(), block_size, n_blocks)
+    }
+
+    /// Empty paged per-layer KV state for one sequence.
+    pub fn new_paged_kv(&self) -> PagedSeqKv {
+        PagedSeqKv::new(self.cfg.n_layers)
+    }
+
+    /// Pre-build every lazy decode-path cache (packed AQLM forms, dequantized
+    /// grouped-int matrices) so the `&self` decode methods run at full speed.
+    /// The server calls this once before wrapping the model in an `Arc` and
+    /// sharing it across worker threads.
+    pub fn warm_decode(&mut self) {
+        for block in &mut self.blocks {
+            for (_, lin) in block.linears_mut() {
+                lin.warm_decode();
+            }
+        }
+        self.head.warm_decode();
+    }
+
     /// Serving-window clamp shared by [`Self::generate`] and the server's
     /// admission path: a prompt of `max_seq` or more tokens keeps only its
     /// trailing `max_seq − 1` tokens, so prefill fits the KV cache with
@@ -237,22 +261,26 @@ impl Model {
     }
 
     /// Decode one token through the whole model; returns logits `[vocab]`.
+    ///
+    /// Takes `&self` (decode caches should be pre-built via
+    /// [`Self::warm_decode`]; cold caches still give the same result, just
+    /// slower) so a warmed model can be shared across server workers.
     pub fn decode_token(
-        &mut self,
+        &self,
         token: u32,
         pos: usize,
         kv: &mut [LayerKvCache],
         lut_scratch: &mut Vec<f32>,
     ) -> Vec<f32> {
-        let cfg = self.cfg.clone();
+        let cfg = &self.cfg;
         let mut x = self.embed.row(token as usize).to_vec();
-        for (i, block) in self.blocks.iter_mut().enumerate() {
-            x = block.decode_step(&x, &cfg, pos, &self.rope, &mut kv[i], lut_scratch);
+        for (i, block) in self.blocks.iter().enumerate() {
+            x = block.decode_step(&x, cfg, pos, &self.rope, &mut kv[i], lut_scratch);
         }
         let mut xn = vec![0.0f32; cfg.d_model];
         crate::tensor::ops::rmsnorm(&x, &self.ln_f, cfg.norm_eps, &mut xn);
         let mut logits = vec![0.0f32; cfg.vocab_size];
-        self.head.matvec(&xn, &mut logits, lut_scratch);
+        self.head.matvec_cached(&xn, &mut logits, lut_scratch);
         logits
     }
 
@@ -266,7 +294,7 @@ impl Model {
     /// arithmetic is identical to [`Self::decode_token`], so greedy decoding
     /// through this path is bit-equal to stepping sequences one at a time.
     pub fn decode_batch(
-        &mut self,
+        &self,
         tokens: &[u32],
         positions: &[usize],
         kvs: &mut [&mut Vec<LayerKvCache>],
@@ -278,24 +306,86 @@ impl Model {
         if n == 0 {
             return Vec::new();
         }
-        let cfg = self.cfg.clone();
-        let d = cfg.d_model;
-        let mut x = vec![0.0f32; n * d];
+        let mut x = self.embed_lanes(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            let mut lanes = KvLanes::Contig(kvs.iter_mut().map(|seq| &mut seq[li]).collect());
+            x = block.decode_step_batch(
+                &x,
+                &self.cfg,
+                positions,
+                &self.rope,
+                &mut lanes,
+                lut_scratch,
+            );
+        }
+        self.head_lanes(&x, n, lut_scratch)
+    }
+
+    /// [`Self::decode_batch`] over the paged KV cache: lane `b`'s KV lives
+    /// in `pool` addressed through `seqs[b]`'s per-layer block tables.
+    ///
+    /// Every layer runs the same [`crate::nn::block::Block::decode_step_batch`]
+    /// code path as the contiguous variant — identical append and summation
+    /// order — so paged decode is bit-identical per lane to contiguous
+    /// decode (property-tested in `tests/proptests.rs`). The caller (the
+    /// scheduler) must ensure the pool has a free block for every lane that
+    /// needs one; exhaustion mid-step panics.
+    pub fn decode_batch_paged(
+        &self,
+        tokens: &[u32],
+        positions: &[usize],
+        pool: &mut KvPool,
+        seqs: &mut [&mut PagedSeqKv],
+        lut_scratch: &mut Vec<f32>,
+    ) -> Vec<Vec<f32>> {
+        let n = tokens.len();
+        assert_eq!(positions.len(), n);
+        assert_eq!(seqs.len(), n);
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut x = self.embed_lanes(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            let tables = seqs.iter_mut().map(|seq| &mut seq.layers[li]).collect();
+            let mut lanes = KvLanes::Paged(&mut *pool, tables);
+            x = block.decode_step_batch(
+                &x,
+                &self.cfg,
+                positions,
+                &self.rope,
+                &mut lanes,
+                lut_scratch,
+            );
+        }
+        self.head_lanes(&x, n, lut_scratch)
+    }
+
+    /// Embed one token per lane into a lane-major `[n · d_model]` buffer.
+    fn embed_lanes(&self, tokens: &[u32]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let mut x = vec![0.0f32; tokens.len() * d];
         for (b, &t) in tokens.iter().enumerate() {
             x[b * d..(b + 1) * d].copy_from_slice(self.embed.row(t as usize));
         }
-        for (li, block) in self.blocks.iter_mut().enumerate() {
-            let mut layer_kvs: Vec<&mut LayerKvCache> =
-                kvs.iter_mut().map(|seq| &mut seq[li]).collect();
-            x = block.decode_step_batch(&x, &cfg, positions, &self.rope, &mut layer_kvs, lut_scratch);
-        }
+        x
+    }
+
+    /// Final norm + LM head over `n` lanes; returns per-lane logits.
+    fn head_lanes(&self, x: &[f32], n: usize, lut_scratch: &mut Vec<f32>) -> Vec<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let vocab = self.cfg.vocab_size;
         let mut xn = vec![0.0f32; n * d];
         for b in 0..n {
-            crate::tensor::ops::rmsnorm(&x[b * d..(b + 1) * d], &self.ln_f, cfg.norm_eps, &mut xn[b * d..(b + 1) * d]);
+            crate::tensor::ops::rmsnorm(
+                &x[b * d..(b + 1) * d],
+                &self.ln_f,
+                self.cfg.norm_eps,
+                &mut xn[b * d..(b + 1) * d],
+            );
         }
-        let mut logits = vec![0.0f32; n * cfg.vocab_size];
-        self.head.matvec_batch(&xn, n, &mut logits, lut_scratch);
-        (0..n).map(|b| logits[b * cfg.vocab_size..(b + 1) * cfg.vocab_size].to_vec()).collect()
+        let mut logits = vec![0.0f32; n * vocab];
+        self.head.matvec_batch_cached(&xn, n, &mut logits, lut_scratch);
+        (0..n).map(|b| logits[b * vocab..(b + 1) * vocab].to_vec()).collect()
     }
 
     /// Greedy/temperature generation from a prompt.
@@ -311,6 +401,9 @@ impl Model {
         rng: &mut Rng,
     ) -> Vec<u32> {
         assert!(!prompt.is_empty());
+        // Pre-build decode caches so the `&self` decode path below is warm
+        // (same lazy caches `decode_token` used to build on first call).
+        self.warm_decode();
         let prompt = self.clamp_prompt_window(prompt);
         let mut kv = self.new_kv_caches();
         let mut scratch = Vec::new();
@@ -957,7 +1050,7 @@ mod tests {
     fn decode_batch_matches_decode_token_bitexact() {
         let cfg = test_cfg();
         let mut rng = Rng::seed_from_u64(8);
-        let mut m = Model::init(&cfg, &mut rng);
+        let m = Model::init(&cfg, &mut rng);
         let mut scratch = Vec::new();
         // Lane A has consumed [1, 2]; lane B has consumed [3] — heterogeneous
         // positions and KV lengths, as in the continuous-batching server.

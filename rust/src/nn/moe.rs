@@ -174,15 +174,17 @@ impl MoeLayer {
         (dxn, MoeGrads { gate: dgate, experts: expert_grads })
     }
 
-    /// Single-token decode path.
-    pub fn decode_step(&mut self, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+    /// Single-token decode path (shared reference — decode caches must be
+    /// pre-warmed via `Model::warm_decode` for full speed; cold caches fall
+    /// back to per-call decoding, see `Linear::matvec_cached`).
+    pub fn decode_step(&self, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
         let e_cnt = self.n_experts();
         let mut logits = vec![0.0f32; e_cnt];
         crate::tensor::ops::gemv(&self.gate, xn, &mut logits);
         let (ids, w) = self.route(&logits);
         let mut out = vec![0.0f32; xn.len()];
         for (slot, &e) in ids.iter().enumerate() {
-            let ye = mlp_decode_step(&mut self.experts[e], xn, lut_scratch);
+            let ye = mlp_decode_step(&self.experts[e], xn, lut_scratch);
             for (o, &v) in out.iter_mut().zip(&ye) {
                 *o += w[slot] * v;
             }

@@ -90,7 +90,7 @@ fn bench_smoke_server_batch_sweep() {
     let max_new = 16;
     let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
     for max_batch in [1usize, 8] {
-        let server = Server::start(model.clone(), ServerConfig { max_batch, seed: 0 });
+        let server = Server::start(model.clone(), ServerConfig { max_batch, seed: 0, ..Default::default() });
         let rxs: Vec<_> = (0..n_req)
             .map(|i| server.submit(vec![1, 2 + i as u32], max_new, 0.0))
             .collect();

@@ -23,7 +23,7 @@ fn model(seed: u64) -> Model {
 
 #[test]
 fn many_clients_all_served_exactly_once() {
-    let server = Server::start(model(1), ServerConfig { max_batch: 4, seed: 0 });
+    let server = Server::start(model(1), ServerConfig { max_batch: 4, seed: 0, ..Default::default() });
     let n = 24;
     // Submit from multiple client threads to exercise the channel path.
     let server = std::sync::Arc::new(server);
@@ -123,7 +123,7 @@ fn quantized_batched_decode_matches_offline_for_concurrent_sequences() {
         .iter()
         .map(|p| offline.generate(p, 8, 0.0, &mut Rng::seed_from_u64(0)))
         .collect();
-    let server = Server::start(m, ServerConfig { max_batch: 4, seed: 0 });
+    let server = Server::start(m, ServerConfig { max_batch: 4, seed: 0, ..Default::default() });
     let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 8, 0.0)).collect();
     for (rx, want) in rxs.into_iter().zip(&expected) {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
@@ -133,10 +133,166 @@ fn quantized_batched_decode_matches_offline_for_concurrent_sequences() {
 }
 
 #[test]
+fn kv_pressure_server_completes_all_requests_token_identically() {
+    // Per-worker pool of 28 blocks × 4 positions (2 layers) = 56 positions
+    // per sequence max, but 6 × 11-position requests demand 36 blocks of
+    // steady-state KV — more than the pool when all run at once. Admission
+    // must hold requests back (or preempt) and still serve every request
+    // with exactly the offline greedy tokens.
+    let mut offline = model(7);
+    let prompts: Vec<Vec<u32>> = (0..6).map(|i| vec![5 + i as u32, 9, 2]).collect();
+    let expected: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| offline.generate(p, 8, 0.0, &mut Rng::seed_from_u64(0)))
+        .collect();
+    let cfg = ServerConfig {
+        max_batch: 6,
+        kv_block_size: 4,
+        kv_pool_blocks: Some(28),
+        ..Default::default()
+    };
+    let server = Server::start(offline, cfg);
+    let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 8, 0.0)).collect();
+    for (rx, want) in rxs.into_iter().zip(&expected) {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(&resp.tokens, want, "KV pressure changed greedy output");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 6);
+}
+
+#[test]
+fn paged_pool_admits_more_concurrency_than_contiguous_at_same_memory() {
+    // Drive a WorkerScheduler synchronously (deterministic, no threads).
+    // 28 blocks × 4 positions: a contiguous cache of the same memory
+    // reserves 2 layers × 48 positions = 24 blocks per sequence, so it
+    // admits exactly 1 sequence. The paged scheduler admits all 4 short
+    // requests at once, and each still matches offline greedy decoding.
+    use aqlm::coordinator::scheduler::{
+        prompt_window, AdmissionQueue, GenRequest, SchedConfig, WorkerScheduler,
+    };
+    let mut m = model(8);
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![5, 9, 2], vec![13, 1, 1], vec![40, 3, 2], vec![7, 7, 7]];
+    let expected: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| m.generate(p, 8, 0.0, &mut Rng::seed_from_u64(0)))
+        .collect();
+    m.warm_decode();
+    let contiguous_blocks_per_seq = m.cfg.n_layers * m.cfg.max_seq.div_ceil(4);
+    let n_blocks = 28;
+    assert_eq!(n_blocks / contiguous_blocks_per_seq, 1, "contiguous admits exactly 1");
+    let pool = m.new_kv_pool(4, n_blocks);
+    let cfg = SchedConfig {
+        max_batch: 4,
+        prefill_chunk: 32,
+        window: prompt_window(m.cfg.max_seq, (n_blocks / m.cfg.n_layers) * 4),
+        decode_cap: m.cfg.max_seq,
+    };
+    let mut sched = WorkerScheduler::new(cfg, pool, m.cfg.n_layers);
+    let mut queue = AdmissionQueue::new();
+    let mut rxs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        rxs.push(rx);
+        let req = GenRequest {
+            prompt: p.clone(),
+            max_new: 8,
+            temperature: 0.0,
+            priority: 0,
+            deadline: None,
+            respond: tx,
+            stream: None,
+        };
+        queue.push_new(req, i as u64);
+    }
+    let mut rng = Rng::seed_from_u64(0);
+    let mut scratch = Vec::new();
+    let mut peak = 0;
+    let mut guard = 0;
+    while !queue.is_empty() || sched.has_work() {
+        while sched.active_len() < cfg.max_batch {
+            match queue.peek() {
+                Some(q) if sched.can_admit(q) => {
+                    let q = queue.pop().unwrap();
+                    let _ = sched.admit(q);
+                }
+                _ => break,
+            }
+        }
+        peak = peak.max(sched.active_len());
+        let (_done, requeues) = sched.step(&m, &mut rng, &mut scratch);
+        for q in requeues {
+            queue.push_back(q);
+        }
+        guard += 1;
+        assert!(guard < 10_000, "scheduler failed to drain");
+    }
+    assert!(
+        peak > 1,
+        "paged pool must admit more concurrent sequences ({peak}) than contiguous (1)"
+    );
+    for (rx, want) in rxs.iter().zip(&expected) {
+        let resp = rx.try_recv().expect("request completed");
+        assert_eq!(&resp.tokens, want, "paged concurrent decode diverged from offline");
+    }
+}
+
+#[test]
+fn multi_worker_server_passes_conservation_and_parity() {
+    // The whole-suite bar for replicas: with 2 workers, every request is
+    // answered exactly once and greedy output still matches the offline
+    // single-sequence result regardless of which worker served it.
+    let mut offline = model(9);
+    let prompts: Vec<Vec<u32>> = (0..12).map(|i| vec![1 + i as u32 % 60, 4]).collect();
+    let expected: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| offline.generate(p, 6, 0.0, &mut Rng::seed_from_u64(0)))
+        .collect();
+    let cfg = ServerConfig { workers: 2, max_batch: 3, ..Default::default() };
+    let server = Server::start(offline, cfg);
+    let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
+    for (rx, want) in rxs.into_iter().zip(&expected) {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(&resp.tokens, want, "multi-worker greedy diverged from offline");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.per_worker_requests.len(), 2);
+    assert_eq!(stats.per_worker_requests.iter().sum::<usize>(), 12);
+}
+
+#[test]
+fn prompt_at_pool_capacity_is_truncated_to_pool_window() {
+    // The admission window must follow the *pool* when it is tighter than
+    // the model context: 12 blocks × 4 positions over 2 layers hold 24
+    // positions per sequence, so a 24-token prompt (== pool capacity,
+    // < max_seq = 48) must be truncated to 23 and still generate.
+    let cfg = ServerConfig {
+        max_batch: 2,
+        kv_block_size: 4,
+        kv_pool_blocks: Some(12),
+        ..Default::default()
+    };
+    let server = Server::start(model(10), cfg);
+    let prompt: Vec<u32> = (0..24).map(|i| 1 + i % 60).collect();
+    let resp = server
+        .submit(prompt.clone(), 4, 0.0)
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .unwrap();
+    assert!(resp.generated >= 1, "pool-clamped prompt must still generate");
+    assert!(resp.tokens.len() <= 24, "response must fit the pool's per-sequence capacity");
+    let kept = resp.tokens.len() - resp.generated;
+    assert_eq!(&resp.tokens[..kept], &prompt[prompt.len() - kept..], "keeps the prompt tail");
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 1);
+}
+
+#[test]
 fn interleaving_requests_do_not_corrupt_each_other() {
     // Two identical prompts submitted with other traffic in between must
     // produce identical greedy outputs (KV caches are isolated).
-    let server = Server::start(model(4), ServerConfig { max_batch: 3, seed: 0 });
+    let server = Server::start(model(4), ServerConfig { max_batch: 3, seed: 0, ..Default::default() });
     let rx1 = server.submit(vec![7, 7, 7], 6, 0.0);
     let _noise: Vec<_> = (0..5).map(|i| server.submit(vec![i as u32 + 1], 4, 0.0)).collect();
     let rx2 = server.submit(vec![7, 7, 7], 6, 0.0);

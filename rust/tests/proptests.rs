@@ -732,3 +732,89 @@ fn prop_layer_policy_display_parse_roundtrip() {
         },
     );
 }
+
+// ------------------------------------------------------------- paged KV cache
+
+#[test]
+fn prop_paged_decode_bit_identical_to_contiguous() {
+    // Random model shapes, random ragged per-lane histories (lengths that
+    // straddle block boundaries, block sizes down to 1): batched decode
+    // through the paged pool must produce bit-identical logits to the
+    // contiguous per-sequence caches at every step.
+    use aqlm::nn::config::ModelConfig;
+    use aqlm::nn::kvcache::{LayerKvCache, PagedSeqKv};
+    use aqlm::nn::model::Model;
+    check_no_shrink(
+        "paged-vs-contig",
+        &cfg(16),
+        |rng: &mut Rng| {
+            let n_layers = 1 + rng.below(2);
+            let n_kv_heads = [1usize, 2][rng.below(2)];
+            let block_size = 1 + rng.below(4);
+            let n_lanes = 1 + rng.below(3);
+            let lens: Vec<usize> = (0..n_lanes).map(|_| 1 + rng.below(10)).collect();
+            let seed = rng.next_u64();
+            (n_layers, n_kv_heads, block_size, lens, seed)
+        },
+        |(n_layers, n_kv_heads, block_size, lens, seed)| {
+            let mut mc = ModelConfig::nano();
+            mc.d_model = 8;
+            mc.n_heads = 2;
+            mc.n_kv_heads = *n_kv_heads;
+            mc.d_ff = 12;
+            mc.vocab_size = 24;
+            mc.max_seq = 16;
+            mc.n_layers = *n_layers;
+            let mut rng = Rng::seed_from_u64(*seed);
+            let mut model = Model::init(&mc, &mut rng);
+            model.warm_decode();
+            let n = lens.len();
+            let max_len = *lens.iter().max().unwrap();
+            let tokens: Vec<Vec<u32>> = lens
+                .iter()
+                .map(|&l| (0..l).map(|_| rng.below(24) as u32).collect())
+                .collect();
+            let mut contig: Vec<Vec<LayerKvCache>> = (0..n).map(|_| model.new_kv_caches()).collect();
+            let n_blocks = n * mc.n_layers * max_len.div_ceil(*block_size);
+            let mut pool = model.new_kv_pool(*block_size, n_blocks);
+            let mut paged: Vec<PagedSeqKv> = (0..n).map(|_| model.new_paged_kv()).collect();
+            let mut scratch_a = Vec::new();
+            let mut scratch_b = Vec::new();
+            for t in 0..max_len {
+                let lanes: Vec<usize> = (0..n).filter(|&b| t < lens[b]).collect();
+                let toks: Vec<u32> = lanes.iter().map(|&b| tokens[b][t]).collect();
+                let poss: Vec<usize> = lanes.iter().map(|_| t).collect();
+                let mut kv_refs: Vec<&mut Vec<LayerKvCache>> = Vec::new();
+                let mut li = 0;
+                for (b, kv) in contig.iter_mut().enumerate() {
+                    if li < lanes.len() && lanes[li] == b {
+                        kv_refs.push(kv);
+                        li += 1;
+                    }
+                }
+                let mut pg_refs: Vec<&mut PagedSeqKv> = Vec::new();
+                let mut pi = 0;
+                for (b, pg) in paged.iter_mut().enumerate() {
+                    if pi < lanes.len() && lanes[pi] == b {
+                        pg_refs.push(pg);
+                        pi += 1;
+                    }
+                }
+                let la = model.decode_batch(&toks, &poss, &mut kv_refs, &mut scratch_a);
+                let lb =
+                    model.decode_batch_paged(&toks, &poss, &mut pool, &mut pg_refs, &mut scratch_b);
+                for (lane, (x, y)) in la.iter().zip(&lb).enumerate() {
+                    for (a, b) in x.iter().zip(y) {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "paged logits diverged at step {t} lane {lane} \
+                                 (bs={block_size}, layers={n_layers}, lens={lens:?})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

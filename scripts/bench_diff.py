@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_generation.json files produced by
+`cargo bench --bench generation_speed` (stdlib only — CI has no extra
+Python packages).
+
+Usage:
+    python3 scripts/bench_diff.py PREVIOUS.json CURRENT.json
+
+Runs are keyed by (max_batch, workers). For each key present in both
+files the script prints tok/s and queue/compute p50/p95/p99 deltas;
+keys only in one file are listed as added/removed. Exit code is always
+0 — the diff is informational trend tracking, not a gate (wall-clock
+numbers on shared CI runners are too noisy to fail a build on).
+"""
+
+import json
+import sys
+
+
+def key(run):
+    return (int(run.get("max_batch", 0)), int(run.get("workers", 0)))
+
+
+METRICS = [
+    ("tok_s", "tok/s", 1.0),
+    ("queue_p50_s", "queue p50 (ms)", 1e3),
+    ("queue_p95_s", "queue p95 (ms)", 1e3),
+    ("queue_p99_s", "queue p99 (ms)", 1e3),
+    ("compute_p50_s", "compute p50 (ms)", 1e3),
+    ("compute_p95_s", "compute p95 (ms)", 1e3),
+    ("compute_p99_s", "compute p99 (ms)", 1e3),
+]
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {key(r): r for r in doc.get("runs", [])}
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    try:
+        prev = load(argv[1])
+    except OSError as e:
+        # No previous run cached (first build on a branch) — nothing to diff.
+        print(f"no previous benchmark to diff against ({e}); skipping")
+        return 0
+    cur = load(argv[2])
+
+    for k in sorted(set(prev) | set(cur)):
+        tag = f"max_batch={k[0]} workers={k[1]}"
+        if k not in prev:
+            print(f"[added]   {tag}: tok/s {cur[k].get('tok_s', 0.0):.1f}")
+            continue
+        if k not in cur:
+            print(f"[removed] {tag}")
+            continue
+        parts = []
+        for field, label, scale in METRICS:
+            old = prev[k].get(field)
+            new = cur[k].get(field)
+            if old is None or new is None:
+                continue
+            delta = (new - old) / old * 100.0 if old else float("inf")
+            parts.append(f"{label} {old * scale:.2f} -> {new * scale:.2f} ({delta:+.1f}%)")
+        print(f"{tag}")
+        for p in parts:
+            print(f"    {p}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

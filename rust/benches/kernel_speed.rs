@@ -1,8 +1,10 @@
 //! `cargo bench --bench kernel_speed` — Table 5 (layer matvec latency,
 //! f32 GEMV vs AQLM decode/LUT kernels on the paper's gate_proj shapes),
 //! Table 5b (batch-amortization sweep: n sequential matvec vs one matmat,
-//! n ∈ {1,4,8,16}), plus a microkernel sweep over code widths used by the
-//! §Perf log.
+//! n ∈ {1,4,8,16}), Table 5c (the machine-readable microbench written to
+//! `BENCH_kernels.json` — per-kernel ns/op and bytes-read, archived and
+//! diffed by CI via `scripts/bench_diff.py`), plus a microkernel sweep
+//! over code widths used by the §Perf log.
 
 use aqlm::bench::{kernels, Profile, Workspace};
 use aqlm::kernels::format::AqlmShape;
@@ -38,6 +40,28 @@ fn main() {
         }
         Err(e) => {
             eprintln!("t5b failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // Machine-readable kernel microbench for CI trend tracking.
+    match kernels::t5c_kernel_json(&mut ws) {
+        Ok((tables, json)) => {
+            for t in tables {
+                println!("{}", t.to_markdown());
+                t.save(&ws.results_dir(), "t5c_kernel_json").ok();
+            }
+            let path = std::path::Path::new("BENCH_kernels.json");
+            match json.to_file(path) {
+                Ok(()) => println!("wrote {}", path.display()),
+                Err(e) => {
+                    eprintln!("failed to write BENCH_kernels.json: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("t5c failed: {e:#}");
             std::process::exit(1);
         }
     }

@@ -135,6 +135,134 @@ pub fn t5b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// Random packed SpQR weight for kernel benches: uniform base codes,
+/// constant per-group metadata, ~`outlier_frac` outliers on an ascending
+/// stride (layout-realistic, values irrelevant to timing).
+fn synthetic_spqr(
+    d_out: usize,
+    d_in: usize,
+    group: usize,
+    bits: usize,
+    outlier_frac: f64,
+    rng: &mut Rng,
+) -> crate::kernels::format::PackedSpqr {
+    let n_groups = d_in.div_ceil(group);
+    let codes: Vec<u16> =
+        (0..d_out * d_in).map(|_| rng.below(1 << bits) as u16).collect();
+    let scales = vec![0.02f32; d_out * n_groups];
+    let zeros = vec![(1 << (bits - 1)) as f32; d_out * n_groups];
+    let stride = (1.0 / outlier_frac.max(1e-9)).round() as usize;
+    let outliers: Vec<(usize, f32)> = (0..d_out * d_in)
+        .step_by(stride.max(1))
+        .map(|flat| (flat, rng.normal_f32(0.0, 0.5)))
+        .collect();
+    crate::kernels::format::PackedSpqr::from_parts(
+        d_out, d_in, group, bits, &codes, scales, zeros, &outliers,
+    )
+    .expect("synthetic spqr is well-formed")
+}
+
+/// Table 5c: machine-readable kernel microbenchmark. Besides the table this
+/// returns the JSON payload written to `BENCH_kernels.json` — per-kernel
+/// ns/op and bytes-read for matvec/matmat across methods and shapes — which
+/// CI archives and diffs against the previous run
+/// (`scripts/bench_diff.py`). `bytes_read` is the packed operand footprint
+/// one kernel invocation streams (weight bytes; batched kernels read it
+/// once for all `n` lanes), so ns/op regressions can be read against a
+/// bandwidth floor.
+pub fn t5c_kernel_json(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)> {
+    let mut t = Table::new(
+        "Table 5c: kernel microbench — ns/op and packed bytes per call",
+        &["Kernel", "Method", "Shape", "n", "ns/op", "bytes read"],
+    );
+    let shapes: &[(usize, usize)] =
+        if ws.profile.fast { &[(2048, 1024)] } else { &[(4096, 4096), (11008, 4096)] };
+    let iters = if ws.profile.fast { 5 } else { 11 };
+    let batch = 8usize;
+    let mut rng = Rng::seed_from_u64(53);
+    let mut runs = Json::arr();
+    let mut record = |t: &mut Table,
+                      runs: &mut Json,
+                      kernel: &str,
+                      method: &str,
+                      d_out: usize,
+                      d_in: usize,
+                      n: usize,
+                      seconds: f64,
+                      bytes: usize| {
+        let ns = seconds * 1e9;
+        t.row(vec![
+            kernel.to_string(),
+            method.to_string(),
+            format!("{d_out}x{d_in}"),
+            format!("{n}"),
+            format!("{ns:.0}"),
+            crate::util::human_bytes(bytes as u64),
+        ]);
+        let mut run = Json::obj();
+        run.set("kernel", Json::Str(kernel.to_string()))
+            .set("method", Json::Str(method.to_string()))
+            .set("d_out", Json::Num(d_out as f64))
+            .set("d_in", Json::Num(d_in as f64))
+            .set("n", Json::Num(n as f64))
+            .set("ns_per_op", Json::Num(ns))
+            .set("bytes_read", Json::Num(bytes as f64));
+        runs.push(run);
+    };
+    for &(d_out, d_in) in shapes {
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let xs: Vec<f32> = (0..batch * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0.0f32; d_out];
+        let mut ys = vec![0.0f32; batch * d_out];
+        // f32 baseline.
+        {
+            let dense = Tensor::randn(&[d_out, d_in], 0.05, &mut rng);
+            let s = bench_adaptive(0.05, iters, || gemv(&dense, black_box(&x), &mut y));
+            record(&mut t, &mut runs, "matvec", "f32", d_out, d_in, 1, s.median, d_out * d_in * 4);
+        }
+        // AQLM: decode and LUT matvec, plus the batched matmat.
+        for shape in [AqlmShape::new(2, 8, 8), AqlmShape::new(1, 16, 8)] {
+            let w = synthetic_weight(d_out, d_in, shape, &mut rng);
+            let packed = PackedAqlm::from_weight(&w);
+            drop(w);
+            let bytes = packed.deployed_bytes();
+            let method = format!("aqlm:{}", shape.name());
+            let s = bench_adaptive(0.05, iters, || packed.matvec_decode(black_box(&x), &mut y));
+            record(&mut t, &mut runs, "matvec_decode", &method, d_out, d_in, 1, s.median, bytes);
+            let mut lut = vec![0.0f32; packed.lut_len()];
+            let s = bench_adaptive(0.05, iters, || {
+                packed.matvec_lut(black_box(&x), &mut lut, &mut y)
+            });
+            record(&mut t, &mut runs, "matvec_lut", &method, d_out, d_in, 1, s.median, bytes);
+            let mut blut = Vec::new();
+            let s = bench_adaptive(0.05, iters, || {
+                packed.matmat_auto(black_box(&xs), batch, &mut blut, &mut ys)
+            });
+            record(&mut t, &mut runs, "matmat", &method, d_out, d_in, batch, s.median, bytes);
+        }
+        // SpQR: fused sparse-outlier matvec and its batched variant.
+        {
+            let q = synthetic_spqr(d_out, d_in, 16, 3, 0.01, &mut rng);
+            let bytes = q.deployed_bytes();
+            let method = "spqr:b=3,g=16";
+            let mut scratch = Vec::new();
+            let s = bench_adaptive(0.05, iters, || {
+                q.matvec(black_box(&x), &mut scratch, &mut y)
+            });
+            record(&mut t, &mut runs, "matvec", method, d_out, d_in, 1, s.median, bytes);
+            let s = bench_adaptive(0.05, iters, || {
+                q.matvec_batch(black_box(&xs), batch, &mut scratch, &mut ys)
+            });
+            record(&mut t, &mut runs, "matmat", method, d_out, d_in, batch, s.median, bytes);
+        }
+    }
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("kernel_speed".to_string()))
+        .set("batch", Json::Num(batch as f64))
+        .set("runs", runs);
+    Ok((vec![t], out))
+}
+
 /// Table 14: end-to-end generation tokens/s through the serving path,
 /// FP32 vs AQLM-quantized models.
 pub fn t14_generation_speed(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {

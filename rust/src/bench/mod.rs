@@ -9,7 +9,7 @@ pub mod kernels;
 
 pub use workspace::{Profile, Workspace};
 
-/// Run one experiment by id ("t1".."t16", sweeps "t5b"/"t14b"/"t14c",
+/// Run one experiment by id ("t1".."t16", sweeps "t5b"/"t5c"/"t14b"/"t14c",
 /// "f1", "f4", "f6", "f7", "f8" — the heterogeneous-policy Pareto sweep —
 /// plus "f9", automatic bit allocation vs the hand-written policies).
 /// Results are printed, and saved under `results/`.
@@ -21,6 +21,7 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
         "t4" => tables::t4_e2e_2bit(ws)?,
         "t5" => kernels::t5_matvec_speed(ws)?,
         "t5b" => kernels::t5b_batch_sweep(ws)?,
+        "t5c" => kernels::t5c_kernel_json(ws)?.0,
         "t6" => tables::t6_e2e_3bit(ws)?,
         "t7" => tables::t7_ft_ablation(ws)?,
         "t8" => tables::t8_calib_sweep(ws)?,
@@ -52,8 +53,8 @@ pub fn run(id: &str, ws: &mut Workspace) -> anyhow::Result<()> {
 
 /// All experiment ids in paper order.
 pub const ALL_IDS: &[&str] = &[
-    "t1", "t2", "t3", "t4", "t5", "t5b", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13",
-    "t14", "t14b", "t14c", "t15", "t16", "f1", "f4", "f6", "f7", "f8", "f9",
+    "t1", "t2", "t3", "t4", "t5", "t5b", "t5c", "t6", "t7", "t8", "t9", "t10", "t11", "t12",
+    "t13", "t14", "t14b", "t14c", "t15", "t16", "f1", "f4", "f6", "f7", "f8", "f9",
 ];
 
 fn slug(s: &str) -> String {

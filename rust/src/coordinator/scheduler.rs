@@ -32,7 +32,7 @@ use crate::nn::model::Model;
 use crate::nn::sampler;
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -80,6 +80,10 @@ pub struct GenRequest {
     /// sampled. A preempted request restarts, so its stream may repeat
     /// tokens; the response's `tokens` field is always authoritative.
     pub stream: Option<Sender<u32>>,
+    /// Model id to serve this request with (multi-tenant serving); `None`
+    /// routes to the server's default model. Resolved against the model
+    /// registry at admission time, not at enqueue.
+    pub model: Option<String>,
 }
 
 /// A request inside the shared admission queue (a [`GenRequest`] plus the
@@ -154,10 +158,23 @@ impl Ord for QueuedRequest {
 
 /// Priority/deadline-aware admission queue (replaces the old FIFO), shared
 /// by all workers behind the server's mutex.
+///
+/// Cancellation is O(1): a cancelled id is **tombstoned** and its heap
+/// entry is lazily skipped when it reaches the top (the old implementation
+/// rebuilt the whole heap per cancel). Reaped entries are parked for
+/// [`Self::drain_reaped`] so the server can still deliver their cancelled
+/// responses.
 #[derive(Default)]
 pub struct AdmissionQueue {
     heap: BinaryHeap<QueuedRequest>,
     next_seq: u64,
+    /// Ids currently waiting (live, non-tombstoned).
+    ids: HashSet<u64>,
+    /// Cancelled ids whose heap entries have not surfaced yet.
+    tombstones: HashSet<u64>,
+    /// Tombstoned entries already skimmed off the heap top, awaiting
+    /// [`Self::drain_reaped`].
+    reaped: Vec<QueuedRequest>,
 }
 
 impl AdmissionQueue {
@@ -170,6 +187,7 @@ impl AdmissionQueue {
     pub fn push_new(&mut self, req: GenRequest, id: u64) {
         let seq_no = self.next_seq;
         self.next_seq += 1;
+        self.ids.insert(id);
         self.heap.push(QueuedRequest {
             req,
             id,
@@ -183,44 +201,70 @@ impl AdmissionQueue {
     /// Re-enqueue a preempted request (keeps its original arrival order and
     /// accumulated queue/compute time).
     pub fn push_back(&mut self, q: QueuedRequest) {
+        self.ids.insert(q.id);
         self.heap.push(q);
     }
 
-    /// Highest-ranked waiting request, if any.
-    pub fn peek(&self) -> Option<&QueuedRequest> {
+    /// Tombstone a waiting request: O(1), the heap is untouched. Returns
+    /// true if `id` was waiting; its entry surfaces later via
+    /// [`Self::drain_reaped`] so the cancelled response can be delivered.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if self.ids.remove(&id) {
+            self.tombstones.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Skim tombstoned entries off the heap top into the reaped pile. After
+    /// this, the top of the heap (if any) is live. Runs in amortized O(log n)
+    /// per cancelled request over the queue's lifetime.
+    fn reap(&mut self) {
+        while let Some(top) = self.heap.peek() {
+            if !self.tombstones.contains(&top.id) {
+                break;
+            }
+            let q = self.heap.pop().expect("peeked entry exists");
+            self.tombstones.remove(&q.id);
+            self.reaped.push(q);
+        }
+    }
+
+    /// Highest-ranked waiting request, if any (never a cancelled one).
+    pub fn peek(&mut self) -> Option<&QueuedRequest> {
+        self.reap();
         self.heap.peek()
     }
 
-    /// Pop the highest-ranked waiting request.
+    /// Pop the highest-ranked waiting request (never a cancelled one).
     pub fn pop(&mut self) -> Option<QueuedRequest> {
-        self.heap.pop()
+        self.reap();
+        let q = self.heap.pop()?;
+        self.ids.remove(&q.id);
+        Some(q)
     }
 
-    /// Number of waiting requests.
+    /// Number of live (non-tombstoned) waiting requests.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() - self.tombstones.len()
     }
 
-    /// True when no requests wait.
+    /// True when no live requests wait (tombstoned entries may still be
+    /// buried in the heap; [`Self::drain_reaped`] flushes them).
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
-    /// Remove a waiting request by id (O(n) heap rebuild — cancellation is
-    /// rare). Returns it so the caller can deliver a cancelled response.
-    pub fn remove(&mut self, id: u64) -> Option<QueuedRequest> {
-        if !self.heap.iter().any(|q| q.id == id) {
-            return None;
-        }
-        let mut out = None;
-        for q in std::mem::take(&mut self.heap).into_vec() {
-            if q.id == id {
-                out = Some(q);
-            } else {
-                self.heap.push(q);
-            }
-        }
-        out
+    /// Take every cancelled entry that is ready to be answered. When no
+    /// live requests remain, this flushes tombstoned entries still buried
+    /// in the heap too, so a drained queue always has zero pending
+    /// responses — the shutdown path relies on this.
+    pub fn drain_reaped(&mut self) -> Vec<QueuedRequest> {
+        self.reap();
+        // All-live heap after reap; if nothing live remains, every leftover
+        // entry is tombstoned and reap has already emptied the heap.
+        std::mem::take(&mut self.reaped)
     }
 }
 
@@ -280,6 +324,9 @@ struct ActiveSeq {
     temperature: f32,
     respond: Sender<GenResponse>,
     stream: Option<Sender<u32>>,
+    /// Model id this sequence is served with, preserved across preemption
+    /// so a requeued request keeps routing to the same model.
+    model: Option<String>,
     /// Original (un-windowed) prompt, kept for preemption requeue.
     original_prompt: Vec<u32>,
     /// Served prompt window.
@@ -452,6 +499,7 @@ impl WorkerScheduler {
             temperature: q.req.temperature,
             respond: q.req.respond,
             stream: q.req.stream,
+            model: q.req.model,
             original_prompt: q.req.prompt,
             tokens: prompt.clone(),
             prompt,
@@ -481,6 +529,7 @@ impl WorkerScheduler {
                 deadline: seq.deadline,
                 respond: seq.respond,
                 stream: seq.stream,
+                model: seq.model,
             },
             id: seq.id,
             seq_no: seq.seq_no,
@@ -699,6 +748,7 @@ mod tests {
             deadline: deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
             respond: tx,
             stream: None,
+            model: None,
         }
     }
 
@@ -724,15 +774,48 @@ mod tests {
     }
 
     #[test]
-    fn queue_remove_by_id() {
+    fn cancel_tombstones_without_touching_live_order() {
         let mut q = AdmissionQueue::new();
         q.push_new(req(0, None), 1);
         q.push_new(req(0, None), 2);
         q.push_new(req(0, None), 3);
-        assert!(q.remove(2).is_some());
-        assert!(q.remove(2).is_none());
+        assert!(q.cancel(2), "waiting request must cancel");
+        assert!(!q.cancel(2), "second cancel of the same id is a no-op");
+        assert!(!q.cancel(99), "unknown id is not waiting");
+        assert_eq!(q.len(), 2);
+        // Pop never yields the cancelled request, and the survivors keep
+        // their heap order.
         let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
         assert_eq!(order, vec![1, 3]);
+        // The tombstoned entry surfaces exactly once for response delivery.
+        let reaped: Vec<u64> = q.drain_reaped().iter().map(|r| r.id).collect();
+        assert_eq!(reaped, vec![2]);
+        assert!(q.drain_reaped().is_empty());
+    }
+
+    #[test]
+    fn cancel_then_pop_across_priorities_preserves_order() {
+        // Tombstones at every rank: pops must skip all of them lazily while
+        // preserving (priority ↓, deadline ↑, arrival ↑) among the living.
+        let mut q = AdmissionQueue::new();
+        q.push_new(req(0, None), 1);
+        q.push_new(req(2, Some(500)), 2);
+        q.push_new(req(2, Some(50)), 3);
+        q.push_new(req(1, None), 4);
+        q.push_new(req(1, None), 5);
+        assert!(q.cancel(3)); // head of the queue
+        assert!(q.cancel(4)); // middle rank
+        assert!(q.cancel(1)); // tail
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek().unwrap().id, 2, "peek must skip the cancelled head");
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 5]);
+        assert!(q.is_empty());
+        // All three cancelled entries are recoverable for response delivery
+        // (the buried ones are flushed once no live requests remain).
+        let mut reaped: Vec<u64> = q.drain_reaped().iter().map(|r| r.id).collect();
+        reaped.sort_unstable();
+        assert_eq!(reaped, vec![1, 3, 4]);
     }
 
     #[test]
@@ -809,6 +892,7 @@ mod tests {
                 deadline: None,
                 respond: tx,
                 stream: None,
+                model: None,
             };
             queue.push_new(req, i as u64);
         }

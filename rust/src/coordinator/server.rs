@@ -38,9 +38,11 @@
 pub use super::scheduler::{GenRequest, GenResponse};
 
 use super::scheduler::{
-    percentile, prompt_window, AdmissionQueue, Completion, SchedConfig, WorkerScheduler,
+    percentile, prompt_window, AdmissionQueue, Completion, QueuedRequest, SchedConfig,
+    WorkerScheduler,
 };
 use crate::nn::model::Model;
+use crate::runtime::store::{ModelRegistry, StoreStats};
 use crate::util::rng::Rng;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
@@ -85,13 +87,18 @@ impl Default for ServerConfig {
 }
 
 /// Optional per-request scheduling knobs for [`Server::submit_opts`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct SubmitOpts {
     /// Admission priority — higher is served first (default 0).
     pub priority: u8,
     /// Optional deadline: among equal priorities, earlier deadlines are
     /// admitted first (requests without a deadline go last).
     pub deadline: Option<Instant>,
+    /// Model id to serve this request with (multi-tenant serving via
+    /// [`Server::start_registry`]); `None` uses the server's default model.
+    /// Ignored by single-model servers. Unknown ids resolve at admission
+    /// with an empty, `cancelled` response.
+    pub model: Option<String>,
 }
 
 /// Aggregate statistics, returned on shutdown.
@@ -118,6 +125,10 @@ pub struct ServerStats {
     pub queue_samples_s: Vec<f64>,
     /// Per-request compute seconds of completed requests, ascending.
     pub compute_samples_s: Vec<f64>,
+    /// Model-store counters (hits / misses / evictions / residency / per-
+    /// model request counts) for registry-backed servers; `None` for
+    /// single-model servers.
+    pub store: Option<StoreStats>,
 }
 
 impl ServerStats {
@@ -186,78 +197,254 @@ impl WorkerStats {
     }
 }
 
+/// Where workers get the model for a request.
+enum Backend {
+    /// One warmed model shared by every worker (the classic server).
+    Single(Arc<Model>),
+    /// Multi-tenant: models resolve through a byte-budgeted LRU
+    /// [`ModelRegistry`]; requests route by their `model` field, `None`
+    /// meaning `default_model`.
+    Registry {
+        registry: Arc<ModelRegistry>,
+        default_model: String,
+    },
+}
+
+/// A worker's current serving context: the model it decodes with and the
+/// scheduler (KV pool geometry is model-dependent) bound to it. Registry
+/// workers drop and rebuild this when switching models; dropping it
+/// releases the `Arc<Model>`, unpinning the model for eviction.
+struct ModelCtx {
+    /// Registry id this context serves (empty in single-model mode).
+    key: String,
+    model: Arc<Model>,
+    sched: WorkerScheduler,
+}
+
+/// Admission verdict for the queue head (computed under the peek borrow,
+/// acted on after it ends).
+enum Decision {
+    /// Queue is empty.
+    Empty,
+    /// Head matches the current model context and fits: pop and admit.
+    AdmitCur,
+    /// Head cannot be admitted now (lane budget, KV pressure, or it wants
+    /// a different model while this worker still has active lanes —
+    /// head-of-line blocking by design: switching would strand the active
+    /// sequences' pool).
+    Hold,
+    /// Head wants a different model and this worker is idle: switch to it.
+    Switch(String),
+}
+
+/// Build a worker scheduler for `model`: pool geometry (blocks, window,
+/// decode cap) derives from the model's layer count and context length, so
+/// every model gets the same sizing rules the single-model server used.
+fn sched_for(model: &Model, cfg: &ServerConfig) -> WorkerScheduler {
+    let n_layers = model.cfg.n_layers.max(1);
+    let max_seq = model.cfg.max_seq;
+    let bs = cfg.kv_block_size.max(1);
+    // Default pool: max_batch full-context sequences (the contiguous
+    // footprint). Floor: one sequence must fit 2 positions per layer
+    // (a 1-token window plus 1 generated).
+    let per_seq_blocks = n_layers * max_seq.div_ceil(bs);
+    let min_blocks = n_layers * 2usize.div_ceil(bs);
+    let n_blocks = cfg
+        .kv_pool_blocks
+        .unwrap_or(cfg.max_batch.max(1) * per_seq_blocks)
+        .max(min_blocks);
+    let pool_seq_positions = (n_blocks / n_layers) * bs;
+    let sched_cfg = SchedConfig {
+        max_batch: cfg.max_batch.max(1),
+        prefill_chunk: cfg.prefill_chunk.max(1),
+        window: prompt_window(max_seq, pool_seq_positions),
+        decode_cap: max_seq.min(pool_seq_positions),
+    };
+    let pool = model.new_kv_pool(bs, n_blocks);
+    WorkerScheduler::new(sched_cfg, pool, n_layers)
+}
+
 /// Handle to a running server.
 pub struct Server {
     shared: Arc<(Mutex<SharedState>, Condvar)>,
     workers: Vec<JoinHandle<WorkerStats>>,
     next_id: AtomicU64,
     started: Instant,
+    backend: Arc<Backend>,
+}
+
+/// Deliver the cancelled response for a request that never reached a lane
+/// (tombstoned in the queue, or its model failed to resolve).
+fn respond_cancelled(q: QueuedRequest) {
+    let queue_s = q.queue_accum + q.enqueued.elapsed().as_secs_f64();
+    let _ = q.req.respond.send(GenResponse {
+        tokens: Vec::new(),
+        queue_s,
+        compute_s: q.compute_accum,
+        latency_s: queue_s + q.compute_accum,
+        generated: 0,
+        cancelled: true,
+    });
 }
 
 fn worker_loop(
-    model: &Model,
+    backend: &Backend,
+    cfg: &ServerConfig,
     shared: &(Mutex<SharedState>, Condvar),
-    mut sched: WorkerScheduler,
     seed: u64,
 ) -> WorkerStats {
     let (lock, cvar) = shared;
     let mut rng = Rng::seed_from_u64(seed);
     let mut scratch: Vec<f32> = Vec::new();
     let mut ws = WorkerStats::default();
+    // Single-model mode binds its context once; registry workers bind on
+    // first admission and rebind when the queue head routes elsewhere.
+    let mut ctx: Option<ModelCtx> = match backend {
+        Backend::Single(model) => Some(ModelCtx {
+            key: String::new(),
+            model: Arc::clone(model),
+            sched: sched_for(model, cfg),
+        }),
+        Backend::Registry { .. } => None,
+    };
     loop {
         // ---- admission under the shared lock (no model compute here) ----
         {
             let mut st = lock.lock().expect("server state poisoned");
             loop {
-                // Apply cancellations: queued requests answer immediately;
-                // this worker's active ones are flagged and retire with a
-                // partial response on the next step.
+                // Apply cancellations: queued requests are tombstoned in
+                // O(1) and answered below once reaped; this worker's active
+                // ones are flagged and retire with a partial response on
+                // the next step.
                 let pending: Vec<u64> = st.cancelled.iter().copied().collect();
                 for id in pending {
-                    if let Some(q) = st.queue.remove(id) {
+                    if st.queue.cancel(id) {
                         st.cancelled.remove(&id);
-                        st.live.remove(&id);
-                        ws.cancelled += 1;
-                        let queue_s = q.queue_accum + q.enqueued.elapsed().as_secs_f64();
-                        let _ = q.req.respond.send(GenResponse {
-                            tokens: Vec::new(),
-                            queue_s,
-                            compute_s: q.compute_accum,
-                            latency_s: queue_s + q.compute_accum,
-                            generated: 0,
-                            cancelled: true,
-                        });
-                    } else if sched.cancel(id) {
+                    } else if ctx.as_mut().is_some_and(|c| c.sched.cancel(id)) {
                         st.cancelled.remove(&id);
                     }
+                }
+                // Answer tombstoned requests that have surfaced (when the
+                // queue is logically empty this includes buried ones, so
+                // shutdown never strands a cancelled client).
+                for q in st.queue.drain_reaped() {
+                    st.live.remove(&q.id);
+                    st.cancelled.remove(&q.id);
+                    ws.cancelled += 1;
+                    respond_cancelled(q);
                 }
                 // Admit strictly in queue order while the head fits this
-                // worker's lane budget and KV pool.
-                while sched.active_len() < sched.cfg.max_batch {
-                    match st.queue.peek() {
-                        Some(q) if sched.can_admit(q) => {
+                // worker's lane budget, KV pool, and model binding.
+                loop {
+                    if ctx
+                        .as_ref()
+                        .is_some_and(|c| c.sched.active_len() >= c.sched.cfg.max_batch)
+                    {
+                        break;
+                    }
+                    let decision = match st.queue.peek() {
+                        None => Decision::Empty,
+                        Some(q) => match (backend, &ctx) {
+                            // Single-model servers ignore the request's
+                            // model field.
+                            (Backend::Single(_), Some(c)) => {
+                                if c.sched.can_admit(q) {
+                                    Decision::AdmitCur
+                                } else {
+                                    Decision::Hold
+                                }
+                            }
+                            (Backend::Single(_), None) => {
+                                unreachable!("single-model ctx is bound at spawn")
+                            }
+                            (Backend::Registry { default_model, .. }, cur) => {
+                                let want =
+                                    q.req.model.as_deref().unwrap_or(default_model.as_str());
+                                match cur {
+                                    Some(c) if c.key == want => {
+                                        if c.sched.can_admit(q) {
+                                            Decision::AdmitCur
+                                        } else {
+                                            Decision::Hold
+                                        }
+                                    }
+                                    Some(c) if c.sched.has_work() => Decision::Hold,
+                                    _ => Decision::Switch(want.to_string()),
+                                }
+                            }
+                        },
+                    };
+                    match decision {
+                        Decision::Empty | Decision::Hold => break,
+                        Decision::AdmitCur => {
                             let q = st.queue.pop().expect("peeked");
-                            if let Some(c) = sched.admit(q) {
-                                st.live.remove(&c.id);
-                                st.cancelled.remove(&c.id);
-                                ws.record(&c);
+                            let c = ctx.as_mut().expect("admit requires a bound ctx");
+                            if let Some(done) = c.sched.admit(q) {
+                                st.live.remove(&done.id);
+                                st.cancelled.remove(&done.id);
+                                ws.record(&done);
                             }
                         }
-                        _ => break,
+                        Decision::Switch(want) => {
+                            let q = st.queue.pop().expect("peeked");
+                            let Backend::Registry { registry, .. } = backend else {
+                                unreachable!("Switch only arises in registry mode")
+                            };
+                            // Drop the old context first: releasing its
+                            // Arc<Model> unpins that model so the acquire
+                            // below may evict it under byte pressure.
+                            // The registry IO runs with the server lock
+                            // held (lock order is always server → registry)
+                            // — a deliberate simplicity trade-off: peer
+                            // workers stall during a model load instead of
+                            // racing to load it themselves.
+                            ctx = None;
+                            match registry.acquire(&want) {
+                                Ok(model) => {
+                                    let sched = sched_for(&model, cfg);
+                                    ctx = Some(ModelCtx { key: want, model, sched });
+                                    let c = ctx.as_mut().expect("just bound");
+                                    // A fresh pool always fits one windowed
+                                    // request, so admit directly.
+                                    if let Some(done) = c.sched.admit(q) {
+                                        st.live.remove(&done.id);
+                                        st.cancelled.remove(&done.id);
+                                        ws.record(&done);
+                                    }
+                                }
+                                Err(_) => {
+                                    // Unknown/unloadable model: the request
+                                    // resolves as cancelled rather than
+                                    // wedging the queue head forever.
+                                    st.live.remove(&q.id);
+                                    st.cancelled.remove(&q.id);
+                                    ws.cancelled += 1;
+                                    respond_cancelled(q);
+                                }
+                            }
+                        }
                     }
                 }
-                ws.peak_active = ws.peak_active.max(sched.active_len());
-                if sched.has_work() {
+                let active = ctx.as_ref().map_or(0, |c| c.sched.active_len());
+                ws.peak_active = ws.peak_active.max(active);
+                if active > 0 {
                     break;
                 }
                 if st.shutdown && st.queue.is_empty() {
                     return ws;
                 }
+                // Idle registry workers release their model handle so the
+                // registry can evict it; single-model workers keep theirs
+                // (rebuilding the KV pool would buy nothing).
+                if matches!(backend, Backend::Registry { .. }) {
+                    ctx = None;
+                }
                 st = cvar.wait(st).expect("server state poisoned");
             }
         }
         // ---- one scheduling iteration outside the lock ----
-        let (completions, requeues) = sched.step(model, &mut rng, &mut scratch);
+        let c = ctx.as_mut().expect("active lanes imply a bound ctx");
+        let (completions, requeues) = c.sched.step(&c.model, &mut rng, &mut scratch);
         if !completions.is_empty() || !requeues.is_empty() {
             let mut st = lock.lock().expect("server state poisoned");
             for c in &completions {
@@ -279,28 +466,30 @@ impl Server {
     /// Warm `model`'s decode caches and spawn `cfg.workers` worker threads
     /// sharing it behind an `Arc`, each with a private paged KV pool.
     pub fn start(mut model: Model, cfg: ServerConfig) -> Server {
-        let started = Instant::now();
         model.warm_decode();
-        let n_layers = model.cfg.n_layers.max(1);
-        let max_seq = model.cfg.max_seq;
-        let bs = cfg.kv_block_size.max(1);
-        // Default pool: max_batch full-context sequences (the contiguous
-        // footprint). Floor: one sequence must fit 2 positions per layer
-        // (a 1-token window plus 1 generated).
-        let per_seq_blocks = n_layers * max_seq.div_ceil(bs);
-        let min_blocks = n_layers * 2usize.div_ceil(bs);
-        let n_blocks = cfg
-            .kv_pool_blocks
-            .unwrap_or(cfg.max_batch.max(1) * per_seq_blocks)
-            .max(min_blocks);
-        let pool_seq_positions = (n_blocks / n_layers) * bs;
-        let sched_cfg = SchedConfig {
-            max_batch: cfg.max_batch.max(1),
-            prefill_chunk: cfg.prefill_chunk.max(1),
-            window: prompt_window(max_seq, pool_seq_positions),
-            decode_cap: max_seq.min(pool_seq_positions),
-        };
-        let model = Arc::new(model);
+        Server::spawn(Backend::Single(Arc::new(model)), cfg)
+    }
+
+    /// Spawn a multi-tenant server over a model registry: requests route by
+    /// their [`SubmitOpts::model`] id (`None` → `default_model`), workers
+    /// bind to one model at a time and rebind as the queue head demands,
+    /// and the registry's byte budget governs which warm models stay
+    /// resident. [`ServerStats::store`] reports hit/miss/eviction counters
+    /// on shutdown.
+    pub fn start_registry(
+        registry: Arc<ModelRegistry>,
+        default_model: &str,
+        cfg: ServerConfig,
+    ) -> Server {
+        Server::spawn(
+            Backend::Registry { registry, default_model: default_model.to_string() },
+            cfg,
+        )
+    }
+
+    fn spawn(backend: Backend, cfg: ServerConfig) -> Server {
+        let started = Instant::now();
+        let backend = Arc::new(backend);
         let shared = Arc::new((
             Mutex::new(SharedState {
                 queue: AdmissionQueue::new(),
@@ -312,15 +501,13 @@ impl Server {
         ));
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
-                let model = Arc::clone(&model);
+                let backend = Arc::clone(&backend);
                 let shared = Arc::clone(&shared);
-                let pool = model.new_kv_pool(bs, n_blocks);
-                let sched = WorkerScheduler::new(sched_cfg, pool, n_layers);
                 let seed = cfg.seed.wrapping_add(w as u64);
-                std::thread::spawn(move || worker_loop(&model, &shared, sched, seed))
+                std::thread::spawn(move || worker_loop(&backend, &cfg, &shared, seed))
             })
             .collect();
-        Server { shared, workers, next_id: AtomicU64::new(0), started }
+        Server { shared, workers, next_id: AtomicU64::new(0), started, backend }
     }
 
     fn enqueue(
@@ -339,6 +526,7 @@ impl Server {
             temperature,
             priority: opts.priority,
             deadline: opts.deadline,
+            model: opts.model,
             respond,
             stream,
         };
@@ -422,6 +610,9 @@ impl Server {
         stats.queue_samples_s.sort_by(f64::total_cmp);
         stats.compute_samples_s.sort_by(f64::total_cmp);
         stats.wall_s = self.started.elapsed().as_secs_f64();
+        if let Backend::Registry { registry, .. } = &*self.backend {
+            stats.store = Some(registry.stats());
+        }
         stats
     }
 }
@@ -684,5 +875,93 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.requests, 6);
         assert_eq!(stats.tokens_generated, 36);
+    }
+
+    /// Save a fresh nano model under `tag`, returning (model, path).
+    fn saved_server_model(tag: &str, seed: u64) -> (Model, std::path::PathBuf) {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 24;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        cfg.n_layers = 1;
+        let m = Model::init(&cfg, &mut Rng::seed_from_u64(seed));
+        let path = std::env::temp_dir().join(format!("aqlm_test_server_{tag}.bin"));
+        m.save(&path).unwrap();
+        (m, path)
+    }
+
+    #[test]
+    fn registry_server_matches_single_model_server() {
+        let (mut model, path) = saved_server_model("reg_eq", 7);
+        let offline = model.generate(&[3, 7], 5, 0.0, &mut Rng::seed_from_u64(0));
+        let registry = Arc::new(ModelRegistry::new(0));
+        registry.register("m", &path);
+        let server = Server::start_registry(Arc::clone(&registry), "m", ServerConfig::default());
+        // Default-routed (model: None) request must match offline greedy.
+        let resp = server.submit(vec![3, 7], 5, 0.0).recv().unwrap();
+        assert_eq!(resp.tokens, offline);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        let store = stats.store.expect("registry servers report store stats");
+        assert_eq!(store.loads, 1);
+        assert_eq!(store.per_model, vec![("m".to_string(), 1)]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn multi_model_routing_is_token_identical_per_model() {
+        let (mut ma, pa) = saved_server_model("route_a", 11);
+        let (mut mb, pb) = saved_server_model("route_b", 23);
+        let want_a = ma.generate(&[4, 9], 5, 0.0, &mut Rng::seed_from_u64(0));
+        let want_b = mb.generate(&[4, 9], 5, 0.0, &mut Rng::seed_from_u64(0));
+        assert_ne!(want_a, want_b, "distinct seeds should give distinct models");
+        let registry = Arc::new(ModelRegistry::new(0));
+        registry.register("a", &pa);
+        registry.register("b", &pb);
+        let cfg = ServerConfig { workers: 1, ..Default::default() };
+        let server = Server::start_registry(Arc::clone(&registry), "a", cfg);
+        let opts_b = SubmitOpts { model: Some("b".to_string()), ..Default::default() };
+        // Interleave: a, b, a, b — the worker must rebind between models.
+        let mut got = Vec::new();
+        for i in 0..4 {
+            let opts = if i % 2 == 0 { SubmitOpts::default() } else { opts_b.clone() };
+            let (_, rx) = server.submit_opts(vec![4, 9], 5, 0.0, opts);
+            got.push(rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap());
+        }
+        assert_eq!(got[0].tokens, want_a);
+        assert_eq!(got[1].tokens, want_b);
+        assert_eq!(got[2].tokens, want_a);
+        assert_eq!(got[3].tokens, want_b);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 4);
+        let store = stats.store.expect("store stats");
+        let mut per: Vec<_> = store.per_model.clone();
+        per.sort();
+        assert_eq!(per, vec![("a".to_string(), 2), ("b".to_string(), 2)]);
+        std::fs::remove_file(pa).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn unknown_model_resolves_as_cancelled() {
+        let (_, path) = saved_server_model("unknown", 31);
+        let registry = Arc::new(ModelRegistry::new(0));
+        registry.register("m", &path);
+        let server = Server::start_registry(registry, "m", ServerConfig::default());
+        let opts = SubmitOpts { model: Some("nope".to_string()), ..Default::default() };
+        let (_, rx) = server.submit_opts(vec![2, 3], 5, 0.0, opts);
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(resp.cancelled, "unknown model must answer, not hang");
+        assert_eq!(resp.generated, 0);
+        // A good request afterwards still works.
+        let ok = server.submit(vec![2, 3], 3, 0.0).recv().unwrap();
+        assert!(!ok.cancelled);
+        let stats = server.shutdown();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.requests, 1);
+        std::fs::remove_file(path).ok();
     }
 }

@@ -16,7 +16,11 @@
 //!              per MoE expert)
 //!   eval       perplexity + zero-shot evaluation of a checkpoint
 //!   generate   sample text from a checkpoint
-//!   serve      demo of the continuous-batching generation server
+//!   serve      demo of the continuous-batching generation server;
+//!              `--ckpt <path>` serves one model, `--models name=path,...`
+//!              serves several through the LRU artifact store
+//!              (`--store-budget-mb` caps resident weight bytes; see
+//!              `docs/store.md`)
 //!   table      regenerate one paper table/figure (t1..t16, f1, f4, f6-f9)
 //!   tables     regenerate all of them
 //!   list       list experiment ids
@@ -309,9 +313,9 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use aqlm::coordinator::server::{Server, ServerConfig};
-    let ckpt = PathBuf::from(args.require("ckpt")?);
-    let model = Model::load(&ckpt)?;
+    use aqlm::coordinator::server::{Server, ServerConfig, SubmitOpts};
+    use aqlm::runtime::store::ModelRegistry;
+    use std::sync::Arc;
     let b = bundle(args);
     let cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", 4),
@@ -321,14 +325,48 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         kv_block_size: args.usize_or("kv-block-size", 16),
         kv_pool_blocks: args.get("kv-pool-blocks").and_then(|v| v.parse().ok()),
     };
-    let server = Server::start(model, cfg);
+    // Multi-tenant mode: --models name=path,name2=path2 routes through the
+    // byte-budgeted registry; single-model mode keeps the eager --ckpt path.
+    let mut model_ids: Vec<String> = Vec::new();
+    let server = if let Some(spec) = args.get("models") {
+        let budget_mb = args.usize_or("store-budget-mb", 0);
+        let registry = Arc::new(ModelRegistry::new(budget_mb as u64 * 1024 * 1024));
+        for pair in spec.split(',').filter(|p| !p.is_empty()) {
+            let (name, path) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--models expects name=path pairs, got '{pair}'"))?;
+            registry.register(name, &PathBuf::from(path));
+            model_ids.push(name.to_string());
+        }
+        let default_model = model_ids
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("--models needs at least one name=path pair"))?;
+        eprintln!(
+            "registry: {} models, budget {}",
+            model_ids.len(),
+            if budget_mb == 0 { "unbounded".to_string() } else { format!("{budget_mb} MiB") }
+        );
+        Server::start_registry(registry, &default_model, cfg)
+    } else {
+        let ckpt = PathBuf::from(args.require("ckpt")?);
+        let model = Model::load(&ckpt)?;
+        Server::start(model, cfg)
+    };
     let n = args.usize_or("requests", 8);
     eprintln!("submitting {n} demo requests...");
     let rxs: Vec<_> = (0..n)
         .map(|i| {
             let mut prompt = vec![aqlm::data::tokenizer::BOS];
             prompt.extend(b.tokenizer.encode("the"));
-            server.submit(prompt, 16 + (i % 3) * 8, 0.8)
+            // Registry mode interleaves the demo mix across all models.
+            let model = if model_ids.is_empty() {
+                None
+            } else {
+                Some(model_ids[i % model_ids.len()].clone())
+            };
+            let opts = SubmitOpts { model, ..Default::default() };
+            server.submit_opts(prompt, 16 + (i % 3) * 8, 0.8, opts).1
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
@@ -356,6 +394,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.preemptions,
         stats.per_worker_requests
     );
+    if let Some(store) = &stats.store {
+        println!(
+            "store: {} hits, {} misses, {} loads, {} evictions, {} resident (budget {})",
+            store.hits,
+            store.misses,
+            store.loads,
+            store.evictions,
+            aqlm::util::human_bytes(store.bytes_resident),
+            if store.budget_bytes == 0 {
+                "unbounded".to_string()
+            } else {
+                aqlm::util::human_bytes(store.budget_bytes)
+            }
+        );
+        for (name, reqs) in &store.per_model {
+            println!("  {name:<16} {reqs} requests");
+        }
+    }
     Ok(())
 }
 

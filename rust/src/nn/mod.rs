@@ -15,6 +15,7 @@
 
 pub mod config;
 pub mod linear;
+pub mod section;
 pub mod rope;
 pub mod block;
 pub mod moe;

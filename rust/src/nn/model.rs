@@ -15,12 +15,12 @@ use super::linear::{Linear, LinearGrad};
 use super::loss::cross_entropy;
 use super::moe::MoeLayer;
 use super::rope::Rope;
-use crate::kernels::format::AqlmWeight;
+use super::section;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::Write;
 
 /// A complete model instance.
 #[derive(Clone, Debug)]
@@ -562,13 +562,18 @@ impl Model {
 
     // ------------------------------------------------------------ checkpoint io
 
-    /// Save to a self-describing binary checkpoint.
+    /// Save to a self-describing binary checkpoint (format
+    /// [`section::FORMAT_V2`]): magic, header length, JSON header with a
+    /// **section index** (per-tensor offset / byte length / crc32), then
+    /// the raw tensor sections. The index lets
+    /// [`crate::runtime::store::ArtifactFile`] seek-read any single tensor
+    /// without touching the rest of the file.
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut header = Json::obj();
-        header.set("format", Json::from("aqlm-ckpt-v1"));
+        header.set("format", Json::from(section::FORMAT_V2));
         header.set("config", config_to_json(&self.cfg));
         if let Some(policy) = &self.quant_policy {
             header.set("policy", Json::from(policy.as_str()));
@@ -580,324 +585,212 @@ impl Model {
             }
             header.set("layer_bits", lb);
         }
-        let mut blob: Vec<u8> = Vec::new();
-        let mut tensors = Json::arr();
-        {
-            let mut put_f32 = |name: &str, shape: &[usize], data: &[f32], tensors: &mut Json, blob: &mut Vec<u8>| {
-                let mut t = Json::obj();
-                t.set("name", Json::from(name));
-                t.set("kind", Json::from("dense"));
-                t.set("shape", Json::from(shape.iter().map(|&s| Json::from(s)).collect::<Vec<_>>()));
-                t.set("offset", Json::from(blob.len()));
-                tensors.push(t);
-                for &v in data {
-                    blob.extend_from_slice(&v.to_le_bytes());
+        let mut w = section::SectionWriter::new();
+        w.put_dense("embed", self.embed.shape(), self.embed.data());
+        w.put_dense("ln_f", &[self.ln_f.len()], &self.ln_f);
+        w.put_linear("head", &self.head);
+        for (bi, b) in self.blocks.iter().enumerate() {
+            w.put_dense(&format!("b{bi}.ln1"), &[b.ln1.len()], &b.ln1);
+            w.put_dense(&format!("b{bi}.ln2"), &[b.ln2.len()], &b.ln2);
+            w.put_linear(&format!("b{bi}.wq"), &b.attn.wq);
+            w.put_linear(&format!("b{bi}.wk"), &b.attn.wk);
+            w.put_linear(&format!("b{bi}.wv"), &b.attn.wv);
+            w.put_linear(&format!("b{bi}.wo"), &b.attn.wo);
+            match &b.ffn {
+                Ffn::Dense(m) => {
+                    w.put_linear(&format!("b{bi}.wg"), &m.wg);
+                    w.put_linear(&format!("b{bi}.wu"), &m.wu);
+                    w.put_linear(&format!("b{bi}.wd"), &m.wd);
                 }
-            };
-            let put_aqlm = |name: &str, q: &AqlmWeight, tensors: &mut Json, blob: &mut Vec<u8>| {
-                let mut t = Json::obj();
-                t.set("name", Json::from(name));
-                t.set("kind", Json::from("aqlm"));
-                t.set("d_out", Json::from(q.d_out));
-                t.set("d_in", Json::from(q.d_in));
-                t.set("group", Json::from(q.group));
-                t.set("n_codebooks", Json::from(q.n_codebooks));
-                t.set("code_bits", Json::from(q.code_bits));
-                t.set("offset", Json::from(blob.len()));
-                tensors.push(t);
-                for &c in &q.codes {
-                    blob.extend_from_slice(&c.to_le_bytes());
-                }
-                for cb in &q.codebooks {
-                    for &v in cb.data() {
-                        blob.extend_from_slice(&v.to_le_bytes());
-                    }
-                }
-                for &s in &q.scales {
-                    blob.extend_from_slice(&s.to_le_bytes());
-                }
-            };
-            let put_groupint = |name: &str, q: &crate::quant::groupint::GroupIntWeight, tensors: &mut Json, blob: &mut Vec<u8>| {
-                let mut t = Json::obj();
-                t.set("name", Json::from(name));
-                t.set("kind", Json::from("groupint"));
-                t.set("d_out", Json::from(q.d_out));
-                t.set("d_in", Json::from(q.d_in));
-                t.set("group", Json::from(q.group));
-                t.set("bits", Json::from(q.bits));
-                t.set("offset", Json::from(blob.len()));
-                tensors.push(t);
-                for &c in &q.qcodes {
-                    blob.extend_from_slice(&c.to_le_bytes());
-                }
-                for &v in q.scales.iter().chain(&q.zeros) {
-                    blob.extend_from_slice(&v.to_le_bytes());
-                }
-            };
-            let put_spqr = |name: &str, q: &crate::kernels::format::PackedSpqr, tensors: &mut Json, blob: &mut Vec<u8>| {
-                let mut t = Json::obj();
-                t.set("name", Json::from(name));
-                t.set("kind", Json::from("spqr"));
-                t.set("d_out", Json::from(q.d_out));
-                t.set("d_in", Json::from(q.d_in));
-                t.set("group", Json::from(q.group));
-                t.set("bits", Json::from(q.bits));
-                t.set("n_outliers", Json::from(q.n_outliers()));
-                t.set("offset", Json::from(blob.len()));
-                tensors.push(t);
-                // Blob layout: packed code words (u64), scales (f32),
-                // zeros (f32), CSR row_ptr (u32), col_idx (u32), values (f32).
-                for &w64 in &q.packed_codes {
-                    blob.extend_from_slice(&w64.to_le_bytes());
-                }
-                for &v in q.scales.iter().chain(&q.zeros) {
-                    blob.extend_from_slice(&v.to_le_bytes());
-                }
-                for &p in q.row_ptr.iter().chain(&q.col_idx) {
-                    blob.extend_from_slice(&p.to_le_bytes());
-                }
-                for &v in &q.values {
-                    blob.extend_from_slice(&v.to_le_bytes());
-                }
-            };
-            let put_linear = |name: &str, l: &Linear, tensors: &mut Json, blob: &mut Vec<u8>, put_f32: &mut dyn FnMut(&str, &[usize], &[f32], &mut Json, &mut Vec<u8>)| match l {
-                Linear::Dense(w) => put_f32(name, w.shape(), w.data(), tensors, blob),
-                Linear::Aqlm { q, .. } => put_aqlm(name, q, tensors, blob),
-                Linear::GroupInt { q, .. } => put_groupint(name, q, tensors, blob),
-                Linear::Spqr { q, .. } => put_spqr(name, q, tensors, blob),
-            };
-
-            put_f32("embed", self.embed.shape(), self.embed.data(), &mut tensors, &mut blob);
-            put_f32("ln_f", &[self.ln_f.len()], &self.ln_f, &mut tensors, &mut blob);
-            put_linear("head", &self.head, &mut tensors, &mut blob, &mut put_f32);
-            for (bi, b) in self.blocks.iter().enumerate() {
-                put_f32(&format!("b{bi}.ln1"), &[b.ln1.len()], &b.ln1, &mut tensors, &mut blob);
-                put_f32(&format!("b{bi}.ln2"), &[b.ln2.len()], &b.ln2, &mut tensors, &mut blob);
-                put_linear(&format!("b{bi}.wq"), &b.attn.wq, &mut tensors, &mut blob, &mut put_f32);
-                put_linear(&format!("b{bi}.wk"), &b.attn.wk, &mut tensors, &mut blob, &mut put_f32);
-                put_linear(&format!("b{bi}.wv"), &b.attn.wv, &mut tensors, &mut blob, &mut put_f32);
-                put_linear(&format!("b{bi}.wo"), &b.attn.wo, &mut tensors, &mut blob, &mut put_f32);
-                match &b.ffn {
-                    Ffn::Dense(m) => {
-                        put_linear(&format!("b{bi}.wg"), &m.wg, &mut tensors, &mut blob, &mut put_f32);
-                        put_linear(&format!("b{bi}.wu"), &m.wu, &mut tensors, &mut blob, &mut put_f32);
-                        put_linear(&format!("b{bi}.wd"), &m.wd, &mut tensors, &mut blob, &mut put_f32);
-                    }
-                    Ffn::Moe(moe) => {
-                        put_f32(&format!("b{bi}.gate"), moe.gate.shape(), moe.gate.data(), &mut tensors, &mut blob);
-                        for (ei, e) in moe.experts.iter().enumerate() {
-                            put_linear(&format!("b{bi}.e{ei}.wg"), &e.wg, &mut tensors, &mut blob, &mut put_f32);
-                            put_linear(&format!("b{bi}.e{ei}.wu"), &e.wu, &mut tensors, &mut blob, &mut put_f32);
-                            put_linear(&format!("b{bi}.e{ei}.wd"), &e.wd, &mut tensors, &mut blob, &mut put_f32);
-                        }
+                Ffn::Moe(moe) => {
+                    w.put_dense(&format!("b{bi}.gate"), moe.gate.shape(), moe.gate.data());
+                    for (ei, e) in moe.experts.iter().enumerate() {
+                        w.put_linear(&format!("b{bi}.e{ei}.wg"), &e.wg);
+                        w.put_linear(&format!("b{bi}.e{ei}.wu"), &e.wu);
+                        w.put_linear(&format!("b{bi}.e{ei}.wd"), &e.wd);
                     }
                 }
             }
         }
-        header.set("tensors", tensors);
+        header.set("tensors", w.tensors);
         let header_bytes = format!("{header}").into_bytes();
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"AQLMCKPT")?;
+        f.write_all(section::MAGIC)?;
         f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
         f.write_all(&header_bytes)?;
-        f.write_all(&blob)?;
+        f.write_all(&w.blob)?;
         Ok(())
     }
 
-    /// Load from a checkpoint written by [`Self::save`].
+    /// Load from a checkpoint written by [`Self::save`] (eager: every
+    /// tensor is read and decoded).
+    ///
+    /// Accepts both the indexed [`section::FORMAT_V2`] and the legacy
+    /// [`section::FORMAT_V1`] (no section index — lengths are inferred
+    /// from consecutive offsets, and there are no checksums to verify).
+    /// Truncated files, bad magic, out-of-bounds section offsets and crc
+    /// mismatches each fail with a distinct error instead of panicking.
     pub fn load(path: &std::path::Path) -> anyhow::Result<Model> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == b"AQLMCKPT", "bad checkpoint magic");
-        let mut len8 = [0u8; 8];
-        f.read_exact(&mut len8)?;
-        let hlen = u64::from_le_bytes(len8) as usize;
-        let mut hbytes = vec![0u8; hlen];
-        f.read_exact(&mut hbytes)?;
-        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        let raw = std::fs::read(path)?;
+        anyhow::ensure!(
+            raw.len() >= 16,
+            "truncated checkpoint: {} bytes is too short for magic + header length",
+            raw.len()
+        );
+        anyhow::ensure!(&raw[..8] == section::MAGIC, "bad checkpoint magic");
+        let hlen = u64::from_le_bytes(raw[8..16].try_into().expect("8 bytes")) as usize;
+        anyhow::ensure!(
+            hlen.checked_add(16).is_some_and(|end| end <= raw.len()),
+            "truncated checkpoint: header claims {hlen} bytes, file holds {}",
+            raw.len().saturating_sub(16)
+        );
+        let header = Json::parse(std::str::from_utf8(&raw[16..16 + hlen])?)
             .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
-        let mut blob = Vec::new();
-        f.read_to_end(&mut blob)?;
+        let blob = &raw[16 + hlen..];
+        let format = header.req_str("format")?;
+        anyhow::ensure!(
+            format == section::FORMAT_V2 || format == section::FORMAT_V1,
+            "unsupported checkpoint format '{format}'"
+        );
 
         let cfg = config_from_json(header.get("config").ok_or_else(|| anyhow::anyhow!("no config"))?)?;
-        let mut by_name: HashMap<String, &Json> = HashMap::new();
-        for t in header.req_arr("tensors")? {
-            by_name.insert(t.req_str("name")?.to_string(), t);
+        // Section index: name → (meta, offset, len). v1 has no `len`, so
+        // lengths are inferred from the next section's offset (sections are
+        // written back to back).
+        let tensors = header.req_arr("tensors")?;
+        let mut offsets: Vec<usize> = tensors
+            .iter()
+            .map(|t| t.req_usize("offset"))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        offsets.sort_unstable();
+        let mut by_name: HashMap<String, (&Json, usize, usize)> = HashMap::new();
+        for t in tensors {
+            let name = t.req_str("name")?;
+            let offset = t.req_usize("offset")?;
+            let len = match t.get("len").and_then(Json::as_usize) {
+                Some(len) => len,
+                None => {
+                    let next = offsets
+                        .iter()
+                        .copied()
+                        .find(|&o| o > offset)
+                        .unwrap_or(blob.len());
+                    next.saturating_sub(offset)
+                }
+            };
+            anyhow::ensure!(
+                offset.checked_add(len).is_some_and(|end| end <= blob.len()),
+                "section '{name}' out of bounds: offset {offset} + len {len} exceeds blob \
+                 of {} bytes (truncated or corrupted checkpoint)",
+                blob.len()
+            );
+            by_name.insert(name.to_string(), (t, offset, len));
         }
-        let read_f32 = |blob: &[u8], offset: usize, count: usize| -> Vec<f32> {
-            (0..count)
-                .map(|i| {
-                    let o = offset + i * 4;
-                    f32::from_le_bytes([blob[o], blob[o + 1], blob[o + 2], blob[o + 3]])
-                })
-                .collect()
-        };
-        let get_dense = |name: &str| -> anyhow::Result<Tensor> {
-            let t = by_name.get(name).ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
-            let shape: Vec<usize> =
-                t.req_arr("shape")?.iter().map(|s| s.as_usize().unwrap()).collect();
-            let count: usize = shape.iter().product();
-            Ok(Tensor::from_vec(&shape, read_f32(&blob, t.req_usize("offset")?, count)))
-        };
-        let get_vec = |name: &str| -> anyhow::Result<Vec<f32>> { Ok(get_dense(name)?.into_vec()) };
-        let get_linear = |name: &str| -> anyhow::Result<Linear> {
-            let t = by_name.get(name).ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
-            match t.req_str("kind")? {
-                "dense" => Ok(Linear::dense(get_dense(name)?)),
-                "aqlm" => {
-                    let (d_out, d_in) = (t.req_usize("d_out")?, t.req_usize("d_in")?);
-                    let group = t.req_usize("group")?;
-                    let n_codebooks = t.req_usize("n_codebooks")?;
-                    let code_bits = t.req_usize("code_bits")?;
-                    let k = 1usize << code_bits;
-                    let n_codes = d_out * (d_in / group) * n_codebooks;
-                    let mut off = t.req_usize("offset")?;
-                    let codes: Vec<u16> = (0..n_codes)
-                        .map(|i| u16::from_le_bytes([blob[off + 2 * i], blob[off + 2 * i + 1]]))
-                        .collect();
-                    off += n_codes * 2;
-                    let mut codebooks = Vec::new();
-                    for _ in 0..n_codebooks {
-                        codebooks.push(Tensor::from_vec(&[k, group], read_f32(&blob, off, k * group)));
-                        off += k * group * 4;
-                    }
-                    let scales = read_f32(&blob, off, d_out);
-                    let q = AqlmWeight { d_out, d_in, group, n_codebooks, code_bits, codes, codebooks, scales };
-                    q.validate()?;
-                    Ok(Linear::aqlm(q))
-                }
-                "spqr" => {
-                    let (d_out, d_in) = (t.req_usize("d_out")?, t.req_usize("d_in")?);
-                    let group = t.req_usize("group")?;
-                    let bits = t.req_usize("bits")?;
-                    let n_outliers = t.req_usize("n_outliers")?;
-                    let n_groups = d_in.div_ceil(group);
-                    let n_words = (d_out * d_in * bits).div_ceil(64);
-                    let mut off = t.req_usize("offset")?;
-                    let packed_codes: Vec<u64> = (0..n_words)
-                        .map(|i| {
-                            let o = off + i * 8;
-                            u64::from_le_bytes(blob[o..o + 8].try_into().unwrap())
-                        })
-                        .collect();
-                    off += n_words * 8;
-                    let scales = read_f32(&blob, off, d_out * n_groups);
-                    off += d_out * n_groups * 4;
-                    let zeros = read_f32(&blob, off, d_out * n_groups);
-                    off += d_out * n_groups * 4;
-                    let read_u32 = |off: usize, count: usize| -> Vec<u32> {
-                        (0..count)
-                            .map(|i| {
-                                let o = off + i * 4;
-                                u32::from_le_bytes(blob[o..o + 4].try_into().unwrap())
-                            })
-                            .collect()
-                    };
-                    let row_ptr = read_u32(off, d_out + 1);
-                    off += (d_out + 1) * 4;
-                    let col_idx = read_u32(off, n_outliers);
-                    off += n_outliers * 4;
-                    let values = read_f32(&blob, off, n_outliers);
-                    let q = crate::kernels::format::PackedSpqr {
-                        d_out,
-                        d_in,
-                        group,
-                        bits,
-                        packed_codes,
-                        scales,
-                        zeros,
-                        row_ptr,
-                        col_idx,
-                        values,
-                    };
-                    q.validate()?;
-                    Ok(Linear::spqr(q))
-                }
-                "groupint" => {
-                    let (d_out, d_in) = (t.req_usize("d_out")?, t.req_usize("d_in")?);
-                    let group = t.req_usize("group")?;
-                    let bits = t.req_usize("bits")?;
-                    // div_ceil: ragged tail groups carry their own scale/zero.
-                    let n_groups = d_in.div_ceil(group);
-                    let mut off = t.req_usize("offset")?;
-                    let qcodes: Vec<u16> = (0..d_out * d_in)
-                        .map(|i| u16::from_le_bytes([blob[off + 2 * i], blob[off + 2 * i + 1]]))
-                        .collect();
-                    off += d_out * d_in * 2;
-                    let scales = read_f32(&blob, off, d_out * n_groups);
-                    off += d_out * n_groups * 4;
-                    let zeros = read_f32(&blob, off, d_out * n_groups);
-                    Ok(Linear::group_int(crate::quant::groupint::GroupIntWeight {
-                        d_out,
-                        d_in,
-                        group,
-                        bits,
-                        qcodes,
-                        scales,
-                        zeros,
-                    }))
-                }
-                other => anyhow::bail!("unknown tensor kind {other}"),
+        let get_section = |name: &str| -> anyhow::Result<(&Json, &[u8])> {
+            let &(meta, offset, len) = by_name
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
+            let bytes = &blob[offset..offset + len];
+            if let Some(want) = meta.get("crc32").and_then(Json::as_usize) {
+                let got = crate::util::crc::crc32(bytes) as usize;
+                anyhow::ensure!(
+                    got == want,
+                    "crc mismatch in section '{name}': stored {want:#010x}, computed {got:#010x}"
+                );
             }
+            Ok((meta, bytes))
+        };
+        let mut get_dense = |name: &str| -> anyhow::Result<Tensor> {
+            let (meta, bytes) = get_section(name)?;
+            section::decode_dense(meta, bytes)
+        };
+        let mut get_linear = |name: &str| -> anyhow::Result<Linear> {
+            let (meta, bytes) = get_section(name)?;
+            section::decode_linear(meta, bytes)
         };
 
-        let mut blocks = Vec::new();
-        for bi in 0..cfg.n_layers {
-            let ffn = if cfg.is_moe() {
-                Ffn::Moe(MoeLayer {
-                    gate: get_dense(&format!("b{bi}.gate"))?,
-                    experts: (0..cfg.n_experts)
-                        .map(|ei| -> anyhow::Result<Mlp> {
-                            Ok(Mlp {
-                                wg: get_linear(&format!("b{bi}.e{ei}.wg"))?,
-                                wu: get_linear(&format!("b{bi}.e{ei}.wu"))?,
-                                wd: get_linear(&format!("b{bi}.e{ei}.wd"))?,
-                            })
-                        })
-                        .collect::<anyhow::Result<Vec<_>>>()?,
-                    top_k: cfg.experts_top_k,
-                })
-            } else {
-                Ffn::Dense(Mlp {
-                    wg: get_linear(&format!("b{bi}.wg"))?,
-                    wu: get_linear(&format!("b{bi}.wu"))?,
-                    wd: get_linear(&format!("b{bi}.wd"))?,
-                })
-            };
-            blocks.push(Block {
-                ln1: get_vec(&format!("b{bi}.ln1"))?,
-                attn: super::block::Attention {
-                    wq: get_linear(&format!("b{bi}.wq"))?,
-                    wk: get_linear(&format!("b{bi}.wk"))?,
-                    wv: get_linear(&format!("b{bi}.wv"))?,
-                    wo: get_linear(&format!("b{bi}.wo"))?,
-                },
-                ln2: get_vec(&format!("b{bi}.ln2"))?,
-                ffn,
-            });
-        }
-        let mut layer_bits = HashMap::new();
-        if let Some(lb) = header.get("layer_bits").and_then(|v| v.as_obj()) {
-            for (name, v) in lb {
-                let bits = v
-                    .as_f64()
-                    .ok_or_else(|| anyhow::anyhow!("layer_bits['{name}'] is not a number"))?;
-                layer_bits.insert(name.clone(), bits);
-            }
-        }
+        let layer_bits = layer_bits_from_header(&header)?;
         let quant_policy = header.get("policy").and_then(|p| p.as_str()).map(str::to_string);
-        Ok(Model {
-            rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
-            embed: get_dense("embed")?,
-            ln_f: get_vec("ln_f")?,
-            head: get_linear("head")?,
-            blocks,
-            cfg,
-            layer_bits,
-            quant_policy,
-        })
+        assemble_model(cfg, layer_bits, quant_policy, &mut get_dense, &mut get_linear)
     }
+}
+
+/// Parse the `layer_bits` table out of a checkpoint header, if present.
+pub fn layer_bits_from_header(header: &Json) -> anyhow::Result<HashMap<String, f64>> {
+    let mut layer_bits = HashMap::new();
+    if let Some(lb) = header.get("layer_bits").and_then(|v| v.as_obj()) {
+        for (name, v) in lb {
+            let bits = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("layer_bits['{name}'] is not a number"))?;
+            layer_bits.insert(name.clone(), bits);
+        }
+    }
+    Ok(layer_bits)
+}
+
+/// Assemble a [`Model`] from per-tensor fetchers.
+///
+/// Shared by the eager checkpoint loader ([`Model::load`]) and the lazy
+/// artifact store ([`crate::runtime::store`]), so the two construction
+/// paths walk exactly the same tensor names in exactly the same order and
+/// can never drift apart.
+pub fn assemble_model(
+    cfg: ModelConfig,
+    layer_bits: HashMap<String, f64>,
+    quant_policy: Option<String>,
+    get_dense: &mut dyn FnMut(&str) -> anyhow::Result<Tensor>,
+    get_linear: &mut dyn FnMut(&str) -> anyhow::Result<Linear>,
+) -> anyhow::Result<Model> {
+    let mut get_vec =
+        |name: &str, get_dense: &mut dyn FnMut(&str) -> anyhow::Result<Tensor>| -> anyhow::Result<Vec<f32>> {
+            Ok(get_dense(name)?.into_vec())
+        };
+    let mut blocks = Vec::new();
+    for bi in 0..cfg.n_layers {
+        let ffn = if cfg.is_moe() {
+            Ffn::Moe(MoeLayer {
+                gate: get_dense(&format!("b{bi}.gate"))?,
+                experts: (0..cfg.n_experts)
+                    .map(|ei| -> anyhow::Result<Mlp> {
+                        Ok(Mlp {
+                            wg: get_linear(&format!("b{bi}.e{ei}.wg"))?,
+                            wu: get_linear(&format!("b{bi}.e{ei}.wu"))?,
+                            wd: get_linear(&format!("b{bi}.e{ei}.wd"))?,
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                top_k: cfg.experts_top_k,
+            })
+        } else {
+            Ffn::Dense(Mlp {
+                wg: get_linear(&format!("b{bi}.wg"))?,
+                wu: get_linear(&format!("b{bi}.wu"))?,
+                wd: get_linear(&format!("b{bi}.wd"))?,
+            })
+        };
+        blocks.push(Block {
+            ln1: get_vec(&format!("b{bi}.ln1"), get_dense)?,
+            attn: super::block::Attention {
+                wq: get_linear(&format!("b{bi}.wq"))?,
+                wk: get_linear(&format!("b{bi}.wk"))?,
+                wv: get_linear(&format!("b{bi}.wv"))?,
+                wo: get_linear(&format!("b{bi}.wo"))?,
+            },
+            ln2: get_vec(&format!("b{bi}.ln2"), get_dense)?,
+            ffn,
+        });
+    }
+    Ok(Model {
+        rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
+        embed: get_dense("embed")?,
+        ln_f: get_vec("ln_f", get_dense)?,
+        head: get_linear("head")?,
+        blocks,
+        cfg,
+        layer_bits,
+        quant_policy,
+    })
 }
 
 /// Keyed Adam states for the whole model.
@@ -1183,6 +1076,120 @@ mod tests {
         assert_eq!(m2.layer_bits.get("b0.wq"), Some(&3.25));
         assert!((m.avg_bits() - m2.avg_bits()).abs() < 1e-12);
         assert_eq!(m.weight_bytes(), m2.weight_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Read a saved checkpoint, apply `f` to its parsed JSON header, and
+    /// write the file back with the new header (blob untouched).
+    fn rewrite_header(path: &std::path::Path, f: impl FnOnce(&mut Json)) {
+        let raw = std::fs::read(path).unwrap();
+        let hlen = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+        let mut header = Json::parse(std::str::from_utf8(&raw[16..16 + hlen]).unwrap()).unwrap();
+        f(&mut header);
+        let hbytes = format!("{header}").into_bytes();
+        let mut out = Vec::new();
+        out.extend_from_slice(&raw[..8]);
+        out.extend_from_slice(&(hbytes.len() as u64).to_le_bytes());
+        out.extend_from_slice(&hbytes);
+        out.extend_from_slice(&raw[16 + hlen..]);
+        std::fs::write(path, out).unwrap();
+    }
+
+    fn saved_model(tag: &str, seed: u64) -> (Model, std::path::PathBuf) {
+        let cfg = test_cfg();
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut m = Model::init(&cfg, &mut rng);
+        let q = crate::kernels::format::random_weight(
+            16,
+            16,
+            crate::kernels::format::AqlmShape::new(2, 4, 4),
+            &mut rng,
+        );
+        m.blocks[0].attn.wq = Linear::aqlm(q);
+        let path = std::env::temp_dir().join(format!("aqlm_test_ckpt_{tag}.bin"));
+        m.save(&path).unwrap();
+        (m, path)
+    }
+
+    #[test]
+    fn load_rejects_truncated_file() {
+        let (_, path) = saved_model("trunc", 20);
+        let raw = std::fs::read(&path).unwrap();
+        // Shorter than magic + header length: distinct "too short" error.
+        std::fs::write(&path, &raw[..10]).unwrap();
+        let err = Model::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated checkpoint"), "{err}");
+        // Header itself cut off.
+        std::fs::write(&path, &raw[..20]).unwrap();
+        let err = Model::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated checkpoint"), "{err}");
+        // Blob cut off mid-section: the index bounds check catches it.
+        std::fs::write(&path, &raw[..raw.len() - 32]).unwrap();
+        let err = Model::load(&path).unwrap_err().to_string();
+        assert!(err.contains("out of bounds"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let (_, path) = saved_model("magic", 21);
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[0] ^= 0xFF;
+        std::fs::write(&path, raw).unwrap();
+        let err = Model::load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad checkpoint magic"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_out_of_bounds_section_offset() {
+        let (_, path) = saved_model("oob", 22);
+        rewrite_header(&path, |header| {
+            let Json::Obj(h) = header else { panic!("header not an object") };
+            let Some(Json::Arr(tensors)) = h.get_mut("tensors") else { panic!("no tensors") };
+            tensors[0].set("offset", Json::from(1 << 40));
+        });
+        let err = Model::load(&path).unwrap_err().to_string();
+        assert!(err.contains("out of bounds"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_crc_mismatch() {
+        let (_, path) = saved_model("crc", 23);
+        let mut raw = std::fs::read(&path).unwrap();
+        // Flip one bit in the last blob byte: some section's crc must break.
+        let last = raw.len() - 1;
+        raw[last] ^= 0x01;
+        std::fs::write(&path, raw).unwrap();
+        let err = Model::load(&path).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v1_checkpoint_without_section_index_still_loads() {
+        // Rewrite a v2 checkpoint into the legacy v1 shape: format string
+        // downgraded, per-section `len` and `crc32` stripped. The eager
+        // loader must still reconstruct the model bit-exactly by inferring
+        // section lengths from consecutive offsets.
+        let (mut m, path) = saved_model("v1compat", 24);
+        rewrite_header(&path, |header| {
+            let Json::Obj(h) = header else { panic!("header not an object") };
+            h.insert("format".to_string(), Json::from(section::FORMAT_V1));
+            let Some(Json::Arr(tensors)) = h.get_mut("tensors") else { panic!("no tensors") };
+            for t in tensors {
+                let Json::Obj(meta) = t else { panic!("tensor meta not an object") };
+                meta.remove("len");
+                meta.remove("crc32");
+            }
+        });
+        let mut m2 = Model::load(&path).unwrap();
+        assert!(m2.blocks[0].attn.wq.is_quantized());
+        let tokens: Vec<u32> = vec![2, 4, 6];
+        let (l1, _) = m.forward_logits(&tokens, 1, 3, false);
+        let (l2, _) = m2.forward_logits(&tokens, 1, 3, false);
+        assert!(l1.allclose(&l2, 0.0), "v1 load changed weights");
         std::fs::remove_file(path).ok();
     }
 

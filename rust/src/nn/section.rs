@@ -1,0 +1,394 @@
+//! Per-tensor section codec for the checkpoint format.
+//!
+//! A checkpoint is `AQLMCKPT` + header length + JSON header + a raw blob of
+//! back-to-back tensor *sections*. The header's `tensors` array carries one
+//! metadata entry per section; since format `aqlm-ckpt-v2` each entry also
+//! records the section's byte `len` and `crc32`, forming a **section
+//! index**: a reader can seek to any single tensor, read exactly its bytes,
+//! and verify them — without touching the rest of the file.
+//!
+//! This module is the single definition of the per-kind byte layouts.
+//! [`super::model::Model::save`] encodes through [`SectionWriter`];
+//! [`super::model::Model::load`] (eager) and
+//! [`crate::runtime::store::ArtifactFile`] (lazy, seek-read) both decode
+//! through [`decode_dense`] / [`decode_linear`], so the two load paths can
+//! never drift apart. Every read is bounds-checked: a truncated or
+//! corrupted section fails with a named error instead of a panic.
+
+use super::linear::Linear;
+use crate::kernels::format::{AqlmWeight, PackedSpqr};
+use crate::quant::groupint::GroupIntWeight;
+use crate::tensor::Tensor;
+use crate::util::crc::crc32;
+use crate::util::json::Json;
+
+/// Checkpoint magic bytes (file prefix).
+pub const MAGIC: &[u8; 8] = b"AQLMCKPT";
+/// Current checkpoint format identifier (adds the per-section `len` +
+/// `crc32` index over v1).
+pub const FORMAT_V2: &str = "aqlm-ckpt-v2";
+/// Legacy format identifier: no section index; eager load only.
+pub const FORMAT_V1: &str = "aqlm-ckpt-v1";
+
+// ------------------------------------------------------------ reader
+
+/// Bounds-checked cursor over one section's bytes. All take-style methods
+/// fail (naming the section) instead of panicking when the section is too
+/// short — the corruption-robustness layer of the format.
+pub struct SectionReader<'a> {
+    name: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SectionReader<'a> {
+    /// Cursor at the start of section `name`'s bytes.
+    pub fn new(name: &'a str, bytes: &'a [u8]) -> SectionReader<'a> {
+        SectionReader { name, bytes, pos: 0 }
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "section '{}' truncated: need {} bytes at offset {}, section holds {}",
+                self.name,
+                n,
+                self.pos,
+                self.bytes.len()
+            )
+        })?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    /// Take `count` little-endian f32 values.
+    pub fn f32s(&mut self, count: usize) -> anyhow::Result<Vec<f32>> {
+        let raw = self.take(count.checked_mul(4).ok_or_else(|| overflow(self.name))?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Take `count` little-endian u16 values.
+    pub fn u16s(&mut self, count: usize) -> anyhow::Result<Vec<u16>> {
+        let raw = self.take(count.checked_mul(2).ok_or_else(|| overflow(self.name))?)?;
+        Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    /// Take `count` little-endian u32 values.
+    pub fn u32s(&mut self, count: usize) -> anyhow::Result<Vec<u32>> {
+        let raw = self.take(count.checked_mul(4).ok_or_else(|| overflow(self.name))?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Take `count` little-endian u64 values.
+    pub fn u64s(&mut self, count: usize) -> anyhow::Result<Vec<u64>> {
+        let raw = self.take(count.checked_mul(8).ok_or_else(|| overflow(self.name))?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    /// Require the section to be exactly consumed (a longer-than-expected
+    /// section means the metadata and the bytes disagree).
+    pub fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.bytes.len(),
+            "section '{}' has {} trailing bytes beyond its decoded layout",
+            self.name,
+            self.bytes.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn overflow(name: &str) -> anyhow::Error {
+    anyhow::anyhow!("section '{name}' metadata implies an impossibly large element count")
+}
+
+// ------------------------------------------------------------ writer
+
+/// Accumulates the checkpoint blob and its section index. Each
+/// [`Self::put`] appends one section's bytes and records its
+/// `offset`/`len`/`crc32` in the metadata entry.
+pub struct SectionWriter {
+    /// Raw tensor bytes, back to back in `put` order.
+    pub blob: Vec<u8>,
+    /// The header's `tensors` array (one entry per section, index fields
+    /// filled in).
+    pub tensors: Json,
+}
+
+impl SectionWriter {
+    /// Empty writer.
+    pub fn new() -> SectionWriter {
+        SectionWriter { blob: Vec::new(), tensors: Json::arr() }
+    }
+
+    /// Append one section: `meta` gains `offset`, `len` and `crc32`, and
+    /// `bytes` land at the end of the blob.
+    pub fn put(&mut self, mut meta: Json, bytes: &[u8]) {
+        meta.set("offset", Json::from(self.blob.len()));
+        meta.set("len", Json::from(bytes.len()));
+        meta.set("crc32", Json::from(crc32(bytes) as usize));
+        self.tensors.push(meta);
+        self.blob.extend_from_slice(bytes);
+    }
+
+    /// Append a dense f32 tensor section.
+    pub fn put_dense(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        let mut meta = Json::obj();
+        meta.set("name", Json::from(name));
+        meta.set("kind", Json::from("dense"));
+        meta.set("shape", Json::from(shape.iter().map(|&s| Json::from(s)).collect::<Vec<_>>()));
+        self.put(meta, &encode_f32s(data));
+    }
+
+    /// Append a linear-layer section in its storage kind (dense / aqlm /
+    /// groupint / packed spqr — packed kinds are written as packed bytes,
+    /// never round-tripped through f32).
+    pub fn put_linear(&mut self, name: &str, l: &Linear) {
+        match l {
+            Linear::Dense(w) => self.put_dense(name, w.shape(), w.data()),
+            Linear::Aqlm { q, .. } => {
+                let mut meta = Json::obj();
+                meta.set("name", Json::from(name));
+                meta.set("kind", Json::from("aqlm"));
+                meta.set("d_out", Json::from(q.d_out));
+                meta.set("d_in", Json::from(q.d_in));
+                meta.set("group", Json::from(q.group));
+                meta.set("n_codebooks", Json::from(q.n_codebooks));
+                meta.set("code_bits", Json::from(q.code_bits));
+                let mut bytes = Vec::new();
+                for &c in &q.codes {
+                    bytes.extend_from_slice(&c.to_le_bytes());
+                }
+                for cb in &q.codebooks {
+                    bytes.extend_from_slice(&encode_f32s(cb.data()));
+                }
+                bytes.extend_from_slice(&encode_f32s(&q.scales));
+                self.put(meta, &bytes);
+            }
+            Linear::GroupInt { q, .. } => {
+                let mut meta = Json::obj();
+                meta.set("name", Json::from(name));
+                meta.set("kind", Json::from("groupint"));
+                meta.set("d_out", Json::from(q.d_out));
+                meta.set("d_in", Json::from(q.d_in));
+                meta.set("group", Json::from(q.group));
+                meta.set("bits", Json::from(q.bits));
+                let mut bytes = Vec::new();
+                for &c in &q.qcodes {
+                    bytes.extend_from_slice(&c.to_le_bytes());
+                }
+                bytes.extend_from_slice(&encode_f32s(&q.scales));
+                bytes.extend_from_slice(&encode_f32s(&q.zeros));
+                self.put(meta, &bytes);
+            }
+            Linear::Spqr { q, .. } => {
+                let mut meta = Json::obj();
+                meta.set("name", Json::from(name));
+                meta.set("kind", Json::from("spqr"));
+                meta.set("d_out", Json::from(q.d_out));
+                meta.set("d_in", Json::from(q.d_in));
+                meta.set("group", Json::from(q.group));
+                meta.set("bits", Json::from(q.bits));
+                meta.set("n_outliers", Json::from(q.n_outliers()));
+                // Section layout: packed code words (u64), scales (f32),
+                // zeros (f32), CSR row_ptr (u32), col_idx (u32), values (f32).
+                let mut bytes = Vec::new();
+                for &w64 in &q.packed_codes {
+                    bytes.extend_from_slice(&w64.to_le_bytes());
+                }
+                bytes.extend_from_slice(&encode_f32s(&q.scales));
+                bytes.extend_from_slice(&encode_f32s(&q.zeros));
+                for &p in q.row_ptr.iter().chain(&q.col_idx) {
+                    bytes.extend_from_slice(&p.to_le_bytes());
+                }
+                bytes.extend_from_slice(&encode_f32s(&q.values));
+                self.put(meta, &bytes);
+            }
+        }
+    }
+}
+
+impl Default for SectionWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn encode_f32s(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+// ------------------------------------------------------------ decoders
+
+/// Decode a `dense` section back into a [`Tensor`].
+pub fn decode_dense(meta: &Json, bytes: &[u8]) -> anyhow::Result<Tensor> {
+    let name = meta.req_str("name")?;
+    let shape: Vec<usize> = meta
+        .req_arr("shape")?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape in section '{name}'")))
+        .collect::<anyhow::Result<_>>()?;
+    let count: usize = shape.iter().product();
+    let mut r = SectionReader::new(name, bytes);
+    let data = r.f32s(count)?;
+    r.finish()?;
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+/// Decode any linear-kind section (`dense` / `aqlm` / `spqr` / `groupint`)
+/// into a [`Linear`]. Packed kinds land directly as their packed structs.
+pub fn decode_linear(meta: &Json, bytes: &[u8]) -> anyhow::Result<Linear> {
+    let name = meta.req_str("name")?;
+    match meta.req_str("kind")? {
+        "dense" => Ok(Linear::dense(decode_dense(meta, bytes)?)),
+        "aqlm" => {
+            let (d_out, d_in) = (meta.req_usize("d_out")?, meta.req_usize("d_in")?);
+            let group = meta.req_usize("group")?;
+            let n_codebooks = meta.req_usize("n_codebooks")?;
+            let code_bits = meta.req_usize("code_bits")?;
+            anyhow::ensure!(
+                group > 0 && code_bits > 0 && code_bits <= 16,
+                "section '{name}': bad aqlm geometry (group {group}, code_bits {code_bits})"
+            );
+            let k = 1usize << code_bits;
+            let n_codes = d_out * (d_in / group) * n_codebooks;
+            let mut r = SectionReader::new(name, bytes);
+            let codes = r.u16s(n_codes)?;
+            let mut codebooks = Vec::with_capacity(n_codebooks);
+            for _ in 0..n_codebooks {
+                codebooks.push(Tensor::from_vec(&[k, group], r.f32s(k * group)?));
+            }
+            let scales = r.f32s(d_out)?;
+            r.finish()?;
+            let q = AqlmWeight { d_out, d_in, group, n_codebooks, code_bits, codes, codebooks, scales };
+            q.validate()?;
+            Ok(Linear::aqlm(q))
+        }
+        "spqr" => {
+            let (d_out, d_in) = (meta.req_usize("d_out")?, meta.req_usize("d_in")?);
+            let group = meta.req_usize("group")?;
+            let bits = meta.req_usize("bits")?;
+            let n_outliers = meta.req_usize("n_outliers")?;
+            anyhow::ensure!(
+                group > 0 && bits > 0 && bits <= 16,
+                "section '{name}': bad spqr geometry (group {group}, bits {bits})"
+            );
+            let n_groups = d_in.div_ceil(group);
+            let n_words = (d_out * d_in * bits).div_ceil(64);
+            let mut r = SectionReader::new(name, bytes);
+            let packed_codes = r.u64s(n_words)?;
+            let scales = r.f32s(d_out * n_groups)?;
+            let zeros = r.f32s(d_out * n_groups)?;
+            let row_ptr = r.u32s(d_out + 1)?;
+            let col_idx = r.u32s(n_outliers)?;
+            let values = r.f32s(n_outliers)?;
+            r.finish()?;
+            let q = PackedSpqr {
+                d_out,
+                d_in,
+                group,
+                bits,
+                packed_codes,
+                scales,
+                zeros,
+                row_ptr,
+                col_idx,
+                values,
+            };
+            q.validate()?;
+            Ok(Linear::spqr(q))
+        }
+        "groupint" => {
+            let (d_out, d_in) = (meta.req_usize("d_out")?, meta.req_usize("d_in")?);
+            let group = meta.req_usize("group")?;
+            let bits = meta.req_usize("bits")?;
+            anyhow::ensure!(
+                group > 0,
+                "section '{name}': bad groupint geometry (group {group})"
+            );
+            // div_ceil: ragged tail groups carry their own scale/zero.
+            let n_groups = d_in.div_ceil(group);
+            let mut r = SectionReader::new(name, bytes);
+            let qcodes = r.u16s(d_out * d_in)?;
+            let scales = r.f32s(d_out * n_groups)?;
+            let zeros = r.f32s(d_out * n_groups)?;
+            r.finish()?;
+            Ok(Linear::group_int(GroupIntWeight { d_out, d_in, group, bits, qcodes, scales, zeros }))
+        }
+        other => anyhow::bail!("unknown tensor kind '{other}' in section '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_section_roundtrip_and_crc() {
+        let mut w = SectionWriter::new();
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        w.put_dense("t", &[3, 4], &data);
+        let meta = w.tensors.at(0).unwrap();
+        assert_eq!(meta.req_usize("offset").unwrap(), 0);
+        assert_eq!(meta.req_usize("len").unwrap(), 48);
+        assert_eq!(meta.req_usize("crc32").unwrap(), crc32(&w.blob) as usize);
+        let t = decode_dense(meta, &w.blob).unwrap();
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.data(), &data[..]);
+    }
+
+    #[test]
+    fn truncated_section_fails_with_named_error() {
+        let mut w = SectionWriter::new();
+        w.put_dense("embed", &[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let meta = w.tensors.at(0).unwrap();
+        let err = decode_dense(meta, &w.blob[..7]).unwrap_err().to_string();
+        assert!(err.contains("embed") && err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_fail_finish() {
+        let mut w = SectionWriter::new();
+        w.put_dense("x", &[1], &[1.0]);
+        let mut bytes = w.blob.clone();
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        let err = decode_dense(w.tensors.at(0).unwrap(), &bytes).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn packed_linear_sections_roundtrip_bitexact() {
+        let mut rng = Rng::seed_from_u64(3);
+        let aq = crate::kernels::format::random_weight(
+            16,
+            16,
+            crate::kernels::format::AqlmShape::new(2, 4, 4),
+            &mut rng,
+        );
+        let sp = crate::kernels::format::random_spqr(16, 16, 7, 3, 0.05, &mut rng);
+        let mut w = SectionWriter::new();
+        w.put_linear("a", &Linear::aqlm(aq.clone()));
+        w.put_linear("s", &Linear::spqr(sp.clone()));
+        let metas = w.tensors.as_arr().unwrap();
+        let (o0, l0) = (metas[0].req_usize("offset").unwrap(), metas[0].req_usize("len").unwrap());
+        let (o1, l1) = (metas[1].req_usize("offset").unwrap(), metas[1].req_usize("len").unwrap());
+        assert_eq!(o1, o0 + l0, "sections are back to back");
+        let la = decode_linear(&metas[0], &w.blob[o0..o0 + l0]).unwrap();
+        let Linear::Aqlm { q, .. } = la else { panic!("aqlm kind lost") };
+        assert_eq!(q.codes, aq.codes);
+        let ls = decode_linear(&metas[1], &w.blob[o1..o1 + l1]).unwrap();
+        let Linear::Spqr { q, .. } = ls else { panic!("spqr kind lost") };
+        assert_eq!(q.packed_codes, sp.packed_codes);
+        assert_eq!(q.col_idx, sp.col_idx);
+    }
+}

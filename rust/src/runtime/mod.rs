@@ -8,7 +8,11 @@
 //! - [`pjrt`] — client wrapper, compiled-module cache, host↔device tensors.
 //! - [`engine`] — model-level engines: PJRT forward (logits) and the
 //!   state-looped PJRT trainer that drives `nano_train.hlo.txt`.
+//! - [`store`] — tiered artifact store: seek-read access to indexed
+//!   checkpoints, lazy per-layer model loading, and the LRU-evicted
+//!   multi-tenant model registry behind `aqlm serve --models`.
 
 pub mod artifacts;
 pub mod pjrt;
 pub mod engine;
+pub mod store;

@@ -1,0 +1,319 @@
+//! Seek-read access to one indexed checkpoint file.
+//!
+//! [`ArtifactFile::open`] reads and validates only the header (magic,
+//! header length, JSON with the section index); every tensor section stays
+//! on disk until explicitly read. [`ArtifactFile::read_section`] seeks to
+//! one section, reads exactly its bytes, and verifies its crc32 — the unit
+//! of IO for the lazy tiers above this one.
+
+use crate::nn::config::ModelConfig;
+use crate::nn::linear::Linear;
+use crate::nn::model::{config_from_json, layer_bits_from_header};
+use crate::nn::section;
+use crate::tensor::Tensor;
+use crate::util::crc::crc32;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+/// One entry of the section index: where a tensor's bytes live and how to
+/// verify them.
+#[derive(Debug, Clone)]
+struct SectionEntry {
+    /// Full metadata object from the header (kind, geometry, ...).
+    meta: Json,
+    /// Byte offset inside the blob (relative to `data_start`).
+    offset: u64,
+    /// Section byte length.
+    len: usize,
+    /// Stored crc32 of the section bytes, when the header carries one.
+    crc: Option<u32>,
+}
+
+/// An open indexed checkpoint: validated header in memory, tensor sections
+/// on disk, any single section readable with one seek.
+pub struct ArtifactFile {
+    file: File,
+    cfg: ModelConfig,
+    quant_policy: Option<String>,
+    layer_bits: HashMap<String, f64>,
+    sections: BTreeMap<String, SectionEntry>,
+    /// File offset where the blob starts (16 + header length).
+    data_start: u64,
+    /// Total bytes this handle has read so far (header included).
+    bytes_read: u64,
+}
+
+impl ArtifactFile {
+    /// Read just the format identifier of a checkpoint (magic + header).
+    ///
+    /// The registry uses this to dispatch: `aqlm-ckpt-v2` opens lazily via
+    /// [`ArtifactFile::open`], legacy `aqlm-ckpt-v1` (no section index)
+    /// falls back to the eager [`crate::nn::model::Model::load`].
+    pub fn peek_format(path: &Path) -> anyhow::Result<String> {
+        let (header, _, _) = read_header(path)?;
+        Ok(header.req_str("format")?.to_string())
+    }
+
+    /// Open a checkpoint and validate its header and section index.
+    ///
+    /// Reads **only** the header: `bytes_read()` right after open equals
+    /// `header_bytes()`. Fails with distinct errors on truncated files,
+    /// bad magic, a missing section index (v1 files), and out-of-bounds
+    /// section offsets.
+    pub fn open(path: &Path) -> anyhow::Result<ArtifactFile> {
+        let (header, file, data_start) = read_header(path)?;
+        let format = header.req_str("format")?;
+        anyhow::ensure!(
+            format != section::FORMAT_V1,
+            "checkpoint has no section index (format '{format}'); \
+             use the eager Model::load path"
+        );
+        anyhow::ensure!(format == section::FORMAT_V2, "unsupported checkpoint format '{format}'");
+        let cfg = config_from_json(
+            header.get("config").ok_or_else(|| anyhow::anyhow!("no config"))?,
+        )?;
+        let quant_policy = header.get("policy").and_then(|p| p.as_str()).map(str::to_string);
+        let layer_bits = layer_bits_from_header(&header)?;
+        let blob_len = file.metadata()?.len().saturating_sub(data_start);
+        let mut sections = BTreeMap::new();
+        for t in header.req_arr("tensors")? {
+            let name = t.req_str("name")?.to_string();
+            let offset = t.req_usize("offset")? as u64;
+            let len = t.req_usize("len")?;
+            anyhow::ensure!(
+                offset.checked_add(len as u64).is_some_and(|end| end <= blob_len),
+                "section '{name}' out of bounds: offset {offset} + len {len} exceeds blob \
+                 of {blob_len} bytes (truncated or corrupted checkpoint)"
+            );
+            let crc = t.get("crc32").and_then(Json::as_usize).map(|c| c as u32);
+            sections.insert(name, SectionEntry { meta: t.clone(), offset, len, crc });
+        }
+        Ok(ArtifactFile {
+            file,
+            cfg,
+            quant_policy,
+            layer_bits,
+            sections,
+            data_start,
+            bytes_read: data_start,
+        })
+    }
+
+    /// Architecture config parsed from the header.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Quantization policy string from the header, if recorded.
+    pub fn quant_policy(&self) -> Option<&str> {
+        self.quant_policy.as_deref()
+    }
+
+    /// Per-layer bits table from the header.
+    pub fn layer_bits(&self) -> &HashMap<String, f64> {
+        &self.layer_bits
+    }
+
+    /// Names of all tensor sections, in index order.
+    pub fn section_names(&self) -> Vec<String> {
+        self.sections.keys().cloned().collect()
+    }
+
+    /// Byte length of one section, if it exists.
+    pub fn section_len(&self, name: &str) -> Option<usize> {
+        self.sections.get(name).map(|e| e.len)
+    }
+
+    /// Sum of all section byte lengths (the full blob).
+    pub fn total_section_bytes(&self) -> u64 {
+        self.sections.values().map(|e| e.len as u64).sum()
+    }
+
+    /// Size of the file prefix read at open: magic + header length word +
+    /// JSON header.
+    pub fn header_bytes(&self) -> u64 {
+        self.data_start
+    }
+
+    /// Total bytes read through this handle so far (header included) —
+    /// the observable IO cost of laziness.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+
+    /// Seek-read one section's raw bytes and verify its crc32.
+    pub fn read_section(&mut self, name: &str) -> anyhow::Result<Vec<u8>> {
+        let entry = self
+            .sections
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
+        let (offset, len, crc) = (entry.offset, entry.len, entry.crc);
+        self.file.seek(SeekFrom::Start(self.data_start + offset))?;
+        let mut buf = vec![0u8; len];
+        self.file.read_exact(&mut buf).map_err(|e| {
+            anyhow::anyhow!("section '{name}' truncated on disk ({len} bytes at {offset}): {e}")
+        })?;
+        if let Some(want) = crc {
+            let got = crc32(&buf);
+            anyhow::ensure!(
+                got == want,
+                "crc mismatch in section '{name}': stored {want:#010x}, computed {got:#010x}"
+            );
+        }
+        self.bytes_read += len as u64;
+        Ok(buf)
+    }
+
+    /// Read and decode one dense tensor section.
+    pub fn read_dense(&mut self, name: &str) -> anyhow::Result<Tensor> {
+        let bytes = self.read_section(name)?;
+        section::decode_dense(&self.sections[name].meta, &bytes)
+    }
+
+    /// Read and decode one linear-layer section in its packed storage kind.
+    pub fn read_linear(&mut self, name: &str) -> anyhow::Result<Linear> {
+        let bytes = self.read_section(name)?;
+        section::decode_linear(&self.sections[name].meta, &bytes)
+    }
+}
+
+impl std::fmt::Debug for ArtifactFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactFile")
+            .field("sections", &self.sections.len())
+            .field("data_start", &self.data_start)
+            .field("bytes_read", &self.bytes_read)
+            .finish()
+    }
+}
+
+/// Open `path`, validate magic and header length, and parse the JSON
+/// header. Returns the header, the open file (positioned arbitrarily), and
+/// the blob start offset.
+fn read_header(path: &Path) -> anyhow::Result<(Json, File, u64)> {
+    let mut file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    anyhow::ensure!(
+        file_len >= 16,
+        "truncated checkpoint: {file_len} bytes is too short for magic + header length"
+    );
+    let mut prefix = [0u8; 16];
+    file.read_exact(&mut prefix)?;
+    anyhow::ensure!(&prefix[..8] == section::MAGIC, "bad checkpoint magic");
+    let hlen = u64::from_le_bytes(prefix[8..16].try_into().expect("8 bytes"));
+    anyhow::ensure!(
+        hlen.checked_add(16).is_some_and(|end| end <= file_len),
+        "truncated checkpoint: header claims {hlen} bytes, file holds {}",
+        file_len - 16
+    );
+    let mut hbytes = vec![0u8; hlen as usize];
+    file.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    Ok((header, file, 16 + hlen))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::ModelConfig;
+    use crate::nn::model::Model;
+    use crate::util::rng::Rng;
+
+    fn tiny_ckpt(tag: &str, seed: u64) -> (Model, std::path::PathBuf) {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 24;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        cfg.n_layers = 2;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut m = Model::init(&cfg, &mut rng);
+        let q = crate::kernels::format::random_weight(
+            16,
+            16,
+            crate::kernels::format::AqlmShape::new(2, 4, 4),
+            &mut rng,
+        );
+        m.blocks[0].attn.wq = Linear::aqlm(q);
+        let path = std::env::temp_dir().join(format!("aqlm_test_artifact_{tag}.bin"));
+        m.save(&path).unwrap();
+        (m, path)
+    }
+
+    #[test]
+    fn open_reads_only_the_header() {
+        let (_, path) = tiny_ckpt("header_only", 31);
+        let art = ArtifactFile::open(&path).unwrap();
+        assert_eq!(art.bytes_read(), art.header_bytes());
+        assert!(art.total_section_bytes() > 0);
+        assert_eq!(
+            art.header_bytes() + art.total_section_bytes(),
+            std::fs::metadata(&path).unwrap().len(),
+            "index must cover the whole blob"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn seek_read_decodes_single_packed_tensor() {
+        let (m, path) = tiny_ckpt("seek", 32);
+        let mut art = ArtifactFile::open(&path).unwrap();
+        let before = art.bytes_read();
+        let l = art.read_linear("b0.wq").unwrap();
+        let Linear::Aqlm { q, .. } = &l else { panic!("aqlm kind lost on seek-read") };
+        let Linear::Aqlm { q: q0, .. } = &m.blocks[0].attn.wq else { unreachable!() };
+        assert_eq!(q.codes, q0.codes);
+        assert_eq!(
+            art.bytes_read() - before,
+            art.section_len("b0.wq").unwrap() as u64,
+            "reading one section must cost exactly that section's bytes"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn peek_format_reports_v2() {
+        let (_, path) = tiny_ckpt("peek", 33);
+        assert_eq!(ArtifactFile::peek_format(&path).unwrap(), section::FORMAT_V2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_and_truncation() {
+        let (_, path) = tiny_ckpt("corrupt", 34);
+        let raw = std::fs::read(&path).unwrap();
+        let mut bad = raw.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = ArtifactFile::open(&path).unwrap_err().to_string();
+        assert!(err.contains("bad checkpoint magic"), "{err}");
+        // Blob cut short: the index bounds check fires at open.
+        std::fs::write(&path, &raw[..raw.len() - 32]).unwrap();
+        let err = ArtifactFile::open(&path).unwrap_err().to_string();
+        assert!(err.contains("out of bounds"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn read_section_detects_crc_mismatch() {
+        let (_, path) = tiny_ckpt("crcflip", 35);
+        let mut raw = std::fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0x01;
+        std::fs::write(&path, raw).unwrap();
+        let mut art = ArtifactFile::open(&path).unwrap();
+        // The flipped byte lives in the last section of the index.
+        let names = art.section_names();
+        let victim =
+            names.iter().max_by_key(|n| art.sections[n.as_str()].offset).unwrap().clone();
+        let err = art.read_section(&victim).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+}

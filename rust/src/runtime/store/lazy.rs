@@ -1,0 +1,260 @@
+//! Lazily-loaded model: header-resident immediately, weights on first touch.
+//!
+//! [`LazyModel::open`] materializes config, quantization policy and the
+//! per-layer bits table from the checkpoint header without reading a single
+//! tensor section. Each linear layer has an interior-mutability slot that
+//! is filled by [`LazyModel::touch_linear`] on first use (one seek-read,
+//! crc-verified, decoded to its packed kind, decode caches warmed); a
+//! bytes-resident counter tracks exactly which sections are in memory.
+//! [`LazyModel::warm_model`] forces full residency by assembling an eager
+//! [`Model`] through the same shared constructor the checkpoint loader
+//! uses.
+
+use super::artifact::ArtifactFile;
+use crate::nn::config::ModelConfig;
+use crate::nn::linear::Linear;
+use crate::nn::model::{assemble_model, Model};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// A model whose weights live on disk until touched.
+pub struct LazyModel {
+    /// The underlying indexed checkpoint. All IO goes through this lock;
+    /// slot reads (the common case once resident) never take it.
+    file: Mutex<ArtifactFile>,
+    cfg: ModelConfig,
+    quant_policy: Option<String>,
+    layer_bits: HashMap<String, f64>,
+    /// One slot per tensor section. `None` = not resident.
+    slots: BTreeMap<String, Slot>,
+    /// Sum of the section byte lengths currently held in slots.
+    bytes_resident: AtomicU64,
+}
+
+/// Residency slot for one tensor section.
+///
+/// Lock order is always slot → file; [`LazyModel::evict_cold`] touches only
+/// slot locks, so it can never deadlock against a concurrent
+/// [`LazyModel::touch_linear`].
+struct Slot {
+    /// Section byte length (copied from the index at open, so eviction
+    /// accounting never needs the file lock).
+    len: u64,
+    /// The decoded layer, once touched.
+    cell: RwLock<Option<Arc<Linear>>>,
+}
+
+impl LazyModel {
+    /// Open a checkpoint lazily: reads only the header (config / policy /
+    /// bits table / section index). `bytes_read()` afterwards equals
+    /// `header_bytes()`.
+    pub fn open(path: &Path) -> anyhow::Result<LazyModel> {
+        let file = ArtifactFile::open(path)?;
+        let cfg = file.config().clone();
+        let quant_policy = file.quant_policy().map(str::to_string);
+        let layer_bits = file.layer_bits().clone();
+        let slots = file
+            .section_names()
+            .into_iter()
+            .map(|name| {
+                let len = file.section_len(&name).unwrap_or(0) as u64;
+                (name, Slot { len, cell: RwLock::new(None) })
+            })
+            .collect();
+        Ok(LazyModel {
+            file: Mutex::new(file),
+            cfg,
+            quant_policy,
+            layer_bits,
+            slots,
+            bytes_resident: AtomicU64::new(0),
+        })
+    }
+
+    /// Architecture config (materialized at open).
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Quantization policy string (materialized at open).
+    pub fn quant_policy(&self) -> Option<&str> {
+        self.quant_policy.as_deref()
+    }
+
+    /// Per-layer bits table (materialized at open).
+    pub fn layer_bits(&self) -> &HashMap<String, f64> {
+        &self.layer_bits
+    }
+
+    /// Bytes of tensor sections currently resident in slots.
+    pub fn bytes_resident(&self) -> u64 {
+        self.bytes_resident.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes read from disk so far (header included).
+    pub fn bytes_read(&self) -> u64 {
+        self.file.lock().expect("artifact lock").bytes_read()
+    }
+
+    /// Size of the header prefix read at open.
+    pub fn header_bytes(&self) -> u64 {
+        self.file.lock().expect("artifact lock").header_bytes()
+    }
+
+    /// Sum of all section byte lengths (full-residency cost).
+    pub fn total_section_bytes(&self) -> u64 {
+        self.file.lock().expect("artifact lock").total_section_bytes()
+    }
+
+    /// Fetch one linear layer, reading and decoding its section on first
+    /// touch. Subsequent touches return the cached `Arc` without IO. The
+    /// returned layer has its decode caches warmed, so it is immediately
+    /// usable on the `&self` decode paths.
+    pub fn touch_linear(&self, name: &str) -> anyhow::Result<Arc<Linear>> {
+        let slot = self
+            .slots
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
+        if let Some(l) = slot.cell.read().expect("slot lock").as_ref() {
+            return Ok(Arc::clone(l));
+        }
+        let mut guard = slot.cell.write().expect("slot lock");
+        // Double-checked: another thread may have filled the slot while we
+        // waited for the write lock.
+        if let Some(l) = guard.as_ref() {
+            return Ok(Arc::clone(l));
+        }
+        let mut linear = self.file.lock().expect("artifact lock").read_linear(name)?;
+        linear.warm_decode();
+        let arc = Arc::new(linear);
+        *guard = Some(Arc::clone(&arc));
+        self.bytes_resident.fetch_add(slot.len, Ordering::Relaxed);
+        Ok(arc)
+    }
+
+    /// Drop every resident slot that no caller still holds
+    /// (`Arc::strong_count == 1`). Returns the number of bytes freed.
+    pub fn evict_cold(&self) -> u64 {
+        let mut freed = 0u64;
+        for slot in self.slots.values() {
+            let mut guard = slot.cell.write().expect("slot lock");
+            if let Some(arc) = guard.as_ref() {
+                if Arc::strong_count(arc) == 1 {
+                    *guard = None;
+                    freed += slot.len;
+                }
+            }
+        }
+        self.bytes_resident.fetch_sub(freed, Ordering::Relaxed);
+        freed
+    }
+
+    /// Force full residency: read every section and assemble an eager
+    /// [`Model`] (decode caches not yet warmed — callers that serve from it
+    /// should `warm_decode()` it). Goes through the same
+    /// [`assemble_model`] walk as [`Model::load`], so lazy and eager
+    /// construction can never drift apart.
+    pub fn warm_model(&self) -> anyhow::Result<Model> {
+        let mut get_dense = |name: &str| self.file.lock().expect("artifact lock").read_dense(name);
+        let mut get_linear =
+            |name: &str| self.file.lock().expect("artifact lock").read_linear(name);
+        assemble_model(
+            self.cfg.clone(),
+            self.layer_bits.clone(),
+            self.quant_policy.clone(),
+            &mut get_dense,
+            &mut get_linear,
+        )
+    }
+}
+
+impl std::fmt::Debug for LazyModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LazyModel")
+            .field("slots", &self.slots.len())
+            .field("bytes_resident", &self.bytes_resident())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_ckpt(tag: &str, seed: u64) -> (Model, std::path::PathBuf) {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 24;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        cfg.n_layers = 2;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut m = Model::init(&cfg, &mut rng);
+        let q = crate::kernels::format::random_weight(
+            16,
+            16,
+            crate::kernels::format::AqlmShape::new(2, 4, 4),
+            &mut rng,
+        );
+        m.blocks[0].attn.wq = Linear::aqlm(q);
+        let path = std::env::temp_dir().join(format!("aqlm_test_lazy_{tag}.bin"));
+        m.save(&path).unwrap();
+        (m, path)
+    }
+
+    #[test]
+    fn lazy_open_reads_header_only_and_touch_reads_one_section() {
+        // The byte-accounting contract of the tiered store: opening costs
+        // the header; touching layer X costs exactly X's section bytes.
+        let (_, path) = tiny_ckpt("accounting", 41);
+        let lm = LazyModel::open(&path).unwrap();
+        assert_eq!(lm.bytes_read(), lm.header_bytes(), "open must not read any section");
+        assert_eq!(lm.bytes_resident(), 0);
+
+        let wq_len = lm.slots["b0.wq"].len;
+        let l = lm.touch_linear("b0.wq").unwrap();
+        assert!(l.is_quantized());
+        assert_eq!(lm.bytes_read(), lm.header_bytes() + wq_len);
+        assert_eq!(lm.bytes_resident(), wq_len);
+
+        // Second touch: cache hit, zero additional IO.
+        let _l2 = lm.touch_linear("b0.wq").unwrap();
+        assert_eq!(lm.bytes_read(), lm.header_bytes() + wq_len);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn warm_model_matches_eager_load_bitexact() {
+        let (mut m, path) = tiny_ckpt("warm", 42);
+        let lm = LazyModel::open(&path).unwrap();
+        let mut warm = lm.warm_model().unwrap();
+        let tokens: Vec<u32> = vec![5, 3, 8];
+        let (l1, _) = m.forward_logits(&tokens, 1, 3, false);
+        let (l2, _) = warm.forward_logits(&tokens, 1, 3, false);
+        assert!(l1.allclose(&l2, 0.0), "lazy warm_model drifted from the saved weights");
+        assert!(lm.bytes_read() >= lm.header_bytes() + lm.total_section_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn evict_cold_frees_unheld_slots_but_keeps_pinned_ones() {
+        let (_, path) = tiny_ckpt("evict", 43);
+        let lm = LazyModel::open(&path).unwrap();
+        let pinned = lm.touch_linear("b0.wq").unwrap();
+        lm.touch_linear("b0.wk").unwrap(); // dropped immediately → cold
+        let resident = lm.bytes_resident();
+        let freed = lm.evict_cold();
+        assert!(freed > 0, "the cold wk slot must be freed");
+        assert_eq!(lm.bytes_resident(), resident - freed);
+        assert!(lm.bytes_resident() > 0, "the pinned wq slot must survive");
+        drop(pinned);
+        lm.evict_cold();
+        assert_eq!(lm.bytes_resident(), 0);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,28 @@
+//! Tiered artifact store: from bytes on disk to models in service.
+//!
+//! Three tiers, each built on the one below:
+//!
+//! 1. [`ArtifactFile`] — opens an indexed (`aqlm-ckpt-v2`) checkpoint,
+//!    validates the header, and **seek-reads single tensor sections** with
+//!    per-section crc verification. Opening touches only the header; a
+//!    `bytes_read` counter makes the IO cost observable.
+//! 2. [`LazyModel`] — a model whose config / policy / bits table are
+//!    materialized at open but whose per-linear weights are read on first
+//!    touch (interior-mutability slot per layer, bytes-resident counter).
+//!    `warm_model()` forces full residency and yields an eagerly usable
+//!    [`crate::nn::model::Model`].
+//! 3. [`ModelRegistry`] — a byte-budgeted LRU cache of warm models keyed by
+//!    model id. `Arc<Model>` handles held by in-flight requests pin their
+//!    model; cold models (and cold lazy layers) are evicted under pressure.
+//!    This is what `aqlm serve --models name=path,...` serves from.
+//!
+//! See `docs/store.md` for the format layout, the residency accounting
+//! rules, and a multi-model serving walkthrough.
+
+pub mod artifact;
+pub mod lazy;
+pub mod registry;
+
+pub use artifact::ArtifactFile;
+pub use lazy::LazyModel;
+pub use registry::{ModelRegistry, StoreStats};

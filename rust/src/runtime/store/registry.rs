@@ -1,0 +1,359 @@
+//! Byte-budgeted, LRU-evicted registry of warm models for multi-tenant
+//! serving.
+//!
+//! Each registered model id maps to a checkpoint path. [`ModelRegistry::acquire`]
+//! returns an `Arc<Model>` handle, loading the model on first use (indexed
+//! `aqlm-ckpt-v2` checkpoints open lazily through [`LazyModel`]; legacy v1
+//! files fall back to the eager [`Model::load`]). Loading happens under the
+//! registry lock, so concurrent workers resolving the same cold model load
+//! it **exactly once** — later arrivals find it warm.
+//!
+//! When resident bytes exceed the budget (`aqlm serve --store-budget-mb`),
+//! eviction runs coldest-first over models whose handles are no longer
+//! held: a worker holding the `Arc<Model>` pins it (`Arc::strong_count`
+//! \> 1), so models serving in-flight requests are never evicted. Cold
+//! lazy layer slots are freed before whole warm models are dropped. If
+//! everything resident is pinned, the registry runs over budget rather
+//! than stall — the budget is a target, not a hard allocation cap.
+
+use super::artifact::ArtifactFile;
+use super::lazy::LazyModel;
+use crate::nn::model::Model;
+use crate::nn::section;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Counters and residency snapshot of a [`ModelRegistry`].
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    /// `acquire` calls answered by an already-warm model.
+    pub hits: u64,
+    /// `acquire` calls that had to load the model from disk.
+    pub misses: u64,
+    /// Whole warm models dropped under byte pressure.
+    pub evictions: u64,
+    /// Checkpoint loads performed (equals `misses`; kept separate so the
+    /// exactly-once property is directly observable).
+    pub loads: u64,
+    /// Bytes currently resident across all warm models and lazy slots.
+    pub bytes_resident: u64,
+    /// Byte budget the registry evicts toward (0 = unbounded).
+    pub budget_bytes: u64,
+    /// Per-model request counts, in registration order: `(id, requests)`.
+    pub per_model: Vec<(String, u64)>,
+}
+
+struct Entry {
+    path: PathBuf,
+    /// Fully-resident model, when loaded. Dropping this is eviction.
+    warm: Option<Arc<Model>>,
+    /// Bytes the warm model accounts for (header + all section bytes).
+    warm_bytes: u64,
+    /// Lazy handle kept alongside the warm model for v2 checkpoints, so
+    /// diagnostics and layer-level eviction remain available.
+    lazy: Option<Arc<LazyModel>>,
+    /// Logical-clock tick of the most recent acquire (LRU key).
+    last_used: u64,
+    /// Total acquires routed to this model.
+    requests: u64,
+}
+
+struct Inner {
+    entries: BTreeMap<String, Entry>,
+    /// Monotonic logical clock; bumped per acquire. Cheaper and more
+    /// deterministic than wall-clock timestamps for LRU ordering.
+    clock: u64,
+    budget_bytes: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    loads: u64,
+}
+
+impl Inner {
+    fn bytes_resident(&self) -> u64 {
+        self.entries
+            .values()
+            .map(|e| {
+                let warm = if e.warm.is_some() { e.warm_bytes } else { 0 };
+                let lazy = e.lazy.as_ref().map_or(0, |l| l.bytes_resident());
+                warm + lazy
+            })
+            .sum()
+    }
+
+    /// Evict until resident bytes fit the budget or nothing evictable
+    /// remains. Cold lazy slots go first, then whole warm models in LRU
+    /// order — skipping any model whose `Arc` is still held elsewhere.
+    fn evict_under_pressure(&mut self) {
+        if self.budget_bytes == 0 {
+            return;
+        }
+        if self.bytes_resident() > self.budget_bytes {
+            for e in self.entries.values() {
+                if let Some(lazy) = &e.lazy {
+                    lazy.evict_cold();
+                }
+            }
+        }
+        while self.bytes_resident() > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| {
+                    e.warm.as_ref().is_some_and(|arc| Arc::strong_count(arc) == 1)
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(name, _)| name.clone());
+            let Some(name) = victim else { break };
+            let e = self.entries.get_mut(&name).expect("victim exists");
+            e.warm = None;
+            if let Some(lazy) = &e.lazy {
+                lazy.evict_cold();
+            }
+            self.evictions += 1;
+        }
+    }
+}
+
+/// LRU-evicted, byte-budgeted cache of warm models keyed by model id.
+pub struct ModelRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl ModelRegistry {
+    /// Empty registry evicting toward `budget_bytes` (0 = unbounded).
+    pub fn new(budget_bytes: u64) -> ModelRegistry {
+        ModelRegistry {
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                clock: 0,
+                budget_bytes,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                loads: 0,
+            }),
+        }
+    }
+
+    /// Register a model id → checkpoint path mapping (no IO yet).
+    pub fn register(&self, name: &str, path: &Path) {
+        let mut inner = self.inner.lock().expect("registry lock");
+        inner.entries.insert(
+            name.to_string(),
+            Entry {
+                path: path.to_path_buf(),
+                warm: None,
+                warm_bytes: 0,
+                lazy: None,
+                last_used: 0,
+                requests: 0,
+            },
+        );
+    }
+
+    /// Registered model ids, in sorted order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().expect("registry lock").entries.keys().cloned().collect()
+    }
+
+    /// Acquire a warm handle to `name`, loading the checkpoint on first
+    /// use. The returned `Arc` pins the model against eviction for as long
+    /// as the caller holds it.
+    ///
+    /// Loading runs under the registry lock: other acquirers of the same
+    /// cold model block and then hit the warm entry, so a checkpoint is
+    /// read from disk exactly once no matter how many workers race for it.
+    pub fn acquire(&self, name: &str) -> anyhow::Result<Arc<Model>> {
+        let mut inner = self.inner.lock().expect("registry lock");
+        inner.clock += 1;
+        let tick = inner.clock;
+        let entry = inner
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+        entry.last_used = tick;
+        entry.requests += 1;
+        let warm = entry.warm.as_ref().map(Arc::clone);
+        let handle = match warm {
+            Some(handle) => {
+                inner.hits += 1;
+                handle
+            }
+            None => {
+                inner.misses += 1;
+                inner.loads += 1;
+                let entry = inner.entries.get_mut(name).expect("entry exists");
+                let path = entry.path.clone();
+                let (mut model, warm_bytes, lazy) =
+                    if ArtifactFile::peek_format(&path)? == section::FORMAT_V2 {
+                        let lazy = match entry.lazy.clone() {
+                            Some(l) => l,
+                            None => Arc::new(LazyModel::open(&path)?),
+                        };
+                        let model = lazy.warm_model()?;
+                        let bytes = lazy.header_bytes() + lazy.total_section_bytes();
+                        (model, bytes, Some(lazy))
+                    } else {
+                        // Legacy checkpoint without a section index: eager path.
+                        let model = Model::load(&path)?;
+                        (model, std::fs::metadata(&path)?.len(), None)
+                    };
+                model.warm_decode();
+                let handle = Arc::new(model);
+                entry.warm = Some(Arc::clone(&handle));
+                entry.warm_bytes = warm_bytes;
+                entry.lazy = lazy;
+                handle
+            }
+        };
+        // The caller's handle keeps its model's strong count above 1, so
+        // the model being acquired can never be its own eviction victim.
+        inner.evict_under_pressure();
+        Ok(handle)
+    }
+
+    /// Acquire the lazy handle of an indexed checkpoint without forcing
+    /// residency (fails for legacy v1 files). Useful for diagnostics and
+    /// per-layer workloads.
+    pub fn acquire_lazy(&self, name: &str) -> anyhow::Result<Arc<LazyModel>> {
+        let mut inner = self.inner.lock().expect("registry lock");
+        inner.clock += 1;
+        let tick = inner.clock;
+        let entry = inner
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+        entry.last_used = tick;
+        if let Some(lazy) = &entry.lazy {
+            return Ok(Arc::clone(lazy));
+        }
+        let lazy = Arc::new(LazyModel::open(&entry.path)?);
+        entry.lazy = Some(Arc::clone(&lazy));
+        Ok(lazy)
+    }
+
+    /// Snapshot of counters and current residency.
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.inner.lock().expect("registry lock");
+        StoreStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            loads: inner.loads,
+            bytes_resident: inner.bytes_resident(),
+            budget_bytes: inner.budget_bytes,
+            per_model: inner.entries.iter().map(|(n, e)| (n.clone(), e.requests)).collect(),
+        }
+    }
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("ModelRegistry")
+            .field("models", &stats.per_model.len())
+            .field("bytes_resident", &stats.bytes_resident)
+            .field("budget_bytes", &stats.budget_bytes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_ckpt(tag: &str, seed: u64) -> std::path::PathBuf {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_heads = 2;
+        cfg.n_kv_heads = 2;
+        cfg.d_ff = 24;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        cfg.n_layers = 1;
+        let mut rng = Rng::seed_from_u64(seed);
+        let m = Model::init(&cfg, &mut rng);
+        let path = std::env::temp_dir().join(format!("aqlm_test_registry_{tag}.bin"));
+        m.save(&path).unwrap();
+        path
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let reg = ModelRegistry::new(0);
+        let err = reg.acquire("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown model 'nope'"), "{err}");
+    }
+
+    #[test]
+    fn lru_evicts_coldest_unpinned_model_under_budget() {
+        let pa = tiny_ckpt("lru_a", 51);
+        let pb = tiny_ckpt("lru_b", 52);
+        let one_model = std::fs::metadata(&pa).unwrap().len();
+        // Budget fits one model but not two.
+        let reg = ModelRegistry::new(one_model + one_model / 2);
+        reg.register("a", &pa);
+        reg.register("b", &pb);
+        drop(reg.acquire("a").unwrap());
+        drop(reg.acquire("b").unwrap()); // loading b pushes a (coldest) out
+        let stats = reg.stats();
+        assert_eq!(stats.loads, 2);
+        assert!(stats.evictions >= 1, "{stats:?}");
+        assert!(stats.bytes_resident <= stats.budget_bytes, "{stats:?}");
+        // Re-acquiring a is a miss again (it was evicted), and now b goes.
+        drop(reg.acquire("a").unwrap());
+        assert_eq!(reg.stats().loads, 3);
+        std::fs::remove_file(pa).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn pinned_model_is_never_evicted() {
+        let pa = tiny_ckpt("pin_a", 53);
+        let pb = tiny_ckpt("pin_b", 54);
+        let reg = ModelRegistry::new(1); // absurdly tight: everything is pressure
+        reg.register("a", &pa);
+        reg.register("b", &pb);
+        let held_a = reg.acquire("a").unwrap(); // pinned by this handle
+        let _b = reg.acquire("b").unwrap();
+        // a was the LRU candidate but is pinned; b is pinned by _b. Neither
+        // may be evicted even though the registry is far over budget.
+        assert_eq!(reg.stats().evictions, 0);
+        // Prove a's weights are still live and servable.
+        assert_eq!(held_a.cfg.d_model, 16);
+        drop(held_a);
+        // Next acquire triggers pressure handling again; now a is evictable.
+        drop(reg.acquire("b").unwrap());
+        assert!(reg.stats().evictions >= 1);
+        std::fs::remove_file(pa).ok();
+        std::fs::remove_file(pb).ok();
+    }
+
+    #[test]
+    fn concurrent_acquires_load_exactly_once() {
+        let pa = tiny_ckpt("race", 55);
+        let reg = Arc::new(ModelRegistry::new(0));
+        reg.register("m", &pa);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let reg = Arc::clone(&reg);
+            handles.push(std::thread::spawn(move || {
+                let m = reg.acquire("m").unwrap();
+                assert_eq!(m.cfg.d_model, 16);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = reg.stats();
+        assert_eq!(stats.loads, 1, "{stats:?}");
+        assert_eq!(stats.hits + stats.misses, 8);
+        assert_eq!(stats.per_model, vec![("m".to_string(), 8)]);
+        std::fs::remove_file(pa).ok();
+    }
+}

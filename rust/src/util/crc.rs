@@ -1,0 +1,55 @@
+//! CRC-32 (IEEE 802.3 polynomial, the zlib/`crc32` variant) — dependency
+//! free, table driven. The checkpoint section index stores one checksum per
+//! tensor section so a lazily-opened artifact can verify exactly the bytes
+//! it seek-reads without hashing the rest of the file.
+
+/// 256-entry lookup table for the reflected polynomial `0xEDB88320`,
+/// built at compile time.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 of `bytes` (IEEE, reflected, init/xorout `0xFFFFFFFF`) — matches
+/// zlib's `crc32(0, buf, len)`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard check value for "123456789" under CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn detects_single_byte_flip() {
+        let mut data = vec![7u8; 1024];
+        let before = crc32(&data);
+        data[512] ^= 0x40;
+        assert_ne!(before, crc32(&data));
+    }
+}

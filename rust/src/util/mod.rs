@@ -12,12 +12,14 @@
 //!   (shrinking included) standing in for `proptest`.
 //! - [`timing`] — wall-clock measurement and robust summary statistics used
 //!   by the custom bench harness.
+//! - [`crc`] — table-driven CRC-32 used by the checkpoint section index.
 
 pub mod rng;
 pub mod json;
 pub mod cli;
 pub mod propcheck;
 pub mod timing;
+pub mod crc;
 
 /// Format a byte count as a human-readable string (e.g. "3.72 MiB").
 pub fn human_bytes(bytes: u64) -> String {

@@ -201,6 +201,7 @@ fn paged_pool_admits_more_concurrency_than_contiguous_at_same_memory() {
             temperature: 0.0,
             priority: 0,
             deadline: None,
+            model: None,
             respond: tx,
             stream: None,
         };

@@ -1,0 +1,198 @@
+//! Integration over the tiered artifact store: byte-accurate lazy
+//! loading, v1 eager fallback through the registry, and the acceptance
+//! scenario — two quantized variants served under a byte budget smaller
+//! than their summed footprint, token-identical to single-model runs,
+//! with at least one eviction.
+
+use aqlm::coordinator::server::{Server, ServerConfig, SubmitOpts};
+use aqlm::kernels::format::AqlmShape;
+use aqlm::nn::config::ModelConfig;
+use aqlm::nn::linear::Linear;
+use aqlm::nn::model::Model;
+use aqlm::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
+use aqlm::quant::CalibData;
+use aqlm::runtime::store::{ArtifactFile, LazyModel, ModelRegistry};
+use aqlm::util::json::Json;
+use aqlm::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn base_model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.n_kv_heads = 2;
+    cfg.d_ff = 48;
+    cfg.vocab_size = 64;
+    cfg.max_seq = 48;
+    Model::init(&cfg, &mut Rng::seed_from_u64(seed))
+}
+
+/// Quantize every linear of a fresh model with AQLM and save it,
+/// returning the in-memory model and the checkpoint path.
+fn quantized_ckpt(tag: &str, seed: u64, shape: AqlmShape) -> (Model, PathBuf) {
+    let mut m = base_model(seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5eed);
+    let lq = LayerQuantizer::new(AqlmLayerConfig::fast(shape));
+    for block in &mut m.blocks {
+        for (_, lin) in block.linears_mut() {
+            let w = lin.weight_owned();
+            let calib = CalibData::identity(w.cols());
+            let (q, _) = lq.quantize(&w, &calib, &mut rng);
+            *lin = Linear::aqlm(q);
+        }
+    }
+    let path = std::env::temp_dir().join(format!("aqlm_itest_store_{tag}.bin"));
+    m.save(&path).unwrap();
+    (m, path)
+}
+
+#[test]
+fn lazy_open_reads_only_header_plus_touched_sections() {
+    // The store's core byte-accounting claim, checked against the real
+    // file size: header + all sections account for every byte on disk,
+    // open reads exactly the header, and each touch adds exactly that
+    // section's indexed length.
+    let (_, path) = quantized_ckpt("accounting", 5, AqlmShape::new(2, 5, 4));
+    let file_size = std::fs::metadata(&path).unwrap().len();
+    let lm = LazyModel::open(&path).unwrap();
+    assert_eq!(
+        lm.header_bytes() + lm.total_section_bytes(),
+        file_size,
+        "section index must account for the whole blob"
+    );
+    assert_eq!(lm.bytes_read(), lm.header_bytes(), "open must read only the header");
+
+    let mut art = ArtifactFile::open(&path).unwrap();
+    let mut expected = lm.header_bytes();
+    for name in ["b0.wq", "b0.wd"] {
+        expected += art.section_len(name).unwrap() as u64;
+        let l = lm.touch_linear(name).unwrap();
+        assert!(l.is_quantized(), "{name} must land as a packed struct");
+        assert_eq!(lm.bytes_read(), expected, "touching {name} must read one section");
+    }
+    // Packed section decodes to the same kind the artifact reader gives.
+    let direct = art.read_linear("b0.wq").unwrap();
+    assert!(direct.is_quantized());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn v1_checkpoint_loads_eagerly_through_the_registry() {
+    // Old-format checkpoints (offsets only, no len/crc32) must keep
+    // working: ArtifactFile refuses them, the registry falls back to the
+    // eager loader, and served output matches the original model.
+    let (mut m, path) = quantized_ckpt("v1compat", 7, AqlmShape::new(2, 5, 4));
+    downgrade_to_v1(&path);
+    assert!(
+        ArtifactFile::open(&path).unwrap_err().to_string().contains("no section index"),
+        "lazy open must reject a v1 checkpoint"
+    );
+    let expected = m.generate(&[5, 9, 2], 6, 0.0, &mut Rng::seed_from_u64(0));
+    let registry = Arc::new(ModelRegistry::new(0));
+    registry.register("old", &path);
+    let got = registry.acquire("old").unwrap();
+    let mut loaded = (*got).clone();
+    let toks = loaded.generate(&[5, 9, 2], 6, 0.0, &mut Rng::seed_from_u64(0));
+    assert_eq!(toks, expected, "v1 eager fallback drifted from the saved weights");
+    std::fs::remove_file(path).ok();
+}
+
+/// Rewrite a v2 checkpoint header to the v1 format in place: downgrade
+/// the format string and strip the `len`/`crc32` index fields, leaving
+/// offsets only (exactly what pre-index checkpoints held).
+fn downgrade_to_v1(path: &Path) {
+    let bytes = std::fs::read(path).unwrap();
+    let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let mut header = Json::parse(std::str::from_utf8(&bytes[16..16 + hlen]).unwrap()).unwrap();
+    if let Json::Obj(map) = &mut header {
+        map.insert("format".to_string(), Json::Str("aqlm-ckpt-v1".to_string()));
+        if let Some(Json::Arr(tensors)) = map.get_mut("tensors") {
+            for t in tensors {
+                if let Json::Obj(meta) = t {
+                    meta.remove("len");
+                    meta.remove("crc32");
+                }
+            }
+        }
+    }
+    let htext = format!("{header}");
+    let mut out = Vec::new();
+    out.extend_from_slice(&bytes[..8]);
+    out.extend_from_slice(&(htext.len() as u64).to_le_bytes());
+    out.extend_from_slice(htext.as_bytes());
+    out.extend_from_slice(&bytes[16 + hlen..]);
+    std::fs::write(path, out).unwrap();
+}
+
+#[test]
+fn budgeted_multi_model_serving_is_token_identical_with_evictions() {
+    // The PR's acceptance scenario: two quantized variants, a store
+    // budget smaller than their summed resident bytes, one worker, an
+    // interleaved request mix. Every response must be token-identical to
+    // a single-model server run, and the store must report >= 1 eviction
+    // (the worker rebinding between models forces the LRU out).
+    let (_, pa) = quantized_ckpt("mix_a", 11, AqlmShape::new(2, 5, 4));
+    let (_, pb) = quantized_ckpt("mix_b", 23, AqlmShape::new(1, 6, 4));
+    let prompts: Vec<Vec<u32>> = vec![vec![5, 9, 2], vec![13, 1], vec![40, 3, 2], vec![7, 7]];
+    let max_new = 6;
+
+    // Single-model baselines through the same server machinery.
+    let mut baseline: Vec<Vec<Vec<u32>>> = Vec::new();
+    for path in [&pa, &pb] {
+        let server = Server::start(Model::load(path).unwrap(), ServerConfig::default());
+        let rxs: Vec<_> =
+            prompts.iter().map(|p| server.submit(p.clone(), max_new, 0.0)).collect();
+        baseline.push(
+            rxs.into_iter()
+                .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap().tokens)
+                .collect(),
+        );
+        server.shutdown();
+    }
+
+    // Budget: big enough for either model alone, smaller than both
+    // together — every switch must evict the previous resident.
+    let sa = std::fs::metadata(&pa).unwrap().len();
+    let sb = std::fs::metadata(&pb).unwrap().len();
+    let budget = sa.max(sb) + sa.min(sb) / 2;
+    assert!(budget < sa + sb, "budget must not fit both models");
+    let registry = Arc::new(ModelRegistry::new(budget));
+    registry.register("a", &pa);
+    registry.register("b", &pb);
+    let cfg = ServerConfig { workers: 1, ..Default::default() };
+    let server = Server::start_registry(Arc::clone(&registry), "a", cfg);
+
+    // Interleave a/b sequentially (one at a time so the single worker
+    // rebinds on every request — the maximally store-hostile schedule).
+    for round in 0..2 {
+        for (pi, prompt) in prompts.iter().enumerate() {
+            for (mi, name) in ["a", "b"].iter().enumerate() {
+                let opts =
+                    SubmitOpts { model: Some(name.to_string()), ..Default::default() };
+                let (_, rx) = server.submit_opts(prompt.clone(), max_new, 0.0, opts);
+                let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+                assert_eq!(
+                    resp.tokens, baseline[mi][pi],
+                    "round {round}: model {name} prompt {pi} diverged from its \
+                     single-model run"
+                );
+            }
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 2 * prompts.len() * 2);
+    let store = stats.store.expect("registry servers report store stats");
+    assert!(store.evictions >= 1, "budget pressure must evict at least once: {store:?}");
+    assert!(
+        store.bytes_resident <= budget,
+        "idle store must fit the budget: {} resident vs {budget}",
+        store.bytes_resident
+    );
+    let mut per: Vec<_> = store.per_model.clone();
+    per.sort();
+    let n = (2 * prompts.len()) as u64;
+    assert_eq!(per, vec![("a".to_string(), n), ("b".to_string(), n)]);
+    std::fs::remove_file(pa).ok();
+    std::fs::remove_file(pb).ok();
+}

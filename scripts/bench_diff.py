@@ -1,13 +1,20 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_generation.json files produced by
-`cargo bench --bench generation_speed` (stdlib only — CI has no extra
-Python packages).
+"""Diff two benchmark JSON files produced by the cargo bench harnesses
+(stdlib only — CI has no extra Python packages).
 
 Usage:
     python3 scripts/bench_diff.py PREVIOUS.json CURRENT.json
 
-Runs are keyed by (max_batch, workers). For each key present in both
-files the script prints tok/s and queue/compute p50/p95/p99 deltas;
+Supports both payload kinds, dispatching on the top-level "bench" field:
+
+  * "generation_speed" (BENCH_generation.json, `--bench generation_speed`):
+    runs keyed by (max_batch, workers); tok/s and queue/compute
+    p50/p95/p99 deltas.
+  * "kernel_speed" (BENCH_kernels.json, `--bench kernel_speed`): runs
+    keyed by (kernel, method, d_out, d_in, n); ns/op and bytes-read
+    deltas.
+
+For each key present in both files the script prints per-metric deltas;
 keys only in one file are listed as added/removed. Exit code is always
 0 — the diff is informational trend tracking, not a gate (wall-clock
 numbers on shared CI runners are too noisy to fail a build on).
@@ -16,26 +23,45 @@ numbers on shared CI runners are too noisy to fail a build on).
 import json
 import sys
 
-
-def key(run):
-    return (int(run.get("max_batch", 0)), int(run.get("workers", 0)))
-
-
-METRICS = [
-    ("tok_s", "tok/s", 1.0),
-    ("queue_p50_s", "queue p50 (ms)", 1e3),
-    ("queue_p95_s", "queue p95 (ms)", 1e3),
-    ("queue_p99_s", "queue p99 (ms)", 1e3),
-    ("compute_p50_s", "compute p50 (ms)", 1e3),
-    ("compute_p95_s", "compute p95 (ms)", 1e3),
-    ("compute_p99_s", "compute p99 (ms)", 1e3),
-]
+# Per-bench-kind schema: how runs are keyed, how a key renders, and which
+# metrics to diff (field, label, display scale).
+SCHEMAS = {
+    "generation_speed": {
+        "key": lambda r: (int(r.get("max_batch", 0)), int(r.get("workers", 0))),
+        "tag": lambda k: f"max_batch={k[0]} workers={k[1]}",
+        "metrics": [
+            ("tok_s", "tok/s", 1.0),
+            ("queue_p50_s", "queue p50 (ms)", 1e3),
+            ("queue_p95_s", "queue p95 (ms)", 1e3),
+            ("queue_p99_s", "queue p99 (ms)", 1e3),
+            ("compute_p50_s", "compute p50 (ms)", 1e3),
+            ("compute_p95_s", "compute p95 (ms)", 1e3),
+            ("compute_p99_s", "compute p99 (ms)", 1e3),
+        ],
+    },
+    "kernel_speed": {
+        "key": lambda r: (
+            str(r.get("kernel", "")),
+            str(r.get("method", "")),
+            int(r.get("d_out", 0)),
+            int(r.get("d_in", 0)),
+            int(r.get("n", 0)),
+        ),
+        "tag": lambda k: f"{k[0]} {k[1]} {k[2]}x{k[3]} n={k[4]}",
+        "metrics": [
+            ("ns_per_op", "ns/op", 1.0),
+            ("bytes_read", "bytes read", 1.0),
+        ],
+    },
+}
 
 
 def load(path):
     with open(path) as f:
         doc = json.load(f)
-    return {key(r): r for r in doc.get("runs", [])}
+    kind = doc.get("bench", "generation_speed")
+    schema = SCHEMAS.get(kind, SCHEMAS["generation_speed"])
+    return kind, schema, {schema["key"](r): r for r in doc.get("runs", [])}
 
 
 def main(argv):
@@ -43,23 +69,26 @@ def main(argv):
         print(__doc__.strip(), file=sys.stderr)
         return 2
     try:
-        prev = load(argv[1])
+        prev_kind, _, prev = load(argv[1])
     except OSError as e:
         # No previous run cached (first build on a branch) — nothing to diff.
         print(f"no previous benchmark to diff against ({e}); skipping")
         return 0
-    cur = load(argv[2])
+    cur_kind, schema, cur = load(argv[2])
+    if prev_kind != cur_kind:
+        print(f"bench kind changed ({prev_kind} -> {cur_kind}); nothing comparable")
+        return 0
 
     for k in sorted(set(prev) | set(cur)):
-        tag = f"max_batch={k[0]} workers={k[1]}"
+        tag = schema["tag"](k)
         if k not in prev:
-            print(f"[added]   {tag}: tok/s {cur[k].get('tok_s', 0.0):.1f}")
+            print(f"[added]   {tag}")
             continue
         if k not in cur:
             print(f"[removed] {tag}")
             continue
         parts = []
-        for field, label, scale in METRICS:
+        for field, label, scale in schema["metrics"]:
             old = prev[k].get(field)
             new = cur[k].get(field)
             if old is None or new is None:

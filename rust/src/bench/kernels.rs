@@ -7,6 +7,7 @@ use super::workspace::Workspace;
 use crate::coordinator::shapes::choose_shape;
 use crate::eval::report::Table;
 use crate::util::json::Json;
+use crate::kernels::config::KernelConfig;
 use crate::kernels::format::{AqlmShape, AqlmWeight};
 use crate::kernels::matvec::PackedAqlm;
 use crate::tensor::ops::gemv;
@@ -162,14 +163,37 @@ fn synthetic_spqr(
     .expect("synthetic spqr is well-formed")
 }
 
+/// The `threads × simd` kernel-config axis swept by [`t5c_kernel_json`]:
+/// serial scalar, serial+SIMD, and (on multi-core hosts) all-cores scalar
+/// and all-cores+SIMD. Each point is encoded into the bench's method
+/// string (`…:t4+simd`) so `scripts/bench_diff.py` keys stay unique.
+fn kernel_sweep_configs() -> Vec<KernelConfig> {
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut cfgs = vec![
+        KernelConfig { threads: 1, simd: false },
+        KernelConfig { threads: 1, simd: true },
+    ];
+    if ncpu > 1 {
+        cfgs.push(KernelConfig { threads: ncpu, simd: false });
+        cfgs.push(KernelConfig { threads: ncpu, simd: true });
+    }
+    cfgs
+}
+
+/// `:tN[+simd]` suffix naming one point of the kernel-config axis.
+fn kernel_cfg_tag(kc: KernelConfig) -> String {
+    format!(":t{}{}", kc.threads, if kc.simd { "+simd" } else { "" })
+}
+
 /// Table 5c: machine-readable kernel microbenchmark. Besides the table this
 /// returns the JSON payload written to `BENCH_kernels.json` — per-kernel
-/// ns/op and bytes-read for matvec/matmat across methods and shapes — which
-/// CI archives and diffs against the previous run
-/// (`scripts/bench_diff.py`). `bytes_read` is the packed operand footprint
-/// one kernel invocation streams (weight bytes; batched kernels read it
-/// once for all `n` lanes), so ns/op regressions can be read against a
-/// bandwidth floor.
+/// ns/op and bytes-read for matvec/matmat across methods, shapes, and the
+/// `threads × simd` kernel-config axis (encoded in the method string, e.g.
+/// `aqlm:2x8g8:t4+simd`) — which CI archives and diffs against the
+/// previous run (`scripts/bench_diff.py`). `bytes_read` is the packed
+/// operand footprint one kernel invocation streams (weight bytes; batched
+/// kernels read it once for all `n` lanes), so ns/op regressions can be
+/// read against a bandwidth floor.
 pub fn t5c_kernel_json(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)> {
     let mut t = Table::new(
         "Table 5c: kernel microbench — ns/op and packed bytes per call",
@@ -239,6 +263,19 @@ pub fn t5c_kernel_json(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)>
                 packed.matmat_auto(black_box(&xs), batch, &mut blut, &mut ys)
             });
             record(&mut t, &mut runs, "matmat", &method, d_out, d_in, batch, s.median, bytes);
+            // Kernel-config axis: every (threads, simd) point decodes
+            // bit-identically; only the wall clock moves.
+            for kc in kernel_sweep_configs() {
+                let mname = format!("{method}{}", kernel_cfg_tag(kc));
+                let s = bench_adaptive(0.05, iters, || {
+                    packed.matvec_lut_with(black_box(&x), &mut lut, &mut y, kc)
+                });
+                record(&mut t, &mut runs, "matvec_lut", &mname, d_out, d_in, 1, s.median, bytes);
+                let s = bench_adaptive(0.05, iters, || {
+                    packed.matmat_auto_with(black_box(&xs), batch, &mut blut, &mut ys, kc)
+                });
+                record(&mut t, &mut runs, "matmat", &mname, d_out, d_in, batch, s.median, bytes);
+            }
         }
         // SpQR: fused sparse-outlier matvec and its batched variant.
         {
@@ -254,6 +291,17 @@ pub fn t5c_kernel_json(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)>
                 q.matvec_batch(black_box(&xs), batch, &mut scratch, &mut ys)
             });
             record(&mut t, &mut runs, "matmat", method, d_out, d_in, batch, s.median, bytes);
+            for kc in kernel_sweep_configs() {
+                let mname = format!("{method}{}", kernel_cfg_tag(kc));
+                let s = bench_adaptive(0.05, iters, || {
+                    q.matvec_with(black_box(&x), &mut scratch, &mut y, kc)
+                });
+                record(&mut t, &mut runs, "matvec", &mname, d_out, d_in, 1, s.median, bytes);
+                let s = bench_adaptive(0.05, iters, || {
+                    q.matvec_batch_with(black_box(&xs), batch, &mut scratch, &mut ys, kc)
+                });
+                record(&mut t, &mut runs, "matmat", &mname, d_out, d_in, batch, s.median, bytes);
+            }
         }
     }
     let mut out = Json::obj();
@@ -333,16 +381,17 @@ pub fn t14b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     Ok(vec![t])
 }
 
-/// Table 14c: fleet sweep over (max_batch × workers) on the paged-KV
-/// server. Besides the human-readable table this returns the
+/// Table 14c: fleet sweep over (max_batch × workers × kernel-threads) on
+/// the paged-KV server. Besides the human-readable table this returns the
 /// machine-readable payload written to `BENCH_generation.json` — tok/s
 /// plus queue/compute p50/p95/p99 per configuration — which CI archives
-/// and diffs against the previous run (`scripts/bench_diff.py`).
+/// and diffs against the previous run (`scripts/bench_diff.py`, which keys
+/// generation runs by (max_batch, workers, kernel_threads)).
 pub fn t14c_fleet_sweep(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)> {
     use crate::coordinator::server::{Server, ServerConfig};
     let mut t = Table::new(
-        "Table 14c: fleet sweep — tok/s and latency percentiles vs (max_batch, workers)",
-        &["max_batch", "workers", "tok/s", "queue p50/p95/p99 (ms)", "compute p50/p95/p99 (ms)"],
+        "Table 14c: fleet sweep — tok/s and latency percentiles vs (max_batch, workers, kthreads)",
+        &["max_batch", "workers", "kthreads", "tok/s", "queue p50/p95/p99 (ms)", "compute p50/p95/p99 (ms)"],
     );
     let base = ws.base_model("nano")?;
     let shape = choose_shape(&base.cfg, 2.0, 8);
@@ -352,41 +401,53 @@ pub fn t14c_fleet_sweep(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)
     let max_new = if ws.profile.fast { 24 } else { 64 };
     let batches: &[usize] = if ws.profile.fast { &[1, 4, 8] } else { &[1, 4, 8, 16] };
     let worker_counts: &[usize] = if ws.profile.fast { &[1, 2] } else { &[1, 2, 4] };
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let kernel_threads: Vec<usize> = if ncpu > 1 { vec![1, ncpu] } else { vec![1] };
     let mut runs = Json::arr();
     for &max_batch in batches {
         for &workers in worker_counts {
-            let cfg = ServerConfig { max_batch, workers, seed: 0, ..Default::default() };
-            let server = Server::start(quantized.clone(), cfg);
-            let rxs: Vec<_> = (0..n_req)
-                .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
-                .collect();
-            for rx in rxs {
-                rx.recv().expect("generation response");
+            for &kthreads in &kernel_threads {
+                let cfg = ServerConfig {
+                    max_batch,
+                    workers,
+                    seed: 0,
+                    kernel: KernelConfig { threads: kthreads, simd: true },
+                    ..Default::default()
+                };
+                let server = Server::start(quantized.clone(), cfg);
+                let rxs: Vec<_> = (0..n_req)
+                    .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
+                    .collect();
+                for rx in rxs {
+                    rx.recv().expect("generation response");
+                }
+                let stats = server.shutdown();
+                let q = [50.0, 95.0, 99.0].map(|p| stats.queue_percentile_s(p));
+                let c = [50.0, 95.0, 99.0].map(|p| stats.compute_percentile_s(p));
+                t.row(vec![
+                    format!("{max_batch}"),
+                    format!("{workers}"),
+                    format!("{kthreads}"),
+                    format!("{:.1}", stats.tokens_per_second()),
+                    format!("{:.2}/{:.2}/{:.2}", q[0] * 1e3, q[1] * 1e3, q[2] * 1e3),
+                    format!("{:.2}/{:.2}/{:.2}", c[0] * 1e3, c[1] * 1e3, c[2] * 1e3),
+                ]);
+                let mut run = Json::obj();
+                run.set("max_batch", Json::Num(max_batch as f64))
+                    .set("workers", Json::Num(workers as f64))
+                    .set("kernel_threads", Json::Num(kthreads as f64))
+                    .set("tok_s", Json::Num(stats.tokens_per_second()))
+                    .set("requests", Json::Num(stats.requests as f64))
+                    .set("preemptions", Json::Num(stats.preemptions as f64))
+                    .set("peak_active", Json::Num(stats.peak_active as f64))
+                    .set("queue_p50_s", Json::Num(q[0]))
+                    .set("queue_p95_s", Json::Num(q[1]))
+                    .set("queue_p99_s", Json::Num(q[2]))
+                    .set("compute_p50_s", Json::Num(c[0]))
+                    .set("compute_p95_s", Json::Num(c[1]))
+                    .set("compute_p99_s", Json::Num(c[2]));
+                runs.push(run);
             }
-            let stats = server.shutdown();
-            let q = [50.0, 95.0, 99.0].map(|p| stats.queue_percentile_s(p));
-            let c = [50.0, 95.0, 99.0].map(|p| stats.compute_percentile_s(p));
-            t.row(vec![
-                format!("{max_batch}"),
-                format!("{workers}"),
-                format!("{:.1}", stats.tokens_per_second()),
-                format!("{:.2}/{:.2}/{:.2}", q[0] * 1e3, q[1] * 1e3, q[2] * 1e3),
-                format!("{:.2}/{:.2}/{:.2}", c[0] * 1e3, c[1] * 1e3, c[2] * 1e3),
-            ]);
-            let mut run = Json::obj();
-            run.set("max_batch", Json::Num(max_batch as f64))
-                .set("workers", Json::Num(workers as f64))
-                .set("tok_s", Json::Num(stats.tokens_per_second()))
-                .set("requests", Json::Num(stats.requests as f64))
-                .set("preemptions", Json::Num(stats.preemptions as f64))
-                .set("peak_active", Json::Num(stats.peak_active as f64))
-                .set("queue_p50_s", Json::Num(q[0]))
-                .set("queue_p95_s", Json::Num(q[1]))
-                .set("queue_p99_s", Json::Num(q[2]))
-                .set("compute_p50_s", Json::Num(c[0]))
-                .set("compute_p95_s", Json::Num(c[1]))
-                .set("compute_p99_s", Json::Num(c[2]));
-            runs.push(run);
         }
     }
     let mut out = Json::obj();

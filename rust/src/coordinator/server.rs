@@ -41,6 +41,7 @@ use super::scheduler::{
     percentile, prompt_window, AdmissionQueue, Completion, QueuedRequest, SchedConfig,
     WorkerScheduler,
 };
+use crate::kernels::config::KernelConfig;
 use crate::nn::model::Model;
 use crate::runtime::store::{ModelRegistry, StoreStats};
 use crate::util::rng::Rng;
@@ -71,6 +72,11 @@ pub struct ServerConfig {
     /// footprint — no preemption ever triggers); `Some(n)` caps KV memory
     /// and lets the scheduler hold admission / preempt under pressure.
     pub kv_pool_blocks: Option<usize>,
+    /// Kernel execution knobs (row-parallel worker threads, SIMD) applied
+    /// to every served model before warm-up. Bit-identical output for any
+    /// setting (see `docs/kernels.md`); set from `--kernel-threads` /
+    /// `--no-simd` on the CLI.
+    pub kernel: KernelConfig,
 }
 
 impl Default for ServerConfig {
@@ -82,6 +88,7 @@ impl Default for ServerConfig {
             prefill_chunk: 32,
             kv_block_size: 16,
             kv_pool_blocks: None,
+            kernel: KernelConfig::default(),
         }
     }
 }
@@ -466,6 +473,7 @@ impl Server {
     /// Warm `model`'s decode caches and spawn `cfg.workers` worker threads
     /// sharing it behind an `Arc`, each with a private paged KV pool.
     pub fn start(mut model: Model, cfg: ServerConfig) -> Server {
+        model.kernel = cfg.kernel;
         model.warm_decode();
         Server::spawn(Backend::Single(Arc::new(model)), cfg)
     }
@@ -481,6 +489,7 @@ impl Server {
         default_model: &str,
         cfg: ServerConfig,
     ) -> Server {
+        registry.set_kernel_config(cfg.kernel);
         Server::spawn(
             Backend::Registry { registry, default_model: default_model.to_string() },
             cfg,

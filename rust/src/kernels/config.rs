@@ -1,0 +1,180 @@
+//! Runtime kernel configuration: worker-thread count and SIMD dispatch.
+//!
+//! Every parallel/SIMD kernel in this crate takes a [`KernelConfig`] and
+//! stays **bit-for-bit equal** to its scalar-serial oracle at any setting
+//! (see `docs/kernels.md` for why). The config flows from the CLI
+//! (`aqlm serve/quantize --kernel-threads N --no-simd`) through
+//! [`crate::coordinator::server::ServerConfig`] and
+//! [`crate::nn::model::Model::kernel`] into the packed kernels; code that
+//! has no config in hand (tests, old call sites) uses
+//! [`KernelConfig::serial`], the oracle setting.
+//!
+//! Two process-wide knobs exist for paths that cannot thread a config
+//! through (the quantization pipeline's auto mode): a default thread count
+//! ([`set_default_threads`]) and a SIMD kill switch ([`set_simd_disabled`]).
+//! Both are written only by `main.rs` flag parsing, never by library code,
+//! so concurrently running tests are unaffected. The environment variables
+//! `AQLM_KERNEL_THREADS` and `AQLM_NO_SIMD` act as outermost fallbacks
+//! (read once and cached), which is how CI forces a scalar run of the whole
+//! suite without touching any call site.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Auto mode only: below this many output rows the scoped-spawn overhead
+/// dominates, so the kernel stays serial. Explicit thread counts are always
+/// honored so differential tests can exercise the parallel paths on tiny
+/// shapes.
+const AUTO_MIN_ROWS: usize = 64;
+
+/// Knobs for the packed kernels. `Copy` and tiny — pass it by value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Worker threads for row-parallel kernels. `0` = auto: the process
+    /// default ([`set_default_threads`]), else `AQLM_KERNEL_THREADS`, else
+    /// [`std::thread::available_parallelism`] — with a small-shape cutoff
+    /// so tiny matrices stay serial. Any explicit value is clamped to the
+    /// row count, never below 1.
+    pub threads: usize,
+    /// Allow the SIMD (AVX2) inner loops. The actual dispatch also requires
+    /// runtime CPU support and neither [`set_simd_disabled`] nor
+    /// `AQLM_NO_SIMD` being set; see [`KernelConfig::simd_enabled`].
+    pub simd: bool,
+}
+
+impl Default for KernelConfig {
+    /// Auto threads, SIMD allowed — the serving default.
+    fn default() -> KernelConfig {
+        KernelConfig { threads: 0, simd: true }
+    }
+}
+
+impl KernelConfig {
+    /// The scalar-serial oracle setting: one thread, no SIMD. All
+    /// differential tests compare other configs against this one.
+    pub fn serial() -> KernelConfig {
+        KernelConfig { threads: 1, simd: false }
+    }
+
+    /// Resolve `threads` against a concrete row count. Guarantees:
+    /// `1 <= result <= max(rows, 1)`, so no kernel ever spawns an
+    /// empty-range worker (degenerate shapes included — `rows == 0`
+    /// resolves to 1 and the row loop simply runs zero iterations).
+    pub fn effective_threads(&self, rows: usize) -> usize {
+        if rows <= 1 {
+            return 1;
+        }
+        if self.threads != 0 {
+            return self.threads.min(rows);
+        }
+        if rows < AUTO_MIN_ROWS {
+            return 1;
+        }
+        auto_threads().min(rows)
+    }
+
+    /// Whether the SIMD inner loops actually run: requires this config's
+    /// `simd` flag, no process-wide disable, no `AQLM_NO_SIMD`, and AVX2
+    /// support detected at runtime. On non-x86_64 targets this is always
+    /// `false` (the scalar loops are the only implementation).
+    pub fn simd_enabled(&self) -> bool {
+        self.simd && !SIMD_DISABLED.load(Ordering::Relaxed) && simd_runtime_available()
+    }
+}
+
+/// Process-default thread count for auto mode (`threads == 0`); 0 = unset.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// Process-wide SIMD kill switch (CLI `--no-simd`).
+static SIMD_DISABLED: AtomicBool = AtomicBool::new(false);
+
+/// Set the process-default worker count used by auto mode (`threads == 0`).
+/// Called by `main.rs` for `--kernel-threads`; `0` restores auto detection.
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Process-wide SIMD disable (CLI `--no-simd`): forces every
+/// [`KernelConfig::simd_enabled`] to `false` regardless of per-call flags.
+pub fn set_simd_disabled(disabled: bool) {
+    SIMD_DISABLED.store(disabled, Ordering::Relaxed);
+}
+
+/// Auto-mode thread count: process default → env → hardware.
+fn auto_threads() -> usize {
+    let n = DEFAULT_THREADS.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    let env = *ENV.get_or_init(|| {
+        std::env::var("AQLM_KERNEL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(0)
+    });
+    if env != 0 {
+        return env;
+    }
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Whether the SIMD inner loops are usable on this machine and environment:
+/// x86_64 with AVX2 detected at runtime and `AQLM_NO_SIMD` unset. Cached on
+/// first call. This is the availability half of dispatch; the per-call and
+/// process-wide opt-outs live in [`KernelConfig::simd_enabled`].
+pub fn simd_runtime_available() -> bool {
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| std::env::var_os("AQLM_NO_SIMD").is_none() && detect_avx2())
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_avx2() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx2() -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_is_one_thread_no_simd() {
+        let cfg = KernelConfig::serial();
+        assert_eq!(cfg.threads, 1);
+        assert!(!cfg.simd);
+        assert!(!cfg.simd_enabled());
+        assert_eq!(cfg.effective_threads(1000), 1);
+    }
+
+    #[test]
+    fn explicit_threads_clamp_to_rows() {
+        let cfg = KernelConfig { threads: 8, simd: false };
+        // d_out < threads must not produce empty-range workers.
+        assert_eq!(cfg.effective_threads(3), 3);
+        assert_eq!(cfg.effective_threads(8), 8);
+        assert_eq!(cfg.effective_threads(100), 8);
+        // Degenerate shapes resolve to a single (possibly empty) range.
+        assert_eq!(cfg.effective_threads(0), 1);
+        assert_eq!(cfg.effective_threads(1), 1);
+    }
+
+    #[test]
+    fn explicit_threads_ignore_small_shape_cutoff() {
+        // Differential tests rely on tiny shapes still going parallel when
+        // asked explicitly.
+        let cfg = KernelConfig { threads: 4, simd: false };
+        assert_eq!(cfg.effective_threads(8), 4);
+    }
+
+    #[test]
+    fn auto_mode_stays_serial_on_small_shapes() {
+        let cfg = KernelConfig { threads: 0, simd: true };
+        assert_eq!(cfg.effective_threads(AUTO_MIN_ROWS - 1), 1);
+        assert!(cfg.effective_threads(4096) >= 1);
+    }
+}

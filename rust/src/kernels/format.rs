@@ -385,15 +385,30 @@ impl PackedSpqr {
     /// (and hence their bit-for-bit parity with a dense GEMV) cannot drift.
     #[inline]
     pub(super) fn decode_row_seq(&self, reader: &mut BitReader, i: usize, out: &mut [f32]) {
+        self.decode_row_seq_simd(reader, i, out, false);
+    }
+
+    /// [`Self::decode_row_seq`] with the grouped-dequant inner loop
+    /// optionally vectorized (AVX2). The dequant `s · (code − z)` is
+    /// elementwise, so the SIMD path is bit-identical to scalar (see
+    /// [`super::simd::dequant_span`]); the serving kernels pass their
+    /// resolved SIMD flag here.
+    #[inline]
+    pub(super) fn decode_row_seq_simd(
+        &self,
+        reader: &mut BitReader,
+        i: usize,
+        out: &mut [f32],
+        simd: bool,
+    ) {
         debug_assert_eq!(out.len(), self.d_in);
         let g = self.group;
         let ng = self.n_groups();
         for j in 0..ng {
             let mi = i * ng + j;
             let (s, z) = (self.scales[mi], self.zeros[mi]);
-            for t in 0..self.group_width(j) {
-                out[j * g + t] = s * (reader.next() as f32 - z);
-            }
+            let w = self.group_width(j);
+            super::simd::dequant_span(reader, s, z, &mut out[j * g..j * g + w], simd);
         }
         for k in self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize {
             out[self.col_idx[k] as usize] = self.values[k];

@@ -41,10 +41,36 @@
 //! reads the packed code stream once per step and fans each reconstructed
 //! row out across all batch lanes, amortizing the dominant code-stream
 //! traffic `n`-fold exactly like the batched AQLM kernels.
+//!
+//! # Parallel and SIMD execution
+//!
+//! Every kernel here exists in two forms: the plain name (`matvec_lut`,
+//! `matmat_decode`, …) is the **scalar-serial oracle**, and the `*_with`
+//! variant takes a [`KernelConfig`] that may split the output rows across
+//! scoped worker threads ([`super::parallel`]) and vectorize the inner
+//! loops ([`super::simd`]). Both knobs preserve bit-for-bit equality with
+//! the oracle — row partitioning never changes a row's reduction order,
+//! and only provably order-preserving loops are vectorized — which
+//! `rust/tests/integration_kernels.rs` enforces at 0 ulp. The full
+//! argument lives in `docs/kernels.md`.
 
+use super::config::KernelConfig;
 use super::format::{AqlmWeight, PackedSpqr};
 use super::packed::{pack, BitReader};
+use super::{parallel, simd};
 use crate::tensor::ops::dot;
+
+/// Scatter per-range worker outputs (lane-major over the range,
+/// `out[b·(hi−lo) + (i−lo)]`) back into the full lane-major `ys`
+/// (`[n][d_out]`), in range order.
+fn scatter_lanes(ys: &mut [f32], d_out: usize, n: usize, results: &[(usize, usize, Vec<f32>)]) {
+    for &(lo, hi, ref out) in results {
+        let rows = hi - lo;
+        for b in 0..n {
+            ys[b * d_out + lo..b * d_out + hi].copy_from_slice(&out[b * rows..(b + 1) * rows]);
+        }
+    }
+}
 
 /// Deployment format: bit-packed codes + flat codebooks.
 #[derive(Clone, Debug)]
@@ -126,17 +152,36 @@ impl PackedAqlm {
         }
     }
 
-    /// y = Ŵ x via streaming decode + FMA.
+    /// y = Ŵ x via streaming decode + FMA (scalar-serial oracle).
     pub fn matvec_decode(&self, x: &[f32], y: &mut [f32]) {
+        self.matvec_decode_with(x, y, KernelConfig::serial());
+    }
+
+    /// [`Self::matvec_decode`] with row-parallelism per `cfg`: each worker
+    /// re-seeks the packed code stream to its range's first row and runs
+    /// the identical per-row code, so results are bit-for-bit equal to
+    /// serial at any thread count. This kernel has no SIMD path — its
+    /// accumulator is one sequential FMA chain per row, and widening it
+    /// would change the summation order (`cfg.simd` is ignored).
+    pub fn matvec_decode_with(&self, x: &[f32], y: &mut [f32], cfg: KernelConfig) {
         debug_assert_eq!(x.len(), self.d_in);
         debug_assert_eq!(y.len(), self.d_out);
+        let threads = cfg.effective_threads(self.d_out);
+        parallel::for_each_row_chunk(y, threads, |lo, hi, chunk| {
+            self.matvec_decode_rows(x, lo, hi, chunk);
+        });
+    }
+
+    /// Rows `lo..hi` of the decode kernel, written to `y[0..hi-lo]`.
+    fn matvec_decode_rows(&self, x: &[f32], lo: usize, hi: usize, y: &mut [f32]) {
         let g = self.group;
         let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
+        reader.seek(lo * self.n_groups() * self.n_codebooks);
         // Reconstruction buffer: stack for the common small groups (the
         // compiler keeps it in registers), heap once per call for g > 64.
         let mut stack = [0.0f32; 64];
         let mut heap = if g > 64 { vec![0.0f32; g] } else { Vec::new() };
-        for i in 0..self.d_out {
+        for i in lo..hi {
             let mut acc = 0.0f32;
             for j in 0..self.n_groups() {
                 let xg = &x[j * g..(j + 1) * g];
@@ -147,7 +192,7 @@ impl PackedAqlm {
                     acc += wbuf[t] * xg[t];
                 }
             }
-            y[i] = acc * self.scales[i];
+            y[i - lo] = acc * self.scales[i];
         }
     }
 
@@ -158,16 +203,46 @@ impl PackedAqlm {
     /// FMA'd against every lane before the next codes are decoded, so the
     /// memory-bound code read amortizes `n`-fold. Each lane's accumulation
     /// order matches [`Self::matvec_decode`] exactly (bit-identical results).
+    /// Scalar-serial oracle.
     pub fn matmat_decode(&self, xs: &[f32], n: usize, ys: &mut [f32]) {
+        self.matmat_decode_with(xs, n, ys, KernelConfig::serial());
+    }
+
+    /// [`Self::matmat_decode`] with row-parallelism per `cfg` (bit-for-bit
+    /// equal to serial; no SIMD path, like [`Self::matvec_decode_with`]).
+    /// Workers compute disjoint row ranges into local lane-major buffers
+    /// which are scattered back into `ys` in range order.
+    pub fn matmat_decode_with(&self, xs: &[f32], n: usize, ys: &mut [f32], cfg: KernelConfig) {
         assert_eq!(xs.len(), n * self.d_in);
         assert_eq!(ys.len(), n * self.d_out);
+        let d_out = self.d_out;
+        let threads = cfg.effective_threads(d_out);
+        if threads <= 1 {
+            self.matmat_decode_rows(xs, n, 0, d_out, ys);
+            return;
+        }
+        let results = parallel::map_row_chunks(d_out, threads, |lo, hi| {
+            let mut out = vec![0.0f32; n * (hi - lo)];
+            self.matmat_decode_rows(xs, n, lo, hi, &mut out);
+            (lo, hi, out)
+        });
+        scatter_lanes(ys, d_out, n, &results);
+    }
+
+    /// Rows `lo..hi` of the batched decode kernel. `out` is lane-major over
+    /// the range (`out[b·(hi−lo) + (i−lo)]`); with `lo = 0, hi = d_out`
+    /// that is exactly the full `ys` layout, so the serial path writes `ys`
+    /// directly.
+    fn matmat_decode_rows(&self, xs: &[f32], n: usize, lo: usize, hi: usize, out: &mut [f32]) {
         let g = self.group;
-        let (d_in, d_out) = (self.d_in, self.d_out);
+        let d_in = self.d_in;
+        let rows = hi - lo;
         let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
+        reader.seek(lo * self.n_groups() * self.n_codebooks);
         let mut stack = [0.0f32; 64];
         let mut heap = if g > 64 { vec![0.0f32; g] } else { Vec::new() };
         let mut acc = vec![0.0f32; n];
-        for i in 0..d_out {
+        for i in lo..hi {
             acc.fill(0.0);
             for j in 0..self.n_groups() {
                 let wbuf: &mut [f32] =
@@ -182,7 +257,7 @@ impl PackedAqlm {
                 }
             }
             for b in 0..n {
-                ys[b * d_out + i] = acc[b] * self.scales[i];
+                out[b * rows + (i - lo)] = acc[b] * self.scales[i];
             }
         }
     }
@@ -217,47 +292,57 @@ impl PackedAqlm {
 
     /// y = Ŵ x via per-input lookup tables (the paper's CPU kernel).
     /// `lut` is caller-provided scratch of `lut_len()` to keep the hot loop
-    /// allocation-free.
+    /// allocation-free. Scalar-serial oracle.
     pub fn matvec_lut(&self, x: &[f32], lut: &mut [f32], y: &mut [f32]) {
+        self.matvec_lut_with(x, lut, y, KernelConfig::serial());
+    }
+
+    /// [`Self::matvec_lut`] with row-parallelism and (for byte-aligned
+    /// codes) an AVX2 LUT-accumulate per `cfg`. Phase 1 (the LUT build) is
+    /// per input vector and stays on the caller's thread; phase 2 splits
+    /// the output rows. Both knobs are bit-for-bit equal to the oracle —
+    /// see [`super::simd::lut_row_sum`] for the SIMD argument.
+    pub fn matvec_lut_with(&self, x: &[f32], lut: &mut [f32], y: &mut [f32], cfg: KernelConfig) {
         debug_assert_eq!(x.len(), self.d_in);
         debug_assert_eq!(y.len(), self.d_out);
         debug_assert_eq!(lut.len(), self.lut_len());
-        let k = self.codebook_size();
         self.build_lut(x, lut);
-        // Phase 2: pure table additions. The LUT layout `(j·M + m)·K + c`
-        // matches the code stream order exactly, so each row is a linear
-        // scan `acc += lut[idx·K + code[idx]]`.
+        let threads = cfg.effective_threads(self.d_out);
+        let simd = cfg.simd_enabled();
+        let lut: &[f32] = lut;
+        parallel::for_each_row_chunk(y, threads, |lo, hi, chunk| {
+            self.matvec_lut_rows(lut, lo, hi, chunk, simd);
+        });
+    }
+
+    /// Rows `lo..hi` of LUT phase 2, written to `y[0..hi-lo]`: pure table
+    /// additions. The LUT layout `(j·M + m)·K + c` matches the code stream
+    /// order exactly, so each row is a linear scan
+    /// `acc += lut[idx·K + code[idx]]`.
+    fn matvec_lut_rows(&self, lut: &[f32], lo: usize, hi: usize, y: &mut [f32], simd: bool) {
+        let k = self.codebook_size();
         let per_row = self.n_groups() * self.n_codebooks;
         if let Some(bytes) = &self.codes_bytes {
             // §Perf k4/k5: byte-aligned codes + 8 independent accumulators
             // (breaks the load→add latency chain; several loads in flight).
-            for i in 0..self.d_out {
+            // The SIMD path maps those 8 partials onto one AVX2 register
+            // bit-identically.
+            for i in lo..hi {
                 let row = &bytes[i * per_row..(i + 1) * per_row];
-                let mut a = [0.0f32; 8];
-                let chunks = per_row / 8;
-                for cidx in 0..chunks {
-                    let idx = cidx * 8;
-                    // 8 independent gather→add chains keep several L2 loads
-                    // in flight (§Perf k5).
-                    for u in 0..8 {
-                        a[u] += lut[(idx + u) * k + row[idx + u] as usize];
-                    }
-                }
-                let mut acc: f32 = a.iter().sum();
-                for idx in chunks * 8..per_row {
-                    acc += lut[idx * k + row[idx] as usize];
-                }
-                y[i] = acc * self.scales[i];
+                y[i - lo] = simd::lut_row_sum(lut, k, row, simd) * self.scales[i];
             }
         } else {
+            // Non-byte widths are bottlenecked on the serial BitReader:
+            // scalar only.
             let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
-            for i in 0..self.d_out {
+            reader.seek(lo * per_row);
+            for i in lo..hi {
                 let mut acc = 0.0f32;
                 for idx in 0..per_row {
                     let c = reader.next() as usize;
                     acc += lut[idx * k + c];
                 }
-                y[i] = acc * self.scales[i];
+                y[i - lo] = acc * self.scales[i];
             }
         }
     }
@@ -271,36 +356,74 @@ impl PackedAqlm {
     /// dominant code-stream traffic amortizes `n`-fold. Per-lane accumulator
     /// structure mirrors [`Self::matvec_lut`] (8 chained partials + tail),
     /// so results are bit-identical to `n` independent calls.
+    /// Scalar-serial oracle.
     pub fn matmat_lut(&self, xs: &[f32], n: usize, lut: &mut [f32], ys: &mut [f32]) {
+        self.matmat_lut_with(xs, n, lut, ys, KernelConfig::serial());
+    }
+
+    /// [`Self::matmat_lut`] with row-parallelism and (byte path) AVX2
+    /// LUT-accumulate per `cfg`, bit-for-bit equal to the oracle. Per-lane
+    /// LUT builds stay on the caller's thread; phase-2 workers compute
+    /// disjoint row ranges into local lane-major buffers scattered back in
+    /// range order.
+    pub fn matmat_lut_with(
+        &self,
+        xs: &[f32],
+        n: usize,
+        lut: &mut [f32],
+        ys: &mut [f32],
+        cfg: KernelConfig,
+    ) {
         assert_eq!(xs.len(), n * self.d_in);
         assert_eq!(ys.len(), n * self.d_out);
         assert_eq!(lut.len(), n * self.lut_len());
-        let k = self.codebook_size();
         let (d_in, d_out) = (self.d_in, self.d_out);
         let ll = self.lut_len();
         for b in 0..n {
             self.build_lut(&xs[b * d_in..(b + 1) * d_in], &mut lut[b * ll..(b + 1) * ll]);
         }
+        let threads = cfg.effective_threads(d_out);
+        let simd = cfg.simd_enabled();
+        let lut: &[f32] = lut;
+        if threads <= 1 {
+            self.matmat_lut_rows(lut, n, 0, d_out, ys, simd);
+            return;
+        }
+        let results = parallel::map_row_chunks(d_out, threads, |lo, hi| {
+            let mut out = vec![0.0f32; n * (hi - lo)];
+            self.matmat_lut_rows(lut, n, lo, hi, &mut out, simd);
+            (lo, hi, out)
+        });
+        scatter_lanes(ys, d_out, n, &results);
+    }
+
+    /// Rows `lo..hi` of batched LUT phase 2 into lane-major `out` (full
+    /// `ys` layout when `lo = 0, hi = d_out`).
+    fn matmat_lut_rows(
+        &self,
+        lut: &[f32],
+        n: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
+        simd: bool,
+    ) {
+        let k = self.codebook_size();
+        let ll = self.lut_len();
+        let rows = hi - lo;
         let per_row = self.n_groups() * self.n_codebooks;
         // Per-lane partial accumulators (8 per lane, as in matvec_lut) and
         // per-lane scalar accumulators for the tail.
         let mut parts = vec![0.0f32; n * 8];
         let mut acc = vec![0.0f32; n];
         if let Some(bytes) = &self.codes_bytes {
-            for i in 0..d_out {
+            let chunks = per_row / 8;
+            for i in lo..hi {
                 let row = &bytes[i * per_row..(i + 1) * per_row];
                 parts.fill(0.0);
-                let chunks = per_row / 8;
-                for cidx in 0..chunks {
-                    let idx = cidx * 8;
-                    for u in 0..8 {
-                        // One code read serves every lane.
-                        let off = (idx + u) * k + row[idx + u] as usize;
-                        for b in 0..n {
-                            parts[b * 8 + u] += lut[b * ll + off];
-                        }
-                    }
-                }
+                // One code read serves every lane (scalar and SIMD paths
+                // add once per chunk per partial — bit-identical).
+                simd::lut_row_parts_batch(lut, ll, k, row, n, &mut parts, simd);
                 for b in 0..n {
                     acc[b] = parts[b * 8..b * 8 + 8].iter().sum();
                 }
@@ -311,12 +434,13 @@ impl PackedAqlm {
                     }
                 }
                 for b in 0..n {
-                    ys[b * d_out + i] = acc[b] * self.scales[i];
+                    out[b * rows + (i - lo)] = acc[b] * self.scales[i];
                 }
             }
         } else {
             let mut reader = BitReader::new(&self.packed_codes, self.code_bits);
-            for i in 0..d_out {
+            reader.seek(lo * per_row);
+            for i in lo..hi {
                 acc.fill(0.0);
                 for idx in 0..per_row {
                     let c = reader.next() as usize;
@@ -326,7 +450,7 @@ impl PackedAqlm {
                     }
                 }
                 for b in 0..n {
-                    ys[b * d_out + i] = acc[b] * self.scales[i];
+                    out[b * rows + (i - lo)] = acc[b] * self.scales[i];
                 }
             }
         }
@@ -341,25 +465,45 @@ impl PackedAqlm {
         self.n_codebooks * self.codebook_size() * 2 <= self.d_out * self.group
     }
 
-    /// Heuristic dispatch between the two kernels.
+    /// Heuristic dispatch between the two kernels (scalar-serial oracle).
     pub fn matvec_auto(&self, x: &[f32], lut: &mut Vec<f32>, y: &mut [f32]) {
+        self.matvec_auto_with(x, lut, y, KernelConfig::serial());
+    }
+
+    /// [`Self::matvec_auto`] with `cfg` forwarded to the chosen kernel.
+    /// The kernel choice itself depends only on the layer shape, never on
+    /// `cfg`, so serving output cannot drift with the thread count.
+    pub fn matvec_auto_with(&self, x: &[f32], lut: &mut Vec<f32>, y: &mut [f32], cfg: KernelConfig) {
         if self.prefers_lut() {
             lut.resize(self.lut_len(), 0.0);
-            self.matvec_lut(x, lut, y);
+            self.matvec_lut_with(x, lut, y, cfg);
         } else {
-            self.matvec_decode(x, y);
+            self.matvec_decode_with(x, y, cfg);
         }
     }
 
     /// Batched dispatch. Uses the same per-layer heuristic as
     /// [`Self::matvec_auto`], so each lane runs the identical kernel choice
     /// and batched serving output stays bit-equal to the single-vector path.
+    /// Scalar-serial oracle.
     pub fn matmat_auto(&self, xs: &[f32], n: usize, lut: &mut Vec<f32>, ys: &mut [f32]) {
+        self.matmat_auto_with(xs, n, lut, ys, KernelConfig::serial());
+    }
+
+    /// [`Self::matmat_auto`] with `cfg` forwarded to the chosen kernel.
+    pub fn matmat_auto_with(
+        &self,
+        xs: &[f32],
+        n: usize,
+        lut: &mut Vec<f32>,
+        ys: &mut [f32],
+        cfg: KernelConfig,
+    ) {
         if self.prefers_lut() {
             lut.resize(n * self.lut_len(), 0.0);
-            self.matmat_lut(xs, n, lut, ys);
+            self.matmat_lut_with(xs, n, lut, ys, cfg);
         } else {
-            self.matmat_decode(xs, n, ys);
+            self.matmat_decode_with(xs, n, ys, cfg);
         }
     }
 }
@@ -376,15 +520,51 @@ impl PackedSpqr {
     /// `gemv(self.decode(), x, y)`, so the result is **bit-for-bit** equal
     /// to the dense reference — greedy decoding through this path is
     /// token-identical to the dense-backed SpQR it replaces.
+    /// Scalar-serial oracle.
     pub fn matvec(&self, x: &[f32], row_scratch: &mut Vec<f32>, y: &mut [f32]) {
+        self.matvec_with(x, row_scratch, y, KernelConfig::serial());
+    }
+
+    /// [`Self::matvec`] with row-parallelism and an AVX2 grouped-dequant
+    /// per `cfg` (both bit-for-bit equal to the oracle; the dequant is
+    /// elementwise and the per-row `dot` reduction is untouched). Parallel
+    /// workers reconstruct into their own row buffers — `row_scratch` is
+    /// used only on the serial path; every position of a row buffer is
+    /// overwritten before use, so a fresh zeroed buffer is equivalent.
+    pub fn matvec_with(&self, x: &[f32], row_scratch: &mut Vec<f32>, y: &mut [f32], cfg: KernelConfig) {
         debug_assert_eq!(x.len(), self.d_in);
         debug_assert_eq!(y.len(), self.d_out);
-        row_scratch.resize(self.d_in, 0.0);
-        let row = &mut row_scratch[..self.d_in];
+        let threads = cfg.effective_threads(self.d_out);
+        let simd = cfg.simd_enabled();
+        if threads <= 1 {
+            row_scratch.resize(self.d_in, 0.0);
+            let row = &mut row_scratch[..self.d_in];
+            self.matvec_rows(x, 0, self.d_out, row, y, simd);
+            return;
+        }
+        parallel::for_each_row_chunk(y, threads, |lo, hi, chunk| {
+            let mut row = vec![0.0f32; self.d_in];
+            self.matvec_rows(x, lo, hi, &mut row, chunk, simd);
+        });
+    }
+
+    /// Rows `lo..hi` of the fused SpQR matvec, written to `y[0..hi-lo]`
+    /// (each row consumes exactly `d_in` base codes, so workers re-seek to
+    /// `lo · d_in`).
+    fn matvec_rows(
+        &self,
+        x: &[f32],
+        lo: usize,
+        hi: usize,
+        row: &mut [f32],
+        y: &mut [f32],
+        simd: bool,
+    ) {
         let mut reader = BitReader::new(&self.packed_codes, self.bits);
-        for i in 0..self.d_out {
-            self.decode_row_seq(&mut reader, i, row);
-            y[i] = dot(row, x);
+        reader.seek(lo * self.d_in);
+        for i in lo..hi {
+            self.decode_row_seq_simd(&mut reader, i, row, simd);
+            y[i - lo] = dot(row, x);
         }
     }
 
@@ -396,18 +576,65 @@ impl PackedSpqr {
     /// the next row's codes are decoded, so the memory-bound base-code read
     /// amortizes `n`-fold. Each lane reduces with the same `dot` as
     /// [`Self::matvec`], so results are bit-identical to `n` independent
-    /// single-vector calls.
+    /// single-vector calls. Scalar-serial oracle.
     pub fn matvec_batch(&self, xs: &[f32], n: usize, row_scratch: &mut Vec<f32>, ys: &mut [f32]) {
+        self.matvec_batch_with(xs, n, row_scratch, ys, KernelConfig::serial());
+    }
+
+    /// [`Self::matvec_batch`] with row-parallelism and AVX2 dequant per
+    /// `cfg`, bit-for-bit equal to the oracle. As in
+    /// [`Self::matvec_with`], `row_scratch` is used only on the serial
+    /// path; parallel workers own their buffers and scatter lane-major
+    /// results back in range order.
+    pub fn matvec_batch_with(
+        &self,
+        xs: &[f32],
+        n: usize,
+        row_scratch: &mut Vec<f32>,
+        ys: &mut [f32],
+        cfg: KernelConfig,
+    ) {
         assert_eq!(xs.len(), n * self.d_in);
         assert_eq!(ys.len(), n * self.d_out);
-        let (d_in, d_out) = (self.d_in, self.d_out);
-        row_scratch.resize(d_in, 0.0);
-        let row = &mut row_scratch[..d_in];
+        let d_out = self.d_out;
+        let threads = cfg.effective_threads(d_out);
+        let simd = cfg.simd_enabled();
+        if threads <= 1 {
+            row_scratch.resize(self.d_in, 0.0);
+            let row = &mut row_scratch[..self.d_in];
+            self.matvec_batch_rows(xs, n, 0, d_out, row, ys, simd);
+            return;
+        }
+        let results = parallel::map_row_chunks(d_out, threads, |lo, hi| {
+            let mut row = vec![0.0f32; self.d_in];
+            let mut out = vec![0.0f32; n * (hi - lo)];
+            self.matvec_batch_rows(xs, n, lo, hi, &mut row, &mut out, simd);
+            (lo, hi, out)
+        });
+        scatter_lanes(ys, d_out, n, &results);
+    }
+
+    /// Rows `lo..hi` of the batched SpQR kernel into lane-major `out`
+    /// (full `ys` layout when `lo = 0, hi = d_out`).
+    #[allow(clippy::too_many_arguments)]
+    fn matvec_batch_rows(
+        &self,
+        xs: &[f32],
+        n: usize,
+        lo: usize,
+        hi: usize,
+        row: &mut [f32],
+        out: &mut [f32],
+        simd: bool,
+    ) {
+        let d_in = self.d_in;
+        let rows = hi - lo;
         let mut reader = BitReader::new(&self.packed_codes, self.bits);
-        for i in 0..d_out {
-            self.decode_row_seq(&mut reader, i, row);
+        reader.seek(lo * d_in);
+        for i in lo..hi {
+            self.decode_row_seq_simd(&mut reader, i, row, simd);
             for b in 0..n {
-                ys[b * d_out + i] = dot(row, &xs[b * d_in..(b + 1) * d_in]);
+                out[b * rows + (i - lo)] = dot(row, &xs[b * d_in..(b + 1) * d_in]);
             }
         }
     }
@@ -646,5 +873,146 @@ mod tests {
     fn spqr_matvec_bitexact_no_outliers_and_dense_outliers() {
         check_spqr_bitexact(8, 40, 8, 2, 0.0, 3, 22);
         check_spqr_bitexact(8, 40, 8, 2, 0.25, 3, 23);
+    }
+
+    // ---- degenerate-shape guards (no empty-range workers, no panics) ----
+
+    use crate::kernels::config::KernelConfig;
+
+    /// `d_out == 0`: every kernel must be a no-op at any thread count.
+    #[test]
+    fn degenerate_zero_rows_no_panic() {
+        let packed = PackedAqlm {
+            d_out: 0,
+            d_in: 16,
+            group: 8,
+            n_codebooks: 1,
+            code_bits: 2,
+            packed_codes: Vec::new(),
+            codes_bytes: Some(Vec::new()),
+            codebooks: vec![0.25f32; 4 * 8],
+            scales: Vec::new(),
+        };
+        let cfg = KernelConfig { threads: 8, simd: true };
+        let x = vec![1.0f32; 16];
+        let mut y: Vec<f32> = Vec::new();
+        packed.matvec_decode_with(&x, &mut y, cfg);
+        let mut lut = vec![0.0f32; packed.lut_len()];
+        packed.matvec_lut_with(&x, &mut lut, &mut y, cfg);
+        let mut auto_scratch = Vec::new();
+        packed.matvec_auto_with(&x, &mut auto_scratch, &mut y, cfg);
+        let xs = vec![1.0f32; 2 * 16];
+        let mut ys: Vec<f32> = Vec::new();
+        let mut blut = vec![0.0f32; 2 * packed.lut_len()];
+        packed.matmat_decode_with(&xs, 2, &mut ys, cfg);
+        packed.matmat_lut_with(&xs, 2, &mut blut, &mut ys, cfg);
+
+        let spqr = PackedSpqr::from_parts(0, 8, 4, 2, &[], Vec::new(), Vec::new(), &[])
+            .expect("empty spqr");
+        let mut scratch = Vec::new();
+        spqr.matvec_with(&x[..8], &mut scratch, &mut y, cfg);
+        spqr.matvec_batch_with(&xs[..16], 2, &mut scratch, &mut ys, cfg);
+    }
+
+    /// An empty LUT (`d_in == 0` ⇒ `lut_len() == 0`) must yield all-zero
+    /// outputs, not a panic, with rows still parallelized.
+    #[test]
+    fn degenerate_empty_lut_no_panic() {
+        let packed = PackedAqlm {
+            d_out: 5,
+            d_in: 0,
+            group: 8,
+            n_codebooks: 2,
+            code_bits: 8,
+            packed_codes: Vec::new(),
+            codes_bytes: Some(Vec::new()),
+            codebooks: vec![0.5f32; 2 * 256 * 8],
+            scales: vec![2.0f32; 5],
+        };
+        assert_eq!(packed.lut_len(), 0);
+        let cfg = KernelConfig { threads: 8, simd: true };
+        let x: Vec<f32> = Vec::new();
+        let mut lut = Vec::new();
+        let mut y = vec![1.0f32; 5];
+        packed.matvec_lut_with(&x, &mut lut, &mut y, cfg);
+        assert!(y.iter().all(|&v| v == 0.0), "no groups ⇒ zero output");
+        let mut ys = vec![1.0f32; 3 * 5];
+        let mut blut = vec![0.0f32; 0];
+        packed.matmat_lut_with(&x, 3, &mut blut, &mut ys, cfg);
+        assert!(ys.iter().all(|&v| v == 0.0));
+    }
+
+    /// `d_out < threads`: the row split clamps to `d_out` ranges and stays
+    /// bit-identical to serial.
+    #[test]
+    fn degenerate_fewer_rows_than_threads_bitexact() {
+        let mut rng = Rng::seed_from_u64(31);
+        let w = random_weight(3, 64, AqlmShape::new(2, 8, 8), &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y_serial = vec![0.0f32; 3];
+        let mut lut = vec![0.0f32; packed.lut_len()];
+        packed.matvec_lut(&x, &mut lut, &mut y_serial);
+        for threads in [2usize, 3, 8, 64] {
+            let cfg = KernelConfig { threads, simd: false };
+            let mut y = vec![0.0f32; 3];
+            packed.matvec_lut_with(&x, &mut lut, &mut y, cfg);
+            for i in 0..3 {
+                assert_eq!(y[i].to_bits(), y_serial[i].to_bits(), "threads={threads} row {i}");
+            }
+        }
+    }
+
+    /// Smoke check (the full sweep lives in
+    /// `rust/tests/integration_kernels.rs`): every `_with` kernel at
+    /// threads=3 + SIMD equals its serial oracle bit-for-bit.
+    #[test]
+    fn parallel_kernels_bitexact_smoke() {
+        let mut rng = Rng::seed_from_u64(32);
+        let (d_out, d_in, n) = (33, 64, 4);
+        let w = random_weight(d_out, d_in, AqlmShape::new(2, 8, 8), &mut rng);
+        let packed = PackedAqlm::from_weight(&w);
+        let cfg = KernelConfig { threads: 3, simd: true };
+        let xs: Vec<f32> = (0..n * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let x = &xs[..d_in];
+
+        let mut y_ref = vec![0.0f32; d_out];
+        let mut y = vec![0.0f32; d_out];
+        packed.matvec_decode(x, &mut y_ref);
+        packed.matvec_decode_with(x, &mut y, cfg);
+        assert_bits_eq(&y, &y_ref, "matvec_decode");
+
+        let mut lut = vec![0.0f32; packed.lut_len()];
+        packed.matvec_lut(x, &mut lut, &mut y_ref);
+        packed.matvec_lut_with(x, &mut lut, &mut y, cfg);
+        assert_bits_eq(&y, &y_ref, "matvec_lut");
+
+        let mut ys_ref = vec![0.0f32; n * d_out];
+        let mut ys = vec![0.0f32; n * d_out];
+        packed.matmat_decode(&xs, n, &mut ys_ref);
+        packed.matmat_decode_with(&xs, n, &mut ys, cfg);
+        assert_bits_eq(&ys, &ys_ref, "matmat_decode");
+
+        let mut blut = vec![0.0f32; n * packed.lut_len()];
+        packed.matmat_lut(&xs, n, &mut blut, &mut ys_ref);
+        packed.matmat_lut_with(&xs, n, &mut blut, &mut ys, cfg);
+        assert_bits_eq(&ys, &ys_ref, "matmat_lut");
+
+        let q = random_spqr(d_out, 27, 16, 5, 0.02, &mut rng);
+        let sx: Vec<f32> = (0..n * 27).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut scratch = Vec::new();
+        q.matvec(&sx[..27], &mut scratch, &mut y_ref);
+        q.matvec_with(&sx[..27], &mut scratch, &mut y, cfg);
+        assert_bits_eq(&y, &y_ref, "spqr matvec");
+        q.matvec_batch(&sx, n, &mut scratch, &mut ys_ref);
+        q.matvec_batch_with(&sx, n, &mut scratch, &mut ys, cfg);
+        assert_bits_eq(&ys, &ys_ref, "spqr matvec_batch");
+    }
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what} length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what} slot {i}: {a} vs {b}");
+        }
     }
 }

@@ -18,7 +18,20 @@
 //!   matvec into pure table additions — plus (c) the fused SpQR kernels
 //!   (base dequant-accumulate + outlier scatter, bit-for-bit equal to the
 //!   dense reference) with their batched variants.
+//! - [`config`] — the [`config::KernelConfig`] knobs (worker threads, SIMD
+//!   on/off) threaded from the CLI through server and model into every
+//!   kernel; the plain kernel names stay scalar-serial oracles, the
+//!   `*_with` variants parallelize/vectorize **bit-identically** (see
+//!   `docs/kernels.md`).
+//! - [`parallel`] — the dependency-free scoped row-partitioning helpers
+//!   (`std::thread::scope`; disjoint output-row ranges, per-row reduction
+//!   order untouched).
+//! - [`simd`] — the AVX2 inner loops (LUT-accumulate, SpQR dequant) with
+//!   their bit-identical scalar fallbacks and runtime dispatch.
 
 pub mod format;
 pub mod packed;
 pub mod matvec;
+pub mod config;
+pub mod parallel;
+pub mod simd;

@@ -1,0 +1,157 @@
+//! Dependency-free scoped row-parallelism for the packed kernels.
+//!
+//! Every parallel kernel in this crate partitions its **output rows** into
+//! contiguous, disjoint, non-empty ranges and runs one worker per range on
+//! [`std::thread::scope`] (no thread-pool crate; the manifest stays
+//! `anyhow`-only). Each worker computes exactly the rows of its range with
+//! the same per-row code the serial kernel uses, so the floating-point
+//! reduction order *within* a row never changes and the parallel result is
+//! **bit-for-bit equal** to the serial one at any thread count — the
+//! invariant `rust/tests/integration_kernels.rs` enforces at 0 ulp (see
+//! `docs/kernels.md`).
+//!
+//! Degenerate shapes are handled here, once, for all kernels:
+//! [`split_ranges`] never emits an empty range (`threads` is clamped to the
+//! row count) and zero rows yield zero ranges, so no worker is ever spawned
+//! with nothing to do.
+
+/// Split `rows` into at most `threads` contiguous non-empty ranges
+/// `(lo, hi)` covering `0..rows` in order. `rows == 0` yields no ranges;
+/// `threads` is clamped into `1..=rows` so a range is never empty (the
+/// `d_out < threads` degenerate case simply produces fewer ranges).
+pub fn split_ranges(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let t = threads.clamp(1, rows);
+    let base = rows / t;
+    let rem = rows % t;
+    let mut out = Vec::with_capacity(t);
+    let mut lo = 0usize;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, rows);
+    out
+}
+
+/// Run `f(lo, hi, chunk)` over disjoint row ranges of `y` (one output slot
+/// per row), where `chunk` is exactly `y[lo..hi]`. With one range the call
+/// happens on the caller's thread (no spawn); otherwise ranges `1..` run on
+/// scoped workers while the caller computes range 0. Worker panics
+/// propagate to the caller.
+pub fn for_each_row_chunk<F>(y: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let ranges = split_ranges(y.len(), threads);
+    if ranges.len() <= 1 {
+        if let Some(&(lo, hi)) = ranges.first() {
+            f(lo, hi, y);
+        }
+        return;
+    }
+    let mut chunks: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut rest = y;
+    for &(lo, hi) in &ranges {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+        chunks.push((lo, hi, head));
+        rest = tail;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut iter = chunks.into_iter();
+        let (lo0, hi0, chunk0) = iter.next().expect("at least one range");
+        let handles: Vec<_> =
+            iter.map(|(lo, hi, chunk)| s.spawn(move || f(lo, hi, chunk))).collect();
+        f(lo0, hi0, chunk0);
+        for h in handles {
+            h.join().expect("kernel worker panicked");
+        }
+    });
+}
+
+/// Map `f(lo, hi)` over the row ranges and collect the results **in range
+/// order** (so serial reassembly — scatter, commit, summation — is
+/// deterministic regardless of which worker finished first). With one range
+/// everything runs on the caller's thread.
+pub fn map_row_chunks<T, F>(rows: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let ranges = split_ranges(rows, threads);
+    if ranges.len() <= 1 {
+        return ranges.iter().map(|&(lo, hi)| f(lo, hi)).collect();
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            ranges[1..].iter().map(|&(lo, hi)| s.spawn(move || f(lo, hi))).collect();
+        let mut out = Vec::with_capacity(ranges.len());
+        out.push(f(ranges[0].0, ranges[0].1));
+        for h in handles {
+            out.push(h.join().expect("kernel worker panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_rows_without_empty_ranges() {
+        for rows in [1usize, 2, 3, 7, 8, 64, 101] {
+            for threads in [1usize, 2, 3, 8, 200] {
+                let ranges = split_ranges(rows, threads);
+                assert_eq!(ranges.len(), threads.clamp(1, rows));
+                assert_eq!(ranges[0].0, 0);
+                assert_eq!(ranges.last().unwrap().1, rows);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+                }
+                assert!(ranges.iter().all(|&(lo, hi)| hi > lo), "empty range");
+            }
+        }
+    }
+
+    #[test]
+    fn split_zero_rows_yields_no_ranges() {
+        assert!(split_ranges(0, 4).is_empty());
+        assert!(split_ranges(0, 1).is_empty());
+    }
+
+    #[test]
+    fn for_each_row_chunk_writes_every_slot_once() {
+        for threads in [1usize, 2, 3, 8] {
+            let mut y = vec![0.0f32; 11];
+            for_each_row_chunk(&mut y, threads, |lo, hi, chunk| {
+                assert_eq!(chunk.len(), hi - lo);
+                for (o, slot) in chunk.iter_mut().enumerate() {
+                    *slot = (lo + o) as f32;
+                }
+            });
+            let want: Vec<f32> = (0..11).map(|i| i as f32).collect();
+            assert_eq!(y, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_row_chunk_empty_output_never_calls_f() {
+        let mut y: Vec<f32> = Vec::new();
+        for_each_row_chunk(&mut y, 4, |_, _, _| panic!("must not run on zero rows"));
+    }
+
+    #[test]
+    fn map_row_chunks_returns_in_range_order() {
+        for threads in [1usize, 2, 3, 8] {
+            let got = map_row_chunks(10, threads, |lo, hi| (lo, hi));
+            assert_eq!(got, split_ranges(10, threads), "threads={threads}");
+        }
+        assert!(map_row_chunks(0, 4, |lo, hi| (lo, hi)).is_empty());
+    }
+}

@@ -1,0 +1,311 @@
+//! AVX2 inner loops for the packed kernels, with bit-identical scalar
+//! fallbacks.
+//!
+//! Only loops whose vectorization provably preserves the scalar result are
+//! here (the invariant `rust/tests/integration_kernels.rs` enforces at
+//! 0 ulp; the argument is written out in `docs/kernels.md`):
+//!
+//! - [`lut_row_sum`] / [`lut_row_parts_batch`] — the LUT-accumulate phase 2
+//!   of `matvec_lut`/`matmat_lut`. The scalar kernel already keeps **8
+//!   independent partial accumulators** per row; the AVX2 path maps partial
+//!   `u` onto lane `u` of one `__m256` (gather + vertical add), so every
+//!   per-partial addition chain is unchanged, and the final horizontal
+//!   reduction stays the same sequential scalar `iter().sum()`.
+//! - [`dequant_span`] — the grouped-dequant inner loop of SpQR's
+//!   `decode_row_seq` (`s · (code − z)`). Purely elementwise, so the vector
+//!   mul/sub is per-lane identical to the scalar ops.
+//!
+//! Deliberately *not* here: `matvec_decode`'s FMA accumulation — it is one
+//! sequential dependency chain per row, and any widening would change the
+//! summation order (and hence the bits). The non-byte (`code_bits > 8`)
+//! LUT path also stays scalar: it is bottlenecked on the serial
+//! `BitReader`, not the adds.
+//!
+//! Dispatch: each entry point takes a `simd: bool` (the caller's resolved
+//! [`KernelConfig::simd_enabled`](super::config::KernelConfig::simd_enabled))
+//! and re-checks [`simd_runtime_available`] before entering an
+//! `#[target_feature(enable = "avx2")]` function, so calling these with
+//! `simd = true` on a non-AVX2 machine safely falls back to scalar. On
+//! non-x86_64 targets the scalar loops are the only implementation.
+
+use super::config::simd_runtime_available;
+use super::packed::BitReader;
+
+/// Accumulate one output row of the LUT kernel: `Σ_idx lut[idx·k +
+/// row[idx]]` over the row's byte codes, using the 8-partial accumulator
+/// structure of the scalar kernel (unscaled; the caller applies the
+/// per-row scale). `lut.len()` must be `row.len() · k` and every code must
+/// be `< k`.
+pub fn lut_row_sum(lut: &[f32], k: usize, row: &[u8], simd: bool) -> f32 {
+    debug_assert!(lut.len() >= row.len() * k);
+    #[cfg(target_arch = "x86_64")]
+    if simd && simd_runtime_available() {
+        // SAFETY: AVX2 presence is runtime-checked; in-bounds gather/load
+        // indices follow from the length contract asserted above.
+        return unsafe { lut_row_sum_avx2(lut, k, row) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    lut_row_sum_scalar(lut, k, row)
+}
+
+fn lut_row_sum_scalar(lut: &[f32], k: usize, row: &[u8]) -> f32 {
+    let per_row = row.len();
+    // 8 independent gather→add chains keep several loads in flight; this
+    // exact structure is what the AVX2 path maps onto its lanes.
+    let mut a = [0.0f32; 8];
+    let chunks = per_row / 8;
+    for cidx in 0..chunks {
+        let idx = cidx * 8;
+        for u in 0..8 {
+            a[u] += lut[(idx + u) * k + row[idx + u] as usize];
+        }
+    }
+    let mut acc: f32 = a.iter().sum();
+    for idx in chunks * 8..per_row {
+        acc += lut[idx * k + row[idx] as usize];
+    }
+    acc
+}
+
+/// AVX2 twin of [`lut_row_sum_scalar`]: lane `u` of `accv` replays scalar
+/// partial `a[u]`'s addition chain exactly; the horizontal reduction and the
+/// tail reuse the scalar code.
+///
+/// # Safety
+/// Requires AVX2. `lut.len() >= row.len() * k` and all codes `< k`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn lut_row_sum_avx2(lut: &[f32], k: usize, row: &[u8]) -> f32 {
+    use std::arch::x86_64::*;
+    let per_row = row.len();
+    let chunks = per_row / 8;
+    let lane_base = lane_offsets(k);
+    let mut accv = _mm256_setzero_ps();
+    for cidx in 0..chunks {
+        let idx = cidx * 8;
+        let codes =
+            _mm256_cvtepu8_epi32(_mm_loadl_epi64(row.as_ptr().add(idx) as *const __m128i));
+        let off = _mm256_add_epi32(
+            _mm256_add_epi32(_mm256_set1_epi32((idx * k) as i32), lane_base),
+            codes,
+        );
+        accv = _mm256_add_ps(accv, _mm256_i32gather_ps::<4>(lut.as_ptr(), off));
+    }
+    let mut a = [0.0f32; 8];
+    _mm256_storeu_ps(a.as_mut_ptr(), accv);
+    let mut acc: f32 = a.iter().sum();
+    for idx in chunks * 8..per_row {
+        acc += lut[idx * k + row[idx] as usize];
+    }
+    acc
+}
+
+/// Per-lane LUT offsets `(0, k, 2k, …, 7k)` for one 8-code chunk.
+///
+/// # Safety
+/// Requires AVX2 (caller is already inside a `target_feature(avx2)` fn).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn lane_offsets(k: usize) -> std::arch::x86_64::__m256i {
+    use std::arch::x86_64::*;
+    let k = k as i32;
+    _mm256_setr_epi32(0, k, 2 * k, 3 * k, 4 * k, 5 * k, 6 * k, 7 * k)
+}
+
+/// Batched LUT-accumulate for one output row across `n` lanes: adds
+/// `lut[b·ll + (idx+u)·k + row[idx+u]]` into `parts[b·8 + u]` for every
+/// full 8-code chunk (the caller zero-fills `parts`, reduces each lane's 8
+/// partials sequentially, and handles the `row.len() % 8` tail — identical
+/// to the scalar `matmat_lut`). Each `parts` slot receives exactly one add
+/// per chunk in both paths, so results are bit-identical.
+pub fn lut_row_parts_batch(
+    lut: &[f32],
+    ll: usize,
+    k: usize,
+    row: &[u8],
+    n: usize,
+    parts: &mut [f32],
+    simd: bool,
+) {
+    debug_assert!(parts.len() >= n * 8);
+    debug_assert!(lut.len() >= n * ll);
+    #[cfg(target_arch = "x86_64")]
+    if simd && simd_runtime_available() {
+        // SAFETY: AVX2 presence is runtime-checked; bounds follow from the
+        // asserted length contracts (`off < ll`, `parts` has `n·8` slots).
+        unsafe { lut_row_parts_batch_avx2(lut, ll, k, row, n, parts) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    lut_row_parts_batch_scalar(lut, ll, k, row, n, parts);
+}
+
+fn lut_row_parts_batch_scalar(
+    lut: &[f32],
+    ll: usize,
+    k: usize,
+    row: &[u8],
+    n: usize,
+    parts: &mut [f32],
+) {
+    let chunks = row.len() / 8;
+    for cidx in 0..chunks {
+        let idx = cidx * 8;
+        for u in 0..8 {
+            // One code read serves every lane.
+            let off = (idx + u) * k + row[idx + u] as usize;
+            for b in 0..n {
+                parts[b * 8 + u] += lut[b * ll + off];
+            }
+        }
+    }
+}
+
+/// AVX2 twin of [`lut_row_parts_batch_scalar`]: the 8 offsets of a chunk
+/// are computed once, then each lane's 8 partials are loaded, gathered
+/// into, and stored back — per-slot addition order is unchanged (one add
+/// per chunk per slot in both loop orders).
+///
+/// # Safety
+/// Requires AVX2, `parts.len() >= n·8`, `lut.len() >= n·ll`, codes `< k`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn lut_row_parts_batch_avx2(
+    lut: &[f32],
+    ll: usize,
+    k: usize,
+    row: &[u8],
+    n: usize,
+    parts: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let chunks = row.len() / 8;
+    let lane_base = lane_offsets(k);
+    for cidx in 0..chunks {
+        let idx = cidx * 8;
+        let codes =
+            _mm256_cvtepu8_epi32(_mm_loadl_epi64(row.as_ptr().add(idx) as *const __m128i));
+        let off = _mm256_add_epi32(
+            _mm256_add_epi32(_mm256_set1_epi32((idx * k) as i32), lane_base),
+            codes,
+        );
+        for b in 0..n {
+            let p = _mm256_loadu_ps(parts.as_ptr().add(b * 8));
+            let vals = _mm256_i32gather_ps::<4>(lut.as_ptr().add(b * ll), off);
+            _mm256_storeu_ps(parts.as_mut_ptr().add(b * 8), _mm256_add_ps(p, vals));
+        }
+    }
+}
+
+/// Grouped dequantization `out[t] = s · (code_t − z)` over one span of
+/// codes streamed from `reader` (SpQR's `decode_row_seq` inner loop).
+/// Elementwise, so the AVX2 mul/sub is per-lane identical to scalar; codes
+/// are still read sequentially from the bit stream in both paths.
+pub fn dequant_span(reader: &mut BitReader, s: f32, z: f32, out: &mut [f32], simd: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if simd && simd_runtime_available() {
+        // SAFETY: AVX2 presence is runtime-checked; all stores stay within
+        // `out`.
+        unsafe { dequant_span_avx2(reader, s, z, out) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    dequant_span_scalar(reader, s, z, out);
+}
+
+fn dequant_span_scalar(reader: &mut BitReader, s: f32, z: f32, out: &mut [f32]) {
+    for slot in out.iter_mut() {
+        *slot = s * (reader.next() as f32 - z);
+    }
+}
+
+/// AVX2 twin of [`dequant_span_scalar`]: codes are buffered 8 at a time
+/// (the bit stream is inherently serial), then converted/sub/mul'd
+/// per-lane. `u16` codes convert to f32 exactly under both `as f32` and
+/// `_mm256_cvtepi32_ps`, and IEEE sub/mul are deterministic per lane, so
+/// every element is bit-identical to the scalar path.
+///
+/// # Safety
+/// Requires AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_span_avx2(reader: &mut BitReader, s: f32, z: f32, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let w = out.len();
+    let chunks = w / 8;
+    let sv = _mm256_set1_ps(s);
+    let zv = _mm256_set1_ps(z);
+    let mut buf = [0i32; 8];
+    for c in 0..chunks {
+        for slot in &mut buf {
+            *slot = reader.next() as i32;
+        }
+        let codes = _mm256_loadu_si256(buf.as_ptr() as *const __m256i);
+        let v = _mm256_mul_ps(sv, _mm256_sub_ps(_mm256_cvtepi32_ps(codes), zv));
+        _mm256_storeu_ps(out.as_mut_ptr().add(c * 8), v);
+    }
+    for slot in out.iter_mut().skip(chunks * 8) {
+        *slot = s * (reader.next() as f32 - z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::packed::pack;
+    use crate::util::rng::Rng;
+
+    /// When AVX2 is unavailable the dispatchers fall back to scalar and
+    /// these tests compare scalar with itself — still a valid (if vacuous)
+    /// 0-ulp check, and CI's `AQLM_NO_SIMD=1` pass pins that mode too.
+    #[test]
+    fn lut_row_sum_simd_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(81);
+        for &(per_row, k) in &[(64usize, 256usize), (13, 16), (8, 4), (7, 32), (0, 8)] {
+            let lut: Vec<f32> = (0..per_row * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let row: Vec<u8> = (0..per_row).map(|_| rng.below(k) as u8).collect();
+            let scalar = lut_row_sum(&lut, k, &row, false);
+            let simd = lut_row_sum(&lut, k, &row, true);
+            assert_eq!(simd.to_bits(), scalar.to_bits(), "per_row={per_row} k={k}");
+        }
+    }
+
+    #[test]
+    fn lut_row_parts_batch_simd_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(82);
+        for &(per_row, k, n) in &[(64usize, 256usize, 4usize), (24, 16, 1), (17, 8, 8)] {
+            let ll = per_row * k;
+            let lut: Vec<f32> = (0..n * ll).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let row: Vec<u8> = (0..per_row).map(|_| rng.below(k) as u8).collect();
+            let mut scalar = vec![0.0f32; n * 8];
+            lut_row_parts_batch(&lut, ll, k, &row, n, &mut scalar, false);
+            let mut simd = vec![0.0f32; n * 8];
+            lut_row_parts_batch(&lut, ll, k, &row, n, &mut simd, true);
+            for (i, (a, b)) in simd.iter().zip(&scalar).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "slot {i} per_row={per_row}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_span_simd_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(83);
+        for &(width, bits) in &[(16usize, 3usize), (27, 5), (8, 8), (5, 2), (0, 4)] {
+            let codes: Vec<u16> = (0..width).map(|_| rng.below(1 << bits) as u16).collect();
+            let packed = pack(&codes, bits);
+            let (s, z) = (rng.normal_f32(1.0, 0.2), rng.normal_f32(3.0, 1.0));
+            let mut scalar = vec![0.0f32; width];
+            let mut reader = BitReader::new(&packed, bits);
+            dequant_span(&mut reader, s, z, &mut scalar, false);
+            let mut simd = vec![0.0f32; width];
+            let mut reader = BitReader::new(&packed, bits);
+            dequant_span(&mut reader, s, z, &mut simd, true);
+            for (i, (a, b)) in simd.iter().zip(&scalar).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "elem {i} width={width}");
+            }
+        }
+    }
+}

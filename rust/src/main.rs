@@ -242,6 +242,11 @@ fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
         }
         (None, None) => Some(LayerPolicy::uniform(cli_spec(args)?)),
     };
+    // Kernel knobs for the quantizer's row-parallel inner loops (beam
+    // search, k-means assignment). 0 = auto; results are bit-identical to
+    // serial at any thread count (docs/kernels.md).
+    aqlm::kernels::config::set_default_threads(args.usize_or("kernel-threads", 0));
+    aqlm::kernels::config::set_simd_disabled(args.flag("no-simd"));
     let mut model = Model::load(&ckpt)?;
     let b = bundle(args);
     let seq = args.usize_or("seq", 64);
@@ -324,6 +329,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         prefill_chunk: args.usize_or("prefill-chunk", 32),
         kv_block_size: args.usize_or("kv-block-size", 16),
         kv_pool_blocks: args.get("kv-pool-blocks").and_then(|v| v.parse().ok()),
+        // --kernel-threads 0 (the default) auto-sizes from the host; any
+        // setting decodes bit-identically (docs/kernels.md).
+        kernel: aqlm::kernels::config::KernelConfig {
+            threads: args.usize_or("kernel-threads", 0),
+            simd: !args.flag("no-simd"),
+        },
     };
     // Multi-tenant mode: --models name=path,name2=path2 routes through the
     // byte-budgeted registry; single-model mode keeps the eager --ckpt path.

@@ -7,6 +7,7 @@
 
 use super::config::ModelConfig;
 use super::linear::{Linear, LinearGrad};
+use crate::kernels::config::KernelConfig;
 use super::moe::{MoeCache, MoeGrads, MoeLayer};
 use super::rope::Rope;
 use crate::tensor::ops::{rmsnorm, silu, silu_grad, softmax_inplace};
@@ -496,7 +497,9 @@ impl Block {
     /// `x` is the residual stream `[d]`; returns the block output `[d]`.
     ///
     /// Takes `&self` so a warmed model (see `Model::warm_decode`) can be
-    /// shared immutably across server worker threads.
+    /// shared immutably across server worker threads. Runs the packed
+    /// kernels serially (the oracle path); serving goes through
+    /// [`Self::decode_step_with`].
     pub fn decode_step(
         &self,
         x: &[f32],
@@ -506,6 +509,23 @@ impl Block {
         kv: &mut super::kvcache::LayerKvCache,
         lut_scratch: &mut Vec<f32>,
     ) -> Vec<f32> {
+        self.decode_step_with(x, cfg, pos, rope, kv, lut_scratch, KernelConfig::serial())
+    }
+
+    /// [`Self::decode_step`] with a [`KernelConfig`] forwarded to every
+    /// packed linear (row-parallel + SIMD kernels, bit-for-bit equal to
+    /// serial — see `docs/kernels.md`).
+    #[allow(clippy::too_many_arguments)] // mirrors decode_step + the kernel knobs
+    pub fn decode_step_with(
+        &self,
+        x: &[f32],
+        cfg: &ModelConfig,
+        pos: usize,
+        rope: &Rope,
+        kv: &mut super::kvcache::LayerKvCache,
+        lut_scratch: &mut Vec<f32>,
+        kcfg: KernelConfig,
+    ) -> Vec<f32> {
         let d = cfg.d_model;
         let (h_cnt, kv_cnt, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
         let rep = cfg.kv_repeat();
@@ -514,9 +534,9 @@ impl Block {
         let mut q = vec![0.0f32; h_cnt * dh];
         let mut k = vec![0.0f32; kv_cnt * dh];
         let mut v = vec![0.0f32; kv_cnt * dh];
-        self.attn.wq.matvec_cached(&xn1, &mut q, lut_scratch);
-        self.attn.wk.matvec_cached(&xn1, &mut k, lut_scratch);
-        self.attn.wv.matvec_cached(&xn1, &mut v, lut_scratch);
+        self.attn.wq.matvec_cached_with(&xn1, &mut q, lut_scratch, kcfg);
+        self.attn.wk.matvec_cached_with(&xn1, &mut k, lut_scratch, kcfg);
+        self.attn.wv.matvec_cached_with(&xn1, &mut v, lut_scratch, kcfg);
         for hh in 0..h_cnt {
             rope.apply(&mut q[hh * dh..(hh + 1) * dh], pos);
         }
@@ -545,13 +565,13 @@ impl Block {
             }
         }
         let mut att_out = vec![0.0f32; d];
-        self.attn.wo.matvec_cached(&ctx, &mut att_out, lut_scratch);
+        self.attn.wo.matvec_cached_with(&ctx, &mut att_out, lut_scratch, kcfg);
         let x_mid: Vec<f32> = x.iter().zip(&att_out).map(|(a, b)| a + b).collect();
         let mut xn2 = vec![0.0f32; d];
         rmsnorm(&x_mid, &self.ln2, cfg.norm_eps, &mut xn2);
         let ffn_out = match &self.ffn {
-            Ffn::Dense(mlp) => mlp_decode_step(mlp, &xn2, lut_scratch),
-            Ffn::Moe(moe) => moe.decode_step(&xn2, lut_scratch),
+            Ffn::Dense(mlp) => mlp_decode_step_with(mlp, &xn2, lut_scratch, kcfg),
+            Ffn::Moe(moe) => moe.decode_step_with(&xn2, lut_scratch, kcfg),
         };
         x_mid.iter().zip(&ffn_out).map(|(a, b)| a + b).collect()
     }
@@ -578,6 +598,23 @@ impl Block {
         kv: &mut super::kvcache::KvLanes<'_>,
         lut_scratch: &mut Vec<f32>,
     ) -> Vec<f32> {
+        self.decode_step_batch_with(xs, cfg, positions, rope, kv, lut_scratch, KernelConfig::serial())
+    }
+
+    /// [`Self::decode_step_batch`] with a [`KernelConfig`] forwarded to every
+    /// packed linear; output is bit-identical to the serial path for any
+    /// thread count or SIMD setting.
+    #[allow(clippy::too_many_arguments)] // mirrors decode_step_batch + the kernel knobs
+    pub fn decode_step_batch_with(
+        &self,
+        xs: &[f32],
+        cfg: &ModelConfig,
+        positions: &[usize],
+        rope: &Rope,
+        kv: &mut super::kvcache::KvLanes<'_>,
+        lut_scratch: &mut Vec<f32>,
+        kcfg: KernelConfig,
+    ) -> Vec<f32> {
         let n = positions.len();
         let d = cfg.d_model;
         let (h_cnt, kv_cnt, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
@@ -593,9 +630,9 @@ impl Block {
         let mut q = vec![0.0f32; n * qd];
         let mut k = vec![0.0f32; n * kvd];
         let mut v = vec![0.0f32; n * kvd];
-        self.attn.wq.matvec_batch_cached(&xn1, n, &mut q, lut_scratch);
-        self.attn.wk.matvec_batch_cached(&xn1, n, &mut k, lut_scratch);
-        self.attn.wv.matvec_batch_cached(&xn1, n, &mut v, lut_scratch);
+        self.attn.wq.matvec_batch_cached_with(&xn1, n, &mut q, lut_scratch, kcfg);
+        self.attn.wk.matvec_batch_cached_with(&xn1, n, &mut k, lut_scratch, kcfg);
+        self.attn.wv.matvec_batch_cached_with(&xn1, n, &mut v, lut_scratch, kcfg);
         for b in 0..n {
             let pos = positions[b];
             for hh in 0..h_cnt {
@@ -631,7 +668,7 @@ impl Block {
             }
         }
         let mut att_out = vec![0.0f32; n * d];
-        self.attn.wo.matvec_batch_cached(&ctx, n, &mut att_out, lut_scratch);
+        self.attn.wo.matvec_batch_cached_with(&ctx, n, &mut att_out, lut_scratch, kcfg);
         let mut x_mid = vec![0.0f32; n * d];
         for i in 0..n * d {
             x_mid[i] = xs[i] + att_out[i];
@@ -641,12 +678,12 @@ impl Block {
             rmsnorm(&x_mid[b * d..(b + 1) * d], &self.ln2, cfg.norm_eps, &mut xn2[b * d..(b + 1) * d]);
         }
         let ffn_out = match &self.ffn {
-            Ffn::Dense(mlp) => mlp_decode_step_batch(mlp, &xn2, n, lut_scratch),
+            Ffn::Dense(mlp) => mlp_decode_step_batch_with(mlp, &xn2, n, lut_scratch, kcfg),
             Ffn::Moe(moe) => {
                 // Routing is per token; lanes run the single-vector path.
                 let mut out = vec![0.0f32; n * d];
                 for b in 0..n {
-                    let yb = moe.decode_step(&xn2[b * d..(b + 1) * d], lut_scratch);
+                    let yb = moe.decode_step_with(&xn2[b * d..(b + 1) * d], lut_scratch, kcfg);
                     out[b * d..(b + 1) * d].copy_from_slice(&yb);
                 }
                 out
@@ -663,32 +700,55 @@ impl Block {
 /// Single-vector SwiGLU MLP (decode path; shared reference — see
 /// `Linear::matvec_cached` for the warm/cold contract).
 pub fn mlp_decode_step(mlp: &Mlp, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+    mlp_decode_step_with(mlp, xn, lut_scratch, KernelConfig::serial())
+}
+
+/// [`mlp_decode_step`] with a [`KernelConfig`] forwarded to the three
+/// projections.
+pub fn mlp_decode_step_with(
+    mlp: &Mlp,
+    xn: &[f32],
+    lut_scratch: &mut Vec<f32>,
+    kcfg: KernelConfig,
+) -> Vec<f32> {
     let ff = mlp.wg.d_out();
     let mut gate = vec![0.0f32; ff];
     let mut up = vec![0.0f32; ff];
-    mlp.wg.matvec_cached(xn, &mut gate, lut_scratch);
-    mlp.wu.matvec_cached(xn, &mut up, lut_scratch);
+    mlp.wg.matvec_cached_with(xn, &mut gate, lut_scratch, kcfg);
+    mlp.wu.matvec_cached_with(xn, &mut up, lut_scratch, kcfg);
     for i in 0..ff {
         gate[i] = silu(gate[i]) * up[i];
     }
     let mut out = vec![0.0f32; mlp.wd.d_out()];
-    mlp.wd.matvec_cached(&gate, &mut out, lut_scratch);
+    mlp.wd.matvec_cached_with(&gate, &mut out, lut_scratch, kcfg);
     out
 }
 
 /// Batched SwiGLU MLP over `n` lanes (`xns` is `n·d`, lane-major); one
 /// batched call per projection so quantized weights stream codes once.
 pub fn mlp_decode_step_batch(mlp: &Mlp, xns: &[f32], n: usize, lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+    mlp_decode_step_batch_with(mlp, xns, n, lut_scratch, KernelConfig::serial())
+}
+
+/// [`mlp_decode_step_batch`] with a [`KernelConfig`] forwarded to the three
+/// batched projections.
+pub fn mlp_decode_step_batch_with(
+    mlp: &Mlp,
+    xns: &[f32],
+    n: usize,
+    lut_scratch: &mut Vec<f32>,
+    kcfg: KernelConfig,
+) -> Vec<f32> {
     let ff = mlp.wg.d_out();
     let mut gate = vec![0.0f32; n * ff];
     let mut up = vec![0.0f32; n * ff];
-    mlp.wg.matvec_batch_cached(xns, n, &mut gate, lut_scratch);
-    mlp.wu.matvec_batch_cached(xns, n, &mut up, lut_scratch);
+    mlp.wg.matvec_batch_cached_with(xns, n, &mut gate, lut_scratch, kcfg);
+    mlp.wu.matvec_batch_cached_with(xns, n, &mut up, lut_scratch, kcfg);
     for i in 0..n * ff {
         gate[i] = silu(gate[i]) * up[i];
     }
     let mut out = vec![0.0f32; n * mlp.wd.d_out()];
-    mlp.wd.matvec_batch_cached(&gate, n, &mut out, lut_scratch);
+    mlp.wd.matvec_batch_cached_with(&gate, n, &mut out, lut_scratch, kcfg);
     out
 }
 

@@ -17,6 +17,7 @@
 //!   bit-for-bit equal to a dense GEMV over the decoded matrix, so moving
 //!   off the dense backing changed no served token.
 
+use crate::kernels::config::KernelConfig;
 use crate::kernels::format::{AqlmWeight, PackedSpqr};
 use crate::kernels::matvec::PackedAqlm;
 use crate::quant::groupint::GroupIntWeight;
@@ -235,13 +236,27 @@ impl Linear {
     /// falls back to building the packed/dequantized form for this one call
     /// (correct, just slow) so the result never depends on warm-up state.
     pub fn matvec_cached(&self, x: &[f32], y: &mut [f32], lut_scratch: &mut Vec<f32>) {
+        self.matvec_cached_with(x, y, lut_scratch, KernelConfig::serial());
+    }
+
+    /// [`Self::matvec_cached`] with a [`KernelConfig`] forwarded to the
+    /// packed kernels (row-parallel + SIMD, bit-for-bit equal to serial —
+    /// see `docs/kernels.md`). Dense and grouped-int layers run the same
+    /// serial GEMV regardless of `cfg`.
+    pub fn matvec_cached_with(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        lut_scratch: &mut Vec<f32>,
+        cfg: KernelConfig,
+    ) {
         match self {
             Linear::Dense(w) => gemv(w, x, y),
             Linear::Aqlm { q, packed, .. } => match packed {
-                Some(p) => p.matvec_auto(x, lut_scratch, y),
-                None => PackedAqlm::from_weight(q).matvec_auto(x, lut_scratch, y),
+                Some(p) => p.matvec_auto_with(x, lut_scratch, y, cfg),
+                None => PackedAqlm::from_weight(q).matvec_auto_with(x, lut_scratch, y, cfg),
             },
-            Linear::Spqr { q, .. } => q.matvec(x, lut_scratch, y),
+            Linear::Spqr { q, .. } => q.matvec_with(x, lut_scratch, y, cfg),
             // Scalar-quantized baselines run the dense GEMV over the
             // dequantized matrix (as the related work does).
             Linear::GroupInt { q, decoded } => match decoded {
@@ -267,14 +282,27 @@ impl Linear {
     /// [`Self::matvec_batch`] through a shared reference (see
     /// [`Self::matvec_cached`] for the warm/cold contract).
     pub fn matvec_batch_cached(&self, xs: &[f32], n: usize, ys: &mut [f32], lut_scratch: &mut Vec<f32>) {
+        self.matvec_batch_cached_with(xs, n, ys, lut_scratch, KernelConfig::serial());
+    }
+
+    /// [`Self::matvec_batch_cached`] with a [`KernelConfig`] forwarded to
+    /// the packed batched kernels (see [`Self::matvec_cached_with`]).
+    pub fn matvec_batch_cached_with(
+        &self,
+        xs: &[f32],
+        n: usize,
+        ys: &mut [f32],
+        lut_scratch: &mut Vec<f32>,
+        cfg: KernelConfig,
+    ) {
         debug_assert_eq!(xs.len(), n * self.d_in());
         debug_assert_eq!(ys.len(), n * self.d_out());
         match self {
             Linear::Aqlm { q, packed, .. } => match packed {
-                Some(p) => p.matmat_auto(xs, n, lut_scratch, ys),
-                None => PackedAqlm::from_weight(q).matmat_auto(xs, n, lut_scratch, ys),
+                Some(p) => p.matmat_auto_with(xs, n, lut_scratch, ys, cfg),
+                None => PackedAqlm::from_weight(q).matmat_auto_with(xs, n, lut_scratch, ys, cfg),
             },
-            Linear::Spqr { q, .. } => q.matvec_batch(xs, n, lut_scratch, ys),
+            Linear::Spqr { q, .. } => q.matvec_batch_with(xs, n, lut_scratch, ys, cfg),
             Linear::Dense(w) => {
                 let (d_in, d_out) = (w.cols(), w.rows());
                 for b in 0..n {

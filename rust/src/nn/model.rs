@@ -16,6 +16,7 @@ use super::loss::cross_entropy;
 use super::moe::MoeLayer;
 use super::rope::Rope;
 use super::section;
+use crate::kernels::config::KernelConfig;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -48,6 +49,12 @@ pub struct Model {
     /// (`LayerPolicy` grammar), set by the pipeline and persisted in the
     /// checkpoint header — a loaded model knows how it was made.
     pub quant_policy: Option<String>,
+    /// Runtime kernel execution knobs (worker threads, SIMD) forwarded to
+    /// every packed linear on the decode paths. Never serialized — a loaded
+    /// model starts from [`KernelConfig::default`] (auto threads, SIMD on)
+    /// and the server overwrites it from its own config before warm-up.
+    /// Any setting decodes bit-identically (see `docs/kernels.md`).
+    pub kernel: KernelConfig,
 }
 
 /// Activation cache of a full forward pass.
@@ -128,6 +135,7 @@ impl Model {
             rope: Rope::new(cfg.head_dim(), cfg.max_seq, cfg.rope_theta),
             layer_bits: HashMap::new(),
             quant_policy: None,
+            kernel: KernelConfig::default(),
         }
     }
 
@@ -275,12 +283,12 @@ impl Model {
         let cfg = &self.cfg;
         let mut x = self.embed.row(token as usize).to_vec();
         for (i, block) in self.blocks.iter().enumerate() {
-            x = block.decode_step(&x, cfg, pos, &self.rope, &mut kv[i], lut_scratch);
+            x = block.decode_step_with(&x, cfg, pos, &self.rope, &mut kv[i], lut_scratch, self.kernel);
         }
         let mut xn = vec![0.0f32; cfg.d_model];
         crate::tensor::ops::rmsnorm(&x, &self.ln_f, cfg.norm_eps, &mut xn);
         let mut logits = vec![0.0f32; cfg.vocab_size];
-        self.head.matvec_cached(&xn, &mut logits, lut_scratch);
+        self.head.matvec_cached_with(&xn, &mut logits, lut_scratch, self.kernel);
         logits
     }
 
@@ -309,13 +317,14 @@ impl Model {
         let mut x = self.embed_lanes(tokens);
         for (li, block) in self.blocks.iter().enumerate() {
             let mut lanes = KvLanes::Contig(kvs.iter_mut().map(|seq| &mut seq[li]).collect());
-            x = block.decode_step_batch(
+            x = block.decode_step_batch_with(
                 &x,
                 &self.cfg,
                 positions,
                 &self.rope,
                 &mut lanes,
                 lut_scratch,
+                self.kernel,
             );
         }
         self.head_lanes(&x, n, lut_scratch)
@@ -348,13 +357,14 @@ impl Model {
         for (li, block) in self.blocks.iter().enumerate() {
             let tables = seqs.iter_mut().map(|seq| &mut seq.layers[li]).collect();
             let mut lanes = KvLanes::Paged(&mut *pool, tables);
-            x = block.decode_step_batch(
+            x = block.decode_step_batch_with(
                 &x,
                 &self.cfg,
                 positions,
                 &self.rope,
                 &mut lanes,
                 lut_scratch,
+                self.kernel,
             );
         }
         self.head_lanes(&x, n, lut_scratch)
@@ -384,7 +394,7 @@ impl Model {
             );
         }
         let mut logits = vec![0.0f32; n * vocab];
-        self.head.matvec_batch_cached(&xn, n, &mut logits, lut_scratch);
+        self.head.matvec_batch_cached_with(&xn, n, &mut logits, lut_scratch, self.kernel);
         (0..n).map(|b| logits[b * vocab..(b + 1) * vocab].to_vec()).collect()
     }
 
@@ -790,6 +800,7 @@ pub fn assemble_model(
         cfg,
         layer_bits,
         quant_policy,
+        kernel: KernelConfig::default(),
     })
 }
 

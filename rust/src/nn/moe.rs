@@ -6,8 +6,9 @@
 //! tokens by expert so each expert runs one batched matmul; backward
 //! scatters gradients back through both the experts and the router.
 
-use super::block::{mlp_backward, mlp_decode_step, mlp_forward, Mlp, MlpCache};
+use super::block::{mlp_backward, mlp_decode_step_with, mlp_forward, Mlp, MlpCache};
 use super::linear::LinearGrad;
+use crate::kernels::config::KernelConfig;
 use crate::tensor::ops::softmax_inplace;
 use crate::tensor::Tensor;
 
@@ -178,13 +179,24 @@ impl MoeLayer {
     /// pre-warmed via `Model::warm_decode` for full speed; cold caches fall
     /// back to per-call decoding, see `Linear::matvec_cached`).
     pub fn decode_step(&self, xn: &[f32], lut_scratch: &mut Vec<f32>) -> Vec<f32> {
+        self.decode_step_with(xn, lut_scratch, KernelConfig::serial())
+    }
+
+    /// [`Self::decode_step`] with a [`KernelConfig`] forwarded to the expert
+    /// MLPs (the full-precision router gemv stays serial).
+    pub fn decode_step_with(
+        &self,
+        xn: &[f32],
+        lut_scratch: &mut Vec<f32>,
+        kcfg: KernelConfig,
+    ) -> Vec<f32> {
         let e_cnt = self.n_experts();
         let mut logits = vec![0.0f32; e_cnt];
         crate::tensor::ops::gemv(&self.gate, xn, &mut logits);
         let (ids, w) = self.route(&logits);
         let mut out = vec![0.0f32; xn.len()];
         for (slot, &e) in ids.iter().enumerate() {
-            let ye = mlp_decode_step(&self.experts[e], xn, lut_scratch);
+            let ye = mlp_decode_step_with(&self.experts[e], xn, lut_scratch, kcfg);
             for (o, &v) in out.iter_mut().zip(&ye) {
                 *o += w[slot] * v;
             }

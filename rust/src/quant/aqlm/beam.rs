@@ -17,7 +17,9 @@
 //! Beam width 1 is ICM-style greedy; width k keeps the k best code
 //! configurations alive through the sweep, as in Babenko & Lempitsky 2014.
 
+use crate::kernels::config::KernelConfig;
 use crate::kernels::format::AqlmWeight;
+use crate::kernels::parallel;
 use crate::tensor::Tensor;
 
 /// Precomputed, codebook-dependent tables for one layer's beam search.
@@ -111,107 +113,173 @@ impl Hypothesis {
     }
 }
 
+/// Beam-search one output unit's codes without touching `q`. Returns the
+/// winning code vector (`[n_groups][M]`) plus the exact recomputed loss for
+/// that row. Pure in `q`, so disjoint rows can run on different threads;
+/// the arithmetic (including the exact-loss recompute, which mirrors
+/// [`AqlmWeight::decode_row`] operation for operation) is identical to the
+/// historical in-place sweep.
+fn sweep_row(
+    q: &AqlmWeight,
+    ctx: &BeamContext,
+    w: &Tensor,
+    xxt: &Tensor,
+    beam: usize,
+    i: usize,
+) -> (Vec<u16>, f64) {
+    let g = q.group;
+    let n_groups = q.n_groups();
+    let k = q.codebook_size();
+    let m_cnt = q.n_codebooks;
+    let mut wbuf = vec![0.0f32; q.d_in];
+    let s = q.scales[i];
+    // Build the initial residual and t for row i.
+    q.decode_row(i, &mut wbuf);
+    let r: Vec<f32> = w.row(i).iter().zip(&wbuf).map(|(&a, &b)| a - b).collect();
+    let mut t = vec![0.0f32; q.d_in];
+    for row in 0..q.d_in {
+        t[row] = crate::tensor::ops::dot(xxt.row(row), &r);
+    }
+    let loss = crate::tensor::ops::dot(&r, &t) as f64;
+    let init_codes: Vec<u16> =
+        (0..n_groups).flat_map(|j| (0..m_cnt).map(move |m| (j, m))).map(|(j, m)| q.codes[q.code_index(i, j, m)]).collect();
+    let mut hyps = vec![Hypothesis { codes: init_codes, r, t, loss }];
+
+    // Sweep positions.
+    let mut qa = vec![0.0f32; k];
+    let mut e = vec![0.0f32; k];
+    let mut u = vec![0.0f32; g];
+    for j in 0..n_groups {
+        for m in 0..m_cnt {
+            // Candidate scoring for every hypothesis.
+            // (score, hyp index, candidate code)
+            let mut scored: Vec<(f64, usize, u16)> = Vec::with_capacity(hyps.len() * 2);
+            for (hi, hyp) in hyps.iter().enumerate() {
+                let c_old = hyp.codes[j * m_cnt + m] as usize;
+                let tj = &hyp.t[j * g..(j + 1) * g];
+                // qa[c] = C_m[c] · t_j
+                let cb = q.codebooks[m].data();
+                for c in 0..k {
+                    qa[c] = crate::tensor::ops::dot(&cb[c * g..(c + 1) * g], tj);
+                }
+                // u = S_j · C_m[c_old]; e[c] = C_m[c] · u
+                let old_cw = &cb[c_old * g..(c_old + 1) * g];
+                for a in 0..g {
+                    u[a] = crate::tensor::ops::dot(ctx.sj[j].row(a), old_cw);
+                }
+                for c in 0..k {
+                    e[c] = crate::tensor::ops::dot(&cb[c * g..(c + 1) * g], &u);
+                }
+                let dbase = &ctx.diag[(j * m_cnt + m) * k..];
+                let d_old = dbase[c_old];
+                for c in 0..k {
+                    let dl = -2.0 * (s as f64) * ((qa[c] - qa[c_old]) as f64)
+                        + (s as f64) * (s as f64)
+                            * ((dbase[c] - 2.0 * e[c] + d_old) as f64);
+                    scored.push((hyp.loss + dl, hi, c as u16));
+                }
+            }
+            // Keep the best `beam` (distinct (hyp, code) pairs).
+            scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            scored.truncate(beam);
+            let mut next: Vec<Hypothesis> = Vec::with_capacity(beam);
+            for &(new_loss, hi, c) in &scored {
+                let mut h = hyps[hi].clone();
+                let c_old = h.codes[j * m_cnt + m];
+                if c != c_old {
+                    let dl = new_loss - h.loss;
+                    h.apply(q, &ctx, xxt, j, m, c, dl, s);
+                }
+                next.push(h);
+            }
+            hyps = next;
+        }
+    }
+    let best = hyps
+        .into_iter()
+        .min_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap())
+        .unwrap();
+    // Recompute the exact loss for the winning codes (guards against f32
+    // drift in the incremental bookkeeping). Decodes from `best.codes`
+    // with the same per-group accumulate-then-scale order as
+    // `AqlmWeight::decode_row`, so the result is bit-identical to decoding
+    // after commit.
+    let mut buf = vec![0.0f32; g];
+    for grp in 0..n_groups {
+        buf.fill(0.0);
+        for m in 0..m_cnt {
+            let code = best.codes[grp * m_cnt + m] as usize;
+            let cw = &q.codebooks[m].data()[code * g..(code + 1) * g];
+            for (o, &c) in buf.iter_mut().zip(cw.iter()) {
+                *o += c;
+            }
+        }
+        for tt in 0..g {
+            wbuf[grp * g + tt] = s * buf[tt];
+        }
+    }
+    let r: Vec<f32> = w.row(i).iter().zip(&wbuf).map(|(&a, &b)| a - b).collect();
+    let mut exact = 0.0f64;
+    for row in 0..q.d_in {
+        exact += (r[row] as f64) * (crate::tensor::ops::dot(xxt.row(row), &r) as f64);
+    }
+    (best.codes, exact)
+}
+
 /// Run one full beam-search sweep over every output unit's codes, in place.
 /// Returns the total layer loss `Σ_i ‖(w_i − ŵ_i)X‖²` after the sweep.
+///
+/// Rows are swept with auto-sized parallelism (equivalent to
+/// [`beam_search_sweep_threads`] with `threads = 0`); the result is
+/// byte-identical to a serial sweep at any thread count.
 pub fn beam_search_sweep(
     q: &mut AqlmWeight,
     w: &Tensor,
     xxt: &Tensor,
     beam: usize,
 ) -> f64 {
+    beam_search_sweep_threads(q, w, xxt, beam, 0)
+}
+
+/// [`beam_search_sweep`] with an explicit worker-thread count (`0` = auto).
+///
+/// Output units are independent in the objective — each row's search reads
+/// only its own codes plus the shared codebooks/scales — so rows are
+/// partitioned across scoped threads and the winning codes are committed
+/// serially in row order. Codes and the returned loss (summed in row
+/// order) are byte-identical to `threads = 1`.
+pub fn beam_search_sweep_threads(
+    q: &mut AqlmWeight,
+    w: &Tensor,
+    xxt: &Tensor,
+    beam: usize,
+    threads: usize,
+) -> f64 {
     assert!(beam >= 1);
     let ctx = BeamContext::build(q, xxt);
-    let g = q.group;
-    let n_groups = q.n_groups();
-    let k = q.codebook_size();
+    let n_threads = KernelConfig { threads, simd: false }.effective_threads(q.d_out);
+    let rows: Vec<(usize, Vec<(Vec<u16>, f64)>)> = {
+        let q = &*q;
+        parallel::map_row_chunks(q.d_out, n_threads, |lo, hi| {
+            (lo, (lo..hi).map(|i| sweep_row(q, &ctx, w, xxt, beam, i)).collect())
+        })
+    };
+    // Serial commit in row order: write the winning codes and sum the exact
+    // losses exactly as the serial sweep would.
     let m_cnt = q.n_codebooks;
+    let n_groups = q.n_groups();
     let mut total_loss = 0.0f64;
-
-    let mut wbuf = vec![0.0f32; q.d_in];
-    for i in 0..q.d_out {
-        let s = q.scales[i];
-        // Build the initial residual and t for row i.
-        q.decode_row(i, &mut wbuf);
-        let r: Vec<f32> = w.row(i).iter().zip(&wbuf).map(|(&a, &b)| a - b).collect();
-        let mut t = vec![0.0f32; q.d_in];
-        for row in 0..q.d_in {
-            t[row] = crate::tensor::ops::dot(xxt.row(row), &r);
-        }
-        let loss = crate::tensor::ops::dot(&r, &t) as f64;
-        let init_codes: Vec<u16> =
-            (0..n_groups).flat_map(|j| (0..m_cnt).map(move |m| (j, m))).map(|(j, m)| q.codes[q.code_index(i, j, m)]).collect();
-        let mut hyps = vec![Hypothesis { codes: init_codes, r, t, loss }];
-
-        // Sweep positions.
-        let mut qa = vec![0.0f32; k];
-        let mut e = vec![0.0f32; k];
-        let mut u = vec![0.0f32; g];
-        for j in 0..n_groups {
-            for m in 0..m_cnt {
-                // Candidate scoring for every hypothesis.
-                // (score, hyp index, candidate code)
-                let mut scored: Vec<(f64, usize, u16)> = Vec::with_capacity(hyps.len() * 2);
-                for (hi, hyp) in hyps.iter().enumerate() {
-                    let c_old = hyp.codes[j * m_cnt + m] as usize;
-                    let tj = &hyp.t[j * g..(j + 1) * g];
-                    // qa[c] = C_m[c] · t_j
-                    let cb = q.codebooks[m].data();
-                    for c in 0..k {
-                        qa[c] = crate::tensor::ops::dot(&cb[c * g..(c + 1) * g], tj);
-                    }
-                    // u = S_j · C_m[c_old]; e[c] = C_m[c] · u
-                    let old_cw = &cb[c_old * g..(c_old + 1) * g];
-                    for a in 0..g {
-                        u[a] = crate::tensor::ops::dot(ctx.sj[j].row(a), old_cw);
-                    }
-                    for c in 0..k {
-                        e[c] = crate::tensor::ops::dot(&cb[c * g..(c + 1) * g], &u);
-                    }
-                    let dbase = &ctx.diag[(j * m_cnt + m) * k..];
-                    let d_old = dbase[c_old];
-                    for c in 0..k {
-                        let dl = -2.0 * (s as f64) * ((qa[c] - qa[c_old]) as f64)
-                            + (s as f64) * (s as f64)
-                                * ((dbase[c] - 2.0 * e[c] + d_old) as f64);
-                        scored.push((hyp.loss + dl, hi, c as u16));
-                    }
+    for (lo, chunk) in rows {
+        for (off, (codes, exact)) in chunk.into_iter().enumerate() {
+            let i = lo + off;
+            for j in 0..n_groups {
+                for m in 0..m_cnt {
+                    let idx = q.code_index(i, j, m);
+                    q.codes[idx] = codes[j * m_cnt + m];
                 }
-                // Keep the best `beam` (distinct (hyp, code) pairs).
-                scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                scored.truncate(beam);
-                let mut next: Vec<Hypothesis> = Vec::with_capacity(beam);
-                for &(new_loss, hi, c) in &scored {
-                    let mut h = hyps[hi].clone();
-                    let c_old = h.codes[j * m_cnt + m];
-                    if c != c_old {
-                        let dl = new_loss - h.loss;
-                        h.apply(q, &ctx, xxt, j, m, c, dl, s);
-                    }
-                    next.push(h);
-                }
-                hyps = next;
             }
+            total_loss += exact;
         }
-        // Commit the best hypothesis.
-        let best = hyps
-            .iter()
-            .min_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap())
-            .unwrap();
-        for j in 0..n_groups {
-            for m in 0..m_cnt {
-                let idx = q.code_index(i, j, m);
-                q.codes[idx] = best.codes[j * m_cnt + m];
-            }
-        }
-        // Recompute the exact loss for the committed row (guards against
-        // f32 drift in the incremental bookkeeping).
-        q.decode_row(i, &mut wbuf);
-        let r: Vec<f32> = w.row(i).iter().zip(&wbuf).map(|(&a, &b)| a - b).collect();
-        let mut exact = 0.0f64;
-        for row in 0..q.d_in {
-            exact += (r[row] as f64) * (crate::tensor::ops::dot(xxt.row(row), &r) as f64);
-        }
-        total_loss += exact;
     }
     total_loss
 }
@@ -288,6 +356,19 @@ mod tests {
         // K-means init is already strong; a single sweep should still find
         // a clearly measurable improvement.
         assert!(after < before * 0.97, "beam barely helped: {before} -> {after}");
+    }
+
+    #[test]
+    fn parallel_sweep_is_byte_identical_to_serial() {
+        let (w, xxt, q0) = setup(6);
+        for threads in [2usize, 3, 8] {
+            let mut q1 = q0.clone();
+            let mut qn = q0.clone();
+            let l1 = beam_search_sweep_threads(&mut q1, &w, &xxt, 2, 1);
+            let ln = beam_search_sweep_threads(&mut qn, &w, &xxt, 2, threads);
+            assert_eq!(q1.codes, qn.codes, "codes diverged at threads={threads}");
+            assert_eq!(l1.to_bits(), ln.to_bits(), "loss diverged at threads={threads}");
+        }
     }
 
     #[test]

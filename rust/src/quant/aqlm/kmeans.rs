@@ -7,16 +7,62 @@
 //! compensate the quantization error of codebooks `1..m-1`. Figure 4 of the
 //! paper (reproduced by bench `f4`) shows why this matters vs random init.
 
+use crate::kernels::config::KernelConfig;
 use crate::kernels::format::{AqlmShape, AqlmWeight};
+use crate::kernels::parallel;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Plain Lloyd K-means on `points` [n, g]. Returns (centroids [k, g],
 /// assignment per point). Empty clusters are re-seeded from the farthest
 /// points.
+///
+/// Runs the assignment steps with auto-sized parallelism (equivalent to
+/// [`kmeans_threads`] with `threads = 0`); results are byte-identical to
+/// serial at any thread count.
 pub fn kmeans(points: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> (Tensor, Vec<u16>) {
+    kmeans_threads(points, k, iters, rng, 0)
+}
+
+/// Write each point's nearest centroid (and optionally its distance) using
+/// `threads` scoped workers over disjoint point ranges. Each point's
+/// distance loop is untouched, so the result is byte-identical to serial.
+fn assign_all(
+    points: &Tensor,
+    centroids: &Tensor,
+    threads: usize,
+    assign: &mut [u16],
+    mut dists: Option<&mut [f32]>,
+) {
+    let n = points.rows();
+    let chunks = parallel::map_row_chunks(n, threads, |lo, hi| {
+        (lo, (lo..hi).map(|p| nearest(points.row(p), centroids)).collect::<Vec<_>>())
+    });
+    for (lo, chunk) in chunks {
+        for (off, (best, d)) in chunk.into_iter().enumerate() {
+            assign[lo + off] = best as u16;
+            if let Some(dists) = dists.as_deref_mut() {
+                dists[lo + off] = d;
+            }
+        }
+    }
+}
+
+/// [`kmeans`] with an explicit worker-thread count (`0` = auto).
+///
+/// Only the embarrassingly-parallel assignment steps fan out; the rng-driven
+/// init, the f64 update step, and empty-cluster re-seeding stay serial, so
+/// the rng consumption and every centroid are byte-identical to `threads = 1`.
+pub fn kmeans_threads(
+    points: &Tensor,
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+    threads: usize,
+) -> (Tensor, Vec<u16>) {
     let (n, g) = (points.rows(), points.cols());
     assert!(n > 0);
+    let n_threads = KernelConfig { threads, simd: false }.effective_threads(n);
     // Init: sample k points (with replacement when n < k).
     let mut centroids = Tensor::zeros(&[k, g]);
     for c in 0..k {
@@ -27,11 +73,7 @@ pub fn kmeans(points: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> (Tensor
     let mut dists = vec![0.0f32; n];
     for _ in 0..iters {
         // Assignment step.
-        for p in 0..n {
-            let (best, d) = nearest(points.row(p), &centroids);
-            assign[p] = best as u16;
-            dists[p] = d;
-        }
+        assign_all(points, &centroids, n_threads, &mut assign, Some(&mut dists));
         // Update step.
         let mut sums = vec![0.0f64; k * g];
         let mut counts = vec![0usize; k];
@@ -63,10 +105,7 @@ pub fn kmeans(points: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> (Tensor
         }
     }
     // Final assignment against the last centroids.
-    for p in 0..n {
-        let (best, _) = nearest(points.row(p), &centroids);
-        assign[p] = best as u16;
-    }
+    assign_all(points, &centroids, n_threads, &mut assign, None);
     (centroids, assign)
 }
 
@@ -223,6 +262,22 @@ mod tests {
         let (centroids, assign) = kmeans(&points, 8, 5, &mut rng);
         assert_eq!(centroids.rows(), 8);
         assert!(assign.iter().all(|&a| a < 8));
+    }
+
+    #[test]
+    fn parallel_kmeans_is_byte_identical_to_serial() {
+        let mut rng_mk = Rng::seed_from_u64(7);
+        let points = Tensor::randn(&[70, 6], 1.0, &mut rng_mk);
+        for threads in [2usize, 3, 8] {
+            let mut rng1 = Rng::seed_from_u64(11);
+            let mut rngn = Rng::seed_from_u64(11);
+            let (c1, a1) = kmeans_threads(&points, 9, 12, &mut rng1, 1);
+            let (cn, an) = kmeans_threads(&points, 9, 12, &mut rngn, threads);
+            assert_eq!(a1, an, "assignments diverged at threads={threads}");
+            let bits1: Vec<u32> = c1.data().iter().map(|v| v.to_bits()).collect();
+            let bitsn: Vec<u32> = cn.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits1, bitsn, "centroids diverged at threads={threads}");
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use super::artifact::ArtifactFile;
 use super::lazy::LazyModel;
+use crate::kernels::config::KernelConfig;
 use crate::nn::model::Model;
 use crate::nn::section;
 use std::collections::BTreeMap;
@@ -69,6 +70,9 @@ struct Inner {
     misses: u64,
     evictions: u64,
     loads: u64,
+    /// Kernel knobs stamped onto every model loaded through [`ModelRegistry::acquire`]
+    /// (before warm-up). Bit-identical output for any setting.
+    kernel: KernelConfig,
 }
 
 impl Inner {
@@ -134,8 +138,16 @@ impl ModelRegistry {
                 misses: 0,
                 evictions: 0,
                 loads: 0,
+                kernel: KernelConfig::default(),
             }),
         }
+    }
+
+    /// Set the kernel execution knobs (threads, SIMD) applied to every model
+    /// loaded by later [`Self::acquire`] calls. Already-warm models keep the
+    /// config they were loaded with; output is bit-identical either way.
+    pub fn set_kernel_config(&self, cfg: KernelConfig) {
+        self.inner.lock().expect("registry lock").kernel = cfg;
     }
 
     /// Register a model id → checkpoint path mapping (no IO yet).
@@ -185,6 +197,7 @@ impl ModelRegistry {
             None => {
                 inner.misses += 1;
                 inner.loads += 1;
+                let kernel = inner.kernel;
                 let entry = inner.entries.get_mut(name).expect("entry exists");
                 let path = entry.path.clone();
                 let (mut model, warm_bytes, lazy) =
@@ -201,6 +214,7 @@ impl ModelRegistry {
                         let model = Model::load(&path)?;
                         (model, std::fs::metadata(&path)?.len(), None)
                     };
+                model.kernel = kernel;
                 model.warm_decode();
                 let handle = Arc::new(model);
                 entry.warm = Some(Arc::clone(&handle));

@@ -1,0 +1,356 @@
+//! Integration over the kernel execution knobs (`KernelConfig`): every
+//! parallel/SIMD kernel variant must be **bit-for-bit identical** (0 ulp)
+//! to its scalar-serial oracle, the quantizer's parallel inner loops must
+//! be byte-deterministic, and a server running with a non-serial config
+//! must emit exactly the tokens of an offline serial decode.
+//!
+//! See `docs/kernels.md` for the contract these tests enforce.
+
+use aqlm::bench::kernels::synthetic_weight;
+use aqlm::coordinator::server::{Server, ServerConfig};
+use aqlm::kernels::config::KernelConfig;
+use aqlm::kernels::format::{AqlmShape, PackedSpqr};
+use aqlm::kernels::matvec::PackedAqlm;
+use aqlm::nn::config::ModelConfig;
+use aqlm::nn::linear::Linear;
+use aqlm::nn::model::Model;
+use aqlm::quant::aqlm::beam::beam_search_sweep_threads;
+use aqlm::quant::aqlm::kmeans::kmeans_threads;
+use aqlm::quant::aqlm::layer::{AqlmLayerConfig, LayerQuantizer};
+use aqlm::quant::CalibData;
+use aqlm::tensor::ops::matmul_bt;
+use aqlm::tensor::Tensor;
+use aqlm::util::propcheck::{check_no_shrink, Config};
+use aqlm::util::rng::Rng;
+
+/// Explicit thread counts exercised everywhere (1 = serial baseline; 3 is
+/// deliberately not a divisor of most row counts; 8 usually exceeds the
+/// row count of the small shapes, exercising the clamp).
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+/// Batch widths for the matmat / batched kernels.
+const BATCHES: [usize; 4] = [1, 4, 8, 16];
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: bit mismatch at [{i}]: {g} vs {w}"
+        );
+    }
+}
+
+/// Short display tag for a config, e.g. `t4+simd` (mirrors the bench's
+/// method-string suffix).
+fn cfg_tag(kc: KernelConfig) -> String {
+    format!("t{}{}", kc.threads, if kc.simd { "+simd" } else { "" })
+}
+
+/// The full threads × simd grid, serial-scalar first.
+fn all_cfgs() -> Vec<KernelConfig> {
+    let mut out = Vec::new();
+    for &threads in &THREADS {
+        for &simd in &[false, true] {
+            out.push(KernelConfig { threads, simd });
+        }
+    }
+    out
+}
+
+fn randn(n: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+// ------------------------------------------------------- AQLM kernel parity
+
+/// Every AQLM kernel variant at every (threads, simd) setting vs the plain
+/// scalar-serial oracle, at 0 ulp, over a spread of shapes: byte-aligned
+/// codes, the 3×5-bit multi-codebook format from the paper, rows below the
+/// thread count, and a >8-bit code width (the scalar-only LUT path).
+#[test]
+fn aqlm_kernels_bitexact_across_threads_and_simd() {
+    let shapes = [
+        (37, 48, AqlmShape::new(2, 8, 8)),  // byte codes, ragged vs 8-chunking
+        (64, 32, AqlmShape::new(3, 5, 16)), // 3 codebooks × 5-bit, g=16
+        (5, 24, AqlmShape::new(2, 4, 8)),   // d_out < max thread count
+        (33, 32, AqlmShape::new(1, 9, 8)),  // code_bits > 8: scalar LUT path
+    ];
+    let mut rng = Rng::seed_from_u64(0xA11CE);
+    for &(d_out, d_in, shape) in &shapes {
+        let mut w = synthetic_weight(d_out, d_in, shape, &mut rng);
+        // Non-unit per-row scales so the final multiply is load-bearing.
+        w.scales = (0..d_out).map(|_| 0.5 + rng.f32()).collect();
+        let p = PackedAqlm::from_weight(&w);
+        let tag = format!("{d_out}x{d_in} {shape:?}");
+
+        let x = randn(d_in, &mut rng);
+        let mut want_dec = vec![0.0f32; d_out];
+        p.matvec_decode(&x, &mut want_dec);
+        let mut lut = vec![0.0f32; p.lut_len()];
+        let mut want_lut = vec![0.0f32; d_out];
+        p.matvec_lut(&x, &mut lut, &mut want_lut);
+        let mut auto_scratch = Vec::new();
+        let mut want_auto = vec![0.0f32; d_out];
+        p.matvec_auto(&x, &mut auto_scratch, &mut want_auto);
+
+        for cfg in all_cfgs() {
+            let ctag = format!("{tag} {}", cfg_tag(cfg));
+            let mut y = vec![0.0f32; d_out];
+            p.matvec_decode_with(&x, &mut y, cfg);
+            assert_bits_eq(&y, &want_dec, &format!("matvec_decode {ctag}"));
+            y.fill(f32::NAN);
+            p.matvec_lut_with(&x, &mut lut, &mut y, cfg);
+            assert_bits_eq(&y, &want_lut, &format!("matvec_lut {ctag}"));
+            y.fill(f32::NAN);
+            p.matvec_auto_with(&x, &mut auto_scratch, &mut y, cfg);
+            assert_bits_eq(&y, &want_auto, &format!("matvec_auto {ctag}"));
+        }
+
+        for &n in &BATCHES {
+            let xs = randn(n * d_in, &mut rng);
+            let mut want_mm_dec = vec![0.0f32; n * d_out];
+            p.matmat_decode(&xs, n, &mut want_mm_dec);
+            let mut blut = vec![0.0f32; n * p.lut_len()];
+            let mut want_mm_lut = vec![0.0f32; n * d_out];
+            p.matmat_lut(&xs, n, &mut blut, &mut want_mm_lut);
+            let mut want_mm_auto = vec![0.0f32; n * d_out];
+            p.matmat_auto(&xs, n, &mut auto_scratch, &mut want_mm_auto);
+            for cfg in all_cfgs() {
+                let ctag = format!("{tag} n={n} {}", cfg_tag(cfg));
+                let mut ys = vec![0.0f32; n * d_out];
+                p.matmat_decode_with(&xs, n, &mut ys, cfg);
+                assert_bits_eq(&ys, &want_mm_dec, &format!("matmat_decode {ctag}"));
+                ys.fill(f32::NAN);
+                p.matmat_lut_with(&xs, n, &mut blut, &mut ys, cfg);
+                assert_bits_eq(&ys, &want_mm_lut, &format!("matmat_lut {ctag}"));
+                ys.fill(f32::NAN);
+                p.matmat_auto_with(&xs, n, &mut auto_scratch, &mut ys, cfg);
+                assert_bits_eq(&ys, &want_mm_auto, &format!("matmat_auto {ctag}"));
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- SpQR kernel parity
+
+/// Random packed-SpQR layer; `d_in` is deliberately allowed to be ragged
+/// (`d_in % group != 0`) so the tail-group path is exercised.
+fn random_spqr(d_out: usize, d_in: usize, bits: usize, rng: &mut Rng) -> PackedSpqr {
+    let group = 16;
+    let n_groups = d_in.div_ceil(group);
+    let codes: Vec<u16> = (0..d_out * d_in).map(|_| rng.below(1 << bits) as u16).collect();
+    let scales: Vec<f32> = (0..d_out * n_groups).map(|_| 0.01 + rng.f32() * 0.1).collect();
+    let zeros: Vec<f32> =
+        (0..d_out * n_groups).map(|_| rng.f32() * ((1 << bits) - 1) as f32).collect();
+    // ~8% outliers at strictly ascending flat positions.
+    let outliers: Vec<(usize, f32)> =
+        (0..d_out * d_in).step_by(13).map(|flat| (flat, rng.f32() * 2.0 - 1.0)).collect();
+    PackedSpqr::from_parts(d_out, d_in, group, bits, &codes, scales, zeros, &outliers)
+        .expect("valid synthetic SpQR layer")
+}
+
+/// SpQR fused matvec + batched matvec at every (threads, simd) setting vs
+/// the scalar-serial oracle, at 0 ulp, including ragged `d_in % 16 != 0`.
+#[test]
+fn spqr_kernels_bitexact_across_threads_and_simd() {
+    let shapes = [
+        (40, 50, 3), // ragged tail group (50 % 16 == 2)
+        (7, 33, 4),  // d_out < max thread count, ragged
+        (48, 64, 8), // aligned, widest code
+    ];
+    let mut rng = Rng::seed_from_u64(0x5B9);
+    for &(d_out, d_in, bits) in &shapes {
+        let q = random_spqr(d_out, d_in, bits, &mut rng);
+        let tag = format!("spqr {d_out}x{d_in} b{bits}");
+
+        let x = randn(d_in, &mut rng);
+        let mut scratch = Vec::new();
+        let mut want = vec![0.0f32; d_out];
+        q.matvec(&x, &mut scratch, &mut want);
+        for cfg in all_cfgs() {
+            let ctag = format!("{tag} {}", cfg_tag(cfg));
+            let mut y = vec![f32::NAN; d_out];
+            q.matvec_with(&x, &mut scratch, &mut y, cfg);
+            assert_bits_eq(&y, &want, &format!("matvec {ctag}"));
+        }
+
+        for &n in &BATCHES {
+            let xs = randn(n * d_in, &mut rng);
+            let mut want_b = vec![0.0f32; n * d_out];
+            q.matvec_batch(&xs, n, &mut scratch, &mut want_b);
+            for cfg in all_cfgs() {
+                let ctag = format!("{tag} n={n} {}", cfg_tag(cfg));
+                let mut ys = vec![f32::NAN; n * d_out];
+                q.matvec_batch_with(&xs, n, &mut scratch, &mut ys, cfg);
+                assert_bits_eq(&ys, &want_b, &format!("matvec_batch {ctag}"));
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- properties
+
+/// Property: for random AQLM shapes, inputs, thread counts and SIMD flags,
+/// the configured LUT and decode matvecs equal the serial-scalar oracle
+/// bit-for-bit. Randomizes what the fixed-shape test above pins.
+#[test]
+fn prop_aqlm_matvec_thread_and_simd_invariant() {
+    check_no_shrink(
+        "aqlm-matvec-knob-invariance",
+        &Config { cases: 48, ..Default::default() },
+        |rng: &mut Rng| {
+            let groups = 1 + rng.below(5);
+            let g = [4, 8, 16][rng.below(3)];
+            (
+                rng.below(1 << 30) as u64,        // weight/input seed
+                1 + rng.below(48),                // d_out
+                groups * g,                       // d_in
+                g,                                // group
+                1 + rng.below(3),                 // n_codebooks
+                3 + rng.below(6),                 // code_bits (byte range)
+                THREADS[rng.below(THREADS.len())],
+                rng.below(2) == 1,                // simd
+            )
+        },
+        |&(seed, d_out, d_in, g, m, bits, threads, simd)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let w = synthetic_weight(d_out, d_in, AqlmShape::new(m, bits, g), &mut rng);
+            let p = PackedAqlm::from_weight(&w);
+            let x = randn(d_in, &mut rng);
+            let cfg = KernelConfig { threads, simd };
+            let mut lut = vec![0.0f32; p.lut_len()];
+            let (mut want, mut got) = (vec![0.0f32; d_out], vec![0.0f32; d_out]);
+            p.matvec_lut(&x, &mut lut, &mut want);
+            p.matvec_lut_with(&x, &mut lut, &mut got, cfg);
+            if got.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("matvec_lut diverged at t{threads} simd={simd}"));
+            }
+            p.matvec_decode(&x, &mut want);
+            p.matvec_decode_with(&x, &mut got, cfg);
+            if got.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("matvec_decode diverged at t{threads} simd={simd}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the fused SpQR matvec is knob-invariant over random (often
+/// ragged) shapes, bit widths, outlier patterns, threads, and SIMD.
+#[test]
+fn prop_spqr_matvec_thread_and_simd_invariant() {
+    check_no_shrink(
+        "spqr-matvec-knob-invariance",
+        &Config { cases: 48, ..Default::default() },
+        |rng: &mut Rng| {
+            (
+                rng.below(1 << 30) as u64,        // layer/input seed
+                1 + rng.below(40),                // d_out
+                1 + rng.below(70),                // d_in (ragged vs g=16 often)
+                2 + rng.below(7),                 // bits
+                THREADS[rng.below(THREADS.len())],
+                rng.below(2) == 1,                // simd
+            )
+        },
+        |&(seed, d_out, d_in, bits, threads, simd)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let q = random_spqr(d_out, d_in, bits, &mut rng);
+            let x = randn(d_in, &mut rng);
+            let mut scratch = Vec::new();
+            let (mut want, mut got) = (vec![0.0f32; d_out], vec![0.0f32; d_out]);
+            q.matvec(&x, &mut scratch, &mut want);
+            q.matvec_with(&x, &mut scratch, &mut got, KernelConfig { threads, simd });
+            if got.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("spqr matvec diverged at t{threads} simd={simd}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// -------------------------------------------------- quantizer determinism
+
+/// Parallel beam search commits byte-identical codes and bit-identical
+/// loss at any thread count, on a realistic (random-calibration) XXᵀ.
+#[test]
+fn beam_search_threads_byte_identical() {
+    let mut rng = Rng::seed_from_u64(11);
+    let (d_out, d_in) = (24, 32);
+    let base = synthetic_weight(d_out, d_in, AqlmShape::new(2, 4, 8), &mut rng);
+    let w = Tensor::randn(&[d_out, d_in], 1.0, &mut rng);
+    let x = Tensor::randn(&[d_in, 40], 1.0, &mut rng);
+    let xxt = matmul_bt(&x, &x);
+
+    let mut q1 = base.clone();
+    let loss1 = beam_search_sweep_threads(&mut q1, &w, &xxt, 3, 1);
+    for threads in [2, 4, 8] {
+        let mut qt = base.clone();
+        let losst = beam_search_sweep_threads(&mut qt, &w, &xxt, 3, threads);
+        assert_eq!(qt.codes, q1.codes, "beam codes diverged at threads={threads}");
+        assert_eq!(
+            losst.to_bits(),
+            loss1.to_bits(),
+            "beam loss diverged at threads={threads}"
+        );
+    }
+}
+
+/// Parallel k-means assignment leaves centroids, assignments, and rng
+/// consumption byte-identical to serial at any thread count.
+#[test]
+fn kmeans_threads_byte_identical() {
+    let points = Tensor::randn(&[75, 6], 1.0, &mut Rng::seed_from_u64(21));
+    let (c1, a1) = kmeans_threads(&points, 9, 12, &mut Rng::seed_from_u64(22), 1);
+    for threads in [2, 4, 8] {
+        let (ct, at) = kmeans_threads(&points, 9, 12, &mut Rng::seed_from_u64(22), threads);
+        assert_eq!(at, a1, "kmeans assignments diverged at threads={threads}");
+        let bits1: Vec<u32> = c1.data().iter().map(|v| v.to_bits()).collect();
+        let bitst: Vec<u32> = ct.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bitst, bits1, "kmeans centroids diverged at threads={threads}");
+    }
+}
+
+// ------------------------------------------------- end-to-end token parity
+
+fn nano_model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.n_kv_heads = 2;
+    cfg.d_ff = 48;
+    cfg.vocab_size = 64;
+    cfg.max_seq = 48;
+    Model::init(&cfg, &mut Rng::seed_from_u64(seed))
+}
+
+/// Quantize a nano model, decode it offline with the serial-scalar config,
+/// then serve it with threads=4 + SIMD: the greedy token streams must be
+/// identical — the whole-stack consequence of the per-kernel 0-ulp parity.
+#[test]
+fn parallel_simd_server_emits_identical_greedy_tokens() {
+    let mut m = nano_model(7);
+    let mut rng = Rng::seed_from_u64(8);
+    let lq = LayerQuantizer::new(AqlmLayerConfig::fast(AqlmShape::new(2, 5, 4)));
+    for block in &mut m.blocks {
+        for (_, lin) in block.linears_mut() {
+            let w = lin.weight_owned();
+            let calib = CalibData::identity(w.cols());
+            let (q, _) = lq.quantize(&w, &calib, &mut rng);
+            *lin = Linear::aqlm(q);
+        }
+    }
+    let mut offline = m.clone();
+    offline.kernel = KernelConfig::serial();
+    let expected = offline.generate(&[5, 9, 2], 8, 0.0, &mut Rng::seed_from_u64(0));
+
+    let server = Server::start(
+        m,
+        ServerConfig { kernel: KernelConfig { threads: 4, simd: true }, ..Default::default() },
+    );
+    let resp = server.submit(vec![5, 9, 2], 8, 0.0).recv().unwrap();
+    assert_eq!(resp.tokens, expected, "threads=4+simd server diverged from serial offline");
+    server.shutdown();
+}

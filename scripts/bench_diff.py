@@ -8,8 +8,8 @@ Usage:
 Supports both payload kinds, dispatching on the top-level "bench" field:
 
   * "generation_speed" (BENCH_generation.json, `--bench generation_speed`):
-    runs keyed by (max_batch, workers); tok/s and queue/compute
-    p50/p95/p99 deltas.
+    runs keyed by (max_batch, workers, kernel_threads); tok/s and
+    queue/compute p50/p95/p99 deltas.
   * "kernel_speed" (BENCH_kernels.json, `--bench kernel_speed`): runs
     keyed by (kernel, method, d_out, d_in, n); ns/op and bytes-read
     deltas.
@@ -27,8 +27,14 @@ import sys
 # metrics to diff (field, label, display scale).
 SCHEMAS = {
     "generation_speed": {
-        "key": lambda r: (int(r.get("max_batch", 0)), int(r.get("workers", 0))),
-        "tag": lambda k: f"max_batch={k[0]} workers={k[1]}",
+        # kernel_threads defaults to 1 so payloads from before the kernel
+        # sweep existed keep keying (and diffing) against the serial runs.
+        "key": lambda r: (
+            int(r.get("max_batch", 0)),
+            int(r.get("workers", 0)),
+            int(r.get("kernel_threads", 1)),
+        ),
+        "tag": lambda k: f"max_batch={k[0]} workers={k[1]} kthreads={k[2]}",
         "metrics": [
             ("tok_s", "tok/s", 1.0),
             ("queue_p50_s", "queue p50 (ms)", 1e3),

@@ -2,7 +2,7 @@
 # (tiny-shape batch sweeps, so the batched AQLM kernels and the batched
 # serving loop are exercised in CI without bench-length runtimes).
 
-.PHONY: verify build fmt clippy test doc smoke bench
+.PHONY: verify build fmt clippy analyze test doc smoke bench
 
 build:
 	cargo build --release
@@ -19,6 +19,13 @@ fmt:
 clippy:
 	cargo clippy --release --all-targets -- -D warnings
 
+# Repo-invariant gate: the aqlm-analyze lints (unsafe confinement, lock
+# hygiene, lock order, float-reassociation, panic surface, missing_docs
+# escapes) over rust/src, with the justified suppressions in analyze.allow.
+# Rules and rationale: docs/static-analysis.md.
+analyze:
+	cargo run --quiet --release --bin analyze
+
 test:
 	cargo test -q
 
@@ -33,7 +40,7 @@ doc:
 smoke:
 	cargo test -q --release -- --ignored bench_smoke
 
-verify: build fmt clippy test doc smoke
+verify: build fmt clippy analyze test doc smoke
 
 # Full measured sweeps (Tables 5/5b and 14/14b).
 bench:

@@ -1,0 +1,199 @@
+//! The analyzer's allowlist: documented, justified suppressions.
+//!
+//! Format (`analyze.allow` at the repo root): one entry per line,
+//!
+//! ```text
+//! lint-id | path-suffix | line-substring | justification
+//! ```
+//!
+//! - `lint-id` — which lint the entry suppresses (e.g. `float-reassoc`).
+//! - `path-suffix` — matched against the end of the finding's repo-relative
+//!   path, so entries survive tree moves (`kernels/simd.rs`).
+//! - `line-substring` — must occur in the flagged source line; pins the
+//!   entry to the specific code so unrelated new violations in the same
+//!   file are **not** silently covered.
+//! - `justification` — required, non-empty: why this site is allowed to
+//!   break the rule. The parser rejects entries without one.
+//!
+//! Blank lines and `#`-prefixed comments are ignored. Every entry must
+//! suppress at least one finding; unused entries are reported as
+//! `stale-allowlist` findings so the file cannot rot.
+
+use super::Finding;
+
+/// One parsed allowlist entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllowEntry {
+    /// Lint id this entry suppresses.
+    pub lint: String,
+    /// Path suffix the finding's file must end with.
+    pub path: String,
+    /// Substring the flagged raw line must contain.
+    pub needle: String,
+    /// Human rationale (required, non-empty).
+    pub justification: String,
+    /// 1-based line number in the allowlist file (for stale reporting).
+    pub line_no: usize,
+}
+
+/// Parse allowlist text. Fails on malformed entries or empty justifications.
+pub fn parse(text: &str) -> anyhow::Result<Vec<AllowEntry>> {
+    let mut entries = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = trimmed.split('|').map(str::trim).collect();
+        anyhow::ensure!(
+            parts.len() == 4,
+            "analyze.allow:{line_no}: expected 4 '|'-separated fields \
+             (lint | path | line-substring | justification), got {}",
+            parts.len()
+        );
+        let (lint, path, needle, justification) = (parts[0], parts[1], parts[2], parts[3]);
+        anyhow::ensure!(
+            !lint.is_empty() && !path.is_empty() && !needle.is_empty(),
+            "analyze.allow:{line_no}: lint, path and line-substring must be non-empty"
+        );
+        anyhow::ensure!(
+            !justification.is_empty(),
+            "analyze.allow:{line_no}: every allowlist entry needs a one-line justification"
+        );
+        entries.push(AllowEntry {
+            lint: lint.to_string(),
+            path: path.to_string(),
+            needle: needle.to_string(),
+            justification: justification.to_string(),
+            line_no,
+        });
+    }
+    Ok(entries)
+}
+
+/// Serialize entries back to allowlist syntax (round-trip form; comments
+/// are not preserved).
+pub fn format(entries: &[AllowEntry]) -> String {
+    let mut out = String::new();
+    for e in entries {
+        out.push_str(&format!("{} | {} | {} | {}\n", e.lint, e.path, e.needle, e.justification));
+    }
+    out
+}
+
+/// Split raw findings into kept findings and suppressed ones, then append a
+/// `stale-allowlist` finding for every entry that suppressed nothing.
+/// Returns `(kept_findings, n_suppressed)`.
+pub fn apply(raw: Vec<Finding>, entries: &[AllowEntry]) -> (Vec<Finding>, usize) {
+    let mut used = vec![false; entries.len()];
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in raw {
+        let hit = entries.iter().enumerate().find(|(_, e)| {
+            e.lint == f.lint && f.file.ends_with(&e.path) && f.excerpt.contains(&e.needle)
+        });
+        match hit {
+            Some((idx, _)) => {
+                used[idx] = true;
+                suppressed += 1;
+            }
+            None => kept.push(f),
+        }
+    }
+    for (e, used) in entries.iter().zip(used) {
+        if !used {
+            kept.push(Finding {
+                lint: "stale-allowlist",
+                file: "analyze.allow".to_string(),
+                line: e.line_no,
+                message: format!(
+                    "entry suppresses nothing (lint '{}', path '…{}'): the violation it \
+                     covered is gone — delete the entry",
+                    e.lint, e.path
+                ),
+                excerpt: format!("{} | {} | {}", e.lint, e.path, e.needle),
+            });
+        }
+    }
+    (kept, suppressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(lint: &'static str, file: &str, line: usize, excerpt: &str) -> Finding {
+        Finding {
+            lint,
+            file: file.to_string(),
+            line,
+            message: "m".to_string(),
+            excerpt: excerpt.to_string(),
+        }
+    }
+
+    #[test]
+    fn parse_format_round_trips() {
+        let text = "# comment\n\
+                    \n\
+                    float-reassoc | kernels/simd.rs | a.iter().sum() | contract-defining order\n\
+                    panic-surface | store/lazy.rs | .unwrap() | bench-only helper\n";
+        let entries = parse(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].lint, "float-reassoc");
+        assert_eq!(entries[0].line_no, 3);
+        assert_eq!(entries[1].justification, "bench-only helper");
+        let reparsed = parse(&format(&entries)).unwrap();
+        let strip = |es: &[AllowEntry]| -> Vec<(String, String, String, String)> {
+            es.iter()
+                .map(|e| {
+                    (e.lint.clone(), e.path.clone(), e.needle.clone(), e.justification.clone())
+                })
+                .collect()
+        };
+        assert_eq!(strip(&entries), strip(&reparsed), "parse(format(x)) must equal x");
+    }
+
+    #[test]
+    fn missing_justification_is_rejected() {
+        let err = parse("float-reassoc | a.rs | .sum() |   \n").unwrap_err().to_string();
+        assert!(err.contains("justification"), "{err}");
+        let err = parse("float-reassoc | a.rs | .sum()\n").unwrap_err().to_string();
+        assert!(err.contains("4 '|'-separated fields"), "{err}");
+    }
+
+    #[test]
+    fn apply_suppresses_matching_and_reports_stale() {
+        let entries = parse(
+            "float-reassoc | kernels/simd.rs | iter().sum() | ok\n\
+             float-reassoc | nn/gone.rs | .fold( | site was removed\n",
+        )
+        .unwrap();
+        let raw = vec![
+            finding("float-reassoc", "rust/src/kernels/simd.rs", 64, "let s = a.iter().sum();"),
+            finding("float-reassoc", "rust/src/nn/moe.rs", 9, "w.iter().map(|x| x).sum()"),
+        ];
+        let (kept, suppressed) = apply(raw, &entries);
+        assert_eq!(suppressed, 1);
+        // The unmatched moe.rs finding survives; the dead entry surfaces as
+        // stale-allowlist.
+        assert_eq!(kept.len(), 2);
+        assert!(kept.iter().any(|f| f.file.ends_with("moe.rs")));
+        let stale = kept.iter().find(|f| f.lint == "stale-allowlist").expect("stale reported");
+        assert_eq!(stale.line, 2);
+    }
+
+    #[test]
+    fn entry_pins_to_line_substring_not_whole_file() {
+        let entries = parse("panic-surface | s.rs | .tokens.last().unwrap() | invariant\n").unwrap();
+        let raw = vec![
+            finding("panic-surface", "rust/src/s.rs", 1, "x.tokens.last().unwrap()"),
+            finding("panic-surface", "rust/src/s.rs", 2, "other.unwrap()"),
+        ];
+        let (kept, suppressed) = apply(raw, &entries);
+        assert_eq!(suppressed, 1);
+        assert_eq!(kept.len(), 1, "a new unwrap in the same file must not ride the entry");
+        assert_eq!(kept[0].line, 2);
+    }
+}

@@ -1,0 +1,610 @@
+//! The repo lints: each encodes one invariant of the serving stack that
+//! previously lived only in comments or CI shell greps.
+//!
+//! All lints skip `#[cfg(test)]`-gated regions (tests may unwrap, lock
+//! bare, and sum floats freely — they *check* the contracts rather than
+//! carry them), and all operate on the comment-stripped, literal-blanked
+//! code view from [`super::source`], so strings and comments can mention
+//! `unsafe` or `.unwrap()` without tripping anything. Rationale and
+//! examples for every rule: `docs/static-analysis.md`.
+
+use super::source::{contains_word, SourceFile};
+use super::Finding;
+
+/// The one file allowed to contain `unsafe` code.
+const UNSAFE_HOME: &str = "kernels/simd.rs";
+/// The designated lock shim (poison-recovering helpers).
+const SYNC_SHIM: &str = "util/sync.rs";
+/// The file holding the designated `Condvar` wait.
+const SERVER: &str = "coordinator/server.rs";
+
+/// Run every lint over the scanned files; findings sorted by (file, line).
+pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        lint_unsafe_confinement(f, &mut out);
+        lint_unsafe_audit(f, &mut out);
+        lint_lock_hygiene(f, &mut out);
+        lint_condvar_wait(f, &mut out);
+        lint_lock_order(f, &mut out);
+        lint_float_reassoc(f, &mut out);
+        lint_panic_surface(f, &mut out);
+        lint_missing_docs_escape(f, &mut out);
+    }
+    out.sort_by(|a, b| (a.file.as_str(), a.line, a.lint).cmp(&(b.file.as_str(), b.line, b.lint)));
+    out
+}
+
+fn push(out: &mut Vec<Finding>, lint: &'static str, f: &SourceFile, lineno: usize, msg: String) {
+    out.push(Finding {
+        lint,
+        file: f.rel_path.clone(),
+        line: lineno,
+        message: msg,
+        excerpt: f.lines[lineno - 1].raw.trim().to_string(),
+    });
+}
+
+/// `unsafe-confinement`: `unsafe` appears only in `kernels/simd.rs`.
+fn lint_unsafe_confinement(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.rel_path.ends_with(UNSAFE_HOME) {
+        return;
+    }
+    for (no, line) in f.code_lines() {
+        if contains_word(&line.code, "unsafe") {
+            push(
+                out,
+                "unsafe-confinement",
+                f,
+                no,
+                format!("`unsafe` outside {UNSAFE_HOME} — all unsafe code is confined there"),
+            );
+        }
+    }
+}
+
+/// `unsafe-audit` (inside `kernels/simd.rs`): every `unsafe fn` carries a
+/// `# Safety` rustdoc section; every `unsafe {{ … }}` block carries a
+/// `// SAFETY:` comment on or immediately above its line.
+fn lint_unsafe_audit(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !f.rel_path.ends_with(UNSAFE_HOME) {
+        return;
+    }
+    for (no, line) in f.code_lines() {
+        if !contains_word(&line.code, "unsafe") {
+            continue;
+        }
+        let idx = no - 1;
+        if line.code.contains("unsafe fn") {
+            if !doc_block_above(f, idx).iter().any(|c| c.contains("# Safety")) {
+                push(
+                    out,
+                    "unsafe-audit",
+                    f,
+                    no,
+                    "`unsafe fn` without a `# Safety` rustdoc section stating its \
+                     preconditions"
+                        .to_string(),
+                );
+            }
+        } else if !safety_comment_at(f, idx) {
+            push(
+                out,
+                "unsafe-audit",
+                f,
+                no,
+                "`unsafe` block without a `// SAFETY:` comment justifying it".to_string(),
+            );
+        }
+    }
+}
+
+/// Doc-comment lines attached to the item at `idx` (walking up over
+/// attributes; stops at the first non-attribute, non-doc line).
+fn doc_block_above(f: &SourceFile, idx: usize) -> Vec<String> {
+    let mut docs = Vec::new();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &f.lines[j];
+        let code = l.code.trim();
+        let comment = l.comment.trim_start();
+        if code.starts_with("#[") || code.starts_with("#![") {
+            continue; // attribute between the doc block and the item
+        }
+        if code.is_empty() && (comment.starts_with("///") || comment.starts_with("//!")) {
+            docs.push(l.comment.clone());
+            continue;
+        }
+        break;
+    }
+    docs
+}
+
+/// True if the line at `idx` or the contiguous comment-only lines above it
+/// contain `SAFETY:`.
+fn safety_comment_at(f: &SourceFile, idx: usize) -> bool {
+    if f.lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &f.lines[j];
+        if !l.code.trim().is_empty() || l.comment.trim().is_empty() {
+            return false;
+        }
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+const LOCK_CALLS: [&str; 3] = [".lock()", ".read()", ".write()"];
+
+/// `lock-hygiene`: every bare `.lock()/.read()/.write()` acquisition goes
+/// through the poison-recovering shim in `util/sync.rs` or carries an
+/// `.expect("non-empty message")` — never a bare `unwrap`, never a silent
+/// `?`/match on the poison error.
+fn lint_lock_hygiene(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.rel_path.ends_with(SYNC_SHIM) {
+        return;
+    }
+    for (no, line) in f.code_lines() {
+        for pat in LOCK_CALLS {
+            let mut start = 0;
+            while let Some(pos) = line.code[start..].find(pat) {
+                let at = start + pos;
+                let after = &line.code[at + pat.len()..];
+                let ok = if after.trim_start().starts_with(".expect(") {
+                    expect_has_message(after, &line.raw[at + pat.len()..])
+                } else if after.trim().is_empty() {
+                    // Chain split across lines: accept a leading `.expect(`
+                    // on the next line.
+                    f.lines.get(no).is_some_and(|n| {
+                        let t = n.code.trim_start();
+                        t.starts_with(".expect(") && expect_has_message(t, n.raw.trim_start())
+                    })
+                } else {
+                    false
+                };
+                if !ok {
+                    push(
+                        out,
+                        "lock-hygiene",
+                        f,
+                        no,
+                        format!(
+                            "`{pat}` without `.expect(\"…\")`: use \
+                             `util::sync::{{lock,read,write}}_recover` (preferred) or an \
+                             expect with a message"
+                        ),
+                    );
+                }
+                start = at + pat.len();
+            }
+        }
+    }
+}
+
+/// Given aligned code/raw slices that start where `.expect(` begins (or is
+/// preceded by whitespace), check the raw text carries a non-empty string
+/// message.
+fn expect_has_message(code_after: &str, raw_after: &str) -> bool {
+    let Some(p) = code_after.find(".expect(") else { return false };
+    let raw_arg = raw_after.get(p + 8..).unwrap_or("");
+    let arg = raw_arg.trim_start();
+    // Accept a non-empty string literal, or a non-literal expression
+    // (format!/variable — assumed meaningful).
+    if let Some(rest) = arg.strip_prefix('"') {
+        !rest.starts_with('"')
+    } else {
+        !arg.starts_with(')')
+    }
+}
+
+/// `condvar-wait`: `Condvar::wait` appears only inside the sync shim
+/// ([`crate::util::sync::wait_recover`]), and `wait_recover` itself is
+/// called only at the designated server wait — in `coordinator/server.rs`,
+/// in guard-rebinding form (`st = sync::wait_recover(&cvar, st)`), so no
+/// second guard can be held across the sleep.
+fn lint_condvar_wait(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.rel_path.ends_with(SYNC_SHIM) {
+        return;
+    }
+    for (no, line) in f.code_lines() {
+        if line.code.contains(".wait(") {
+            push(
+                out,
+                "condvar-wait",
+                f,
+                no,
+                "direct `Condvar::wait` — only `util::sync::wait_recover` may block on a \
+                 condvar"
+                    .to_string(),
+            );
+        }
+        if let Some(pos) = line.code.find("wait_recover(") {
+            let rebinding = line.code[..pos].contains('=');
+            if !f.rel_path.ends_with(SERVER) {
+                push(
+                    out,
+                    "condvar-wait",
+                    f,
+                    no,
+                    format!("`wait_recover` outside {SERVER} — the server loop owns the only \
+                             designated condvar wait"),
+                );
+            } else if !rebinding {
+                push(
+                    out,
+                    "condvar-wait",
+                    f,
+                    no,
+                    "designated wait must rebind its guard (`st = sync::wait_recover(…)`) so \
+                     no other guard is held across the sleep"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// True if the line acquires a lock (shim helper or raw call).
+fn is_lock_acquisition(code: &str) -> bool {
+    code.contains("lock_recover(")
+        || code.contains("read_recover(")
+        || code.contains("write_recover(")
+        || LOCK_CALLS.iter().any(|p| code.contains(p))
+}
+
+/// `lock-order` (in `runtime/store/`): within one function, the artifact
+/// `file` lock is never taken before a slot `cell` lock — the store's
+/// documented `slot → file` order. Keys on the store's field names (`cell`
+/// for slot locks, `file` for the artifact mutex).
+fn lint_lock_order(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !f.rel_path.contains("/runtime/store/") {
+        return;
+    }
+    let mut depth: i64 = 0;
+    let mut pending_fn = false;
+    let mut fn_depth: Option<i64> = None;
+    let mut file_locked_at: Option<usize> = None;
+    for (idx, line) in f.lines.iter().enumerate() {
+        if !line.in_test {
+            if fn_depth.is_none() && contains_word(&line.code, "fn") {
+                pending_fn = true;
+                file_locked_at = None;
+            }
+            if (fn_depth.is_some() || pending_fn) && is_lock_acquisition(&line.code) {
+                if line.code.contains(".file") && file_locked_at.is_none() {
+                    file_locked_at = Some(idx + 1);
+                }
+                if line.code.contains(".cell") {
+                    if let Some(fl) = file_locked_at {
+                        push(
+                            out,
+                            "lock-order",
+                            f,
+                            idx + 1,
+                            format!(
+                                "slot (`cell`) lock taken after the artifact `file` lock \
+                                 (line {fl}) in the same function — the store's order is \
+                                 slot → file"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending_fn && fn_depth.is_none() {
+                        fn_depth = Some(depth);
+                        pending_fn = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if fn_depth == Some(depth) {
+                        fn_depth = None;
+                        file_locked_at = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+const REASSOC_PATTERNS: [&str; 6] =
+    [".sum::<", ".sum()", ".fold(", ".mul_add(", ".product::<", ".product("];
+
+/// `float-reassoc` (in `kernels/` and `nn/`): reduction combinators whose
+/// evaluation order is easy to change silently are flagged; every allowed
+/// site is enumerated in `analyze.allow` with a justification (the 0-ulp
+/// bit-exactness contract of `docs/kernels.md` §bit-exactness).
+fn lint_float_reassoc(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !(f.rel_path.contains("/kernels/") || f.rel_path.contains("/nn/")) {
+        return;
+    }
+    for (no, line) in f.code_lines() {
+        if let Some(pat) = REASSOC_PATTERNS.iter().find(|p| line.code.contains(*p)) {
+            push(
+                out,
+                "float-reassoc",
+                f,
+                no,
+                format!(
+                    "`{pat}` in a bit-exactness-contracted tree: reductions here must keep \
+                     a fixed association order (allowlist the site with a justification if \
+                     the order is contract-defining or the element type is integral)"
+                ),
+            );
+        }
+    }
+}
+
+const PANIC_PATTERNS: [&str; 4] = [".unwrap()", "panic!(", "todo!(", "unimplemented!("];
+
+/// `panic-surface` (in `coordinator/server.rs`, `coordinator/scheduler.rs`
+/// and `runtime/store/`): the serving hot path never unwraps or panics on
+/// request-reachable input. `expect` with a message stays allowed (it
+/// documents an invariant), as does `unreachable!` on exhaustively matched
+/// enums.
+fn lint_panic_surface(f: &SourceFile, out: &mut Vec<Finding>) {
+    let in_scope = f.rel_path.ends_with(SERVER)
+        || f.rel_path.ends_with("coordinator/scheduler.rs")
+        || f.rel_path.contains("/runtime/store/");
+    if !in_scope {
+        return;
+    }
+    for (no, line) in f.code_lines() {
+        for pat in PANIC_PATTERNS {
+            if line.code.contains(pat) {
+                push(
+                    out,
+                    "panic-surface",
+                    f,
+                    no,
+                    format!(
+                        "`{pat}` on the serving hot path — return a typed error or use \
+                         `.expect(\"invariant…\")` for provable invariants"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// `missing-docs-escape`: no `#[allow(missing_docs)]` / `#![allow(…)]`
+/// anywhere under `rust/src` — the crate stays fully documented (replaces
+/// the two CI shell grep-guards that covered only `lib.rs` and
+/// `runtime/store/`).
+fn lint_missing_docs_escape(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.code.contains("[allow(missing_docs") {
+            push(
+                out,
+                "missing-docs-escape",
+                f,
+                idx + 1,
+                "`allow(missing_docs)` escape — document the item instead (the crate-wide \
+                 `#![warn(missing_docs)]` gate stays closed)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> Vec<Finding> {
+        run_all(&[SourceFile::parse(path, src)])
+    }
+
+    fn lints(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.lint).collect()
+    }
+
+    // ------------------------------------------------ unsafe confinement
+
+    #[test]
+    fn unsafe_outside_simd_is_flagged() {
+        let f = scan("rust/src/nn/model.rs", "fn f() { unsafe { do_it() } }\n");
+        assert_eq!(lints(&f), vec!["unsafe-confinement"]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn unsafe_in_strings_comments_and_tests_is_clean() {
+        let src = "// unsafe in a comment\n\
+                   fn f() { log(\"unsafe in a string\"); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t() { unsafe { poke() } }\n\
+                   }\n";
+        assert!(scan("rust/src/nn/model.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------------ unsafe audit
+
+    #[test]
+    fn unsafe_fn_without_safety_doc_is_flagged() {
+        let src = "/// Does a thing fast.\n\
+                   unsafe fn fast() {}\n";
+        let f = scan("rust/src/kernels/simd.rs", src);
+        assert_eq!(lints(&f), vec!["unsafe-audit"]);
+        assert!(f[0].message.contains("# Safety"));
+    }
+
+    #[test]
+    fn unsafe_fn_with_safety_doc_is_clean() {
+        let src = "/// Does a thing fast.\n\
+                   ///\n\
+                   /// # Safety\n\
+                   /// Requires AVX2 and in-bounds indices.\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn fast() {}\n";
+        assert!(scan("rust/src/kernels/simd.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_block_needs_safety_comment() {
+        let bad = "fn f() {\n    let x = unsafe { gather() };\n}\n";
+        let f = scan("rust/src/kernels/simd.rs", bad);
+        assert_eq!(lints(&f), vec!["unsafe-audit"]);
+        let good = "fn f() {\n\
+                    // SAFETY: AVX2 presence is runtime-checked; indices are\n\
+                    // in bounds by the length contract.\n\
+                    let x = unsafe { gather() };\n\
+                    }\n";
+        assert!(scan("rust/src/kernels/simd.rs", good).is_empty());
+    }
+
+    // ------------------------------------------------------ lock hygiene
+
+    #[test]
+    fn bare_lock_unwrap_is_flagged() {
+        let f = scan("rust/src/coordinator/other.rs", "fn f() { m.lock().unwrap(); }\n");
+        assert_eq!(lints(&f), vec!["lock-hygiene"]);
+    }
+
+    #[test]
+    fn lock_with_message_or_shim_is_clean() {
+        let src = "fn f() {\n\
+                   let a = m.lock().expect(\"queue state\");\n\
+                   let b = crate::util::sync::lock_recover(&m);\n\
+                   }\n";
+        assert!(scan("rust/src/coordinator/other.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_expect_with_empty_message_is_flagged() {
+        let f = scan("rust/src/coordinator/other.rs", "fn f() { m.lock().expect(\"\"); }\n");
+        assert_eq!(lints(&f), vec!["lock-hygiene"]);
+    }
+
+    #[test]
+    fn rwlock_read_write_are_covered() {
+        let src = "fn f() { l.read().unwrap(); l.write().unwrap(); }\n";
+        let f = scan("rust/src/runtime/other.rs", src);
+        assert_eq!(lints(&f), vec!["lock-hygiene", "lock-hygiene"]);
+    }
+
+    // ------------------------------------------------------ condvar wait
+
+    #[test]
+    fn direct_condvar_wait_is_flagged() {
+        let src = "fn f() { st = cvar.wait(st).expect(\"poisoned\"); }\n";
+        let f = scan("rust/src/coordinator/server.rs", src);
+        assert!(lints(&f).contains(&"condvar-wait"));
+    }
+
+    #[test]
+    fn designated_rebinding_wait_is_clean() {
+        let src = "fn f() { st = sync::wait_recover(cvar, st); }\n";
+        assert!(scan("rust/src/coordinator/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wait_recover_elsewhere_or_unbound_is_flagged() {
+        let f = scan("rust/src/runtime/store/lazy.rs", "fn f() { sync::wait_recover(cv, g); }\n");
+        assert_eq!(lints(&f), vec!["condvar-wait"]);
+        let f =
+            scan("rust/src/coordinator/server.rs", "fn f() { sync::wait_recover(cvar, st); }\n");
+        assert_eq!(lints(&f), vec!["condvar-wait"]);
+    }
+
+    // -------------------------------------------------------- lock order
+
+    #[test]
+    fn file_before_cell_in_one_fn_is_flagged() {
+        let src = "fn touch(&self) {\n\
+                   let io = sync::lock_recover(&self.file);\n\
+                   let mut guard = sync::write_recover(&slot.cell);\n\
+                   }\n";
+        let f = scan("rust/src/runtime/store/lazy.rs", src);
+        assert_eq!(lints(&f), vec!["lock-order"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn cell_then_file_order_is_clean_and_resets_per_fn() {
+        let src = "fn touch(&self) {\n\
+                   let mut guard = sync::write_recover(&slot.cell);\n\
+                   let io = sync::lock_recover(&self.file);\n\
+                   }\n\
+                   fn other(&self) {\n\
+                   let io = sync::lock_recover(&self.file);\n\
+                   }\n\
+                   fn evict(&self) {\n\
+                   let mut guard = sync::write_recover(&slot.cell);\n\
+                   }\n";
+        assert!(scan("rust/src/runtime/store/lazy.rs", src).is_empty());
+    }
+
+    // ----------------------------------------------------- float reassoc
+
+    #[test]
+    fn f32_sum_in_kernels_is_flagged() {
+        let f = scan("rust/src/kernels/matvec.rs", "fn f() { let s: f32 = xs.iter().sum(); }\n");
+        assert_eq!(lints(&f), vec!["float-reassoc"]);
+        let f = scan("rust/src/nn/moe.rs", "fn f() { let s = xs.iter().sum::<f32>(); }\n");
+        assert_eq!(lints(&f), vec!["float-reassoc"]);
+        let f = scan("rust/src/nn/rope.rs", "fn f() { let s = xs.iter().fold(0.0, g); }\n");
+        assert_eq!(lints(&f), vec!["float-reassoc"]);
+        let f = scan("rust/src/kernels/matvec.rs", "fn f() { acc = x.mul_add(y, acc); }\n");
+        assert_eq!(lints(&f), vec!["float-reassoc"]);
+    }
+
+    #[test]
+    fn reductions_outside_contract_tree_or_in_tests_are_clean() {
+        let src = "fn f() { let s: f32 = xs.iter().sum(); }\n";
+        assert!(scan("rust/src/quant/gptq.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\nfn t() { let s: f32 = xs.iter().sum(); }\n}\n";
+        assert!(scan("rust/src/kernels/matvec.rs", test_src).is_empty());
+    }
+
+    // ----------------------------------------------------- panic surface
+
+    #[test]
+    fn unwrap_and_panic_in_hot_path_are_flagged() {
+        let src = "fn f() { q.pop().unwrap(); }\n";
+        assert_eq!(lints(&scan("rust/src/coordinator/scheduler.rs", src)), vec!["panic-surface"]);
+        let src = "fn f() { panic!(\"boom\"); }\n";
+        assert_eq!(lints(&scan("rust/src/runtime/store/lazy.rs", src)), vec!["panic-surface"]);
+        let src = "fn f() { todo!() }\n";
+        assert_eq!(lints(&scan("rust/src/coordinator/server.rs", src)), vec!["panic-surface"]);
+    }
+
+    #[test]
+    fn expect_unreachable_and_cold_paths_are_clean() {
+        let src = "fn f() { q.pop().expect(\"peeked entry exists\"); unreachable!(\"bound\"); }\n";
+        assert!(scan("rust/src/coordinator/scheduler.rs", src).is_empty());
+        // Outside the hot-path scope, unwrap is allowed.
+        let src = "fn f() { q.pop().unwrap(); }\n";
+        assert!(scan("rust/src/quant/rtn.rs", src).is_empty());
+    }
+
+    // ----------------------------------------------- missing-docs escape
+
+    #[test]
+    fn missing_docs_escape_is_flagged_even_in_tests() {
+        let src = "#[allow(missing_docs)]\npub mod undocumented;\n";
+        assert_eq!(lints(&scan("rust/src/lib.rs", src)), vec!["missing-docs-escape"]);
+        let src = "#![allow(missing_docs)]\n";
+        assert_eq!(
+            lints(&scan("rust/src/runtime/store/mod.rs", src)),
+            vec!["missing-docs-escape"]
+        );
+        // A comment mentioning the attribute must not trip it.
+        let src = "// CI fails if an #[allow(missing_docs)] escape reappears here.\n";
+        assert!(scan("rust/src/lib.rs", src).is_empty());
+    }
+}

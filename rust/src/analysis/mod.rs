@@ -1,0 +1,205 @@
+//! `aqlm-analyze`: a dependency-free static-analysis pass over `rust/src/**`.
+//!
+//! The serving stack carries several invariants that the compiler cannot
+//! check and that previously lived in comments or ad-hoc CI shell greps:
+//! unsafe code confined to `kernels/simd.rs` with audited justifications,
+//! poison-aware lock acquisition, a single designated `Condvar` wait, the
+//! store's slot → file lock order, the 0-ulp bit-exactness contract on
+//! float reductions, and a panic-free serving hot path. This module turns
+//! each of those into a mechanical lint.
+//!
+//! The scanner ([`source`]) is line/token-level, not a full parser: it
+//! strips comments and blanks string/char-literal contents (byte-aligned,
+//! so lints can cross-reference the raw text) and marks `#[cfg(test)]`
+//! regions. That is deliberate — the tool must build with the crate's
+//! anyhow-only dependency policy, so no `syn`/proc-macro. The lints
+//! ([`lints`]) pattern-match on the cleaned view; suppressions live in a
+//! justified allowlist ([`allowlist`], `analyze.allow` at the repo root)
+//! where unused entries are themselves findings.
+//!
+//! Run locally with `make analyze` (wired into `make verify`), or directly:
+//! `cargo run --release --bin analyze`. Rules and rationale:
+//! `docs/static-analysis.md`.
+
+pub mod allowlist;
+pub mod lints;
+pub mod source;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+/// One lint violation (or allowlist-hygiene problem) at a source line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Stable lint identifier (e.g. `lock-hygiene`), usable in `analyze.allow`.
+    pub lint: &'static str,
+    /// Repo-relative path of the offending file, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What is wrong and what to do instead.
+    pub message: String,
+    /// The trimmed raw source line, for context and allowlist pinning.
+    pub excerpt: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    > {}",
+            self.file, self.line, self.lint, self.message, self.excerpt
+        )
+    }
+}
+
+/// The result of one analysis run.
+#[derive(Debug)]
+pub struct Report {
+    /// Findings that survived the allowlist, sorted by (file, line).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Number of raw findings suppressed by allowlist entries.
+    pub suppressed: usize,
+    /// Number of parsed allowlist entries.
+    pub allow_entries: usize,
+}
+
+impl Report {
+    /// True when no findings remain after the allowlist.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// One-line human summary of the run.
+    pub fn summary(&self) -> String {
+        format!(
+            "aqlm-analyze: {} files scanned, {} finding(s), {} suppressed by {} allowlist \
+             entr{}",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed,
+            self.allow_entries,
+            if self.allow_entries == 1 { "y" } else { "ies" }
+        )
+    }
+}
+
+/// Analyze in-memory sources (`(rel_path, text)` pairs) against allowlist
+/// text. This is the pure core of [`analyze_repo`]; tests feed it fixtures
+/// directly.
+pub fn analyze_sources(sources: &[(String, String)], allow_text: &str) -> anyhow::Result<Report> {
+    let files: Vec<source::SourceFile> =
+        sources.iter().map(|(p, s)| source::SourceFile::parse(p, s)).collect();
+    let raw = lints::run_all(&files);
+    let entries = allowlist::parse(allow_text)?;
+    let (mut kept, suppressed) = allowlist::apply(raw, &entries);
+    kept.sort_by(|a, b| (a.file.as_str(), a.line, a.lint).cmp(&(b.file.as_str(), b.line, b.lint)));
+    Ok(Report { findings: kept, files_scanned: files.len(), suppressed, allow_entries: entries.len() })
+}
+
+/// Analyze the repository rooted at `root`: every `.rs` file under
+/// `rust/src/` is scanned, and `analyze.allow` at the root (if present)
+/// supplies suppressions.
+pub fn analyze_repo(root: &Path) -> anyhow::Result<Report> {
+    let src = root.join("rust").join("src");
+    anyhow::ensure!(
+        src.is_dir(),
+        "{} has no rust/src directory — pass the repo root via --root",
+        root.display()
+    );
+    let mut paths = Vec::new();
+    walk_rs(&src, &mut paths)?;
+    let mut sources = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        sources.push((rel, text));
+    }
+    let allow_path = root.join("analyze.allow");
+    let allow_text = if allow_path.is_file() {
+        std::fs::read_to_string(&allow_path)
+            .with_context(|| format!("reading {}", allow_path.display()))?
+    } else {
+        String::new()
+    };
+    analyze_sources(&sources, &allow_text)
+}
+
+/// Collect `.rs` files under `dir`, depth-first, name-sorted for
+/// deterministic output.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .collect::<Result<_, _>>()
+        .with_context(|| format!("listing {}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(path: &str, text: &str) -> (String, String) {
+        (path.to_string(), text.to_string())
+    }
+
+    #[test]
+    fn analyze_sources_reports_and_sorts() {
+        let sources = vec![
+            src("rust/src/nn/b.rs", "fn f() { unsafe { x() } }\n"),
+            src(
+                "rust/src/coordinator/scheduler.rs",
+                "fn g() { a.unwrap(); }\nfn h() { unsafe { y() } }\n",
+            ),
+        ];
+        let report = analyze_sources(&sources, "").unwrap();
+        assert_eq!(report.files_scanned, 2);
+        let keys: Vec<(&str, usize, &str)> =
+            report.findings.iter().map(|f| (f.file.as_str(), f.line, f.lint)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("rust/src/coordinator/scheduler.rs", 1, "panic-surface"),
+                ("rust/src/coordinator/scheduler.rs", 2, "unsafe-confinement"),
+                ("rust/src/nn/b.rs", 1, "unsafe-confinement"),
+            ]
+        );
+    }
+
+    #[test]
+    fn allowlist_flows_through_analyze_sources() {
+        let sources =
+            vec![src("rust/src/nn/moe.rs", "fn f() { let s: f32 = w.iter().sum(); }\n")];
+        let allow =
+            "float-reassoc | nn/moe.rs | w.iter().sum() | router backward, training-only path\n";
+        let report = analyze_sources(&sources, allow).unwrap();
+        assert!(report.is_clean(), "{:?}", report.findings);
+        assert_eq!(report.suppressed, 1);
+        assert_eq!(report.allow_entries, 1);
+        assert!(report.summary().contains("1 suppressed"));
+    }
+
+    #[test]
+    fn bad_allowlist_is_an_error_not_a_pass() {
+        let sources = vec![src("rust/src/nn/ok.rs", "fn f() {}\n")];
+        assert!(analyze_sources(&sources, "missing | fields\n").is_err());
+    }
+}

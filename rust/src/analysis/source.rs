@@ -1,0 +1,467 @@
+//! Lexical line scanner for the repo lints.
+//!
+//! The analyzer is dependency-free (no `syn`, no proc-macros), so the lints
+//! work on a *line classification* of each source file rather than a full
+//! AST: every line is split into its **code** text (comments removed,
+//! string/char-literal contents blanked) and its **comment** text. Blanked
+//! spans are replaced byte-for-byte with spaces, so byte offsets in the
+//! `code` view line up with the original line — a lint can locate a pattern
+//! in `code` (immune to strings and comments) and then inspect the raw text
+//! at the same offset (e.g. to read an `.expect("…")` message).
+//!
+//! The scanner understands the token forms that matter for not mis-firing:
+//! line comments (`//`, `///`, `//!`), nested block comments, string
+//! literals with escapes, raw strings (`r"…"`, `r#"…"#`, byte variants),
+//! char/byte-char literals, and the char-literal vs lifetime ambiguity
+//! (`'a'` vs `<'a>`). It also marks `#[cfg(test)]`-gated regions so every
+//! lint can skip test code.
+
+/// One source line after lexical classification.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Line text with comments and literal contents blanked to spaces
+    /// (byte-aligned with `raw`).
+    pub code: String,
+    /// Comment text on this line, `//` prefix included (empty if none).
+    pub comment: String,
+    /// The original line, verbatim.
+    pub raw: String,
+    /// True when the line sits inside a `#[cfg(test)]`-gated item (test
+    /// module or test-only function).
+    pub in_test: bool,
+}
+
+/// A scanned source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the repo root, `/`-separated
+    /// (e.g. `rust/src/kernels/simd.rs`).
+    pub rel_path: String,
+    /// Classified lines, in file order (index 0 = line 1).
+    pub lines: Vec<Line>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Normal,
+    /// Inside `"…"`, escapes honored.
+    Str,
+    /// Inside a raw string; the payload is the closing hash count.
+    RawStr(usize),
+    /// Inside `/* … */`; the payload is the nesting depth.
+    BlockComment(usize),
+}
+
+/// Push `n` spaces (used to blank literal/comment bytes while keeping the
+/// code view byte-aligned with the raw line).
+fn blank(out: &mut String, n: usize) {
+    for _ in 0..n {
+        out.push(' ');
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// If `chars[i..]` starts a raw string (`r"`, `r#"`, `br"`, …), return
+/// `(prefix_len, n_hashes)` where `prefix_len` covers everything through the
+/// opening quote.
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    // `r` must not be the tail of an identifier (`number"…"` is not a raw
+    // string start).
+    if i > 0 && is_ident(chars[i - 1]) {
+        return None;
+    }
+    Some((j + 1 - i, hashes))
+}
+
+impl SourceFile {
+    /// Scan `text` into classified lines. `rel_path` is recorded verbatim.
+    pub fn parse(rel_path: &str, text: &str) -> SourceFile {
+        let chars: Vec<char> = text.chars().collect();
+        let n = chars.len();
+        let mut lines: Vec<Line> = Vec::new();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut raw = String::new();
+        let mut state = State::Normal;
+        let mut i = 0;
+        while i < n {
+            let c = chars[i];
+            if c == '\n' {
+                lines.push(Line {
+                    code: std::mem::take(&mut code),
+                    comment: std::mem::take(&mut comment),
+                    raw: std::mem::take(&mut raw),
+                    in_test: false,
+                });
+                i += 1;
+                continue;
+            }
+            raw.push(c);
+            match state {
+                State::Normal => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // Line comment: everything to EOL is comment text
+                        // (the first `/` is already in `raw`).
+                        comment.push('/');
+                        blank(&mut code, 1);
+                        i += 1;
+                        while i < n && chars[i] != '\n' {
+                            raw.push(chars[i]);
+                            comment.push(chars[i]);
+                            blank(&mut code, chars[i].len_utf8());
+                            i += 1;
+                        }
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        comment.push('/');
+                        comment.push('*');
+                        blank(&mut code, 2);
+                        raw.push('*');
+                        state = State::BlockComment(1);
+                        i += 2;
+                    } else if let Some((plen, hashes)) = raw_string_start(&chars, i) {
+                        for k in 0..plen {
+                            code.push(chars[i + k]);
+                            if k > 0 {
+                                raw.push(chars[i + k]);
+                            }
+                        }
+                        state = State::RawStr(hashes);
+                        i += plen;
+                    } else if c == '"' {
+                        code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        i = consume_quote(&chars, i, &mut code, &mut raw);
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        blank(&mut code, c.len_utf8());
+                        if let Some(&e) = chars.get(i + 1) {
+                            if e != '\n' {
+                                raw.push(e);
+                                blank(&mut code, e.len_utf8());
+                            } else {
+                                lines.push(Line {
+                                    code: std::mem::take(&mut code),
+                                    comment: std::mem::take(&mut comment),
+                                    raw: std::mem::take(&mut raw),
+                                    in_test: false,
+                                });
+                            }
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        blank(&mut code, c.len_utf8());
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' {
+                        let closed = (0..hashes).all(|h| chars.get(i + 1 + h) == Some(&'#'));
+                        if closed {
+                            code.push('"');
+                            for h in 0..hashes {
+                                code.push('#');
+                                raw.push(chars[i + 1 + h]);
+                            }
+                            state = State::Normal;
+                            i += 1 + hashes;
+                        } else {
+                            blank(&mut code, 1);
+                            i += 1;
+                        }
+                    } else {
+                        blank(&mut code, c.len_utf8());
+                        i += 1;
+                    }
+                }
+                State::BlockComment(depth) => {
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        comment.push_str("/*");
+                        blank(&mut code, 2);
+                        raw.push('*');
+                        state = State::BlockComment(depth + 1);
+                        i += 2;
+                    } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        comment.push_str("*/");
+                        blank(&mut code, 2);
+                        raw.push('/');
+                        state = if depth == 1 {
+                            State::Normal
+                        } else {
+                            State::BlockComment(depth - 1)
+                        };
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        blank(&mut code, c.len_utf8());
+                        i += 1;
+                    }
+                }
+            }
+        }
+        if !raw.is_empty() || !code.is_empty() {
+            lines.push(Line { code, comment, raw, in_test: false });
+        }
+        mark_test_regions(&mut lines);
+        SourceFile { rel_path: rel_path.to_string(), lines }
+    }
+
+    /// Non-test lines with 1-based line numbers.
+    pub fn code_lines(&self) -> impl Iterator<Item = (usize, &Line)> {
+        self.lines.iter().enumerate().filter(|(_, l)| !l.in_test).map(|(i, l)| (i + 1, l))
+    }
+}
+
+/// Handle a `'` in normal state: either a lifetime (emit the quote, advance
+/// one) or a char/byte-char literal (emit `'` + blanks + `'`, skip it).
+/// Returns the next scan index.
+fn consume_quote(chars: &[char], i: usize, code: &mut String, raw: &mut String) -> usize {
+    let next = chars.get(i + 1).copied();
+    if next == Some('\\') {
+        // Escaped char literal: skip the backslash, the escape payload
+        // (possibly `u{…}`), and the closing quote.
+        code.push('\'');
+        raw.push('\\');
+        blank(code, 1);
+        let mut j = i + 2;
+        if chars.get(j) == Some(&'u') && chars.get(j + 1) == Some(&'{') {
+            while j < chars.len() && chars[j] != '}' {
+                raw.push(chars[j]);
+                blank(code, chars[j].len_utf8());
+                j += 1;
+            }
+            if j < chars.len() {
+                raw.push('}');
+                blank(code, 1);
+                j += 1;
+            }
+        } else if let Some(&e) = chars.get(j) {
+            raw.push(e);
+            blank(code, e.len_utf8());
+            j += 1;
+        }
+        if chars.get(j) == Some(&'\'') {
+            raw.push('\'');
+            code.push('\'');
+            j += 1;
+        }
+        j
+    } else if chars.get(i + 2) == Some(&'\'') && next.is_some() {
+        // Plain char literal `'x'`.
+        let mid = chars[i + 1];
+        code.push('\'');
+        blank(code, mid.len_utf8());
+        code.push('\'');
+        raw.push(mid);
+        raw.push('\'');
+        i + 3
+    } else {
+        // Lifetime (`'a`, `'static`, `'_`) or loop label.
+        code.push('\'');
+        i + 1
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]`-gated items by brace tracking over the
+/// code view: the attribute arms a pending flag; the next braced item's
+/// whole body (or the next `;`-terminated item) is the test region.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut region: Option<i64> = None;
+    for line in lines.iter_mut() {
+        if region.is_some() || pending {
+            line.in_test = true;
+        }
+        if region.is_none() && line.code.contains("#[cfg(test)]") {
+            pending = true;
+            line.in_test = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending && region.is_none() {
+                        region = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if region == Some(depth) {
+                        region = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        // A brace-less `#[cfg(test)] use …;` item ends at the semicolon.
+        if pending && region.is_none() {
+            let t = line.code.trim_end();
+            if !t.is_empty() && !t.trim_start().starts_with("#[") && t.ends_with(';') {
+                pending = false;
+            }
+        }
+    }
+}
+
+/// Net brace depth change of a code line (used for per-function spans).
+pub fn brace_delta(code: &str) -> i64 {
+    let mut d = 0;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// True if `code` contains `word` with non-identifier characters (or line
+/// boundaries) on both sides.
+pub fn contains_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at].chars().next_back().is_some_and(is_ident);
+        let after = at + word.len();
+        let after_ok = after >= code.len()
+            || !code[after..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len().max(1);
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> SourceFile {
+        SourceFile::parse("rust/src/fixture.rs", text)
+    }
+
+    #[test]
+    fn strips_line_comments_and_keeps_text() {
+        let f = parse("let x = 1; // unsafe trailing note\n");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].comment.contains("unsafe trailing note"));
+        assert!(f.lines[0].comment.starts_with("//"));
+        assert!(f.lines[0].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn blanks_string_contents_preserving_byte_offsets() {
+        let src = "call(\"unsafe .lock() text\").expect(\"msg\");\n";
+        let f = parse(src);
+        let code = &f.lines[0].code;
+        assert!(!code.contains("unsafe"));
+        assert!(!code.contains(".lock()"));
+        assert!(code.contains(".expect(\""));
+        assert_eq!(code.len(), f.lines[0].raw.len(), "code/raw must stay byte-aligned");
+        let p = code.find(".expect(").expect("pattern survives");
+        assert_eq!(&f.lines[0].raw[p..p + 8], ".expect(");
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        let src = "let p = r#\"has \"quotes\" and .unwrap() inside\"#;\nlet q = 2;\n";
+        let f = parse(src);
+        assert!(!f.lines[0].code.contains(".unwrap()"));
+        assert!(f.lines[1].code.contains("let q = 2;"), "scanner must resync after raw string");
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let src = "let s = \"line one\nline two with unsafe\";\nlet t = 3;\n";
+        let f = parse(src);
+        assert!(!f.lines[1].code.contains("unsafe"));
+        assert!(f.lines[2].code.contains("let t = 3;"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let f = parse("fn f<'a>(x: &'a str) -> char { 'x' }\n");
+        let code = &f.lines[0].code;
+        assert!(code.contains("<'a>"), "lifetimes survive: {code}");
+        assert!(!code.contains("'x'"), "char contents blanked: {code}");
+        let f2 = parse("let q = '\"'; let s = \"str\"; let n = '\\n';\n");
+        let code2 = &f2.lines[0].code;
+        assert!(!code2.contains("str"), "quote char literal must not derail strings: {code2}");
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "/* outer /* inner unsafe */ still comment */ let y = 1;\n";
+        let f = parse(src);
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].code.contains("let y = 1;"));
+        assert!(f.lines[0].comment.contains("inner unsafe"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "pub fn real() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   use super::*;\n\
+                   fn helper() { x.lock().unwrap(); }\n\
+                   }\n\
+                   pub fn after() {}\n";
+        let f = parse(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test, "attribute line itself is test-gated");
+        assert!(f.lines[4].in_test, "body is test-gated");
+        assert!(f.lines[5].in_test, "closing brace is test-gated");
+        assert!(!f.lines[6].in_test, "code after the test mod is live again");
+    }
+
+    #[test]
+    fn cfg_test_on_single_item_ends_with_it() {
+        let src = "#[cfg(test)]\nuse helper::thing;\npub fn live() {}\n";
+        let f = parse(src);
+        assert!(f.lines[1].in_test);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn contains_word_respects_boundaries() {
+        assert!(contains_word("unsafe fn f()", "unsafe"));
+        assert!(contains_word("{ unsafe {", "unsafe"));
+        assert!(!contains_word("not_unsafe_at_all()", "unsafe"));
+        assert!(!contains_word("unsafely()", "unsafe"));
+    }
+}

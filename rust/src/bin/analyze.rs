@@ -1,0 +1,82 @@
+//! `analyze` — the repo's static-analysis gate (`make analyze`).
+//!
+//! Scans every `.rs` file under `rust/src/`, runs the lints in
+//! [`aqlm::analysis::lints`], applies the justified suppressions in
+//! `analyze.allow`, prints surviving findings, and exits non-zero if any
+//! remain. See `docs/static-analysis.md` for the rule catalogue.
+//!
+//! Usage: `analyze [--root <repo-root>]`. Without `--root` the repo root is
+//! taken from the build-time manifest directory when it still looks like
+//! the repo, falling back to walking up from the current directory.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(clean) => {
+            if clean {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(err) => {
+            eprintln!("analyze: error: {err:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> anyhow::Result<bool> {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                let v = args.next().ok_or_else(|| anyhow::anyhow!("--root needs a path"))?;
+                root = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                eprintln!("usage: analyze [--root <repo-root>]");
+                return Ok(true);
+            }
+            other => anyhow::bail!("unknown argument '{other}' (try --help)"),
+        }
+    }
+    let root = match root {
+        Some(r) => r,
+        None => default_root()?,
+    };
+    let report = aqlm::analysis::analyze_repo(&root)?;
+    for f in &report.findings {
+        eprintln!("{f}");
+    }
+    eprintln!("{}", report.summary());
+    if !report.is_clean() {
+        eprintln!(
+            "analyze: FAILED — fix the findings above, or (only with a written rationale) \
+             add a `lint | path | line-substring | justification` entry to analyze.allow"
+        );
+    }
+    Ok(report.is_clean())
+}
+
+/// Repo root discovery: the compile-time manifest dir if it still contains
+/// `rust/src` (the common `cargo run` case), else the first ancestor of the
+/// current directory that does.
+fn default_root() -> anyhow::Result<PathBuf> {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    if manifest.join("rust").join("src").is_dir() {
+        return Ok(manifest.to_path_buf());
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            anyhow::bail!("no rust/src found in the manifest dir or any ancestor of the cwd");
+        }
+    }
+}

@@ -245,9 +245,12 @@ impl AdmissionQueue {
         Some(q)
     }
 
-    /// Number of live (non-tombstoned) waiting requests.
+    /// Number of live (non-tombstoned) waiting requests. Every tombstoned
+    /// id still has its entry in the heap (reap removes both together), so
+    /// the difference cannot underflow; saturating keeps this accessor
+    /// panic-free by construction rather than by that invariant.
     pub fn len(&self) -> usize {
-        self.heap.len() - self.tombstones.len()
+        self.heap.len().saturating_sub(self.tombstones.len())
     }
 
     /// True when no live requests wait (tombstoned entries may still be
@@ -312,6 +315,9 @@ pub struct SchedConfig {
     /// Hard cap on a sequence's total length (prompt + generated): the
     /// tightest of model context and single-sequence pool capacity.
     pub decode_cap: usize,
+    /// Model vocabulary size. Admission rejects prompts with out-of-range
+    /// token ids before they can reach an embedding row lookup.
+    pub vocab: usize,
 }
 
 /// A sequence admitted on a worker.
@@ -472,6 +478,26 @@ impl WorkerScheduler {
     pub fn admit(&mut self, q: QueuedRequest) -> Option<Completion> {
         let queue_s = q.queue_accum + q.enqueued.elapsed().as_secs_f64();
         let prompt = served_prompt(&q.req.prompt, self.cfg.window);
+        // Request input is untrusted: a token id at or beyond the model's
+        // vocabulary would index out of bounds in the embedding lookup.
+        // Reject such requests as cancelled instead of panicking a worker.
+        if prompt.iter().any(|&t| t as usize >= self.cfg.vocab) {
+            let _ = q.req.respond.send(GenResponse {
+                tokens: Vec::new(),
+                queue_s,
+                compute_s: q.compute_accum,
+                latency_s: queue_s + q.compute_accum,
+                generated: 0,
+                cancelled: true,
+            });
+            return Some(Completion {
+                id: q.id,
+                queue_s,
+                compute_s: q.compute_accum,
+                generated: 0,
+                cancelled: true,
+            });
+        }
         if q.req.max_new == 0 {
             let completion = Completion {
                 id: q.id,
@@ -496,7 +522,10 @@ impl WorkerScheduler {
             priority: q.req.priority,
             deadline: q.req.deadline,
             max_new: q.req.max_new,
-            temperature: q.req.temperature,
+            // A NaN/±inf temperature would make every softmax weight NaN
+            // and the categorical draw meaningless; greedy decoding is the
+            // well-defined fallback for nonsensical request input.
+            temperature: if q.req.temperature.is_finite() { q.req.temperature } else { 0.0 },
             respond: q.req.respond,
             stream: q.req.stream,
             model: q.req.model,
@@ -687,8 +716,15 @@ impl WorkerScheduler {
             (0..self.active.len()).filter(|&i| !self.active[i].is_prefilling()).collect();
         let lanes = self.reserve_appends(lanes, &mut requeues, &mut completions);
         if !lanes.is_empty() {
-            let toks: Vec<u32> =
-                lanes.iter().map(|&i| *self.active[i].tokens.last().unwrap()).collect();
+            let toks: Vec<u32> = lanes
+                .iter()
+                .map(|&i| {
+                    *self.active[i]
+                        .tokens
+                        .last()
+                        .expect("served window is never empty (BOS floor)")
+                })
+                .collect();
             let poss: Vec<usize> = lanes.iter().map(|&i| self.active[i].tokens.len() - 1).collect();
             let logits = self.decode_lanes(model, &lanes, &toks, &poss, scratch);
             for (&i, l) in lanes.iter().zip(logits) {
@@ -849,6 +885,72 @@ mod tests {
     }
 
     #[test]
+    fn admit_rejects_out_of_vocab_and_sanitizes_temperature() {
+        let mut mcfg = crate::nn::config::ModelConfig::nano();
+        mcfg.d_model = 16;
+        mcfg.n_heads = 2;
+        mcfg.n_kv_heads = 2;
+        mcfg.d_ff = 24;
+        mcfg.vocab_size = 32;
+        mcfg.max_seq = 32;
+        mcfg.n_layers = 1;
+        let model = crate::nn::model::Model::init(&mcfg, &mut Rng::seed_from_u64(1));
+        let pool = model.new_kv_pool(2, 8);
+        let cfg = SchedConfig {
+            max_batch: 2,
+            prefill_chunk: 8,
+            window: prompt_window(32, 16),
+            decode_cap: 16,
+            vocab: 32,
+        };
+        let mut sched = WorkerScheduler::new(cfg, pool, 1);
+        let mut queue = AdmissionQueue::new();
+        // Token id 99 ≥ vocab 32: previously an embedding-row panic inside
+        // the worker, now an immediate cancelled completion.
+        let (tx, rx) = channel();
+        queue.push_new(
+            GenRequest {
+                prompt: vec![3, 99],
+                max_new: 4,
+                temperature: 0.0,
+                priority: 0,
+                deadline: None,
+                respond: tx,
+                stream: None,
+                model: None,
+            },
+            7,
+        );
+        let q = queue.pop().expect("queued");
+        let done = sched.admit(q).expect("out-of-vocab request completes at admission");
+        assert!(done.cancelled);
+        assert_eq!(done.generated, 0);
+        let resp = rx.try_recv().expect("cancelled response delivered");
+        assert!(resp.cancelled);
+        assert!(!sched.has_work(), "rejected request must not occupy a lane");
+        // Non-finite temperature falls back to greedy instead of NaN-ing
+        // the softmax.
+        let (tx2, _rx2) = channel();
+        queue.push_new(
+            GenRequest {
+                prompt: vec![1, 2],
+                max_new: 3,
+                temperature: f32::NAN,
+                priority: 0,
+                deadline: None,
+                respond: tx2,
+                stream: None,
+                model: None,
+            },
+            8,
+        );
+        let q = queue.pop().expect("queued");
+        assert!(sched.admit(q).is_none(), "valid request becomes an active lane");
+        assert_eq!(sched.active[0].temperature, 0.0, "NaN temperature sanitized to greedy");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // full model decode loop — minutes under miri
     fn kv_pressure_preempts_and_still_completes_greedy_exact() {
         // Drive a WorkerScheduler directly (no threads, fully
         // deterministic): a 12-block × 2-position pool (24 positions, one
@@ -877,6 +979,7 @@ mod tests {
             prefill_chunk: 8,
             window: prompt_window(32, 24),
             decode_cap: 24,
+            vocab: 32,
         };
         let mut sched = WorkerScheduler::new(cfg, pool, 1);
         let mut queue = AdmissionQueue::new();

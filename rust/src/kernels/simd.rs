@@ -73,7 +73,10 @@ fn lut_row_sum_scalar(lut: &[f32], k: usize, row: &[u8]) -> f32 {
 /// tail reuse the scalar code.
 ///
 /// # Safety
-/// Requires AVX2. `lut.len() >= row.len() * k` and all codes `< k`.
+/// Requires AVX2. `lut.len() >= row.len() * k` and all codes `< k`. The
+/// unaligned 8-byte `_mm_loadl_epi64` at `row[idx]` stays in bounds because
+/// the chunk loop only visits `idx = 8·c` with `c < row.len() / 8`, and the
+/// gather offsets `idx·k + u·k + code` are `< lut.len()` by the contract.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn lut_row_sum_avx2(lut: &[f32], k: usize, row: &[u8]) -> f32 {
@@ -170,6 +173,10 @@ fn lut_row_parts_batch_scalar(
 ///
 /// # Safety
 /// Requires AVX2, `parts.len() >= n·8`, `lut.len() >= n·ll`, codes `< k`.
+/// As in [`lut_row_sum_avx2`], the 8-byte code load only runs for full
+/// chunks (`idx + 8 <= row.len()`); the per-lane loads/stores at
+/// `parts[b·8 .. b·8+8]` and gathers at `lut[b·ll + off]` with `off < ll`
+/// are in bounds by the two length contracts.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn lut_row_parts_batch_avx2(

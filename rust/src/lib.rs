@@ -79,8 +79,9 @@
 #![warn(missing_docs)]
 
 // Public-API documentation is complete crate-wide and gated by
-// `missing_docs` + rustdoc `-D warnings` in `make verify` (CI also fails
-// if an `#[allow(missing_docs)]` escape ever reappears here).
+// `missing_docs` + rustdoc `-D warnings` in `make verify` (the
+// `missing-docs-escape` lint of `aqlm-analyze` fails the build if an
+// `allow(missing_docs)` escape ever reappears anywhere under rust/src).
 pub mod util;
 pub mod tensor;
 pub mod data;
@@ -91,6 +92,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod eval;
 pub mod bench;
+pub mod analysis;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -341,7 +341,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut model_ids: Vec<String> = Vec::new();
     let server = if let Some(spec) = args.get("models") {
         let budget_mb = args.usize_or("store-budget-mb", 0);
-        let registry = Arc::new(ModelRegistry::new(budget_mb as u64 * 1024 * 1024));
+        let registry =
+            Arc::new(ModelRegistry::new(ModelRegistry::budget_bytes_from_mb(budget_mb as u64)));
         for pair in spec.split(',').filter(|p| !p.is_empty()) {
             let (name, path) = pair
                 .split_once('=')

@@ -19,7 +19,9 @@ pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Rng) ->
         return argmax(logits) as u32;
     }
     let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    // total_cmp: NaN logits (a degenerate model output) order deterministically
+    // instead of panicking the serving worker mid-request.
+    idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
     idx.truncate(k);
     let mut sub: Vec<f32> = idx.iter().map(|&i| logits[i] / temperature).collect();
     softmax_inplace(&mut sub);
@@ -28,9 +30,11 @@ pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Rng) ->
 
 /// Index of the largest element (0 for an empty slice).
 pub fn argmax(xs: &[f32]) -> usize {
+    // total_cmp keeps ordinary comparisons identical to partial_cmp and
+    // makes NaN inputs a deterministic pick rather than a worker panic.
     xs.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -71,5 +75,18 @@ mod tests {
     fn argmax_first_on_empty_safe() {
         assert_eq!(argmax(&[3.0]), 0);
         assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn nan_logits_sample_deterministically_instead_of_panicking() {
+        // Degenerate model output (NaN logits) used to panic the serving
+        // worker via partial_cmp().unwrap(); now every sampler path returns
+        // some token deterministically.
+        let mut rng = Rng::seed_from_u64(3);
+        let logits = [0.5f32, f32::NAN, 1.0];
+        let picked = argmax(&logits);
+        assert!(picked < logits.len());
+        let t = sample_topk(&logits, 1.0, 2, &mut rng);
+        assert!((t as usize) < logits.len());
     }
 }

@@ -14,6 +14,7 @@ use super::artifact::ArtifactFile;
 use crate::nn::config::ModelConfig;
 use crate::nn::linear::Linear;
 use crate::nn::model::{assemble_model, Model};
+use crate::util::sync;
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -95,17 +96,17 @@ impl LazyModel {
 
     /// Total bytes read from disk so far (header included).
     pub fn bytes_read(&self) -> u64 {
-        self.file.lock().expect("artifact lock").bytes_read()
+        sync::lock_recover(&self.file).bytes_read()
     }
 
     /// Size of the header prefix read at open.
     pub fn header_bytes(&self) -> u64 {
-        self.file.lock().expect("artifact lock").header_bytes()
+        sync::lock_recover(&self.file).header_bytes()
     }
 
     /// Sum of all section byte lengths (full-residency cost).
     pub fn total_section_bytes(&self) -> u64 {
-        self.file.lock().expect("artifact lock").total_section_bytes()
+        sync::lock_recover(&self.file).total_section_bytes()
     }
 
     /// Fetch one linear layer, reading and decoding its section on first
@@ -117,16 +118,16 @@ impl LazyModel {
             .slots
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
-        if let Some(l) = slot.cell.read().expect("slot lock").as_ref() {
+        if let Some(l) = sync::read_recover(&slot.cell).as_ref() {
             return Ok(Arc::clone(l));
         }
-        let mut guard = slot.cell.write().expect("slot lock");
+        let mut guard = sync::write_recover(&slot.cell);
         // Double-checked: another thread may have filled the slot while we
         // waited for the write lock.
         if let Some(l) = guard.as_ref() {
             return Ok(Arc::clone(l));
         }
-        let mut linear = self.file.lock().expect("artifact lock").read_linear(name)?;
+        let mut linear = sync::lock_recover(&self.file).read_linear(name)?;
         linear.warm_decode();
         let arc = Arc::new(linear);
         *guard = Some(Arc::clone(&arc));
@@ -139,7 +140,7 @@ impl LazyModel {
     pub fn evict_cold(&self) -> u64 {
         let mut freed = 0u64;
         for slot in self.slots.values() {
-            let mut guard = slot.cell.write().expect("slot lock");
+            let mut guard = sync::write_recover(&slot.cell);
             if let Some(arc) = guard.as_ref() {
                 if Arc::strong_count(arc) == 1 {
                     *guard = None;
@@ -157,9 +158,9 @@ impl LazyModel {
     /// [`assemble_model`] walk as [`Model::load`], so lazy and eager
     /// construction can never drift apart.
     pub fn warm_model(&self) -> anyhow::Result<Model> {
-        let mut get_dense = |name: &str| self.file.lock().expect("artifact lock").read_dense(name);
+        let mut get_dense = |name: &str| sync::lock_recover(&self.file).read_dense(name);
         let mut get_linear =
-            |name: &str| self.file.lock().expect("artifact lock").read_linear(name);
+            |name: &str| sync::lock_recover(&self.file).read_linear(name);
         assemble_model(
             self.cfg.clone(),
             self.layer_bits.clone(),
@@ -229,6 +230,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // assembles two full models and compares bitwise — minutes under miri
     fn warm_model_matches_eager_load_bitexact() {
         let (mut m, path) = tiny_ckpt("warm", 42);
         let lm = LazyModel::open(&path).unwrap();

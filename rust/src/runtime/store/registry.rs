@@ -21,6 +21,7 @@ use super::lazy::LazyModel;
 use crate::kernels::config::KernelConfig;
 use crate::nn::model::Model;
 use crate::nn::section;
+use crate::util::sync;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -127,6 +128,13 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// Convert a user-facing MiB budget to bytes without overflow: absurd
+    /// budgets saturate to `u64::MAX` (effectively unbounded) instead of
+    /// wrapping into a tiny budget that would evict everything.
+    pub fn budget_bytes_from_mb(mb: u64) -> u64 {
+        mb.saturating_mul(1024 * 1024)
+    }
+
     /// Empty registry evicting toward `budget_bytes` (0 = unbounded).
     pub fn new(budget_bytes: u64) -> ModelRegistry {
         ModelRegistry {
@@ -147,12 +155,12 @@ impl ModelRegistry {
     /// loaded by later [`Self::acquire`] calls. Already-warm models keep the
     /// config they were loaded with; output is bit-identical either way.
     pub fn set_kernel_config(&self, cfg: KernelConfig) {
-        self.inner.lock().expect("registry lock").kernel = cfg;
+        sync::lock_recover(&self.inner).kernel = cfg;
     }
 
     /// Register a model id → checkpoint path mapping (no IO yet).
     pub fn register(&self, name: &str, path: &Path) {
-        let mut inner = self.inner.lock().expect("registry lock");
+        let mut inner = sync::lock_recover(&self.inner);
         inner.entries.insert(
             name.to_string(),
             Entry {
@@ -168,7 +176,7 @@ impl ModelRegistry {
 
     /// Registered model ids, in sorted order.
     pub fn names(&self) -> Vec<String> {
-        self.inner.lock().expect("registry lock").entries.keys().cloned().collect()
+        sync::lock_recover(&self.inner).entries.keys().cloned().collect()
     }
 
     /// Acquire a warm handle to `name`, loading the checkpoint on first
@@ -179,7 +187,7 @@ impl ModelRegistry {
     /// cold model block and then hit the warm entry, so a checkpoint is
     /// read from disk exactly once no matter how many workers race for it.
     pub fn acquire(&self, name: &str) -> anyhow::Result<Arc<Model>> {
-        let mut inner = self.inner.lock().expect("registry lock");
+        let mut inner = sync::lock_recover(&self.inner);
         inner.clock += 1;
         let tick = inner.clock;
         let entry = inner
@@ -233,7 +241,7 @@ impl ModelRegistry {
     /// residency (fails for legacy v1 files). Useful for diagnostics and
     /// per-layer workloads.
     pub fn acquire_lazy(&self, name: &str) -> anyhow::Result<Arc<LazyModel>> {
-        let mut inner = self.inner.lock().expect("registry lock");
+        let mut inner = sync::lock_recover(&self.inner);
         inner.clock += 1;
         let tick = inner.clock;
         let entry = inner
@@ -251,7 +259,7 @@ impl ModelRegistry {
 
     /// Snapshot of counters and current residency.
     pub fn stats(&self) -> StoreStats {
-        let inner = self.inner.lock().expect("registry lock");
+        let inner = sync::lock_recover(&self.inner);
         StoreStats {
             hits: inner.hits,
             misses: inner.misses,
@@ -349,6 +357,16 @@ mod tests {
     }
 
     #[test]
+    fn mb_budget_saturates_instead_of_wrapping() {
+        assert_eq!(ModelRegistry::budget_bytes_from_mb(0), 0);
+        assert_eq!(ModelRegistry::budget_bytes_from_mb(3), 3 * 1024 * 1024);
+        // A wrapping multiply here would produce a tiny budget and evict
+        // every model; saturation means "unbounded in practice".
+        assert_eq!(ModelRegistry::budget_bytes_from_mb(u64::MAX / 2), u64::MAX);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 8 threads × full checkpoint loads — minutes under miri (TSan covers it)
     fn concurrent_acquires_load_exactly_once() {
         let pa = tiny_ckpt("race", 55);
         let reg = Arc::new(ModelRegistry::new(0));

@@ -13,6 +13,7 @@
 //! - [`timing`] — wall-clock measurement and robust summary statistics used
 //!   by the custom bench harness.
 //! - [`crc`] — table-driven CRC-32 used by the checkpoint section index.
+//! - [`sync`] — poison-recovering lock helpers for the serving stack.
 
 pub mod rng;
 pub mod json;
@@ -20,6 +21,7 @@ pub mod cli;
 pub mod propcheck;
 pub mod timing;
 pub mod crc;
+pub mod sync;
 
 /// Format a byte count as a human-readable string (e.g. "3.72 MiB").
 pub fn human_bytes(bytes: u64) -> String {

@@ -1,0 +1,63 @@
+//! The analyzer run against this repository itself.
+//!
+//! This is the same check `make analyze` performs in CI, executed as a test
+//! so `cargo test` alone also catches invariant regressions: the checked-in
+//! allowlist must make the real crate pass, every allowlist entry must
+//! still be earning its keep, and removing the allowlist must surface the
+//! known contract-defining reduction sites (i.e. the lints are not
+//! vacuously green).
+
+use std::path::Path;
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn repo_passes_with_checked_in_allowlist() {
+    let report = aqlm::analysis::analyze_repo(repo_root()).expect("analysis must run");
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.is_clean(),
+        "rust/src must be lint-clean under analyze.allow:\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        report.files_scanned > 60,
+        "walker saw only {} files — the rust/src sweep is broken",
+        report.files_scanned
+    );
+    assert!(report.allow_entries > 0, "the checked-in allowlist must parse");
+    assert!(
+        report.suppressed >= report.allow_entries,
+        "{} entries suppressed only {} findings — stale entries should have failed above",
+        report.allow_entries,
+        report.suppressed
+    );
+}
+
+#[test]
+fn lints_are_not_vacuous_without_the_allowlist() {
+    // The bit-exactness contract sites in kernels/simd.rs and the router
+    // backward in nn/moe.rs must be *visible* to the float-reassoc lint;
+    // only the justified allowlist keeps the build green.
+    for rel in ["rust/src/kernels/simd.rs", "rust/src/nn/moe.rs"] {
+        let text = std::fs::read_to_string(repo_root().join(rel)).expect("source readable");
+        let report = aqlm::analysis::analyze_sources(&[(rel.to_string(), text)], "")
+            .expect("analysis must run");
+        assert!(
+            report.findings.iter().any(|f| f.lint == "float-reassoc"),
+            "{rel}: expected a float-reassoc finding with an empty allowlist"
+        );
+    }
+}
+
+#[test]
+fn unused_allowlist_entry_fails_as_stale() {
+    let sources = vec![("rust/src/nn/clean.rs".to_string(), "fn f() {}\n".to_string())];
+    let allow = "float-reassoc | nn/gone.rs | .sum() | the site this covered was removed\n";
+    let report = aqlm::analysis::analyze_sources(&sources, allow).expect("analysis must run");
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].lint, "stale-allowlist");
+    assert_eq!(report.findings[0].file, "analyze.allow");
+}

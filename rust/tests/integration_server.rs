@@ -188,6 +188,7 @@ fn paged_pool_admits_more_concurrency_than_contiguous_at_same_memory() {
         prefill_chunk: 32,
         window: prompt_window(m.cfg.max_seq, (n_blocks / m.cfg.n_layers) * 4),
         decode_cap: m.cfg.max_seq,
+        vocab: m.cfg.vocab_size,
     };
     let mut sched = WorkerScheduler::new(cfg, pool, m.cfg.n_layers);
     let mut queue = AdmissionQueue::new();

@@ -304,6 +304,41 @@ pub fn t5c_kernel_json(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)>
             }
         }
     }
+    // KV cache codec: quantize-on-append (`kv_write`) and
+    // dequantize-on-attend (`kv_read`) for one position across all heads,
+    // per storage width. Rides the kernel_speed schema — the width is the
+    // method string (`kv:4`), the shape is (n_kv_heads, head_dim), and
+    // `bytes_read` is the stored footprint the op touches, so the diff
+    // tool needs no changes.
+    {
+        use crate::nn::kvcache::{BlockTable, KvBits, KvPool};
+        let (heads, head_dim, bs) = (8usize, 64usize, 16usize);
+        let row: Vec<f32> = (0..heads * head_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for kvb in KvBits::ALL {
+            let method = format!("kv:{}", kvb.label());
+            let bytes = heads
+                * crate::nn::kvcache::KvBlockStore::bytes_per_row(head_dim, kvb);
+            let mut pool = KvPool::new_with(heads, head_dim, bs, 2, kvb);
+            let mut table = BlockTable::new();
+            pool.append(&mut table, black_box(&row), &row);
+            let s = bench_adaptive(0.05, iters, || {
+                // Rewrite position 0 in place: release + re-append keeps the
+                // table at one position without exhausting the pool.
+                pool.release(&mut table);
+                pool.append(&mut table, black_box(&row), &row);
+            });
+            record(&mut t, &mut runs, "kv_write", &method, heads, head_dim, 1, s.median, bytes);
+            let mut scratch = vec![0.0f32; head_dim];
+            let mut acc = 0.0f32;
+            let s = bench_adaptive(0.05, iters, || {
+                for h in 0..heads {
+                    acc += pool.k_row(&table, h, 0, &mut scratch)[0];
+                }
+            });
+            black_box(&acc);
+            record(&mut t, &mut runs, "kv_read", &method, heads, head_dim, 1, s.median, bytes);
+        }
+    }
     let mut out = Json::obj();
     out.set("bench", Json::Str("kernel_speed".to_string()))
         .set("batch", Json::Num(batch as f64))
@@ -381,17 +416,19 @@ pub fn t14b_batch_sweep(ws: &mut Workspace) -> anyhow::Result<Vec<Table>> {
     Ok(vec![t])
 }
 
-/// Table 14c: fleet sweep over (max_batch × workers × kernel-threads) on
-/// the paged-KV server. Besides the human-readable table this returns the
-/// machine-readable payload written to `BENCH_generation.json` — tok/s
-/// plus queue/compute p50/p95/p99 per configuration — which CI archives
-/// and diffs against the previous run (`scripts/bench_diff.py`, which keys
-/// generation runs by (max_batch, workers, kernel_threads)).
+/// Table 14c: fleet sweep over (max_batch × workers × kernel-threads ×
+/// kv-bits) on the paged-KV server. Besides the human-readable table this
+/// returns the machine-readable payload written to `BENCH_generation.json`
+/// — tok/s plus queue/compute p50/p95/p99 per configuration — which CI
+/// archives and diffs against the previous run (`scripts/bench_diff.py`,
+/// which keys generation runs by (max_batch, workers, kernel_threads,
+/// kv_bits); runs from before the kv_bits axis diff as kv_bits=32).
 pub fn t14c_fleet_sweep(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)> {
     use crate::coordinator::server::{Server, ServerConfig};
+    use crate::nn::kvcache::KvBits;
     let mut t = Table::new(
-        "Table 14c: fleet sweep — tok/s and latency percentiles vs (max_batch, workers, kthreads)",
-        &["max_batch", "workers", "kthreads", "tok/s", "queue p50/p95/p99 (ms)", "compute p50/p95/p99 (ms)"],
+        "Table 14c: fleet sweep — tok/s and latency percentiles vs (max_batch, workers, kthreads, kv)",
+        &["max_batch", "workers", "kthreads", "kv", "tok/s", "queue p50/p95/p99 (ms)", "compute p50/p95/p99 (ms)"],
     );
     let base = ws.base_model("nano")?;
     let shape = choose_shape(&base.cfg, 2.0, 8);
@@ -401,52 +438,62 @@ pub fn t14c_fleet_sweep(ws: &mut Workspace) -> anyhow::Result<(Vec<Table>, Json)
     let max_new = if ws.profile.fast { 24 } else { 64 };
     let batches: &[usize] = if ws.profile.fast { &[1, 4, 8] } else { &[1, 4, 8, 16] };
     let worker_counts: &[usize] = if ws.profile.fast { &[1, 2] } else { &[1, 2, 4] };
+    // KV storage-width axis: f32 is the lossless baseline; quantized widths
+    // pay a per-read dequant but fit ~3.5–8× the sequences per byte
+    // (docs/kvcache.md). The fast profile keeps the endpoints.
+    let kv_axis: &[KvBits] =
+        if ws.profile.fast { &[KvBits::F32, KvBits::B4] } else { &KvBits::ALL };
     let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let kernel_threads: Vec<usize> = if ncpu > 1 { vec![1, ncpu] } else { vec![1] };
     let mut runs = Json::arr();
     for &max_batch in batches {
         for &workers in worker_counts {
             for &kthreads in &kernel_threads {
-                let cfg = ServerConfig {
-                    max_batch,
-                    workers,
-                    seed: 0,
-                    kernel: KernelConfig { threads: kthreads, simd: true },
-                    ..Default::default()
-                };
-                let server = Server::start(quantized.clone(), cfg);
-                let rxs: Vec<_> = (0..n_req)
-                    .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
-                    .collect();
-                for rx in rxs {
-                    rx.recv().expect("generation response");
+                for &kvb in kv_axis {
+                    let cfg = ServerConfig {
+                        max_batch,
+                        workers,
+                        seed: 0,
+                        kv_bits: kvb,
+                        kernel: KernelConfig { threads: kthreads, simd: true },
+                        ..Default::default()
+                    };
+                    let server = Server::start(quantized.clone(), cfg);
+                    let rxs: Vec<_> = (0..n_req)
+                        .map(|i| server.submit(vec![1, 5 + i as u32 % 20], max_new, 0.0))
+                        .collect();
+                    for rx in rxs {
+                        rx.recv().expect("generation response");
+                    }
+                    let stats = server.shutdown();
+                    let q = [50.0, 95.0, 99.0].map(|p| stats.queue_percentile_s(p));
+                    let c = [50.0, 95.0, 99.0].map(|p| stats.compute_percentile_s(p));
+                    t.row(vec![
+                        format!("{max_batch}"),
+                        format!("{workers}"),
+                        format!("{kthreads}"),
+                        kvb.label().to_string(),
+                        format!("{:.1}", stats.tokens_per_second()),
+                        format!("{:.2}/{:.2}/{:.2}", q[0] * 1e3, q[1] * 1e3, q[2] * 1e3),
+                        format!("{:.2}/{:.2}/{:.2}", c[0] * 1e3, c[1] * 1e3, c[2] * 1e3),
+                    ]);
+                    let mut run = Json::obj();
+                    run.set("max_batch", Json::Num(max_batch as f64))
+                        .set("workers", Json::Num(workers as f64))
+                        .set("kernel_threads", Json::Num(kthreads as f64))
+                        .set("kv_bits", Json::Num(kvb.width() as f64))
+                        .set("tok_s", Json::Num(stats.tokens_per_second()))
+                        .set("requests", Json::Num(stats.requests as f64))
+                        .set("preemptions", Json::Num(stats.preemptions as f64))
+                        .set("peak_active", Json::Num(stats.peak_active as f64))
+                        .set("queue_p50_s", Json::Num(q[0]))
+                        .set("queue_p95_s", Json::Num(q[1]))
+                        .set("queue_p99_s", Json::Num(q[2]))
+                        .set("compute_p50_s", Json::Num(c[0]))
+                        .set("compute_p95_s", Json::Num(c[1]))
+                        .set("compute_p99_s", Json::Num(c[2]));
+                    runs.push(run);
                 }
-                let stats = server.shutdown();
-                let q = [50.0, 95.0, 99.0].map(|p| stats.queue_percentile_s(p));
-                let c = [50.0, 95.0, 99.0].map(|p| stats.compute_percentile_s(p));
-                t.row(vec![
-                    format!("{max_batch}"),
-                    format!("{workers}"),
-                    format!("{kthreads}"),
-                    format!("{:.1}", stats.tokens_per_second()),
-                    format!("{:.2}/{:.2}/{:.2}", q[0] * 1e3, q[1] * 1e3, q[2] * 1e3),
-                    format!("{:.2}/{:.2}/{:.2}", c[0] * 1e3, c[1] * 1e3, c[2] * 1e3),
-                ]);
-                let mut run = Json::obj();
-                run.set("max_batch", Json::Num(max_batch as f64))
-                    .set("workers", Json::Num(workers as f64))
-                    .set("kernel_threads", Json::Num(kthreads as f64))
-                    .set("tok_s", Json::Num(stats.tokens_per_second()))
-                    .set("requests", Json::Num(stats.requests as f64))
-                    .set("preemptions", Json::Num(stats.preemptions as f64))
-                    .set("peak_active", Json::Num(stats.peak_active as f64))
-                    .set("queue_p50_s", Json::Num(q[0]))
-                    .set("queue_p95_s", Json::Num(q[1]))
-                    .set("queue_p99_s", Json::Num(q[2]))
-                    .set("compute_p50_s", Json::Num(c[0]))
-                    .set("compute_p95_s", Json::Num(c[1]))
-                    .set("compute_p99_s", Json::Num(c[2]));
-                runs.push(run);
             }
         }
     }

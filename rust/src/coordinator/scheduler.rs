@@ -1031,6 +1031,78 @@ mod tests {
     }
 
     #[test]
+    fn quantized_pool_admits_proportionally_more_at_equal_byte_budget() {
+        // Capacity math at quantized byte sizes, no model or decode needed
+        // (runs under Miri): convert one fixed byte budget into blocks at
+        // each KV width the way the server sizes pools, then admit
+        // sequences until `can_admit` refuses. A 4-bit pool must admit
+        // ~6–8× the f32 sequence count (exactly 6.4× in bytes at head_dim
+        // 64 — see docs/kvcache.md), a 3-bit pool exactly 8×, and no width
+        // may ever admit more sequences than its blocks can hold.
+        use crate::nn::kvcache::KvBits;
+        let (heads, hd, bs) = (2usize, 64usize, 4usize);
+        // Budget: 32 f32 blocks (2 heads × 4 positions × 64 dims × 4 B × 2
+        // for K+V = 4096 B each).
+        let budget_bytes = 32 * KvPool::block_bytes_for(KvBits::F32, heads, hd, bs);
+        // Each sequence targets 32 positions (31-token served prompt + 1)
+        // → 8 blocks at block_size 4, single layer.
+        let prompt: Vec<u32> = (1..=31).collect();
+        let per_seq_blocks = 8usize;
+        let admitted_at = |kvb: KvBits| -> (usize, usize) {
+            let n_blocks = budget_bytes / KvPool::block_bytes_for(kvb, heads, hd, bs);
+            let pool = KvPool::new_with(heads, hd, bs, n_blocks, kvb);
+            let cfg = SchedConfig {
+                max_batch: 64,
+                prefill_chunk: 8,
+                window: prompt_window(48, 4096),
+                decode_cap: 48,
+                vocab: 32,
+            };
+            let mut sched = WorkerScheduler::new(cfg, pool, 1);
+            let mut queue = AdmissionQueue::new();
+            for i in 0..64u64 {
+                let mut r = req(0, None);
+                r.prompt = prompt.clone();
+                queue.push_new(r, i);
+            }
+            let mut admitted = 0;
+            while let Some(q) = queue.peek() {
+                if !sched.can_admit(q) {
+                    break;
+                }
+                let q = queue.pop().expect("peeked head pops");
+                assert!(sched.admit(q).is_none(), "valid request becomes a lane");
+                admitted += 1;
+            }
+            // Never over-admit: every admitted sequence must be able to
+            // reach its full 8-block target from the pool.
+            assert!(
+                admitted * per_seq_blocks <= n_blocks,
+                "{kvb}: {admitted} sequences × {per_seq_blocks} blocks exceeds pool of {n_blocks}"
+            );
+            // And admission stops exactly at the block-capacity floor.
+            assert_eq!(admitted, n_blocks / per_seq_blocks, "{kvb}: admission count off");
+            let head = queue.peek().expect("requests remain");
+            assert!(!sched.can_admit(head), "{kvb}: a full pool must refuse the next request");
+            (admitted, n_blocks)
+        };
+        let (f32_admits, f32_blocks) = admitted_at(KvBits::F32);
+        assert_eq!((f32_admits, f32_blocks), (4, 32));
+        let (b8_admits, _) = admitted_at(KvBits::B8);
+        let (b4_admits, b4_blocks) = admitted_at(KvBits::B4);
+        let (b3_admits, b3_blocks) = admitted_at(KvBits::B3);
+        assert_eq!(b4_blocks, 204, "4-bit blocks at a 131072-byte budget");
+        assert_eq!(b3_blocks, 256, "3-bit blocks at a 131072-byte budget");
+        assert!(b8_admits > f32_admits, "8-bit must beat f32 admission");
+        let b4_ratio = b4_admits as f64 / f32_admits as f64;
+        assert!(
+            (6.0..=8.0).contains(&b4_ratio),
+            "4-bit admission ratio {b4_ratio} outside the documented [6, 8] band"
+        );
+        assert_eq!(b3_admits, 8 * f32_admits, "3-bit pool admits exactly 8× f32");
+    }
+
+    #[test]
     fn percentile_nearest_rank() {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile(&xs, 0.0), 1.0);

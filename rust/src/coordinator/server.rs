@@ -42,6 +42,7 @@ use super::scheduler::{
     WorkerScheduler,
 };
 use crate::kernels::config::KernelConfig;
+use crate::nn::kvcache::{KvBits, KvPool};
 use crate::nn::model::Model;
 use crate::runtime::store::{ModelRegistry, StoreStats};
 use crate::util::rng::Rng;
@@ -68,11 +69,20 @@ pub struct ServerConfig {
     pub prefill_chunk: usize,
     /// Positions per paged-KV block.
     pub kv_block_size: usize,
-    /// Per-worker KV pool size in blocks. `None` sizes the pool so
-    /// `max_batch` full-context sequences fit (the legacy contiguous
-    /// footprint — no preemption ever triggers); `Some(n)` caps KV memory
-    /// and lets the scheduler hold admission / preempt under pressure.
+    /// Per-worker KV pool size in **f32-equivalent** blocks. `None` sizes
+    /// the pool so `max_batch` full-context sequences fit (the legacy
+    /// contiguous footprint — no preemption ever triggers); `Some(n)` caps
+    /// KV memory and lets the scheduler hold admission / preempt under
+    /// pressure. Either way the figure is a *byte* budget expressed in f32
+    /// blocks: with `kv_bits` below 32 each block costs fewer bytes, so the
+    /// same budget buys proportionally more blocks and the pool admits
+    /// proportionally more sequences (see `docs/kvcache.md`).
     pub kv_pool_blocks: Option<usize>,
+    /// KV cache storage width (`--kv-bits`): `F32` (default, lossless) or
+    /// 8/4/3-bit grouped-int rows. Runtime-only state — checkpoints are
+    /// unaffected. Quantized widths decode within the bounded-divergence
+    /// contract of `docs/kvcache.md`.
+    pub kv_bits: crate::nn::kvcache::KvBits,
     /// Kernel execution knobs (row-parallel worker threads, SIMD) applied
     /// to every served model before warm-up. Bit-identical output for any
     /// setting (see `docs/kernels.md`); set from `--kernel-threads` /
@@ -89,6 +99,7 @@ impl Default for ServerConfig {
             prefill_chunk: 32,
             kv_block_size: 16,
             kv_pool_blocks: None,
+            kv_bits: crate::nn::kvcache::KvBits::F32,
             kernel: KernelConfig::default(),
         }
     }
@@ -257,10 +268,17 @@ fn sched_for(model: &Model, cfg: &ServerConfig) -> WorkerScheduler {
     // (a 1-token window plus 1 generated).
     let per_seq_blocks = n_layers * max_seq.div_ceil(bs);
     let min_blocks = n_layers * 2usize.div_ceil(bs);
-    let n_blocks = cfg
-        .kv_pool_blocks
-        .unwrap_or(cfg.max_batch.max(1) * per_seq_blocks)
-        .max(min_blocks);
+    // `kv_pool_blocks` is a byte budget denominated in f32 blocks: convert
+    // it to physical blocks at the configured KV width, so a quantized pool
+    // holds proportionally more blocks — and therefore admits
+    // proportionally more sequences — at the same byte cost. At F32 the
+    // ratio is exactly 1 and the sizing matches the historical math.
+    let heads = model.cfg.n_kv_heads;
+    let hd = model.cfg.head_dim();
+    let f32_block = KvPool::block_bytes_for(KvBits::F32, heads, hd, bs);
+    let kv_block = KvPool::block_bytes_for(cfg.kv_bits, heads, hd, bs).max(1);
+    let budget_blocks = cfg.kv_pool_blocks.unwrap_or(cfg.max_batch.max(1) * per_seq_blocks);
+    let n_blocks = (budget_blocks.saturating_mul(f32_block) / kv_block).max(min_blocks);
     let pool_seq_positions = (n_blocks / n_layers) * bs;
     let sched_cfg = SchedConfig {
         max_batch: cfg.max_batch.max(1),
@@ -269,7 +287,7 @@ fn sched_for(model: &Model, cfg: &ServerConfig) -> WorkerScheduler {
         decode_cap: max_seq.min(pool_seq_positions),
         vocab: model.cfg.vocab_size,
     };
-    let pool = model.new_kv_pool(bs, n_blocks);
+    let pool = model.new_kv_pool_with(bs, n_blocks, cfg.kv_bits);
     WorkerScheduler::new(sched_cfg, pool, n_layers)
 }
 

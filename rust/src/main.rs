@@ -20,7 +20,8 @@
 //!              `--ckpt <path>` serves one model, `--models name=path,...`
 //!              serves several through the LRU artifact store
 //!              (`--store-budget-mb` caps resident weight bytes; see
-//!              `docs/store.md`)
+//!              `docs/store.md`); `--kv-bits {8,4,3}` stores the KV cache
+//!              grouped-int quantized (default f32; see `docs/kvcache.md`)
 //!   table      regenerate one paper table/figure (t1..t16, f1, f4, f6-f9)
 //!   tables     regenerate all of them
 //!   list       list experiment ids
@@ -329,6 +330,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         prefill_chunk: args.usize_or("prefill-chunk", 32),
         kv_block_size: args.usize_or("kv-block-size", 16),
         kv_pool_blocks: args.get("kv-pool-blocks").and_then(|v| v.parse().ok()),
+        // --kv-bits {8,4,3} stores KV rows grouped-int quantized; default
+        // f32 is lossless. The pool budget is byte-denominated, so lower
+        // widths admit proportionally more sequences (docs/kvcache.md).
+        kv_bits: match args.get("kv-bits") {
+            Some(s) => aqlm::nn::kvcache::KvBits::parse(s)?,
+            None => aqlm::nn::kvcache::KvBits::F32,
+        },
         // --kernel-threads 0 (the default) auto-sizes from the host; any
         // setting decodes bit-identically (docs/kernels.md).
         kernel: aqlm::kernels::config::KernelConfig {

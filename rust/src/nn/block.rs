@@ -548,17 +548,21 @@ impl Block {
         let scale = 1.0 / (dh as f32).sqrt();
         let mut ctx = vec![0.0f32; h_cnt * dh];
         let mut scores = vec![0.0f32; t_len];
+        // Dequantize-on-attend scratch: k_row/v_row fill this for quantized
+        // caches and return the stored slice unchanged for f32 caches, so
+        // the f32 path keeps its historical bit-exact arithmetic.
+        let mut kv_row = vec![0.0f32; dh];
         for hh in 0..h_cnt {
             let kvh = hh / rep;
             let qrow = &q[hh * dh..(hh + 1) * dh];
             for t in 0..t_len {
-                scores[t] = crate::tensor::ops::dot(qrow, kv.k_at(kvh, t)) * scale;
+                scores[t] = crate::tensor::ops::dot(qrow, kv.k_row(kvh, t, &mut kv_row)) * scale;
             }
             softmax_inplace(&mut scores);
             let out = &mut ctx[hh * dh..(hh + 1) * dh];
             for t in 0..t_len {
                 let p = scores[t];
-                let vrow = kv.v_at(kvh, t);
+                let vrow = kv.v_row(kvh, t, &mut kv_row);
                 for u in 0..dh {
                     out[u] += p * vrow[u];
                 }
@@ -646,6 +650,10 @@ impl Block {
         let scale = 1.0 / (dh as f32).sqrt();
         let mut ctx = vec![0.0f32; n * qd];
         let mut scores: Vec<f32> = Vec::new();
+        // Dequantize-on-attend scratch, shared across lanes (see
+        // decode_step_with): quantized rows are decoded here per read, f32
+        // rows are returned borrowed and never touch it.
+        let mut kv_row = vec![0.0f32; dh];
         for b in 0..n {
             let t_len = kv.len(b);
             scores.clear();
@@ -654,13 +662,14 @@ impl Block {
                 let kvh = hh / rep;
                 let qrow = &q[b * qd + hh * dh..b * qd + (hh + 1) * dh];
                 for t in 0..t_len {
-                    scores[t] = crate::tensor::ops::dot(qrow, kv.k_at(b, kvh, t)) * scale;
+                    scores[t] =
+                        crate::tensor::ops::dot(qrow, kv.k_row(b, kvh, t, &mut kv_row)) * scale;
                 }
                 softmax_inplace(&mut scores);
                 let out = &mut ctx[b * qd + hh * dh..b * qd + (hh + 1) * dh];
                 for t in 0..t_len {
                     let p = scores[t];
-                    let vrow = kv.v_at(b, kvh, t);
+                    let vrow = kv.v_row(b, kvh, t, &mut kv_row);
                     for u in 0..dh {
                         out[u] += p * vrow[u];
                     }

@@ -14,10 +14,326 @@
 //! exhaustion is surfaced to the scheduler ([`KvPool::free_blocks`]) as an
 //! admission/preemption signal rather than a panic.
 //!
-//! Both caches expose the same `k_at`/`v_at` position accessors, and
+//! Both caches expose the same `k_row`/`v_row` position accessors, and
 //! attention sums over `t = 0..len` in the same order either way, so decode
-//! through the paged cache is **bit-identical** to the contiguous cache
-//! (covered by a property test in `tests/proptests.rs`).
+//! through the paged cache is **bit-identical** to the contiguous cache at
+//! every [`KvBits`] setting (covered by property tests in
+//! `tests/proptests.rs`).
+//!
+//! ## Quantized storage ([`KvBits`] / [`KvBlockStore`])
+//!
+//! Either cache can store its rows quantized instead of as raw `f32`
+//! (`--kv-bits {8,4,3}` on the server; default `f32`). The unit of storage
+//! is a *row*: one head's `head_dim` values at one position. A quantized
+//! row is encoded with the same grouped round-to-nearest grid the weight
+//! quantizers use (`quant::groupint::quantize_group_minmax`), [`KV_GROUP`]
+//! values per group along `head_dim` (ragged tail groups allowed), and laid
+//! out following the `kernels/format.rs` packed-format idioms:
+//!
+//! ```text
+//! codes:  rows × words_per_row u64   bit-packed codes, `bits` per value,
+//!                                    little-endian within each u64; every
+//!                                    row starts word-aligned so rows are
+//!                                    random-accessible and rewritable
+//!                                    (words_per_row = ⌈head_dim·bits/64⌉)
+//! meta:   rows × 2·n_groups f32      per-group [scale, zero] pairs
+//!                                    (n_groups = ⌈head_dim/KV_GROUP⌉)
+//! ```
+//!
+//! Rows are **quantized on append** and **dequantized on attend** (into a
+//! caller scratch buffer, see `k_row`/`v_row`); dequantization is
+//! `scale · (code − zero)` per value, identical to the grouped-int weight
+//! path, so the per-value round-trip error is bounded by `scale/2` of the
+//! value's group. Because each row is encoded independently from its own
+//! values only, quantize-on-append is *exactly* equivalent to quantizing
+//! the whole cache at once — append order cannot change any stored bit
+//! (property-tested). The byte cost per row ([`KvBlockStore::bytes_per_row`])
+//! drives the server's pool sizing so a quantized pool admits
+//! proportionally more sequences at the same byte budget; the full
+//! divergence contract and admission math live in `docs/kvcache.md`.
+
+use crate::kernels::packed::{pack, BitReader};
+use crate::quant::groupint::quantize_group_minmax;
+
+/// Values per quantization group along `head_dim` (one `[scale, zero]` pair
+/// is stored per group; the last group of a row may be shorter when
+/// `head_dim % KV_GROUP != 0`).
+pub const KV_GROUP: usize = 64;
+
+/// Storage width of KV cache entries — the `--kv-bits` knob.
+///
+/// `F32` (the default) is lossless. The quantized widths trade bounded
+/// dequantization error (≤ `scale/2` per value, see `docs/kvcache.md`) for
+/// a proportionally larger effective pool at the same byte budget.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KvBits {
+    /// Full-precision `f32` rows (lossless; the bit-identity baseline).
+    #[default]
+    F32,
+    /// 8-bit grouped round-to-nearest codes.
+    B8,
+    /// 4-bit grouped round-to-nearest codes.
+    B4,
+    /// 3-bit grouped round-to-nearest codes.
+    B3,
+}
+
+impl KvBits {
+    /// Every supported setting, widest first (handy for test/bench sweeps).
+    pub const ALL: [KvBits; 4] = [KvBits::F32, KvBits::B8, KvBits::B4, KvBits::B3];
+
+    /// Code width in bits for quantized storage; `None` for `f32`.
+    pub fn bits(self) -> Option<usize> {
+        match self {
+            KvBits::F32 => None,
+            KvBits::B8 => Some(8),
+            KvBits::B4 => Some(4),
+            KvBits::B3 => Some(3),
+        }
+    }
+
+    /// Numeric per-value width (32 for `f32`) — the `kv_bits` axis value
+    /// recorded on benchmark runs.
+    pub fn width(self) -> usize {
+        self.bits().unwrap_or(32)
+    }
+
+    /// Short label (`f32`, `8`, `4`, `3`) used in CLI output and bench tags.
+    pub fn label(self) -> &'static str {
+        match self {
+            KvBits::F32 => "f32",
+            KvBits::B8 => "8",
+            KvBits::B4 => "4",
+            KvBits::B3 => "3",
+        }
+    }
+
+    /// Parse a `--kv-bits` argument (`3`, `4`, `8`, `32`, `f32`, or `off`).
+    pub fn parse(s: &str) -> anyhow::Result<KvBits> {
+        match s {
+            "3" => Ok(KvBits::B3),
+            "4" => Ok(KvBits::B4),
+            "8" => Ok(KvBits::B8),
+            "32" | "f32" | "off" => Ok(KvBits::F32),
+            other => anyhow::bail!("unsupported kv-bits '{other}' (expected 3, 4, 8, or f32)"),
+        }
+    }
+}
+
+impl std::fmt::Display for KvBits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Backing storage for a fixed set of KV rows (one row = one head's
+/// `head_dim` values at one position), either raw `f32` or bit-packed
+/// grouped-int codes plus per-group `[scale, zero]` metadata (layout in the
+/// module docs). [`LayerKvCache`] and [`KvPool`] each hold one store for K
+/// and one for V, so the contiguous and paged caches share one codec — a
+/// row stores identical bits in either cache.
+#[derive(Clone, Debug)]
+pub struct KvBlockStore {
+    head_dim: usize,
+    rows: usize,
+    repr: Repr,
+}
+
+/// The two physical representations behind [`KvBlockStore`].
+#[derive(Clone, Debug)]
+enum Repr {
+    /// Row-major `[rows * head_dim]` values.
+    F32(Vec<f32>),
+    /// Bit-packed codes + per-group scale/zero, word-aligned per row.
+    Quant {
+        /// Code width in bits (3, 4, or 8).
+        bits: usize,
+        /// u64 words per row: `(head_dim * bits).div_ceil(64)`.
+        words_per_row: usize,
+        /// Groups per row: `head_dim.div_ceil(KV_GROUP)`.
+        n_groups: usize,
+        /// `[rows * words_per_row]` packed code words.
+        codes: Vec<u64>,
+        /// `[rows * 2 * n_groups]` interleaved `[scale, zero]` pairs.
+        meta: Vec<f32>,
+    },
+}
+
+impl KvBlockStore {
+    /// Zero-filled store for `rows` rows of `head_dim` values at `kv_bits`.
+    pub fn new(rows: usize, head_dim: usize, kv_bits: KvBits) -> KvBlockStore {
+        assert!(head_dim > 0, "kv head_dim must be positive");
+        let repr = match kv_bits.bits() {
+            None => Repr::F32(vec![0.0; rows * head_dim]),
+            Some(bits) => {
+                let words_per_row = (head_dim * bits).div_ceil(64);
+                let n_groups = head_dim.div_ceil(KV_GROUP);
+                Repr::Quant {
+                    bits,
+                    words_per_row,
+                    n_groups,
+                    codes: vec![0u64; rows * words_per_row],
+                    meta: vec![0.0f32; rows * 2 * n_groups],
+                }
+            }
+        };
+        KvBlockStore { head_dim, rows, repr }
+    }
+
+    /// The width this store was built with.
+    pub fn kv_bits(&self) -> KvBits {
+        match &self.repr {
+            Repr::F32(_) => KvBits::F32,
+            Repr::Quant { bits: 8, .. } => KvBits::B8,
+            Repr::Quant { bits: 4, .. } => KvBits::B4,
+            Repr::Quant { .. } => KvBits::B3,
+        }
+    }
+
+    /// Number of rows this store holds.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Values per row.
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Bytes of backing storage per row at `kv_bits` — packed code words
+    /// plus per-group scale/zero for quantized widths, `4 · head_dim` for
+    /// `f32`. This is the quantity the server's pool sizing divides a byte
+    /// budget by (`docs/kvcache.md` §admission).
+    pub fn bytes_per_row(head_dim: usize, kv_bits: KvBits) -> usize {
+        match kv_bits.bits() {
+            None => head_dim * 4,
+            Some(bits) => {
+                let code_bytes = (head_dim * bits).div_ceil(64) * 8;
+                let meta_bytes = head_dim.div_ceil(KV_GROUP) * 2 * 4;
+                code_bytes + meta_bytes
+            }
+        }
+    }
+
+    /// Total bytes of backing storage.
+    pub fn bytes(&self) -> usize {
+        self.rows * KvBlockStore::bytes_per_row(self.head_dim, self.kv_bits())
+    }
+
+    /// Encode `vals` (`[head_dim]`) into row `r`, overwriting it. Quantized
+    /// stores quantize each [`KV_GROUP`]-value group independently
+    /// (quantize-on-append); `f32` stores copy.
+    pub fn write_row(&mut self, r: usize, vals: &[f32]) {
+        let hd = self.head_dim;
+        debug_assert_eq!(vals.len(), hd);
+        debug_assert!(r < self.rows);
+        match &mut self.repr {
+            Repr::F32(data) => data[r * hd..(r + 1) * hd].copy_from_slice(vals),
+            Repr::Quant { bits, words_per_row, n_groups, codes, meta } => {
+                let (bits, wpr, ng) = (*bits, *words_per_row, *n_groups);
+                let mut row_codes: Vec<u16> = Vec::with_capacity(hd);
+                let mbase = r * 2 * ng;
+                for g in 0..ng {
+                    let lo = g * KV_GROUP;
+                    let hi = (lo + KV_GROUP).min(hd);
+                    let (c, scale, zero) = quantize_group_minmax(&vals[lo..hi], bits);
+                    row_codes.extend_from_slice(&c);
+                    meta[mbase + 2 * g] = scale;
+                    meta[mbase + 2 * g + 1] = zero;
+                }
+                let packed = pack(&row_codes, bits);
+                debug_assert_eq!(packed.len(), wpr);
+                codes[r * wpr..(r + 1) * wpr].copy_from_slice(&packed);
+            }
+        }
+    }
+
+    /// Read row `r`: `f32` stores return the stored slice directly (no
+    /// copy — the quantized-off path keeps its historical bit-identity);
+    /// quantized stores dequantize `scale · (code − zero)` into `scratch`
+    /// (which must hold at least `head_dim` values) and return that.
+    pub fn read_row<'a>(&'a self, r: usize, scratch: &'a mut [f32]) -> &'a [f32] {
+        let hd = self.head_dim;
+        match &self.repr {
+            Repr::F32(data) => &data[r * hd..(r + 1) * hd],
+            Repr::Quant { bits, words_per_row, n_groups, codes, meta } => {
+                assert!(scratch.len() >= hd, "kv dequant scratch too small");
+                let mut rd = BitReader::new(&codes[r * words_per_row..(r + 1) * words_per_row], *bits);
+                let mbase = r * 2 * n_groups;
+                for g in 0..*n_groups {
+                    let scale = meta[mbase + 2 * g];
+                    let zero = meta[mbase + 2 * g + 1];
+                    let lo = g * KV_GROUP;
+                    let hi = (lo + KV_GROUP).min(hd);
+                    for slot in &mut scratch[lo..hi] {
+                        *slot = scale * (rd.next() as f32 - zero);
+                    }
+                }
+                &scratch[..hd]
+            }
+        }
+    }
+
+    /// Borrowed row access for `f32` stores only (the legacy `k_at`/`v_at`
+    /// surface). Panics on quantized stores — those reads must go through
+    /// [`Self::read_row`] with a scratch buffer.
+    fn f32_row(&self, r: usize) -> &[f32] {
+        match &self.repr {
+            Repr::F32(data) => &data[r * self.head_dim..(r + 1) * self.head_dim],
+            Repr::Quant { .. } => {
+                panic!("borrowed k_at/v_at require an f32 KV store; quantized reads use k_row/v_row")
+            }
+        }
+    }
+
+    /// Structural validation in the `kernels/format.rs` idiom: buffer
+    /// lengths must match the declared row geometry exactly.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.head_dim > 0, "kv store: head_dim must be positive");
+        match &self.repr {
+            Repr::F32(data) => {
+                anyhow::ensure!(
+                    data.len() == self.rows * self.head_dim,
+                    "kv store: f32 buffer holds {} values, geometry needs {}",
+                    data.len(),
+                    self.rows * self.head_dim
+                );
+            }
+            Repr::Quant { bits, words_per_row, n_groups, codes, meta } => {
+                anyhow::ensure!(
+                    matches!(bits, 3 | 4 | 8),
+                    "kv store: unsupported code width {bits}"
+                );
+                anyhow::ensure!(
+                    *words_per_row == (self.head_dim * bits).div_ceil(64),
+                    "kv store: words_per_row {} inconsistent with head_dim {} at {} bits",
+                    words_per_row,
+                    self.head_dim,
+                    bits
+                );
+                anyhow::ensure!(
+                    *n_groups == self.head_dim.div_ceil(KV_GROUP),
+                    "kv store: n_groups {} inconsistent with head_dim {}",
+                    n_groups,
+                    self.head_dim
+                );
+                anyhow::ensure!(
+                    codes.len() == self.rows * words_per_row,
+                    "kv store: code buffer holds {} words, geometry needs {}",
+                    codes.len(),
+                    self.rows * words_per_row
+                );
+                anyhow::ensure!(
+                    meta.len() == self.rows * 2 * n_groups,
+                    "kv store: meta buffer holds {} values, geometry needs {}",
+                    meta.len(),
+                    self.rows * 2 * n_groups
+                );
+            }
+        }
+        Ok(())
+    }
+}
 
 /// KV cache for one transformer block.
 #[derive(Clone, Debug)]
@@ -28,51 +344,91 @@ pub struct LayerKvCache {
     pub head_dim: usize,
     /// Cache capacity in positions.
     pub max_seq: usize,
-    /// [n_kv_heads, max_seq, head_dim], filled up to `len`.
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// `[n_kv_heads, max_seq]` rows of K, filled up to `len`.
+    k: KvBlockStore,
+    /// `[n_kv_heads, max_seq]` rows of V, filled up to `len`.
+    v: KvBlockStore,
     /// Number of positions currently cached.
     pub len: usize,
 }
 
 impl LayerKvCache {
-    /// Zero-filled cache with room for `max_seq` positions.
+    /// Zero-filled `f32` cache with room for `max_seq` positions.
     pub fn new(n_kv_heads: usize, head_dim: usize, max_seq: usize) -> LayerKvCache {
+        LayerKvCache::new_with(n_kv_heads, head_dim, max_seq, KvBits::F32)
+    }
+
+    /// [`Self::new`] with an explicit storage width.
+    pub fn new_with(
+        n_kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        kv_bits: KvBits,
+    ) -> LayerKvCache {
+        let rows = n_kv_heads * max_seq;
         LayerKvCache {
             n_kv_heads,
             head_dim,
             max_seq,
-            k: vec![0.0; n_kv_heads * max_seq * head_dim],
-            v: vec![0.0; n_kv_heads * max_seq * head_dim],
+            k: KvBlockStore::new(rows, head_dim, kv_bits),
+            v: KvBlockStore::new(rows, head_dim, kv_bits),
             len: 0,
         }
     }
 
+    /// Storage width this cache was built with.
+    pub fn kv_bits(&self) -> KvBits {
+        self.k.kv_bits()
+    }
+
     /// Append one position's K/V for all kv-heads (k_new/v_new are
-    /// [n_kv_heads * head_dim], head-major).
+    /// [n_kv_heads * head_dim], head-major). Quantized caches encode each
+    /// head row on the spot (quantize-on-append).
     pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
         assert!(self.len < self.max_seq, "kv cache overflow");
         let (hd, ms) = (self.head_dim, self.max_seq);
         for h in 0..self.n_kv_heads {
-            let dst = (h * ms + self.len) * hd;
-            self.k[dst..dst + hd].copy_from_slice(&k_new[h * hd..(h + 1) * hd]);
-            self.v[dst..dst + hd].copy_from_slice(&v_new[h * hd..(h + 1) * hd]);
+            let r = h * ms + self.len;
+            self.k.write_row(r, &k_new[h * hd..(h + 1) * hd]);
+            self.v.write_row(r, &v_new[h * hd..(h + 1) * hd]);
         }
         self.len += 1;
     }
 
-    /// K vector of head `h` at position `t`.
+    /// K vector of head `h` at position `t`, borrowed from storage.
+    ///
+    /// `f32` caches only (panics on quantized storage — use
+    /// [`Self::k_row`]). Reads beyond `len` panic: positions outside the
+    /// cache window are unreachable even though their rows are physically
+    /// allocated (the stale-data length guard).
     #[inline]
     pub fn k_at(&self, h: usize, t: usize) -> &[f32] {
-        let base = (h * self.max_seq + t) * self.head_dim;
-        &self.k[base..base + self.head_dim]
+        assert!(t < self.len, "kv read past cache window");
+        self.k.f32_row(h * self.max_seq + t)
     }
 
-    /// V vector of head `h` at position `t`.
+    /// V vector of head `h` at position `t` (same contract as
+    /// [`Self::k_at`]).
     #[inline]
     pub fn v_at(&self, h: usize, t: usize) -> &[f32] {
-        let base = (h * self.max_seq + t) * self.head_dim;
-        &self.v[base..base + self.head_dim]
+        assert!(t < self.len, "kv read past cache window");
+        self.v.f32_row(h * self.max_seq + t)
+    }
+
+    /// K vector of head `h` at position `t`, dequantized into `scratch`
+    /// when the cache is quantized (`f32` caches return the stored slice —
+    /// bit-identical to [`Self::k_at`]). Reads beyond `len` panic.
+    #[inline]
+    pub fn k_row<'a>(&'a self, h: usize, t: usize, scratch: &'a mut [f32]) -> &'a [f32] {
+        assert!(t < self.len, "kv read past cache window");
+        self.k.read_row(h * self.max_seq + t, scratch)
+    }
+
+    /// V counterpart of [`Self::k_row`].
+    #[inline]
+    pub fn v_row<'a>(&'a self, h: usize, t: usize, scratch: &'a mut [f32]) -> &'a [f32] {
+        assert!(t < self.len, "kv read past cache window");
+        self.v.read_row(h * self.max_seq + t, scratch)
     }
 
     /// Reset to empty (capacity retained).
@@ -87,9 +443,16 @@ impl LayerKvCache {
 ///
 /// One pool serves every layer of every active sequence on a worker. A
 /// block stores `block_size` consecutive positions of one (sequence, layer)
-/// as `[n_kv_heads, block_size, head_dim]` — the same head-major-then-
-/// position layout as [`LayerKvCache`], just chunked, so `k_at`/`v_at`
-/// return identical slices and attention arithmetic is unchanged.
+/// as `[n_kv_heads, block_size]` rows of `head_dim` values — the same
+/// head-major-then-position layout as [`LayerKvCache`], just chunked, so
+/// row reads return identical values and attention arithmetic is unchanged.
+/// Rows live in a [`KvBlockStore`], so the pool stores `f32` or packed
+/// grouped-int rows uniformly with the contiguous cache.
+///
+/// Freed blocks are **not** cleared: release/reallocate is O(1) pointer
+/// motion. Stale rows a previous sequence left behind are unreachable
+/// because every read asserts `t < table.len()` — the length guard tested
+/// by `stale_blocks_*` below.
 #[derive(Clone, Debug)]
 pub struct KvPool {
     /// Number of cached key/value heads.
@@ -100,32 +463,49 @@ pub struct KvPool {
     block_size: usize,
     /// Total blocks in the pool.
     n_blocks: usize,
-    /// Block storage: block `b` occupies
-    /// `[b * n_kv_heads * block_size * head_dim ..][h][p][..head_dim]`.
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// K rows: block `b` owns rows `[b·n_kv_heads·block_size ..)` indexed
+    /// `(b·n_kv_heads + h)·block_size + p`.
+    k: KvBlockStore,
+    /// V rows, same indexing as `k`.
+    v: KvBlockStore,
     /// LIFO free list of block ids (deterministic allocation order).
     free: Vec<u32>,
 }
 
 impl KvPool {
-    /// Pool of `n_blocks` blocks of `block_size` positions each.
+    /// `f32` pool of `n_blocks` blocks of `block_size` positions each.
     pub fn new(n_kv_heads: usize, head_dim: usize, block_size: usize, n_blocks: usize) -> KvPool {
+        KvPool::new_with(n_kv_heads, head_dim, block_size, n_blocks, KvBits::F32)
+    }
+
+    /// [`Self::new`] with an explicit storage width.
+    pub fn new_with(
+        n_kv_heads: usize,
+        head_dim: usize,
+        block_size: usize,
+        n_blocks: usize,
+        kv_bits: KvBits,
+    ) -> KvPool {
         assert!(block_size > 0, "kv block size must be positive");
         assert!(n_blocks > 0, "kv pool must have at least one block");
         assert!(n_blocks <= u32::MAX as usize, "kv pool too large");
-        let elems = n_blocks * n_kv_heads * block_size * head_dim;
+        let rows = n_blocks * n_kv_heads * block_size;
         KvPool {
             n_kv_heads,
             head_dim,
             block_size,
             n_blocks,
-            k: vec![0.0; elems],
-            v: vec![0.0; elems],
+            k: KvBlockStore::new(rows, head_dim, kv_bits),
+            v: KvBlockStore::new(rows, head_dim, kv_bits),
             // Pop from the tail → blocks are handed out in ascending id
             // order from a fresh pool.
             free: (0..n_blocks as u32).rev().collect(),
         }
+    }
+
+    /// Storage width this pool was built with.
+    pub fn kv_bits(&self) -> KvBits {
+        self.k.kv_bits()
     }
 
     /// Positions per block.
@@ -149,8 +529,27 @@ impl KvPool {
         positions.div_ceil(self.block_size)
     }
 
+    /// Bytes of K+V backing storage per block of this pool.
+    pub fn block_bytes(&self) -> usize {
+        KvPool::block_bytes_for(self.kv_bits(), self.n_kv_heads, self.head_dim, self.block_size)
+    }
+
+    /// Bytes of K+V backing storage per block for the given geometry — the
+    /// quantity that converts a byte budget into a block count when sizing
+    /// a pool (`docs/kvcache.md` §admission): at `kv_bits < 32` each block
+    /// is cheaper, so the same budget buys proportionally more blocks.
+    pub fn block_bytes_for(
+        kv_bits: KvBits,
+        n_kv_heads: usize,
+        head_dim: usize,
+        block_size: usize,
+    ) -> usize {
+        2 * n_kv_heads * block_size * KvBlockStore::bytes_per_row(head_dim, kv_bits)
+    }
+
     /// Append one position's K/V (head-major `[n_kv_heads * head_dim]`) to
-    /// `table`, allocating a block when the tail block is full.
+    /// `table`, allocating a block when the tail block is full. Quantized
+    /// pools encode each head row on the spot (quantize-on-append).
     ///
     /// Panics on pool exhaustion: the scheduler must check
     /// [`Self::free_blocks`] before stepping (exhaustion is a scheduling
@@ -164,32 +563,70 @@ impl KvPool {
         let blk = table.blocks[table.len / bs] as usize;
         let p = table.len % bs;
         for h in 0..self.n_kv_heads {
-            let dst = ((blk * self.n_kv_heads + h) * bs + p) * hd;
-            self.k[dst..dst + hd].copy_from_slice(&k_new[h * hd..(h + 1) * hd]);
-            self.v[dst..dst + hd].copy_from_slice(&v_new[h * hd..(h + 1) * hd]);
+            let r = (blk * self.n_kv_heads + h) * bs + p;
+            self.k.write_row(r, &k_new[h * hd..(h + 1) * hd]);
+            self.v.write_row(r, &v_new[h * hd..(h + 1) * hd]);
         }
         table.len += 1;
     }
 
-    /// K vector of head `h` at logical position `t` of `table`.
+    /// Physical row index of (`table`, head `h`, logical position `t`),
+    /// with the stale-data length guard: `t` must be inside the sequence's
+    /// window, so rows a previous owner left in a reused block can never be
+    /// read (`release` does not clear storage).
     #[inline]
-    pub fn k_at(&self, table: &BlockTable, h: usize, t: usize) -> &[f32] {
-        let (bs, hd) = (self.block_size, self.head_dim);
+    fn row_index(&self, table: &BlockTable, h: usize, t: usize) -> usize {
+        assert!(t < table.len, "kv read past sequence window");
+        let bs = self.block_size;
         let blk = table.blocks[t / bs] as usize;
-        let base = ((blk * self.n_kv_heads + h) * bs + (t % bs)) * hd;
-        &self.k[base..base + hd]
+        (blk * self.n_kv_heads + h) * bs + (t % bs)
     }
 
-    /// V vector of head `h` at logical position `t` of `table`.
+    /// K vector of head `h` at logical position `t` of `table`, borrowed
+    /// from storage (`f32` pools only — quantized pools use
+    /// [`Self::k_row`]). Reads beyond `table.len()` panic.
+    #[inline]
+    pub fn k_at(&self, table: &BlockTable, h: usize, t: usize) -> &[f32] {
+        self.k.f32_row(self.row_index(table, h, t))
+    }
+
+    /// V counterpart of [`Self::k_at`].
     #[inline]
     pub fn v_at(&self, table: &BlockTable, h: usize, t: usize) -> &[f32] {
-        let (bs, hd) = (self.block_size, self.head_dim);
-        let blk = table.blocks[t / bs] as usize;
-        let base = ((blk * self.n_kv_heads + h) * bs + (t % bs)) * hd;
-        &self.v[base..base + hd]
+        self.v.f32_row(self.row_index(table, h, t))
+    }
+
+    /// K vector of head `h` at logical position `t` of `table`, dequantized
+    /// into `scratch` when the pool is quantized (`f32` pools return the
+    /// stored slice — bit-identical to [`Self::k_at`]). Reads beyond
+    /// `table.len()` panic.
+    #[inline]
+    pub fn k_row<'a>(
+        &'a self,
+        table: &BlockTable,
+        h: usize,
+        t: usize,
+        scratch: &'a mut [f32],
+    ) -> &'a [f32] {
+        self.k.read_row(self.row_index(table, h, t), scratch)
+    }
+
+    /// V counterpart of [`Self::k_row`].
+    #[inline]
+    pub fn v_row<'a>(
+        &'a self,
+        table: &BlockTable,
+        h: usize,
+        t: usize,
+        scratch: &'a mut [f32],
+    ) -> &'a [f32] {
+        self.v.read_row(self.row_index(table, h, t), scratch)
     }
 
     /// Return all of `table`'s blocks to the free list and reset it.
+    ///
+    /// Block contents are deliberately **not** cleared — reuse is guarded
+    /// by the `t < table.len()` read assertion, not a zeroing pass.
     pub fn release(&mut self, table: &mut BlockTable) {
         // Push back in reverse so a release-then-reallocate cycle hands the
         // same ids out in the same order (deterministic scheduling).
@@ -197,6 +634,28 @@ impl KvPool {
             self.free.push(blk);
         }
         table.len = 0;
+    }
+
+    /// Structural validation of both row stores and the free list.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.k.validate()?;
+        self.v.validate()?;
+        let rows = self.n_blocks * self.n_kv_heads * self.block_size;
+        anyhow::ensure!(
+            self.k.rows() == rows && self.v.rows() == rows,
+            "kv pool: stores hold {}/{} rows, geometry needs {rows}",
+            self.k.rows(),
+            self.v.rows()
+        );
+        anyhow::ensure!(
+            self.free.len() <= self.n_blocks,
+            "kv pool: free list longer than the pool"
+        );
+        anyhow::ensure!(
+            self.free.iter().all(|&b| (b as usize) < self.n_blocks),
+            "kv pool: free list references a block outside the pool"
+        );
+        Ok(())
     }
 }
 
@@ -281,7 +740,11 @@ impl PagedSeqKv {
 ///
 /// `nn/block.rs` attention is written against this view only, so the paged
 /// and contiguous paths share one code path (and therefore one summation
-/// order: greedy output cannot diverge between them).
+/// order: greedy output cannot diverge between them). The same holds per
+/// [`KvBits`] setting: both variants store rows through the same
+/// [`KvBlockStore`] codec, so paged and contiguous decode stay bit-identical
+/// to *each other* at every width (quantized decode differs from `f32`
+/// decode within the bounded-divergence contract of `docs/kvcache.md`).
 pub enum KvLanes<'a> {
     /// One contiguous cache per lane.
     Contig(Vec<&'a mut LayerKvCache>),
@@ -317,21 +780,23 @@ impl KvLanes<'_> {
         }
     }
 
-    /// K vector of lane `b`, head `h`, position `t`.
+    /// K vector of lane `b`, head `h`, position `t`, dequantized into
+    /// `scratch` when the cache is quantized (`f32` caches return the
+    /// stored slice unchanged — the historical zero-copy path).
     #[inline]
-    pub fn k_at(&self, b: usize, h: usize, t: usize) -> &[f32] {
+    pub fn k_row<'s>(&'s self, b: usize, h: usize, t: usize, scratch: &'s mut [f32]) -> &'s [f32] {
         match self {
-            KvLanes::Contig(kvs) => kvs[b].k_at(h, t),
-            KvLanes::Paged(pool, tables) => pool.k_at(tables[b], h, t),
+            KvLanes::Contig(kvs) => kvs[b].k_row(h, t, scratch),
+            KvLanes::Paged(pool, tables) => pool.k_row(tables[b], h, t, scratch),
         }
     }
 
-    /// V vector of lane `b`, head `h`, position `t`.
+    /// V counterpart of [`Self::k_row`].
     #[inline]
-    pub fn v_at(&self, b: usize, h: usize, t: usize) -> &[f32] {
+    pub fn v_row<'s>(&'s self, b: usize, h: usize, t: usize, scratch: &'s mut [f32]) -> &'s [f32] {
         match self {
-            KvLanes::Contig(kvs) => kvs[b].v_at(h, t),
-            KvLanes::Paged(pool, tables) => pool.v_at(tables[b], h, t),
+            KvLanes::Contig(kvs) => kvs[b].v_row(h, t, scratch),
+            KvLanes::Paged(pool, tables) => pool.v_row(tables[b], h, t, scratch),
         }
     }
 }
@@ -339,6 +804,7 @@ impl KvLanes<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn append_and_read_back() {
@@ -350,6 +816,9 @@ mod tests {
         assert_eq!(c.k_at(1, 0), &[4., 5., 6.]);
         assert_eq!(c.k_at(1, 1), &[40., 50., 60.]);
         assert_eq!(c.v_at(0, 0), &[9., 8., 7.]);
+        // k_row on an f32 cache returns the same borrowed values.
+        let mut scratch = vec![0.0f32; 3];
+        assert_eq!(c.k_row(1, 1, &mut scratch), &[40., 50., 60.]);
     }
 
     #[test]
@@ -368,6 +837,16 @@ mod tests {
         assert_eq!(c.len, 0);
         c.append(&[5., 6.], &[7., 8.]);
         assert_eq!(c.k_at(0, 0), &[5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "past cache window")]
+    fn contiguous_read_past_len_panics() {
+        // Position 1 is physically allocated (max_seq 2) but outside the
+        // window (len 1): the length guard must reject it.
+        let mut c = LayerKvCache::new(1, 2, 2);
+        c.append(&[1., 2.], &[3., 4.]);
+        let _ = c.k_at(0, 1);
     }
 
     #[test]
@@ -406,6 +885,85 @@ mod tests {
     }
 
     #[test]
+    fn quantized_pool_matches_quantized_contiguous_bitwise() {
+        // The pool and the contiguous cache share one row codec, so at
+        // every width the dequantized rows must agree bit-for-bit — this is
+        // what makes paged decode bit-identical to contiguous decode even
+        // when both are lossy relative to f32.
+        let mut rng = Rng::seed_from_u64(7);
+        for kvb in KvBits::ALL {
+            // head_dim 5 exercises the ragged tail (5 % KV_GROUP != 0 and
+            // 5·3 bits is not word-aligned); block_size 1 is the smallest
+            // legal block.
+            let (heads, hd, bs) = (2, 5, 1);
+            let mut pool = KvPool::new_with(heads, hd, bs, 16, kvb);
+            let mut table = BlockTable::new();
+            let mut cache = LayerKvCache::new_with(heads, hd, 9, kvb);
+            pool.validate().expect("fresh pool is well-formed");
+            for _ in 0..9 {
+                let k: Vec<f32> = (0..heads * hd).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..heads * hd).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                pool.append(&mut table, &k, &v);
+                cache.append(&k, &v);
+            }
+            let mut sa = vec![0.0f32; hd];
+            let mut sb = vec![0.0f32; hd];
+            for h in 0..heads {
+                for t in 0..9 {
+                    let a: Vec<u32> =
+                        pool.k_row(&table, h, t, &mut sa).iter().map(|x| x.to_bits()).collect();
+                    let b: Vec<u32> =
+                        cache.k_row(h, t, &mut sb).iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(a, b, "kv_bits={kvb} K row diverged at h={h} t={t}");
+                    let a: Vec<u32> =
+                        pool.v_row(&table, h, t, &mut sa).iter().map(|x| x.to_bits()).collect();
+                    let b: Vec<u32> =
+                        cache.v_row(h, t, &mut sb).iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(a, b, "kv_bits={kvb} V row diverged at h={h} t={t}");
+                }
+            }
+            pool.validate().expect("filled pool stays well-formed");
+        }
+    }
+
+    #[test]
+    fn quantized_roundtrip_error_bounded_and_degenerate_rows_exact() {
+        let mut rng = Rng::seed_from_u64(11);
+        for kvb in [KvBits::B8, KvBits::B4, KvBits::B3] {
+            let bits = kvb.bits().expect("quantized width");
+            let qmax = ((1usize << bits) - 1) as f32;
+            let hd = 70; // one full group + a ragged 6-value tail
+            let mut c = LayerKvCache::new_with(1, hd, 4, kvb);
+            let row: Vec<f32> = (0..hd).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            c.append(&row, &row);
+            let mut scratch = vec![0.0f32; hd];
+            let deq = c.k_row(0, 0, &mut scratch).to_vec();
+            for g in 0..hd.div_ceil(KV_GROUP) {
+                let lo = g * KV_GROUP;
+                let hi = (lo + KV_GROUP).min(hd);
+                let (gmin, gmax) = row[lo..hi]
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &x| (a.min(x), b.max(x)));
+                let bound = (gmax - gmin) / qmax * 0.5 + 1e-5;
+                for i in lo..hi {
+                    assert!(
+                        (deq[i] - row[i]).abs() <= bound,
+                        "kv_bits={kvb}: |{} - {}| > {bound}",
+                        deq[i],
+                        row[i]
+                    );
+                }
+            }
+            // All-equal rows hit the degenerate RTN branch and reconstruct
+            // exactly at any width.
+            let flat = vec![0.37f32; hd];
+            c.append(&flat, &flat);
+            let deq = c.k_row(0, 1, &mut scratch);
+            assert!(deq.iter().all(|&x| x == 0.37), "kv_bits={kvb}: degenerate row not exact");
+        }
+    }
+
+    #[test]
     fn pool_allocates_on_block_boundaries_and_frees_on_release() {
         let mut pool = KvPool::new(1, 2, 2, 3);
         let mut t = BlockTable::new();
@@ -439,6 +997,115 @@ mod tests {
         assert_eq!(pool.free_blocks(), 2);
         assert_eq!(pool.k_at(&c, 0, 0), &[3.0]);
         assert_eq!(pool.k_at(&b, 0, 0), &[2.0]);
+    }
+
+    #[test]
+    fn stale_blocks_are_unreachable_after_lifo_reuse() {
+        // Regression for the release-without-clearing free list: a new
+        // sequence that inherits a previous owner's blocks must see only
+        // its own appends through the accessors. The guard is the
+        // `t < table.len()` assertion, not a zeroing pass — storage beyond
+        // the new owner's window still physically holds the old rows.
+        for kvb in KvBits::ALL {
+            let (heads, hd, bs) = (1, 4, 2);
+            let mut pool = KvPool::new_with(heads, hd, bs, 2, kvb);
+            let mut a = BlockTable::new();
+            // Sequence A fills the whole pool with sentinel data.
+            for t in 0..4 {
+                let row = vec![900.0 + t as f32; hd];
+                pool.append(&mut a, &row, &row);
+            }
+            assert_eq!(pool.free_blocks(), 0);
+            pool.release(&mut a);
+            // Sequence B reuses A's blocks (LIFO) but appends only one
+            // position — and a fresh pool driven identically must read
+            // back bit-identical rows, proving A's leftovers are inert.
+            let mut b = BlockTable::new();
+            let row = [1.0f32, -2.0, 3.0, -4.0];
+            pool.append(&mut b, &row, &row);
+            assert_eq!(b.len(), 1);
+            let mut fresh = KvPool::new_with(heads, hd, bs, 2, kvb);
+            let mut fb = BlockTable::new();
+            fresh.append(&mut fb, &row, &row);
+            let mut sa = vec![0.0f32; hd];
+            let mut sb = vec![0.0f32; hd];
+            let reused: Vec<u32> = pool.k_row(&b, 0, 0, &mut sa).iter().map(|x| x.to_bits()).collect();
+            let clean: Vec<u32> =
+                fresh.k_row(&fb, 0, 0, &mut sb).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(reused, clean, "kv_bits={kvb}: reused block leaked stale state");
+            // The sentinel value is nowhere reachable through B's window.
+            assert!(
+                pool.k_row(&b, 0, 0, &mut sa).iter().all(|&x| x < 900.0),
+                "kv_bits={kvb}: stale sentinel leaked into the attention window"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "past sequence window")]
+    fn stale_position_in_reused_tail_block_panics() {
+        // Position 1 of the reused block still holds the previous owner's
+        // row; it is inside the allocated block but outside the new
+        // sequence's window, so reading it must panic.
+        let mut pool = KvPool::new(1, 2, 2, 1);
+        let mut a = BlockTable::new();
+        pool.append(&mut a, &[7.0, 7.0], &[7.0, 7.0]);
+        pool.append(&mut a, &[8.0, 8.0], &[8.0, 8.0]);
+        pool.release(&mut a);
+        let mut b = BlockTable::new();
+        pool.append(&mut b, &[1.0, 1.0], &[1.0, 1.0]);
+        let _ = pool.k_at(&b, 0, 1);
+    }
+
+    #[test]
+    fn block_bytes_pin_the_admission_ratio() {
+        // The admission math in docs/kvcache.md §capacity: bytes per value
+        // is 4 for f32 and b/8 + 8/KV_GROUP for width b (codes + one
+        // [scale, zero] f32 pair per 64-value group), so equal byte budgets
+        // buy 3.56×/6.4×/8× the blocks at 8/4/3 bits for head_dim 64.
+        let (heads, hd, bs) = (2, 64, 4);
+        let f32_block = KvPool::block_bytes_for(KvBits::F32, heads, hd, bs);
+        assert_eq!(f32_block, 2 * 2 * 4 * 64 * 4); // 4096
+        assert_eq!(KvPool::block_bytes_for(KvBits::B8, heads, hd, bs), 2 * 2 * 4 * (64 + 8));
+        assert_eq!(KvPool::block_bytes_for(KvBits::B4, heads, hd, bs), 2 * 2 * 4 * (32 + 8));
+        assert_eq!(KvPool::block_bytes_for(KvBits::B3, heads, hd, bs), 2 * 2 * 4 * (24 + 8));
+        let ratio = |kvb: KvBits| f32_block as f64 / KvPool::block_bytes_for(kvb, heads, hd, bs) as f64;
+        assert!((ratio(KvBits::B4) - 6.4).abs() < 1e-9);
+        assert!((ratio(KvBits::B3) - 8.0).abs() < 1e-9);
+        // Instance accounting agrees with the static formula, and a ragged
+        // head_dim rounds codes up to whole words per row.
+        let pool = KvPool::new_with(heads, hd, bs, 3, KvBits::B4);
+        assert_eq!(pool.block_bytes(), KvPool::block_bytes_for(KvBits::B4, heads, hd, bs));
+        assert_eq!(KvBlockStore::bytes_per_row(5, KvBits::B3), 8 + 8); // ⌈15/64⌉ words + 1 group
+    }
+
+    #[test]
+    fn validate_rejects_corrupt_geometry() {
+        let mut pool = KvPool::new_with(1, 5, 2, 2, KvBits::B4);
+        pool.validate().expect("fresh pool is well-formed");
+        if let Repr::Quant { codes, .. } = &mut pool.k.repr {
+            codes.pop();
+        }
+        assert!(pool.validate().is_err(), "truncated code buffer must fail validation");
+        let mut pool = KvPool::new(1, 3, 2, 2);
+        if let Repr::F32(data) = &mut pool.v.repr {
+            data.push(0.0);
+        }
+        assert!(pool.validate().is_err(), "oversized f32 buffer must fail validation");
+    }
+
+    #[test]
+    fn kv_bits_parse_and_labels() {
+        assert_eq!(KvBits::parse("f32").unwrap(), KvBits::F32);
+        assert_eq!(KvBits::parse("off").unwrap(), KvBits::F32);
+        assert_eq!(KvBits::parse("32").unwrap(), KvBits::F32);
+        assert_eq!(KvBits::parse("8").unwrap(), KvBits::B8);
+        assert_eq!(KvBits::parse("4").unwrap(), KvBits::B4);
+        assert_eq!(KvBits::parse("3").unwrap(), KvBits::B3);
+        assert!(KvBits::parse("2").is_err());
+        assert_eq!(KvBits::B4.to_string(), "4");
+        assert_eq!(KvBits::F32.width(), 32);
+        assert_eq!(KvBits::B3.width(), 3);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use super::adam::{Adam, AdamState};
 use super::block::{Block, BlockCache, BlockGrads, Ffn, FfnGrads, Mlp};
 use super::config::ModelConfig;
-use super::kvcache::{KvLanes, KvPool, LayerKvCache, PagedSeqKv};
+use super::kvcache::{KvBits, KvLanes, KvPool, LayerKvCache, PagedSeqKv};
 use super::linear::{Linear, LinearGrad};
 use super::loss::cross_entropy;
 use super::moe::MoeLayer;
@@ -227,17 +227,36 @@ impl Model {
 
     // ------------------------------------------------------------ generation
 
-    /// Fresh (empty) KV caches, one per block.
+    /// Fresh (empty) `f32` KV caches, one per block.
     pub fn new_kv_caches(&self) -> Vec<LayerKvCache> {
+        self.new_kv_caches_with(KvBits::F32)
+    }
+
+    /// [`Self::new_kv_caches`] at an explicit KV storage width
+    /// (`--kv-bits`); quantized caches trade bounded decode divergence for
+    /// memory (see `docs/kvcache.md`).
+    pub fn new_kv_caches_with(&self, kv_bits: KvBits) -> Vec<LayerKvCache> {
         (0..self.cfg.n_layers)
-            .map(|_| LayerKvCache::new(self.cfg.n_kv_heads, self.cfg.head_dim(), self.cfg.max_seq))
+            .map(|_| {
+                LayerKvCache::new_with(
+                    self.cfg.n_kv_heads,
+                    self.cfg.head_dim(),
+                    self.cfg.max_seq,
+                    kv_bits,
+                )
+            })
             .collect()
     }
 
-    /// Shared paged-KV block pool for this model's head geometry (serving
-    /// path; see [`crate::nn::kvcache::KvPool`]).
+    /// Shared `f32` paged-KV block pool for this model's head geometry
+    /// (serving path; see [`crate::nn::kvcache::KvPool`]).
     pub fn new_kv_pool(&self, block_size: usize, n_blocks: usize) -> KvPool {
-        KvPool::new(self.cfg.n_kv_heads, self.cfg.head_dim(), block_size, n_blocks)
+        self.new_kv_pool_with(block_size, n_blocks, KvBits::F32)
+    }
+
+    /// [`Self::new_kv_pool`] at an explicit KV storage width (`--kv-bits`).
+    pub fn new_kv_pool_with(&self, block_size: usize, n_blocks: usize, kv_bits: KvBits) -> KvPool {
+        KvPool::new_with(self.cfg.n_kv_heads, self.cfg.head_dim(), block_size, n_blocks, kv_bits)
     }
 
     /// Empty paged per-layer KV state for one sequence.
@@ -410,12 +429,27 @@ impl Model {
         temperature: f32,
         rng: &mut Rng,
     ) -> Vec<u32> {
+        self.generate_with_kv_bits(prompt, max_new, temperature, rng, KvBits::F32)
+    }
+
+    /// [`Self::generate`] with the KV cache stored at `kv_bits` — the
+    /// offline oracle for the server's `--kv-bits` knob. `KvBits::F32` is
+    /// exactly [`Self::generate`]; quantized widths decode within the
+    /// bounded-divergence contract of `docs/kvcache.md`.
+    pub fn generate_with_kv_bits(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        temperature: f32,
+        rng: &mut Rng,
+        kv_bits: KvBits,
+    ) -> Vec<u32> {
         assert!(!prompt.is_empty());
         // Pre-build decode caches so the `&self` decode path below is warm
         // (same lazy caches `decode_token` used to build on first call).
         self.warm_decode();
         let prompt = self.clamp_prompt_window(prompt);
-        let mut kv = self.new_kv_caches();
+        let mut kv = self.new_kv_caches_with(kv_bits);
         let mut scratch = Vec::new();
         let mut out = prompt.to_vec();
         let mut logits = vec![];

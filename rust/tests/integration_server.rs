@@ -291,6 +291,163 @@ fn prompt_at_pool_capacity_is_truncated_to_pool_window() {
 }
 
 #[test]
+fn quantized_kv_multi_worker_matches_offline_at_every_width() {
+    // Quantized-KV determinism across replicas: with 2 workers and the KV
+    // cache stored at 8/4/3 bits, every request must reproduce the offline
+    // `generate_with_kv_bits` oracle token-for-token — and a second server
+    // instance must reproduce the same outputs (no run-to-run drift from
+    // worker scheduling).
+    use aqlm::nn::kvcache::KvBits;
+    for kvb in [KvBits::B8, KvBits::B4, KvBits::B3] {
+        let mut offline = model(12);
+        let prompts: Vec<Vec<u32>> = (0..10).map(|i| vec![1 + i as u32 % 60, 4, 9]).collect();
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| offline.generate_with_kv_bits(p, 6, 0.0, &mut Rng::seed_from_u64(0), kvb))
+            .collect();
+        for run in 0..2 {
+            let cfg = ServerConfig { workers: 2, max_batch: 3, kv_bits: kvb, ..Default::default() };
+            let server = Server::start(offline.clone(), cfg);
+            let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
+            for (rx, want) in rxs.into_iter().zip(&expected) {
+                let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+                assert_eq!(
+                    &resp.tokens,
+                    want,
+                    "kv={} run={run}: multi-worker quantized KV diverged from offline",
+                    kvb.label()
+                );
+            }
+            let stats = server.shutdown();
+            assert_eq!(stats.requests, 10);
+            assert_eq!(stats.per_worker_requests.len(), 2);
+        }
+    }
+}
+
+#[test]
+fn kv4_preemption_restart_is_bit_exact() {
+    // Preemption under a 4-bit KV cache must be invisible in the output:
+    // drive a WorkerScheduler synchronously with a pool too small for all
+    // four sequences' steady-state KV, so some are preempted mid-decode and
+    // restarted — every request must still match the non-preempted offline
+    // oracle at the same kv_bits, bit for bit.
+    use aqlm::coordinator::scheduler::{
+        prompt_window, AdmissionQueue, GenRequest, SchedConfig, WorkerScheduler,
+    };
+    use aqlm::nn::kvcache::KvBits;
+    let mut m = model(11);
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![5, 9, 2], vec![13, 1, 1], vec![40, 3, 2], vec![7, 7, 7]];
+    let expected: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| m.generate_with_kv_bits(p, 8, 0.0, &mut Rng::seed_from_u64(0), KvBits::B4))
+        .collect();
+    m.warm_decode();
+    // 14 blocks × 4 positions over 2 layers: admission reserves prompt+1
+    // (2 blocks/seq), so all four are admitted, but steady state wants
+    // 4 seqs × 2 layers × 3 blocks = 24 > 14 — growth must preempt.
+    let n_blocks = 14;
+    let pool = m.new_kv_pool_with(4, n_blocks, KvBits::B4);
+    let cfg = SchedConfig {
+        max_batch: 4,
+        prefill_chunk: 32,
+        window: prompt_window(m.cfg.max_seq, (n_blocks / m.cfg.n_layers) * 4),
+        decode_cap: (n_blocks / m.cfg.n_layers) * 4,
+        vocab: m.cfg.vocab_size,
+    };
+    let mut sched = WorkerScheduler::new(cfg, pool, m.cfg.n_layers);
+    let mut queue = AdmissionQueue::new();
+    let mut rxs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        rxs.push(rx);
+        let req = GenRequest {
+            prompt: p.clone(),
+            max_new: 8,
+            temperature: 0.0,
+            priority: 0,
+            deadline: None,
+            model: None,
+            respond: tx,
+            stream: None,
+        };
+        queue.push_new(req, i as u64);
+    }
+    let mut rng = Rng::seed_from_u64(0);
+    let mut scratch = Vec::new();
+    let mut preemptions = 0;
+    let mut guard = 0;
+    while !queue.is_empty() || sched.has_work() {
+        while sched.active_len() < cfg.max_batch {
+            match queue.peek() {
+                Some(q) if sched.can_admit(q) => {
+                    let q = queue.pop().unwrap();
+                    let _ = sched.admit(q);
+                }
+                _ => break,
+            }
+        }
+        let (_done, requeues) = sched.step(&m, &mut rng, &mut scratch);
+        preemptions += requeues.len();
+        for q in requeues {
+            queue.push_back(q);
+        }
+        guard += 1;
+        assert!(guard < 10_000, "scheduler failed to drain");
+    }
+    assert!(preemptions > 0, "undersized kv4 pool must force preemption");
+    for (rx, want) in rxs.iter().zip(&expected) {
+        let resp = rx.try_recv().expect("request completed");
+        assert!(!resp.cancelled);
+        assert_eq!(&resp.tokens, want, "kv4 preemption restart changed greedy output");
+    }
+}
+
+#[test]
+fn quantized_kv_output_is_invariant_across_threads_and_workers() {
+    // The knob-invariance bar extends to every KV width: kernel threads
+    // {1, 2} × workers {1, 2} must produce identical tokens at each
+    // kv_bits, matching the offline oracle. (The SIMD axis is covered by
+    // CI re-running this suite under AQLM_NO_SIMD=1.)
+    use aqlm::kernels::config::KernelConfig;
+    use aqlm::nn::kvcache::KvBits;
+    let base = model(13);
+    let prompts: Vec<Vec<u32>> = (0..6).map(|i| vec![2 + i as u32 * 7 % 60, 11]).collect();
+    for kvb in KvBits::ALL {
+        let mut offline = base.clone();
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| offline.generate_with_kv_bits(p, 6, 0.0, &mut Rng::seed_from_u64(0), kvb))
+            .collect();
+        for workers in [1usize, 2] {
+            for threads in [1usize, 2] {
+                let cfg = ServerConfig {
+                    workers,
+                    max_batch: 3,
+                    kv_bits: kvb,
+                    kernel: KernelConfig { threads, simd: true },
+                    ..Default::default()
+                };
+                let server = Server::start(offline.clone(), cfg);
+                let rxs: Vec<_> =
+                    prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
+                for (rx, want) in rxs.into_iter().zip(&expected) {
+                    let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+                    assert_eq!(
+                        &resp.tokens,
+                        want,
+                        "kv={} workers={workers} threads={threads}: knob changed output",
+                        kvb.label()
+                    );
+                }
+                server.shutdown();
+            }
+        }
+    }
+}
+
+#[test]
 fn interleaving_requests_do_not_corrupt_each_other() {
     // Two identical prompts submitted with other traffic in between must
     // produce identical greedy outputs (KV caches are isolated).

@@ -738,11 +738,14 @@ fn prop_layer_policy_display_parse_roundtrip() {
 #[test]
 fn prop_paged_decode_bit_identical_to_contiguous() {
     // Random model shapes, random ragged per-lane histories (lengths that
-    // straddle block boundaries, block sizes down to 1): batched decode
-    // through the paged pool must produce bit-identical logits to the
-    // contiguous per-sequence caches at every step.
+    // straddle block boundaries, block sizes down to 1), every KV storage
+    // width: batched decode through the paged pool must produce
+    // bit-identical logits to the contiguous per-sequence caches at every
+    // step. Quantized widths are lossy relative to f32, but paged and
+    // contiguous share one row codec, so they must still agree exactly
+    // with *each other*.
     use aqlm::nn::config::ModelConfig;
-    use aqlm::nn::kvcache::{LayerKvCache, PagedSeqKv};
+    use aqlm::nn::kvcache::{KvBits, LayerKvCache, PagedSeqKv};
     use aqlm::nn::model::Model;
     check_no_shrink(
         "paged-vs-contig",
@@ -753,10 +756,11 @@ fn prop_paged_decode_bit_identical_to_contiguous() {
             let block_size = 1 + rng.below(4);
             let n_lanes = 1 + rng.below(3);
             let lens: Vec<usize> = (0..n_lanes).map(|_| 1 + rng.below(10)).collect();
+            let kv_bits = KvBits::ALL[rng.below(KvBits::ALL.len())];
             let seed = rng.next_u64();
-            (n_layers, n_kv_heads, block_size, lens, seed)
+            (n_layers, n_kv_heads, block_size, lens, kv_bits, seed)
         },
-        |(n_layers, n_kv_heads, block_size, lens, seed)| {
+        |(n_layers, n_kv_heads, block_size, lens, kv_bits, seed)| {
             let mut mc = ModelConfig::nano();
             mc.d_model = 8;
             mc.n_heads = 2;
@@ -774,9 +778,10 @@ fn prop_paged_decode_bit_identical_to_contiguous() {
                 .iter()
                 .map(|&l| (0..l).map(|_| rng.below(24) as u32).collect())
                 .collect();
-            let mut contig: Vec<Vec<LayerKvCache>> = (0..n).map(|_| model.new_kv_caches()).collect();
+            let mut contig: Vec<Vec<LayerKvCache>> =
+                (0..n).map(|_| model.new_kv_caches_with(*kv_bits)).collect();
             let n_blocks = n * mc.n_layers * max_len.div_ceil(*block_size);
-            let mut pool = model.new_kv_pool(*block_size, n_blocks);
+            let mut pool = model.new_kv_pool_with(*block_size, n_blocks, *kv_bits);
             let mut paged: Vec<PagedSeqKv> = (0..n).map(|_| model.new_paged_kv()).collect();
             let mut scratch_a = Vec::new();
             let mut scratch_b = Vec::new();
@@ -808,7 +813,136 @@ fn prop_paged_decode_bit_identical_to_contiguous() {
                         if a.to_bits() != b.to_bits() {
                             return Err(format!(
                                 "paged logits diverged at step {t} lane {lane} \
-                                 (bs={block_size}, layers={n_layers}, lens={lens:?})"
+                                 (bs={block_size}, layers={n_layers}, lens={lens:?}, \
+                                 kv_bits={kv_bits})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_codec_roundtrip_error_bounded() {
+    // The packed KV group-int codec over random shapes — ragged head_dim
+    // (head_dim % KV_GROUP != 0, code rows not word-aligned), block_size
+    // down to 1, every quantized width: each dequantized value must sit
+    // within the RTN group bound scale/2 of its source, where scale is
+    // recomputed here from the group's min/max exactly as the quantizer
+    // derives it ((hi − lo) / (2^b − 1)).
+    use aqlm::nn::kvcache::{BlockTable, KvBits, KvPool, KV_GROUP};
+    check_no_shrink(
+        "kv-codec-bound",
+        &cfg(64),
+        |rng: &mut Rng| {
+            let kv_bits = [KvBits::B8, KvBits::B4, KvBits::B3][rng.below(3)];
+            let heads = 1 + rng.below(3);
+            let head_dim = 1 + rng.below(96);
+            let block_size = 1 + rng.below(4);
+            let positions = 1 + rng.below(9);
+            let seed = rng.next_u64();
+            (kv_bits, heads, head_dim, block_size, positions, seed)
+        },
+        |(kv_bits, heads, head_dim, block_size, positions, seed)| {
+            let (heads, hd, bs, n_pos) = (*heads, *head_dim, *block_size, *positions);
+            let bits = kv_bits.bits().expect("quantized width");
+            let qmax = ((1usize << bits) - 1) as f32;
+            let mut rng = Rng::seed_from_u64(*seed);
+            let n_blocks = n_pos.div_ceil(bs).max(1);
+            let mut pool = KvPool::new_with(heads, hd, bs, n_blocks, *kv_bits);
+            let mut table = BlockTable::new();
+            let mut rows: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..n_pos {
+                let k: Vec<f32> = (0..heads * hd).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                pool.append(&mut table, &k, &k);
+                rows.push(k);
+            }
+            pool.validate().map_err(|e| format!("pool failed validate(): {e}"))?;
+            let mut scratch = vec![0.0f32; hd];
+            for (t, krow) in rows.iter().enumerate() {
+                for h in 0..heads {
+                    let src = &krow[h * hd..(h + 1) * hd];
+                    let deq = pool.k_row(&table, h, t, &mut scratch);
+                    for g in 0..hd.div_ceil(KV_GROUP) {
+                        let lo = g * KV_GROUP;
+                        let hi = (lo + KV_GROUP).min(hd);
+                        let (gmin, gmax) = src[lo..hi].iter().fold(
+                            (f32::INFINITY, f32::NEG_INFINITY),
+                            |(a, b), &x| (a.min(x), b.max(x)),
+                        );
+                        let bound = (gmax - gmin) / qmax * 0.5 + 1e-5;
+                        for i in lo..hi {
+                            if (deq[i] - src[i]).abs() > bound {
+                                return Err(format!(
+                                    "kv_bits={kv_bits} hd={hd} bs={bs}: |{} - {}| > {bound} \
+                                     at h={h} t={t} i={i}",
+                                    deq[i], src[i]
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_append_order_equivalence() {
+    // Quantize-on-append must equal quantize-all-at-once: every row is
+    // encoded independently from its own values, so a cache filled one
+    // position at a time reads back bit-identical to an independent
+    // per-row reference built directly from quantize_group_minmax over the
+    // same values — append order cannot change any stored bit.
+    use aqlm::nn::kvcache::{KvBits, LayerKvCache, KV_GROUP};
+    check_no_shrink(
+        "kv-append-order",
+        &cfg(64),
+        |rng: &mut Rng| {
+            let kv_bits = [KvBits::B8, KvBits::B4, KvBits::B3][rng.below(3)];
+            let heads = 1 + rng.below(3);
+            let head_dim = 1 + rng.below(96);
+            let positions = 1 + rng.below(8);
+            let seed = rng.next_u64();
+            (kv_bits, heads, head_dim, positions, seed)
+        },
+        |(kv_bits, heads, head_dim, positions, seed)| {
+            let (heads, hd, n_pos) = (*heads, *head_dim, *positions);
+            let bits = kv_bits.bits().expect("quantized width");
+            let mut rng = Rng::seed_from_u64(*seed);
+            let mut cache = LayerKvCache::new_with(heads, hd, n_pos, *kv_bits);
+            let mut rows: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..n_pos {
+                let k: Vec<f32> = (0..heads * hd).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+                cache.append(&k, &k);
+                rows.push(k);
+            }
+            let mut scratch = vec![0.0f32; hd];
+            for (t, krow) in rows.iter().enumerate() {
+                for h in 0..heads {
+                    let src = &krow[h * hd..(h + 1) * hd];
+                    // Reference: quantize the whole row at once, group by
+                    // group, straight through the scalar quantizer.
+                    let mut want = vec![0.0f32; hd];
+                    for g in 0..hd.div_ceil(KV_GROUP) {
+                        let lo = g * KV_GROUP;
+                        let hi = (lo + KV_GROUP).min(hd);
+                        let (codes, s, z) = quantize_group_minmax(&src[lo..hi], bits);
+                        for (i, &c) in codes.iter().enumerate() {
+                            want[lo + i] = s * (c as f32 - z);
+                        }
+                    }
+                    let got = cache.k_row(h, t, &mut scratch);
+                    for i in 0..hd {
+                        if got[i].to_bits() != want[i].to_bits() {
+                            return Err(format!(
+                                "kv_bits={kv_bits} hd={hd}: streamed append diverged from \
+                                 all-at-once reference at h={h} t={t} i={i} ({} vs {})",
+                                got[i], want[i]
                             ));
                         }
                     }

@@ -8,8 +8,10 @@ Usage:
 Supports both payload kinds, dispatching on the top-level "bench" field:
 
   * "generation_speed" (BENCH_generation.json, `--bench generation_speed`):
-    runs keyed by (max_batch, workers, kernel_threads); tok/s and
-    queue/compute p50/p95/p99 deltas.
+    runs keyed by (max_batch, workers, kernel_threads, kv_bits); tok/s and
+    queue/compute p50/p95/p99 deltas. kv_bits defaults to 32 (f32 KV
+    cache) so payloads from before the axis existed keep diffing against
+    the lossless runs.
   * "kernel_speed" (BENCH_kernels.json, `--bench kernel_speed`): runs
     keyed by (kernel, method, d_out, d_in, n); ns/op and bytes-read
     deltas.
@@ -27,14 +29,16 @@ import sys
 # metrics to diff (field, label, display scale).
 SCHEMAS = {
     "generation_speed": {
-        # kernel_threads defaults to 1 so payloads from before the kernel
-        # sweep existed keep keying (and diffing) against the serial runs.
+        # kernel_threads defaults to 1 and kv_bits to 32 so payloads from
+        # before either axis existed keep keying (and diffing) against the
+        # serial / f32-KV runs.
         "key": lambda r: (
             int(r.get("max_batch", 0)),
             int(r.get("workers", 0)),
             int(r.get("kernel_threads", 1)),
+            int(r.get("kv_bits", 32)),
         ),
-        "tag": lambda k: f"max_batch={k[0]} workers={k[1]} kthreads={k[2]}",
+        "tag": lambda k: f"max_batch={k[0]} workers={k[1]} kthreads={k[2]} kv={k[3]}",
         "metrics": [
             ("tok_s", "tok/s", 1.0),
             ("queue_p50_s", "queue p50 (ms)", 1e3),
